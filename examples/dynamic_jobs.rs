@@ -1,0 +1,128 @@
+//! Dynamic job creation (paper §3.3): "during runtime each job can add a
+//! finite number of new jobs to the current or following parallel
+//! segments" — the mechanism behind convergence loops whose trip count is
+//! unknown at submission time.
+//!
+//! ```text
+//! cargo run --release --example dynamic_jobs
+//! ```
+//!
+//! Demonstrates a tolerance-driven fixed-point iteration: a *controller*
+//! job inspects the current error and re-injects a work segment + itself
+//! until the error falls under 1e-6 — the exact pattern the paper's
+//! Jacobi `J3` uses. The iteration count is discovered at runtime.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hypar::prelude::*;
+
+/// The "simulation": one damping sweep x <- 0.5*(x + a/x) per element
+/// (Heron's method, converges to sqrt(a)).
+fn heron_step(x: &[f32], a: &[f32]) -> Vec<f32> {
+    x.iter().zip(a).map(|(x, a)| 0.5 * (x + a / x)).collect()
+}
+
+fn main() -> hypar::Result<()> {
+    let targets: Vec<f32> = (1..=64).map(|i| i as f32).collect();
+    let n = targets.len();
+
+    let rounds = Arc::new(AtomicUsize::new(0));
+    let mut registry = FunctionRegistry::new();
+
+    // J1: initial state (x0 = a, a safe Heron start).
+    let a0 = targets.clone();
+    registry.register_plain(1, "init", move |_in, out| {
+        out.push(DataChunk::from_f32(a0.clone())); // chunk 0: x
+        out.push(DataChunk::from_f32(a0.clone())); // chunk 1: a
+        Ok(())
+    });
+
+    // F2: one sweep — input [x, a], output [x', a].
+    registry.register_plain(2, "heron_sweep", |input, out| {
+        let x = input.chunk(0)?.as_f32()?;
+        let a = input.chunk(1)?.as_f32()?;
+        out.push(DataChunk::from_f32(heron_step(x, a)));
+        out.push(input.chunk(1)?.clone());
+        Ok(())
+    });
+
+    // F3: controller — measures max |x^2 - a|; if not converged, injects
+    // the next sweep (segment +1) and itself (segment +2).
+    let r2 = rounds.clone();
+    registry.register_with_ctx(3, "controller", move |input, out, ctx| {
+        let x = input.chunk(0)?.as_f32()?;
+        let a = input.chunk(1)?.as_f32()?;
+        let err = x
+            .iter()
+            .zip(a)
+            .map(|(x, a)| (x * x - a).abs())
+            .fold(0.0f32, f32::max);
+        let round = r2.fetch_add(1, Ordering::SeqCst) + 1;
+        println!("  round {round:>2}: max |x^2 - a| = {err:.3e}");
+        // pass the state through so the next sweep (or the caller) sees it
+        out.push(input.chunk(0)?.clone());
+        out.push(input.chunk(1)?.clone());
+        out.push(DataChunk::scalar_f32(err));
+        if err > 1e-4 {
+            ctx.inject(
+                1,
+                vec![InjectedJob {
+                    local_id: 0,
+                    func: FuncId(2),
+                    threads: ThreadCount::Exact(1),
+                    inputs: vec![InjectedRef::Existing(ChunkRef {
+                        job: ctx.job,
+                        range: ChunkRange::Range { lo: 0, hi: 2 },
+                    })],
+                    keep: false,
+                }],
+            );
+            ctx.inject(
+                2,
+                vec![InjectedJob {
+                    local_id: 1,
+                    func: FuncId(3),
+                    threads: ThreadCount::Exact(1),
+                    inputs: vec![InjectedRef::Local {
+                        local_id: 0,
+                        range: ChunkRange::All,
+                    }],
+                    keep: false,
+                }],
+            );
+        }
+        Ok(())
+    });
+
+    // Static seed: init; sweep; controller. Everything after is injected.
+    let algo = Algorithm::parse("J1(1,1,0); J2(2,1,R1); J3(3,1,R2);")?;
+
+    println!("tolerance-driven iteration (trip count unknown at submission):");
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .registry(registry)
+        .build()?;
+    let report = fw.run(algo)?;
+
+    let (final_id, data) = report.results.iter().next_back().expect("final result");
+    let x = data.chunk(0)?.as_f32()?;
+    let err = data.chunk(2)?.first_f32()?;
+    let worst = x
+        .iter()
+        .zip(&targets)
+        .map(|(x, t)| (x - t.sqrt()).abs())
+        .fold(0.0f32, f32::max);
+
+    println!(
+        "\nconverged after {} rounds ({} injected jobs), final job {final_id}",
+        rounds.load(Ordering::SeqCst),
+        report.metrics.jobs_injected
+    );
+    println!("max |x - sqrt(a)| = {worst:.3e}, reported err = {err:.3e}");
+    assert!(worst < 1e-3);
+    assert!(report.metrics.jobs_injected >= 4);
+    println!("dynamic_jobs OK");
+    Ok(())
+}

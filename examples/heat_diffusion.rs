@@ -1,0 +1,100 @@
+//! Heat-diffusion simulation through the framework — the engineering
+//! simulation workload from the paper's introduction, parallelised into
+//! worker-resident strips (keep-results) with halo-row exchange between
+//! segments.
+//!
+//! ```text
+//! cargo run --release --example heat_diffusion [steps] [strips] [kernel]
+//! # kernel: rust (default) | ref | pallas   (engine paths need artifacts)
+//! ```
+//!
+//! Prints an ASCII rendering of the temperature field before/after and
+//! checks the framework result against the sequential stencil bitwise.
+
+use hypar::solvers::heat::{self, HeatConfig};
+use hypar::solvers::KernelPath;
+
+fn render(field: &[f32], h: usize, w: usize, peak: f32) {
+    // Downsample to a ~24x60 terminal picture.
+    let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let (rows, cols) = (24.min(h), 60.min(w));
+    for r in 0..rows {
+        let mut line = String::new();
+        for c in 0..cols {
+            let rr = r * h / rows;
+            let cc = c * w / cols;
+            let v = field[rr * w + cc].max(0.0) / peak.max(1e-9);
+            let idx = ((v * (shades.len() - 1) as f32).round() as usize)
+                .min(shades.len() - 1);
+            line.push(shades[idx]);
+        }
+        println!("  {line}");
+    }
+}
+
+fn main() -> hypar::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(200);
+    let strips: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(4);
+    let kernel = match args.get(2).map(String::as_str) {
+        Some("pallas") => KernelPath::EnginePallas,
+        Some("ref") => KernelPath::EngineRef,
+        _ => KernelPath::Rust,
+    };
+
+    let (h, w) = (128usize, 256usize);
+    let cfg = HeatConfig::new(h, w, strips, steps).with_kernel(kernel);
+    println!(
+        "heat diffusion: {h}x{w} interior, {strips} strips, {steps} steps, alpha {}, kernel {kernel:?}",
+        cfg.alpha
+    );
+
+    let initial = heat::initial_field(&cfg);
+    println!("\ninitial field (hot square @ {}):", cfg.hot);
+    render(&initial, h, w, cfg.hot);
+
+    let t0 = std::time::Instant::now();
+    let (field, metrics) = heat::run(&cfg, 2)?;
+    let wall = t0.elapsed();
+
+    println!("\nafter {steps} steps:");
+    let peak = field.iter().cloned().fold(f32::MIN, f32::max);
+    render(&field, h, w, peak);
+
+    // Physics sanity: diffusion smooths the peak; total heat can only
+    // shrink (boundary losses) up to f32 rounding.
+    let total0: f64 = initial.iter().map(|v| *v as f64).sum();
+    let total: f64 = field.iter().map(|v| *v as f64).sum();
+    println!(
+        "\npeak T {:.2} (from {:.0}), total heat {:.0} (from {:.0})",
+        peak, cfg.hot, total, total0
+    );
+    // (The square's centre keeps T=hot until the smoothing front arrives,
+    // so only bound the peak — the *edges* must have moved.)
+    assert!(peak <= cfg.hot && peak > 0.0, "peak out of range");
+    assert!(total > 0.0 && total <= total0 * 1.0001, "heat appeared from nowhere");
+    assert_ne!(field, initial, "field did not evolve");
+
+    println!(
+        "wall {:.1} ms | {} jobs ({} segments) | {} workers | comm {} msgs / {} B",
+        wall.as_secs_f64() * 1e3,
+        metrics.jobs_executed,
+        metrics.segments.len(),
+        metrics.workers_spawned,
+        metrics.comm_msgs,
+        metrics.comm_bytes
+    );
+
+    // Verify against the sequential stencil (bitwise for the rust path,
+    // tolerance for engine paths whose accumulation order differs).
+    let want = heat::heat_seq(&cfg);
+    let max_dev = field
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("max |framework - sequential| = {max_dev:.3e}");
+    assert!(max_dev < 1e-3, "diverged from sequential stencil");
+    println!("heat_diffusion OK");
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! END-TO-END driver (DESIGN.md experiment E2E): solve a real linear
+//! system at the paper's smallest Figure-3 size through all three layers —
+//! rust coordinator (L3), AOT-lowered jax graph (L2) containing the Pallas
+//! kernel (L1), executed via PJRT from the framework's workers — and
+//! compare against the tailored-MPI baseline and the sequential reference.
+//!
+//! ```text
+//! make artifacts
+//! cargo run --release --example jacobi_solver [iters] [procs] [size]
+//! ```
+//!
+//! Logs a residual curve, verifies the solution against the generated
+//! ground truth, and prints the framework-vs-tailored comparison that
+//! Figure 3 is about. Results are recorded in EXPERIMENTS.md §E2E.
+
+use hypar::solvers::{self, jacobi_fw, jacobi_mpi, JacobiConfig, KernelPath};
+
+fn main() -> hypar::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let iters: usize = args.first().and_then(|a| a.parse().ok()).unwrap_or(100);
+    let procs: usize = args.get(1).and_then(|a| a.parse().ok()).unwrap_or(4);
+    let size: usize = args.get(2).and_then(|a| a.parse().ok()).unwrap_or(2709);
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    println!("=== hypar end-to-end: Jacobi {size}x{size}, p={procs}, {iters} iterations ===");
+    println!("layers: rust coordinator -> PJRT -> HLO (jax) -> Pallas kernel (interpret)");
+
+    // --- residual curve via checkpointed framework runs (pallas kernel) --
+    let mut marks = vec![1usize, 2, 5, 10, 25, 50, 100, 200, 350, 500];
+    marks.retain(|&m| m <= iters);
+    if marks.last() != Some(&iters) {
+        marks.push(iters);
+    }
+    println!("\nresidual curve (framework, pallas artifact):");
+    println!("{:>8} {:>14} {:>14}", "iter", "||r||", "err_inf");
+    for &m in &marks {
+        let cfg = JacobiConfig::new(size, procs, m)
+            .with_kernel(KernelPath::EnginePallas)
+            .with_artifacts("artifacts");
+        let (out, _) = jacobi_fw::run(&cfg, &jacobi_fw::FwTopology::default())?;
+        println!("{:>8} {:>14.6e} {:>14.6e}", m, out.res_norm, out.error_vs(&cfg));
+    }
+
+    // --- the Figure-3 comparison at this size/proc count ------------------
+    println!("\nframework vs tailored MPI (same pallas kernel, {iters} iters):");
+    let cfg = JacobiConfig::new(size, procs, iters)
+        .with_kernel(KernelPath::EnginePallas)
+        .with_artifacts("artifacts");
+    let t0 = std::time::Instant::now();
+    let (fw_out, metrics) = jacobi_fw::run(&cfg, &jacobi_fw::FwTopology::default())?;
+    let fw_wall = t0.elapsed();
+    let mpi_out = jacobi_mpi::run(&cfg)?;
+    let seq = solvers::jacobi_seq(&JacobiConfig::new(size, 1, iters));
+
+    println!(
+        "  framework : {:>10.1} ms   ||r|| {:.3e}   err {:.3e}   comm {} B",
+        fw_wall.as_secs_f64() * 1e3,
+        fw_out.res_norm,
+        fw_out.error_vs(&cfg),
+        fw_out.comm.bytes
+    );
+    println!(
+        "  tailored  : {:>10.1} ms   ||r|| {:.3e}   err {:.3e}   comm {} B",
+        mpi_out.wall.as_secs_f64() * 1e3,
+        mpi_out.res_norm,
+        mpi_out.error_vs(&cfg),
+        mpi_out.comm.bytes
+    );
+    println!(
+        "  sequential: {:>10.1} ms   ||r|| {:.3e}",
+        seq.wall.as_secs_f64() * 1e3,
+        seq.res_norm
+    );
+    println!(
+        "  overhead  : {:+.1}%   (paper reports ~10% mean)",
+        (fw_wall.as_secs_f64() / mpi_out.wall.as_secs_f64() - 1.0) * 100.0
+    );
+
+    println!("\nframework internals:");
+    println!("  jobs executed : {}", metrics.jobs_executed);
+    println!("  jobs injected : {} (dynamic job creation)", metrics.jobs_injected);
+    println!("  workers       : {}", metrics.workers_spawned);
+    println!(
+        "  dispatch lat. : {:.1} us mean",
+        metrics.mean_dispatch_latency().as_micros()
+    );
+    println!(
+        "  comm          : {} msgs / {} bytes",
+        metrics.comm_msgs, metrics.comm_bytes
+    );
+
+    // --- verification ------------------------------------------------------
+    let err = fw_out.error_vs(&cfg);
+    let agree = fw_out
+        .x
+        .iter()
+        .zip(&mpi_out.x)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("\nmax |fw - mpi| = {agree:.3e} (same kernel, same trajectory)");
+    assert!(agree < 1e-3, "framework and tailored trajectories diverged");
+    if iters >= 100 {
+        assert!(err < 1e-2, "did not converge: err {err}");
+    }
+    println!("end-to-end OK");
+    Ok(())
+}

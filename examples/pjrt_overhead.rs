@@ -1,0 +1,45 @@
+// Perf probe: PJRT per-call overhead vs in-process rust sweep.
+use hypar::data::DataChunk;
+use hypar::runtime::{ComputeBackend, Engine};
+use hypar::solvers::rust_block_sweep;
+use std::time::Instant;
+
+fn main() {
+    let engine = Engine::load("artifacts").unwrap();
+    for (n, bm) in [(512usize, 256usize), (2816, 704), (7424, 928)] {
+        let name = match engine.manifest().jacobi_block("ref", n, bm) {
+            Ok(n) => n.to_string(),
+            Err(_) => continue,
+        };
+        let a: Vec<f32> = vec![0.001; bm * n];
+        let x: Vec<f32> = vec![0.5; n];
+        let b: Vec<f32> = vec![1.0; bm];
+        let invd: Vec<f32> = vec![0.5; bm];
+        let inputs = vec![
+            DataChunk::from_f32(a.clone()),
+            DataChunk::from_f32(x.clone()),
+            DataChunk::from_f32(b.clone()),
+            DataChunk::from_f32(invd.clone()),
+            DataChunk::scalar_i32(0),
+        ];
+        engine.execute(&name, &inputs).unwrap(); // compile + warm
+        let reps = 20;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            engine.execute(&name, &inputs).unwrap();
+        }
+        let engine_us = t0.elapsed().as_micros() as f64 / reps as f64;
+
+        let mut out = vec![0.0f32; bm];
+        rust_block_sweep(&a, &x, &b, &invd, 0, &mut out, n); // warm
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            rust_block_sweep(&a, &x, &b, &invd, 0, &mut out, n);
+        }
+        let rust_us = t0.elapsed().as_micros() as f64 / reps as f64;
+        println!(
+            "n={n:5} bm={bm:4}: pjrt {engine_us:9.1} us/call, rust {rust_us:9.1} us, overhead {:+7.1} us ({:.2}x)",
+            engine_us - rust_us, engine_us / rust_us
+        );
+    }
+}

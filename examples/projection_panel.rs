@@ -1,0 +1,16 @@
+use hypar::comm::CostModel;
+use hypar::solvers::projection;
+fn main() {
+    let cost = CostModel::default();
+    for size in [2709usize, 4209, 7209] {
+        let (cal, rows) = projection::project_panel(size, &[1,2,4,8], 500, &cost, 42).unwrap();
+        println!("size {size} (padded {}), sweep {:.2} us/row, fw coord {:.1} us/job:",
+            cal.n_pad, cal.sweep_secs_per_row*1e6, cal.fw_coord_secs_per_job*1e6);
+        println!("   procs      fw [ms]     mpi [ms]   overhead    speedup");
+        let base = rows[0].mpi_total();
+        for r in &rows {
+            println!("   {:>5} {:>12.1} {:>12.1} {:>9.1}% {:>9.2}x",
+                r.procs, r.fw_total()*1e3, r.mpi_total()*1e3, r.overhead_pct(), base/r.mpi_total());
+        }
+    }
+}

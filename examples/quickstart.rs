@@ -1,0 +1,84 @@
+//! Quickstart: the paper's §2.2 walkthrough — find the maximum of an
+//! array by splitting it into chunks, searching sub-maxima in parallel
+//! jobs, and reducing.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Shows the three things a user touches: a [`FunctionRegistry`] with
+//! sequential functions, a job script in the paper's text format, and
+//! [`Framework::run`].
+
+use hypar::prelude::*;
+
+fn main() -> hypar::Result<()> {
+    // ------------------------------------------------------------------
+    // 1. The user's sequential code: load data, search a chunk's maximum.
+    // ------------------------------------------------------------------
+    let data: Vec<f32> = (0..100_000)
+        .map(|i| ((i * 2654435761u64 as usize) % 1_000_003) as f32)
+        .collect();
+    let true_max = data.iter().cloned().fold(f32::MIN, f32::max);
+
+    let mut registry = FunctionRegistry::new();
+    let owned = std::sync::Arc::new(data);
+    registry.register_plain(1, "load_chunked", move |_input, output| {
+        // k = 10 chunks of |A|/k elements (paper §2.2).
+        for chunk in DataChunk::from_f32(owned.to_vec()).split(10) {
+            output.push(chunk);
+        }
+        Ok(())
+    });
+    registry.register_per_chunk_try(2, "search_max", |chunk| {
+        let m = chunk.as_f32()?.iter().cloned().fold(f32::MIN, f32::max);
+        Ok(DataChunk::scalar_f32(m))
+    });
+
+    // ------------------------------------------------------------------
+    // 2. The parallel structure, in the paper's job-script language:
+    //    J1 loads; J2 and J3 each scan half the chunks with 2 sequences;
+    //    J4 reduces the sub-maxima.
+    // ------------------------------------------------------------------
+    let algo = Algorithm::parse(
+        "J1(1,1,0);
+         J2(2,2,R1[0..5]), J3(2,2,R1[5..10]);
+         J4(2,1,R2 R3);",
+    )?;
+    let (strict, loose) = algo.hybrid_class(4);
+    println!(
+        "algorithm: {} jobs, hybrid = strict:{strict} loose:{loose}",
+        algo.job_count()
+    );
+
+    // ------------------------------------------------------------------
+    // 3. Run it.
+    // ------------------------------------------------------------------
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .cores_per_worker(4)
+        .registry(registry)
+        .build()?;
+    let report = fw.run(algo)?;
+
+    let result = report.result(4).expect("final job result");
+    let got = result
+        .chunks()
+        .iter()
+        .map(|c| c.first_f32().unwrap())
+        .fold(f32::MIN, f32::max);
+
+    println!("max(A)        = {got} (expected {true_max})");
+    println!("jobs executed = {}", report.metrics.jobs_executed);
+    println!("workers       = {}", report.metrics.workers_spawned);
+    println!(
+        "wall time     = {:.2} ms, comm = {} msgs / {} bytes",
+        report.metrics.wall_time_us as f64 / 1e3,
+        report.metrics.comm_msgs,
+        report.metrics.comm_bytes
+    );
+    assert_eq!(got, true_max);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,249 @@
+"""AOT driver: lower every (function, shape) config to HLO **text** + manifest.
+
+This is the only place python touches the pipeline; it runs at build time
+(``make artifacts``) and never on the request path.  For each config in the
+tables below it
+
+  1. jits + lowers the L2 function to stablehlo,
+  2. converts to an XlaComputation and dumps **HLO text**
+     (NOT ``.serialize()`` — jax >= 0.5 emits protos with 64-bit instruction
+     ids which the rust side's xla_extension 0.5.1 rejects; the text parser
+     reassigns ids and round-trips cleanly, see /opt/xla-example/README.md),
+  3. numerically verifies the jitted function against the pure-jnp oracle
+     on deterministic pseudo-random inputs,
+  4. records the artifact in ``artifacts/manifest.json`` with its input /
+     output shapes so the rust runtime can type-check feeds.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+BLOCK_N = 256  # column-tile width; all padded sizes are multiples of this
+
+# Paper sizes (Figure 3) padded up to a multiple of BLOCK_N so one tile
+# schedule serves every config; padding rows are identity rows (a_ii = 1,
+# zero coupling, b_i = 0) so the mathematical solution is unchanged.
+PAPER_SIZES = {2709: 2816, 4209: 4352, 7209: 7424}
+WORKER_COUNTS = [1, 2, 4, 8]
+
+TEST_N = 512            # small config for unit/integration tests + examples
+HEAT_W = 256            # heat domain width (columns)
+HEAT_H = 128            # heat interior rows
+HEAT_TEST = (34, 64)    # small heat strip (rows, w) for tests
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32():
+    return jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _jacobi_inputs(n, bm, seed=0):
+    """Deterministic diagonally-dominant block inputs for verification."""
+    g = _rng(seed)
+    a_blk = g.standard_normal((bm, n), dtype=np.float32) * 0.01
+    row_offset = np.int32((n - bm) // 2 // 1)  # an interior, non-zero offset
+    # strengthen this block's own diagonal entries
+    for i in range(bm):
+        a_blk[i, row_offset + i] = 4.0 + g.random()
+    x = g.standard_normal((n,), dtype=np.float32)
+    b_blk = g.standard_normal((bm,), dtype=np.float32)
+    invdiag_blk = 1.0 / a_blk[np.arange(bm), row_offset + np.arange(bm)]
+    return a_blk, x, b_blk, invdiag_blk.astype(np.float32), row_offset
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {}
+        self.t0 = time.time()
+
+    def emit(self, name, fn, specs, *, kind, variant, params, verify):
+        """Lower ``fn`` at ``specs``, verify numerics, write artifact."""
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(f"{self.out_dir}/{path}", "w") as f:
+            f.write(text)
+
+        got, want = verify(fn)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), rtol=2e-4, atol=2e-4,
+                err_msg=f"artifact {name} disagrees with oracle",
+            )
+
+        out_shapes = [
+            {"shape": list(o.shape), "dtype": str(o.dtype)} for o in got
+        ]
+        self.manifest[name] = {
+            "file": path,
+            "kind": kind,
+            "variant": variant,
+            "params": params,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "outputs": out_shapes,
+        }
+        print(f"  [{time.time()-self.t0:6.1f}s] {name}", flush=True)
+
+    # -- config families ----------------------------------------------------
+
+    def jacobi_block(self, n, bm, variant):
+        name = f"jacobi_block_{variant}_n{n}_bm{bm}"
+        if variant == "pallas":
+            fn = functools.partial(
+                model.jacobi_block_step_pallas, block_n=BLOCK_N
+            )
+        else:
+            fn = model.jacobi_block_step_ref
+        specs = [_f32(bm, n), _f32(n), _f32(bm), _f32(bm), _i32()]
+
+        def verify(fn):
+            inp = _jacobi_inputs(n, bm)
+            return fn(*inp), ref.jacobi_block_step(*inp)
+
+        self.emit(name, fn, specs, kind="jacobi_block", variant=variant,
+                  params={"n": n, "bm": bm, "block_n": BLOCK_N}, verify=verify)
+
+    def jacobi_full(self, n):
+        name = f"jacobi_full_n{n}"
+        specs = [_f32(n, n), _f32(n), _f32(n), _f32(n)]
+
+        def verify(fn):
+            g = _rng(1)
+            a = g.standard_normal((n, n), dtype=np.float32) * 0.01
+            a[np.arange(n), np.arange(n)] = 4.0
+            x = g.standard_normal((n,), dtype=np.float32)
+            b = g.standard_normal((n,), dtype=np.float32)
+            invd = (1.0 / np.diag(a)).astype(np.float32)
+            r = b - a @ x
+            return fn(a, x, b, invd), (x + r * invd, (r @ r).reshape(1))
+
+        self.emit(name, model.jacobi_full_step, specs, kind="jacobi_full",
+                  variant="ref", params={"n": n}, verify=verify)
+
+    def heat_strip(self, rows, w, variant):
+        name = f"heat_strip_{variant}_r{rows}_w{w}"
+        fn = (model.heat_strip_step_pallas if variant == "pallas"
+              else model.heat_strip_step_ref)
+        specs = [_f32(rows, w), _f32()]
+
+        def verify(fn):
+            g = _rng(2)
+            u = g.standard_normal((rows, w), dtype=np.float32)
+            alpha = np.float32(0.2)
+            return fn(u, alpha), (ref.heat_strip_step(u, alpha),)
+
+        self.emit(name, fn, specs, kind="heat_strip", variant=variant,
+                  params={"rows": rows, "w": w}, verify=verify)
+
+    def cg_blocks(self, n, bm):
+        g = _rng(3)
+        u = g.standard_normal((bm,), dtype=np.float32)
+        v = g.standard_normal((bm,), dtype=np.float32)
+        a_blk = g.standard_normal((bm, n), dtype=np.float32)
+        x = g.standard_normal((n,), dtype=np.float32)
+        alpha = np.float32(0.7)
+
+        self.emit(
+            f"dot_block_bm{bm}", model.dot_block, [_f32(bm), _f32(bm)],
+            kind="dot_block", variant="ref", params={"bm": bm},
+            verify=lambda fn: (fn(u, v), ((u @ v).reshape(1),)),
+        )
+        self.emit(
+            f"axpy_block_bm{bm}", model.axpy_block,
+            [_f32(bm), _f32(bm), _f32()],
+            kind="axpy_block", variant="ref", params={"bm": bm},
+            verify=lambda fn: (fn(u, v, alpha), (u + alpha * v,)),
+        )
+        self.emit(
+            f"matvec_block_n{n}_bm{bm}", model.matvec_block,
+            [_f32(bm, n), _f32(n)],
+            kind="matvec_block", variant="ref", params={"n": n, "bm": bm},
+            verify=lambda fn: (fn(a_blk, x), (a_blk @ x,)),
+        )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the small test configs (dev loop)")
+    args = ap.parse_args()
+
+    b = Builder(args.out_dir)
+
+    # Small configs: tests, quickstart, examples.
+    for p in (1, 2, 4):
+        bm = TEST_N // p
+        for variant in ("pallas", "ref"):
+            b.jacobi_block(TEST_N, bm, variant)
+    b.jacobi_full(TEST_N)
+    for variant in ("pallas", "ref"):
+        b.heat_strip(*HEAT_TEST, variant)
+    b.cg_blocks(TEST_N, TEST_N)
+    b.cg_blocks(TEST_N, TEST_N // 2)
+
+    if not args.quick:
+        # Figure-3 configs: padded paper sizes x worker counts.
+        for n in PAPER_SIZES.values():
+            for p in WORKER_COUNTS:
+                bm = n // p
+                b.jacobi_block(n, bm, "ref")
+        # Pallas variants at the smallest paper size (e2e example) — the
+        # large interpret-mode artifacts exist to validate numerics, the
+        # Figure-3 sweeps run the ref variant (see model.py docstring).
+        for p in WORKER_COUNTS:
+            b.jacobi_block(2816, 2816 // p, "pallas")
+        # Heat production strips.
+        for p in (1, 2, 4):
+            rows = HEAT_H // p + 2
+            for variant in ("pallas", "ref"):
+                b.heat_strip(rows, HEAT_W, variant)
+
+    manifest = {
+        "block_n": BLOCK_N,
+        "paper_sizes": {str(k): v for k, v in PAPER_SIZES.items()},
+        "artifacts": b.manifest,
+    }
+    with open(f"{args.out_dir}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(b.manifest)} artifacts + manifest.json "
+          f"to {args.out_dir} in {time.time()-b.t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

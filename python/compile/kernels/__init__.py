@@ -1,0 +1,10 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+``jacobi``  — block residual sweep + diagonally-preconditioned update
+              (the paper's §4 evaluation workload).
+``heat``    — 5-point explicit heat-diffusion stencil on halo strips
+              (engineering simulation workload from the paper's intro).
+``ref``     — pure-jnp oracles for all of the above.
+"""
+
+from . import heat, jacobi, ref  # noqa: F401

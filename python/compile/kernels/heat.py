@@ -1,0 +1,55 @@
+"""Pallas kernel for the 2-D heat-diffusion stencil (engineering workload).
+
+The paper motivates the framework with engineering simulation codes; the
+heat example (``examples/heat_diffusion.rs``) parallelises an explicit
+finite-difference heat solver through the framework's job model.  The
+per-job hot-spot — one Jacobi-style 5-point stencil sweep over a horizontal
+strip of the domain — is this kernel.
+
+The strip carries one halo row on each side (exchanged between jobs by the
+framework as chunk dependencies), so a ``(rows, w)`` strip input produces a
+``(rows-2, w)`` interior update.  Columns 0 and w-1 are Dirichlet
+boundaries and are copied through.
+
+``interpret=True`` for CPU-PJRT executability; oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _heat_kernel(u_ref, alpha_ref, o_ref):
+    """u' = u + alpha * laplace(u) over the strip interior."""
+    u = u_ref[...]
+    alpha = alpha_ref[0]
+    centre = u[1:-1, 1:-1]
+    lap = (
+        u[:-2, 1:-1] + u[2:, 1:-1] + u[1:-1, :-2] + u[1:-1, 2:]
+        - 4.0 * centre
+    )
+    interior = centre + alpha * lap
+    # Re-attach the Dirichlet side columns of the interior rows.
+    left = u[1:-1, 0:1]
+    right = u[1:-1, -1:]
+    o_ref[...] = jnp.concatenate([left, interior, right], axis=1)
+
+
+def heat_strip_step(u_strip, alpha):
+    """One explicit heat step on a halo-padded strip.
+
+    Args:
+      u_strip: ``(rows, w)`` strip including one halo row above and below.
+      alpha: scalar ``dt*k/h^2`` diffusion number (stable for ``<= 0.25``).
+
+    Returns: ``(rows-2, w)`` updated interior rows.
+    """
+    rows, w = u_strip.shape
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _heat_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows - 2, w), jnp.float32),
+        interpret=True,
+    )(u_strip, alpha_arr)

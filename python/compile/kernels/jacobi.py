@@ -1,0 +1,117 @@
+"""Pallas kernels for the block-Jacobi sweep (L1 of the stack).
+
+The paper's evaluation workload (its §4) is a parallel Jacobi solver for
+``A·x = b``.  The compute hot-spot of one iteration, for the row block a
+single framework job owns, is the residual sweep
+
+    r_blk = b_blk - A_blk @ x                     (J1 in the paper)
+
+followed by the diagonally-preconditioned update + partial residual norm
+
+    x_blk' = x_blk + r_blk * invdiag_blk          (J2 in the paper)
+    res2   = sum(r_blk^2)
+
+Both are expressed here as Pallas kernels so they lower into the same HLO
+module as the surrounding jax function (see ``model.py``) and run from the
+rust coordinator via PJRT.
+
+TPU shaping (see DESIGN.md §Hardware-Adaptation): the residual sweep tiles
+the row block over column tiles of width ``block_n`` with a ``BlockSpec``
+grid, so each ``(bm, block_n)`` tile of ``A`` streams HBM→VMEM exactly once
+per sweep while the ``(bm,)`` accumulator stays resident in the output VMEM
+ref across the column loop.  The matmul inside the tile targets the MXU.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO ops which run on any
+backend.  Correctness is pinned against ``ref.py`` by ``python/tests``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _residual_kernel(a_ref, x_ref, b_ref, o_ref):
+    """One column-tile step of ``o = b - A @ x`` for a row block.
+
+    Grid dimension 0 walks the column tiles.  The output ref doubles as the
+    VMEM-resident accumulator: initialised to ``b`` on the first tile, then
+    decremented by each tile's partial product.
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = b_ref[...]
+
+    # (bm, bn) @ (bn,) partial product on the MXU; accumulate in f32.
+    o_ref[...] -= jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def residual_block(a_blk, x, b_blk, *, block_n: int = 512):
+    """``r_blk = b_blk - a_blk @ x`` as a tiled Pallas call.
+
+    Args:
+      a_blk: ``(bm, n)`` row block of the system matrix.
+      x: ``(n,)`` current iterate (full vector — every job needs all of x).
+      b_blk: ``(bm,)`` right-hand-side slice for this row block.
+      block_n: column-tile width (HBM→VMEM streaming granularity).
+
+    ``n`` must be divisible by ``block_n``; the AOT driver pads upstream.
+    """
+    bm, n = a_blk.shape
+    if n % block_n != 0:
+        raise ValueError(f"n={n} not divisible by block_n={block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _residual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, block_n), lambda j: (0, j)),
+            pl.BlockSpec((block_n,), lambda j: (j,)),
+            pl.BlockSpec((bm,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((bm,), jnp.float32),
+        interpret=True,
+    )(a_blk, x, b_blk)
+
+
+def _update_kernel(x_ref, r_ref, invd_ref, xo_ref, res_ref):
+    """Fused Jacobi update + squared-residual partial reduction."""
+    r = r_ref[...]
+    xo_ref[...] = x_ref[...] + r * invd_ref[...]
+    res_ref[0] = jnp.sum(r * r)
+
+
+def update_block(x_blk, r_blk, invdiag_blk):
+    """``(x_blk + r_blk*invdiag_blk, sum(r_blk^2))`` as a Pallas call."""
+    (bm,) = x_blk.shape
+    return pl.pallas_call(
+        _update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((bm,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=True,
+    )(x_blk, r_blk, invdiag_blk)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def jacobi_block_step(a_blk, x, b_blk, invdiag_blk, row_offset, *, block_n=512):
+    """One full Jacobi step for a row block: residual sweep + update.
+
+    ``row_offset`` is a traced scalar so one compiled artifact serves every
+    block position of a given shape (the rust side passes the block's start
+    row).  Returns ``(x_blk_new, res2_partial)``.
+    """
+    bm, _ = a_blk.shape
+    r_blk = residual_block(a_blk, x, b_blk, block_n=block_n)
+    x_blk = jax.lax.dynamic_slice(x, (row_offset,), (bm,))
+    return update_block(x_blk, r_blk, invdiag_blk)

@@ -1,0 +1,94 @@
+"""L2: jax-level compute graphs for the framework's user functions.
+
+These are the functions that get AOT-lowered to HLO text and executed from
+the rust coordinator (L3) via PJRT.  Each comes in two variants:
+
+* ``*_pallas`` — calls the L1 Pallas kernels (``kernels/jacobi.py``,
+  ``kernels/heat.py``), the TPU-shaped hot path.
+* ``*_ref``    — the pure-jnp formulation, used both as the build-time
+  oracle and as a fast CPU execution path for the large Figure-3 sweeps
+  (interpret-mode Pallas lowers to an HLO while-loop which is slower on
+  the CPU backend; both variants are bit-compared in the test suite, so
+  the coordination measurements are unaffected by which one runs).
+
+Every function is shape-monomorphic at lowering time; ``aot.py`` emits one
+artifact per (function, shape) config listed in its config table.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import heat as heat_k
+from .kernels import jacobi as jacobi_k
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Jacobi: one step for a row block.
+#   inputs : a_blk (bm,n) f32, x (n,) f32, b_blk (bm,) f32,
+#            invdiag_blk (bm,) f32, row_offset () i32
+#   outputs: x_blk_new (bm,) f32, res2 (1,) f32
+# --------------------------------------------------------------------------
+
+def jacobi_block_step_pallas(a_blk, x, b_blk, invdiag_blk, row_offset,
+                             *, block_n: int):
+    r_blk = jacobi_k.residual_block(a_blk, x, b_blk, block_n=block_n)
+    bm = a_blk.shape[0]
+    x_blk = jax.lax.dynamic_slice(x, (row_offset,), (bm,))
+    return jacobi_k.update_block(x_blk, r_blk, invdiag_blk)
+
+
+def jacobi_block_step_ref(a_blk, x, b_blk, invdiag_blk, row_offset):
+    return ref.jacobi_block_step(a_blk, x, b_blk, invdiag_blk, row_offset)
+
+
+# --------------------------------------------------------------------------
+# Jacobi: monolithic full step (single-worker / validation artifact).
+#   inputs : a (n,n), x (n,), b (n,), invdiag (n,)
+#   outputs: x_new (n,), res2 (1,)
+# --------------------------------------------------------------------------
+
+def jacobi_full_step(a, x, b, invdiag):
+    r = b - a @ x
+    x_new = x + r * invdiag
+    return x_new, jnp.sum(r * r).reshape((1,))
+
+
+# --------------------------------------------------------------------------
+# Heat: one explicit stencil step on a halo strip.
+#   inputs : u_strip (rows,w) f32, alpha () f32
+#   outputs: u_new (rows-2,w) f32
+# --------------------------------------------------------------------------
+
+def heat_strip_step_pallas(u_strip, alpha):
+    return (heat_k.heat_strip_step(u_strip, alpha),)
+
+
+def heat_strip_step_ref(u_strip, alpha):
+    return (ref.heat_strip_step(u_strip, alpha),)
+
+
+# --------------------------------------------------------------------------
+# Dot-product block (used by the CG extension): partial <u, v>.
+# --------------------------------------------------------------------------
+
+def dot_block(u_blk, v_blk):
+    return (jnp.sum(u_blk * v_blk).reshape((1,)),)
+
+
+# --------------------------------------------------------------------------
+# AXPY block (CG): w = u + alpha * v.
+# --------------------------------------------------------------------------
+
+def axpy_block(u_blk, v_blk, alpha):
+    return (u_blk + alpha * v_blk,)
+
+
+# --------------------------------------------------------------------------
+# Matvec block (CG): y_blk = a_blk @ x.
+# --------------------------------------------------------------------------
+
+def matvec_block(a_blk, x):
+    return (a_blk @ x,)

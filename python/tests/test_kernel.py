@@ -1,0 +1,189 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the build.
+
+Every Pallas kernel is compared against its pure-jnp oracle from
+``kernels/ref.py``, both on fixed paper-relevant shapes and under
+hypothesis-driven shape/value sweeps.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import heat, jacobi, ref
+
+RTOL = 2e-4
+ATOL = 2e-4
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _jacobi_case(bm, n, seed=0, offset=None):
+    g = _rng(seed)
+    a_blk = g.standard_normal((bm, n)).astype(np.float32)
+    x = g.standard_normal(n).astype(np.float32)
+    b_blk = g.standard_normal(bm).astype(np.float32)
+    invd = (0.1 + g.random(bm)).astype(np.float32)
+    if offset is None:
+        offset = (n - bm) // 2
+    return a_blk, x, b_blk, invd, np.int32(offset)
+
+
+# ---------------------------------------------------------------- residual
+
+@pytest.mark.parametrize("bm,n,block_n", [
+    (1, 256, 256),
+    (7, 256, 256),
+    (64, 512, 256),
+    (128, 512, 512),
+    (352, 2816, 256),   # padded paper size 2709, p=8
+])
+def test_residual_block_matches_ref(bm, n, block_n):
+    a_blk, x, b_blk, _, _ = _jacobi_case(bm, n)
+    got = jacobi.residual_block(
+        jnp.array(a_blk), jnp.array(x), jnp.array(b_blk), block_n=block_n)
+    want = ref.residual_block(a_blk, x, b_blk)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_residual_block_rejects_indivisible_n():
+    a_blk, x, b_blk, _, _ = _jacobi_case(4, 300)
+    with pytest.raises(ValueError, match="not divisible"):
+        jacobi.residual_block(
+            jnp.array(a_blk), jnp.array(x), jnp.array(b_blk), block_n=256)
+
+
+def test_residual_block_zero_matrix_returns_b():
+    b_blk = np.arange(8, dtype=np.float32)
+    got = jacobi.residual_block(
+        jnp.zeros((8, 256)), jnp.ones((256,)), jnp.array(b_blk), block_n=256)
+    np.testing.assert_allclose(got, b_blk, rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bm=st.integers(1, 48),
+    tiles=st.integers(1, 4),
+    block_n=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_residual_block_hypothesis(bm, tiles, block_n, seed):
+    n = tiles * block_n
+    a_blk, x, b_blk, _, _ = _jacobi_case(bm, n, seed=seed)
+    got = jacobi.residual_block(
+        jnp.array(a_blk), jnp.array(x), jnp.array(b_blk), block_n=block_n)
+    want = ref.residual_block(a_blk, x, b_blk)
+    # accumulation-order differences scale with n
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3 * np.sqrt(n))
+
+
+# ------------------------------------------------------------------ update
+
+@pytest.mark.parametrize("bm", [1, 5, 64, 352])
+def test_update_block_matches_ref(bm):
+    g = _rng(3)
+    x_blk = g.standard_normal(bm).astype(np.float32)
+    r_blk = g.standard_normal(bm).astype(np.float32)
+    invd = (0.1 + g.random(bm)).astype(np.float32)
+    gx, gr = jacobi.update_block(
+        jnp.array(x_blk), jnp.array(r_blk), jnp.array(invd))
+    wx, wr = ref.update_block(x_blk, r_blk, invd)
+    np.testing.assert_allclose(gx, wx, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(gr, wr, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bm=st.integers(1, 256), seed=st.integers(0, 2**31 - 1))
+def test_update_block_hypothesis(bm, seed):
+    g = _rng(seed)
+    x_blk = g.standard_normal(bm).astype(np.float32)
+    r_blk = g.standard_normal(bm).astype(np.float32)
+    invd = (0.1 + g.random(bm)).astype(np.float32)
+    gx, gr = jacobi.update_block(
+        jnp.array(x_blk), jnp.array(r_blk), jnp.array(invd))
+    wx, wr = ref.update_block(x_blk, r_blk, invd)
+    np.testing.assert_allclose(gx, wx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gr, wr, rtol=1e-3, atol=1e-3 * bm)
+
+
+def test_update_block_zero_residual_is_identity():
+    x_blk = np.arange(16, dtype=np.float32)
+    gx, gr = jacobi.update_block(
+        jnp.array(x_blk), jnp.zeros(16), jnp.ones(16))
+    np.testing.assert_allclose(gx, x_blk, rtol=0, atol=0)
+    assert float(gr[0]) == 0.0
+
+
+# ----------------------------------------------------------- fused step
+
+@pytest.mark.parametrize("bm,n,offset", [
+    (128, 512, 0),
+    (128, 512, 128),
+    (128, 512, 384),     # last block
+    (512, 512, 0),       # single-block (p=1) layout
+])
+def test_jacobi_block_step_matches_ref(bm, n, offset):
+    case = _jacobi_case(bm, n, seed=7, offset=offset)
+    got = jacobi.jacobi_block_step(*map(jnp.array, case[:4]), case[4],
+                                   block_n=256)
+    want = ref.jacobi_block_step(*case)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(got[1], want[1], rtol=1e-3, atol=1e-2)
+
+
+# -------------------------------------------------------------------- heat
+
+@pytest.mark.parametrize("rows,w", [(3, 4), (10, 16), (34, 64), (66, 256)])
+def test_heat_strip_matches_ref(rows, w):
+    g = _rng(11)
+    u = g.standard_normal((rows, w)).astype(np.float32)
+    got = heat.heat_strip_step(jnp.array(u), 0.2)
+    want = ref.heat_strip_step(u, np.float32(0.2))
+    assert got.shape == (rows - 2, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_heat_strip_preserves_dirichlet_columns():
+    g = _rng(12)
+    u = g.standard_normal((10, 8)).astype(np.float32)
+    got = np.asarray(heat.heat_strip_step(jnp.array(u), 0.25))
+    np.testing.assert_allclose(got[:, 0], u[1:-1, 0], rtol=0, atol=0)
+    np.testing.assert_allclose(got[:, -1], u[1:-1, -1], rtol=0, atol=0)
+
+
+def test_heat_strip_uniform_field_is_fixed_point():
+    u = np.full((8, 16), 3.5, dtype=np.float32)
+    got = np.asarray(heat.heat_strip_step(jnp.array(u), 0.25))
+    np.testing.assert_allclose(got, u[1:-1], rtol=0, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(3, 40),
+    w=st.integers(3, 80),
+    alpha=st.floats(0.01, 0.25),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_heat_strip_hypothesis(rows, w, alpha, seed):
+    g = _rng(seed)
+    u = g.standard_normal((rows, w)).astype(np.float32)
+    got = heat.heat_strip_step(jnp.array(u), np.float32(alpha))
+    want = ref.heat_strip_step(u, np.float32(alpha))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------- oracle self-consistency
+
+def test_ref_jacobi_solve_converges():
+    """Residual-correction Jacobi drives a diag-dominant system to x*."""
+    n = 64
+    g = _rng(42)
+    a = g.standard_normal((n, n)).astype(np.float32) * 0.05
+    a[np.arange(n), np.arange(n)] = 4.0
+    x_star = g.standard_normal(n).astype(np.float32)
+    b = a @ x_star
+    x = np.asarray(ref.jacobi_solve(jnp.array(a), jnp.array(b), 200))
+    np.testing.assert_allclose(x, x_star, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,134 @@
+"""L2 model-function tests: shapes, variants agree, CG blocks, full step."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _block_case(bm, n, seed=0):
+    g = _rng(seed)
+    return (
+        g.standard_normal((bm, n)).astype(np.float32),
+        g.standard_normal(n).astype(np.float32),
+        g.standard_normal(bm).astype(np.float32),
+        (0.1 + g.random(bm)).astype(np.float32),
+        np.int32((n - bm) // 2),
+    )
+
+
+@pytest.mark.parametrize("bm,n", [(128, 512), (256, 512), (512, 512)])
+def test_pallas_and_ref_variants_agree(bm, n):
+    case = _block_case(bm, n, seed=5)
+    got_p = model.jacobi_block_step_pallas(
+        *map(jnp.array, case[:4]), case[4], block_n=256)
+    got_r = model.jacobi_block_step_ref(*map(jnp.array, case[:4]), case[4])
+    np.testing.assert_allclose(got_p[0], got_r[0], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(got_p[1], got_r[1], rtol=1e-3, atol=1e-2)
+
+
+def test_block_step_output_shapes():
+    case = _block_case(128, 512)
+    x_new, res2 = model.jacobi_block_step_ref(
+        *map(jnp.array, case[:4]), case[4])
+    assert x_new.shape == (128,)
+    assert res2.shape == (1,)
+
+
+def test_full_step_matches_blockwise_composition():
+    """The monolithic artifact == assembling the p block artifacts."""
+    n, p = 512, 4
+    bm = n // p
+    g = _rng(9)
+    a = g.standard_normal((n, n)).astype(np.float32) * 0.01
+    a[np.arange(n), np.arange(n)] = 4.0
+    x = g.standard_normal(n).astype(np.float32)
+    b = g.standard_normal(n).astype(np.float32)
+    invd = (1.0 / np.diag(a)).astype(np.float32)
+
+    full_x, full_r2 = model.jacobi_full_step(
+        jnp.array(a), jnp.array(x), jnp.array(b), jnp.array(invd))
+
+    parts, r2 = [], 0.0
+    for k in range(p):
+        lo = k * bm
+        xb, rb = model.jacobi_block_step_ref(
+            jnp.array(a[lo:lo + bm]), jnp.array(x), jnp.array(b[lo:lo + bm]),
+            jnp.array(invd[lo:lo + bm]), np.int32(lo))
+        parts.append(np.asarray(xb))
+        r2 += float(rb[0])
+
+    np.testing.assert_allclose(
+        np.concatenate(parts), full_x, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(r2, float(full_r2[0]), rtol=1e-3, atol=1e-2)
+
+
+def test_iterated_block_steps_converge():
+    """Driving the block artifacts in a loop solves the system (e2e-in-python
+    mirror of what the rust coordinator does)."""
+    n, p, bm = 512, 2, 256
+    g = _rng(21)
+    a = g.standard_normal((n, n)).astype(np.float32) * 0.02
+    a[np.arange(n), np.arange(n)] = 4.0
+    x_star = g.standard_normal(n).astype(np.float32)
+    b = (a @ x_star).astype(np.float32)
+    invd = (1.0 / np.diag(a)).astype(np.float32)
+
+    x = np.zeros(n, dtype=np.float32)
+    for _ in range(120):
+        nxt = []
+        for k in range(p):
+            lo = k * bm
+            xb, _ = model.jacobi_block_step_ref(
+                jnp.array(a[lo:lo + bm]), jnp.array(x),
+                jnp.array(b[lo:lo + bm]), jnp.array(invd[lo:lo + bm]),
+                np.int32(lo))
+            nxt.append(np.asarray(xb))
+        x = np.concatenate(nxt)
+    np.testing.assert_allclose(x, x_star, rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------ CG blocks
+
+def test_dot_block():
+    g = _rng(2)
+    u = g.standard_normal(256).astype(np.float32)
+    v = g.standard_normal(256).astype(np.float32)
+    (got,) = model.dot_block(jnp.array(u), jnp.array(v))
+    np.testing.assert_allclose(got, [u @ v], rtol=1e-4, atol=1e-3)
+
+
+def test_axpy_block():
+    g = _rng(3)
+    u = g.standard_normal(64).astype(np.float32)
+    v = g.standard_normal(64).astype(np.float32)
+    (got,) = model.axpy_block(jnp.array(u), jnp.array(v), np.float32(0.5))
+    np.testing.assert_allclose(got, u + 0.5 * v, rtol=1e-6, atol=1e-6)
+
+
+def test_matvec_block():
+    g = _rng(4)
+    a = g.standard_normal((64, 512)).astype(np.float32)
+    x = g.standard_normal(512).astype(np.float32)
+    (got,) = model.matvec_block(jnp.array(a), jnp.array(x))
+    np.testing.assert_allclose(got, a @ x, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bm=st.integers(1, 128), seed=st.integers(0, 2**31 - 1),
+       alpha=st.floats(-2.0, 2.0))
+def test_axpy_block_hypothesis(bm, seed, alpha):
+    g = _rng(seed)
+    u = g.standard_normal(bm).astype(np.float32)
+    v = g.standard_normal(bm).astype(np.float32)
+    (got,) = model.axpy_block(jnp.array(u), jnp.array(v), np.float32(alpha))
+    np.testing.assert_allclose(got, u + np.float32(alpha) * v,
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,78 @@
+//! ABL-GRAN: chunk granularity — how finely should a job's input be
+//! chunked?  Too coarse starves the sequences; too fine drowns in
+//! distribution overhead.  (The user controls this when defining jobs —
+//! paper §2.2 "the input ... has to be given in amount of chunks".)
+//!
+//! Fixed workload (element-wise transform over 4M floats, one 4-sequence
+//! job per half), swept over chunks-per-job ∈ {1, 2, 4, 8, 16, 64, 256}.
+//!
+//! ```text
+//! cargo bench --bench abl_granularity
+//! ```
+
+use hypar::prelude::*;
+use hypar::util::bench::{Bench, Report};
+
+const N: usize = 4 << 20; // 4M floats
+
+fn registry(chunks: usize) -> FunctionRegistry {
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "load", move |_in, out| {
+        let data: Vec<f32> = (0..N).map(|i| (i % 1013) as f32).collect();
+        for c in DataChunk::from_f32(data).split(chunks) {
+            out.push(c);
+        }
+        Ok(())
+    });
+    reg.register_per_chunk_try(2, "transform", |c| {
+        // ~8 flops per element: enough work that sequences matter.
+        Ok(DataChunk::from_f32(
+            c.as_f32()?
+                .iter()
+                .map(|v| {
+                    let x = v * 1.0001 + 0.5;
+                    let y = x * x - 0.25 * x + 1.0;
+                    y / (x + 2.0)
+                })
+                .collect(),
+        ))
+    });
+    reg
+}
+
+fn main() {
+    let bench = Bench::default();
+    let mut report = Report::new("ABL-GRAN chunk granularity (4M-element transform)");
+    for chunks in [1usize, 2, 4, 8, 16, 64, 256] {
+        let script = format!(
+            "J1(1,1,0); J2(2,4,R1[0..{half}]), J3(2,4,R1[{half}..{chunks}]);",
+            half = (chunks / 2).max(1),
+            chunks = chunks.max(2)
+        );
+        // chunks=1 degenerates to a single-source script
+        let script = if chunks == 1 {
+            "J1(1,1,0); J2(2,4,R1);".to_string()
+        } else {
+            script
+        };
+        let name = format!("transform/chunks{chunks}");
+        let reg_chunks = chunks.max(2).max(chunks); // actual split count
+        let m = bench.measure(&name, || {
+            let fw = Framework::builder()
+                .schedulers(2)
+                .workers_per_scheduler(2)
+                .cores_per_worker(4)
+                .prespawn_workers(true)
+                .registry(registry(reg_chunks))
+                .build()
+                .unwrap();
+            fw.run(Algorithm::parse(&script).unwrap()).unwrap()
+        });
+        report.add(m);
+    }
+    report.finish();
+    println!(
+        "shape: single chunk cannot use the job's 4 sequences; moderate chunk\n\
+         counts win; very fine chunking pays per-chunk bookkeeping."
+    );
+}

@@ -1,0 +1,58 @@
+//! ABL-KEEP: the keep-results flag (paper §3.1) on the iterative Jacobi —
+//! with keep, a matrix block is distributed once and never moves; without,
+//! it round-trips scheduler→worker every sweep.
+//!
+//! Reports wall time *and* communication volume for both settings — the
+//! bytes ratio is the design point the paper argues for ("reducing the
+//! communication overhead ... within iterative algorithms").
+//!
+//! ```text
+//! cargo bench --bench abl_keepresults
+//! ```
+
+use hypar::solvers::{jacobi_fw, JacobiConfig};
+use hypar::util::bench::{Bench, Report};
+
+fn main() {
+    let bench = Bench::default();
+    let iters = std::env::var("HYPAR_KEEP_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(25usize);
+    let n = 1024usize;
+    let procs = 4usize;
+
+    let mut report = Report::new("ABL-KEEP keep-results on iterative Jacobi");
+    let mut bytes = Vec::new();
+    for keep in [true, false] {
+        let cfg = JacobiConfig::new(n, procs, iters).with_keep_blocks(keep);
+        let name = format!("jacobi/n{n}/p{procs}/keep={keep}");
+        let mut last_comm = 0u64;
+        let cfg2 = cfg.clone();
+        let m = bench.measure(&name, || {
+            let (out, _) =
+                jacobi_fw::run(&cfg2, &jacobi_fw::FwTopology::default()).expect("run");
+            last_comm = out.comm.bytes;
+            out
+        });
+        println!("    -> comm {last_comm} bytes");
+        bytes.push((keep, last_comm));
+        report.add(m);
+    }
+    if let Some(r) = report.ratio(
+        &format!("jacobi/n{n}/p{procs}/keep=false"),
+        &format!("jacobi/n{n}/p{procs}/keep=true"),
+    ) {
+        println!("    -> no-keep wall-time penalty: {r:.2}x");
+    }
+    if let (Some((_, kb)), Some((_, nb))) = (
+        bytes.iter().find(|(k, _)| *k),
+        bytes.iter().find(|(k, _)| !*k),
+    ) {
+        println!(
+            "    -> comm bytes: keep {kb} vs no-keep {nb} ({:.1}x more traffic)",
+            *nb as f64 / (*kb).max(1) as f64
+        );
+    }
+    report.finish();
+}

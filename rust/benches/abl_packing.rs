@@ -1,0 +1,67 @@
+//! ABL-PACK: thread-count bin packing (paper §3.3: "as jobs J3 and J4 both
+//! intend to call user function 2 with two threads each, the framework
+//! could exploit this by assigning both jobs to the same worker").
+//!
+//! Workload: eight 2-thread jobs, each 40 ms of real (sleep) occupancy.
+//! * packed: 4-core workers -> two jobs share a worker -> 2 waves on 2
+//!   workers/scheduler.
+//! * unpacked baseline: 2-core workers -> one job per worker at a time.
+//!
+//! ```text
+//! cargo bench --bench abl_packing
+//! ```
+
+use hypar::prelude::*;
+use hypar::util::bench::{Bench, Report};
+
+fn sleepy_registry() -> FunctionRegistry {
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "work40ms", |_in, _out| {
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        Ok(())
+    });
+    reg
+}
+
+fn eight_jobs() -> Algorithm {
+    let jobs: Vec<String> = (1..=8).map(|i| format!("J{i}(1,2,0)")).collect();
+    Algorithm::parse(&format!("{};", jobs.join(", "))).unwrap()
+}
+
+fn main() {
+    let bench = Bench::default();
+    let mut report = Report::new("ABL-PACK thread-count packing (8 x 2-thread 40ms jobs)");
+
+    // 2 schedulers x 2 workers in both configs; only the core budget and
+    // therefore the packing density differs.
+    let m_packed = bench.measure("packed/4-core-workers", || {
+        let fw = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .cores_per_worker(4) // two 2-thread jobs fit
+            .prespawn_workers(true)
+            .registry(sleepy_registry())
+            .build()
+            .unwrap();
+        fw.run(eight_jobs()).unwrap()
+    });
+    report.add(m_packed);
+
+    let m_unpacked = bench.measure("unpacked/2-core-workers", || {
+        let fw = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .cores_per_worker(2) // one 2-thread job at a time
+            .prespawn_workers(true)
+            .registry(sleepy_registry())
+            .build()
+            .unwrap();
+        fw.run(eight_jobs()).unwrap()
+    });
+    report.add(m_unpacked);
+
+    if let Some(r) = report.ratio("unpacked/2-core-workers", "packed/4-core-workers") {
+        println!("    -> packing speedup: {r:.2}x (ideal 2.0x)");
+    }
+    report.finish();
+}

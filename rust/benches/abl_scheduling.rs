@@ -1,0 +1,150 @@
+//! ABL-SCHED: scheduling-overhead roofline — what does one framework job
+//! cost with zero compute in it?
+//!
+//! Sweeps segments x jobs with noop user functions and reports µs/job;
+//! also compares static unrolled segments against dynamically injected
+//! chains of the same total job count (the cost of the paper's runtime
+//! job creation), and one-scheduler against multi-scheduler dispatch.
+//!
+//! ```text
+//! cargo bench --bench abl_scheduling
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hypar::prelude::*;
+use hypar::util::bench::{Bench, Report};
+
+fn noop_registry() -> FunctionRegistry {
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "noop", |_in, _out| Ok(()));
+    reg
+}
+
+fn static_algo(segments: usize, jobs: usize) -> Algorithm {
+    let mut b = Algorithm::builder();
+    let mut id = 1u32;
+    for _ in 0..segments {
+        let seg: Vec<JobSpec> = (0..jobs)
+            .map(|_| {
+                let s = JobSpec::new(id, 1, 1);
+                id += 1;
+                s
+            })
+            .collect();
+        b = b.segment(seg);
+    }
+    b.build().unwrap()
+}
+
+/// Self-injecting chain: `rounds` segments of `jobs` noops created at
+/// runtime by a controller in each round.
+fn dynamic_registry(rounds: usize, jobs: usize) -> FunctionRegistry {
+    let counter = Arc::new(AtomicUsize::new(0));
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "noop", |_in, _out| Ok(()));
+    reg.register_with_ctx(2, "controller", move |_in, _out, ctx| {
+        let round = counter.fetch_add(1, Ordering::SeqCst) + 1;
+        if round < rounds {
+            let mut batch: Vec<InjectedJob> = (0..jobs as u32)
+                .map(|i| InjectedJob {
+                    local_id: i,
+                    func: FuncId(1),
+                    threads: ThreadCount::Exact(1),
+                    inputs: vec![],
+                    keep: false,
+                })
+                .collect();
+            batch.push(InjectedJob {
+                local_id: jobs as u32,
+                func: FuncId(2),
+                threads: ThreadCount::Exact(1),
+                inputs: vec![],
+                keep: false,
+            });
+            ctx.inject(1, batch);
+        }
+        Ok(())
+    });
+    reg
+}
+
+fn main() {
+    let bench = Bench::default();
+    let mut report = Report::new("ABL-SCHED scheduling overhead");
+
+    // --- per-job cost, static segments -----------------------------------
+    for (segments, jobs) in [(1usize, 1usize), (1, 16), (1, 64), (8, 8), (32, 4), (64, 1)] {
+        for schedulers in [1usize, 2, 4] {
+            let name = format!("static/s{segments}x j{jobs}/sched{schedulers}");
+            let m = bench.measure(&name, || {
+                let fw = Framework::builder()
+                    .schedulers(schedulers)
+                    .workers_per_scheduler(4)
+                    .prespawn_workers(true)
+                    .registry(noop_registry())
+                    .build()
+                    .unwrap();
+                fw.run(static_algo(segments, jobs)).unwrap()
+            });
+            let total_jobs = (segments * jobs) as f64;
+            let us_per_job = m.mean.as_secs_f64() * 1e6 / total_jobs;
+            report.add(m);
+            println!("    -> {us_per_job:.1} us/job");
+        }
+    }
+
+    // --- dynamic injection vs static unroll ------------------------------
+    let (rounds, jobs) = (20usize, 4usize);
+    let m_static = bench.measure("unroll/20x4", || {
+        let fw = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(4)
+            .prespawn_workers(true)
+            .registry(noop_registry())
+            .build()
+            .unwrap();
+        fw.run(static_algo(rounds, jobs)).unwrap()
+    });
+    report.add(m_static);
+    let m_dyn = bench.measure("inject/20x4", || {
+        let fw = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(4)
+            .prespawn_workers(true)
+            .registry(dynamic_registry(rounds, jobs))
+            .build()
+            .unwrap();
+        fw.run(Algorithm::parse("J1(2,1,0);").unwrap()).unwrap()
+    });
+    report.add(m_dyn);
+    if let Some(r) = report.ratio("inject/20x4", "unroll/20x4") {
+        println!("    -> dynamic-injection cost factor vs static: {r:.2}x");
+    }
+
+    // --- worker spawn cost: prespawn vs on demand -------------------------
+    let m_cold = bench.measure("spawn/on-demand 16 jobs", || {
+        let fw = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(8)
+            .prespawn_workers(false)
+            .registry(noop_registry())
+            .build()
+            .unwrap();
+        fw.run(static_algo(1, 16)).unwrap()
+    });
+    report.add(m_cold);
+    let m_warm = bench.measure("spawn/prespawned 16 jobs", || {
+        let fw = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(8)
+            .prespawn_workers(true)
+            .registry(noop_registry())
+            .build()
+            .unwrap();
+        fw.run(static_algo(1, 16)).unwrap()
+    });
+    report.add(m_warm);
+    report.finish();
+}

@@ -1,0 +1,155 @@
+//! α/β communication cost model and global traffic statistics.
+//!
+//! Every send is charged `α + β · bytes` (the classic latency/bandwidth
+//! model).  Two uses:
+//!
+//! 1. **Accounting** (always on): totals land in [`CommStats`]; benchmark
+//!    reports include message/byte counts so communication-volume claims
+//!    (e.g. what keep-results saves) are measured, not estimated.
+//! 2. **Injection** (opt-in, [`CostModel::simulate`]): the sending thread
+//!    sleeps for the modelled duration, so a single host exhibits
+//!    cluster-like timing and the Figure-3 curves have a realistic
+//!    communication/computation ratio.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Latency/bandwidth model. Default: accounting only, no injected delay.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Per-message latency α in microseconds (typical cluster MPI: 1–10 µs).
+    pub alpha_us: f64,
+    /// Bandwidth in gigabytes/second (β = 1/bandwidth).
+    pub bandwidth_gbps: f64,
+    /// If true, the sender sleeps for the modelled duration of each send.
+    pub simulate: bool,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // 2 µs latency, 10 GB/s — a mid-range interconnect.
+        CostModel { alpha_us: 2.0, bandwidth_gbps: 10.0, simulate: false }
+    }
+}
+
+impl CostModel {
+    /// No accounting-visible delay at all (unit tests).
+    pub fn free() -> Self {
+        CostModel { alpha_us: 0.0, bandwidth_gbps: f64::INFINITY, simulate: false }
+    }
+
+    /// A model that injects delays (benchmarks that want cluster shape).
+    pub fn cluster(alpha_us: f64, bandwidth_gbps: f64) -> Self {
+        CostModel { alpha_us, bandwidth_gbps, simulate: true }
+    }
+
+    /// Modelled transfer duration for a message of `bytes`.
+    pub fn duration(&self, bytes: usize) -> Duration {
+        let beta_ns_per_byte = if self.bandwidth_gbps.is_finite() && self.bandwidth_gbps > 0.0 {
+            1.0 / self.bandwidth_gbps // GB/s == bytes/ns
+        } else {
+            0.0
+        };
+        let ns = self.alpha_us * 1_000.0 + beta_ns_per_byte * bytes as f64;
+        Duration::from_nanos(ns as u64)
+    }
+
+    /// Apply the model to one send: account and (optionally) sleep.
+    pub(crate) fn on_send(&self, bytes: usize, stats: &CommStats) {
+        stats.msgs.fetch_add(1, Ordering::Relaxed);
+        stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        if self.simulate {
+            let d = self.duration(bytes);
+            if !d.is_zero() {
+                std::thread::sleep(d);
+            }
+            stats
+                .modelled_ns
+                .fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        } else {
+            stats
+                .modelled_ns
+                .fetch_add(self.duration(bytes).as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Global traffic counters for a [`super::World`]. Cheap relaxed atomics on
+/// the send path.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    msgs: AtomicU64,
+    bytes: AtomicU64,
+    /// Sum of modelled transfer durations (whether or not injected).
+    modelled_ns: AtomicU64,
+}
+
+/// Point-in-time copy of the counters (subtraction gives per-phase deltas).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub msgs: u64,
+    pub bytes: u64,
+    pub modelled_comm_ns: u64,
+}
+
+impl CommStats {
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            msgs: self.msgs.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            modelled_comm_ns: self.modelled_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl StatsSnapshot {
+    /// Traffic between two snapshots.
+    pub fn delta(self, earlier: StatsSnapshot) -> StatsSnapshot {
+        StatsSnapshot {
+            msgs: self.msgs - earlier.msgs,
+            bytes: self.bytes - earlier.bytes,
+            modelled_comm_ns: self.modelled_comm_ns - earlier.modelled_comm_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_scales_with_bytes() {
+        let m = CostModel { alpha_us: 1.0, bandwidth_gbps: 1.0, simulate: false };
+        // α = 1 µs; 1 GB/s == 1 byte/ns.
+        assert_eq!(m.duration(0), Duration::from_nanos(1_000));
+        assert_eq!(m.duration(1_000), Duration::from_nanos(2_000));
+    }
+
+    #[test]
+    fn free_model_is_zero() {
+        assert_eq!(CostModel::free().duration(1 << 20), Duration::ZERO);
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let stats = CommStats::default();
+        let m = CostModel::free();
+        m.on_send(100, &stats);
+        m.on_send(50, &stats);
+        let s = stats.snapshot();
+        assert_eq!(s.msgs, 2);
+        assert_eq!(s.bytes, 150);
+    }
+
+    #[test]
+    fn snapshot_delta() {
+        let stats = CommStats::default();
+        let m = CostModel::free();
+        m.on_send(10, &stats);
+        let a = stats.snapshot();
+        m.on_send(30, &stats);
+        let d = stats.snapshot().delta(a);
+        assert_eq!(d.msgs, 1);
+        assert_eq!(d.bytes, 30);
+    }
+}

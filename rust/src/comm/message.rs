@@ -1,0 +1,159 @@
+//! Message envelopes and wire-size accounting.
+
+use super::Rank;
+
+/// MPI-style message tag. User tags live below [`Tag::COLLECTIVE_BASE`];
+/// the collectives module reserves the range above it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Tag(pub u32);
+
+impl Tag {
+    /// Tags `>= COLLECTIVE_BASE` are reserved for collective plumbing.
+    pub const COLLECTIVE_BASE: u32 = 1 << 30;
+
+    pub fn is_collective(self) -> bool {
+        self.0 >= Self::COLLECTIVE_BASE
+    }
+}
+
+/// Payload size accounting for the cost model. Implemented by the
+/// framework's control message type; the envelope adds a fixed header.
+pub trait WireSize {
+    /// Approximate serialized size in bytes (used for α/β cost accounting;
+    /// does not need to be exact, but must scale with the real payload).
+    fn wire_size(&self) -> usize;
+}
+
+impl WireSize for () {
+    fn wire_size(&self) -> usize {
+        0
+    }
+}
+
+impl WireSize for Vec<u8> {
+    fn wire_size(&self) -> usize {
+        self.len()
+    }
+}
+
+impl WireSize for Vec<f32> {
+    fn wire_size(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+impl WireSize for Vec<f64> {
+    fn wire_size(&self) -> usize {
+        self.len() * 8
+    }
+}
+
+impl WireSize for String {
+    fn wire_size(&self) -> usize {
+        self.len()
+    }
+}
+
+impl WireSize for crate::data::DataChunk {
+    fn wire_size(&self) -> usize {
+        self.size_bytes()
+    }
+}
+
+impl WireSize for crate::data::FunctionData {
+    fn wire_size(&self) -> usize {
+        self.size_bytes()
+    }
+}
+
+/// Collective plumbing payloads (kept separate from the user message type
+/// so collectives never collide with user traffic).
+#[derive(Debug, Clone)]
+pub enum CollPayload {
+    /// Barrier arrival / release token.
+    Token,
+    /// Raw bytes (bcast / gather).
+    Bytes(Vec<u8>),
+    /// f64 vector (reduce / allreduce).
+    F64(Vec<f64>),
+    /// f32 vector (allgather of solver state).
+    F32(Vec<f32>),
+}
+
+impl WireSize for CollPayload {
+    fn wire_size(&self) -> usize {
+        match self {
+            CollPayload::Token => 0,
+            CollPayload::Bytes(b) => b.len(),
+            CollPayload::F64(v) => v.len() * 8,
+            CollPayload::F32(v) => v.len() * 4,
+        }
+    }
+}
+
+/// Internal payload: user message or collective plumbing.
+#[derive(Debug, Clone)]
+pub(crate) enum Inner<M> {
+    User(M),
+    Coll(CollPayload),
+}
+
+/// A delivered message with its MPI-style envelope.
+#[derive(Debug)]
+pub struct Envelope<M> {
+    pub src: Rank,
+    pub dst: Rank,
+    pub tag: Tag,
+    pub(crate) payload: Inner<M>,
+}
+
+/// Fixed per-message header charge (src, dst, tag, framing).
+pub(crate) const HEADER_BYTES: usize = 16;
+
+impl<M> Envelope<M> {
+    /// Unwrap a user payload; panics on collective plumbing (the transport
+    /// guarantees user receives only see `Inner::User`).
+    pub fn into_user(self) -> M {
+        match self.payload {
+            Inner::User(m) => m,
+            Inner::Coll(_) => unreachable!("user recv matched a collective envelope"),
+        }
+    }
+
+    pub fn user_ref(&self) -> Option<&M> {
+        match &self.payload {
+            Inner::User(m) => Some(m),
+            Inner::Coll(_) => None,
+        }
+    }
+}
+
+impl<M: WireSize> Envelope<M> {
+    pub(crate) fn wire_size(&self) -> usize {
+        HEADER_BYTES
+            + match &self.payload {
+                Inner::User(m) => m.wire_size(),
+                Inner::Coll(c) => c.wire_size(),
+            }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collective_tag_space() {
+        assert!(!Tag(0).is_collective());
+        assert!(!Tag(Tag::COLLECTIVE_BASE - 1).is_collective());
+        assert!(Tag(Tag::COLLECTIVE_BASE).is_collective());
+    }
+
+    #[test]
+    fn wire_sizes() {
+        assert_eq!(vec![0u8; 10].wire_size(), 10);
+        assert_eq!(vec![0f64; 3].wire_size(), 24);
+        assert_eq!(CollPayload::F32(vec![0.0; 4]).wire_size(), 16);
+        assert_eq!(CollPayload::Token.wire_size(), 0);
+    }
+}

@@ -1,0 +1,44 @@
+//! In-process message-passing substrate — the framework's "MPI".
+//!
+//! The paper runs on MPI over a cluster; this module provides the same
+//! programming model in one process so the framework logic above it is
+//! written exactly as it would be against MPI:
+//!
+//! * **ranks** with private mailboxes ([`World`], [`Comm`]),
+//! * blocking **matched receive** by `(source, tag)` with out-of-order
+//!   buffering (MPI envelope semantics),
+//! * **collectives** (barrier, bcast, gather, reduce, allreduce,
+//!   allgather) built on point-to-point, in [`collectives`],
+//! * dynamic rank creation (the paper's `MPI_Comm_spawn`-style dynamically
+//!   created workers) and rank removal with fail-fast sends — the fault
+//!   detection primitive,
+//! * an **α/β communication cost model** ([`costmodel`]) that accounts
+//!   per-message latency + per-byte cost and can optionally *inject* the
+//!   corresponding delays, so benchmark shapes reflect cluster behaviour
+//!   rather than function-call overhead.
+//!
+//! Substitution note (DESIGN.md §2): everything above `comm` consumes only
+//! this API, so porting the framework to real MPI means reimplementing this
+//! module, nothing else.
+
+pub mod collectives;
+pub mod costmodel;
+pub mod message;
+pub mod transport;
+
+pub use costmodel::{CommStats, CostModel, StatsSnapshot};
+pub use message::{Envelope, Tag, WireSize};
+pub use transport::{Comm, CommSender, Match, World};
+
+/// Process identity inside a [`World`] (the MPI rank).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Rank(pub u32);
+
+impl std::fmt::Display for Rank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// The master scheduler's fixed rank (paper: rank 0 in `MPI_COMM_WORLD`).
+pub const MASTER: Rank = Rank(0);

@@ -1,0 +1,432 @@
+//! Ranks, mailboxes and matched receive — the point-to-point layer.
+//!
+//! One [`World`] owns a mailbox per rank (an unbounded MPSC channel).
+//! [`Comm`] is the single-consumer endpoint a rank's thread holds;
+//! [`CommSender`] is a cheap cloneable send-only handle (what a worker's
+//! job threads use to report completion).
+//!
+//! Receive matching follows MPI semantics: `recv_match(src, tag)` delivers
+//! the earliest message matching the `(source, tag)` filter and buffers
+//! anything that arrives out of order.  Per-(src,dst) FIFO ordering is
+//! guaranteed by the underlying channels, which is what makes tag-matched
+//! collectives correct without sequence numbers (each rank executes
+//! collectives in program order).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::costmodel::{CommStats, CostModel, StatsSnapshot};
+use super::message::{CollPayload, Envelope, Inner, Tag, WireSize};
+use super::Rank;
+use crate::error::{Error, Result};
+
+struct WorldInner<M> {
+    mailboxes: RwLock<HashMap<Rank, Sender<Envelope<M>>>>,
+    next_rank: AtomicU32,
+    cost: CostModel,
+    stats: CommStats,
+}
+
+/// The communication universe: rank registry + cost model + stats.
+///
+/// Clone is cheap (shared handle). Ranks are created with [`World::add_rank`]
+/// — the first call returns rank 0 (the master scheduler by convention).
+pub struct World<M> {
+    inner: Arc<WorldInner<M>>,
+}
+
+impl<M> Clone for World<M> {
+    fn clone(&self) -> Self {
+        World { inner: self.inner.clone() }
+    }
+}
+
+impl<M: Send + WireSize + 'static> World<M> {
+    pub fn new(cost: CostModel) -> Self {
+        World {
+            inner: Arc::new(WorldInner {
+                mailboxes: RwLock::new(HashMap::new()),
+                next_rank: AtomicU32::new(0),
+                cost,
+                stats: CommStats::default(),
+            }),
+        }
+    }
+
+    /// Register a new rank and hand out its receive endpoint.  Ranks are
+    /// allocated densely starting from 0; dynamically spawned workers keep
+    /// calling this during the run (the paper's runtime-spawned processes).
+    pub fn add_rank(&self) -> Comm<M> {
+        let rank = Rank(self.inner.next_rank.fetch_add(1, Ordering::SeqCst));
+        let (tx, rx) = channel();
+        self.inner
+            .mailboxes
+            .write()
+            .expect("mailbox lock poisoned")
+            .insert(rank, tx);
+        Comm { rank, world: self.inner.clone(), rx, pending: VecDeque::new() }
+    }
+
+    /// Make a rank unreachable: subsequent sends to it fail with
+    /// [`Error::RankUnreachable`].  Used on clean worker shutdown and by
+    /// the fault injector to simulate a crashed node.
+    pub fn remove_rank(&self, rank: Rank) {
+        self.inner
+            .mailboxes
+            .write()
+            .expect("mailbox lock poisoned")
+            .remove(&rank);
+    }
+
+    /// Is the rank currently reachable?
+    pub fn is_alive(&self, rank: Rank) -> bool {
+        self.inner
+            .mailboxes
+            .read()
+            .expect("mailbox lock poisoned")
+            .contains_key(&rank)
+    }
+
+    /// Number of registered (alive) ranks.
+    pub fn alive_count(&self) -> usize {
+        self.inner.mailboxes.read().expect("mailbox lock poisoned").len()
+    }
+
+    /// Global traffic counters.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.inner.stats.snapshot()
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.inner.cost
+    }
+
+    /// A free-standing send handle not tied to any rank (rank is encoded
+    /// per send call as `src`). Used by the framework driver thread.
+    pub fn sender_for(&self, src: Rank) -> CommSender<M> {
+        CommSender { src, world: self.inner.clone() }
+    }
+}
+
+fn deliver<M: WireSize>(
+    inner: &WorldInner<M>,
+    env: Envelope<M>,
+) -> Result<()> {
+    let bytes = env.wire_size();
+    let dst = env.dst;
+    let local = env.src == dst;
+    let guard = inner.mailboxes.read().expect("mailbox lock poisoned");
+    let tx = guard.get(&dst).ok_or(Error::RankUnreachable(dst))?;
+    // Account (and possibly sleep) *before* enqueuing, modelling the wire.
+    // Self-sends are process-local (a worker depositing into its own cache)
+    // and never touch the interconnect — no charge.
+    if !local {
+        inner.cost.on_send(bytes, &inner.stats);
+    }
+    tx.send(env).map_err(|_| Error::RankUnreachable(dst))
+}
+
+/// Cloneable, `Send` send-only handle bound to a source rank.
+pub struct CommSender<M> {
+    src: Rank,
+    world: Arc<WorldInner<M>>,
+}
+
+impl<M> Clone for CommSender<M> {
+    fn clone(&self) -> Self {
+        CommSender { src: self.src, world: self.world.clone() }
+    }
+}
+
+impl<M: Send + WireSize + 'static> CommSender<M> {
+    pub fn rank(&self) -> Rank {
+        self.src
+    }
+
+    pub fn send(&self, dst: Rank, tag: Tag, msg: M) -> Result<()> {
+        deliver(
+            &self.world,
+            Envelope { src: self.src, dst, tag, payload: Inner::User(msg) },
+        )
+    }
+}
+
+/// A rank's receive endpoint (single consumer) + send capability.
+pub struct Comm<M> {
+    rank: Rank,
+    world: Arc<WorldInner<M>>,
+    rx: Receiver<Envelope<M>>,
+    /// Out-of-order buffer for matched receives.
+    pending: VecDeque<Envelope<M>>,
+}
+
+/// Receive filter: `None` = wildcard (MPI_ANY_SOURCE / MPI_ANY_TAG).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Match {
+    pub src: Option<Rank>,
+    pub tag: Option<Tag>,
+}
+
+impl Match {
+    pub fn any() -> Self {
+        Match::default()
+    }
+
+    pub fn from(src: Rank) -> Self {
+        Match { src: Some(src), tag: None }
+    }
+
+    pub fn tagged(tag: Tag) -> Self {
+        Match { src: None, tag: Some(tag) }
+    }
+
+    fn user_matches<M>(&self, env: &Envelope<M>) -> bool {
+        matches!(env.payload, Inner::User(_))
+            && self.src.map_or(true, |s| s == env.src)
+            && self.tag.map_or(true, |t| t == env.tag)
+    }
+}
+
+impl<M: Send + WireSize + 'static> Comm<M> {
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    /// Cloneable send-only handle stamped with this rank as source.
+    pub fn sender(&self) -> CommSender<M> {
+        CommSender { src: self.rank, world: self.world.clone() }
+    }
+
+    pub fn send(&self, dst: Rank, tag: Tag, msg: M) -> Result<()> {
+        deliver(
+            &self.world,
+            Envelope { src: self.rank, dst, tag, payload: Inner::User(msg) },
+        )
+    }
+
+    /// Blocking receive of the next *user* message (any source, any tag).
+    pub fn recv(&mut self) -> Result<Envelope<M>> {
+        self.recv_match(Match::any())
+    }
+
+    /// Blocking matched receive (MPI semantics; buffers non-matching).
+    pub fn recv_match(&mut self, m: Match) -> Result<Envelope<M>> {
+        if let Some(pos) = self.pending.iter().position(|e| m.user_matches(e)) {
+            return Ok(self.pending.remove(pos).expect("position valid"));
+        }
+        loop {
+            let env = self
+                .rx
+                .recv()
+                .map_err(|_| Error::WorldShutdown(self.rank))?;
+            if m.user_matches(&env) {
+                return Ok(env);
+            }
+            self.pending.push_back(env);
+        }
+    }
+
+    /// Matched receive with timeout. `Ok(None)` on timeout — the fault
+    /// detector's probe.
+    pub fn recv_match_timeout(
+        &mut self,
+        m: Match,
+        timeout: Duration,
+    ) -> Result<Option<Envelope<M>>> {
+        if let Some(pos) = self.pending.iter().position(|e| m.user_matches(e)) {
+            return Ok(Some(self.pending.remove(pos).expect("position valid")));
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            match self.rx.recv_timeout(remaining) {
+                Ok(env) => {
+                    if m.user_matches(&env) {
+                        return Ok(Some(env));
+                    }
+                    self.pending.push_back(env);
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => return Ok(None),
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(Error::WorldShutdown(self.rank))
+                }
+            }
+        }
+    }
+
+    /// Non-blocking receive of the next user message.
+    pub fn try_recv(&mut self) -> Result<Option<Envelope<M>>> {
+        self.recv_match_timeout(Match::any(), Duration::ZERO)
+    }
+
+    // ------------------------------------------------------ collective I/O
+
+    pub(crate) fn send_coll(&self, dst: Rank, tag: Tag, payload: CollPayload) -> Result<()> {
+        debug_assert!(tag.is_collective());
+        deliver(
+            &self.world,
+            Envelope { src: self.rank, dst, tag, payload: Inner::Coll(payload) },
+        )
+    }
+
+    /// Blocking receive of a collective payload from exactly `(src, tag)`.
+    pub(crate) fn recv_coll(&mut self, src: Rank, tag: Tag) -> Result<CollPayload> {
+        debug_assert!(tag.is_collective());
+        let matches = |e: &Envelope<M>| {
+            matches!(e.payload, Inner::Coll(_)) && e.src == src && e.tag == tag
+        };
+        if let Some(pos) = self.pending.iter().position(matches) {
+            let env = self.pending.remove(pos).expect("position valid");
+            match env.payload {
+                Inner::Coll(c) => return Ok(c),
+                Inner::User(_) => unreachable!(),
+            }
+        }
+        loop {
+            let env = self
+                .rx
+                .recv()
+                .map_err(|_| Error::WorldShutdown(self.rank))?;
+            if matches(&env) {
+                match env.payload {
+                    Inner::Coll(c) => return Ok(c),
+                    Inner::User(_) => unreachable!(),
+                }
+            }
+            self.pending.push_back(env);
+        }
+    }
+
+    /// Deregister this rank (future sends to it fail) without dropping the
+    /// endpoint. Used by workers that announce clean shutdown first.
+    pub fn deregister(&self) {
+        self.world
+            .mailboxes
+            .write()
+            .expect("mailbox lock poisoned")
+            .remove(&self.rank);
+    }
+}
+
+impl<M> Drop for Comm<M> {
+    fn drop(&mut self) {
+        // Fail-fast for anyone still holding our rank.
+        self.world
+            .mailboxes
+            .write()
+            .expect("mailbox lock poisoned")
+            .remove(&self.rank);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    type W = World<Vec<u8>>;
+
+    #[test]
+    fn ranks_allocate_densely() {
+        let w = W::new(CostModel::free());
+        let a = w.add_rank();
+        let b = w.add_rank();
+        assert_eq!(a.rank(), Rank(0));
+        assert_eq!(b.rank(), Rank(1));
+        assert_eq!(w.alive_count(), 2);
+        drop(a);
+        assert_eq!(w.alive_count(), 1); // dropped endpoints deregister
+    }
+
+    #[test]
+    fn p2p_roundtrip() {
+        let w = W::new(CostModel::free());
+        let a = w.add_rank();
+        let mut b = w.add_rank();
+        a.send(b.rank(), Tag(7), vec![1, 2, 3]).unwrap();
+        let env = b.recv().unwrap();
+        assert_eq!(env.src, a.rank());
+        assert_eq!(env.tag, Tag(7));
+        assert_eq!(env.into_user(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn matched_recv_buffers_out_of_order() {
+        let w = W::new(CostModel::free());
+        let a = w.add_rank();
+        let c = w.add_rank();
+        let mut b = w.add_rank();
+        a.send(b.rank(), Tag(1), vec![1]).unwrap();
+        c.send(b.rank(), Tag(2), vec![2]).unwrap();
+        a.send(b.rank(), Tag(2), vec![3]).unwrap();
+        // Ask for (c, 2) first even though (a, 1) arrived first.
+        let env = b
+            .recv_match(Match { src: Some(c.rank()), tag: Some(Tag(2)) })
+            .unwrap();
+        assert_eq!(env.into_user(), vec![2]);
+        // Buffered messages are still delivered, in order.
+        assert_eq!(b.recv().unwrap().into_user(), vec![1]);
+        assert_eq!(b.recv().unwrap().into_user(), vec![3]);
+    }
+
+    #[test]
+    fn send_to_removed_rank_fails_fast() {
+        let w = W::new(CostModel::free());
+        let a = w.add_rank();
+        let b = w.add_rank();
+        let b_rank = b.rank();
+        drop(b);
+        assert!(!w.is_alive(b_rank));
+        match a.send(b_rank, Tag(0), vec![]) {
+            Err(Error::RankUnreachable(r)) => assert_eq!(r, b_rank),
+            other => panic!("expected RankUnreachable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_timeout_returns_none() {
+        let w = W::new(CostModel::free());
+        let mut a = w.add_rank();
+        let got = a
+            .recv_match_timeout(Match::any(), Duration::from_millis(10))
+            .unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn sender_handle_is_cloneable_across_threads() {
+        let w = W::new(CostModel::free());
+        let mut root = w.add_rank();
+        let worker = w.add_rank();
+        let s = worker.sender();
+        let root_rank = root.rank();
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                let s = s.clone();
+                std::thread::spawn(move || s.send(root_rank, Tag(i), vec![i as u8]).unwrap())
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        for _ in 0..4 {
+            root.recv().unwrap();
+        }
+        assert_eq!(w.stats().msgs, 4);
+    }
+
+    #[test]
+    fn stats_count_bytes_with_header() {
+        let w = W::new(CostModel::free());
+        let a = w.add_rank();
+        let mut b = w.add_rank();
+        a.send(b.rank(), Tag(0), vec![0u8; 100]).unwrap();
+        b.recv().unwrap();
+        let s = w.stats();
+        assert_eq!(s.msgs, 1);
+        assert_eq!(s.bytes, 100 + super::super::message::HEADER_BYTES as u64);
+    }
+}

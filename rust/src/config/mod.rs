@@ -1,0 +1,287 @@
+//! Topology and engine configuration (JSON file + programmatic builder).
+//!
+//! A config describes the simulated cluster the framework runs on: how many
+//! sub-schedulers, how many workers each may spawn, how many cores a worker
+//! "node" has (the packing budget for multi-threaded jobs), the comm cost
+//! model, and where the AOT compute artifacts live.
+//!
+//! File format is JSON (parsed by [`crate::util::json`]); every field is
+//! optional and falls back to the default:
+//!
+//! ```json
+//! {
+//!   "schedulers": 2,
+//!   "workers_per_scheduler": 4,
+//!   "cores_per_worker": 4,
+//!   "prespawn_workers": false,
+//!   "fault_timeout_ms": 5000,
+//!   "cost_model": {"alpha_us": 2.0, "bandwidth_gbps": 10.0, "simulate": false},
+//!   "engine": {"artifact_dir": "artifacts", "variant": "ref"}
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::comm::CostModel;
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Cost-model section.
+#[derive(Debug, Clone)]
+pub struct CostModelConfig {
+    pub alpha_us: f64,
+    pub bandwidth_gbps: f64,
+    pub simulate: bool,
+}
+
+impl Default for CostModelConfig {
+    fn default() -> Self {
+        let m = CostModel::default();
+        CostModelConfig {
+            alpha_us: m.alpha_us,
+            bandwidth_gbps: m.bandwidth_gbps,
+            simulate: m.simulate,
+        }
+    }
+}
+
+impl From<CostModelConfig> for CostModel {
+    fn from(c: CostModelConfig) -> CostModel {
+        CostModel {
+            alpha_us: c.alpha_us,
+            bandwidth_gbps: c.bandwidth_gbps,
+            simulate: c.simulate,
+        }
+    }
+}
+
+/// Compute-engine section: where artifacts live and which kernel variant
+/// user functions resolve by default.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Directory containing `manifest.json` + `*.hlo.txt`.
+    pub artifact_dir: PathBuf,
+    /// `"pallas"` (the L1 kernels) or `"ref"` (pure-jnp lowering).
+    pub variant: String,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { artifact_dir: PathBuf::from("artifacts"), variant: "ref".into() }
+    }
+}
+
+/// Full topology configuration.
+#[derive(Debug, Clone)]
+pub struct TopologyConfig {
+    /// Number of sub-schedulers (paper: fixed for the whole run, >= 1).
+    pub schedulers: usize,
+    /// Upper bound of workers each sub-scheduler may spawn.
+    pub workers_per_scheduler: usize,
+    /// Cores per worker "node" — the packing budget for thread counts
+    /// (paper §3.3: two 2-thread jobs share one 4-core worker).
+    pub cores_per_worker: usize,
+    /// Spawn workers eagerly at startup instead of on demand.
+    pub prespawn_workers: bool,
+    /// Worker-loss detection timeout in milliseconds.
+    pub fault_timeout_ms: u64,
+    pub cost_model: CostModelConfig,
+    /// Optional compute engine (absent = pure-rust user functions only).
+    pub engine: Option<EngineConfig>,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig {
+            schedulers: 2,
+            workers_per_scheduler: 4,
+            cores_per_worker: 4,
+            prespawn_workers: false,
+            fault_timeout_ms: 5_000,
+            cost_model: CostModelConfig::default(),
+            engine: None,
+        }
+    }
+}
+
+impl TopologyConfig {
+    /// Load from a JSON file (missing fields default).
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let cfg = Self::from_json_text(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let doc = json::parse(text).map_err(|e| Error::Config(e.to_string()))?;
+        let mut cfg = TopologyConfig::default();
+        let get_usize = |key: &str, dflt: usize| -> Result<usize> {
+            match doc.get(key) {
+                None => Ok(dflt),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| Error::Config(format!("{key} must be an integer"))),
+            }
+        };
+        cfg.schedulers = get_usize("schedulers", cfg.schedulers)?;
+        cfg.workers_per_scheduler =
+            get_usize("workers_per_scheduler", cfg.workers_per_scheduler)?;
+        cfg.cores_per_worker = get_usize("cores_per_worker", cfg.cores_per_worker)?;
+        cfg.fault_timeout_ms = get_usize("fault_timeout_ms", cfg.fault_timeout_ms as usize)? as u64;
+        if let Some(v) = doc.get("prespawn_workers") {
+            cfg.prespawn_workers = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("prespawn_workers must be a bool".into()))?;
+        }
+        if let Some(cm) = doc.get("cost_model") {
+            if let Some(v) = cm.get("alpha_us").and_then(Json::as_f64) {
+                cfg.cost_model.alpha_us = v;
+            }
+            if let Some(v) = cm.get("bandwidth_gbps").and_then(Json::as_f64) {
+                cfg.cost_model.bandwidth_gbps = v;
+            }
+            if let Some(v) = cm.get("simulate").and_then(Json::as_bool) {
+                cfg.cost_model.simulate = v;
+            }
+        }
+        if let Some(e) = doc.get("engine") {
+            if *e != Json::Null {
+                let dir = e
+                    .get("artifact_dir")
+                    .and_then(Json::as_str)
+                    .unwrap_or("artifacts");
+                let variant = e.get("variant").and_then(Json::as_str).unwrap_or("ref");
+                cfg.engine = Some(EngineConfig {
+                    artifact_dir: PathBuf::from(dir),
+                    variant: variant.to_string(),
+                });
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Serialise to pretty JSON (for `hypar config --dump`).
+    pub fn to_json(&self) -> String {
+        let mut entries = vec![
+            ("schedulers", Json::num(self.schedulers as f64)),
+            (
+                "workers_per_scheduler",
+                Json::num(self.workers_per_scheduler as f64),
+            ),
+            ("cores_per_worker", Json::num(self.cores_per_worker as f64)),
+            ("prespawn_workers", Json::Bool(self.prespawn_workers)),
+            ("fault_timeout_ms", Json::num(self.fault_timeout_ms as f64)),
+            (
+                "cost_model",
+                Json::obj(vec![
+                    ("alpha_us", Json::num(self.cost_model.alpha_us)),
+                    ("bandwidth_gbps", Json::num(self.cost_model.bandwidth_gbps)),
+                    ("simulate", Json::Bool(self.cost_model.simulate)),
+                ]),
+            ),
+        ];
+        if let Some(e) = &self.engine {
+            entries.push((
+                "engine",
+                Json::obj(vec![
+                    (
+                        "artifact_dir",
+                        Json::str(e.artifact_dir.to_string_lossy().to_string()),
+                    ),
+                    ("variant", Json::str(e.variant.clone())),
+                ]),
+            ));
+        }
+        Json::obj(entries).to_string_pretty(2)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.schedulers == 0 {
+            return Err(Error::Config("schedulers must be >= 1".into()));
+        }
+        if self.workers_per_scheduler == 0 {
+            return Err(Error::Config("workers_per_scheduler must be >= 1".into()));
+        }
+        if self.cores_per_worker == 0 {
+            return Err(Error::Config("cores_per_worker must be >= 1".into()));
+        }
+        if let Some(e) = &self.engine {
+            if e.variant != "pallas" && e.variant != "ref" {
+                return Err(Error::Config(format!(
+                    "engine.variant must be \"pallas\" or \"ref\", got {:?}",
+                    e.variant
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total worker capacity.
+    pub fn max_workers(&self) -> usize {
+        self.schedulers * self.workers_per_scheduler
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        self.cost_model.clone().into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        TopologyConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = TopologyConfig::default();
+        cfg.schedulers = 3;
+        cfg.cost_model.simulate = true;
+        cfg.engine = Some(EngineConfig {
+            artifact_dir: PathBuf::from("/tmp/a"),
+            variant: "pallas".into(),
+        });
+        let text = cfg.to_json();
+        let back = TopologyConfig::from_json_text(&text).unwrap();
+        assert_eq!(back.schedulers, 3);
+        assert!(back.cost_model.simulate);
+        assert_eq!(back.engine.as_ref().unwrap().variant, "pallas");
+        assert_eq!(back.engine.as_ref().unwrap().artifact_dir, PathBuf::from("/tmp/a"));
+    }
+
+    #[test]
+    fn zero_schedulers_rejected() {
+        let cfg = TopologyConfig { schedulers: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn bad_variant_rejected() {
+        let cfg = TopologyConfig {
+            engine: Some(EngineConfig { artifact_dir: "x".into(), variant: "cuda".into() }),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = TopologyConfig::from_json_text(r#"{"schedulers": 5}"#).unwrap();
+        assert_eq!(cfg.schedulers, 5);
+        assert_eq!(
+            cfg.workers_per_scheduler,
+            TopologyConfig::default().workers_per_scheduler
+        );
+        assert!(cfg.engine.is_none());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        assert!(TopologyConfig::from_json_text(r#"{"schedulers": "two"}"#).is_err());
+        assert!(TopologyConfig::from_json_text("not json").is_err());
+    }
+}

@@ -1,0 +1,320 @@
+//! `DataChunk`: one contiguous, typed, reference-counted buffer.
+//!
+//! Mirrors the paper's
+//! `DataChunk(MPI type datatype, int n_elem, void *data)` — the framework
+//! owns the buffer after construction (here: `Arc`), and slicing a chunk
+//! (for `Rk[a..b]` result references) is zero-copy.
+
+use std::fmt;
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+/// Element type of a chunk — the subset of MPI datatypes the framework
+/// ships.  (User-defined MPI types from the paper map to `U8` byte blobs.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    U8,
+    I32,
+    I64,
+    F32,
+    F64,
+}
+
+impl Dtype {
+    /// Size of one element in bytes.
+    pub fn size_of(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::I32 | Dtype::F32 => 4,
+            Dtype::I64 | Dtype::F64 => 8,
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Dtype::U8 => "u8",
+            Dtype::I32 => "i32",
+            Dtype::I64 => "i64",
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Shared typed storage. One allocation, many zero-copy views.
+#[derive(Debug, Clone)]
+enum Buf {
+    U8(Arc<[u8]>),
+    I32(Arc<[i32]>),
+    I64(Arc<[i64]>),
+    F32(Arc<[f32]>),
+    F64(Arc<[f64]>),
+}
+
+impl Buf {
+    fn dtype(&self) -> Dtype {
+        match self {
+            Buf::U8(_) => Dtype::U8,
+            Buf::I32(_) => Dtype::I32,
+            Buf::I64(_) => Dtype::I64,
+            Buf::F32(_) => Dtype::F32,
+            Buf::F64(_) => Dtype::F64,
+        }
+    }
+}
+
+/// One contiguous typed buffer (view). The unit of data distribution: jobs
+/// declare their inputs in chunks, and the framework splits a job's chunks
+/// across its sequences (threads) automatically.
+#[derive(Clone)]
+pub struct DataChunk {
+    buf: Buf,
+    range: Range<usize>,
+}
+
+impl fmt::Debug for DataChunk {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "DataChunk({} x{} @{}..{})",
+            self.dtype(),
+            self.len(),
+            self.range.start,
+            self.range.end
+        )
+    }
+}
+
+macro_rules! ctor {
+    ($fn_name:ident, $ty:ty, $variant:ident) => {
+        #[doc = concat!("Build a chunk from a `Vec<", stringify!($ty), ">` (takes ownership, no copy).")]
+        pub fn $fn_name(v: Vec<$ty>) -> Self {
+            let len = v.len();
+            DataChunk { buf: Buf::$variant(v.into()), range: 0..len }
+        }
+    };
+}
+
+macro_rules! accessor {
+    ($fn_name:ident, $ty:ty, $variant:ident, $dt:expr) => {
+        #[doc = concat!("View as `&[", stringify!($ty), "]`; `DtypeMismatch` if the chunk holds another type.")]
+        pub fn $fn_name(&self) -> Result<&[$ty]> {
+            match &self.buf {
+                Buf::$variant(b) => Ok(&b[self.range.clone()]),
+                other => Err(Error::DtypeMismatch { expected: $dt, got: other.dtype() }),
+            }
+        }
+    };
+}
+
+impl DataChunk {
+    ctor!(from_u8, u8, U8);
+    ctor!(from_i32, i32, I32);
+    ctor!(from_i64, i64, I64);
+    ctor!(from_f32, f32, F32);
+    ctor!(from_f64, f64, F64);
+
+    accessor!(as_u8, u8, U8, Dtype::U8);
+    accessor!(as_i32, i32, I32, Dtype::I32);
+    accessor!(as_i64, i64, I64, Dtype::I64);
+    accessor!(as_f32, f32, F32, Dtype::F32);
+    accessor!(as_f64, f64, F64, Dtype::F64);
+
+    /// Scalar convenience constructors (`J7`-style control values).
+    pub fn scalar_i32(v: i32) -> Self {
+        Self::from_i32(vec![v])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::from_f32(vec![v])
+    }
+
+    /// Element count of this view.
+    pub fn len(&self) -> usize {
+        self.range.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.buf.dtype()
+    }
+
+    /// Payload size in bytes (what the comm cost model charges).
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype().size_of()
+    }
+
+    /// Cheap identity of the underlying storage + view window.  Two chunks
+    /// with equal identity are guaranteed to expose identical data (shared
+    /// immutable buffer, same range) — the runtime uses this to cache
+    /// device uploads of long-lived inputs (e.g. a kept matrix block fed
+    /// to the kernel every iteration).
+    pub fn identity(&self) -> (usize, usize, usize) {
+        let ptr = match &self.buf {
+            Buf::U8(b) => b.as_ptr() as usize,
+            Buf::I32(b) => b.as_ptr() as usize,
+            Buf::I64(b) => b.as_ptr() as usize,
+            Buf::F32(b) => b.as_ptr() as usize,
+            Buf::F64(b) => b.as_ptr() as usize,
+        };
+        (ptr, self.range.start, self.range.len())
+    }
+
+    /// Zero-copy sub-view `range` (relative to this view).
+    pub fn slice(&self, range: Range<usize>) -> Result<DataChunk> {
+        if range.end > self.len() || range.start > range.end {
+            return Err(Error::ChunkIndex { index: range.end, len: self.len() });
+        }
+        let start = self.range.start + range.start;
+        let end = self.range.start + range.end;
+        Ok(DataChunk { buf: self.buf.clone(), range: start..end })
+    }
+
+    /// Split the view into `parts` nearly-equal contiguous sub-views (the
+    /// automatic distribution of one job's data over its sequences).
+    /// Earlier parts get the remainder, all parts are non-empty unless the
+    /// chunk has fewer elements than `parts`.
+    pub fn split(&self, parts: usize) -> Vec<DataChunk> {
+        let parts = parts.max(1);
+        let n = self.len();
+        let base = n / parts;
+        let rem = n % parts;
+        let mut out = Vec::with_capacity(parts);
+        let mut start = 0usize;
+        for i in 0..parts {
+            let sz = base + usize::from(i < rem);
+            if sz == 0 {
+                continue;
+            }
+            out.push(self.slice(start..start + sz).expect("split in bounds"));
+            start += sz;
+        }
+        out
+    }
+
+    /// First element as f32 (convenience for scalar result chunks).
+    pub fn first_f32(&self) -> Result<f32> {
+        let s = self.as_f32()?;
+        s.first().copied().ok_or(Error::ChunkIndex { index: 0, len: 0 })
+    }
+
+    pub fn first_i32(&self) -> Result<i32> {
+        let s = self.as_i32()?;
+        s.first().copied().ok_or(Error::ChunkIndex { index: 0, len: 0 })
+    }
+
+    /// Concatenate several same-dtype chunks into one owned chunk.
+    pub fn concat(chunks: &[DataChunk]) -> Result<DataChunk> {
+        let first = chunks
+            .first()
+            .ok_or_else(|| Error::Assemble("concat of zero chunks".into()))?;
+        match first.dtype() {
+            Dtype::F32 => {
+                let mut v = Vec::with_capacity(chunks.iter().map(|c| c.len()).sum());
+                for c in chunks {
+                    v.extend_from_slice(c.as_f32()?);
+                }
+                Ok(DataChunk::from_f32(v))
+            }
+            Dtype::F64 => {
+                let mut v = Vec::with_capacity(chunks.iter().map(|c| c.len()).sum());
+                for c in chunks {
+                    v.extend_from_slice(c.as_f64()?);
+                }
+                Ok(DataChunk::from_f64(v))
+            }
+            Dtype::I32 => {
+                let mut v = Vec::with_capacity(chunks.iter().map(|c| c.len()).sum());
+                for c in chunks {
+                    v.extend_from_slice(c.as_i32()?);
+                }
+                Ok(DataChunk::from_i32(v))
+            }
+            Dtype::I64 => {
+                let mut v = Vec::with_capacity(chunks.iter().map(|c| c.len()).sum());
+                for c in chunks {
+                    v.extend_from_slice(c.as_i64()?);
+                }
+                Ok(DataChunk::from_i64(v))
+            }
+            Dtype::U8 => {
+                let mut v = Vec::with_capacity(chunks.iter().map(|c| c.len()).sum());
+                for c in chunks {
+                    v.extend_from_slice(c.as_u8()?);
+                }
+                Ok(DataChunk::from_u8(v))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_dtype() {
+        let c = DataChunk::from_f32(vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.dtype(), Dtype::F32);
+        assert_eq!(c.size_bytes(), 12);
+        assert_eq!(c.as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        assert!(c.as_i32().is_err());
+    }
+
+    #[test]
+    fn slice_is_zero_copy_view() {
+        let c = DataChunk::from_i32((0..10).collect());
+        let s = c.slice(2..5).unwrap();
+        assert_eq!(s.as_i32().unwrap(), &[2, 3, 4]);
+        // nested slice is relative to the view
+        let s2 = s.slice(1..3).unwrap();
+        assert_eq!(s2.as_i32().unwrap(), &[3, 4]);
+    }
+
+    #[test]
+    fn slice_out_of_bounds() {
+        let c = DataChunk::from_u8(vec![0; 4]);
+        assert!(c.slice(0..5).is_err());
+        assert!(c.slice(3..2).is_err());
+    }
+
+    #[test]
+    fn split_covers_everything_in_order() {
+        let c = DataChunk::from_i32((0..11).collect());
+        let parts = c.split(3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].as_i32().unwrap(), &[0, 1, 2, 3]);
+        assert_eq!(parts[1].as_i32().unwrap(), &[4, 5, 6, 7]);
+        assert_eq!(parts[2].as_i32().unwrap(), &[8, 9, 10]);
+    }
+
+    #[test]
+    fn split_more_parts_than_elements() {
+        let c = DataChunk::from_f64(vec![1.0, 2.0]);
+        let parts = c.split(5);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn concat_roundtrip() {
+        let c = DataChunk::from_f32((0..9).map(|i| i as f32).collect());
+        let parts = c.split(4);
+        let back = DataChunk::concat(&parts).unwrap();
+        assert_eq!(back.as_f32().unwrap(), c.as_f32().unwrap());
+    }
+
+    #[test]
+    fn concat_empty_fails() {
+        assert!(DataChunk::concat(&[]).is_err());
+    }
+}

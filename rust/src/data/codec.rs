@@ -1,0 +1,312 @@
+//! Wire codec for [`DataChunk`] / [`FunctionData`] — the serialization
+//! substrate a cross-process transport (real MPI, TCP) plugs into.
+//!
+//! Format (little-endian, length-prefixed):
+//!
+//! ```text
+//! chunk        := dtype:u8  len:u64  payload[len * size_of(dtype)]
+//! functiondata := magic:u32 ("HYP1") count:u64 chunk*
+//! ```
+//!
+//! The in-process transport passes `Arc`s and never touches this; the
+//! [`crate::comm::WireSize`] accounting matches what `encode` produces
+//! (± the fixed header), so cost-model numbers stay meaningful if the
+//! transport is swapped for a real network.
+
+use super::chunk::{DataChunk, Dtype};
+use super::function_data::FunctionData;
+use crate::error::{Error, Result};
+
+const MAGIC: u32 = 0x4859_5031; // "HYP1"
+
+fn dtype_tag(d: Dtype) -> u8 {
+    match d {
+        Dtype::U8 => 0,
+        Dtype::I32 => 1,
+        Dtype::I64 => 2,
+        Dtype::F32 => 3,
+        Dtype::F64 => 4,
+    }
+}
+
+fn tag_dtype(t: u8) -> Result<Dtype> {
+    Ok(match t {
+        0 => Dtype::U8,
+        1 => Dtype::I32,
+        2 => Dtype::I64,
+        3 => Dtype::F32,
+        4 => Dtype::F64,
+        other => return Err(Error::Assemble(format!("bad dtype tag {other}"))),
+    })
+}
+
+/// Append one chunk to `out`.
+pub fn encode_chunk(chunk: &DataChunk, out: &mut Vec<u8>) {
+    out.push(dtype_tag(chunk.dtype()));
+    out.extend_from_slice(&(chunk.len() as u64).to_le_bytes());
+    match chunk.dtype() {
+        Dtype::U8 => out.extend_from_slice(chunk.as_u8().expect("dtype checked")),
+        Dtype::I32 => {
+            for v in chunk.as_i32().expect("dtype checked") {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Dtype::I64 => {
+            for v in chunk.as_i64().expect("dtype checked") {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Dtype::F32 => {
+            for v in chunk.as_f32().expect("dtype checked") {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Dtype::F64 => {
+            for v in chunk.as_f64().expect("dtype checked") {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Cursor-based reader.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Assemble(format!(
+                "truncated wire data: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+}
+
+fn decode_chunk_at(r: &mut Reader) -> Result<DataChunk> {
+    let dtype = tag_dtype(r.u8()?)?;
+    let len = r.u64()? as usize;
+    // Defensive cap: a single chunk over 1 GiB is a corrupt header.
+    if len.saturating_mul(dtype.size_of()) > (1 << 30) {
+        return Err(Error::Assemble(format!("implausible chunk length {len}")));
+    }
+    Ok(match dtype {
+        Dtype::U8 => DataChunk::from_u8(r.take(len)?.to_vec()),
+        Dtype::I32 => {
+            let raw = r.take(len * 4)?;
+            DataChunk::from_i32(
+                raw.chunks_exact(4)
+                    .map(|b| i32::from_le_bytes(b.try_into().expect("4")))
+                    .collect(),
+            )
+        }
+        Dtype::I64 => {
+            let raw = r.take(len * 8)?;
+            DataChunk::from_i64(
+                raw.chunks_exact(8)
+                    .map(|b| i64::from_le_bytes(b.try_into().expect("8")))
+                    .collect(),
+            )
+        }
+        Dtype::F32 => {
+            let raw = r.take(len * 4)?;
+            DataChunk::from_f32(
+                raw.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().expect("4")))
+                    .collect(),
+            )
+        }
+        Dtype::F64 => {
+            let raw = r.take(len * 8)?;
+            DataChunk::from_f64(
+                raw.chunks_exact(8)
+                    .map(|b| f64::from_le_bytes(b.try_into().expect("8")))
+                    .collect(),
+            )
+        }
+    })
+}
+
+/// Decode one chunk from a buffer produced by [`encode_chunk`].
+pub fn decode_chunk(buf: &[u8]) -> Result<DataChunk> {
+    let mut r = Reader { buf, pos: 0 };
+    let c = decode_chunk_at(&mut r)?;
+    if r.pos != buf.len() {
+        return Err(Error::Assemble("trailing bytes after chunk".into()));
+    }
+    Ok(c)
+}
+
+/// Serialise a whole [`FunctionData`].
+pub fn encode(data: &FunctionData) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + data.size_bytes() + data.len() * 9);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    for c in data.chunks() {
+        encode_chunk(c, &mut out);
+    }
+    out
+}
+
+/// Deserialise a [`FunctionData`] produced by [`encode`].
+pub fn decode(buf: &[u8]) -> Result<FunctionData> {
+    let mut r = Reader { buf, pos: 0 };
+    let magic = u32::from_le_bytes(r.take(4)?.try_into().expect("4"));
+    if magic != MAGIC {
+        return Err(Error::Assemble(format!("bad magic {magic:#x}")));
+    }
+    let count = r.u64()? as usize;
+    if count > 1 << 24 {
+        return Err(Error::Assemble(format!("implausible chunk count {count}")));
+    }
+    let mut out = FunctionData::new();
+    for _ in 0..count {
+        out.push(decode_chunk_at(&mut r)?);
+    }
+    if r.pos != buf.len() {
+        return Err(Error::Assemble("trailing bytes after function data".into()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_chunks_equal(a: &DataChunk, b: &DataChunk) {
+        assert_eq!(a.dtype(), b.dtype());
+        assert_eq!(a.len(), b.len());
+        match a.dtype() {
+            Dtype::U8 => assert_eq!(a.as_u8().unwrap(), b.as_u8().unwrap()),
+            Dtype::I32 => assert_eq!(a.as_i32().unwrap(), b.as_i32().unwrap()),
+            Dtype::I64 => assert_eq!(a.as_i64().unwrap(), b.as_i64().unwrap()),
+            Dtype::F32 => assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap()),
+            Dtype::F64 => assert_eq!(a.as_f64().unwrap(), b.as_f64().unwrap()),
+        }
+    }
+
+    #[test]
+    fn roundtrip_every_dtype() {
+        let chunks = vec![
+            DataChunk::from_u8(vec![0, 1, 255]),
+            DataChunk::from_i32(vec![i32::MIN, -1, 0, i32::MAX]),
+            DataChunk::from_i64(vec![i64::MIN, 42, i64::MAX]),
+            DataChunk::from_f32(vec![f32::MIN, -0.0, 1.5, f32::INFINITY]),
+            DataChunk::from_f64(vec![f64::EPSILON, 2.5e300]),
+        ];
+        for c in &chunks {
+            let mut buf = Vec::new();
+            encode_chunk(c, &mut buf);
+            let back = decode_chunk(&buf).unwrap();
+            assert_chunks_equal(c, &back);
+        }
+        let fd = FunctionData::from_chunks(chunks);
+        let back = decode(&encode(&fd)).unwrap();
+        assert_eq!(back.len(), fd.len());
+        for (a, b) in fd.chunks().iter().zip(back.chunks()) {
+            assert_chunks_equal(a, b);
+        }
+    }
+
+    #[test]
+    fn empty_function_data() {
+        let fd = FunctionData::new();
+        let back = decode(&encode(&fd)).unwrap();
+        assert!(back.is_empty());
+    }
+
+    #[test]
+    fn sliced_views_encode_their_window_only() {
+        let whole = DataChunk::from_f32((0..100).map(|i| i as f32).collect());
+        let slice = whole.slice(10..20).unwrap();
+        let mut buf = Vec::new();
+        encode_chunk(&slice, &mut buf);
+        let back = decode_chunk(&buf).unwrap();
+        assert_eq!(back.len(), 10);
+        assert_eq!(back.as_f32().unwrap()[0], 10.0);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let fd = FunctionData::of_f32(vec![1.0, 2.0, 3.0]);
+        let good = encode(&fd);
+        // truncated
+        assert!(decode(&good[..good.len() - 2]).is_err());
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode(&bad).is_err());
+        // bad dtype tag
+        let mut bad = good.clone();
+        bad[12] = 99;
+        assert!(decode(&bad).is_err());
+        // trailing garbage
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(decode(&bad).is_err());
+        // implausible length
+        let mut bad = good;
+        bad[13..21].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn wire_size_matches_accounting() {
+        use crate::comm::WireSize;
+        let fd = FunctionData::of_f32_chunked((0..1000).map(|i| i as f32).collect(), 7);
+        let encoded = encode(&fd);
+        // payload accounting (WireSize) + per-chunk headers (9B) + 12B frame
+        let expected = fd.wire_size() + fd.len() * 9 + 12;
+        assert_eq!(encoded.len(), expected);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_data() {
+        for seed in 0..100 {
+            let mut rng = Rng::new(seed);
+            let mut fd = FunctionData::new();
+            for _ in 0..rng.below(6) {
+                let n = rng.below(200);
+                match rng.below(5) {
+                    0 => fd.push(DataChunk::from_u8(
+                        (0..n).map(|_| rng.below(256) as u8).collect(),
+                    )),
+                    1 => fd.push(DataChunk::from_i32(
+                        (0..n).map(|_| rng.next_u64() as i32).collect(),
+                    )),
+                    2 => fd.push(DataChunk::from_i64(
+                        (0..n).map(|_| rng.next_u64() as i64).collect(),
+                    )),
+                    3 => fd.push(DataChunk::from_f32(
+                        (0..n).map(|_| rng.range_f32(-1e6, 1e6)).collect(),
+                    )),
+                    _ => fd.push(DataChunk::from_f64(
+                        (0..n).map(|_| rng.f64() * 1e12).collect(),
+                    )),
+                }
+            }
+            let back = decode(&encode(&fd)).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(back.len(), fd.len(), "seed {seed}");
+            for (a, b) in fd.chunks().iter().zip(back.chunks()) {
+                assert_chunks_equal(a, b);
+            }
+        }
+    }
+}

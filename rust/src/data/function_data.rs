@@ -1,0 +1,136 @@
+//! `FunctionData`: the chunk list passed into and out of every user
+//! function (paper §3.2: `void f(FunctionData *input, FunctionData *output)`).
+
+use std::fmt;
+use std::ops::Range;
+
+use super::chunk::DataChunk;
+use crate::error::{Error, Result};
+
+/// Ordered list of [`DataChunk`]s. Cheap to clone (chunks are views).
+#[derive(Clone, Default)]
+pub struct FunctionData {
+    chunks: Vec<DataChunk>,
+}
+
+impl fmt::Debug for FunctionData {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FunctionData[{} chunks, {} B]", self.chunks.len(), self.size_bytes())
+    }
+}
+
+impl FunctionData {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_chunks(chunks: Vec<DataChunk>) -> Self {
+        FunctionData { chunks }
+    }
+
+    /// Append a chunk (the paper's `output->push_back(new DataChunk(...))`).
+    pub fn push(&mut self, chunk: DataChunk) {
+        self.chunks.push(chunk);
+    }
+
+    /// The paper's `get_data_chunk(i)`.
+    pub fn chunk(&self, index: usize) -> Result<&DataChunk> {
+        self.chunks
+            .get(index)
+            .ok_or(Error::ChunkIndex { index, len: self.chunks.len() })
+    }
+
+    pub fn chunks(&self) -> &[DataChunk] {
+        &self.chunks
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    /// Total payload in bytes (what the comm layer charges for shipping).
+    pub fn size_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.size_bytes()).sum()
+    }
+
+    /// Sub-list of chunks `range` (zero-copy), for `Rk[a..b]` references.
+    pub fn select(&self, range: Range<usize>) -> Result<FunctionData> {
+        if range.end > self.chunks.len() || range.start > range.end {
+            return Err(Error::ChunkIndex { index: range.end, len: self.chunks.len() });
+        }
+        Ok(FunctionData { chunks: self.chunks[range].to_vec() })
+    }
+
+    /// Concatenate the chunk lists of several `FunctionData`s (the
+    /// scheduler-side assembly of multi-source job inputs, `R1 R2`).
+    pub fn extend(&mut self, other: FunctionData) {
+        self.chunks.extend(other.chunks);
+    }
+
+    /// Flatten all chunks into a single f32 chunk (must all be f32).
+    pub fn concat_f32(&self) -> Result<DataChunk> {
+        DataChunk::concat(&self.chunks)
+    }
+
+    /// Convenience: one f32 vector in, one chunk out.
+    pub fn of_f32(v: Vec<f32>) -> Self {
+        FunctionData { chunks: vec![DataChunk::from_f32(v)] }
+    }
+
+    /// Convenience: evenly pre-chunked f32 vector (`k` chunks), the input
+    /// layout of the paper's `search_max` walkthrough (§2.2).
+    pub fn of_f32_chunked(v: Vec<f32>, k: usize) -> Self {
+        let whole = DataChunk::from_f32(v);
+        FunctionData { chunks: whole.split(k) }
+    }
+}
+
+impl FromIterator<DataChunk> for FunctionData {
+    fn from_iter<T: IntoIterator<Item = DataChunk>>(iter: T) -> Self {
+        FunctionData { chunks: iter.into_iter().collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_index() {
+        let mut fd = FunctionData::new();
+        fd.push(DataChunk::from_i32(vec![1, 2]));
+        fd.push(DataChunk::from_i32(vec![3]));
+        assert_eq!(fd.len(), 2);
+        assert_eq!(fd.chunk(1).unwrap().as_i32().unwrap(), &[3]);
+        assert!(fd.chunk(2).is_err());
+    }
+
+    #[test]
+    fn select_range_of_chunks() {
+        let fd = FunctionData::of_f32_chunked((0..10).map(|i| i as f32).collect(), 5);
+        let sel = fd.select(1..3).unwrap();
+        assert_eq!(sel.len(), 2);
+        assert_eq!(sel.chunk(0).unwrap().as_f32().unwrap(), &[2.0, 3.0]);
+        assert!(fd.select(4..6).is_err());
+    }
+
+    #[test]
+    fn size_bytes_sums_chunks() {
+        let mut fd = FunctionData::of_f32(vec![0.0; 8]); // 32 B
+        fd.push(DataChunk::from_u8(vec![0; 3])); // 3 B
+        assert_eq!(fd.size_bytes(), 35);
+    }
+
+    #[test]
+    fn chunked_ctor_covers_all_elements() {
+        let fd = FunctionData::of_f32_chunked((0..7).map(|i| i as f32).collect(), 3);
+        assert_eq!(fd.len(), 3);
+        let total: usize = fd.chunks().iter().map(|c| c.len()).sum();
+        assert_eq!(total, 7);
+        assert_eq!(fd.concat_f32().unwrap().len(), 7);
+    }
+}

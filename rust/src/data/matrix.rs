@@ -1,0 +1,322 @@
+//! Dense row-major matrices + generators for the evaluation workloads.
+//!
+//! The paper evaluates on Jacobi systems of sizes 2709², 4209², 7209²
+//! (Figure 3).  We generate strictly diagonally dominant systems (so Jacobi
+//! converges) with a seeded RNG, and pad them to a multiple of the kernel
+//! column-tile width with identity rows, which provably leaves the solution
+//! unchanged (tested in `python/tests/test_aot.py` and here).
+
+use crate::util::rng::Rng;
+
+use super::chunk::DataChunk;
+use crate::error::{Error, Result};
+
+/// Dense row-major `rows x cols` f32 matrix.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Assemble(format!(
+                "matrix {rows}x{cols} needs {} elements, got {}",
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of the row block `[row_lo, row_hi)` as an owned chunk
+    /// (`bm x cols` row-major) — the per-job payload of the block solvers.
+    pub fn row_block_chunk(&self, row_lo: usize, row_hi: usize) -> DataChunk {
+        DataChunk::from_f32(self.data[row_lo * self.cols..row_hi * self.cols].to_vec())
+    }
+
+    /// The main diagonal (requires square).
+    pub fn diag(&self) -> Vec<f32> {
+        (0..self.rows.min(self.cols)).map(|i| self.get(i, i)).collect()
+    }
+
+    /// `y = A x` (sequential reference used by tests and the residual check).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let mut acc = 0.0f32;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[r] = acc;
+        }
+        y
+    }
+}
+
+/// A ready-to-solve linear system `A x = b` with known solution `x_star`.
+#[derive(Clone, Debug)]
+pub struct LinearSystem {
+    pub a: Matrix,
+    pub b: Vec<f32>,
+    pub x_star: Vec<f32>,
+    /// Logical (unpadded) size; rows `n_logical..n` are identity padding.
+    pub n_logical: usize,
+}
+
+impl LinearSystem {
+    pub fn n(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// `1 / a_ii` for the Jacobi preconditioner.
+    pub fn invdiag(&self) -> Vec<f32> {
+        self.a.diag().iter().map(|d| 1.0 / d).collect()
+    }
+
+    /// `||b - A x||_2` true residual of a candidate solution.
+    pub fn residual_norm(&self, x: &[f32]) -> f32 {
+        let ax = self.a.matvec(x);
+        self.b
+            .iter()
+            .zip(&ax)
+            .map(|(bi, axi)| (bi - axi) * (bi - axi))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    /// Max abs error against the known solution (ignores padding rows).
+    pub fn error_inf(&self, x: &[f32]) -> f32 {
+        self.x_star[..self.n_logical]
+            .iter()
+            .zip(x)
+            .map(|(s, v)| (s - v).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Round `n` up to a multiple of `m`.
+pub fn pad_to(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+/// Deterministically generate row `r` of the padded system `(n, n_pad,
+/// seed)`.  **Per-row seeding** is the property that lets every worker (or
+/// MPI rank) generate exactly its own row block with zero communication —
+/// the same function backs the sequential generator, the framework's
+/// distribute jobs and the tailored-MPI baseline, so all three solve the
+/// *identical* system.
+///
+/// Rows `>= n` are identity padding rows (`a_rr = 1`, zero coupling).
+pub fn gen_row(n: usize, n_pad: usize, seed: u64, r: usize) -> Vec<f32> {
+    let mut row = vec![0.0f32; n_pad];
+    if r >= n {
+        row[r] = 1.0;
+        return row;
+    }
+    let mut rng = Rng::new(seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(r as u64 + 1)));
+    // Off-diagonals scaled so each row's off-diagonal L1 mass ~ 0.25 * diag.
+    let off_scale = 1.0f32 / (n as f32);
+    for (c, slot) in row.iter_mut().enumerate().take(n) {
+        if c != r {
+            *slot = (rng.f32() - 0.5) * off_scale;
+        }
+    }
+    row[r] = 2.0 + rng.f32(); // >> sum |off-diag| ≈ 0.25
+    row
+}
+
+/// Deterministic known solution (zeros on padding rows).
+pub fn gen_x_star(n: usize, n_pad: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0xDEAD_BEEF_CAFE_F00Du64);
+    let mut x = vec![0.0f32; n_pad];
+    for v in x.iter_mut().take(n) {
+        *v = rng.f32() * 2.0 - 1.0;
+    }
+    x
+}
+
+/// Row block `[lo, hi)` of the system plus its right-hand side slice —
+/// what one distributed participant materialises locally.
+/// Returns `(a_rows, b_blk, invdiag_blk)` with `a_rows` row-major
+/// `(hi-lo) x n_pad`.
+pub fn gen_block(
+    n: usize,
+    n_pad: usize,
+    seed: u64,
+    lo: usize,
+    hi: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let x_star = gen_x_star(n, n_pad, seed);
+    let mut a = Vec::with_capacity((hi - lo) * n_pad);
+    let mut b = Vec::with_capacity(hi - lo);
+    let mut invd = Vec::with_capacity(hi - lo);
+    for r in lo..hi {
+        let row = gen_row(n, n_pad, seed, r);
+        let mut acc = 0.0f32;
+        for (v, x) in row.iter().zip(&x_star) {
+            acc += v * x;
+        }
+        b.push(acc);
+        invd.push(1.0 / row[r]);
+        a.extend_from_slice(&row);
+    }
+    (a, b, invd)
+}
+
+/// Generate a strictly diagonally dominant system of logical size `n`,
+/// padded with identity rows up to a multiple of `pad_multiple` (pass 1 for
+/// no padding).  Built from [`gen_row`] so distributed generation agrees
+/// bit-for-bit.
+pub fn diag_dominant_system(n: usize, pad_multiple: usize, seed: u64) -> LinearSystem {
+    let n_pad = pad_to(n, pad_multiple.max(1));
+    let mut a = Matrix::zeros(n_pad, n_pad);
+    for r in 0..n_pad {
+        let row = gen_row(n, n_pad, seed, r);
+        a.data[r * n_pad..(r + 1) * n_pad].copy_from_slice(&row);
+    }
+    let x_star = gen_x_star(n, n_pad, seed);
+    let b = a.matvec(&x_star);
+    LinearSystem { a, b, x_star, n_logical: n }
+}
+
+/// 2-D heat-diffusion initial condition: zero field with a hot square in
+/// the middle and fixed (Dirichlet) boundary values.
+pub fn heat_initial(h: usize, w: usize, hot: f32) -> Vec<f32> {
+    let mut u = vec![0.0f32; h * w];
+    for r in h / 4..(3 * h / 4) {
+        for c in w / 4..(3 * w / 4) {
+            u[r * w + c] = hot;
+        }
+    }
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let mut a = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            a.set(i, i, 1.0);
+        }
+        assert_eq!(a.matvec(&[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn generator_is_diagonally_dominant() {
+        let sys = diag_dominant_system(50, 1, 7);
+        for r in 0..50 {
+            let off: f32 =
+                (0..50).filter(|&c| c != r).map(|c| sys.a.get(r, c).abs()).sum();
+            assert!(sys.a.get(r, r) > 2.0 * off, "row {r} not dominant");
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let s1 = diag_dominant_system(20, 1, 42);
+        let s2 = diag_dominant_system(20, 1, 42);
+        assert_eq!(s1.a.as_slice(), s2.a.as_slice());
+        assert_eq!(s1.b, s2.b);
+    }
+
+    #[test]
+    fn padding_preserves_solution() {
+        let sys = diag_dominant_system(10, 16, 3);
+        assert_eq!(sys.n(), 16);
+        // Sequential Jacobi on the padded system converges to x_star ++ 0.
+        let invd = sys.invdiag();
+        let mut x = vec![0.0f32; 16];
+        for _ in 0..200 {
+            let ax = sys.a.matvec(&x);
+            for i in 0..16 {
+                x[i] += (sys.b[i] - ax[i]) * invd[i];
+            }
+        }
+        assert!(sys.error_inf(&x) < 1e-3, "err={}", sys.error_inf(&x));
+        for i in 10..16 {
+            assert!(x[i].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn residual_of_exact_solution_is_zero() {
+        let sys = diag_dominant_system(30, 1, 1);
+        assert!(sys.residual_norm(&sys.x_star) < 1e-3);
+    }
+
+    #[test]
+    fn row_block_chunk_matches_rows() {
+        let sys = diag_dominant_system(8, 1, 5);
+        let blk = sys.a.row_block_chunk(2, 5);
+        assert_eq!(blk.len(), 3 * 8);
+        assert_eq!(&blk.as_f32().unwrap()[..8], sys.a.row(2));
+    }
+
+    #[test]
+    fn gen_block_matches_full_system_bitwise() {
+        let sys = diag_dominant_system(20, 8, 9); // n_pad = 24
+        let (a, b, invd) = gen_block(20, 24, 9, 8, 16);
+        for (i, r) in (8..16).enumerate() {
+            assert_eq!(&a[i * 24..(i + 1) * 24], sys.a.row(r));
+            assert_eq!(b[i], sys.b[r]);
+            assert_eq!(invd[i], 1.0 / sys.a.get(r, r));
+        }
+    }
+
+    #[test]
+    fn gen_block_padding_rows_are_identity() {
+        let (a, b, invd) = gen_block(10, 16, 3, 10, 16);
+        for i in 0..6 {
+            let row = &a[i * 16..(i + 1) * 16];
+            assert_eq!(row[10 + i], 1.0);
+            assert_eq!(row.iter().filter(|v| **v != 0.0).count(), 1);
+            assert_eq!(b[i], 0.0);
+            assert_eq!(invd[i], 1.0);
+        }
+    }
+
+    #[test]
+    fn pad_to_rounds_up() {
+        assert_eq!(pad_to(2709, 256), 2816);
+        assert_eq!(pad_to(4209, 256), 4352);
+        assert_eq!(pad_to(7209, 256), 7424);
+        assert_eq!(pad_to(512, 256), 512);
+    }
+}

@@ -1,0 +1,16 @@
+//! Typed data containers of the job model.
+//!
+//! The paper's `DataChunk` is "one consecutive memory location storing some
+//! quantity of an MPI data type"; a `FunctionData` is a list of chunks and
+//! is the uniform in/out signature of every user function (paper §3.2).
+//! Chunk buffers are reference-counted and sliced zero-copy — the paper's
+//! "copies the pointer to the data instead of the data itself" semantics,
+//! made safe.
+
+mod chunk;
+pub mod codec;
+mod function_data;
+pub mod matrix;
+
+pub use chunk::{DataChunk, Dtype};
+pub use function_data::FunctionData;

@@ -1,0 +1,103 @@
+//! Unified error type for the whole framework.
+
+use crate::comm::Rank;
+use crate::job::{FuncId, JobId};
+
+/// Framework-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Everything that can go wrong in the framework, from script parsing to
+/// PJRT execution.  Variants carry enough context to be actionable.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    // ------------------------------------------------------------- parsing
+    #[error("job script parse error at line {line}, column {col}: {msg}")]
+    Parse { line: usize, col: usize, msg: String },
+
+    // ----------------------------------------------------------- job model
+    #[error("job {job:?} references result of job {referenced:?} which is not produced by any earlier segment")]
+    UnknownResultRef { job: JobId, referenced: JobId },
+
+    #[error("job {job:?} requests chunks {lo}..{hi} of job {referenced:?} but only {available} chunks exist")]
+    ChunkRangeOutOfBounds {
+        job: JobId,
+        referenced: JobId,
+        lo: usize,
+        hi: usize,
+        available: usize,
+    },
+
+    #[error("duplicate job id {0:?} in algorithm")]
+    DuplicateJobId(JobId),
+
+    #[error("algorithm has no segments")]
+    EmptyAlgorithm,
+
+    #[error("function {0:?} is not registered in the worker registry")]
+    UnknownFunction(FuncId),
+
+    #[error("result of job {0:?} was released or never stored; a dynamically injected job may only reference keep-results or results of the current/previous segment")]
+    ResultNotAvailable(JobId),
+
+    // ---------------------------------------------------------------- comm
+    #[error("rank {0:?} is unreachable (worker terminated or never spawned)")]
+    RankUnreachable(Rank),
+
+    #[error("communication world was shut down while rank {0:?} was blocked in recv")]
+    WorldShutdown(Rank),
+
+    #[error("collective {op} over {participants} ranks failed: {msg}")]
+    Collective { op: &'static str, participants: usize, msg: String },
+
+    // ---------------------------------------------------------------- data
+    #[error("dtype mismatch: expected {expected:?}, got {got:?}")]
+    DtypeMismatch { expected: crate::data::Dtype, got: crate::data::Dtype },
+
+    #[error("chunk index {index} out of bounds ({len} chunks)")]
+    ChunkIndex { index: usize, len: usize },
+
+    #[error("cannot assemble chunks: {0}")]
+    Assemble(String),
+
+    // ------------------------------------------------------------- runtime
+    #[error("artifact {0:?} not found in manifest")]
+    UnknownArtifact(String),
+
+    #[error("artifact {name:?} expects {expected} inputs, got {got}")]
+    ArtifactArity { name: String, expected: usize, got: usize },
+
+    #[error("artifact {name:?} input {index}: {msg}")]
+    ArtifactInput { name: String, index: usize, msg: String },
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("user function requested the compute engine but none is configured for this worker (set TopologyConfig.engine)")]
+    NoEngine,
+
+    // ------------------------------------------------------------- fault
+    #[error("worker {worker:?} lost; {jobs} retained job result(s) must be recomputed")]
+    WorkerLost { worker: Rank, jobs: usize },
+
+    #[error("job {job:?} failed during execution: {msg}")]
+    JobFailed { job: JobId, msg: String },
+
+    // ------------------------------------------------------------- config
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,110 @@
+//! Fault injection and the recompute contract.
+//!
+//! The paper names the keep-results drawback explicitly: "in case a worker
+//! (due to some failure) has to be shut down, all results computed so far
+//! are lost and have to be re-computed" — and lists fault tolerance as
+//! future work.  This module implements both halves:
+//!
+//! * [`FaultInjector`] — deterministic failure injection for tests and
+//!   resilience benchmarks: a worker crashes (vanishes without a message)
+//!   when it is about to execute a marked job, or when its rank is marked.
+//! * The **recovery path** lives in the schedulers: a sub-scheduler
+//!   detects the dead rank (fail-fast sends / liveness probe), reports the
+//!   lost retained results and in-flight jobs to the master
+//!   ([`crate::scheduler::FwMsg::WorkerLostReport`]), and the master
+//!   re-executes the lost closure in dependency order (only results that
+//!   are still referenced by remaining segments are recomputed).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::comm::Rank;
+use crate::job::JobId;
+
+/// Shared, thread-safe failure plan. One per framework run (defaults to
+/// "never fail").
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    /// Crash the worker that is about to execute this job (consumed on
+    /// trigger, so the recomputed attempt succeeds).
+    crash_on_job: Mutex<HashSet<JobId>>,
+    /// Crash this specific worker rank at its next execution.
+    crash_rank: Mutex<HashSet<Rank>>,
+    /// Count of injected crashes (assertions in tests).
+    crashes: AtomicUsize,
+}
+
+impl FaultInjector {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Crash whichever worker first attempts to execute `job`.
+    pub fn crash_on_job(&self, job: JobId) {
+        self.crash_on_job.lock().expect("fault lock").insert(job);
+    }
+
+    /// Crash worker `rank` at its next execution attempt.
+    pub fn crash_rank(&self, rank: Rank) {
+        self.crash_rank.lock().expect("fault lock").insert(rank);
+    }
+
+    /// Worker-side probe (called right before executing `job`).
+    /// Consumes the trigger so re-execution after recovery succeeds.
+    pub fn should_crash(&self, me: Rank, job: JobId) -> bool {
+        let by_job = self.crash_on_job.lock().expect("fault lock").remove(&job);
+        let by_rank = self.crash_rank.lock().expect("fault lock").remove(&me);
+        if by_job || by_rank {
+            self.crashes.fetch_add(1, Ordering::SeqCst);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Number of crashes injected so far.
+    pub fn crash_count(&self) -> usize {
+        self.crashes.load(Ordering::SeqCst)
+    }
+
+    /// Any triggers still pending?
+    pub fn is_armed(&self) -> bool {
+        !self.crash_on_job.lock().expect("fault lock").is_empty()
+            || !self.crash_rank.lock().expect("fault lock").is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_trigger_fires_once() {
+        let f = FaultInjector::none();
+        f.crash_on_job(JobId(5));
+        assert!(f.is_armed());
+        assert!(!f.should_crash(Rank(9), JobId(4)));
+        assert!(f.should_crash(Rank(9), JobId(5)));
+        // consumed: the retry after recovery must run
+        assert!(!f.should_crash(Rank(9), JobId(5)));
+        assert_eq!(f.crash_count(), 1);
+        assert!(!f.is_armed());
+    }
+
+    #[test]
+    fn rank_trigger_fires_once() {
+        let f = FaultInjector::none();
+        f.crash_rank(Rank(3));
+        assert!(!f.should_crash(Rank(2), JobId(1)));
+        assert!(f.should_crash(Rank(3), JobId(1)));
+        assert!(!f.should_crash(Rank(3), JobId(2)));
+    }
+
+    #[test]
+    fn default_never_crashes() {
+        let f = FaultInjector::none();
+        assert!(!f.should_crash(Rank(0), JobId(0)));
+        assert_eq!(f.crash_count(), 0);
+    }
+}

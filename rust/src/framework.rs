@@ -1,0 +1,231 @@
+//! The user-facing facade: build a topology, register functions, run
+//! algorithms, get results + metrics.
+//!
+//! ```no_run
+//! use hypar::prelude::*;
+//!
+//! let mut registry = FunctionRegistry::new();
+//! registry.register_per_chunk(4, "max", |c| {
+//!     let m = c.as_f32().unwrap().iter().copied().fold(f32::MIN, f32::max);
+//!     DataChunk::scalar_f32(m)
+//! });
+//!
+//! let fw = Framework::builder()
+//!     .schedulers(2)
+//!     .workers_per_scheduler(2)
+//!     .registry(registry)
+//!     .build()
+//!     .unwrap();
+//! let report = fw.run(Algorithm::parse("J1(4,0,0);").unwrap()).unwrap();
+//! println!("wall: {} us", report.metrics.wall_time_us);
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::{CostModel, World};
+use crate::config::TopologyConfig;
+use crate::data::FunctionData;
+use crate::error::Result;
+use crate::fault::FaultInjector;
+use crate::job::registry::FunctionRegistry;
+use crate::job::{Algorithm, JobId};
+use crate::metrics::{MetricsCollector, MetricsSnapshot};
+use crate::runtime::{pjrt_factory, EngineFactory};
+use crate::scheduler::master::{run_master, MasterConfig, ReleasePolicy};
+use crate::scheduler::sub::{spawn_sub, SubConfig, SubHandle};
+use crate::scheduler::FwMsg;
+use crate::worker::WorkerConfig;
+
+/// Outcome of one [`Framework::run`]: final-segment results + metrics.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Results of the jobs in the final parallel segment.
+    pub results: BTreeMap<JobId, FunctionData>,
+    pub metrics: MetricsSnapshot,
+}
+
+impl RunReport {
+    /// Convenience: the single result chunk list of job `id`.
+    pub fn result(&self, id: u32) -> Option<&FunctionData> {
+        self.results.get(&JobId(id))
+    }
+}
+
+/// Configured, reusable framework instance. Each [`Framework::run`] builds
+/// a fresh world (master + sub-schedulers + workers), mirroring one
+/// `mpirun` invocation.
+pub struct Framework {
+    cfg: TopologyConfig,
+    registry: Arc<FunctionRegistry>,
+    engine_factory: Option<EngineFactory>,
+    fault: Arc<FaultInjector>,
+    release: ReleasePolicy,
+}
+
+impl Framework {
+    pub fn builder() -> FrameworkBuilder {
+        FrameworkBuilder::default()
+    }
+
+    /// The shared fault injector (tests arm it before `run`).
+    pub fn fault_injector(&self) -> Arc<FaultInjector> {
+        self.fault.clone()
+    }
+
+    pub fn config(&self) -> &TopologyConfig {
+        &self.cfg
+    }
+
+    /// Execute an algorithm to completion.
+    pub fn run(&self, algo: Algorithm) -> Result<RunReport> {
+        algo.validate()?;
+        self.registry.check_algorithm(&algo)?;
+
+        let world: World<FwMsg> = World::new(self.cfg.cost_model());
+        let metrics = Arc::new(MetricsCollector::new());
+
+        // Rank 0: master (this thread).
+        let mut master_comm = world.add_rank();
+
+        // Ranks 1..=S: sub-schedulers.
+        let worker_cfg = WorkerConfig {
+            cores: self.cfg.cores_per_worker,
+            registry: self.registry.clone(),
+            engine_factory: self.engine_factory.clone(),
+            fault: self.fault.clone(),
+        };
+        let subs: Vec<SubHandle> = (0..self.cfg.schedulers)
+            .map(|_| {
+                spawn_sub(
+                    &world,
+                    SubConfig {
+                        master: master_comm.rank(),
+                        max_workers: self.cfg.workers_per_scheduler,
+                        cores_per_worker: self.cfg.cores_per_worker,
+                        prespawn: self.cfg.prespawn_workers,
+                        worker: worker_cfg.clone(),
+                        tick: Duration::from_millis(20),
+                    },
+                    metrics.clone(),
+                )
+            })
+            .collect();
+        let sub_ranks = subs.iter().map(|s| s.rank).collect();
+
+        let result = run_master(
+            &mut master_comm,
+            algo,
+            MasterConfig { subs: sub_ranks, release: self.release },
+            &metrics,
+        );
+
+        for s in subs {
+            let _ = s.handle.join();
+        }
+        let snapshot = metrics.finish(world.stats());
+        result.map(|results| RunReport { results, metrics: snapshot })
+    }
+}
+
+/// Builder for [`Framework`].
+pub struct FrameworkBuilder {
+    cfg: TopologyConfig,
+    registry: FunctionRegistry,
+    engine_factory: Option<EngineFactory>,
+    fault: Option<Arc<FaultInjector>>,
+    release: ReleasePolicy,
+}
+
+impl Default for FrameworkBuilder {
+    fn default() -> Self {
+        FrameworkBuilder {
+            cfg: TopologyConfig::default(),
+            registry: FunctionRegistry::new(),
+            engine_factory: None,
+            fault: None,
+            release: ReleasePolicy::AtShutdown,
+        }
+    }
+}
+
+impl FrameworkBuilder {
+    /// Start from a full topology config (TOML-loaded or programmatic).
+    pub fn config(mut self, cfg: TopologyConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn schedulers(mut self, n: usize) -> Self {
+        self.cfg.schedulers = n;
+        self
+    }
+
+    pub fn workers_per_scheduler(mut self, n: usize) -> Self {
+        self.cfg.workers_per_scheduler = n;
+        self
+    }
+
+    pub fn cores_per_worker(mut self, n: usize) -> Self {
+        self.cfg.cores_per_worker = n;
+        self
+    }
+
+    pub fn prespawn_workers(mut self, yes: bool) -> Self {
+        self.cfg.prespawn_workers = yes;
+        self
+    }
+
+    pub fn cost_model(mut self, m: CostModel) -> Self {
+        self.cfg.cost_model = crate::config::CostModelConfig {
+            alpha_us: m.alpha_us,
+            bandwidth_gbps: m.bandwidth_gbps,
+            simulate: m.simulate,
+        };
+        self
+    }
+
+    pub fn registry(mut self, r: FunctionRegistry) -> Self {
+        self.registry = r;
+        self
+    }
+
+    /// Explicit engine factory (tests use [`crate::runtime::mock_factory`]).
+    pub fn engine_factory(mut self, f: EngineFactory) -> Self {
+        self.engine_factory = Some(f);
+        self
+    }
+
+    /// Artifact-directory shortcut for the PJRT engine.
+    pub fn artifacts(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.engine_factory = Some(pjrt_factory(dir.into()));
+        self
+    }
+
+    pub fn fault_injector(mut self, f: Arc<FaultInjector>) -> Self {
+        self.fault = Some(f);
+        self
+    }
+
+    pub fn release_policy(mut self, p: ReleasePolicy) -> Self {
+        self.release = p;
+        self
+    }
+
+    pub fn build(self) -> Result<Framework> {
+        self.cfg.validate()?;
+        let engine_factory = match (&self.engine_factory, &self.cfg.engine) {
+            (Some(f), _) => Some(f.clone()),
+            (None, Some(e)) => Some(pjrt_factory(e.artifact_dir.clone())),
+            (None, None) => None,
+        };
+        Ok(Framework {
+            cfg: self.cfg,
+            registry: Arc::new(self.registry),
+            engine_factory,
+            fault: self.fault.unwrap_or_else(|| Arc::new(FaultInjector::none())),
+            release: self.release,
+        })
+    }
+}

@@ -1,0 +1,114 @@
+//! Result references: how one job names another job's output as its input.
+//!
+//! The paper's job-script grammar (§3.3) offers `0` (no input),
+//! `Rk[a..b]` (chunks `a..b` of job k's results) and `Rk Rl` (the entire
+//! results of several jobs).  A [`ChunkRef`] captures one source; a job's
+//! input is an ordered list of them, and the scheduler assembles the final
+//! `FunctionData` by concatenating the resolved chunk lists.
+
+use super::JobId;
+use crate::data::FunctionData;
+use crate::error::{Error, Result};
+
+/// Which chunks of the referenced result to take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkRange {
+    /// Every chunk (`Rk`).
+    All,
+    /// Chunk indices `lo..hi`, half-open (`Rk[lo..hi]`).
+    Range { lo: usize, hi: usize },
+}
+
+impl ChunkRange {
+    /// Resolve against a result with `available` chunks.
+    pub fn resolve(self, available: usize) -> Result<std::ops::Range<usize>> {
+        match self {
+            ChunkRange::All => Ok(0..available),
+            ChunkRange::Range { lo, hi } => {
+                if lo > hi || hi > available {
+                    Err(Error::Assemble(format!(
+                        "chunk range {lo}..{hi} out of bounds ({available} chunks)"
+                    )))
+                } else {
+                    Ok(lo..hi)
+                }
+            }
+        }
+    }
+
+    pub fn is_all(self) -> bool {
+        matches!(self, ChunkRange::All)
+    }
+}
+
+/// One input source of a job: `range` of job `job`'s result chunks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkRef {
+    pub job: JobId,
+    pub range: ChunkRange,
+}
+
+impl ChunkRef {
+    /// `Rk` — the whole result.
+    pub fn all(job: JobId) -> Self {
+        ChunkRef { job, range: ChunkRange::All }
+    }
+
+    /// `Rk[lo..hi]`.
+    pub fn slice(job: JobId, lo: usize, hi: usize) -> Self {
+        ChunkRef { job, range: ChunkRange::Range { lo, hi } }
+    }
+
+    /// Extract the referenced chunks from a stored result (zero-copy).
+    pub fn extract(&self, result: &FunctionData) -> Result<FunctionData> {
+        let r = self.range.resolve(result.len())?;
+        result.select(r)
+    }
+}
+
+impl std::fmt::Display for ChunkRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.range {
+            ChunkRange::All => write!(f, "R{}", self.job.0),
+            ChunkRange::Range { lo, hi } => write!(f, "R{}[{}..{}]", self.job.0, lo, hi),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataChunk;
+
+    fn result_with_chunks(k: usize) -> FunctionData {
+        (0..k).map(|i| DataChunk::from_i32(vec![i as i32])).collect()
+    }
+
+    #[test]
+    fn all_extracts_everything() {
+        let res = result_with_chunks(4);
+        let got = ChunkRef::all(JobId(1)).extract(&res).unwrap();
+        assert_eq!(got.len(), 4);
+    }
+
+    #[test]
+    fn slice_extracts_range() {
+        let res = result_with_chunks(10);
+        let got = ChunkRef::slice(JobId(1), 5, 10).extract(&res).unwrap();
+        assert_eq!(got.len(), 5);
+        assert_eq!(got.chunk(0).unwrap().as_i32().unwrap(), &[5]);
+    }
+
+    #[test]
+    fn out_of_bounds_slice_errors() {
+        let res = result_with_chunks(3);
+        assert!(ChunkRef::slice(JobId(1), 0, 4).extract(&res).is_err());
+        assert!(ChunkRef::slice(JobId(1), 2, 1).extract(&res).is_err());
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(ChunkRef::all(JobId(2)).to_string(), "R2");
+        assert_eq!(ChunkRef::slice(JobId(1), 0, 5).to_string(), "R1[0..5]");
+    }
+}

@@ -1,0 +1,167 @@
+//! The job model (paper §2): algorithms, parallel segments, jobs,
+//! result references, the job-script language and the function registry.
+
+pub mod depref;
+pub mod parser;
+pub mod registry;
+pub mod segment;
+
+pub use depref::{ChunkRange, ChunkRef};
+pub use segment::{Algorithm, ParallelSegment};
+
+/// Unique job identity within one algorithm run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u32);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "J{}", self.0)
+    }
+}
+
+/// Identifier of a user function registered in the workers (paper §3.2:
+/// "function identifier (a number as defined within worker process)").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FuncId(pub u32);
+
+impl std::fmt::Display for FuncId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "f{}", self.0)
+    }
+}
+
+/// Intra-job parallelism request (paper §3.3: "0 indicates as many threads
+/// as available cores ...; any number > 0 indicates the exact amount").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ThreadCount {
+    /// Use every core of the worker that executes the job.
+    Auto,
+    /// Exactly this many sequences.
+    Exact(u32),
+}
+
+impl ThreadCount {
+    /// Resolve against a worker with `cores` cores.
+    pub fn resolve(self, cores: usize) -> usize {
+        match self {
+            ThreadCount::Auto => cores.max(1),
+            ThreadCount::Exact(n) => (n as usize).max(1),
+        }
+    }
+
+    /// Core budget this job occupies for packing (Auto takes the node).
+    pub fn packing_width(self, cores: usize) -> usize {
+        match self {
+            ThreadCount::Auto => cores.max(1),
+            ThreadCount::Exact(n) => (n as usize).clamp(1, cores.max(1)),
+        }
+    }
+}
+
+impl From<u32> for ThreadCount {
+    fn from(n: u32) -> Self {
+        if n == 0 {
+            ThreadCount::Auto
+        } else {
+            ThreadCount::Exact(n)
+        }
+    }
+}
+
+/// Full static description of one job — the 4-tuple of the paper's job
+/// definition language plus its identity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub id: JobId,
+    pub func: FuncId,
+    pub threads: ThreadCount,
+    /// Result references consumed as input, in chunk order.
+    pub inputs: Vec<ChunkRef>,
+    /// Keep-results: the worker retains the output and only reports
+    /// completion (paper §3.1) — the iterative-solver optimisation.
+    pub keep: bool,
+}
+
+impl JobSpec {
+    pub fn new(id: u32, func: u32, threads: u32) -> Self {
+        JobSpec {
+            id: JobId(id),
+            func: FuncId(func),
+            threads: threads.into(),
+            inputs: Vec::new(),
+            keep: false,
+        }
+    }
+
+    pub fn with_inputs(mut self, inputs: Vec<ChunkRef>) -> Self {
+        self.inputs = inputs;
+        self
+    }
+
+    pub fn with_keep(mut self, keep: bool) -> Self {
+        self.keep = keep;
+        self
+    }
+}
+
+/// Result reference inside a dynamically injected job: either an existing
+/// job's results or another job injected in the same batch (by local id).
+#[derive(Debug, Clone, PartialEq)]
+pub enum InjectedRef {
+    Existing(ChunkRef),
+    Local { local_id: u32, range: ChunkRange },
+}
+
+/// A job created at runtime by another job (paper §3.3: "during runtime
+/// each job can add a finite number of new jobs to the current or following
+/// parallel segments").  Real [`JobId`]s are allocated by the master when
+/// the injection arrives; `local_id` lets injected jobs reference each
+/// other before that.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InjectedJob {
+    pub local_id: u32,
+    pub func: FuncId,
+    pub threads: ThreadCount,
+    pub inputs: Vec<InjectedRef>,
+    pub keep: bool,
+}
+
+/// A batch of injected jobs targeted at a segment relative to the one the
+/// injecting job belongs to (0 = same segment, 1 = next, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Injection {
+    pub segment_delta: usize,
+    pub jobs: Vec<InjectedJob>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_count_resolution() {
+        assert_eq!(ThreadCount::Auto.resolve(8), 8);
+        assert_eq!(ThreadCount::Exact(3).resolve(8), 3);
+        assert_eq!(ThreadCount::Exact(0).resolve(8), 1); // degenerate clamp
+        assert_eq!(ThreadCount::from(0u32), ThreadCount::Auto);
+        assert_eq!(ThreadCount::from(2u32), ThreadCount::Exact(2));
+    }
+
+    #[test]
+    fn packing_width_clamps_to_node() {
+        assert_eq!(ThreadCount::Exact(16).packing_width(4), 4);
+        assert_eq!(ThreadCount::Auto.packing_width(4), 4);
+        assert_eq!(ThreadCount::Exact(2).packing_width(4), 2);
+    }
+
+    #[test]
+    fn spec_builder() {
+        let s = JobSpec::new(1, 2, 0)
+            .with_inputs(vec![ChunkRef::all(JobId(9))])
+            .with_keep(true);
+        assert_eq!(s.id, JobId(1));
+        assert_eq!(s.threads, ThreadCount::Auto);
+        assert!(s.keep);
+        assert_eq!(s.inputs.len(), 1);
+    }
+}

@@ -1,0 +1,360 @@
+//! Parser for the paper's job-script language (§3.3).
+//!
+//! Grammar (whitespace and `#`-comments insignificant):
+//!
+//! ```text
+//! script    := segment (';' segment)* ';'? EOF
+//! segment   := job (',' job)*
+//! job       := 'J' INT '(' INT ',' INT ',' chunkspec (',' BOOL)? ')'
+//! chunkspec := '0' | ref+                      (refs separated by spaces)
+//! ref       := 'R' INT ('[' INT '..' INT ']')?
+//! BOOL      := 'true' | 'false'
+//! ```
+//!
+//! The paper's own sample parses verbatim:
+//!
+//! ```text
+//! J1(1,0,0), J2(2,1,0);
+//! J3(2,2,R1[0..5],true), J4(2,2,R1[5..10],true), J5(3,0,R1 R2),
+//!  J6(4,0,R1 R2);
+//! J7(5,1, R2 R3 R4 R5);
+//! ```
+
+use super::depref::{ChunkRange, ChunkRef};
+use super::segment::{Algorithm, ParallelSegment};
+use super::{JobId, JobSpec};
+use crate::error::{Error, Result};
+
+/// Parse a job script into a validated [`Algorithm`].
+pub fn parse(script: &str) -> Result<Algorithm> {
+    let mut p = Parser::new(script);
+    let algo = p.script()?;
+    algo.validate()?;
+    Ok(algo)
+}
+
+struct Parser<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: usize,
+    col: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(src: &'a str) -> Self {
+        Parser { src: src.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    fn err(&self, msg: impl Into<String>) -> Error {
+        Error::Parse { line: self.line, col: self.col, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    /// Skip whitespace and `#` comments.
+    fn skip_ws(&mut self) {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_whitespace() => {
+                    self.bump();
+                }
+                Some(b'#') => {
+                    while let Some(c) = self.bump() {
+                        if c == b'\n' {
+                            break;
+                        }
+                    }
+                }
+                _ => return,
+            }
+        }
+    }
+
+    /// Skip only spaces/tabs (used inside chunkspecs where a space is the
+    /// ref separator but a newline is still insignificant).
+    fn expect(&mut self, c: u8) -> Result<()> {
+        self.skip_ws();
+        match self.peek() {
+            Some(got) if got == c => {
+                self.bump();
+                Ok(())
+            }
+            Some(got) => Err(self.err(format!(
+                "expected '{}', found '{}'",
+                c as char, got as char
+            ))),
+            None => Err(self.err(format!("expected '{}', found end of input", c as char))),
+        }
+    }
+
+    fn integer(&mut self) -> Result<u64> {
+        self.skip_ws();
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.bump();
+        }
+        if self.pos == start {
+            return Err(self.err("expected integer"));
+        }
+        let text = std::str::from_utf8(&self.src[start..self.pos]).expect("digits are utf8");
+        text.parse::<u64>().map_err(|_| self.err("integer too large"))
+    }
+
+    fn keyword(&mut self, kw: &str) -> bool {
+        self.skip_ws();
+        if self.src[self.pos..].starts_with(kw.as_bytes()) {
+            // Must not be followed by an identifier character.
+            let after = self.src.get(self.pos + kw.len()).copied();
+            if !matches!(after, Some(c) if c.is_ascii_alphanumeric()) {
+                for _ in 0..kw.len() {
+                    self.bump();
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    fn script(&mut self) -> Result<Algorithm> {
+        let mut segments = Vec::new();
+        loop {
+            self.skip_ws();
+            if self.peek().is_none() {
+                break;
+            }
+            segments.push(self.segment()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b';') => {
+                    self.bump();
+                }
+                None => break,
+                Some(c) => {
+                    return Err(self.err(format!(
+                        "expected ';' between segments, found '{}'",
+                        c as char
+                    )))
+                }
+            }
+        }
+        if segments.is_empty() {
+            return Err(self.err("script contains no segments"));
+        }
+        Ok(Algorithm::new(segments))
+    }
+
+    fn segment(&mut self) -> Result<ParallelSegment> {
+        let mut jobs = vec![self.job()?];
+        loop {
+            self.skip_ws();
+            if self.peek() == Some(b',') {
+                self.bump();
+                jobs.push(self.job()?);
+            } else {
+                break;
+            }
+        }
+        Ok(ParallelSegment::new(jobs))
+    }
+
+    fn job(&mut self) -> Result<JobSpec> {
+        self.skip_ws();
+        if self.peek() != Some(b'J') {
+            return Err(self.err("expected job ('J<n>(...)')"));
+        }
+        self.bump();
+        let id = self.integer()? as u32;
+        self.expect(b'(')?;
+        let func = self.integer()? as u32;
+        self.expect(b',')?;
+        let threads = self.integer()? as u32;
+        self.expect(b',')?;
+        let inputs = self.chunkspec()?;
+        self.skip_ws();
+        let keep = if self.peek() == Some(b',') {
+            self.bump();
+            if self.keyword("true") {
+                true
+            } else if self.keyword("false") {
+                false
+            } else {
+                return Err(self.err("expected 'true' or 'false' after third argument"));
+            }
+        } else {
+            false
+        };
+        self.expect(b')')?;
+        Ok(JobSpec {
+            id: JobId(id),
+            func: super::FuncId(func),
+            threads: threads.into(),
+            inputs,
+            keep,
+        })
+    }
+
+    fn chunkspec(&mut self) -> Result<Vec<ChunkRef>> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'0') => {
+                // `0` = no input — but only if not the start of a larger int
+                let save = (self.pos, self.line, self.col);
+                self.bump();
+                if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    (self.pos, self.line, self.col) = save;
+                    return Err(self.err("chunk spec must be 0 or R-references"));
+                }
+                Ok(Vec::new())
+            }
+            Some(b'R') => {
+                let mut refs = vec![self.result_ref()?];
+                loop {
+                    self.skip_ws();
+                    if self.peek() == Some(b'R') {
+                        refs.push(self.result_ref()?);
+                    } else {
+                        break;
+                    }
+                }
+                Ok(refs)
+            }
+            Some(c) => Err(self.err(format!(
+                "expected chunk spec (0 or R<k>[a..b]), found '{}'",
+                c as char
+            ))),
+            None => Err(self.err("expected chunk spec, found end of input")),
+        }
+    }
+
+    fn result_ref(&mut self) -> Result<ChunkRef> {
+        self.expect(b'R')?;
+        let job = self.integer()? as u32;
+        self.skip_ws();
+        if self.peek() == Some(b'[') {
+            self.bump();
+            let lo = self.integer()? as usize;
+            self.expect(b'.')?;
+            self.expect(b'.')?;
+            let hi = self.integer()? as usize;
+            self.expect(b']')?;
+            if lo >= hi {
+                return Err(self.err(format!("empty chunk range {lo}..{hi}")));
+            }
+            Ok(ChunkRef { job: JobId(job), range: ChunkRange::Range { lo, hi } })
+        } else {
+            Ok(ChunkRef::all(JobId(job)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::ThreadCount;
+
+    #[test]
+    fn parses_the_papers_sample_verbatim() {
+        let script = "
+            J1(1,0,0), J2(2,1,0);
+            J3(2,2,R1[0..5],true), J4(2,2,R1[5..10],true), J5(3,0,R1 R2),
+             J6(4,0,R1 R2);
+            J7(5,1, R2 R3 R4 R5);
+        ";
+        let algo = parse(script).unwrap();
+        assert_eq!(algo.segments.len(), 3);
+        assert_eq!(algo.segments[0].len(), 2);
+        assert_eq!(algo.segments[1].len(), 4);
+        assert_eq!(algo.segments[2].len(), 1);
+
+        let j1 = &algo.segments[0].jobs[0];
+        assert_eq!(j1.id, JobId(1));
+        assert_eq!(j1.func, super::super::FuncId(1));
+        assert_eq!(j1.threads, ThreadCount::Auto);
+        assert!(j1.inputs.is_empty());
+        assert!(!j1.keep);
+
+        let j3 = &algo.segments[1].jobs[0];
+        assert_eq!(j3.threads, ThreadCount::Exact(2));
+        assert_eq!(j3.inputs, vec![ChunkRef::slice(JobId(1), 0, 5)]);
+        assert!(j3.keep);
+
+        let j5 = &algo.segments[1].jobs[2];
+        assert_eq!(
+            j5.inputs,
+            vec![ChunkRef::all(JobId(1)), ChunkRef::all(JobId(2))]
+        );
+
+        let j7 = &algo.segments[2].jobs[0];
+        assert_eq!(j7.inputs.len(), 4);
+        assert_eq!(j7.threads, ThreadCount::Exact(1));
+    }
+
+    #[test]
+    fn comments_and_whitespace() {
+        let algo = parse(
+            "# pipeline\nJ1(1,0,0);  # first\nJ2(1 , 0 , R1 [ 0 .. 2 ] , false );",
+        )
+        .unwrap();
+        assert_eq!(algo.segments.len(), 2);
+        assert_eq!(
+            algo.segments[1].jobs[0].inputs,
+            vec![ChunkRef::slice(JobId(1), 0, 2)]
+        );
+    }
+
+    #[test]
+    fn trailing_semicolon_optional() {
+        assert!(parse("J1(1,0,0)").is_ok());
+        assert!(parse("J1(1,0,0);").is_ok());
+    }
+
+    #[test]
+    fn error_reports_position() {
+        let err = parse("J1(1,0,0);\nJ2(2,0,Q);").unwrap_err();
+        match err {
+            Error::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_empty_range() {
+        assert!(parse("J1(1,0,0); J2(1,0,R1[3..3]);").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("").is_err());
+        assert!(parse("hello").is_err());
+        assert!(parse("J1(1,0)").is_err()); // missing chunk spec
+        assert!(parse("J1(1,0,0,maybe)").is_err());
+        assert!(parse("J1(1,0,0) J2(1,0,0)").is_err()); // missing separator
+    }
+
+    #[test]
+    fn validation_runs_after_parse() {
+        // J2 references J3 which is never defined
+        let err = parse("J1(1,0,0); J2(1,0,R3);").unwrap_err();
+        assert!(matches!(err, Error::UnknownResultRef { .. }));
+    }
+
+    #[test]
+    fn keep_flag_requires_bool() {
+        assert!(parse("J1(1,0,0,true);").unwrap().segments[0].jobs[0].keep);
+        assert!(!parse("J1(1,0,0,false);").unwrap().segments[0].jobs[0].keep);
+    }
+}

@@ -1,0 +1,291 @@
+//! User-function registration (paper §3.2) and the execution context.
+//!
+//! The paper's worker signature is
+//! `void f(FunctionData *input, FunctionData *output)`; here a function is
+//! registered under its numeric [`FuncId`] in one of three shapes:
+//!
+//! * [`UserFunction::Plain`] — exactly the paper's signature, one sequence.
+//! * [`UserFunction::PerChunk`] — a chunk→chunk map; the worker distributes
+//!   the input chunks over the job's sequences automatically (the paper's
+//!   "automatic data distribution between all sequences within one job").
+//! * [`UserFunction::WithCtx`] — the paper's signature plus a [`JobCtx`]
+//!   giving access to the AOT compute engine, the resolved thread count,
+//!   and **dynamic job injection** (paper §3.3).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::{FuncId, InjectedJob, Injection, JobId};
+use crate::data::{DataChunk, FunctionData};
+use crate::error::{Error, Result};
+use crate::runtime::ComputeBackend;
+
+pub type PlainFn = dyn Fn(&FunctionData, &mut FunctionData) -> Result<()> + Send + Sync;
+pub type PerChunkFn = dyn Fn(&DataChunk) -> Result<DataChunk> + Send + Sync;
+pub type CtxFn = dyn Fn(&FunctionData, &mut FunctionData, &JobCtx) -> Result<()> + Send + Sync;
+
+/// Shared handle to a per-chunk function (what the sequence pool fans out).
+pub type PerChunkShared = Arc<PerChunkFn>;
+
+/// A registered user function.
+#[derive(Clone)]
+pub enum UserFunction {
+    Plain(Arc<PlainFn>),
+    PerChunk(Arc<PerChunkFn>),
+    WithCtx(Arc<CtxFn>),
+}
+
+impl std::fmt::Debug for UserFunction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self {
+            UserFunction::Plain(_) => "Plain",
+            UserFunction::PerChunk(_) => "PerChunk",
+            UserFunction::WithCtx(_) => "WithCtx",
+        };
+        write!(f, "UserFunction::{kind}")
+    }
+}
+
+/// Execution context handed to `WithCtx` functions.
+///
+/// Lives for one job execution on one worker. Interior mutability lets the
+/// function record injections through a shared reference.
+pub struct JobCtx<'a> {
+    /// The job being executed.
+    pub job: JobId,
+    /// Resolved sequence count (threads) for this execution.
+    pub n_threads: usize,
+    engine: Option<&'a dyn ComputeBackend>,
+    injections: RefCell<Vec<Injection>>,
+}
+
+impl<'a> JobCtx<'a> {
+    pub fn new(job: JobId, n_threads: usize, engine: Option<&'a dyn ComputeBackend>) -> Self {
+        JobCtx { job, n_threads, engine, injections: RefCell::new(Vec::new()) }
+    }
+
+    /// The worker's AOT compute engine (PJRT), if configured.
+    pub fn engine(&self) -> Result<&dyn ComputeBackend> {
+        self.engine.ok_or(Error::NoEngine)
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.engine.is_some()
+    }
+
+    /// Dynamically add jobs to the segment `segment_delta` segments after
+    /// the current one (0 = current segment; paper §3.3). The master
+    /// allocates real job ids when the injection arrives.
+    pub fn inject(&self, segment_delta: usize, jobs: Vec<InjectedJob>) {
+        self.injections
+            .borrow_mut()
+            .push(Injection { segment_delta, jobs });
+    }
+
+    /// Drain recorded injections (worker-side, after the function returns).
+    pub fn take_injections(&self) -> Vec<Injection> {
+        std::mem::take(&mut self.injections.borrow_mut())
+    }
+}
+
+/// `FuncId -> UserFunction` map compiled into every worker (the paper's
+/// "fat worker" model: one worker type containing all user functions).
+#[derive(Clone, Default)]
+pub struct FunctionRegistry {
+    map: HashMap<FuncId, (String, UserFunction)>,
+}
+
+impl std::fmt::Debug for FunctionRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut names: Vec<_> = self.map.iter().map(|(id, (n, _))| (id.0, n.as_str())).collect();
+        names.sort();
+        write!(f, "FunctionRegistry{names:?}")
+    }
+}
+
+impl FunctionRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, id: u32, name: impl Into<String>, f: UserFunction) -> &mut Self {
+        self.map.insert(FuncId(id), (name.into(), f));
+        self
+    }
+
+    /// Paper-signature function, single sequence.
+    pub fn register_plain<F>(&mut self, id: u32, name: impl Into<String>, f: F) -> &mut Self
+    where
+        F: Fn(&FunctionData, &mut FunctionData) -> Result<()> + Send + Sync + 'static,
+    {
+        self.register(id, name, UserFunction::Plain(Arc::new(f)))
+    }
+
+    /// Chunk→chunk map, automatically fanned over the job's sequences.
+    /// Infallible closure convenience; use [`Self::register_per_chunk_try`]
+    /// for fallible ones.
+    pub fn register_per_chunk<F>(&mut self, id: u32, name: impl Into<String>, f: F) -> &mut Self
+    where
+        F: Fn(&DataChunk) -> DataChunk + Send + Sync + 'static,
+    {
+        self.register(id, name, UserFunction::PerChunk(Arc::new(move |c| Ok(f(c)))))
+    }
+
+    pub fn register_per_chunk_try<F>(&mut self, id: u32, name: impl Into<String>, f: F) -> &mut Self
+    where
+        F: Fn(&DataChunk) -> Result<DataChunk> + Send + Sync + 'static,
+    {
+        self.register(id, name, UserFunction::PerChunk(Arc::new(f)))
+    }
+
+    /// Context-aware function (engine access + dynamic job injection).
+    pub fn register_with_ctx<F>(&mut self, id: u32, name: impl Into<String>, f: F) -> &mut Self
+    where
+        F: Fn(&FunctionData, &mut FunctionData, &JobCtx) -> Result<()> + Send + Sync + 'static,
+    {
+        self.register(id, name, UserFunction::WithCtx(Arc::new(f)))
+    }
+
+    pub fn get(&self, id: FuncId) -> Result<&UserFunction> {
+        self.map
+            .get(&id)
+            .map(|(_, f)| f)
+            .ok_or(Error::UnknownFunction(id))
+    }
+
+    pub fn name(&self, id: FuncId) -> Option<&str> {
+        self.map.get(&id).map(|(n, _)| n.as_str())
+    }
+
+    pub fn contains(&self, id: FuncId) -> bool {
+        self.map.contains_key(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Check that every function an algorithm references is registered
+    /// (done once at submission, not per dispatch).
+    pub fn check_algorithm(&self, algo: &super::Algorithm) -> Result<()> {
+        for job in algo.all_jobs() {
+            if !self.contains(job.func) {
+                return Err(Error::UnknownFunction(job.func));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Demonstration registry used by the CLI's `run` subcommand, the
+/// quickstart example and the scheduling benchmarks.
+///
+/// | id | name        | kind     | behaviour                                |
+/// |----|-------------|----------|------------------------------------------|
+/// | 1  | identity    | PerChunk | copies input chunks                      |
+/// | 2  | square      | PerChunk | x → x² elementwise (f32)                 |
+/// | 3  | sum         | Plain    | one f32 chunk with the total sum         |
+/// | 4  | max         | PerChunk | one-element chunk with the chunk max     |
+/// | 5  | noop        | Plain    | no output (pure-overhead job)            |
+/// | 6  | sleep1ms    | Plain    | sleeps 1 ms (synthetic work)             |
+pub fn demo_registry() -> FunctionRegistry {
+    let mut r = FunctionRegistry::new();
+    r.register_per_chunk(1, "identity", |c| c.clone());
+    r.register_per_chunk_try(2, "square", |c| {
+        Ok(DataChunk::from_f32(c.as_f32()?.iter().map(|v| v * v).collect()))
+    });
+    r.register_plain(3, "sum", |input, output| {
+        let mut acc = 0.0f32;
+        for chunk in input.chunks() {
+            acc += chunk.as_f32()?.iter().sum::<f32>();
+        }
+        output.push(DataChunk::scalar_f32(acc));
+        Ok(())
+    });
+    r.register_per_chunk_try(4, "max", |c| {
+        let m = c
+            .as_f32()?
+            .iter()
+            .copied()
+            .fold(f32::NEG_INFINITY, f32::max);
+        Ok(DataChunk::scalar_f32(m))
+    });
+    r.register_plain(5, "noop", |_input, _output| Ok(()));
+    r.register_plain(6, "sleep1ms", |_input, _output| {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        Ok(())
+    });
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_lookup() {
+        let mut r = FunctionRegistry::new();
+        r.register_per_chunk(7, "id", |c| c.clone());
+        assert!(r.contains(FuncId(7)));
+        assert_eq!(r.name(FuncId(7)), Some("id"));
+        assert!(matches!(r.get(FuncId(7)), Ok(UserFunction::PerChunk(_))));
+        assert!(matches!(r.get(FuncId(8)), Err(Error::UnknownFunction(_))));
+    }
+
+    #[test]
+    fn ctx_injection_collects() {
+        let ctx = JobCtx::new(JobId(3), 2, None);
+        assert!(ctx.engine().is_err());
+        ctx.inject(
+            1,
+            vec![InjectedJob {
+                local_id: 0,
+                func: FuncId(1),
+                threads: super::super::ThreadCount::Auto,
+                inputs: vec![],
+                keep: false,
+            }],
+        );
+        let inj = ctx.take_injections();
+        assert_eq!(inj.len(), 1);
+        assert_eq!(inj[0].segment_delta, 1);
+        assert!(ctx.take_injections().is_empty());
+    }
+
+    #[test]
+    fn demo_registry_functions_work() {
+        let r = demo_registry();
+        // square
+        if let UserFunction::PerChunk(f) = r.get(FuncId(2)).unwrap() {
+            let out = f(&DataChunk::from_f32(vec![2.0, 3.0])).unwrap();
+            assert_eq!(out.as_f32().unwrap(), &[4.0, 9.0]);
+        } else {
+            panic!("square should be PerChunk");
+        }
+        // sum
+        if let UserFunction::Plain(f) = r.get(FuncId(3)).unwrap() {
+            let mut out = FunctionData::new();
+            f(&FunctionData::of_f32_chunked(vec![1.0, 2.0, 3.0], 2), &mut out).unwrap();
+            assert_eq!(out.chunk(0).unwrap().first_f32().unwrap(), 6.0);
+        } else {
+            panic!("sum should be Plain");
+        }
+    }
+
+    #[test]
+    fn check_algorithm_flags_unknown_function() {
+        let r = demo_registry();
+        let ok = super::super::Algorithm::parse("J1(1,0,0);").unwrap();
+        assert!(r.check_algorithm(&ok).is_ok());
+        let bad = super::super::Algorithm::parse("J1(99,0,0);").unwrap();
+        assert!(matches!(
+            r.check_algorithm(&bad),
+            Err(Error::UnknownFunction(FuncId(99)))
+        ));
+    }
+}

@@ -1,0 +1,247 @@
+//! Parallel segments and algorithms (paper §2.1).
+//!
+//! An [`Algorithm`] is an ordered list of [`ParallelSegment`]s; all jobs of
+//! one segment may run concurrently, and segment *i+1* starts only when
+//! every job of segment *i* (including dynamically injected ones) has
+//! terminated.
+
+use std::collections::HashSet;
+
+use super::{ChunkRef, JobId, JobSpec};
+use crate::error::{Error, Result};
+
+/// One set of concurrently executable jobs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParallelSegment {
+    pub jobs: Vec<JobSpec>,
+}
+
+impl ParallelSegment {
+    pub fn new(jobs: Vec<JobSpec>) -> Self {
+        ParallelSegment { jobs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+/// The complete (static) algorithm description held by the master.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Algorithm {
+    pub segments: Vec<ParallelSegment>,
+}
+
+impl Algorithm {
+    pub fn new(segments: Vec<ParallelSegment>) -> Self {
+        Algorithm { segments }
+    }
+
+    /// Parse the paper's job-script text format (§3.3). See [`super::parser`].
+    pub fn parse(script: &str) -> Result<Self> {
+        super::parser::parse(script)
+    }
+
+    /// Builder: start from an empty algorithm and push segments.
+    pub fn builder() -> AlgorithmBuilder {
+        AlgorithmBuilder { segments: Vec::new() }
+    }
+
+    pub fn all_jobs(&self) -> impl Iterator<Item = &JobSpec> {
+        self.segments.iter().flat_map(|s| s.jobs.iter())
+    }
+
+    pub fn job_count(&self) -> usize {
+        self.segments.iter().map(|s| s.jobs.len()).sum()
+    }
+
+    /// Largest job id used (dynamic injection allocates above this).
+    pub fn max_job_id(&self) -> u32 {
+        self.all_jobs().map(|j| j.id.0).max().unwrap_or(0)
+    }
+
+    /// Static validation:
+    /// * at least one segment, no empty segments,
+    /// * job ids unique,
+    /// * every [`ChunkRef`] points to a job in a **strictly earlier**
+    ///   segment (same-segment jobs run concurrently, so a dependency
+    ///   inside a segment would deadlock — the paper resolves iteration via
+    ///   dynamic injection instead).
+    pub fn validate(&self) -> Result<()> {
+        if self.segments.is_empty() {
+            return Err(Error::EmptyAlgorithm);
+        }
+        let mut seen: HashSet<JobId> = HashSet::new();
+        for seg in &self.segments {
+            if seg.is_empty() {
+                return Err(Error::EmptyAlgorithm);
+            }
+            for job in &seg.jobs {
+                if !seen.insert(job.id) {
+                    // re-checked below per segment; duplicate across any
+                    // position is an error
+                }
+            }
+        }
+        // uniqueness (redo cleanly to report the duplicate)
+        let mut ids = HashSet::new();
+        for job in self.all_jobs() {
+            if !ids.insert(job.id) {
+                return Err(Error::DuplicateJobId(job.id));
+            }
+        }
+        // references resolve to earlier segments
+        let mut earlier: HashSet<JobId> = HashSet::new();
+        for seg in &self.segments {
+            for job in &seg.jobs {
+                for ChunkRef { job: referenced, .. } in &job.inputs {
+                    if !earlier.contains(referenced) {
+                        return Err(Error::UnknownResultRef {
+                            job: job.id,
+                            referenced: *referenced,
+                        });
+                    }
+                }
+            }
+            earlier.extend(seg.jobs.iter().map(|j| j.id));
+        }
+        Ok(())
+    }
+
+    /// Is this a *hybrid* parallel algorithm in the paper's sense (§2.1):
+    /// some segment has more than one job, and some job more than one
+    /// sequence?  Returns `(strict, loose)` — strict when both conditions
+    /// hold in the same segment.
+    pub fn hybrid_class(&self, cores_per_worker: usize) -> (bool, bool) {
+        let mut strict = false;
+        let mut multi_job = false;
+        let mut multi_seq = false;
+        for seg in &self.segments {
+            let seg_multi_job = seg.jobs.len() > 1;
+            let seg_multi_seq = seg
+                .jobs
+                .iter()
+                .any(|j| j.threads.resolve(cores_per_worker) > 1);
+            multi_job |= seg_multi_job;
+            multi_seq |= seg_multi_seq;
+            strict |= seg_multi_job && seg_multi_seq;
+        }
+        (strict, multi_job && multi_seq)
+    }
+}
+
+/// Fluent algorithm construction for programmatic users (the solvers).
+pub struct AlgorithmBuilder {
+    segments: Vec<ParallelSegment>,
+}
+
+impl AlgorithmBuilder {
+    pub fn segment(mut self, jobs: Vec<JobSpec>) -> Self {
+        self.segments.push(ParallelSegment::new(jobs));
+        self
+    }
+
+    pub fn build(self) -> Result<Algorithm> {
+        let algo = Algorithm::new(self.segments);
+        algo.validate()?;
+        Ok(algo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::ChunkRange;
+
+    fn job(id: u32) -> JobSpec {
+        JobSpec::new(id, 1, 1)
+    }
+
+    #[test]
+    fn valid_two_segment_algorithm() {
+        let algo = Algorithm::builder()
+            .segment(vec![job(1), job(2)])
+            .segment(vec![job(3).with_inputs(vec![ChunkRef::all(JobId(1))])])
+            .build()
+            .unwrap();
+        assert_eq!(algo.job_count(), 3);
+        assert_eq!(algo.max_job_id(), 3);
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let err = Algorithm::builder()
+            .segment(vec![job(1), job(1)])
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::DuplicateJobId(JobId(1))));
+    }
+
+    #[test]
+    fn same_segment_dependency_rejected() {
+        let err = Algorithm::builder()
+            .segment(vec![
+                job(1),
+                job(2).with_inputs(vec![ChunkRef::all(JobId(1))]),
+            ])
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::UnknownResultRef { .. }));
+    }
+
+    #[test]
+    fn forward_dependency_rejected() {
+        let err = Algorithm::builder()
+            .segment(vec![job(1).with_inputs(vec![ChunkRef::all(JobId(2))])])
+            .segment(vec![job(2)])
+            .build()
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            Error::UnknownResultRef { referenced: JobId(2), .. }
+        ));
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(matches!(
+            Algorithm::new(vec![]).validate(),
+            Err(Error::EmptyAlgorithm)
+        ));
+        assert!(matches!(
+            Algorithm::new(vec![ParallelSegment::default()]).validate(),
+            Err(Error::EmptyAlgorithm)
+        ));
+    }
+
+    #[test]
+    fn hybrid_classification() {
+        // strict: segment with 2 jobs, one of them multi-threaded
+        let strict = Algorithm::builder()
+            .segment(vec![JobSpec::new(1, 1, 2), JobSpec::new(2, 1, 1)])
+            .build()
+            .unwrap();
+        assert_eq!(strict.hybrid_class(4), (true, true));
+
+        // loose: multi-job segment and multi-sequence job in different segments
+        let loose = Algorithm::builder()
+            .segment(vec![JobSpec::new(1, 1, 1), JobSpec::new(2, 1, 1)])
+            .segment(vec![
+                JobSpec::new(3, 1, 4).with_inputs(vec![ChunkRef::all(JobId(1))])
+            ])
+            .build()
+            .unwrap();
+        assert_eq!(loose.hybrid_class(4), (false, true));
+
+        // neither
+        let seq = Algorithm::builder()
+            .segment(vec![JobSpec::new(1, 1, 1)])
+            .build()
+            .unwrap();
+        assert_eq!(seq.hybrid_class(4), (false, false));
+    }
+}

@@ -1,0 +1,91 @@
+//! # hypar — Framework for the Hybrid Parallelisation of Simulation Codes
+//!
+//! A production reimplementation of the framework of Mundani, Ljucović and
+//! Rank (*Framework for the Hybrid Parallelisation of Simulation Codes*,
+//! Proc. PARENG, paper 53, DOI `10.4203/ccp.95.53`): a job-model layer that
+//! lets a sequential simulation code run hybrid-parallel without the user
+//! writing any MPI or OpenMP.
+//!
+//! ## The job model (paper §2)
+//!
+//! * An [`job::Algorithm`] is an ordered list of **parallel segments**.
+//! * A segment is a set of **jobs** that may all execute concurrently; it
+//!   completes when every job in it has terminated.
+//! * A job is a set of **sequences of instructions** (the intra-job thread
+//!   level — classic OpenMP territory); it completes when all sequences
+//!   have terminated.
+//!
+//! ## The runtime (paper §3)
+//!
+//! A **master scheduler** (rank 0) holds the whole algorithm description
+//! and assigns ready jobs to **sub-schedulers** (ranks `1..=S`), which
+//! dispatch them to dynamically spawned, isolated **workers** and store the
+//! job results, serving them (whole or as chunk slices) to any other
+//! scheduler that needs them as inputs.  Workers can retain results
+//! locally (**keep-results**) so iterative algorithms avoid shipping state
+//! through the schedulers every sweep.
+//!
+//! The "MPI" underneath is [`comm`] — an in-process message-passing
+//! substrate with ranks, tags, blocking matched receives, collectives and
+//! an α/β communication cost model, so the framework logic is written
+//! exactly as it would be against MPI.  The "OpenMP" underneath is
+//! [`worker::pool`] — fork-join sequence execution inside a worker.
+//!
+//! Numeric hot-spots execute as AOT-compiled XLA programs (JAX + Pallas at
+//! build time → HLO text → [`runtime`] via PJRT); python is never on the
+//! request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hypar::prelude::*;
+//!
+//! let mut registry = FunctionRegistry::new();
+//! registry.register_per_chunk(1, "double", |c| {
+//!     DataChunk::from_f32(c.as_f32().unwrap().iter().map(|v| v * 2.0).collect())
+//! });
+//!
+//! let algo = Algorithm::parse("J1(1,0,0);").unwrap();
+//! let report = Framework::builder()
+//!     .schedulers(2)
+//!     .workers_per_scheduler(2)
+//!     .registry(registry)
+//!     .build()
+//!     .unwrap()
+//!     .run(algo)
+//!     .unwrap();
+//! # let _ = report;
+//! ```
+
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod error;
+pub mod fault;
+pub mod framework;
+pub mod job;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod solvers;
+pub mod util;
+pub mod worker;
+
+pub use error::{Error, Result};
+pub use framework::{Framework, FrameworkBuilder, RunReport};
+
+/// One-stop imports for framework users.
+pub mod prelude {
+    pub use crate::comm::{Comm, CommSender, Rank, Tag, World};
+    pub use crate::config::{CostModelConfig, EngineConfig, TopologyConfig};
+    pub use crate::data::{DataChunk, Dtype, FunctionData};
+    pub use crate::error::{Error, Result};
+    pub use crate::framework::{Framework, FrameworkBuilder, RunReport};
+    pub use crate::job::{
+        Algorithm, ChunkRange, ChunkRef, FuncId, InjectedJob, InjectedRef, JobId,
+        JobSpec, ParallelSegment, ThreadCount,
+    };
+    pub use crate::job::registry::{FunctionRegistry, JobCtx};
+    pub use crate::metrics::MetricsSnapshot;
+    pub use crate::runtime::{ComputeBackend, Engine, Manifest};
+}

@@ -1,0 +1,394 @@
+//! `hypar` CLI — launcher for job scripts, the paper's experiments and
+//! artifact tooling.
+//!
+//! ```text
+//! hypar run <script.job>          # run a job script on the demo registry
+//! hypar fig3 --size 2709 ...      # Figure-3 row: framework vs tailored MPI
+//! hypar overhead                  # the "~10 % mean" overhead table
+//! hypar heat --steps 100          # heat-diffusion example workload
+//! hypar cg --n 512                # conjugate-gradient extension
+//! hypar artifacts                 # list AOT artifacts
+//! hypar config --dump             # print the default topology JSON
+//! ```
+
+use std::process::ExitCode;
+
+use hypar::prelude::*;
+use hypar::solvers::{self, heat::HeatConfig, jacobi_fw, jacobi_mpi, JacobiConfig, KernelPath};
+use hypar::util::cli::{usage, Args, Spec};
+use hypar::util::json::Json;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        eprint!("{}", top_usage());
+        return ExitCode::FAILURE;
+    };
+    let rest = &argv[1..];
+    let result = match cmd {
+        "run" => cmd_run(rest),
+        "fig3" => cmd_fig3(rest),
+        "overhead" => cmd_overhead(rest),
+        "heat" => cmd_heat(rest),
+        "cg" => cmd_cg(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "config" => cmd_config(rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", top_usage());
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}\n\n{}", top_usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn top_usage() -> String {
+    "hypar — hybrid parallelisation framework \
+     (Mundani/Ljucovic/Rank, DOI 10.4203/ccp.95.53)\n\n\
+     subcommands:\n\
+     \x20 run <script.job>   run a job script against the demo registry\n\
+     \x20 fig3               one Figure-3 panel (framework vs tailored MPI)\n\
+     \x20 overhead           aggregate overhead table (paper: ~10 % mean)\n\
+     \x20 heat               heat-diffusion simulation via the framework\n\
+     \x20 cg                 distributed conjugate gradient\n\
+     \x20 artifacts          list AOT artifacts\n\
+     \x20 config             print/validate topology config\n\
+     \x20 help               this text\n"
+        .to_string()
+}
+
+fn parse_kernel(s: &str) -> Result<KernelPath, String> {
+    match s {
+        "rust" => Ok(KernelPath::Rust),
+        "ref" => Ok(KernelPath::EngineRef),
+        "pallas" => Ok(KernelPath::EnginePallas),
+        other => Err(format!("unknown kernel path {other:?} (rust|ref|pallas)")),
+    }
+}
+
+fn err_str(e: impl std::fmt::Display) -> String {
+    e.to_string()
+}
+
+// ---------------------------------------------------------------- run
+
+const RUN_SPECS: &[Spec] = &[
+    Spec { name: "topo", help: "topology config JSON file", switch: false },
+    Spec { name: "show-results", help: "print final-segment results", switch: true },
+    Spec { name: "trace", help: "render a per-worker execution timeline", switch: true },
+    Spec { name: "metrics-json", help: "print metrics as one JSON object", switch: true },
+];
+
+fn cmd_run(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, RUN_SPECS).map_err(err_str)?;
+    let Some(script_path) = args.positional().first() else {
+        return Err(usage("run <script.job>", "Run a job script.", RUN_SPECS));
+    };
+    let text = std::fs::read_to_string(script_path)
+        .map_err(|e| format!("reading {script_path:?}: {e}"))?;
+    let algo = Algorithm::parse(&text).map_err(err_str)?;
+    let cfg = match args.get("topo") {
+        Some(p) => TopologyConfig::from_json_file(p).map_err(err_str)?,
+        None => TopologyConfig::default(),
+    };
+    let fw = Framework::builder()
+        .config(cfg)
+        .registry(hypar::job::registry::demo_registry())
+        .build()
+        .map_err(err_str)?;
+    let report = fw.run(algo).map_err(err_str)?;
+    println!(
+        "ok: {} jobs, {} injected, {} workers, wall {:.3} ms, comm {} msgs / {} B",
+        report.metrics.jobs_executed,
+        report.metrics.jobs_injected,
+        report.metrics.workers_spawned,
+        report.metrics.wall_time_us as f64 / 1_000.0,
+        report.metrics.comm_msgs,
+        report.metrics.comm_bytes,
+    );
+    if args.bool("trace") {
+        print!("{}", report.metrics.render_timeline(72));
+    }
+    if args.bool("metrics-json") {
+        println!("{}", report.metrics.to_json().to_string());
+    }
+    if args.bool("show-results") {
+        for (id, data) in &report.results {
+            println!("{id}: {data:?}");
+            for (i, c) in data.chunks().iter().enumerate() {
+                if let Ok(v) = c.as_f32() {
+                    let head: Vec<f32> = v.iter().take(8).copied().collect();
+                    println!("  chunk {i}: f32 x{} {head:?}", v.len());
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- fig3
+
+const FIG3_SPECS: &[Spec] = &[
+    Spec { name: "size", help: "matrix size (paper: 2709|4209|7209)", switch: false },
+    Spec { name: "procs", help: "comma-separated worker counts (default 1,2,4,8)", switch: false },
+    Spec { name: "iters", help: "Jacobi iterations (paper: 500)", switch: false },
+    Spec { name: "kernel", help: "rust | ref | pallas", switch: false },
+    Spec { name: "artifacts", help: "artifact directory", switch: false },
+    Spec { name: "json", help: "emit one JSON row per config", switch: true },
+];
+
+struct Fig3Row {
+    size: usize,
+    procs: usize,
+    iters: usize,
+    kernel: KernelPath,
+    fw_ms: f64,
+    mpi_ms: f64,
+    overhead_pct: f64,
+    fw_comm_bytes: u64,
+    mpi_comm_bytes: u64,
+    residual_fw: f64,
+    residual_mpi: f64,
+}
+
+impl Fig3Row {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("size", Json::num(self.size as f64)),
+            ("procs", Json::num(self.procs as f64)),
+            ("iters", Json::num(self.iters as f64)),
+            ("kernel", Json::str(format!("{:?}", self.kernel))),
+            ("fw_ms", Json::num(self.fw_ms)),
+            ("mpi_ms", Json::num(self.mpi_ms)),
+            ("overhead_pct", Json::num(self.overhead_pct)),
+            ("fw_comm_bytes", Json::num(self.fw_comm_bytes as f64)),
+            ("mpi_comm_bytes", Json::num(self.mpi_comm_bytes as f64)),
+            ("residual_fw", Json::num(self.residual_fw)),
+            ("residual_mpi", Json::num(self.residual_mpi)),
+        ])
+    }
+}
+
+fn fig3_row(
+    size: usize,
+    procs: usize,
+    iters: usize,
+    kernel: KernelPath,
+    artifacts: &str,
+) -> Result<Fig3Row, String> {
+    let cfg = JacobiConfig::new(size, procs, iters)
+        .with_kernel(kernel)
+        .with_artifacts(artifacts);
+    let (fw_out, _metrics) =
+        jacobi_fw::run(&cfg, &jacobi_fw::FwTopology::default()).map_err(err_str)?;
+    let mpi_out = jacobi_mpi::run(&cfg).map_err(err_str)?;
+    let fw_ms = fw_out.wall.as_secs_f64() * 1e3;
+    let mpi_ms = mpi_out.wall.as_secs_f64() * 1e3;
+    Ok(Fig3Row {
+        size,
+        procs,
+        iters,
+        kernel,
+        fw_ms,
+        mpi_ms,
+        overhead_pct: (fw_ms / mpi_ms - 1.0) * 100.0,
+        fw_comm_bytes: fw_out.comm.bytes,
+        mpi_comm_bytes: mpi_out.comm.bytes,
+        residual_fw: fw_out.res_norm,
+        residual_mpi: mpi_out.res_norm,
+    })
+}
+
+fn cmd_fig3(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, FIG3_SPECS).map_err(err_str)?;
+    let size = args.usize_or("size", 2709).map_err(err_str)?;
+    let procs = args.usize_list_or("procs", &[1, 2, 4, 8]).map_err(err_str)?;
+    let iters = args.usize_or("iters", 500).map_err(err_str)?;
+    let kernel = parse_kernel(&args.str_or("kernel", "rust"))?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let json = args.bool("json");
+    if !json {
+        println!("Figure 3 ({size} x {size}, {iters} iterations, kernel {kernel:?})");
+        println!(
+            "{:>6} {:>12} {:>12} {:>10} {:>14} {:>14}",
+            "procs", "fw [ms]", "mpi [ms]", "overhead", "fw comm [B]", "mpi comm [B]"
+        );
+    }
+    for p in procs {
+        let row = fig3_row(size, p, iters, kernel, &artifacts)?;
+        if json {
+            println!("{}", row.to_json().to_string());
+        } else {
+            println!(
+                "{:>6} {:>12.2} {:>12.2} {:>9.1}% {:>14} {:>14}",
+                row.procs,
+                row.fw_ms,
+                row.mpi_ms,
+                row.overhead_pct,
+                row.fw_comm_bytes,
+                row.mpi_comm_bytes
+            );
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- overhead
+
+const OVERHEAD_SPECS: &[Spec] = &[
+    Spec { name: "sizes", help: "comma-separated sizes", switch: false },
+    Spec { name: "procs", help: "comma-separated worker counts", switch: false },
+    Spec { name: "iters", help: "Jacobi iterations", switch: false },
+    Spec { name: "kernel", help: "rust | ref | pallas", switch: false },
+    Spec { name: "artifacts", help: "artifact directory", switch: false },
+];
+
+fn cmd_overhead(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, OVERHEAD_SPECS).map_err(err_str)?;
+    let sizes = args.usize_list_or("sizes", &[512, 1024]).map_err(err_str)?;
+    let procs = args.usize_list_or("procs", &[2, 4]).map_err(err_str)?;
+    let iters = args.usize_or("iters", 100).map_err(err_str)?;
+    let kernel = parse_kernel(&args.str_or("kernel", "rust"))?;
+    let artifacts = args.str_or("artifacts", "artifacts");
+
+    let mut overheads = Vec::new();
+    println!(
+        "{:>7} {:>6} {:>12} {:>12} {:>10}",
+        "size", "procs", "fw [ms]", "mpi [ms]", "overhead"
+    );
+    for &size in &sizes {
+        for &p in &procs {
+            let row = fig3_row(size, p, iters, kernel, &artifacts)?;
+            println!(
+                "{:>7} {:>6} {:>12.2} {:>12.2} {:>9.1}%",
+                size, p, row.fw_ms, row.mpi_ms, row.overhead_pct
+            );
+            overheads.push(row.overhead_pct);
+        }
+    }
+    let mean = overheads.iter().sum::<f64>() / overheads.len().max(1) as f64;
+    let min = overheads.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = overheads.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "mean overhead {mean:.1}%  (min {min:.1}%, max {max:.1}%)  — paper reports ~10% mean"
+    );
+    Ok(())
+}
+
+// ----------------------------------------------------------------- heat
+
+const HEAT_SPECS: &[Spec] = &[
+    Spec { name: "h", help: "interior rows (default 128)", switch: false },
+    Spec { name: "w", help: "columns (default 256)", switch: false },
+    Spec { name: "strips", help: "strip count (default 4)", switch: false },
+    Spec { name: "steps", help: "time steps (default 100)", switch: false },
+    Spec { name: "kernel", help: "rust | ref | pallas", switch: false },
+    Spec { name: "artifacts", help: "artifact directory", switch: false },
+];
+
+fn cmd_heat(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, HEAT_SPECS).map_err(err_str)?;
+    let h = args.usize_or("h", 128).map_err(err_str)?;
+    let w = args.usize_or("w", 256).map_err(err_str)?;
+    let strips = args.usize_or("strips", 4).map_err(err_str)?;
+    let steps = args.usize_or("steps", 100).map_err(err_str)?;
+    let mut cfg = HeatConfig::new(h, w, strips, steps)
+        .with_kernel(parse_kernel(&args.str_or("kernel", "rust"))?);
+    cfg.artifact_dir = args.str_or("artifacts", "artifacts").into();
+    let t0 = std::time::Instant::now();
+    let (field, metrics) = solvers::heat::run(&cfg, 2).map_err(err_str)?;
+    let wall = t0.elapsed();
+    let total: f64 = field.iter().map(|v| *v as f64).sum();
+    let peak = field.iter().cloned().fold(f32::MIN, f32::max);
+    println!(
+        "heat {h}x{w}, {strips} strips, {steps} steps: wall {:.2} ms, {} jobs, peak T {:.2}, total heat {:.1}",
+        wall.as_secs_f64() * 1e3,
+        metrics.jobs_executed,
+        peak,
+        total
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------------- cg
+
+const CG_SPECS: &[Spec] = &[
+    Spec { name: "n", help: "system size (default 512)", switch: false },
+    Spec { name: "procs", help: "ranks (default 4)", switch: false },
+    Spec { name: "tol", help: "residual tolerance (default 1e-6)", switch: false },
+];
+
+fn cmd_cg(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, CG_SPECS).map_err(err_str)?;
+    let n = args.usize_or("n", 512).map_err(err_str)?;
+    let procs = args.usize_or("procs", 4).map_err(err_str)?;
+    let tol = args.f64_or("tol", 1e-6).map_err(err_str)?;
+    let cfg = JacobiConfig::new(n, procs, 10 * n);
+    let out = solvers::cg::run(&cfg, tol).map_err(err_str)?;
+    println!(
+        "cg n={n} p={procs}: {} iterations, residual {:.3e}, wall {:.2} ms, comm {} B",
+        out.iters,
+        out.res_norm,
+        out.wall.as_secs_f64() * 1e3,
+        out.comm.bytes
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------ artifacts
+
+const ART_SPECS: &[Spec] =
+    &[Spec { name: "dir", help: "artifact directory", switch: false }];
+
+fn cmd_artifacts(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, ART_SPECS).map_err(err_str)?;
+    let dir = args.str_or("dir", "artifacts");
+    let m = Manifest::load(&dir).map_err(err_str)?;
+    println!("{} artifacts under {dir:?} (block_n = {})", m.artifacts.len(), m.block_n);
+    for (name, e) in &m.artifacts {
+        let ins: Vec<String> = e.inputs.iter().map(|s| format!("{:?}", s.shape)).collect();
+        println!(
+            "  {name}: {} {} {} -> {} outputs",
+            e.kind,
+            e.variant,
+            ins.join(" "),
+            e.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------- config
+
+const CFG_SPECS: &[Spec] = &[
+    Spec { name: "dump", help: "print the default config JSON", switch: true },
+    Spec { name: "check", help: "validate a config file", switch: false },
+];
+
+fn cmd_config(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, CFG_SPECS).map_err(err_str)?;
+    if let Some(path) = args.get("check") {
+        let cfg = TopologyConfig::from_json_file(path).map_err(err_str)?;
+        println!(
+            "ok: {path:?} valid ({} schedulers, {} workers max)",
+            cfg.schedulers,
+            cfg.max_workers()
+        );
+        return Ok(());
+    }
+    if args.bool("dump") {
+        println!("{}", TopologyConfig::default().to_json());
+        return Ok(());
+    }
+    Err(usage(
+        "config",
+        "Print or validate topology configuration.",
+        CFG_SPECS,
+    ))
+}

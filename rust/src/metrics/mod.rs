@@ -1,0 +1,346 @@
+//! Run metrics: per-job and per-segment timings, queue delays, traffic.
+//!
+//! The master scheduler owns a [`MetricsCollector`]; events are recorded by
+//! the scheduler threads (job assigned / started / finished, segment
+//! opened / closed) and folded into a [`MetricsSnapshot`] that benchmark
+//! harnesses serialise next to their timing rows.  The headline derived
+//! quantity is **scheduling overhead**: wall time minus the critical-path
+//! compute time, the quantity the paper's "~10 % from tailored MPI" claim
+//! is about.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::comm::StatsSnapshot;
+use crate::job::JobId;
+
+/// Lifecycle timestamps of one job (all relative to run start).
+#[derive(Debug, Clone, Default)]
+pub struct JobTimes {
+    /// Master put it on a scheduler (µs since run start).
+    pub assigned_us: u64,
+    /// Worker began executing (µs).
+    pub started_us: u64,
+    /// Worker finished (µs).
+    pub finished_us: u64,
+    /// Bytes of input shipped to the worker (0 if served from local cache).
+    pub input_bytes: u64,
+    /// Bytes of output shipped back (0 under keep-results).
+    pub output_bytes: u64,
+    /// Worker rank that executed it.
+    pub worker: u32,
+}
+
+impl JobTimes {
+    /// Time spent queued + in transit before execution.
+    pub fn dispatch_latency(&self) -> Duration {
+        Duration::from_micros(self.started_us.saturating_sub(self.assigned_us))
+    }
+
+    /// Pure execution time.
+    pub fn exec_time(&self) -> Duration {
+        Duration::from_micros(self.finished_us.saturating_sub(self.started_us))
+    }
+}
+
+/// One segment's span and job population.
+#[derive(Debug, Clone, Default)]
+pub struct SegmentTimes {
+    pub opened_us: u64,
+    pub closed_us: u64,
+    pub jobs: usize,
+    /// Jobs injected into this segment at runtime (dynamic job creation).
+    pub injected: usize,
+}
+
+/// Aggregated, serialisable view of one run.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub wall_time_us: u64,
+    pub segments: Vec<SegmentTimes>,
+    pub jobs: HashMap<u32, JobTimes>,
+    pub comm_msgs: u64,
+    pub comm_bytes: u64,
+    pub modelled_comm_us: u64,
+    pub jobs_executed: usize,
+    pub jobs_injected: usize,
+    pub workers_spawned: usize,
+    pub recomputed_jobs: usize,
+}
+
+impl MetricsSnapshot {
+    /// Sum of all job execution times (the "work" in the overhead ratio).
+    pub fn total_exec_time(&self) -> Duration {
+        self.jobs.values().map(|j| j.exec_time()).sum()
+    }
+
+    /// Mean dispatch latency (assignment -> execution start).
+    pub fn mean_dispatch_latency(&self) -> Duration {
+        if self.jobs.is_empty() {
+            return Duration::ZERO;
+        }
+        self.jobs
+            .values()
+            .map(|j| j.dispatch_latency())
+            .sum::<Duration>()
+            / self.jobs.len() as u32
+    }
+
+    /// Wall time not explained by the per-worker serialised compute:
+    /// `wall - total_exec/workers` (coarse but comparable across configs).
+    pub fn scheduling_overhead(&self) -> Duration {
+        let workers = self.workers_spawned.max(1) as u32;
+        let ideal = self.total_exec_time() / workers;
+        Duration::from_micros(self.wall_time_us).saturating_sub(ideal)
+    }
+
+    /// Serialise for bench harnesses / monitoring pipelines.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("wall_time_us", Json::num(self.wall_time_us as f64)),
+            ("jobs_executed", Json::num(self.jobs_executed as f64)),
+            ("jobs_injected", Json::num(self.jobs_injected as f64)),
+            ("workers_spawned", Json::num(self.workers_spawned as f64)),
+            ("recomputed_jobs", Json::num(self.recomputed_jobs as f64)),
+            ("comm_msgs", Json::num(self.comm_msgs as f64)),
+            ("comm_bytes", Json::num(self.comm_bytes as f64)),
+            ("modelled_comm_us", Json::num(self.modelled_comm_us as f64)),
+            ("segments", Json::num(self.segments.len() as f64)),
+            (
+                "mean_dispatch_latency_us",
+                Json::num(self.mean_dispatch_latency().as_micros() as f64),
+            ),
+            (
+                "total_exec_us",
+                Json::num(self.total_exec_time().as_micros() as f64),
+            ),
+        ])
+    }
+
+    /// ASCII per-worker timeline (the paper's "basic monitoring"
+    /// future-work item): one row per worker, one cell per time bucket,
+    /// `#` = executing, `.` = idle. `width` = number of buckets.
+    pub fn render_timeline(&self, width: usize) -> String {
+        if self.jobs.is_empty() || self.wall_time_us == 0 {
+            return String::from("(no jobs recorded)\n");
+        }
+        let width = width.clamp(10, 400);
+        let scale = |t: u64| -> usize {
+            ((t as u128 * width as u128) / self.wall_time_us.max(1) as u128) as usize
+        };
+        let mut workers: Vec<u32> = self.jobs.values().map(|j| j.worker).collect();
+        workers.sort_unstable();
+        workers.dedup();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "timeline: {} buckets over {:.2} ms, {} workers, {} jobs\n",
+            width,
+            self.wall_time_us as f64 / 1e3,
+            workers.len(),
+            self.jobs.len()
+        ));
+        for w in workers {
+            let mut row = vec!['.'; width];
+            let mut jobs_here = 0usize;
+            for j in self.jobs.values().filter(|j| j.worker == w) {
+                jobs_here += 1;
+                let lo = scale(j.started_us).min(width - 1);
+                let hi = scale(j.finished_us).clamp(lo + 1, width);
+                for cell in row.iter_mut().take(hi).skip(lo) {
+                    *cell = '#';
+                }
+            }
+            out.push_str(&format!(
+                "  w{:<4} |{}| {} jobs\n",
+                w,
+                row.iter().collect::<String>(),
+                jobs_here
+            ));
+        }
+        out
+    }
+}
+
+/// Thread-safe event sink. One per run, owned by the framework.
+#[derive(Debug)]
+pub struct MetricsCollector {
+    start: Instant,
+    inner: Mutex<MetricsSnapshot>,
+}
+
+impl Default for MetricsCollector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        MetricsCollector { start: Instant::now(), inner: Mutex::new(MetricsSnapshot::default()) }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut MetricsSnapshot) -> R) -> R {
+        f(&mut self.inner.lock().expect("metrics lock poisoned"))
+    }
+
+    pub fn job_assigned(&self, job: JobId, input_bytes: u64) {
+        let t = self.now_us();
+        self.with(|m| {
+            let e = m.jobs.entry(job.0).or_default();
+            e.assigned_us = t;
+            e.input_bytes = input_bytes;
+        });
+    }
+
+    pub fn job_started(&self, job: JobId, worker: u32) {
+        let t = self.now_us();
+        self.with(|m| {
+            let e = m.jobs.entry(job.0).or_default();
+            e.started_us = t;
+            e.worker = worker;
+        });
+    }
+
+    pub fn job_finished(&self, job: JobId, output_bytes: u64) {
+        let t = self.now_us();
+        self.with(|m| {
+            let e = m.jobs.entry(job.0).or_default();
+            e.finished_us = t;
+            e.output_bytes = output_bytes;
+            m.jobs_executed += 1;
+        });
+    }
+
+    pub fn segment_opened(&self, jobs: usize) {
+        let t = self.now_us();
+        self.with(|m| {
+            m.segments.push(SegmentTimes { opened_us: t, jobs, ..Default::default() })
+        });
+    }
+
+    pub fn segment_closed(&self) {
+        let t = self.now_us();
+        self.with(|m| {
+            if let Some(s) = m.segments.last_mut() {
+                s.closed_us = t;
+            }
+        });
+    }
+
+    pub fn jobs_injected(&self, count: usize) {
+        self.with(|m| {
+            m.jobs_injected += count;
+            if let Some(s) = m.segments.last_mut() {
+                s.injected += count;
+            }
+        });
+    }
+
+    pub fn worker_spawned(&self) {
+        self.with(|m| m.workers_spawned += 1);
+    }
+
+    pub fn job_recomputed(&self) {
+        self.with(|m| m.recomputed_jobs += 1);
+    }
+
+    /// Fold in the comm totals and wall time, producing the final snapshot.
+    pub fn finish(&self, comm: StatsSnapshot) -> MetricsSnapshot {
+        let wall = self.now_us();
+        self.with(|m| {
+            m.wall_time_us = wall;
+            m.comm_msgs = comm.msgs;
+            m.comm_bytes = comm.bytes;
+            m.modelled_comm_us = comm.modelled_comm_ns / 1_000;
+            m.clone()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_ordering() {
+        let c = MetricsCollector::new();
+        c.segment_opened(2);
+        c.job_assigned(JobId(1), 100);
+        c.job_started(JobId(1), 5);
+        std::thread::sleep(Duration::from_millis(2));
+        c.job_finished(JobId(1), 10);
+        c.segment_closed();
+        let snap = c.finish(StatsSnapshot { msgs: 3, bytes: 42, modelled_comm_ns: 1000 });
+        assert_eq!(snap.jobs_executed, 1);
+        assert_eq!(snap.comm_msgs, 3);
+        let j = &snap.jobs[&1];
+        assert!(j.finished_us >= j.started_us);
+        assert!(j.exec_time() >= Duration::from_millis(2));
+        assert_eq!(snap.segments.len(), 1);
+        assert!(snap.segments[0].closed_us >= snap.segments[0].opened_us);
+    }
+
+    #[test]
+    fn injection_counts_attach_to_open_segment() {
+        let c = MetricsCollector::new();
+        c.segment_opened(1);
+        c.jobs_injected(3);
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        assert_eq!(snap.jobs_injected, 3);
+        assert_eq!(snap.segments[0].injected, 3);
+    }
+
+    #[test]
+    fn overhead_never_negative() {
+        let c = MetricsCollector::new();
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        let _ = snap.scheduling_overhead(); // must not panic/underflow
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let c = MetricsCollector::new();
+        c.segment_opened(1);
+        c.job_assigned(JobId(1), 0);
+        c.job_started(JobId(1), 3);
+        c.job_finished(JobId(1), 8);
+        c.segment_closed();
+        let snap = c.finish(StatsSnapshot { msgs: 2, bytes: 64, modelled_comm_ns: 0 });
+        let text = snap.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("jobs_executed").unwrap().as_usize(), Some(1));
+        assert_eq!(back.get("comm_bytes").unwrap().as_usize(), Some(64));
+    }
+
+    #[test]
+    fn timeline_renders_worker_rows() {
+        let c = MetricsCollector::new();
+        c.segment_opened(2);
+        for (id, worker) in [(1u32, 5u32), (2, 6)] {
+            c.job_assigned(JobId(id), 0);
+            c.job_started(JobId(id), worker);
+            std::thread::sleep(Duration::from_millis(1));
+            c.job_finished(JobId(id), 0);
+        }
+        c.segment_closed();
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        let t = snap.render_timeline(40);
+        assert!(t.contains("w5"));
+        assert!(t.contains("w6"));
+        assert!(t.contains('#'));
+        assert!(t.contains("2 workers"));
+    }
+
+    #[test]
+    fn timeline_empty_run() {
+        let c = MetricsCollector::new();
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        assert!(snap.render_timeline(40).contains("no jobs"));
+    }
+}

@@ -1,0 +1,216 @@
+//! `DataChunk` ⇄ `xla::Literal` conversion, validated against the manifest.
+
+use super::manifest::ArtifactEntry;
+use crate::data::{DataChunk, Dtype};
+use crate::error::{Error, Result};
+
+fn input_err(name: &str, index: usize, msg: impl Into<String>) -> Error {
+    Error::ArtifactInput { name: name.to_string(), index, msg: msg.into() }
+}
+
+/// Validate arity, dtypes and element counts of a feed against the
+/// manifest entry (shared by the literal and device-buffer paths).
+pub fn validate_inputs(
+    name: &str,
+    entry: &ArtifactEntry,
+    inputs: &[DataChunk],
+) -> Result<()> {
+    if inputs.len() != entry.inputs.len() {
+        return Err(Error::ArtifactArity {
+            name: name.to_string(),
+            expected: entry.inputs.len(),
+            got: inputs.len(),
+        });
+    }
+    for (i, (chunk, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+        let want_dtype = spec.chunk_dtype()?;
+        if chunk.dtype() != want_dtype {
+            return Err(input_err(
+                name,
+                i,
+                format!("dtype {} but artifact wants {}", chunk.dtype(), want_dtype),
+            ));
+        }
+        if chunk.len() != spec.element_count() {
+            return Err(input_err(
+                name,
+                i,
+                format!(
+                    "{} elements but artifact shape {:?} needs {}",
+                    chunk.len(),
+                    spec.shape,
+                    spec.element_count()
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Convert the input chunks to literals with the shapes the artifact was
+/// lowered for.  Scalars (`shape: []`) become rank-0 literals; everything
+/// else is a flat buffer reshaped to the manifest shape (row-major, which
+/// matches both `Matrix` and numpy's default layout).
+pub fn chunks_to_literals(
+    name: &str,
+    entry: &ArtifactEntry,
+    inputs: &[DataChunk],
+) -> Result<Vec<xla::Literal>> {
+    validate_inputs(name, entry, inputs)?;
+    let mut lits = Vec::with_capacity(inputs.len());
+    for (i, (chunk, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+        let want_dtype = spec.chunk_dtype()?;
+        let lit = match want_dtype {
+            Dtype::F32 => {
+                let s = chunk.as_f32()?;
+                if spec.shape.is_empty() {
+                    xla::Literal::scalar(s[0])
+                } else {
+                    reshape(xla::Literal::vec1(s), &spec.shape)?
+                }
+            }
+            Dtype::F64 => {
+                let s = chunk.as_f64()?;
+                if spec.shape.is_empty() {
+                    xla::Literal::scalar(s[0])
+                } else {
+                    reshape(xla::Literal::vec1(s), &spec.shape)?
+                }
+            }
+            Dtype::I32 => {
+                let s = chunk.as_i32()?;
+                if spec.shape.is_empty() {
+                    xla::Literal::scalar(s[0])
+                } else {
+                    reshape(xla::Literal::vec1(s), &spec.shape)?
+                }
+            }
+            Dtype::I64 => {
+                let s = chunk.as_i64()?;
+                if spec.shape.is_empty() {
+                    xla::Literal::scalar(s[0])
+                } else {
+                    reshape(xla::Literal::vec1(s), &spec.shape)?
+                }
+            }
+            Dtype::U8 => {
+                return Err(input_err(name, i, "u8 feeds are not supported by artifacts"))
+            }
+        };
+        lits.push(lit);
+    }
+    Ok(lits)
+}
+
+fn reshape(lit: xla::Literal, shape: &[usize]) -> Result<xla::Literal> {
+    if shape.len() == 1 {
+        return Ok(lit); // already rank 1 of the right length
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(Error::from)
+}
+
+/// Decompose the result tuple into output chunks (flattened row-major).
+pub fn tuple_to_chunks(
+    name: &str,
+    entry: &ArtifactEntry,
+    result: xla::Literal,
+) -> Result<Vec<DataChunk>> {
+    let parts = result.to_tuple()?;
+    if parts.len() != entry.outputs.len() {
+        return Err(Error::ArtifactArity {
+            name: name.to_string(),
+            expected: entry.outputs.len(),
+            got: parts.len(),
+        });
+    }
+    let mut out = Vec::with_capacity(parts.len());
+    for (lit, spec) in parts.into_iter().zip(&entry.outputs) {
+        let chunk = match spec.chunk_dtype()? {
+            Dtype::F32 => DataChunk::from_f32(lit.to_vec::<f32>()?),
+            Dtype::F64 => DataChunk::from_f64(lit.to_vec::<f64>()?),
+            Dtype::I32 => DataChunk::from_i32(lit.to_vec::<i32>()?),
+            Dtype::I64 => DataChunk::from_i64(lit.to_vec::<i64>()?),
+            Dtype::U8 => {
+                return Err(Error::Manifest(format!(
+                    "artifact {name} declares unsupported u8 output"
+                )))
+            }
+        };
+        out.push(chunk);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::IoSpec;
+    use std::collections::BTreeMap;
+
+    fn entry(inputs: Vec<IoSpec>, outputs: Vec<IoSpec>) -> ArtifactEntry {
+        ArtifactEntry {
+            file: "x.hlo.txt".into(),
+            kind: "test".into(),
+            variant: "ref".into(),
+            params: BTreeMap::new(),
+            inputs,
+            outputs,
+        }
+    }
+
+    fn spec(shape: &[usize], dtype: &str) -> IoSpec {
+        IoSpec { shape: shape.to_vec(), dtype: dtype.into() }
+    }
+
+    #[test]
+    fn arity_checked() {
+        let e = entry(vec![spec(&[2], "float32")], vec![]);
+        let err = match chunks_to_literals("t", &e, &[]) {
+            Err(e) => e,
+            Ok(_) => panic!("expected arity error"),
+        };
+        assert!(matches!(err, Error::ArtifactArity { expected: 1, got: 0, .. }));
+    }
+
+    #[test]
+    fn dtype_checked() {
+        let e = entry(vec![spec(&[2], "float32")], vec![]);
+        let err = match chunks_to_literals("t", &e, &[DataChunk::from_i32(vec![1, 2])]) {
+            Err(e) => e,
+            Ok(_) => panic!("expected dtype error"),
+        };
+        assert!(matches!(err, Error::ArtifactInput { .. }));
+    }
+
+    #[test]
+    fn element_count_checked() {
+        let e = entry(vec![spec(&[2, 3], "float32")], vec![]);
+        let err = match chunks_to_literals("t", &e, &[DataChunk::from_f32(vec![0.0; 5])]) {
+            Err(e) => e,
+            Ok(_) => panic!("expected element-count error"),
+        };
+        assert!(matches!(err, Error::ArtifactInput { index: 0, .. }));
+    }
+
+    #[test]
+    fn scalar_and_matrix_literals() {
+        let e = entry(
+            vec![spec(&[2, 2], "float32"), spec(&[], "int32")],
+            vec![],
+        );
+        let lits = chunks_to_literals(
+            "t",
+            &e,
+            &[
+                DataChunk::from_f32(vec![1.0, 2.0, 3.0, 4.0]),
+                DataChunk::scalar_i32(7),
+            ],
+        )
+        .unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(lits[0].element_count(), 4);
+        assert_eq!(lits[1].element_count(), 1);
+        assert_eq!(lits[1].get_first_element::<i32>().unwrap(), 7);
+    }
+}

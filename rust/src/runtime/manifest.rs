@@ -1,0 +1,305 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime.  Each entry records the HLO file plus fully
+//! resolved input/output shapes and dtypes, so feeds are type-checked
+//! before ever reaching PJRT.  Parsed with the in-tree JSON parser
+//! ([`crate::util::json`]).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::data::Dtype;
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// numpy dtype string → our [`Dtype`].
+    pub fn chunk_dtype(&self) -> Result<Dtype> {
+        match self.dtype.as_str() {
+            "float32" => Ok(Dtype::F32),
+            "float64" => Ok(Dtype::F64),
+            "int32" => Ok(Dtype::I32),
+            "int64" => Ok(Dtype::I64),
+            "uint8" => Ok(Dtype::U8),
+            other => Err(Error::Manifest(format!("unsupported dtype {other:?}"))),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Manifest("io spec missing shape".into()))?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| Error::Manifest("bad shape dim".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Manifest("io spec missing dtype".into()))?
+            .to_string();
+        Ok(IoSpec { shape, dtype })
+    }
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    /// Family: `jacobi_block`, `jacobi_full`, `heat_strip`, `dot_block`,
+    /// `axpy_block`, `matvec_block`.
+    pub kind: String,
+    /// `pallas` (L1 kernels) or `ref` (pure-jnp lowering).
+    pub variant: String,
+    /// Family-specific integer parameters (`n`, `bm`, `rows`, `w`, ...).
+    pub params: BTreeMap<String, i64>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactEntry {
+    fn from_json(name: &str, v: &Json) -> Result<Self> {
+        let field = |key: &str| -> Result<&Json> {
+            v.get(key).ok_or_else(|| {
+                Error::Manifest(format!("artifact {name} missing field {key:?}"))
+            })
+        };
+        let str_field = |key: &str| -> Result<String> {
+            field(key)?
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| Error::Manifest(format!("artifact {name}: {key} not a string")))
+        };
+        let io_list = |key: &str| -> Result<Vec<IoSpec>> {
+            field(key)?
+                .as_arr()
+                .ok_or_else(|| Error::Manifest(format!("artifact {name}: {key} not an array")))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect()
+        };
+        let mut params = BTreeMap::new();
+        if let Some(pv) = v.get("params") {
+            for (k, val) in pv.entries().unwrap_or(&[]) {
+                if let Some(i) = val.as_i64() {
+                    params.insert(k.clone(), i);
+                }
+            }
+        }
+        Ok(ArtifactEntry {
+            file: str_field("file")?,
+            kind: str_field("kind")?,
+            variant: str_field("variant")?,
+            params,
+            inputs: io_list("inputs")?,
+            outputs: io_list("outputs")?,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub block_n: usize,
+    /// Paper size → padded size (`"2709" -> 2816`, Figure-3 configs).
+    pub paper_sizes: BTreeMap<String, usize>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {path:?}: {e}. Run `make artifacts` first."
+            ))
+        })?;
+        Self::from_json_text(&text)
+    }
+
+    /// Parse manifest JSON.
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let doc = json::parse(text).map_err(|e| Error::Manifest(e.to_string()))?;
+        let block_n = doc
+            .get("block_n")
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        let mut paper_sizes = BTreeMap::new();
+        if let Some(ps) = doc.get("paper_sizes") {
+            for (k, v) in ps.entries().unwrap_or(&[]) {
+                if let Some(n) = v.as_usize() {
+                    paper_sizes.insert(k.clone(), n);
+                }
+            }
+        }
+        let mut artifacts = BTreeMap::new();
+        if let Some(arts) = doc.get("artifacts") {
+            for (name, v) in arts.entries().unwrap_or(&[]) {
+                artifacts.insert(name.clone(), ArtifactEntry::from_json(name, v)?);
+            }
+        }
+        Ok(Manifest { block_n, paper_sizes, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::UnknownArtifact(name.to_string()))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(String::as_str)
+    }
+
+    /// First artifact matching `(kind, variant)` and all `params` —
+    /// the config-driven lookup the solvers use.
+    pub fn find(
+        &self,
+        kind: &str,
+        variant: &str,
+        params: &[(&str, i64)],
+    ) -> Result<(&str, &ArtifactEntry)> {
+        self.artifacts
+            .iter()
+            .find(|(_, e)| {
+                e.kind == kind
+                    && e.variant == variant
+                    && params
+                        .iter()
+                        .all(|(k, v)| e.params.get(*k).copied() == Some(*v))
+            })
+            .map(|(n, e)| (n.as_str(), e))
+            .ok_or_else(|| {
+                Error::UnknownArtifact(format!(
+                    "{kind}/{variant} with {params:?} (run `make artifacts`?)"
+                ))
+            })
+    }
+
+    /// Jacobi block-step artifact for a padded size `n` and block rows `bm`.
+    pub fn jacobi_block(&self, variant: &str, n: usize, bm: usize) -> Result<&str> {
+        self.find("jacobi_block", variant, &[("n", n as i64), ("bm", bm as i64)])
+            .map(|(name, _)| name)
+    }
+
+    /// Heat strip artifact for `(rows, w)`.
+    pub fn heat_strip(&self, variant: &str, rows: usize, w: usize) -> Result<&str> {
+        self.find("heat_strip", variant, &[("rows", rows as i64), ("w", w as i64)])
+            .map(|(name, _)| name)
+    }
+
+    /// Padded size for a paper size (2709 → 2816 etc.); identity for sizes
+    /// already divisible by `block_n`.
+    pub fn padded_size(&self, paper_n: usize) -> usize {
+        self.paper_sizes
+            .get(&paper_n.to_string())
+            .copied()
+            .unwrap_or_else(|| {
+                if self.block_n == 0 {
+                    paper_n
+                } else {
+                    paper_n.div_ceil(self.block_n) * self.block_n
+                }
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::from_json_text(
+            r#"{
+                "block_n": 256,
+                "paper_sizes": {"2709": 2816},
+                "artifacts": {
+                    "jacobi_block_ref_n512_bm256": {
+                        "file": "a.hlo.txt",
+                        "kind": "jacobi_block",
+                        "variant": "ref",
+                        "params": {"n": 512, "bm": 256, "block_n": 256},
+                        "inputs": [
+                            {"shape": [256, 512], "dtype": "float32"},
+                            {"shape": [512], "dtype": "float32"},
+                            {"shape": [256], "dtype": "float32"},
+                            {"shape": [256], "dtype": "float32"},
+                            {"shape": [], "dtype": "int32"}
+                        ],
+                        "outputs": [
+                            {"shape": [256], "dtype": "float32"},
+                            {"shape": [1], "dtype": "float32"}
+                        ]
+                    }
+                }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn lookup_by_name_and_params() {
+        let m = sample();
+        assert!(m.get("jacobi_block_ref_n512_bm256").is_ok());
+        assert!(m.get("nope").is_err());
+        let name = m.jacobi_block("ref", 512, 256).unwrap();
+        assert_eq!(name, "jacobi_block_ref_n512_bm256");
+        assert!(m.jacobi_block("ref", 512, 128).is_err());
+        assert!(m.jacobi_block("pallas", 512, 256).is_err());
+    }
+
+    #[test]
+    fn iospec_dtypes() {
+        let m = sample();
+        let e = m.get("jacobi_block_ref_n512_bm256").unwrap();
+        assert_eq!(e.inputs[0].element_count(), 256 * 512);
+        assert_eq!(e.inputs[0].chunk_dtype().unwrap(), Dtype::F32);
+        assert_eq!(e.inputs[4].chunk_dtype().unwrap(), Dtype::I32);
+        assert_eq!(e.inputs[4].element_count(), 1); // scalar
+    }
+
+    #[test]
+    fn missing_fields_reported() {
+        let bad = r#"{"artifacts": {"x": {"file": "f", "kind": "k"}}}"#;
+        let err = Manifest::from_json_text(bad).unwrap_err();
+        assert!(err.to_string().contains("variant"));
+    }
+
+    #[test]
+    fn padded_size_fallbacks() {
+        let m = sample();
+        assert_eq!(m.padded_size(2709), 2816);
+        assert_eq!(m.padded_size(512), 512);
+        assert_eq!(m.padded_size(300), 512); // rounded up via block_n
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Soft test: exercises the disk path when artifacts exist.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.artifacts.len() >= 12);
+            for (name, e) in &m.artifacts {
+                assert!(!e.inputs.is_empty(), "{name} has no inputs");
+                assert!(!e.outputs.is_empty(), "{name} has no outputs");
+            }
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! AOT compute runtime: load HLO-text artifacts, compile once per process
+//! thread, execute from the request path.
+//!
+//! The build pipeline (`make artifacts`) runs python/JAX **once**, lowering
+//! every (function, shape) config to HLO text plus a `manifest.json`
+//! describing the input/output shapes.  At run time this module is all
+//! that touches XLA: [`Engine`] wraps a `PjRtClient`, compiles artifacts
+//! on first use and caches the loaded executables.
+//!
+//! ## Threading
+//!
+//! The `xla` crate's handles wrap raw pointers and are deliberately not
+//! `Send`; an [`Engine`] therefore lives and dies on one thread.  Each
+//! worker thread (and each rank of the tailored-MPI baseline) constructs
+//! its own engine from an [`EngineFactory`] — mirroring one PJRT client
+//! per process in a real deployment.  [`ComputeBackend`] abstracts the
+//! engine so coordinator tests can run against [`MockBackend`] without
+//! artifacts on disk.
+
+pub mod literal;
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+pub use manifest::{ArtifactEntry, IoSpec, Manifest};
+
+use crate::data::DataChunk;
+use crate::error::{Error, Result};
+
+/// Thread-local compute interface used by user functions
+/// ([`crate::job::registry::JobCtx::engine`]).
+pub trait ComputeBackend {
+    /// Execute artifact `name` on `inputs`, returning the output chunks.
+    fn execute(&self, name: &str, inputs: &[DataChunk]) -> Result<Vec<DataChunk>>;
+
+    /// The artifact manifest (for config-driven artifact lookup).
+    fn manifest(&self) -> &Manifest;
+}
+
+/// Send-able recipe for building a per-thread [`ComputeBackend`].
+///
+/// Workers receive the factory at spawn and instantiate the engine lazily
+/// on their own thread (PJRT handles are not `Send`).
+pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn ComputeBackend>> + Send + Sync>;
+
+/// PJRT engine factory rooted at an artifact directory.
+pub fn pjrt_factory(artifact_dir: impl Into<PathBuf>) -> EngineFactory {
+    let dir = artifact_dir.into();
+    Arc::new(move || Ok(Box::new(Engine::load(&dir)?) as Box<dyn ComputeBackend>))
+}
+
+
+/// The PJRT-backed engine: one CPU client, an executable cache, and a
+/// **device-buffer cache** for long-lived inputs.
+///
+/// The buffer cache is the runtime's main optimisation (EXPERIMENTS.md
+/// §Perf): iterative solvers feed the same immutable matrix block (the
+/// same `Arc` behind the `DataChunk`) to the kernel every sweep, and
+/// re-uploading it dominated execution cost (5× the compute at all sizes).
+/// Keyed by `(artifact, input position)`; the entry retains a clone of the
+/// source chunk, which both serves as the validity token (same storage
+/// identity ⇒ same immutable bytes) and **pins the allocation** so a
+/// freed-and-reallocated buffer can never alias a cached identity (the
+/// ABA hazard of raw-pointer keys). One buffer per input slot, replaced
+/// when a different chunk arrives, so memory stays bounded.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    buf_cache: RefCell<HashMap<(String, usize), (DataChunk, xla::PjRtBuffer)>>,
+}
+
+impl Engine {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Arc::new(Manifest::load(&dir)?);
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+            buf_cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Same artifacts, pre-parsed manifest (cheap when many engines share).
+    pub fn with_manifest(dir: impl Into<PathBuf>, manifest: Arc<Manifest>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: dir.into(),
+            cache: RefCell::new(HashMap::new()),
+            buf_cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Upload one validated chunk to the device.
+    fn upload(&self, chunk: &crate::data::DataChunk, spec: &IoSpec) -> Result<xla::PjRtBuffer> {
+        use crate::data::Dtype;
+        let dims = &spec.shape;
+        let buf = match spec.chunk_dtype()? {
+            Dtype::F32 => self.client.buffer_from_host_buffer(chunk.as_f32()?, dims, None)?,
+            Dtype::F64 => self.client.buffer_from_host_buffer(chunk.as_f64()?, dims, None)?,
+            Dtype::I32 => self.client.buffer_from_host_buffer(chunk.as_i32()?, dims, None)?,
+            Dtype::I64 => self.client.buffer_from_host_buffer(chunk.as_i64()?, dims, None)?,
+            Dtype::U8 => {
+                return Err(Error::Manifest("u8 feeds are not supported".into()))
+            }
+        };
+        Ok(buf)
+    }
+
+    /// Number of device buffers currently retained.
+    pub fn cached_buffers(&self) -> usize {
+        self.buf_cache.borrow().len()
+    }
+
+    /// Compile (or fetch cached) the named artifact and use it.
+    fn with_executable<R>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<R>,
+    ) -> Result<R> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return f(exe);
+        }
+        let entry = self.manifest.get(name)?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
+            Error::Manifest(format!("non-utf8 artifact path {path:?}"))
+        })?)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let mut cache = self.cache.borrow_mut();
+        let exe = cache.entry(name.to_string()).or_insert(exe);
+        f(exe)
+    }
+
+    /// Pre-compile a set of artifacts (bench setup does this so compile
+    /// time never lands inside a measured region).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.with_executable(name, |_| Ok(()))?;
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+impl ComputeBackend for Engine {
+    fn execute(&self, name: &str, inputs: &[DataChunk]) -> Result<Vec<DataChunk>> {
+        let entry = self.manifest.get(name)?;
+        literal::validate_inputs(name, entry, inputs)?;
+
+        // Assemble device buffers, reusing cached uploads whose storage
+        // identity matches. The cached `DataChunk` clone keeps the source
+        // allocation alive, so identity equality is sound (no ABA).
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        {
+            let mut cache = self.buf_cache.borrow_mut();
+            for (i, (chunk, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+                let key = (name.to_string(), i);
+                let buf = match cache.remove(&key) {
+                    Some((cached, buf)) if cached.identity() == chunk.identity() => buf,
+                    _ => self.upload(chunk, spec)?,
+                };
+                args.push(buf);
+            }
+        }
+
+        let result = self.with_executable(name, |exe| {
+            let out = exe.execute_b::<xla::PjRtBuffer>(&args)?;
+            // Single device, single output buffer holding a tuple
+            // (aot.py lowers with return_tuple=True).
+            out[0][0].to_literal_sync().map_err(Error::from)
+        })?;
+
+        // Retain the uploads (and pin their source chunks) for the next
+        // call with the same inputs.
+        {
+            let mut cache = self.buf_cache.borrow_mut();
+            for (i, (chunk, buf)) in inputs.iter().zip(args).enumerate() {
+                cache.insert((name.to_string(), i), (chunk.clone(), buf));
+            }
+        }
+        literal::tuple_to_chunks(name, entry, result)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+// ---------------------------------------------------------------- mocking
+
+type MockFn = dyn Fn(&[DataChunk]) -> Result<Vec<DataChunk>> + Send + Sync;
+
+/// In-memory [`ComputeBackend`] for coordinator tests: artifact name →
+/// closure.  Ships with an empty manifest.
+#[derive(Default)]
+pub struct MockBackend {
+    fns: HashMap<String, Arc<MockFn>>,
+    manifest: Manifest,
+}
+
+impl MockBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with(
+        mut self,
+        name: impl Into<String>,
+        f: impl Fn(&[DataChunk]) -> Result<Vec<DataChunk>> + Send + Sync + 'static,
+    ) -> Self {
+        self.fns.insert(name.into(), Arc::new(f));
+        self
+    }
+}
+
+impl ComputeBackend for MockBackend {
+    fn execute(&self, name: &str, inputs: &[DataChunk]) -> Result<Vec<DataChunk>> {
+        let f = self
+            .fns
+            .get(name)
+            .ok_or_else(|| Error::UnknownArtifact(name.to_string()))?;
+        f(inputs)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
+
+/// Factory wrapping a `MockBackend` constructor (tests).
+pub fn mock_factory<F>(make: F) -> EngineFactory
+where
+    F: Fn() -> MockBackend + Send + Sync + 'static,
+{
+    Arc::new(move || Ok(Box::new(make()) as Box<dyn ComputeBackend>))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_backend_dispatches() {
+        let b = MockBackend::new().with("double", |inp| {
+            let v: Vec<f32> = inp[0].as_f32()?.iter().map(|x| x * 2.0).collect();
+            Ok(vec![DataChunk::from_f32(v)])
+        });
+        let out = b
+            .execute("double", &[DataChunk::from_f32(vec![1.0, 2.0])])
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[2.0, 4.0]);
+        assert!(matches!(
+            b.execute("nope", &[]),
+            Err(Error::UnknownArtifact(_))
+        ));
+    }
+}

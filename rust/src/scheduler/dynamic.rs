@@ -1,0 +1,206 @@
+//! Runtime job injection (paper §3.3: "during runtime each job can add a
+//! finite number of new jobs to the current or following parallel
+//! segments" — the mechanism behind iterative algorithms like the Jacobi
+//! solver, whose convergence-check job re-enqueues the sweep jobs).
+//!
+//! Injected jobs carry *local* ids so a batch can reference its own
+//! members before real [`JobId`]s exist; the master resolves the batch
+//! with [`resolve_injections`], allocating fresh ids and rewriting
+//! references.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::job::{ChunkRef, Injection, InjectedRef, JobId, JobSpec};
+
+/// Resolved injection: absolute target segment index → new job specs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResolvedInjection {
+    pub segment_index: usize,
+    pub jobs: Vec<JobSpec>,
+}
+
+/// Resolve a batch of injections produced by one job execution.
+///
+/// * `current_segment` — the segment the injecting job belongs to.
+/// * `next_id` — id allocator cursor (advanced in place).
+/// * `known` — predicate for "this job id exists" (existing specs);
+///   `Existing` references must satisfy it.
+///
+/// Local references may point at any local id in the same batch, as long
+/// as the referenced job lands in a **strictly earlier segment** than the
+/// referencing one (same rule the static validator enforces).
+pub fn resolve_injections(
+    injections: Vec<Injection>,
+    current_segment: usize,
+    next_id: &mut u32,
+    known: impl Fn(JobId) -> bool,
+) -> Result<Vec<ResolvedInjection>> {
+    // First pass: allocate real ids for every local id, remember each
+    // local job's target segment for the ordering check.
+    let mut local_ids: HashMap<u32, (JobId, usize)> = HashMap::new();
+    for inj in &injections {
+        let target = current_segment + inj.segment_delta;
+        for j in &inj.jobs {
+            if local_ids.contains_key(&j.local_id) {
+                return Err(Error::DuplicateJobId(JobId(j.local_id)));
+            }
+            let id = JobId(*next_id);
+            *next_id += 1;
+            local_ids.insert(j.local_id, (id, target));
+        }
+    }
+
+    // Second pass: rewrite references.
+    let mut out = Vec::with_capacity(injections.len());
+    for inj in injections {
+        let target = current_segment + inj.segment_delta;
+        let mut jobs = Vec::with_capacity(inj.jobs.len());
+        for j in inj.jobs {
+            let (id, _) = local_ids[&j.local_id];
+            let mut inputs = Vec::with_capacity(j.inputs.len());
+            for r in j.inputs {
+                match r {
+                    InjectedRef::Existing(cref) => {
+                        if !known(cref.job) {
+                            return Err(Error::UnknownResultRef {
+                                job: id,
+                                referenced: cref.job,
+                            });
+                        }
+                        inputs.push(cref);
+                    }
+                    InjectedRef::Local { local_id, range } => {
+                        let (dep_id, dep_seg) =
+                            *local_ids.get(&local_id).ok_or(Error::UnknownResultRef {
+                                job: id,
+                                referenced: JobId(local_id),
+                            })?;
+                        if dep_seg >= target {
+                            // Dependency would run concurrently or later.
+                            return Err(Error::UnknownResultRef {
+                                job: id,
+                                referenced: dep_id,
+                            });
+                        }
+                        inputs.push(ChunkRef { job: dep_id, range });
+                    }
+                }
+            }
+            jobs.push(JobSpec {
+                id,
+                func: j.func,
+                threads: j.threads,
+                inputs,
+                keep: j.keep,
+            });
+        }
+        out.push(ResolvedInjection { segment_index: target, jobs });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{ChunkRange, FuncId, InjectedJob, ThreadCount};
+
+    fn ij(local_id: u32, inputs: Vec<InjectedRef>) -> InjectedJob {
+        InjectedJob {
+            local_id,
+            func: FuncId(1),
+            threads: ThreadCount::Exact(1),
+            inputs,
+            keep: false,
+        }
+    }
+
+    #[test]
+    fn allocates_fresh_ids_and_rewrites_local_refs() {
+        let injections = vec![
+            Injection { segment_delta: 1, jobs: vec![ij(0, vec![]), ij(1, vec![])] },
+            Injection {
+                segment_delta: 2,
+                jobs: vec![ij(
+                    2,
+                    vec![
+                        InjectedRef::Local { local_id: 0, range: ChunkRange::All },
+                        InjectedRef::Local {
+                            local_id: 1,
+                            range: ChunkRange::Range { lo: 0, hi: 1 },
+                        },
+                    ],
+                )],
+            },
+        ];
+        let mut next = 100;
+        let resolved =
+            resolve_injections(injections, 5, &mut next, |_| false).unwrap();
+        assert_eq!(next, 103);
+        assert_eq!(resolved[0].segment_index, 6);
+        assert_eq!(resolved[1].segment_index, 7);
+        let consumer = &resolved[1].jobs[0];
+        assert_eq!(consumer.id, JobId(102));
+        assert_eq!(consumer.inputs[0].job, JobId(100));
+        assert_eq!(consumer.inputs[1].job, JobId(101));
+        assert_eq!(consumer.inputs[1].range, ChunkRange::Range { lo: 0, hi: 1 });
+    }
+
+    #[test]
+    fn existing_refs_validated() {
+        let injections = vec![Injection {
+            segment_delta: 1,
+            jobs: vec![ij(
+                0,
+                vec![InjectedRef::Existing(ChunkRef::all(JobId(7)))],
+            )],
+        }];
+        let mut next = 10;
+        // known: only job 7 exists
+        let ok = resolve_injections(injections.clone(), 0, &mut next, |j| j == JobId(7));
+        assert!(ok.is_ok());
+        let err =
+            resolve_injections(injections, 0, &mut next, |_| false).unwrap_err();
+        assert!(matches!(err, Error::UnknownResultRef { .. }));
+    }
+
+    #[test]
+    fn same_segment_local_dependency_rejected() {
+        let injections = vec![Injection {
+            segment_delta: 1,
+            jobs: vec![
+                ij(0, vec![]),
+                ij(1, vec![InjectedRef::Local { local_id: 0, range: ChunkRange::All }]),
+            ],
+        }];
+        let mut next = 0;
+        let err = resolve_injections(injections, 0, &mut next, |_| false).unwrap_err();
+        assert!(matches!(err, Error::UnknownResultRef { .. }));
+    }
+
+    #[test]
+    fn duplicate_local_ids_rejected() {
+        let injections = vec![Injection {
+            segment_delta: 1,
+            jobs: vec![ij(0, vec![]), ij(0, vec![])],
+        }];
+        let mut next = 0;
+        assert!(matches!(
+            resolve_injections(injections, 0, &mut next, |_| false),
+            Err(Error::DuplicateJobId(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_local_ref_rejected() {
+        let injections = vec![Injection {
+            segment_delta: 1,
+            jobs: vec![ij(
+                0,
+                vec![InjectedRef::Local { local_id: 42, range: ChunkRange::All }],
+            )],
+        }];
+        let mut next = 0;
+        assert!(resolve_injections(injections, 0, &mut next, |_| false).is_err());
+    }
+}

@@ -1,0 +1,457 @@
+//! Master scheduler (paper: rank 0) — the only process holding the
+//! complete algorithm description.  Drives segments in order, assigns jobs
+//! to sub-schedulers with locality-aware placement, processes runtime job
+//! injections, orchestrates fault recovery, releases dead results, and
+//! collects the final segment's outputs.
+//!
+//! The master stores **no job data** (paper §3.1): results move between
+//! sub-schedulers and workers; the master tracks only *where* they are
+//! ([`SourceLoc`]) and *whether* they are still needed.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+
+use crate::comm::{Comm, Rank};
+use crate::data::FunctionData;
+use crate::error::{Error, Result};
+use crate::job::{Algorithm, ChunkRange, JobId, JobSpec};
+use crate::metrics::MetricsCollector;
+
+use super::dynamic::resolve_injections;
+use super::placement::choose_scheduler;
+use super::{FwMsg, SourceLoc, TAG_CTRL};
+
+/// When stored results are freed (see DESIGN.md §6 discussion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReleasePolicy {
+    /// Free everything at shutdown (default — always safe under dynamic
+    /// job injection, memory cost is bounded by the run's total output).
+    AtShutdown,
+    /// Free a result `lag` segments after its last known reference.
+    /// Safe when injections never reach further back than `lag` segments
+    /// (the Jacobi cycle needs `lag >= 2`).
+    Lagged { lag: usize },
+}
+
+/// Master-side run parameters.
+pub struct MasterConfig {
+    pub subs: Vec<Rank>,
+    pub release: ReleasePolicy,
+}
+
+/// Drive one algorithm to completion. Returns the results of the final
+/// segment's jobs (fetched from their owning sub-schedulers).
+pub fn run_master(
+    comm: &mut Comm<FwMsg>,
+    algo: Algorithm,
+    cfg: MasterConfig,
+    metrics: &MetricsCollector,
+) -> Result<BTreeMap<JobId, FunctionData>> {
+    Master::new(comm, cfg, metrics).run(algo)
+}
+
+struct Master<'a> {
+    comm: &'a mut Comm<FwMsg>,
+    cfg: MasterConfig,
+    metrics: &'a MetricsCollector,
+
+    segments: Vec<Vec<JobSpec>>,
+    specs: HashMap<JobId, JobSpec>,
+    owners: HashMap<JobId, SourceLoc>,
+    result_bytes: HashMap<JobId, u64>,
+    available: HashSet<JobId>,
+    last_use: HashMap<JobId, usize>,
+    load: HashMap<Rank, usize>,
+    pending: HashSet<JobId>,
+    /// Jobs needing (re-)execution whose inputs may not be available yet.
+    recovery: VecDeque<JobId>,
+    /// Abort counts per job — a cycle-breaker: a job repeatedly aborted by
+    /// its scheduler indicates an unrecoverable condition, not a fault.
+    abort_counts: HashMap<JobId, usize>,
+    next_id: u32,
+    seg_idx: usize,
+}
+
+/// A job aborted more often than this fails the run.
+const MAX_ABORTS_PER_JOB: usize = 8;
+
+impl<'a> Master<'a> {
+    fn new(comm: &'a mut Comm<FwMsg>, cfg: MasterConfig, metrics: &'a MetricsCollector) -> Self {
+        Master {
+            comm,
+            cfg,
+            metrics,
+            segments: Vec::new(),
+            specs: HashMap::new(),
+            owners: HashMap::new(),
+            result_bytes: HashMap::new(),
+            available: HashSet::new(),
+            last_use: HashMap::new(),
+            load: HashMap::new(),
+            pending: HashSet::new(),
+            recovery: VecDeque::new(),
+            abort_counts: HashMap::new(),
+            next_id: 0,
+            seg_idx: 0,
+        }
+    }
+
+    fn run(mut self, algo: Algorithm) -> Result<BTreeMap<JobId, FunctionData>> {
+        algo.validate()?;
+        self.next_id = algo.max_job_id() + 1;
+        self.segments = algo.segments.into_iter().map(|s| s.jobs).collect();
+        for seg in &self.segments {
+            for j in seg {
+                self.specs.insert(j.id, j.clone());
+            }
+        }
+        self.recompute_last_use();
+
+        let outcome = self.drive();
+        match outcome {
+            Ok(()) => {
+                let finals = self.collect_final_results();
+                self.broadcast_shutdown();
+                finals
+            }
+            Err(e) => {
+                self.broadcast_shutdown();
+                Err(e)
+            }
+        }
+    }
+
+    fn recompute_last_use(&mut self) {
+        for (idx, seg) in self.segments.iter().enumerate() {
+            for job in seg {
+                for r in &job.inputs {
+                    let e = self.last_use.entry(r.job).or_insert(idx);
+                    *e = (*e).max(idx);
+                }
+            }
+        }
+    }
+
+    fn drive(&mut self) -> Result<()> {
+        while self.seg_idx < self.segments.len() {
+            let jobs: Vec<JobId> =
+                self.segments[self.seg_idx].iter().map(|j| j.id).collect();
+            self.metrics.segment_opened(jobs.len());
+            let mut to_assign: VecDeque<JobId> = jobs.into();
+
+            while !to_assign.is_empty() || !self.pending.is_empty() {
+                while let Some(job) = to_assign.pop_front() {
+                    self.assign_or_defer(job);
+                }
+                if self.pending.is_empty() && self.recovery.is_empty() {
+                    break;
+                }
+                if self.pending.is_empty() && !self.recovery.is_empty() {
+                    // Everything waits on recovery jobs whose deps never
+                    // became available — unrecoverable.
+                    let stuck = self.recovery.front().copied().expect("nonempty");
+                    let missing: Vec<String> = self
+                        .specs
+                        .get(&stuck)
+                        .map(|s| {
+                            s.inputs
+                                .iter()
+                                .filter(|r| !self.available.contains(&r.job))
+                                .map(|r| r.to_string())
+                                .collect()
+                        })
+                        .unwrap_or_default();
+                    return Err(Error::JobFailed {
+                        job: stuck,
+                        msg: format!(
+                            "recovery stuck in segment {}: missing inputs {:?}, {} more jobs queued",
+                            self.seg_idx,
+                            missing,
+                            self.recovery.len() - 1
+                        ),
+                    });
+                }
+                let env = self
+                    .comm
+                    .recv()
+                    .map_err(|_| Error::WorldShutdown(self.comm.rank()))?;
+                self.handle(env.into_user(), &mut to_assign)?;
+            }
+
+            self.metrics.segment_closed();
+            self.apply_release_policy();
+            self.seg_idx += 1;
+        }
+        Ok(())
+    }
+
+    fn handle(&mut self, msg: FwMsg, to_assign: &mut VecDeque<JobId>) -> Result<()> {
+        match msg {
+            FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes } => {
+                // Process injections before completing the job: a batch
+                // may target the *current* segment.
+                if !injections.is_empty() {
+                    let count: usize = injections.iter().map(|i| i.jobs.len()).sum();
+                    let resolved = resolve_injections(
+                        injections,
+                        self.seg_idx,
+                        &mut self.next_id,
+                        |id| self.specs.contains_key(&id),
+                    )?;
+                    self.metrics.jobs_injected(count);
+                    for batch in resolved {
+                        while self.segments.len() <= batch.segment_index {
+                            self.segments.push(Vec::new());
+                        }
+                        for spec in batch.jobs {
+                            self.specs.insert(spec.id, spec.clone());
+                            for r in &spec.inputs {
+                                let e = self
+                                    .last_use
+                                    .entry(r.job)
+                                    .or_insert(batch.segment_index);
+                                *e = (*e).max(batch.segment_index);
+                            }
+                            if batch.segment_index == self.seg_idx {
+                                to_assign.push_back(spec.id);
+                            }
+                            self.segments[batch.segment_index].push(spec);
+                        }
+                    }
+                }
+                if self.pending.remove(&job) {
+                    if let Some(loc) = self.owners.get(&job) {
+                        let owner = loc.owner;
+                        if let Some(l) = self.load.get_mut(&owner) {
+                            *l = l.saturating_sub(1);
+                        }
+                    }
+                }
+                // `owners` was pre-set at assignment to the chosen sub;
+                // update with the kept location.
+                if let Some(loc) = self.owners.get_mut(&job) {
+                    loc.kept_on = kept_on;
+                }
+                self.available.insert(job);
+                self.result_bytes.insert(job, output_bytes);
+                let _ = chunks;
+                self.try_recovery(to_assign);
+                Ok(())
+            }
+            FwMsg::JobError { job, msg } => Err(Error::JobFailed { job, msg }),
+            FwMsg::JobAborted { job, missing } => {
+                let aborts = self.abort_counts.entry(job).or_insert(0);
+                *aborts += 1;
+                if *aborts > MAX_ABORTS_PER_JOB {
+                    return Err(Error::JobFailed {
+                        job,
+                        msg: format!(
+                            "aborted {aborts} times waiting for result of {missing}; giving up"
+                        ),
+                    });
+                }
+                if self.pending.remove(&job) {
+                    if let Some(loc) = self.owners.get(&job) {
+                        let owner = loc.owner;
+                        if let Some(l) = self.load.get_mut(&owner) {
+                            *l = l.saturating_sub(1);
+                        }
+                    }
+                }
+                self.queue_recovery(job);
+                if !self.available.contains(&missing) && !self.pending.contains(&missing)
+                {
+                    self.queue_recovery(missing);
+                }
+                self.try_recovery(to_assign);
+                Ok(())
+            }
+            FwMsg::WorkerLostReport { lost, running, .. } => {
+                for job in lost {
+                    self.available.remove(&job);
+                    if let Some(loc) = self.owners.get_mut(&job) {
+                        loc.kept_on = None;
+                    }
+                    if self.still_needed(job) {
+                        self.metrics.job_recomputed();
+                        self.queue_recovery(job);
+                    }
+                }
+                for job in running {
+                    if self.pending.remove(&job) {
+                        if let Some(loc) = self.owners.get(&job) {
+                            let owner = loc.owner;
+                            if let Some(l) = self.load.get_mut(&owner) {
+                                *l = l.saturating_sub(1);
+                            }
+                        }
+                        self.metrics.job_recomputed();
+                        self.queue_recovery(job);
+                    }
+                }
+                self.try_recovery(to_assign);
+                Ok(())
+            }
+            // Late fetch replies etc. are ignorable here.
+            _ => Ok(()),
+        }
+    }
+
+    fn still_needed(&self, job: JobId) -> bool {
+        // Keep-results are live until explicitly released (paper §3.1:
+        // workers hold them "until the responsible scheduler signals the
+        // data is no longer required") — and dynamic injection may
+        // reference them arbitrarily far in the future (the Jacobi matrix
+        // blocks), so a lost kept result is always recomputed.
+        if self.specs.get(&job).map(|s| s.keep).unwrap_or(false) {
+            return true;
+        }
+        let last = self.last_use.get(&job).copied().unwrap_or(0);
+        last >= self.seg_idx || self.in_final_segment(job)
+    }
+
+    fn in_final_segment(&self, job: JobId) -> bool {
+        self.segments
+            .last()
+            .map(|s| s.iter().any(|j| j.id == job))
+            .unwrap_or(false)
+    }
+
+    fn queue_recovery(&mut self, job: JobId) {
+        if !self.recovery.contains(&job) && !self.pending.contains(&job) {
+            self.recovery.push_back(job);
+        }
+    }
+
+    /// Assign jobs from the recovery queue whose inputs are available.
+    fn try_recovery(&mut self, _to_assign: &mut VecDeque<JobId>) {
+        let mut still_waiting = VecDeque::new();
+        while let Some(job) = self.recovery.pop_front() {
+            let ready = self
+                .specs
+                .get(&job)
+                .map(|s| s.inputs.iter().all(|r| self.available.contains(&r.job)))
+                .unwrap_or(false);
+            if ready {
+                self.assign(job);
+            } else {
+                still_waiting.push_back(job);
+            }
+        }
+        self.recovery = still_waiting;
+    }
+
+    fn assign_or_defer(&mut self, job: JobId) {
+        let ready = self
+            .specs
+            .get(&job)
+            .map(|s| s.inputs.iter().all(|r| self.available.contains(&r.job)))
+            .unwrap_or(false);
+        if ready {
+            self.assign(job);
+        } else {
+            // Normally impossible for static jobs (validation), but a lost
+            // worker can invalidate inputs between segments.
+            self.queue_recovery(job);
+        }
+    }
+
+    fn assign(&mut self, job: JobId) {
+        let spec = self.specs.get(&job).expect("assigning unknown job").clone();
+        let target = choose_scheduler(
+            &spec,
+            &self.owners,
+            &self.result_bytes,
+            &self.load,
+            &self.cfg.subs,
+        );
+        let sources: Vec<SourceLoc> = spec
+            .inputs
+            .iter()
+            .filter_map(|r| self.owners.get(&r.job).copied())
+            .collect();
+        let input_bytes = 0u64; // shipped bytes are accounted by comm stats
+        self.metrics.job_assigned(job, input_bytes);
+        self.owners.insert(
+            job,
+            SourceLoc { job, owner: target, kept_on: None },
+        );
+        *self.load.entry(target).or_default() += 1;
+        self.pending.insert(job);
+        let _ = self
+            .comm
+            .send(target, TAG_CTRL, FwMsg::Assign { spec, sources });
+    }
+
+    fn apply_release_policy(&mut self) {
+        let ReleasePolicy::Lagged { lag } = self.cfg.release else { return };
+        let horizon = self.seg_idx.saturating_sub(lag);
+        let candidates: Vec<JobId> = self
+            .available
+            .iter()
+            .copied()
+            .filter(|j| {
+                let last = self.last_use.get(j).copied().unwrap_or(0);
+                last <= horizon
+                    && self.seg_idx >= lag
+                    && !self.in_final_segment(*j)
+                    // produced at or before the horizon too (avoid freeing
+                    // something just made for later use)
+                    && last < self.segments.len()
+            })
+            .collect();
+        for job in candidates {
+            if let Some(loc) = self.owners.get(&job) {
+                let _ = self
+                    .comm
+                    .send(loc.owner, TAG_CTRL, FwMsg::ReleaseResult { job });
+            }
+            self.available.remove(&job);
+            self.owners.remove(&job);
+        }
+    }
+
+    fn collect_final_results(&mut self) -> Result<BTreeMap<JobId, FunctionData>> {
+        let me = self.comm.rank();
+        let finals: Vec<JobId> = self
+            .segments
+            .last()
+            .map(|s| s.iter().map(|j| j.id).collect())
+            .unwrap_or_default();
+        let mut expected = HashSet::new();
+        for job in &finals {
+            if let Some(loc) = self.owners.get(job) {
+                let _ = self.comm.send(
+                    loc.owner,
+                    TAG_CTRL,
+                    FwMsg::FetchResult { job: *job, range: ChunkRange::All, reply_to: me },
+                );
+                expected.insert(*job);
+            }
+        }
+        let mut out = BTreeMap::new();
+        while !expected.is_empty() {
+            let env = self
+                .comm
+                .recv()
+                .map_err(|_| Error::WorldShutdown(me))?;
+            match env.into_user() {
+                FwMsg::ResultData { job, data } => {
+                    if expected.remove(&job) {
+                        out.insert(job, data);
+                    }
+                }
+                FwMsg::ResultUnavailable { job } => {
+                    return Err(Error::ResultNotAvailable(job));
+                }
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+
+    fn broadcast_shutdown(&mut self) {
+        for &s in &self.cfg.subs {
+            let _ = self.comm.send(s, TAG_CTRL, FwMsg::Shutdown);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! The scheduler hierarchy — the paper's §3 runtime architecture.
+//!
+//! ```text
+//!                 ┌────────────┐  Assign / JobDone / Inject
+//!                 │ master S0  │◄──────────────────────────┐
+//!                 └─────┬──────┘                            │
+//!          Assign       │ holds the ONLY copy of the        │
+//!        ┌──────────────┤ algorithm description; stores     │
+//!        ▼              ▼ no job data (paper §3.1)          │
+//!   ┌─────────┐    ┌─────────┐   FetchResult / ResultData   │
+//!   │ sub S1  │◄──►│ sub S2  │◄─────────────────────────────┘
+//!   └──┬──────┘    └───┬─────┘   (schedulers serve results
+//!      │ Exec / Done   │          to each other)
+//!   ┌──▼──┐ ┌──▼──┐ ┌──▼──┐
+//!   │ W1  │ │ W2  │ │ W3  │   workers: dynamically spawned,
+//!   └─────┘ └─────┘ └─────┘   isolated, keep-results caches
+//! ```
+//!
+//! This module defines the control-plane message protocol ([`FwMsg`]);
+//! [`master`] and [`sub`] implement the two scheduler roles, [`placement`]
+//! the packing policies, [`store`] the result store and [`dynamic`] the
+//! runtime job-injection resolution.
+
+pub mod dynamic;
+pub mod master;
+pub mod placement;
+pub mod store;
+pub mod sub;
+
+use crate::comm::{Rank, Tag, WireSize};
+use crate::data::FunctionData;
+use crate::job::{ChunkRange, Injection, JobId, JobSpec};
+
+/// The single user tag of the control plane (matching is by content, the
+/// event loops consume everything).
+pub const TAG_CTRL: Tag = Tag(1);
+
+/// Where a job's result lives: which sub-scheduler owns it, and — under
+/// keep-results — which of its workers physically retains it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SourceLoc {
+    pub job: JobId,
+    pub owner: Rank,
+    pub kept_on: Option<Rank>,
+}
+
+/// One part of a job's assembled input.
+#[derive(Debug, Clone)]
+pub enum InputPart {
+    /// Chunks shipped with the request.
+    Data(FunctionData),
+    /// Chunks the executing worker already retains (keep-results locality:
+    /// zero transfer).
+    Kept { job: JobId, range: ChunkRange },
+}
+
+impl InputPart {
+    pub fn shipped_bytes(&self) -> usize {
+        match self {
+            InputPart::Data(d) => d.size_bytes(),
+            InputPart::Kept { .. } => 0,
+        }
+    }
+}
+
+/// A fully resolved execution request (sub-scheduler → worker).
+#[derive(Debug, Clone)]
+pub struct ExecRequest {
+    pub spec: JobSpec,
+    pub input: Vec<InputPart>,
+}
+
+impl ExecRequest {
+    pub fn shipped_bytes(&self) -> usize {
+        self.input.iter().map(|p| p.shipped_bytes()).sum()
+    }
+}
+
+/// Control-plane protocol. One message type for all role pairs keeps the
+/// event loops single-recv (no cross-message blocking → no deadlock).
+#[derive(Debug, Clone)]
+pub enum FwMsg {
+    // ------------------------------------------------- master → sub
+    /// Execute this job; `sources` locates every referenced result.
+    Assign { spec: JobSpec, sources: Vec<SourceLoc> },
+    /// Free a stored (or kept) result.
+    ReleaseResult { job: JobId },
+    /// End of run: shut down workers and exit.
+    Shutdown,
+
+    // ------------------------------------------------- sub → master
+    /// Job completed; `kept_on` set when the worker retained the output.
+    JobDone {
+        job: JobId,
+        kept_on: Option<Rank>,
+        output_bytes: u64,
+        chunks: usize,
+        injections: Vec<Injection>,
+    },
+    /// Job execution failed (user function error).
+    JobError { job: JobId, msg: String },
+    /// A worker died; its retained results and running jobs are listed.
+    WorkerLostReport { worker: Rank, lost: Vec<JobId>, running: Vec<JobId> },
+    /// Could not assemble inputs (a source vanished mid-assignment);
+    /// master re-queues the job through recovery.
+    JobAborted { job: JobId, missing: JobId },
+
+    // ------------------------------------------------- sub ↔ sub (+ master)
+    /// Request chunks of a stored result; reply goes to `reply_to`.
+    FetchResult { job: JobId, range: ChunkRange, reply_to: Rank },
+    /// Reply to `FetchResult`.
+    ResultData { job: JobId, data: FunctionData },
+    /// The requested result is gone (lost worker); requester aborts the
+    /// dependent job back to the master.
+    ResultUnavailable { job: JobId },
+
+    // ------------------------------------------------- sub → worker
+    Exec(ExecRequest),
+    /// Upload a retained result to the scheduler.
+    PullKept { job: JobId },
+    /// Retained result no longer needed.
+    DropKept { job: JobId },
+    /// Clean shutdown.
+    WorkerShutdown,
+
+    // ------------------------------------------------- worker → sub
+    ExecDone {
+        job: JobId,
+        /// `None` when retained under keep-results.
+        data: Option<FunctionData>,
+        injections: Vec<Injection>,
+        exec_us: u64,
+    },
+    ExecFailed { job: JobId, msg: String },
+    /// Reply to `PullKept`.
+    KeptData { job: JobId, data: FunctionData },
+}
+
+impl WireSize for FwMsg {
+    fn wire_size(&self) -> usize {
+        const CTRL: usize = 32; // envelope-ish fixed cost of control fields
+        match self {
+            FwMsg::Assign { spec, sources } => {
+                CTRL + spec.inputs.len() * 24 + sources.len() * 24
+            }
+            FwMsg::Exec(req) => CTRL + req.shipped_bytes(),
+            FwMsg::ExecDone { data, injections, .. } => {
+                CTRL + data.as_ref().map_or(0, |d| d.size_bytes())
+                    + injections.iter().map(|i| i.jobs.len() * 32).sum::<usize>()
+            }
+            FwMsg::JobDone { injections, .. } => {
+                CTRL + injections.iter().map(|i| i.jobs.len() * 32).sum::<usize>()
+            }
+            FwMsg::ResultData { data, .. } | FwMsg::KeptData { data, .. } => {
+                CTRL + data.size_bytes()
+            }
+            FwMsg::JobError { msg, .. } | FwMsg::ExecFailed { msg, .. } => CTRL + msg.len(),
+            FwMsg::WorkerLostReport { lost, running, .. } => {
+                CTRL + (lost.len() + running.len()) * 8
+            }
+            _ => CTRL,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataChunk;
+
+    #[test]
+    fn exec_request_counts_only_shipped_bytes() {
+        let req = ExecRequest {
+            spec: JobSpec::new(1, 1, 1),
+            input: vec![
+                InputPart::Data(FunctionData::of_f32(vec![0.0; 10])), // 40 B
+                InputPart::Kept { job: JobId(2), range: ChunkRange::All }, // 0 B
+            ],
+        };
+        assert_eq!(req.shipped_bytes(), 40);
+        assert!(FwMsg::Exec(req).wire_size() >= 40);
+    }
+
+    #[test]
+    fn result_data_wire_size_scales() {
+        let small = FwMsg::ResultData {
+            job: JobId(1),
+            data: FunctionData::of_f32(vec![0.0; 1]),
+        };
+        let big = FwMsg::ResultData {
+            job: JobId(1),
+            data: FunctionData::from_chunks(vec![DataChunk::from_f32(vec![0.0; 1000])]),
+        };
+        assert!(big.wire_size() > small.wire_size() + 3000);
+    }
+}

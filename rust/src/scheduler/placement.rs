@@ -1,0 +1,290 @@
+//! Placement policies: which scheduler gets a job, which worker runs it.
+//!
+//! Two levels, mirroring the paper:
+//!
+//! * **Master level** ([`choose_scheduler`]): data-locality first — a job
+//!   consuming kept results *must* land on the scheduler whose worker
+//!   retains them; otherwise prefer the scheduler owning the most of the
+//!   job's referenced results; tie-break on least load.
+//! * **Sub-scheduler level** ([`choose_worker`]): kept-locality first,
+//!   then **thread-count bin packing** (paper §3.3: two 2-thread jobs
+//!   share one 4-core worker) — best-fit on free cores; spawn a new
+//!   worker only when nothing fits.
+
+use std::collections::HashMap;
+
+use super::SourceLoc;
+use crate::comm::Rank;
+use crate::job::{JobSpec, ThreadCount};
+
+/// Below this many bytes of owned input, data affinity is ignored in
+/// favour of load balancing (shipping a few KB is cheaper than idling a
+/// scheduler's worker pool).
+pub const AFFINITY_MIN_BYTES: u64 = 4096;
+
+/// Master-side choice among sub-schedulers.
+///
+/// * `owners`: where each referenced result lives.
+/// * `result_bytes`: known size of each result (0 = unknown/kept).
+/// * `load`: outstanding (assigned, not done) jobs per scheduler.
+pub fn choose_scheduler(
+    spec: &JobSpec,
+    owners: &HashMap<crate::job::JobId, SourceLoc>,
+    result_bytes: &HashMap<crate::job::JobId, u64>,
+    load: &HashMap<Rank, usize>,
+    subs: &[Rank],
+) -> Rank {
+    debug_assert!(!subs.is_empty());
+
+    // 1. Hard affinity: kept inputs pin the job to the retaining scheduler
+    //    (its worker holds the data; running anywhere else forces a pull).
+    for r in &spec.inputs {
+        if let Some(loc) = owners.get(&r.job) {
+            if loc.kept_on.is_some() {
+                return loc.owner;
+            }
+        }
+    }
+
+    // 2. Soft affinity: the scheduler owning the most input *bytes* —
+    //    but only when the data is heavy enough to matter.
+    let mut bytes: HashMap<Rank, u64> = HashMap::new();
+    for r in &spec.inputs {
+        if let Some(loc) = owners.get(&r.job) {
+            let sz = result_bytes.get(&r.job).copied().unwrap_or(1);
+            *bytes.entry(loc.owner).or_default() += sz.max(1);
+        }
+    }
+    if let Some((&best, &sz)) = bytes.iter().max_by_key(|(s, b)| (**b, u32::MAX - s.0)) {
+        if sz >= AFFINITY_MIN_BYTES {
+            return best;
+        }
+    }
+
+    // 3. Least loaded, lowest rank for determinism.
+    subs.iter()
+        .copied()
+        .min_by_key(|s| (load.get(s).copied().unwrap_or(0), s.0))
+        .expect("subs non-empty")
+}
+
+/// One worker's packing state as seen by its sub-scheduler.
+#[derive(Debug, Clone)]
+pub struct WorkerSlot {
+    pub rank: Rank,
+    pub cores: usize,
+    pub free_cores: usize,
+    /// Jobs currently executing.
+    pub running: usize,
+}
+
+impl WorkerSlot {
+    pub fn new(rank: Rank, cores: usize) -> Self {
+        WorkerSlot { rank, cores, free_cores: cores, running: 0 }
+    }
+
+    pub fn fits(&self, threads: ThreadCount) -> bool {
+        threads.packing_width(self.cores) <= self.free_cores
+    }
+
+    pub fn occupy(&mut self, threads: ThreadCount) {
+        self.free_cores -= threads.packing_width(self.cores);
+        self.running += 1;
+    }
+
+    pub fn vacate(&mut self, threads: ThreadCount) {
+        self.free_cores =
+            (self.free_cores + threads.packing_width(self.cores)).min(self.cores);
+        self.running -= 1;
+    }
+}
+
+/// Sub-scheduler-side choice among its workers.
+///
+/// Returns the chosen worker rank, or `None` → caller should spawn a new
+/// worker (if under budget) or queue the job.
+///
+/// Policy:
+/// 1. If the job has kept inputs on `kept_on`, it must run there; return
+///    it when the packing budget allows, else `None` with `must_wait`
+///    semantics (caller queues — correctness over throughput).
+/// 2. Otherwise **best-fit**: the worker with the smallest free-core
+///    surplus that still fits (keeps big slots open for wide jobs).
+pub fn choose_worker(
+    spec: &JobSpec,
+    kept_on: Option<Rank>,
+    workers: &[WorkerSlot],
+) -> WorkerChoice {
+    if let Some(pin) = kept_on {
+        return match workers.iter().find(|w| w.rank == pin) {
+            Some(w) if w.fits(spec.threads) => WorkerChoice::Run(pin),
+            Some(_) => WorkerChoice::WaitFor(pin),
+            // Retaining worker is gone — the scheduler escalates (fault path).
+            None => WorkerChoice::Lost(pin),
+        };
+    }
+    let fit = workers
+        .iter()
+        .filter(|w| w.fits(spec.threads))
+        .min_by_key(|w| {
+            (
+                w.free_cores - spec.threads.packing_width(w.cores), // best fit
+                w.rank.0,                                           // determinism
+            )
+        });
+    match fit {
+        Some(w) => WorkerChoice::Run(w.rank),
+        None => WorkerChoice::Spawn,
+    }
+}
+
+/// Outcome of [`choose_worker`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerChoice {
+    /// Dispatch to this worker now.
+    Run(Rank),
+    /// Must run on this (kept-affinity) worker; wait for capacity.
+    WaitFor(Rank),
+    /// Kept-affinity worker no longer exists (crashed) — escalate.
+    Lost(Rank),
+    /// Nothing fits: spawn a new worker or queue.
+    Spawn,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{ChunkRef, JobId};
+
+    fn subs() -> Vec<Rank> {
+        vec![Rank(1), Rank(2)]
+    }
+
+    #[test]
+    fn kept_input_pins_scheduler() {
+        let spec = JobSpec::new(10, 1, 1)
+            .with_inputs(vec![ChunkRef::all(JobId(1))]);
+        let mut owners = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(2), kept_on: Some(Rank(7)) },
+        );
+        let load = HashMap::new();
+        let bytes = HashMap::new();
+        assert_eq!(
+            choose_scheduler(&spec, &owners, &bytes, &load, &subs()),
+            Rank(2)
+        );
+    }
+
+    #[test]
+    fn heavy_affinity_beats_load() {
+        let spec = JobSpec::new(10, 1, 1)
+            .with_inputs(vec![ChunkRef::all(JobId(1)), ChunkRef::all(JobId(2))]);
+        let mut owners = HashMap::new();
+        let mut bytes = HashMap::new();
+        for j in [1, 2] {
+            owners.insert(
+                JobId(j),
+                SourceLoc { job: JobId(j), owner: Rank(2), kept_on: None },
+            );
+            bytes.insert(JobId(j), 1 << 20); // 1 MiB each
+        }
+        let mut load = HashMap::new();
+        load.insert(Rank(2), 10); // busier but owns the data
+        assert_eq!(
+            choose_scheduler(&spec, &owners, &bytes, &load, &subs()),
+            Rank(2)
+        );
+    }
+
+    #[test]
+    fn light_affinity_yields_to_load_balancing() {
+        // A few bytes of owned input must not glue every job to one
+        // scheduler (the Jacobi distribute jobs' 4-byte param chunks).
+        let spec = JobSpec::new(10, 1, 1)
+            .with_inputs(vec![ChunkRef::all(JobId(1))]);
+        let mut owners = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(2), kept_on: None },
+        );
+        let mut bytes = HashMap::new();
+        bytes.insert(JobId(1), 16);
+        let mut load = HashMap::new();
+        load.insert(Rank(1), 0);
+        load.insert(Rank(2), 3);
+        assert_eq!(
+            choose_scheduler(&spec, &owners, &bytes, &load, &subs()),
+            Rank(1)
+        );
+    }
+
+    #[test]
+    fn no_affinity_goes_least_loaded() {
+        let spec = JobSpec::new(10, 1, 1);
+        let owners = HashMap::new();
+        let bytes = HashMap::new();
+        let mut load = HashMap::new();
+        load.insert(Rank(1), 3);
+        load.insert(Rank(2), 1);
+        assert_eq!(
+            choose_scheduler(&spec, &owners, &bytes, &load, &subs()),
+            Rank(2)
+        );
+    }
+
+    #[test]
+    fn packing_two_2thread_jobs_on_4core_worker() {
+        // The paper's J3/J4 example.
+        let mut w = WorkerSlot::new(Rank(5), 4);
+        let j3 = JobSpec::new(3, 2, 2);
+        let j4 = JobSpec::new(4, 2, 2);
+        assert_eq!(choose_worker(&j3, None, &[w.clone()]), WorkerChoice::Run(Rank(5)));
+        w.occupy(j3.threads);
+        assert_eq!(choose_worker(&j4, None, &[w.clone()]), WorkerChoice::Run(Rank(5)));
+        w.occupy(j4.threads);
+        // Third 2-thread job no longer fits.
+        let j5 = JobSpec::new(5, 2, 2);
+        assert_eq!(choose_worker(&j5, None, &[w.clone()]), WorkerChoice::Spawn);
+        w.vacate(j3.threads);
+        assert_eq!(choose_worker(&j5, None, &[w]), WorkerChoice::Run(Rank(5)));
+    }
+
+    #[test]
+    fn auto_threads_take_whole_node() {
+        let w = WorkerSlot::new(Rank(5), 4);
+        let auto = JobSpec::new(1, 1, 0); // ThreadCount::Auto
+        let mut w2 = w.clone();
+        w2.occupy(auto.threads);
+        assert_eq!(w2.free_cores, 0);
+        let one = JobSpec::new(2, 1, 1);
+        assert_eq!(choose_worker(&one, None, &[w2]), WorkerChoice::Spawn);
+    }
+
+    #[test]
+    fn best_fit_prefers_tightest_slot() {
+        let mut a = WorkerSlot::new(Rank(1), 4);
+        a.occupy(ThreadCount::Exact(1)); // 3 free
+        let mut b = WorkerSlot::new(Rank(2), 4);
+        b.occupy(ThreadCount::Exact(2)); // 2 free
+        let j = JobSpec::new(9, 1, 2);
+        // Both fit; best-fit picks b (surplus 0 < surplus 1).
+        assert_eq!(choose_worker(&j, None, &[a, b]), WorkerChoice::Run(Rank(2)));
+    }
+
+    #[test]
+    fn kept_affinity_waits_or_escalates() {
+        let mut w = WorkerSlot::new(Rank(3), 2);
+        w.occupy(ThreadCount::Exact(2));
+        let j = JobSpec::new(9, 1, 1);
+        assert_eq!(
+            choose_worker(&j, Some(Rank(3)), &[w]),
+            WorkerChoice::WaitFor(Rank(3))
+        );
+        assert_eq!(
+            choose_worker(&j, Some(Rank(9)), &[]),
+            WorkerChoice::Lost(Rank(9))
+        );
+    }
+}

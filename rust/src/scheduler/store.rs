@@ -1,0 +1,123 @@
+//! Sub-scheduler result store (paper §3.1: "all other schedulers store
+//! their jobs' results and further need to know how to assemble these
+//! results that might be requested as input arguments by any other job").
+
+use std::collections::HashMap;
+
+use crate::data::FunctionData;
+use crate::error::{Error, Result};
+use crate::job::{ChunkRange, JobId};
+
+/// Results owned by one sub-scheduler, plus transient copies of remote
+/// results fetched for local consumers.
+#[derive(Debug, Default)]
+pub struct ResultStore {
+    owned: HashMap<JobId, FunctionData>,
+    /// Fetched from peers for pending local jobs; dropped after use.
+    transient: HashMap<JobId, FunctionData>,
+}
+
+impl ResultStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert_owned(&mut self, job: JobId, data: FunctionData) {
+        self.owned.insert(job, data);
+    }
+
+    pub fn insert_transient(&mut self, job: JobId, data: FunctionData) {
+        self.transient.insert(job, data);
+    }
+
+    /// Serve `range` of a result (owned or transient), zero-copy.
+    pub fn read(&self, job: JobId, range: ChunkRange) -> Result<FunctionData> {
+        let data = self
+            .owned
+            .get(&job)
+            .or_else(|| self.transient.get(&job))
+            .ok_or(Error::ResultNotAvailable(job))?;
+        let r = range.resolve(data.len())?;
+        data.select(r)
+    }
+
+    pub fn contains(&self, job: JobId) -> bool {
+        self.owned.contains_key(&job) || self.transient.contains_key(&job)
+    }
+
+    pub fn is_owned(&self, job: JobId) -> bool {
+        self.owned.contains_key(&job)
+    }
+
+    /// Release an owned result (master's `ReleaseResult`).
+    pub fn release(&mut self, job: JobId) -> bool {
+        self.owned.remove(&job).is_some()
+    }
+
+    /// Drop a transient copy (after the waiting jobs consumed it).
+    pub fn drop_transient(&mut self, job: JobId) {
+        self.transient.remove(&job);
+    }
+
+    pub fn owned_bytes(&self) -> usize {
+        self.owned.values().map(|d| d.size_bytes()).sum()
+    }
+
+    pub fn owned_count(&self) -> usize {
+        self.owned.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataChunk;
+
+    fn data(k: usize) -> FunctionData {
+        (0..k).map(|i| DataChunk::from_i32(vec![i as i32])).collect()
+    }
+
+    #[test]
+    fn owned_and_transient_are_both_readable() {
+        let mut s = ResultStore::new();
+        s.insert_owned(JobId(1), data(3));
+        s.insert_transient(JobId(2), data(2));
+        assert_eq!(s.read(JobId(1), ChunkRange::All).unwrap().len(), 3);
+        assert_eq!(s.read(JobId(2), ChunkRange::All).unwrap().len(), 2);
+        assert!(s.is_owned(JobId(1)));
+        assert!(!s.is_owned(JobId(2)));
+    }
+
+    #[test]
+    fn release_only_touches_owned() {
+        let mut s = ResultStore::new();
+        s.insert_owned(JobId(1), data(1));
+        s.insert_transient(JobId(2), data(1));
+        assert!(s.release(JobId(1)));
+        assert!(!s.release(JobId(2))); // transient not released this way
+        s.drop_transient(JobId(2));
+        assert!(!s.contains(JobId(2)));
+    }
+
+    #[test]
+    fn range_reads() {
+        let mut s = ResultStore::new();
+        s.insert_owned(JobId(1), data(5));
+        let sel = s.read(JobId(1), ChunkRange::Range { lo: 2, hi: 4 }).unwrap();
+        assert_eq!(sel.len(), 2);
+        assert_eq!(sel.chunk(0).unwrap().as_i32().unwrap(), &[2]);
+        assert!(s.read(JobId(1), ChunkRange::Range { lo: 0, hi: 9 }).is_err());
+        assert!(matches!(
+            s.read(JobId(9), ChunkRange::All),
+            Err(Error::ResultNotAvailable(JobId(9)))
+        ));
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut s = ResultStore::new();
+        s.insert_owned(JobId(1), data(4)); // 4 x 4B
+        assert_eq!(s.owned_bytes(), 16);
+        assert_eq!(s.owned_count(), 1);
+    }
+}

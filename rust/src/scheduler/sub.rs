@@ -1,0 +1,655 @@
+//! Sub-scheduler (paper: schedulers with `rank > 0`): owns a worker pool,
+//! assembles job inputs from local/remote/kept results, dispatches with
+//! thread-count packing, stores results, serves them to peers, detects
+//! worker loss and escalates to the master.
+//!
+//! Single-threaded actor: one blocking event loop over the control-plane
+//! mailbox with a liveness tick.  All sends are non-blocking, so the loop
+//! can never deadlock against other actors.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::{Comm, Match, Rank, World};
+use crate::data::FunctionData;
+use crate::job::{ChunkRange, JobId, JobSpec};
+use crate::metrics::MetricsCollector;
+use crate::worker::{run_worker, WorkerConfig};
+
+use super::placement::{choose_worker, WorkerChoice, WorkerSlot};
+use super::store::ResultStore;
+use super::{ExecRequest, FwMsg, InputPart, SourceLoc, TAG_CTRL};
+
+/// Sub-scheduler runtime parameters.
+#[derive(Clone)]
+pub struct SubConfig {
+    pub master: Rank,
+    pub max_workers: usize,
+    pub cores_per_worker: usize,
+    pub prespawn: bool,
+    pub worker: WorkerConfig,
+    /// Liveness tick (worker-loss detection granularity).
+    pub tick: Duration,
+}
+
+/// One input part being resolved.
+#[derive(Debug, Clone)]
+enum PartState {
+    Ready(InputPart),
+    /// Waiting for `src`'s data to become locally available.
+    Await { src: JobId, range: ChunkRange },
+}
+
+#[derive(Debug)]
+struct PendingJob {
+    spec: JobSpec,
+    parts: Vec<PartState>,
+    missing: usize,
+    /// Kept-affinity worker (first kept source wins).
+    pin: Option<Rank>,
+}
+
+struct WorkerEntry {
+    slot: WorkerSlot,
+    /// Jobs currently executing there (spec needed to vacate cores).
+    running: HashMap<JobId, JobSpec>,
+    /// Results retained there.
+    kept: HashSet<JobId>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The sub-scheduler actor. Constructed by [`crate::framework::Framework`].
+pub struct SubScheduler {
+    comm: Comm<FwMsg>,
+    world: World<FwMsg>,
+    cfg: SubConfig,
+    metrics: Arc<MetricsCollector>,
+
+    workers: HashMap<Rank, WorkerEntry>,
+    store: ResultStore,
+    /// Producing job → worker retaining its result.
+    kept_index: HashMap<JobId, Rank>,
+    /// Jobs whose inputs are still being assembled.
+    pending: HashMap<JobId, PendingJob>,
+    /// Inputs resolved; awaiting worker capacity.
+    ready: VecDeque<JobId>,
+    /// Remote/pull source job → local dependent jobs.
+    waiting_on: HashMap<JobId, Vec<JobId>>,
+    /// Fetches already in flight (dedupe).
+    fetch_inflight: HashSet<JobId>,
+    /// Peer `FetchResult`s waiting on a `PullKept` round-trip:
+    /// source job → (range, reply_to).
+    pending_serves: HashMap<JobId, Vec<(ChunkRange, Rank)>>,
+}
+
+impl SubScheduler {
+    pub fn new(
+        comm: Comm<FwMsg>,
+        world: World<FwMsg>,
+        cfg: SubConfig,
+        metrics: Arc<MetricsCollector>,
+    ) -> Self {
+        SubScheduler {
+            comm,
+            world,
+            cfg,
+            metrics,
+            workers: HashMap::new(),
+            store: ResultStore::new(),
+            kept_index: HashMap::new(),
+            pending: HashMap::new(),
+            ready: VecDeque::new(),
+            waiting_on: HashMap::new(),
+            fetch_inflight: HashSet::new(),
+            pending_serves: HashMap::new(),
+        }
+    }
+
+    /// Event loop; returns on `Shutdown`.
+    pub fn run(mut self) {
+        if self.cfg.prespawn {
+            for _ in 0..self.cfg.max_workers {
+                self.spawn_worker();
+            }
+        }
+        loop {
+            match self.comm.recv_match_timeout(Match::any(), self.cfg.tick) {
+                Ok(Some(env)) => {
+                    let src = env.src;
+                    if !self.handle(src, env.into_user()) {
+                        break;
+                    }
+                }
+                Ok(None) => {} // tick
+                Err(_) => break, // world shut down
+            }
+            self.check_worker_liveness();
+            self.try_dispatch();
+        }
+        self.shutdown_workers();
+    }
+
+    // ----------------------------------------------------------- handlers
+
+    fn handle(&mut self, from: Rank, msg: FwMsg) -> bool {
+        match msg {
+            FwMsg::Assign { spec, sources } => self.on_assign(spec, sources),
+            FwMsg::ResultData { job, data } => {
+                self.store.insert_transient(job, data);
+                self.fetch_inflight.remove(&job);
+                self.fill_waiters(job);
+            }
+            FwMsg::ResultUnavailable { job } => self.on_source_lost(job),
+            FwMsg::FetchResult { job, range, reply_to } => {
+                self.serve_fetch(job, range, reply_to)
+            }
+            FwMsg::ReleaseResult { job } => self.on_release(job),
+            FwMsg::ExecDone { job, data, injections, exec_us } => {
+                self.on_exec_done(from, job, data, injections, exec_us)
+            }
+            FwMsg::ExecFailed { job, msg } => {
+                self.forget_running(from, job);
+                let _ = self
+                    .comm
+                    .send(self.cfg.master, TAG_CTRL, FwMsg::JobError { job, msg });
+            }
+            FwMsg::KeptData { job, data } => {
+                // A worker uploaded a retained result (PullKept reply).
+                self.store.insert_owned(job, data);
+                self.serve_pending(job);
+                self.fill_waiters(job);
+            }
+            FwMsg::Shutdown => return false,
+            // Worker-only / master-only messages are protocol noise here.
+            _ => {}
+        }
+        true
+    }
+
+    fn on_assign(&mut self, spec: JobSpec, sources: Vec<SourceLoc>) {
+        let me = self.comm.rank();
+        let job = spec.id;
+        let mut parts = Vec::with_capacity(spec.inputs.len());
+        let mut missing = 0usize;
+        let mut pin: Option<Rank> = None;
+
+        for input in &spec.inputs {
+            let loc = sources.iter().find(|s| s.job == input.job).copied();
+            let src = input.job;
+            let range = input.range;
+            let state = match loc {
+                Some(SourceLoc { owner, kept_on: Some(w), .. }) if owner == me => {
+                    if pin.is_none() || pin == Some(w) {
+                        // Locality win: consume straight from the worker cache.
+                        pin = Some(w);
+                        PartState::Ready(InputPart::Kept { job: src, range })
+                    } else {
+                        // Kept on a *different* local worker than the pin:
+                        // pull it up to the scheduler.
+                        self.request_pull(src);
+                        missing += 1;
+                        PartState::Await { src, range }
+                    }
+                }
+                Some(SourceLoc { owner, .. }) if owner == me => {
+                    if self.store.contains(src) {
+                        match self.store.read(src, range) {
+                            Ok(data) => PartState::Ready(InputPart::Data(data)),
+                            Err(e) => {
+                                // Result exists but the range is invalid —
+                                // a permanent user error, not a fault.
+                                self.fail_job(job, &e);
+                                return;
+                            }
+                        }
+                    } else {
+                        // We supposedly own it but it is gone (lost
+                        // worker race) — abort to master for recovery.
+                        self.abort_job(job, src);
+                        return;
+                    }
+                }
+                Some(SourceLoc { owner, .. }) => {
+                    // Remote: fetch the full result once, slice locally.
+                    if self.store.contains(src) {
+                        match self.store.read(src, range) {
+                            Ok(data) => PartState::Ready(InputPart::Data(data)),
+                            Err(e) => {
+                                self.fail_job(job, &e);
+                                return;
+                            }
+                        }
+                    } else {
+                        if self.fetch_inflight.insert(src) {
+                            let _ = self.comm.send(
+                                owner,
+                                TAG_CTRL,
+                                FwMsg::FetchResult {
+                                    job: src,
+                                    range: ChunkRange::All,
+                                    reply_to: me,
+                                },
+                            );
+                        }
+                        missing += 1;
+                        PartState::Await { src, range }
+                    }
+                }
+                None => {
+                    // Master did not know where the result lives.
+                    self.abort_job(job, src);
+                    return;
+                }
+            };
+            if matches!(state, PartState::Await { .. }) {
+                self.waiting_on.entry(src).or_default().push(job);
+            }
+            parts.push(state);
+        }
+
+        let pj = PendingJob { spec, parts, missing, pin };
+        if pj.missing == 0 {
+            self.pending.insert(job, pj);
+            self.ready.push_back(job);
+        } else {
+            self.pending.insert(job, pj);
+        }
+    }
+
+    fn request_pull(&mut self, src: JobId) {
+        if self.fetch_inflight.insert(src) {
+            if let Some(&w) = self.kept_index.get(&src) {
+                if self
+                    .comm
+                    .send(w, TAG_CTRL, FwMsg::PullKept { job: src })
+                    .is_err()
+                {
+                    // Worker died between bookkeeping and pull.
+                    self.fetch_inflight.remove(&src);
+                    self.check_worker_liveness();
+                }
+            } else {
+                self.fetch_inflight.remove(&src);
+            }
+        }
+    }
+
+    /// New data for `src` became locally readable: resolve awaiting parts.
+    fn fill_waiters(&mut self, src: JobId) {
+        let Some(waiters) = self.waiting_on.remove(&src) else { return };
+        for dep in waiters {
+            let Some(pj) = self.pending.get_mut(&dep) else { continue };
+            for part in &mut pj.parts {
+                if let PartState::Await { src: s, range } = part {
+                    if *s == src {
+                        match self.store.read(src, *range) {
+                            Ok(data) => {
+                                *part = PartState::Ready(InputPart::Data(data));
+                                pj.missing -= 1;
+                            }
+                            Err(e) => {
+                                // Range invalid against the fetched result —
+                                // permanent user error.
+                                self.pending.remove(&dep);
+                                let _ = self.comm.send(
+                                    self.cfg.master,
+                                    TAG_CTRL,
+                                    FwMsg::JobError { job: dep, msg: e.to_string() },
+                                );
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            if let Some(pj) = self.pending.get(&dep) {
+                if pj.missing == 0 && !self.ready.contains(&dep) {
+                    self.ready.push_back(dep);
+                }
+            }
+        }
+    }
+
+    fn on_source_lost(&mut self, src: JobId) {
+        self.fetch_inflight.remove(&src);
+        let Some(waiters) = self.waiting_on.remove(&src) else { return };
+        for dep in waiters {
+            if self.pending.remove(&dep).is_some() {
+                self.ready.retain(|&j| j != dep);
+                self.abort_job(dep, src);
+            }
+        }
+    }
+
+    /// Permanent failure (bad chunk range, type error): fail the run.
+    fn fail_job(&mut self, job: JobId, e: &crate::error::Error) {
+        for v in self.waiting_on.values_mut() {
+            v.retain(|&d| d != job);
+        }
+        self.pending.remove(&job);
+        self.ready.retain(|&j| j != job);
+        let _ = self.comm.send(
+            self.cfg.master,
+            TAG_CTRL,
+            FwMsg::JobError { job, msg: e.to_string() },
+        );
+    }
+
+    fn abort_job(&mut self, job: JobId, missing: JobId) {
+        // Clean any other await bookkeeping pointing at this job.
+        for v in self.waiting_on.values_mut() {
+            v.retain(|&d| d != job);
+        }
+        self.pending.remove(&job);
+        self.ready.retain(|&j| j != job);
+        let _ = self.comm.send(
+            self.cfg.master,
+            TAG_CTRL,
+            FwMsg::JobAborted { job, missing },
+        );
+    }
+
+    fn serve_fetch(&mut self, job: JobId, range: ChunkRange, reply_to: Rank) {
+        if self.store.contains(job) {
+            match self.store.read(job, range) {
+                Ok(data) => {
+                    let _ = self
+                        .comm
+                        .send(reply_to, TAG_CTRL, FwMsg::ResultData { job, data });
+                }
+                Err(_) => {
+                    let _ = self.comm.send(
+                        reply_to,
+                        TAG_CTRL,
+                        FwMsg::ResultUnavailable { job },
+                    );
+                }
+            }
+        } else if let Some(&w) = self.kept_index.get(&job) {
+            // Pull from the retaining worker, serve when it arrives.
+            self.pending_serves.entry(job).or_default().push((range, reply_to));
+            if self.comm.send(w, TAG_CTRL, FwMsg::PullKept { job }).is_err() {
+                self.check_worker_liveness();
+                // Liveness pass reported the loss; answer unavailable.
+                for (_, r) in self.pending_serves.remove(&job).unwrap_or_default() {
+                    let _ = self
+                        .comm
+                        .send(r, TAG_CTRL, FwMsg::ResultUnavailable { job });
+                }
+            }
+        } else {
+            let _ = self
+                .comm
+                .send(reply_to, TAG_CTRL, FwMsg::ResultUnavailable { job });
+        }
+    }
+
+    /// Serve peer fetches queued behind a `PullKept`.
+    fn serve_pending(&mut self, job: JobId) {
+        for (range, reply_to) in self.pending_serves.remove(&job).unwrap_or_default() {
+            match self.store.read(job, range) {
+                Ok(data) => {
+                    let _ = self
+                        .comm
+                        .send(reply_to, TAG_CTRL, FwMsg::ResultData { job, data });
+                }
+                Err(_) => {
+                    let _ = self.comm.send(
+                        reply_to,
+                        TAG_CTRL,
+                        FwMsg::ResultUnavailable { job },
+                    );
+                }
+            }
+        }
+    }
+
+    fn on_release(&mut self, job: JobId) {
+        self.store.release(job);
+        self.store.drop_transient(job);
+        if let Some(w) = self.kept_index.remove(&job) {
+            if let Some(entry) = self.workers.get_mut(&w) {
+                entry.kept.remove(&job);
+            }
+            let _ = self.comm.send(w, TAG_CTRL, FwMsg::DropKept { job });
+        }
+    }
+
+    fn on_exec_done(
+        &mut self,
+        worker: Rank,
+        job: JobId,
+        data: Option<FunctionData>,
+        injections: Vec<crate::job::Injection>,
+        _exec_us: u64,
+    ) {
+        let spec = self.forget_running(worker, job);
+        let (kept_on, output_bytes, chunks) = match data {
+            Some(d) => {
+                let bytes = d.size_bytes() as u64;
+                let chunks = d.len();
+                self.store.insert_owned(job, d);
+                // A result that was being awaited locally (recompute path).
+                self.fill_waiters(job);
+                (None, bytes, chunks)
+            }
+            None => {
+                self.kept_index.insert(job, worker);
+                if let Some(entry) = self.workers.get_mut(&worker) {
+                    entry.kept.insert(job);
+                }
+                (Some(worker), 0, 0)
+            }
+        };
+        let _ = spec; // cores already vacated in forget_running
+        self.metrics.job_finished(job, output_bytes);
+        let _ = self.comm.send(
+            self.cfg.master,
+            TAG_CTRL,
+            FwMsg::JobDone { job, kept_on, output_bytes, chunks, injections },
+        );
+    }
+
+    fn forget_running(&mut self, worker: Rank, job: JobId) -> Option<JobSpec> {
+        if let Some(entry) = self.workers.get_mut(&worker) {
+            if let Some(spec) = entry.running.remove(&job) {
+                entry.slot.vacate(spec.threads);
+                return Some(spec);
+            }
+        }
+        None
+    }
+
+    // ----------------------------------------------------------- dispatch
+
+    fn try_dispatch(&mut self) {
+        let mut requeue = VecDeque::new();
+        while let Some(job) = self.ready.pop_front() {
+            let Some(pj) = self.pending.get(&job) else { continue };
+            let slots: Vec<WorkerSlot> =
+                self.workers.values().map(|w| w.slot.clone()).collect();
+            match choose_worker(&pj.spec, pj.pin, &slots) {
+                WorkerChoice::Run(w) => self.dispatch_to(job, w),
+                WorkerChoice::WaitFor(_) => requeue.push_back(job),
+                WorkerChoice::Lost(_) => {
+                    let missing = pj
+                        .parts
+                        .iter()
+                        .find_map(|p| match p {
+                            PartState::Ready(InputPart::Kept { job, .. }) => Some(*job),
+                            _ => None,
+                        })
+                        .unwrap_or(job);
+                    self.pending.remove(&job);
+                    self.abort_job(job, missing);
+                }
+                WorkerChoice::Spawn => {
+                    if self.workers.len() < self.cfg.max_workers {
+                        let w = self.spawn_worker();
+                        self.dispatch_to(job, w);
+                    } else {
+                        requeue.push_back(job);
+                    }
+                }
+            }
+        }
+        self.ready = requeue;
+    }
+
+    fn dispatch_to(&mut self, job: JobId, worker: Rank) {
+        let Some(pj) = self.pending.remove(&job) else { return };
+        let input: Vec<InputPart> = pj
+            .parts
+            .iter()
+            .map(|p| match p {
+                PartState::Ready(part) => part.clone(),
+                PartState::Await { .. } => {
+                    unreachable!("dispatching job with unresolved inputs")
+                }
+            })
+            .collect();
+        let spec = pj.spec.clone();
+        let req = ExecRequest { spec: spec.clone(), input };
+        self.metrics.job_started(job, worker.0);
+        if self.comm.send(worker, TAG_CTRL, FwMsg::Exec(req)).is_err() {
+            // Worker died in the window: report and requeue via master.
+            self.pending.insert(job, pj);
+            self.ready.push_back(job);
+            self.check_worker_liveness();
+            return;
+        }
+        if let Some(entry) = self.workers.get_mut(&worker) {
+            entry.slot.occupy(spec.threads);
+            entry.running.insert(job, spec);
+        }
+    }
+
+    fn spawn_worker(&mut self) -> Rank {
+        let comm = self.world.add_rank();
+        let rank = comm.rank();
+        let me = self.comm.rank();
+        let wcfg = self.cfg.worker.clone();
+        let cores = self.cfg.cores_per_worker;
+        let handle = std::thread::Builder::new()
+            .name(format!("hypar-worker-{}", rank.0))
+            .spawn(move || run_worker(comm, me, wcfg))
+            .expect("spawn worker thread");
+        self.workers.insert(
+            rank,
+            WorkerEntry {
+                slot: WorkerSlot::new(rank, cores),
+                running: HashMap::new(),
+                kept: HashSet::new(),
+                handle: Some(handle),
+            },
+        );
+        self.metrics.worker_spawned();
+        rank
+    }
+
+    // ------------------------------------------------------------- faults
+
+    fn check_worker_liveness(&mut self) {
+        let dead: Vec<Rank> = self
+            .workers
+            .keys()
+            .copied()
+            .filter(|r| !self.world.is_alive(*r))
+            .collect();
+        for rank in dead {
+            let entry = self.workers.remove(&rank).expect("listed");
+            if let Some(h) = entry.handle {
+                let _ = h.join();
+            }
+            let lost: Vec<JobId> = entry.kept.iter().copied().collect();
+            let running: Vec<JobId> = entry.running.keys().copied().collect();
+            for j in &lost {
+                self.kept_index.remove(j);
+            }
+            // Peer fetches waiting on this worker's kept data fail now.
+            for j in &lost {
+                for (_, reply_to) in self.pending_serves.remove(j).unwrap_or_default() {
+                    let _ = self.comm.send(
+                        reply_to,
+                        TAG_CTRL,
+                        FwMsg::ResultUnavailable { job: *j },
+                    );
+                }
+                self.fetch_inflight.remove(j);
+            }
+            // Local jobs pinned to (or awaiting pulls from) the dead worker.
+            let lost_set: HashSet<JobId> = lost.iter().copied().collect();
+            let doomed: Vec<JobId> = self
+                .pending
+                .iter()
+                .filter(|(_, pj)| {
+                    pj.pin == Some(rank)
+                        || pj.parts.iter().any(|p| match p {
+                            PartState::Ready(InputPart::Kept { job, .. }) => {
+                                lost_set.contains(job)
+                            }
+                            PartState::Await { src, .. } => lost_set.contains(src),
+                            _ => false,
+                        })
+                })
+                .map(|(&j, _)| j)
+                .collect();
+            for dep in doomed {
+                let missing = lost.first().copied().unwrap_or(dep);
+                self.pending.remove(&dep);
+                self.ready.retain(|&j| j != dep);
+                self.abort_job(dep, missing);
+            }
+            let _ = self.comm.send(
+                self.cfg.master,
+                TAG_CTRL,
+                FwMsg::WorkerLostReport { worker: rank, lost, running },
+            );
+        }
+    }
+
+    // ----------------------------------------------------------- shutdown
+
+    fn shutdown_workers(&mut self) {
+        for (rank, entry) in self.workers.iter_mut() {
+            let _ = self.comm.send(*rank, TAG_CTRL, FwMsg::WorkerShutdown);
+            let _ = entry.handle.take().map(|h| h.join());
+        }
+        self.workers.clear();
+        self.comm.deregister();
+    }
+}
+
+impl Drop for SubScheduler {
+    fn drop(&mut self) {
+        self.shutdown_workers();
+    }
+}
+
+/// Public result: the sub-scheduler's identity and join handle as seen by
+/// the framework.
+pub struct SubHandle {
+    pub rank: Rank,
+    pub handle: std::thread::JoinHandle<()>,
+}
+
+/// Spawn a sub-scheduler actor on its own thread.
+pub fn spawn_sub(
+    world: &World<FwMsg>,
+    cfg: SubConfig,
+    metrics: Arc<MetricsCollector>,
+) -> SubHandle {
+    let comm = world.add_rank();
+    let rank = comm.rank();
+    let world2 = world.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("hypar-sub-{}", rank.0))
+        .spawn(move || SubScheduler::new(comm, world2, cfg, metrics).run())
+        .expect("spawn sub-scheduler thread");
+    SubHandle { rank, handle }
+}
+
+// `Result` referenced in doc comments.
+#[allow(unused_imports)]
+use crate::error::Error as _DocAnchor;

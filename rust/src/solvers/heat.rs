@@ -1,0 +1,414 @@
+//! 2-D heat diffusion through the framework — the "engineering simulation
+//! code" workload the paper's introduction motivates.
+//!
+//! The domain (interior `h x w`, zero Dirichlet ring) is split into `p`
+//! horizontal strips.  Each strip lives on a worker under keep-results;
+//! per explicit Euler step the framework runs
+//!
+//! * an **edges** segment — each strip publishes its first/last row (the
+//!   only data that must travel),
+//! * a **step** segment — each strip consumes its own kept state plus the
+//!   neighbours' halo rows and applies the 5-point stencil (AOT
+//!   `heat_strip` artifact via PJRT, or rust loops).
+//!
+//! The schedule is built statically (`steps` is known), demonstrating the
+//! framework on deep multi-segment algorithms; the Jacobi solver covers
+//! the dynamic-injection path.
+
+use std::sync::Arc;
+
+use crate::data::DataChunk;
+use crate::error::{Error, Result};
+use crate::framework::Framework;
+use crate::job::registry::FunctionRegistry;
+use crate::job::{Algorithm, ChunkRef, JobId, JobSpec};
+use crate::metrics::MetricsSnapshot;
+use crate::runtime::Manifest;
+
+use super::KernelPath;
+
+pub const F_PARAMS: u32 = 200;
+pub const F_INIT: u32 = 201;
+pub const F_EDGES: u32 = 202;
+pub const F_STEP: u32 = 203;
+
+const J_PARAMS: u32 = 1;
+const J_D0: u32 = 10;
+const J_DYN0: u32 = 1000;
+
+/// Heat experiment configuration.
+#[derive(Debug, Clone)]
+pub struct HeatConfig {
+    /// Interior rows (split into strips; must be divisible by `strips`).
+    pub h: usize,
+    /// Columns (first/last are Dirichlet).
+    pub w: usize,
+    pub strips: usize,
+    pub steps: usize,
+    /// Diffusion number `dt*k/dx^2` (stability: `<= 0.25`).
+    pub alpha: f32,
+    /// Hot-square initial temperature.
+    pub hot: f32,
+    pub kernel: KernelPath,
+    pub artifact_dir: std::path::PathBuf,
+}
+
+impl HeatConfig {
+    pub fn new(h: usize, w: usize, strips: usize, steps: usize) -> Self {
+        HeatConfig {
+            h,
+            w,
+            strips,
+            steps,
+            alpha: 0.2,
+            hot: 100.0,
+            kernel: KernelPath::Rust,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+
+    pub fn with_kernel(mut self, k: KernelPath) -> Self {
+        self.kernel = k;
+        self
+    }
+
+    pub fn bm(&self) -> usize {
+        self.h / self.strips
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.strips == 0 || self.h % self.strips != 0 {
+            return Err(Error::Config(format!(
+                "h={} must divide into strips={}",
+                self.h, self.strips
+            )));
+        }
+        if self.steps == 0 {
+            return Err(Error::Config("steps must be >= 1".into()));
+        }
+        if self.alpha > 0.25 {
+            return Err(Error::Config("alpha > 0.25 is unstable".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Initial condition: zero field with a hot square in the middle
+/// (interior coordinates).
+pub fn initial_field(cfg: &HeatConfig) -> Vec<f32> {
+    let mut u = vec![0.0f32; cfg.h * cfg.w];
+    for r in cfg.h / 4..(3 * cfg.h / 4) {
+        for c in cfg.w / 4..(3 * cfg.w / 4) {
+            u[r * cfg.w + c] = cfg.hot;
+        }
+    }
+    u
+}
+
+/// One sequential stencil step over the whole interior (zero rows assumed
+/// above/below, Dirichlet columns preserved). The reference the framework
+/// run must reproduce.
+pub fn seq_step(u: &[f32], h: usize, w: usize, alpha: f32) -> Vec<f32> {
+    let at = |r: isize, c: usize| -> f32 {
+        if r < 0 || r >= h as isize {
+            0.0
+        } else {
+            u[r as usize * w + c]
+        }
+    };
+    let mut out = u.to_vec();
+    for r in 0..h as isize {
+        for c in 1..w - 1 {
+            let centre = at(r, c);
+            let lap = at(r - 1, c) + at(r + 1, c) + at(r, c - 1) + at(r, c + 1)
+                - 4.0 * centre;
+            out[r as usize * w + c] = centre + alpha * lap;
+        }
+    }
+    out
+}
+
+/// Sequential reference run.
+pub fn heat_seq(cfg: &HeatConfig) -> Vec<f32> {
+    let mut u = initial_field(cfg);
+    for _ in 0..cfg.steps {
+        u = seq_step(&u, cfg.h, cfg.w, cfg.alpha);
+    }
+    u
+}
+
+/// Rust-path strip update: `strip` is `bm x w`, halos are `w`-length rows
+/// (zeros at the global boundary).
+fn rust_strip_step(
+    strip: &[f32],
+    above: &[f32],
+    below: &[f32],
+    bm: usize,
+    w: usize,
+    alpha: f32,
+) -> Vec<f32> {
+    let row = |i: isize| -> &[f32] {
+        if i < 0 {
+            above
+        } else if i >= bm as isize {
+            below
+        } else {
+            &strip[i as usize * w..(i as usize + 1) * w]
+        }
+    };
+    let mut out = strip.to_vec();
+    for i in 0..bm as isize {
+        for c in 1..w - 1 {
+            let centre = row(i)[c];
+            let lap =
+                row(i - 1)[c] + row(i + 1)[c] + row(i)[c - 1] + row(i)[c + 1] - 4.0 * centre;
+            out[i as usize * w + c] = centre + alpha * lap;
+        }
+    }
+    out
+}
+
+/// Build the heat registry.
+pub fn build_registry(cfg: &HeatConfig) -> Result<FunctionRegistry> {
+    cfg.validate()?;
+    let p = cfg.strips;
+    let (h, w, bm) = (cfg.h, cfg.w, cfg.bm());
+    let alpha = cfg.alpha;
+    let init = Arc::new(initial_field(cfg));
+
+    let artifact: Option<String> = match cfg.kernel.variant() {
+        Some(variant) => {
+            let manifest = Manifest::load(&cfg.artifact_dir)?;
+            Some(manifest.heat_strip(variant, bm + 2, w)?.to_string())
+        }
+        None => None,
+    };
+
+    let mut reg = FunctionRegistry::new();
+
+    reg.register_plain(F_PARAMS, "heat_params", move |_in, out| {
+        for k in 0..p {
+            out.push(DataChunk::scalar_i32(k as i32));
+        }
+        Ok(())
+    });
+
+    let init2 = init.clone();
+    reg.register_plain(F_INIT, "heat_init_strip", move |input, out| {
+        let k = input.chunk(0)?.first_i32()? as usize;
+        let lo = k * bm * w;
+        out.push(DataChunk::from_f32(init2[lo..lo + bm * w].to_vec()));
+        Ok(())
+    });
+
+    reg.register_plain(F_EDGES, "heat_edges", move |input, out| {
+        let strip = input.chunk(0)?.as_f32()?;
+        out.push(DataChunk::from_f32(strip[..w].to_vec()));
+        out.push(DataChunk::from_f32(strip[strip.len() - w..].to_vec()));
+        Ok(())
+    });
+
+    let _ = h;
+    reg.register_with_ctx(F_STEP, "heat_step", move |input, out, ctx| {
+        // chunks: [k] [strip] then above-halo (if k>0) then below (if k<p-1)
+        let k = input.chunk(0)?.first_i32()? as usize;
+        let strip = input.chunk(1)?.as_f32()?;
+        let mut next = 2usize;
+        let zeros = vec![0.0f32; w];
+        let above: &[f32] = if k > 0 {
+            let s = input.chunk(next)?.as_f32()?;
+            next += 1;
+            s
+        } else {
+            &zeros
+        };
+        let below: &[f32] = if k < p - 1 {
+            input.chunk(next)?.as_f32()?
+        } else {
+            &zeros
+        };
+        match &artifact {
+            Some(name) => {
+                // Kernel input layout: [above; strip; below] = (bm+2, w).
+                let mut buf = Vec::with_capacity((bm + 2) * w);
+                buf.extend_from_slice(above);
+                buf.extend_from_slice(strip);
+                buf.extend_from_slice(below);
+                let outputs = ctx.engine()?.execute(
+                    name,
+                    &[DataChunk::from_f32(buf), DataChunk::scalar_f32(alpha)],
+                )?;
+                out.push(outputs.into_iter().next().ok_or_else(|| {
+                    Error::Assemble("heat artifact returned nothing".into())
+                })?);
+            }
+            None => {
+                out.push(DataChunk::from_f32(rust_strip_step(
+                    strip, above, below, bm, w, alpha,
+                )));
+            }
+        }
+        Ok(())
+    });
+
+    Ok(reg)
+}
+
+/// Statically unrolled heat algorithm: `2 + 2*steps` segments.
+pub fn build_algorithm(cfg: &HeatConfig) -> Result<Algorithm> {
+    cfg.validate()?;
+    let p = cfg.strips as u32;
+    let mut b = Algorithm::builder()
+        .segment(vec![JobSpec::new(J_PARAMS, F_PARAMS, 1)])
+        .segment(
+            (0..p)
+                .map(|k| {
+                    // Auto threads: a strip owner occupies a whole worker
+                    // "node", so the p strips land on p distinct workers
+                    // (same physical model as the Jacobi block owners).
+                    JobSpec::new(J_D0 + k, F_INIT, 0)
+                        .with_inputs(vec![ChunkRef::slice(
+                            JobId(J_PARAMS),
+                            k as usize,
+                            k as usize + 1,
+                        )])
+                        .with_keep(true)
+                })
+                .collect(),
+        );
+
+    // strip-state job id of strip k *before* step t
+    let mut state: Vec<u32> = (0..p).map(|k| J_D0 + k).collect();
+    let mut next_id = J_DYN0;
+    for t in 0..cfg.steps {
+        // Edges segment.
+        let edge_ids: Vec<u32> = (0..p).map(|k| next_id + k).collect();
+        next_id += p;
+        b = b.segment(
+            (0..p as usize)
+                .map(|k| {
+                    JobSpec::new(edge_ids[k], F_EDGES, 1)
+                        .with_inputs(vec![ChunkRef::all(JobId(state[k]))])
+                })
+                .collect(),
+        );
+        // Step segment. Last step's results are shipped back (not kept) so
+        // the master can collect the final field.
+        let last = t + 1 == cfg.steps;
+        let step_ids: Vec<u32> = (0..p).map(|k| next_id + k).collect();
+        next_id += p;
+        b = b.segment(
+            (0..p as usize)
+                .map(|k| {
+                    let mut inputs = vec![
+                        ChunkRef::slice(JobId(J_PARAMS), k, k + 1),
+                        ChunkRef::all(JobId(state[k])),
+                    ];
+                    if k > 0 {
+                        // neighbour above's bottom row
+                        inputs.push(ChunkRef::slice(JobId(edge_ids[k - 1]), 1, 2));
+                    }
+                    if k + 1 < p as usize {
+                        // neighbour below's top row
+                        inputs.push(ChunkRef::slice(JobId(edge_ids[k + 1]), 0, 1));
+                    }
+                    JobSpec::new(step_ids[k], F_STEP, 0)
+                        .with_inputs(inputs)
+                        .with_keep(!last)
+                })
+                .collect(),
+        );
+        state = step_ids;
+    }
+    b.build()
+}
+
+/// Run the framework heat simulation; returns `(field, metrics)`.
+pub fn run(cfg: &HeatConfig, schedulers: usize) -> Result<(Vec<f32>, MetricsSnapshot)> {
+    let registry = build_registry(cfg)?;
+    let algo = build_algorithm(cfg)?;
+    let mut builder = Framework::builder()
+        .schedulers(schedulers)
+        .workers_per_scheduler(cfg.strips.div_ceil(schedulers) + 1)
+        .cores_per_worker(4)
+        .registry(registry);
+    if cfg.kernel.variant().is_some() {
+        builder = builder.artifacts(cfg.artifact_dir.clone());
+    }
+    let fw = builder.build()?;
+    let report = fw.run(algo)?;
+
+    // Final segment: p strip jobs in id order == strip order.
+    let mut field = Vec::with_capacity(cfg.h * cfg.w);
+    for (_, data) in report.results.iter() {
+        field.extend_from_slice(data.chunk(0)?.as_f32()?);
+    }
+    if field.len() != cfg.h * cfg.w {
+        return Err(Error::Assemble(format!(
+            "assembled field has {} values, expected {}",
+            field.len(),
+            cfg.h * cfg.w
+        )));
+    }
+    Ok((field, report.metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_shape() {
+        let cfg = HeatConfig::new(16, 8, 4, 3);
+        let algo = build_algorithm(&cfg).unwrap();
+        assert_eq!(algo.segments.len(), 2 + 2 * 3);
+        // final segment: step jobs, not kept
+        let last = algo.segments.last().unwrap();
+        assert_eq!(last.len(), 4);
+        assert!(last.jobs.iter().all(|j| !j.keep));
+        // intermediate step jobs are kept
+        assert!(algo.segments[3].jobs.iter().all(|j| j.keep));
+    }
+
+    #[test]
+    fn seq_step_conserves_boundary_columns() {
+        let cfg = HeatConfig::new(8, 8, 1, 1);
+        let u = initial_field(&cfg);
+        let v = seq_step(&u, 8, 8, 0.2);
+        for r in 0..8 {
+            assert_eq!(v[r * 8], u[r * 8]);
+            assert_eq!(v[r * 8 + 7], u[r * 8 + 7]);
+        }
+    }
+
+    #[test]
+    fn strip_decomposition_matches_sequential() {
+        let cfg = HeatConfig::new(12, 10, 3, 1);
+        let u = initial_field(&cfg);
+        let bm = cfg.bm();
+        let w = cfg.w;
+        let full = seq_step(&u, cfg.h, cfg.w, cfg.alpha);
+        let zeros = vec![0.0f32; w];
+        for k in 0..3usize {
+            let strip = &u[k * bm * w..(k + 1) * bm * w];
+            let above: &[f32] =
+                if k == 0 { &zeros } else { &u[(k * bm - 1) * w..k * bm * w] };
+            let below: &[f32] = if k == 2 {
+                &zeros
+            } else {
+                &u[(k + 1) * bm * w..((k + 1) * bm + 1) * w]
+            };
+            let got = rust_strip_step(strip, above, below, bm, w, cfg.alpha);
+            assert_eq!(got, full[k * bm * w..(k + 1) * bm * w].to_vec(), "strip {k}");
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(HeatConfig::new(10, 8, 3, 1).validate().is_err()); // 10 % 3
+        assert!(HeatConfig::new(8, 8, 2, 0).validate().is_err());
+        let mut c = HeatConfig::new(8, 8, 2, 1);
+        c.alpha = 0.3;
+        assert!(c.validate().is_err());
+    }
+}

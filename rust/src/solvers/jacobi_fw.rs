@@ -1,0 +1,357 @@
+//! The paper's evaluation workload: a parallel Jacobi solver expressed
+//! through the framework's job model (paper §4).
+//!
+//! Job graph (p participants):
+//!
+//! ```text
+//! seg 0:  PARAMS (p index chunks)          X0 (initial iterate, n zeros)
+//! seg 1:  D_1 .. D_p   block generators — KEEP-RESULTS: the (bm x n)
+//!                      matrix block never leaves its worker
+//! seg 2:  S_1 .. S_p   sweep jobs: input = R_Dk (kept, zero transfer)
+//!                      ++ R_x (current iterate); hot-spot runs the AOT
+//!                      jacobi_block artifact via PJRT (or rust loops)
+//! seg 3:  ASM          assembles x' from the sweep outputs, sums Σr²,
+//!                      and — unless converged / iteration budget spent —
+//!                      INJECTS segments 4 (S'_1..S'_p) and 5 (ASM') at
+//!                      runtime: the paper's dynamic job creation, which
+//!                      is how the `while res > ε` loop is expressed.
+//! ...repeats 2 segments per iteration...
+//! ```
+//!
+//! The final segment is the last `ASM`, so [`crate::framework::RunReport`]
+//! hands back `[x, Σr²]` directly.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::comm::StatsSnapshot;
+use crate::data::{matrix, DataChunk};
+use crate::error::{Error, Result};
+use crate::framework::Framework;
+use crate::job::registry::{FunctionRegistry, JobCtx};
+use crate::job::{
+    Algorithm, ChunkRange, ChunkRef, FuncId, InjectedJob, InjectedRef, JobId,
+    JobSpec, ThreadCount,
+};
+use crate::metrics::MetricsSnapshot;
+use crate::runtime::Manifest;
+
+use super::{rust_block_sweep, JacobiConfig, SolveOutcome};
+
+/// Function ids of the Jacobi job family.
+pub const F_PARAMS: u32 = 100;
+pub const F_X0: u32 = 101;
+pub const F_GEN: u32 = 102;
+pub const F_SWEEP: u32 = 103;
+pub const F_ASSEMBLE: u32 = 104;
+
+/// Static job ids (injection allocates above these).
+const J_PARAMS: u32 = 1;
+const J_X0: u32 = 2;
+const J_D0: u32 = 10;
+const J_S0: u32 = 100;
+const J_ASM: u32 = 900;
+
+/// Per-run shared state captured by the assemble closure.
+struct LoopState {
+    iter: AtomicUsize,
+    max_iters: usize,
+    tol: f64,
+    p: usize,
+    d_ids: Vec<u32>,
+}
+
+/// Build the Jacobi function registry for `cfg` (artifact name resolved
+/// once here if an engine path is requested).
+pub fn build_registry(cfg: &JacobiConfig) -> Result<FunctionRegistry> {
+    let n_pad = cfg.n_pad();
+    let bm = cfg.bm();
+    let p = cfg.procs;
+    let seed = cfg.seed;
+    let n_logical = cfg.n;
+
+    // Resolve the artifact once (fails fast if artifacts are missing).
+    let artifact: Option<String> = match cfg.kernel.variant() {
+        Some(variant) => {
+            let manifest = Manifest::load(&cfg.artifact_dir)?;
+            Some(manifest.jacobi_block(variant, n_pad, bm)?.to_string())
+        }
+        None => None,
+    };
+
+    let mut reg = FunctionRegistry::new();
+
+    reg.register_plain(F_PARAMS, "jacobi_params", move |_in, out| {
+        for k in 0..p {
+            out.push(DataChunk::scalar_i32(k as i32));
+        }
+        Ok(())
+    });
+
+    reg.register_plain(F_X0, "jacobi_x0", move |_in, out| {
+        out.push(DataChunk::from_f32(vec![0.0f32; n_pad]));
+        Ok(())
+    });
+
+    reg.register_plain(F_GEN, "jacobi_gen_block", move |input, out| {
+        let k = input.chunk(0)?.first_i32()? as usize;
+        let lo = k * bm;
+        let hi = lo + bm;
+        let (a, b, invd) = matrix::gen_block(n_logical, n_pad, seed, lo, hi);
+        out.push(DataChunk::from_f32(a));
+        out.push(DataChunk::from_f32(b));
+        out.push(DataChunk::from_f32(invd));
+        out.push(DataChunk::scalar_i32(lo as i32));
+        Ok(())
+    });
+
+    let sweep_artifact = artifact.clone();
+    reg.register_with_ctx(F_SWEEP, "jacobi_sweep", move |input, out, ctx| {
+        // Input chunk order: [A, b, invd, offset] (kept D result) ++ [x].
+        let a = input.chunk(0)?;
+        let b = input.chunk(1)?;
+        let invd = input.chunk(2)?;
+        let offset = input.chunk(3)?;
+        let x = input.chunk(4)?;
+        match &sweep_artifact {
+            Some(name) => {
+                // Artifact input order: (a_blk, x, b_blk, invdiag, offset).
+                let outputs = ctx.engine()?.execute(
+                    name,
+                    &[a.clone(), x.clone(), b.clone(), invd.clone(), offset.clone()],
+                )?;
+                for o in outputs {
+                    out.push(o);
+                }
+                Ok(())
+            }
+            None => {
+                let xs = x.as_f32()?;
+                let bs = b.as_f32()?;
+                let off = offset.first_i32()? as usize;
+                let mut x_new = vec![0.0f32; bs.len()];
+                let res2 = rust_block_sweep(
+                    a.as_f32()?,
+                    xs,
+                    bs,
+                    invd.as_f32()?,
+                    off,
+                    &mut x_new,
+                    xs.len(),
+                );
+                out.push(DataChunk::from_f32(x_new));
+                out.push(DataChunk::from_f32(vec![res2 as f32]));
+                Ok(())
+            }
+        }
+    });
+
+    let state = Arc::new(LoopState {
+        iter: AtomicUsize::new(0),
+        max_iters: cfg.iters,
+        tol: 0.0, // fixed-iteration mode (paper ran 500 iterations)
+        p,
+        d_ids: (0..p as u32).map(|k| J_D0 + k).collect(),
+    });
+    reg.register_with_ctx(F_ASSEMBLE, "jacobi_assemble", move |input, out, ctx| {
+        // Input: p pairs (x_blk, res2).
+        if input.len() != 2 * state.p {
+            return Err(Error::Assemble(format!(
+                "assemble expects {} chunks, got {}",
+                2 * state.p,
+                input.len()
+            )));
+        }
+        let mut x = Vec::new();
+        let mut res2 = 0.0f64;
+        for k in 0..state.p {
+            x.extend_from_slice(input.chunk(2 * k)?.as_f32()?);
+            res2 += input.chunk(2 * k + 1)?.first_f32()? as f64;
+        }
+        out.push(DataChunk::from_f32(x));
+        out.push(DataChunk::from_f32(vec![res2 as f32]));
+
+        let done_iters = state.iter.fetch_add(1, Ordering::SeqCst) + 1;
+        if done_iters < state.max_iters && res2.sqrt() > state.tol {
+            inject_next_iteration(ctx, &state);
+        }
+        Ok(())
+    });
+
+    Ok(reg)
+}
+
+/// Inject the next iteration's sweep segment + assemble segment.
+fn inject_next_iteration(ctx: &JobCtx, state: &LoopState) {
+    let sweeps: Vec<InjectedJob> = (0..state.p)
+        .map(|k| InjectedJob {
+            local_id: k as u32,
+            func: FuncId(F_SWEEP),
+            threads: ThreadCount::Auto,
+            inputs: vec![
+                InjectedRef::Existing(ChunkRef::all(JobId(state.d_ids[k]))),
+                // chunk 0 of *this* assemble job's result = the new x.
+                InjectedRef::Existing(ChunkRef {
+                    job: ctx.job,
+                    range: ChunkRange::Range { lo: 0, hi: 1 },
+                }),
+            ],
+            keep: false,
+        })
+        .collect();
+    let assemble = InjectedJob {
+        local_id: state.p as u32,
+        func: FuncId(F_ASSEMBLE),
+        threads: ThreadCount::Exact(1),
+        inputs: (0..state.p)
+            .map(|k| InjectedRef::Local { local_id: k as u32, range: ChunkRange::All })
+            .collect(),
+        keep: false,
+    };
+    ctx.inject(1, sweeps);
+    ctx.inject(2, vec![assemble]);
+}
+
+/// The static seed algorithm (2 iterations' worth of segments; the rest is
+/// injected at runtime).
+pub fn build_algorithm(cfg: &JacobiConfig) -> Result<Algorithm> {
+    let p = cfg.procs as u32;
+    let mut b = Algorithm::builder().segment(vec![
+        JobSpec::new(J_PARAMS, F_PARAMS, 1),
+        JobSpec::new(J_X0, F_X0, 1),
+    ]);
+    // Distribute jobs: keep-results (the block stays on its worker).
+    // ThreadCount::Auto: a block owner occupies a whole worker "node", so
+    // the p blocks land on p distinct workers and sweeps run in parallel
+    // (the physical model behind the Figure-3 process counts).
+    b = b.segment(
+        (0..p)
+            .map(|k| {
+                JobSpec::new(J_D0 + k, F_GEN, 0)
+                    .with_inputs(vec![ChunkRef::slice(
+                        JobId(J_PARAMS),
+                        k as usize,
+                        k as usize + 1,
+                    )])
+                    .with_keep(cfg.keep_blocks)
+            })
+            .collect(),
+    );
+    // First sweep segment.
+    b = b.segment(
+        (0..p)
+            .map(|k| {
+                JobSpec::new(J_S0 + k, F_SWEEP, 0).with_inputs(vec![
+                    ChunkRef::all(JobId(J_D0 + k)),
+                    ChunkRef::slice(JobId(J_X0), 0, 1),
+                ])
+            })
+            .collect(),
+    );
+    // First assemble.
+    b = b.segment(vec![JobSpec::new(J_ASM, F_ASSEMBLE, 1).with_inputs(
+        (0..p).map(|k| ChunkRef::all(JobId(J_S0 + k))).collect(),
+    )]);
+    b.build()
+}
+
+/// Scheduler topology for a Jacobi run.
+#[derive(Debug, Clone)]
+pub struct FwTopology {
+    pub schedulers: usize,
+    pub cores_per_worker: usize,
+}
+
+impl Default for FwTopology {
+    fn default() -> Self {
+        FwTopology { schedulers: 2, cores_per_worker: 4 }
+    }
+}
+
+/// Run the framework Jacobi end to end.
+pub fn run(cfg: &JacobiConfig, topo: &FwTopology) -> Result<(SolveOutcome, MetricsSnapshot)> {
+    if cfg.iters == 0 {
+        return Err(Error::Config("iters must be >= 1".into()));
+    }
+    let registry = build_registry(cfg)?;
+    let algo = build_algorithm(cfg)?;
+
+    let mut builder = Framework::builder()
+        .schedulers(topo.schedulers)
+        // +2: block workers (pinned by keep) plus slack for control jobs.
+        .workers_per_scheduler(cfg.procs.div_ceil(topo.schedulers) + 2)
+        .cores_per_worker(topo.cores_per_worker)
+        .registry(registry);
+    if cfg.kernel.variant().is_some() {
+        builder = builder.artifacts(artifact_dir_checked(cfg)?);
+    }
+    let fw = builder.build()?;
+
+    let t0 = std::time::Instant::now();
+    let report = fw.run(algo)?;
+    let wall = t0.elapsed();
+
+    // The final segment is the last assemble: [x, res2].
+    let (_, data) = report
+        .results
+        .iter()
+        .next_back()
+        .ok_or_else(|| Error::Assemble("no final result".into()))?;
+    let x = data.chunk(0)?.as_f32()?.to_vec();
+    let res2 = data.chunk(1)?.first_f32()? as f64;
+
+    Ok((
+        SolveOutcome {
+            x,
+            iters: cfg.iters,
+            res_norm: res2.sqrt(),
+            wall,
+            comm: StatsSnapshot {
+                msgs: report.metrics.comm_msgs,
+                bytes: report.metrics.comm_bytes,
+                modelled_comm_ns: report.metrics.modelled_comm_us * 1_000,
+            },
+        },
+        report.metrics,
+    ))
+}
+
+fn artifact_dir_checked(cfg: &JacobiConfig) -> Result<std::path::PathBuf> {
+    let dir = cfg.artifact_dir.clone();
+    if !Path::new(&dir).join("manifest.json").exists() {
+        return Err(Error::Manifest(format!(
+            "no manifest.json under {dir:?}; run `make artifacts`"
+        )));
+    }
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_shape() {
+        let cfg = JacobiConfig::new(64, 4, 10);
+        let algo = build_algorithm(&cfg).unwrap();
+        assert_eq!(algo.segments.len(), 4);
+        assert_eq!(algo.segments[1].len(), 4); // D jobs
+        assert_eq!(algo.segments[2].len(), 4); // sweeps
+        assert_eq!(algo.segments[3].len(), 1); // assemble
+        assert!(algo.segments[1].jobs.iter().all(|j| j.keep));
+        // hybrid in the paper's strict sense
+        assert_eq!(algo.hybrid_class(4), (true, true));
+    }
+
+    #[test]
+    fn registry_has_all_functions() {
+        let cfg = JacobiConfig::new(64, 2, 5);
+        let reg = build_registry(&cfg).unwrap();
+        for f in [F_PARAMS, F_X0, F_GEN, F_SWEEP, F_ASSEMBLE] {
+            assert!(reg.contains(FuncId(f)), "missing {f}");
+        }
+        let algo = build_algorithm(&cfg).unwrap();
+        reg.check_algorithm(&algo).unwrap();
+    }
+}

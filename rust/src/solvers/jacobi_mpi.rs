@@ -1,0 +1,186 @@
+//! The "tailored" baseline (paper §4): an efficient, hand-written,
+//! pure-message-passing Jacobi — what an MPI expert would write without
+//! the framework.  Figure 3 compares the framework's runtimes against
+//! exactly this.
+//!
+//! Each rank owns one row block (generated locally, zero distribution
+//! cost), sweeps it every iteration, allgathers the new iterate and
+//! allreduces the residual.  The sweep hot-spot goes through the same
+//! kernel paths as the framework solver ([`super::KernelPath`]), so the
+//! comparison isolates **coordination** cost — the paper's question.
+
+use std::sync::mpsc;
+
+use crate::comm::collectives::ReduceOp;
+use crate::comm::{CostModel, Rank, World};
+use crate::data::{matrix, DataChunk};
+use crate::error::{Error, Result};
+use crate::runtime::{pjrt_factory, ComputeBackend, EngineFactory};
+
+use super::{rust_block_sweep, JacobiConfig, SolveOutcome};
+
+/// Run the tailored Jacobi with `cfg.procs` ranks over the comm substrate.
+pub fn run(cfg: &JacobiConfig) -> Result<SolveOutcome> {
+    run_with_cost(cfg, CostModel::free())
+}
+
+/// Same, with an explicit communication cost model (benchmarks inject
+/// cluster-like latency here and in the framework run symmetrically).
+pub fn run_with_cost(cfg: &JacobiConfig, cost: CostModel) -> Result<SolveOutcome> {
+    if cfg.iters == 0 {
+        return Err(Error::Config("iters must be >= 1".into()));
+    }
+    let p = cfg.procs;
+    let n_pad = cfg.n_pad();
+    let bm = cfg.bm();
+
+    // Resolve the artifact name up front (same fail-fast as the framework).
+    let engine_factory: Option<EngineFactory> = match cfg.kernel.variant() {
+        Some(_) => Some(pjrt_factory(cfg.artifact_dir.clone())),
+        None => None,
+    };
+    let artifact: Option<String> = match cfg.kernel.variant() {
+        Some(variant) => {
+            let manifest = crate::runtime::Manifest::load(&cfg.artifact_dir)?;
+            Some(manifest.jacobi_block(variant, n_pad, bm)?.to_string())
+        }
+        None => None,
+    };
+
+    let world: World<Vec<u8>> = World::new(cost);
+    let comms: Vec<_> = (0..p).map(|_| world.add_rank()).collect();
+    let ranks: Vec<Rank> = comms.iter().map(|c| c.rank()).collect();
+    let stats_before = world.stats();
+
+    let t0 = std::time::Instant::now();
+    let (tx, rx) = mpsc::channel::<Result<(usize, Vec<f32>, f64)>>();
+    let mut handles = Vec::new();
+    for (idx, mut comm) in comms.into_iter().enumerate() {
+        let tx = tx.clone();
+        let ranks = ranks.clone();
+        let cfg = cfg.clone();
+        let artifact = artifact.clone();
+        let engine_factory = engine_factory.clone();
+        handles.push(std::thread::spawn(move || {
+            let res = (|| -> Result<(usize, Vec<f32>, f64)> {
+                let lo = idx * bm;
+                let (a, b, invd) =
+                    matrix::gen_block(cfg.n, n_pad, cfg.seed, lo, lo + bm);
+                // Per-rank engine (PJRT handles are thread-local).
+                let engine: Option<Box<dyn ComputeBackend>> = match &engine_factory {
+                    Some(f) => Some(f()?),
+                    None => None,
+                };
+                // Pre-built chunks for the engine path (zero-copy reuse).
+                let a_chunk = DataChunk::from_f32(a.clone());
+                let b_chunk = DataChunk::from_f32(b.clone());
+                let invd_chunk = DataChunk::from_f32(invd.clone());
+                let off_chunk = DataChunk::scalar_i32(lo as i32);
+
+                let mut x = vec![0.0f32; n_pad];
+                let mut res2 = 0.0f64;
+                let block_sizes = vec![bm; p];
+                for _ in 0..cfg.iters {
+                    let (x_blk, r2) = match (&engine, &artifact) {
+                        (Some(e), Some(name)) => {
+                            let out = e.execute(
+                                name,
+                                &[
+                                    a_chunk.clone(),
+                                    DataChunk::from_f32(x.clone()),
+                                    b_chunk.clone(),
+                                    invd_chunk.clone(),
+                                    off_chunk.clone(),
+                                ],
+                            )?;
+                            let xb = out[0].as_f32()?.to_vec();
+                            let r2 = out[1].first_f32()? as f64;
+                            (xb, r2)
+                        }
+                        _ => {
+                            let mut xb = vec![0.0f32; bm];
+                            let r2 = rust_block_sweep(
+                                &a, &x, &b, &invd, lo, &mut xb, n_pad,
+                            );
+                            (xb, r2)
+                        }
+                    };
+                    // Exchange: new iterate + global residual.
+                    x = comm.allgather_f32_ring(&ranks, x_blk, &block_sizes)?;
+                    let total =
+                        comm.allreduce_f64(&ranks, vec![r2], ReduceOp::Sum)?;
+                    res2 = total[0];
+                }
+                Ok((idx, x, res2))
+            })();
+            let _ = tx.send(res);
+        }));
+    }
+    drop(tx);
+
+    let mut x_final: Option<Vec<f32>> = None;
+    let mut res2_final = 0.0f64;
+    let mut first_err: Option<Error> = None;
+    for received in rx {
+        match received {
+            Ok((idx, x, r2)) => {
+                if idx == 0 {
+                    x_final = Some(x);
+                    res2_final = r2;
+                }
+            }
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let wall = t0.elapsed();
+
+    Ok(SolveOutcome {
+        x: x_final.ok_or_else(|| Error::Assemble("rank 0 produced no result".into()))?,
+        iters: cfg.iters,
+        res_norm: res2_final.sqrt(),
+        wall,
+        comm: world.stats().delta(stats_before),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::jacobi_seq;
+
+    #[test]
+    fn matches_sequential_bitwise_on_rust_path() {
+        // Same generator + same sweep arithmetic + deterministic exchange
+        // => identical trajectories.
+        let cfg = JacobiConfig::new(64, 4, 25);
+        let seq = jacobi_seq(&cfg);
+        let par = run(&cfg).unwrap();
+        assert_eq!(par.x.len(), seq.x.len());
+        for (a, b) in par.x.iter().zip(&seq.x) {
+            assert_eq!(a, b, "trajectory diverged");
+        }
+    }
+
+    #[test]
+    fn converges_and_reports_comm_traffic() {
+        let cfg = JacobiConfig::new(96, 2, 150);
+        let out = run(&cfg).unwrap();
+        assert!(out.error_vs(&cfg) < 1e-3);
+        assert!(out.comm.msgs > 0);
+        assert!(out.comm.bytes > 0);
+    }
+
+    #[test]
+    fn single_rank_degenerates_to_sequential() {
+        let cfg = JacobiConfig::new(48, 1, 30);
+        let seq = jacobi_seq(&cfg);
+        let par = run(&cfg).unwrap();
+        assert_eq!(par.x, seq.x);
+    }
+}

@@ -1,0 +1,225 @@
+//! The evaluation workloads (paper §4) and their baselines.
+//!
+//! * [`jacobi_fw`] — the Jacobi solver expressed through the framework's
+//!   job model: distribute jobs hold the matrix blocks under keep-results,
+//!   sweep jobs call the AOT kernel, an assemble job concatenates the new
+//!   iterate and **injects the next iteration's jobs at runtime** (paper
+//!   §3.3's dynamic job creation).
+//! * [`jacobi_mpi`] — the "tailored" baseline: the same computation
+//!   hand-written directly on the [`crate::comm`] substrate (the paper's
+//!   efficient pure-MPI implementation).
+//! * [`jacobi_seq`] (here) — sequential reference for correctness.
+//! * [`cg`] — conjugate gradient on the same substrate (the paper's
+//!   "more complex simulation codes" future-work item).
+//! * [`heat`] — 2-D heat diffusion through the framework (engineering
+//!   simulation workload from the paper's introduction).
+
+pub mod cg;
+pub mod heat;
+pub mod jacobi_fw;
+pub mod jacobi_mpi;
+pub mod projection;
+
+use std::time::Duration;
+
+use crate::comm::StatsSnapshot;
+use crate::data::matrix;
+
+/// Which compute path the sweep hot-spot takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// AOT artifact via PJRT, Pallas-lowered kernel.
+    EnginePallas,
+    /// AOT artifact via PJRT, pure-jnp lowering (fast CPU path).
+    EngineRef,
+    /// Portable in-process rust loops (no artifacts required).
+    Rust,
+}
+
+impl KernelPath {
+    pub fn variant(self) -> Option<&'static str> {
+        match self {
+            KernelPath::EnginePallas => Some("pallas"),
+            KernelPath::EngineRef => Some("ref"),
+            KernelPath::Rust => None,
+        }
+    }
+}
+
+/// Common Jacobi experiment configuration (one Figure-3 cell).
+#[derive(Debug, Clone)]
+pub struct JacobiConfig {
+    /// Logical size (paper: 2709 / 4209 / 7209).
+    pub n: usize,
+    /// Participants: framework sweep jobs or MPI ranks (row blocks).
+    pub procs: usize,
+    /// Fixed iteration count (paper: 500).
+    pub iters: usize,
+    pub seed: u64,
+    pub kernel: KernelPath,
+    /// Artifact directory (engine paths).
+    pub artifact_dir: std::path::PathBuf,
+    /// Pad `n` to a multiple of this (the kernel's column-tile width).
+    pub pad_multiple: usize,
+    /// Keep the matrix blocks on their workers (paper §3.1 keep-results).
+    /// `false` ships blocks through the schedulers every sweep — the
+    /// ABL-KEEP ablation baseline.
+    pub keep_blocks: bool,
+}
+
+impl JacobiConfig {
+    pub fn new(n: usize, procs: usize, iters: usize) -> Self {
+        JacobiConfig {
+            n,
+            procs,
+            iters,
+            seed: 42,
+            kernel: KernelPath::Rust,
+            artifact_dir: "artifacts".into(),
+            pad_multiple: 256,
+            keep_blocks: true,
+        }
+    }
+
+    pub fn with_keep_blocks(mut self, keep: bool) -> Self {
+        self.keep_blocks = keep;
+        self
+    }
+
+    pub fn with_kernel(mut self, k: KernelPath) -> Self {
+        self.kernel = k;
+        self
+    }
+
+    pub fn with_artifacts(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.artifact_dir = dir.into();
+        self
+    }
+
+    pub fn n_pad(&self) -> usize {
+        matrix::pad_to(self.n, self.pad_multiple.max(self.procs).max(1))
+            .max(self.procs) // at least one row per participant
+    }
+
+    /// Rows per participant (padded size divides evenly by construction
+    /// when `procs` divides `pad_multiple`).
+    pub fn bm(&self) -> usize {
+        self.n_pad() / self.procs
+    }
+}
+
+/// Result of one solver run.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    pub x: Vec<f32>,
+    pub iters: usize,
+    /// `sqrt(sum r^2)` of the final sweep.
+    pub res_norm: f64,
+    pub wall: Duration,
+    /// Comm traffic attributable to the run.
+    pub comm: StatsSnapshot,
+}
+
+impl SolveOutcome {
+    /// Max-abs error against the known generated solution.
+    pub fn error_vs(&self, cfg: &JacobiConfig) -> f32 {
+        let x_star = matrix::gen_x_star(cfg.n, cfg.n_pad(), cfg.seed);
+        self.x[..cfg.n]
+            .iter()
+            .zip(&x_star[..cfg.n])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// One Jacobi sweep of a row block in plain rust (the `KernelPath::Rust`
+/// hot-spot and the oracle for the engine paths):
+/// `x_blk' = x_blk + (b_blk - A_blk x) * invd_blk`, returns partial `Σr²`.
+pub fn rust_block_sweep(
+    a_blk: &[f32],
+    x: &[f32],
+    b_blk: &[f32],
+    invd_blk: &[f32],
+    row_offset: usize,
+    x_out: &mut [f32],
+    n: usize,
+) -> f64 {
+    let bm = b_blk.len();
+    debug_assert_eq!(a_blk.len(), bm * n);
+    debug_assert_eq!(x_out.len(), bm);
+    let mut res2 = 0.0f64;
+    for i in 0..bm {
+        let row = &a_blk[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for (av, xv) in row.iter().zip(x) {
+            acc += av * xv;
+        }
+        let r = b_blk[i] - acc;
+        res2 += (r as f64) * (r as f64);
+        x_out[i] = x[row_offset + i] + r * invd_blk[i];
+    }
+    res2
+}
+
+/// Sequential Jacobi reference (one "participant", no comm).
+pub fn jacobi_seq(cfg: &JacobiConfig) -> SolveOutcome {
+    let n_pad = cfg.n_pad();
+    let t0 = std::time::Instant::now();
+    let (a, b, invd) = matrix::gen_block(cfg.n, n_pad, cfg.seed, 0, n_pad);
+    let mut x = vec![0.0f32; n_pad];
+    let mut x_new = vec![0.0f32; n_pad];
+    let mut res2 = 0.0f64;
+    for _ in 0..cfg.iters {
+        res2 = rust_block_sweep(&a, &x, &b, &invd, 0, &mut x_new, n_pad);
+        std::mem::swap(&mut x, &mut x_new);
+    }
+    SolveOutcome {
+        x,
+        iters: cfg.iters,
+        res_norm: res2.sqrt(),
+        wall: t0.elapsed(),
+        comm: StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_jacobi_converges_to_generated_solution() {
+        let cfg = JacobiConfig::new(96, 1, 150);
+        let out = jacobi_seq(&cfg);
+        assert!(out.error_vs(&cfg) < 1e-3, "err = {}", out.error_vs(&cfg));
+        assert!(out.res_norm < 1e-2);
+    }
+
+    #[test]
+    fn padded_sizes() {
+        let cfg = JacobiConfig::new(2709, 8, 1);
+        assert_eq!(cfg.n_pad(), 2816);
+        assert_eq!(cfg.bm(), 352);
+    }
+
+    #[test]
+    fn rust_sweep_matches_dense_formula() {
+        use crate::data::matrix::diag_dominant_system;
+        let sys = diag_dominant_system(16, 1, 5);
+        let n = sys.n();
+        let x: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+        let invd = sys.invdiag();
+        let mut out = vec![0.0f32; 8];
+        // block = rows 4..12
+        let a_blk: Vec<f32> = (4..12).flat_map(|r| sys.a.row(r).to_vec()).collect();
+        let res2 = rust_block_sweep(
+            &a_blk, &x, &sys.b[4..12], &invd[4..12], 4, &mut out, n,
+        );
+        let ax = sys.a.matvec(&x);
+        for i in 0..8 {
+            let r = sys.b[4 + i] - ax[4 + i];
+            let want = x[4 + i] + r * invd[4 + i];
+            assert!((out[i] - want).abs() < 1e-5);
+        }
+        assert!(res2 > 0.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Calibrated cluster projection for the Figure-3 scaling shape.
+//!
+//! **Why this exists.** The paper's Figure 3 shows Jacobi runtimes
+//! *decreasing with process count* on a multi-node cluster. This
+//! reproduction's testbed is a single hardware thread (`nproc == 1`), so
+//! wall-clock runs cannot exhibit parallel speedup no matter how correct
+//! the framework is — every "parallel" worker time-slices one core.  Per
+//! DESIGN.md §2 (substitution rule) we therefore *measure* what the
+//! testbed can measure and *model* what it cannot:
+//!
+//! * **measured**: single-worker sweep time per iteration (calibrated by
+//!   running the real kernel), framework coordination cost per iteration
+//!   (measured from real runs' control-plane timing), per-iteration
+//!   message/byte counts (measured from real runs);
+//! * **modelled**: the interconnect, with the same α/β cost model the
+//!   comm substrate uses (`CostModel`).
+//!
+//! Projected runtime of one iteration on a p-node cluster:
+//!
+//! ```text
+//! T_iter(p) = t_sweep(n, n/p)                  (measured, perfect split)
+//!           + t_exchange(p, n)                  (ring allgather: 2(p-1)
+//!                                                hops of (n/p)·4 bytes)
+//!           + t_coord(p)                        (fw only: measured per-
+//!                                                iteration control cost)
+//! ```
+//!
+//! The *shape* this produces — near-linear speedup until the exchange +
+//! coordination terms dominate, with the framework tracking the tailored
+//! implementation from above — is exactly Figure 3's claim; absolute
+//! numbers depend on the chosen α/β (defaults: 2 µs, 10 GB/s).
+
+use std::time::{Duration, Instant};
+
+use crate::comm::CostModel;
+use crate::data::matrix;
+use crate::error::Result;
+
+use super::{jacobi_fw, rust_block_sweep, JacobiConfig};
+
+/// Calibration data for one problem size.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub n_pad: usize,
+    /// Seconds per iteration for a block of `bm` rows, measured at several
+    /// `bm` values and interpolated linearly in `bm` (the sweep is
+    /// O(bm·n) with uniform per-row cost).
+    pub sweep_secs_per_row: f64,
+    /// Fixed per-sweep overhead (call + cache effects), seconds.
+    pub sweep_secs_fixed: f64,
+    /// Framework control-plane cost per iteration per participant
+    /// (assign + exec round trips + assemble turnover), seconds.
+    pub fw_coord_secs_per_job: f64,
+}
+
+/// Measure the real kernel's per-row sweep cost on this machine.
+pub fn calibrate(n: usize, seed: u64) -> Calibration {
+    let n_pad = matrix::pad_to(n, 256);
+    // Two block sizes -> linear fit (cost = fixed + per_row * bm).
+    let bms = [n_pad / 8, n_pad / 2];
+    let mut times = Vec::new();
+    for &bm in &bms {
+        let (a, b, invd) = matrix::gen_block(n, n_pad, seed, 0, bm);
+        let x = vec![0.5f32; n_pad];
+        let mut out = vec![0.0f32; bm];
+        // warmup + timed reps
+        rust_block_sweep(&a, &x, &b, &invd, 0, &mut out, n_pad);
+        let reps = 3;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            rust_block_sweep(&a, &x, &b, &invd, 0, &mut out, n_pad);
+        }
+        times.push(t0.elapsed().as_secs_f64() / reps as f64);
+    }
+    let per_row = (times[1] - times[0]) / (bms[1] as f64 - bms[0] as f64);
+    let per_row = per_row.max(1e-12);
+    let fixed = (times[0] - per_row * bms[0] as f64).max(0.0);
+
+    // Framework coordination: run a short real fw Jacobi and take
+    // (wall - serialized compute) / (iters * jobs_per_iter). On the 1-core
+    // testbed compute serialises, so the subtraction isolates control.
+    // Two runs, take the minimum — the first pays one-time costs (thread
+    // spawns, allocator warmup) that are not per-iteration coordination.
+    let iters = 6usize;
+    let cfg = JacobiConfig::new(n.min(512), 2, iters);
+    let probe = || -> Option<f64> {
+        let (_, m) = jacobi_fw::run(&cfg, &jacobi_fw::FwTopology::default()).ok()?;
+        let wall = Duration::from_micros(m.wall_time_us).as_secs_f64();
+        let exec = m.total_exec_time().as_secs_f64();
+        Some(((wall - exec).max(0.0) / (iters as f64 * 3.0)).max(10e-6))
+    };
+    let coord = match (probe(), probe()) {
+        (Some(a), Some(b)) => a.min(b),
+        (Some(a), None) | (None, Some(a)) => a,
+        (None, None) => 50e-6,
+    };
+    Calibration {
+        n_pad,
+        sweep_secs_per_row: per_row,
+        sweep_secs_fixed: fixed,
+        fw_coord_secs_per_job: coord,
+    }
+}
+
+/// One projected Figure-3 cell.
+#[derive(Debug, Clone)]
+pub struct Projection {
+    pub procs: usize,
+    pub compute_s: f64,
+    pub exchange_s: f64,
+    pub coord_s: f64,
+}
+
+impl Projection {
+    pub fn fw_total(&self) -> f64 {
+        self.compute_s + self.exchange_s + self.coord_s
+    }
+
+    pub fn mpi_total(&self) -> f64 {
+        self.compute_s + self.exchange_s
+    }
+
+    pub fn overhead_pct(&self) -> f64 {
+        (self.fw_total() / self.mpi_total() - 1.0) * 100.0
+    }
+}
+
+/// Project the full run for `iters` iterations on a p-node cluster with
+/// interconnect `cost`.
+pub fn project(
+    cal: &Calibration,
+    procs: usize,
+    iters: usize,
+    cost: &CostModel,
+) -> Projection {
+    let bm = cal.n_pad.div_ceil(procs);
+    let compute_iter = cal.sweep_secs_fixed + cal.sweep_secs_per_row * bm as f64;
+    // Ring allgather of the new iterate: (p-1) rounds, each round one send
+    // + one recv of bm*4 bytes per rank (pipelined -> critical path is
+    // (p-1) hops), plus the residual allreduce (2 log2 p small hops,
+    // approximated as 2(p-1) alpha for small p).
+    let hop = cost.duration(bm * 4).as_secs_f64();
+    let small_hop = cost.duration(8).as_secs_f64();
+    let exchange_iter = if procs == 1 {
+        0.0
+    } else {
+        (procs - 1) as f64 * hop + 2.0 * (procs - 1) as f64 * small_hop
+    };
+    // Framework: p sweep jobs + 1 assemble per iteration of control work,
+    // amortised over parallel schedulers (2).
+    let coord_iter = cal.fw_coord_secs_per_job * ((procs + 1) as f64 / 2.0).max(1.0);
+    Projection {
+        procs,
+        compute_s: compute_iter * iters as f64,
+        exchange_s: exchange_iter * iters as f64,
+        coord_s: coord_iter * iters as f64,
+    }
+}
+
+/// Convenience: full Figure-3 panel for one size.
+pub fn project_panel(
+    n: usize,
+    procs: &[usize],
+    iters: usize,
+    cost: &CostModel,
+    seed: u64,
+) -> Result<(Calibration, Vec<Projection>)> {
+    let cal = calibrate(n, seed);
+    let rows = procs.iter().map(|&p| project(&cal, p, iters, cost)).collect();
+    Ok((cal, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cal() -> Calibration {
+        Calibration {
+            n_pad: 2816,
+            sweep_secs_per_row: 2e-6,
+            sweep_secs_fixed: 1e-5,
+            fw_coord_secs_per_job: 5e-5,
+        }
+    }
+
+    #[test]
+    fn compute_term_scales_inversely_with_p() {
+        let cal = test_cal();
+        let cost = CostModel::default();
+        let p1 = project(&cal, 1, 100, &cost);
+        let p4 = project(&cal, 4, 100, &cost);
+        assert!(p4.compute_s < p1.compute_s / 3.0);
+        assert_eq!(p1.exchange_s, 0.0);
+        assert!(p4.exchange_s > 0.0);
+    }
+
+    #[test]
+    fn speedup_then_saturation_shape() {
+        // With a slow interconnect, total time must first drop with p,
+        // then flatten/rise — the Figure-3 / crossover shape.
+        let cal = test_cal();
+        let slow = CostModel { alpha_us: 200.0, bandwidth_gbps: 0.5, simulate: false };
+        let totals: Vec<f64> = [1usize, 2, 4, 8, 16, 64]
+            .iter()
+            .map(|&p| project(&cal, p, 100, &slow).mpi_total())
+            .collect();
+        assert!(totals[1] < totals[0], "no speedup at p=2: {totals:?}");
+        // saturation: the last doubling gains little or loses
+        assert!(
+            totals[5] > totals[3] * 0.8,
+            "no saturation visible: {totals:?}"
+        );
+    }
+
+    #[test]
+    fn framework_overhead_positive_and_moderate() {
+        let cal = test_cal();
+        let cost = CostModel::default();
+        for p in [1usize, 2, 4, 8] {
+            let proj = project(&cal, p, 500, &cost);
+            let o = proj.overhead_pct();
+            assert!(o > 0.0, "fw must cost more than tailored (p={p})");
+            assert!(o < 100.0, "overhead implausible: {o}% (p={p})");
+        }
+    }
+
+    #[test]
+    fn calibration_runs_on_small_size() {
+        let cal = calibrate(256, 7);
+        assert!(cal.sweep_secs_per_row > 0.0);
+        assert!(cal.fw_coord_secs_per_job > 0.0);
+        assert_eq!(cal.n_pad, 256);
+    }
+}

@@ -1,0 +1,187 @@
+//! Measurement harness for the `cargo bench` targets (criterion-style,
+//! in-tree): warmup, fixed repetitions, robust summary statistics, and
+//! JSON rows that EXPERIMENTS.md tables are generated from.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+/// Summary of repeated measurements of one configuration.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub reps: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub median: Duration,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("reps", Json::num(self.reps as f64)),
+            ("mean_ms", Json::num(self.mean.as_secs_f64() * 1e3)),
+            ("stddev_ms", Json::num(self.stddev.as_secs_f64() * 1e3)),
+            ("min_ms", Json::num(self.min.as_secs_f64() * 1e3)),
+            ("median_ms", Json::num(self.median.as_secs_f64() * 1e3)),
+            ("max_ms", Json::num(self.max.as_secs_f64() * 1e3)),
+        ])
+    }
+
+    /// One aligned table row (`name  mean ± stddev  [min .. max]`).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10.2} ms ± {:>8.2} ms   [{:>9.2} .. {:>9.2}] x{}",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.stddev.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.max.as_secs_f64() * 1e3,
+            self.reps,
+        )
+    }
+}
+
+/// Benchmark runner configuration (env-tunable so CI can shrink runs:
+/// `HYPAR_BENCH_REPS`, `HYPAR_BENCH_WARMUP`).
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        let reps = std::env::var("HYPAR_BENCH_REPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(5);
+        let warmup = std::env::var("HYPAR_BENCH_WARMUP")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
+        Bench { warmup, reps }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 0, reps: 3 }
+    }
+
+    /// Measure `f` (which should perform one full run of the workload).
+    pub fn measure<R>(&self, name: impl Into<String>, mut f: impl FnMut() -> R) -> Measurement {
+        for _ in 0..self.warmup {
+            let _ = f();
+        }
+        let mut times = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps.max(1) {
+            let t0 = Instant::now();
+            let _ = f();
+            times.push(t0.elapsed());
+        }
+        summarise(name.into(), &times)
+    }
+}
+
+fn summarise(name: String, times: &[Duration]) -> Measurement {
+    let reps = times.len();
+    let mean_s = times.iter().map(Duration::as_secs_f64).sum::<f64>() / reps as f64;
+    let var = times
+        .iter()
+        .map(|t| {
+            let d = t.as_secs_f64() - mean_s;
+            d * d
+        })
+        .sum::<f64>()
+        / reps as f64;
+    let mut sorted = times.to_vec();
+    sorted.sort();
+    Measurement {
+        name,
+        reps,
+        mean: Duration::from_secs_f64(mean_s),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: sorted[0],
+        max: sorted[reps - 1],
+        median: sorted[reps / 2],
+    }
+}
+
+/// Shared report printer: header, rows, and a JSON line per measurement
+/// (greppable from bench_output.txt).
+pub struct Report {
+    title: String,
+    rows: Vec<Measurement>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        let title = title.into();
+        println!("\n=== {title} ===");
+        Report { title, rows: Vec::new() }
+    }
+
+    pub fn add(&mut self, m: Measurement) {
+        println!("{}", m.row());
+        self.rows.push(m);
+    }
+
+    /// Ratio helper for fw-vs-baseline tables.
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.rows.iter().find(|m| m.name == a)?;
+        let fb = self.rows.iter().find(|m| m.name == b)?;
+        Some(fa.mean.as_secs_f64() / fb.mean.as_secs_f64())
+    }
+
+    pub fn finish(self) {
+        for m in &self.rows {
+            println!("JSON {}", m.to_json().to_string());
+        }
+        println!("=== end {} ===", self.title);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_sane_statistics() {
+        let b = Bench { warmup: 0, reps: 5 };
+        let m = b.measure("sleep", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(m.reps, 5);
+        assert!(m.mean >= Duration::from_millis(2));
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn summary_math() {
+        let times = [
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ];
+        let m = summarise("t".into(), &times);
+        assert_eq!(m.mean, Duration::from_millis(20));
+        assert_eq!(m.min, Duration::from_millis(10));
+        assert_eq!(m.median, Duration::from_millis(20));
+        assert!((m.stddev.as_secs_f64() - 0.008165).abs() < 1e-4);
+    }
+
+    #[test]
+    fn json_row_parses_back() {
+        let b = Bench::quick();
+        let m = b.measure("x", || 1 + 1);
+        let parsed = crate::util::json::parse(&m.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("x"));
+        assert!(parsed.get("mean_ms").unwrap().as_f64().is_some());
+    }
+}

@@ -1,0 +1,176 @@
+//! Minimal declarative flag parser for the `hypar` binary.
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generates usage text.  Deliberately tiny — exactly what
+//! the launcher needs, nothing more.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: flags + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+/// Parse error (unknown flag, missing value, bad type).
+#[derive(Debug, thiserror::Error)]
+#[error("argument error: {0}")]
+pub struct ArgError(pub String);
+
+/// Flag specification for validation + usage text.
+pub struct Spec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// `true` = boolean switch (no value).
+    pub switch: bool,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand names) against `specs`.
+    pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, ArgError> {
+        let mut out = Args::default();
+        let known: HashMap<&str, &Spec> =
+            specs.iter().map(|s| (s.name, s)).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = known
+                    .get(name)
+                    .ok_or_else(|| ArgError(format!("unknown flag --{name}")))?;
+                let value = if spec.switch {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| ArgError(format!("--{name} needs a value")))?
+                };
+                out.flags.insert(name.to_string(), value);
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{name} expects a number, got {v:?}"))),
+        }
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated integer list.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, ArgError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim().parse().map_err(|_| {
+                        ArgError(format!("--{name}: bad integer {t:?}"))
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[Spec]) -> String {
+    let mut s = format!("{about}\n\nusage: hypar {cmd} [flags]\n\nflags:\n");
+    for spec in specs {
+        let val = if spec.switch { "" } else { " <value>" };
+        s.push_str(&format!("  --{}{val}\n      {}\n", spec.name, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[Spec] = &[
+        Spec { name: "size", help: "problem size", switch: false },
+        Spec { name: "json", help: "emit json", switch: true },
+        Spec { name: "procs", help: "list", switch: false },
+    ];
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&sv(&["pos1", "--size", "42", "--json", "pos2"]), SPECS).unwrap();
+        assert_eq!(a.usize_or("size", 0).unwrap(), 42);
+        assert!(a.bool("json"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["--size=7"]), SPECS).unwrap();
+        assert_eq!(a.usize_or("size", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--procs", "1,2, 4"]), SPECS).unwrap();
+        assert_eq!(a.usize_list_or("procs", &[9]).unwrap(), vec![1, 2, 4]);
+        let b = Args::parse(&sv(&[]), SPECS).unwrap();
+        assert_eq!(b.usize_list_or("procs", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&sv(&["--nope"]), SPECS).is_err());
+        assert!(Args::parse(&sv(&["--size"]), SPECS).is_err());
+        let a = Args::parse(&sv(&["--size", "x"]), SPECS).unwrap();
+        assert!(a.usize_or("size", 0).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_all_flags() {
+        let u = usage("demo", "About.", SPECS);
+        for s in SPECS {
+            assert!(u.contains(s.name));
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! In-tree substrates that would normally come from crates.io.
+//!
+//! The reproduction builds fully offline, so the little infrastructure the
+//! framework needs beyond `xla`/`thiserror` is implemented here — each
+//! piece small, documented and unit-tested:
+//!
+//! * [`json`] — a strict JSON parser + writer (the artifact-manifest and
+//!   config file format, and the benchmark row output format).
+//! * [`rng`]  — deterministic SplitMix64/xorshift PRNG (workload
+//!   generation and the in-tree property-testing harness).
+//! * [`cli`]  — a minimal declarative flag parser for the `hypar` binary.
+//! * [`bench`] — the measurement harness the `cargo bench` targets use
+//!   (warmup, repetitions, mean/stddev/min/max, JSON rows).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,120 @@
+//! Worker-local retained-result cache (the keep-results optimisation).
+//!
+//! Paper §3.1: workers "keep a copy of the input/output data of each job
+//! they execute until the responsible scheduler signals them the data is no
+//! longer required", and may be "completely detained from sending back any
+//! results".  The cache is the worker-side half of that contract; the
+//! scheduler-side index lives in [`crate::scheduler`].
+//!
+//! The documented drawback — a crashed worker loses every retained result —
+//! is exactly what the fault-tolerance path recomputes (see
+//! [`crate::fault`]).
+
+use std::collections::HashMap;
+
+use crate::data::FunctionData;
+use crate::error::{Error, Result};
+use crate::job::{ChunkRange, JobId};
+
+/// Retained results of one worker, keyed by producing job.
+#[derive(Debug, Default)]
+pub struct KeptCache {
+    entries: HashMap<JobId, FunctionData>,
+}
+
+impl KeptCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Retain a job's output.
+    pub fn insert(&mut self, job: JobId, data: FunctionData) {
+        self.entries.insert(job, data);
+    }
+
+    /// Read chunks for a consumer running on this worker (zero transfer).
+    pub fn read(&self, job: JobId, range: ChunkRange) -> Result<FunctionData> {
+        let data = self
+            .entries
+            .get(&job)
+            .ok_or(Error::ResultNotAvailable(job))?;
+        let r = range.resolve(data.len())?;
+        data.select(r)
+    }
+
+    /// Full retained result (for scheduler pulls).
+    pub fn get(&self, job: JobId) -> Result<&FunctionData> {
+        self.entries.get(&job).ok_or(Error::ResultNotAvailable(job))
+    }
+
+    /// Scheduler signalled the data is no longer required.
+    pub fn release(&mut self, job: JobId) -> bool {
+        self.entries.remove(&job).is_some()
+    }
+
+    pub fn contains(&self, job: JobId) -> bool {
+        self.entries.contains_key(&job)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Retained bytes (capacity accounting / metrics).
+    pub fn size_bytes(&self) -> usize {
+        self.entries.values().map(|d| d.size_bytes()).sum()
+    }
+
+    /// Job ids currently retained (reported on clean shutdown).
+    pub fn jobs(&self) -> Vec<JobId> {
+        self.entries.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataChunk;
+
+    fn data(k: usize) -> FunctionData {
+        (0..k).map(|i| DataChunk::from_f32(vec![i as f32])).collect()
+    }
+
+    #[test]
+    fn insert_read_release() {
+        let mut c = KeptCache::new();
+        c.insert(JobId(1), data(4));
+        assert!(c.contains(JobId(1)));
+        assert_eq!(c.read(JobId(1), ChunkRange::All).unwrap().len(), 4);
+        let sel = c
+            .read(JobId(1), ChunkRange::Range { lo: 1, hi: 3 })
+            .unwrap();
+        assert_eq!(sel.len(), 2);
+        assert_eq!(sel.chunk(0).unwrap().first_f32().unwrap(), 1.0);
+        assert!(c.release(JobId(1)));
+        assert!(!c.release(JobId(1)));
+        assert!(matches!(
+            c.read(JobId(1), ChunkRange::All),
+            Err(Error::ResultNotAvailable(JobId(1)))
+        ));
+    }
+
+    #[test]
+    fn out_of_range_read_errors() {
+        let mut c = KeptCache::new();
+        c.insert(JobId(2), data(2));
+        assert!(c.read(JobId(2), ChunkRange::Range { lo: 0, hi: 3 }).is_err());
+    }
+
+    #[test]
+    fn size_accounting() {
+        let mut c = KeptCache::new();
+        c.insert(JobId(1), data(3)); // 3 chunks x 4 bytes
+        assert_eq!(c.size_bytes(), 12);
+        assert_eq!(c.len(), 1);
+    }
+}

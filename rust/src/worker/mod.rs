@@ -1,0 +1,339 @@
+//! Worker processes (paper §3.1): dynamically spawned, isolated executors.
+//!
+//! A worker knows only its scheduler, its function registry and its
+//! retained-result cache.  It receives fully resolved [`ExecRequest`]s,
+//! runs the user function with the requested number of sequences, and
+//! either ships the output back or retains it (keep-results).
+//!
+//! ## Execution modes
+//!
+//! * `Plain` / `PerChunk` functions run on a **job thread**, so one worker
+//!   node can execute several thread-packed jobs concurrently (paper §3.3:
+//!   two 2-thread jobs share a 4-core worker; the sub-scheduler's core
+//!   accounting enforces the budget).
+//! * `WithCtx` functions run **inline** on the worker's main thread — they
+//!   may use the PJRT engine, whose handles are not `Send`.  One engine
+//!   job at a time per worker mirrors "one accelerator per node".
+//!
+//! A keep-results job thread deposits its output back into the worker's
+//! cache through the worker's own mailbox (the `KeptData`-to-self message),
+//! then the worker acknowledges completion to its scheduler — so the cache
+//! is always consistent before the scheduler can route a consumer here.
+
+pub mod cache;
+pub mod pool;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::{Comm, CommSender, Rank};
+use crate::data::FunctionData;
+use crate::error::Result;
+use crate::fault::FaultInjector;
+use crate::job::registry::{FunctionRegistry, JobCtx, UserFunction};
+use crate::job::{Injection, JobId};
+use crate::runtime::{ComputeBackend, EngineFactory};
+use crate::scheduler::{ExecRequest, FwMsg, InputPart, TAG_CTRL};
+use cache::KeptCache;
+
+/// Everything a worker thread needs at spawn (all `Send`).
+#[derive(Clone)]
+pub struct WorkerConfig {
+    /// Cores of this worker "node" (`ThreadCount::Auto` resolves to this).
+    pub cores: usize,
+    pub registry: Arc<FunctionRegistry>,
+    /// Engine recipe; instantiated lazily on this thread at first use.
+    pub engine_factory: Option<EngineFactory>,
+    pub fault: Arc<FaultInjector>,
+}
+
+/// Worker main loop. Runs until `WorkerShutdown` (clean) or an injected
+/// crash (silent exit — the dropped `Comm` makes the rank unreachable,
+/// which is exactly how the schedulers detect the loss).
+pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
+    let me = comm.rank();
+    let mut kept = KeptCache::new();
+    let mut engine: Option<Box<dyn ComputeBackend>> = None;
+    let mut job_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+    loop {
+        let env = match comm.recv() {
+            Ok(env) => env,
+            Err(_) => return, // world torn down
+        };
+        match env.into_user() {
+            FwMsg::Exec(req) => {
+                let job = req.spec.id;
+                if cfg.fault.should_crash(me, job) {
+                    // Simulated node failure: vanish without a word.
+                    // Dropping `comm` deregisters the rank -> sends to us
+                    // fail fast and the scheduler reports the loss.
+                    return;
+                }
+                let input = match assemble_input(&req, &kept) {
+                    Ok(i) => i,
+                    Err(e) => {
+                        let _ = comm.send(
+                            scheduler,
+                            TAG_CTRL,
+                            FwMsg::ExecFailed { job, msg: e.to_string() },
+                        );
+                        continue;
+                    }
+                };
+                let func = match cfg.registry.get(req.spec.func) {
+                    Ok(f) => f.clone(),
+                    Err(e) => {
+                        let _ = comm.send(
+                            scheduler,
+                            TAG_CTRL,
+                            FwMsg::ExecFailed { job, msg: e.to_string() },
+                        );
+                        continue;
+                    }
+                };
+                let n_threads = req.spec.threads.resolve(cfg.cores);
+                match func {
+                    UserFunction::WithCtx(f) => {
+                        // Inline: may use the (non-Send) engine.
+                        if engine.is_none() {
+                            if let Some(factory) = &cfg.engine_factory {
+                                match factory() {
+                                    Ok(e) => engine = Some(e),
+                                    Err(e) => {
+                                        let _ = comm.send(
+                                            scheduler,
+                                            TAG_CTRL,
+                                            FwMsg::ExecFailed {
+                                                job,
+                                                msg: format!("engine init: {e}"),
+                                            },
+                                        );
+                                        continue;
+                                    }
+                                }
+                            }
+                        }
+                        let ctx =
+                            JobCtx::new(job, n_threads, engine.as_deref());
+                        let t0 = Instant::now();
+                        let mut output = FunctionData::new();
+                        let result = f(&input, &mut output, &ctx);
+                        let exec_us = t0.elapsed().as_micros() as u64;
+                        let injections = ctx.take_injections();
+                        finish_job(
+                            &comm.sender(),
+                            scheduler,
+                            job,
+                            req.spec.keep,
+                            result.map(|()| output),
+                            injections,
+                            exec_us,
+                            &mut kept,
+                        );
+                    }
+                    UserFunction::Plain(f) => {
+                        // Perf: a job that occupies the whole node cannot
+                        // be packed with anything else, so a job thread
+                        // would only add spawn + context-switch cost —
+                        // run it inline (§Perf in EXPERIMENTS.md).
+                        let whole_node =
+                            req.spec.threads.packing_width(cfg.cores) >= cfg.cores;
+                        if whole_node {
+                            let t0 = Instant::now();
+                            let mut output = FunctionData::new();
+                            let result = f(&input, &mut output);
+                            let exec_us = t0.elapsed().as_micros() as u64;
+                            finish_job(
+                                &comm.sender(),
+                                scheduler,
+                                job,
+                                req.spec.keep,
+                                result.map(|()| output),
+                                vec![],
+                                exec_us,
+                                &mut kept,
+                            );
+                        } else {
+                            let to_self = comm.sender();
+                            let keep = req.spec.keep;
+                            job_threads.push(std::thread::spawn(move || {
+                                let t0 = Instant::now();
+                                let mut output = FunctionData::new();
+                                let result = f(&input, &mut output);
+                                let exec_us = t0.elapsed().as_micros() as u64;
+                                report_from_thread(
+                                    &to_self,
+                                    scheduler,
+                                    job,
+                                    keep,
+                                    result.map(|()| output),
+                                    exec_us,
+                                );
+                            }));
+                        }
+                    }
+                    UserFunction::PerChunk(f) => {
+                        let whole_node =
+                            req.spec.threads.packing_width(cfg.cores) >= cfg.cores;
+                        if whole_node {
+                            let t0 = Instant::now();
+                            let result = pool::run_per_chunk(&f, &input, n_threads);
+                            let exec_us = t0.elapsed().as_micros() as u64;
+                            finish_job(
+                                &comm.sender(),
+                                scheduler,
+                                job,
+                                req.spec.keep,
+                                result,
+                                vec![],
+                                exec_us,
+                                &mut kept,
+                            );
+                        } else {
+                            let to_self = comm.sender();
+                            let keep = req.spec.keep;
+                            job_threads.push(std::thread::spawn(move || {
+                                let t0 = Instant::now();
+                                let result = pool::run_per_chunk(&f, &input, n_threads);
+                                let exec_us = t0.elapsed().as_micros() as u64;
+                                report_from_thread(
+                                    &to_self, scheduler, job, keep, result, exec_us,
+                                );
+                            }));
+                        }
+                    }
+                }
+            }
+            // A job thread finished a keep-results job: deposit, then ack.
+            FwMsg::KeptData { job, data } => {
+                kept.insert(job, data);
+                let _ = comm.send(
+                    scheduler,
+                    TAG_CTRL,
+                    FwMsg::ExecDone { job, data: None, injections: vec![], exec_us: 0 },
+                );
+            }
+            FwMsg::PullKept { job } => {
+                let reply = match kept.get(job) {
+                    Ok(data) => FwMsg::KeptData { job, data: data.clone() },
+                    Err(_) => FwMsg::ResultUnavailable { job },
+                };
+                let _ = comm.send(scheduler, TAG_CTRL, reply);
+            }
+            FwMsg::DropKept { job } => {
+                kept.release(job);
+            }
+            FwMsg::WorkerShutdown => {
+                for h in job_threads.drain(..) {
+                    let _ = h.join();
+                }
+                comm.deregister();
+                return;
+            }
+            // Anything else is a protocol error; workers are isolated and
+            // conservative: ignore.
+            _ => {}
+        }
+    }
+}
+
+/// Resolve the request's input parts against the local kept cache.
+fn assemble_input(req: &ExecRequest, kept: &KeptCache) -> Result<FunctionData> {
+    let mut out = FunctionData::new();
+    for part in &req.input {
+        match part {
+            InputPart::Data(d) => out.extend(d.clone()),
+            InputPart::Kept { job, range } => out.extend(kept.read(*job, *range)?),
+        }
+    }
+    Ok(out)
+}
+
+/// Inline (WithCtx) completion: cache handling happens right here.
+#[allow(clippy::too_many_arguments)]
+fn finish_job(
+    to_sched: &CommSender<FwMsg>,
+    scheduler: Rank,
+    job: JobId,
+    keep: bool,
+    result: Result<FunctionData>,
+    injections: Vec<Injection>,
+    exec_us: u64,
+    kept: &mut KeptCache,
+) {
+    match result {
+        Ok(output) => {
+            let data = if keep {
+                kept.insert(job, output);
+                None
+            } else {
+                Some(output)
+            };
+            let _ = to_sched.send(
+                scheduler,
+                TAG_CTRL,
+                FwMsg::ExecDone { job, data, injections, exec_us },
+            );
+        }
+        Err(e) => {
+            let _ = to_sched.send(
+                scheduler,
+                TAG_CTRL,
+                FwMsg::ExecFailed { job, msg: e.to_string() },
+            );
+        }
+    }
+}
+
+/// Job-thread completion: keep-results must round-trip through the worker
+/// main loop (the cache is not shared), everything else goes straight to
+/// the scheduler.
+fn report_from_thread(
+    to_self: &CommSender<FwMsg>,
+    scheduler: Rank,
+    job: JobId,
+    keep: bool,
+    result: Result<FunctionData>,
+    exec_us: u64,
+) {
+    match result {
+        Ok(output) => {
+            if keep {
+                // Deposit in the worker's cache via its own mailbox.
+                let _ = to_self.send(
+                    to_self.rank(),
+                    TAG_CTRL,
+                    FwMsg::KeptData { job, data: output },
+                );
+            } else {
+                let _ = to_self.send(
+                    scheduler,
+                    TAG_CTRL,
+                    FwMsg::ExecDone {
+                        job,
+                        data: Some(output),
+                        injections: vec![],
+                        exec_us,
+                    },
+                );
+            }
+        }
+        Err(e) => {
+            let _ = to_self.send(
+                scheduler,
+                TAG_CTRL,
+                FwMsg::ExecFailed { job, msg: e.to_string() },
+            );
+        }
+    }
+}
+
+/// Convenience used by tests: what an `ExecRequest`'s assembled input looks
+/// like, given a cache.
+pub fn assemble_for_test(req: &ExecRequest, kept: &KeptCache) -> Result<FunctionData> {
+    assemble_input(req, kept)
+}
+
+#[allow(unused_imports)]
+use crate::error::Error as _ErrorForDocs; // doc-link anchor

@@ -1,0 +1,212 @@
+//! Comm substrate integration tests: many-rank stress, collective
+//! composition, cost-model injection, dynamic rank churn.
+
+use std::time::{Duration, Instant};
+
+use hypar::comm::collectives::ReduceOp;
+use hypar::comm::{CostModel, Match, Rank, Tag, World};
+
+type W = World<Vec<u8>>;
+
+#[test]
+fn ring_pass_across_many_ranks() {
+    // Token travels a 32-rank ring 3 times.
+    let world = W::new(CostModel::free());
+    let comms: Vec<_> = (0..32).map(|_| world.add_rank()).collect();
+    let ranks: Vec<Rank> = comms.iter().map(|c| c.rank()).collect();
+    let n = ranks.len();
+    let hs: Vec<_> = comms
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut comm)| {
+            let ranks = ranks.clone();
+            std::thread::spawn(move || {
+                let next = ranks[(i + 1) % n];
+                for round in 0..3u8 {
+                    if i == 0 {
+                        comm.send(next, Tag(1), vec![round]).unwrap();
+                        let env = comm.recv().unwrap();
+                        assert_eq!(env.into_user(), vec![round]);
+                    } else {
+                        let env = comm.recv().unwrap();
+                        let v = env.into_user();
+                        assert_eq!(v, vec![round]);
+                        comm.send(next, Tag(1), v).unwrap();
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    assert_eq!(world.stats().msgs, 32 * 3);
+}
+
+#[test]
+fn interleaved_collectives_and_p2p() {
+    // Collectives must not swallow or reorder user traffic.
+    let world = W::new(CostModel::free());
+    let comms: Vec<_> = (0..4).map(|_| world.add_rank()).collect();
+    let ranks: Vec<Rank> = comms.iter().map(|c| c.rank()).collect();
+    let hs: Vec<_> = comms
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut comm)| {
+            let ranks = ranks.clone();
+            std::thread::spawn(move || {
+                // Everyone sends a tagged p2p message to rank 0 FIRST...
+                if i != 0 {
+                    comm.send(ranks[0], Tag(42), vec![i as u8]).unwrap();
+                }
+                // ...then immediately enters a reduce.
+                let sum = comm
+                    .allreduce_f64(&ranks, vec![i as f64], ReduceOp::Sum)
+                    .unwrap();
+                assert_eq!(sum, vec![6.0]);
+                // Rank 0 picks up the p2p messages afterwards, matched.
+                if i == 0 {
+                    for src in &ranks[1..] {
+                        let env = comm
+                            .recv_match(Match { src: Some(*src), tag: Some(Tag(42)) })
+                            .unwrap();
+                        assert_eq!(env.into_user(), vec![src.0 as u8]);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn cost_model_injection_slows_sends() {
+    // 1 ms per message, injected: 10 sends must take >= 10 ms.
+    let world = W::new(CostModel::cluster(1_000.0, f64::INFINITY));
+    let a = world.add_rank();
+    let mut b = world.add_rank();
+    let t0 = Instant::now();
+    for i in 0..10u8 {
+        a.send(b.rank(), Tag(0), vec![i]).unwrap();
+    }
+    let elapsed = t0.elapsed();
+    assert!(elapsed >= Duration::from_millis(10), "{elapsed:?}");
+    for _ in 0..10 {
+        b.recv().unwrap();
+    }
+    let s = world.stats();
+    assert_eq!(s.msgs, 10);
+    assert!(s.modelled_comm_ns >= 10_000_000);
+}
+
+#[test]
+fn bandwidth_term_scales_with_payload() {
+    let m = CostModel { alpha_us: 0.0, bandwidth_gbps: 1.0, simulate: false };
+    let d_small = m.duration(1_000);
+    let d_big = m.duration(1_000_000);
+    assert!(d_big >= d_small * 900);
+}
+
+#[test]
+fn rank_churn_mid_traffic() {
+    // Workers joining and leaving while others communicate.
+    let world = W::new(CostModel::free());
+    let stable = world.add_rank();
+    let mut sink = world.add_rank();
+    let sink_rank = sink.rank();
+
+    let hs: Vec<_> = (0..8)
+        .map(|i| {
+            let world = world.clone();
+            std::thread::spawn(move || {
+                let c = world.add_rank();
+                c.send(sink_rank, Tag(i), vec![i as u8]).unwrap();
+                // c drops here -> rank removed
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    let mut got = Vec::new();
+    for _ in 0..8 {
+        got.push(sink.recv().unwrap().into_user()[0]);
+    }
+    got.sort_unstable();
+    assert_eq!(got, (0..8).collect::<Vec<u8>>());
+    // Dead ranks are unreachable.
+    assert_eq!(world.alive_count(), 2);
+    let _ = stable;
+}
+
+#[test]
+fn heavy_concurrent_allgathers() {
+    // Repeated ring allgathers with uneven blocks under thread scheduling
+    // noise — ordering guarantees must hold every round.
+    let world = W::new(CostModel::free());
+    let comms: Vec<_> = (0..6).map(|_| world.add_rank()).collect();
+    let ranks: Vec<Rank> = comms.iter().map(|c| c.rank()).collect();
+    let sizes: Vec<usize> = (0..6).map(|i| i + 1).collect();
+    let hs: Vec<_> = comms
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut comm)| {
+            let ranks = ranks.clone();
+            let sizes = sizes.clone();
+            std::thread::spawn(move || {
+                for round in 0..20 {
+                    let local = vec![(i * 100 + round) as f32; sizes[i]];
+                    let full = comm
+                        .allgather_f32_ring(&ranks, local, &sizes)
+                        .unwrap();
+                    // verify layout
+                    let mut off = 0;
+                    for (k, sz) in sizes.iter().enumerate() {
+                        for j in 0..*sz {
+                            assert_eq!(full[off + j], (k * 100 + round) as f32);
+                        }
+                        off += sz;
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn matched_recv_under_floods() {
+    // A rank floods with tag 9 while we match tag 1 from a specific peer.
+    let world = W::new(CostModel::free());
+    let flooder = world.add_rank();
+    let friend = world.add_rank();
+    let mut me = world.add_rank();
+    let me_rank = me.rank();
+
+    let f = std::thread::spawn(move || {
+        for i in 0..500u16 {
+            flooder
+                .send(me_rank, Tag(9), vec![(i % 251) as u8])
+                .unwrap();
+        }
+    });
+    let friend_rank = friend.rank();
+    let g = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(5));
+        friend.send(me_rank, Tag(1), vec![77]).unwrap();
+    });
+    let env = me
+        .recv_match(Match { src: Some(friend_rank), tag: Some(Tag(1)) })
+        .unwrap();
+    assert_eq!(env.into_user(), vec![77]);
+    f.join().unwrap();
+    g.join().unwrap();
+    // The flood is still deliverable afterwards, in order.
+    let first = me.recv().unwrap();
+    assert_eq!(first.tag, Tag(9));
+    assert_eq!(first.into_user(), vec![0]);
+}

@@ -1,0 +1,331 @@
+//! End-to-end framework tests: full master + sub-scheduler + worker runs
+//! over the in-process comm substrate (pure-rust kernel paths — no
+//! artifacts needed; the PJRT path is covered by `runtime_hlo.rs`).
+
+use hypar::prelude::*;
+use hypar::job::registry::demo_registry;
+use hypar::scheduler::master::ReleasePolicy;
+use hypar::solvers::{self, heat, jacobi_fw, JacobiConfig};
+
+fn fw(schedulers: usize, workers: usize, registry: FunctionRegistry) -> Framework {
+    Framework::builder()
+        .schedulers(schedulers)
+        .workers_per_scheduler(workers)
+        .cores_per_worker(4)
+        .registry(registry)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn single_noop_job() {
+    let report = fw(1, 1, demo_registry())
+        .run(Algorithm::parse("J1(5,1,0);").unwrap())
+        .unwrap();
+    assert_eq!(report.metrics.jobs_executed, 1);
+    assert!(report.results.contains_key(&JobId(1)));
+    assert!(report.result(1).unwrap().is_empty()); // noop has no output
+}
+
+#[test]
+fn two_segment_dataflow_square_then_sum() {
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "emit", |_in, out| {
+        out.push(DataChunk::from_f32(vec![1.0, 2.0]));
+        out.push(DataChunk::from_f32(vec![3.0, 4.0]));
+        out.push(DataChunk::from_f32(vec![5.0, 6.0]));
+        Ok(())
+    });
+    reg.register_per_chunk_try(2, "square", |c| {
+        Ok(DataChunk::from_f32(c.as_f32()?.iter().map(|v| v * v).collect()))
+    });
+    reg.register_plain(3, "sum", |input, out| {
+        let mut acc = 0.0f32;
+        for c in input.chunks() {
+            acc += c.as_f32()?.iter().sum::<f32>();
+        }
+        out.push(DataChunk::scalar_f32(acc));
+        Ok(())
+    });
+
+    let algo = Algorithm::parse("J1(1,1,0); J2(2,0,R1); J3(3,1,R2);").unwrap();
+    let report = fw(2, 2, reg).run(algo).unwrap();
+    let total = report.result(3).unwrap().chunk(0).unwrap().first_f32().unwrap();
+    assert_eq!(total, (1..=6).map(|v| (v * v) as f32).sum::<f32>());
+    assert_eq!(report.metrics.jobs_executed, 3);
+}
+
+#[test]
+fn papers_search_max_walkthrough() {
+    // §2.2: find the max of an array via chunked sub-maxima.
+    let data: Vec<f32> = (0..1000).map(|i| ((i * 37 % 991) as f32) - 500.0).collect();
+    let want = data.iter().cloned().fold(f32::MIN, f32::max);
+
+    let mut reg = FunctionRegistry::new();
+    let d = std::sync::Arc::new(data);
+    reg.register_plain(1, "load", move |_in, out| {
+        // k = 10 chunks, as the paper's walkthrough describes.
+        let whole = DataChunk::from_f32(d.to_vec());
+        for c in whole.split(10) {
+            out.push(c);
+        }
+        Ok(())
+    });
+    reg.register_per_chunk_try(2, "search_max", |c| {
+        Ok(DataChunk::scalar_f32(
+            c.as_f32()?.iter().cloned().fold(f32::MIN, f32::max),
+        ))
+    });
+
+    let algo = Algorithm::parse(
+        "J1(1,1,0);
+         J2(2,2,R1[0..5]), J3(2,2,R1[5..10]);
+         J4(2,1,R2 R3);",
+    )
+    .unwrap();
+    let report = fw(2, 2, reg).run(algo).unwrap();
+    let result = report.result(4).unwrap();
+    let got = result
+        .chunks()
+        .iter()
+        .map(|c| c.first_f32().unwrap())
+        .fold(f32::MIN, f32::max);
+    assert_eq!(got, want);
+}
+
+fn big_consume_registry() -> FunctionRegistry {
+    let mut r = FunctionRegistry::new();
+    r.register_plain(1, "big", |_in, out| {
+        out.push(DataChunk::from_f32(vec![1.0; 1 << 18])); // 1 MiB
+        Ok(())
+    });
+    r.register_plain(2, "consume", |input, out| {
+        let s = input.chunk(0)?.as_f32()?;
+        out.push(DataChunk::scalar_f32(s.iter().sum::<f32>()));
+        Ok(())
+    });
+    r
+}
+
+#[test]
+fn keep_results_zero_transfer_consumption() {
+    // J1 keeps a large result on its worker; J2 consumes it (pinned to the
+    // same worker) — the payload must not cross the comm layer.
+    let kept = fw(1, 2, big_consume_registry())
+        .run(Algorithm::parse("J1(1,1,0,true); J2(2,1,R1);").unwrap())
+        .unwrap();
+    let not_kept = fw(1, 2, big_consume_registry())
+        .run(Algorithm::parse("J1(1,1,0,false); J2(2,1,R1);").unwrap())
+        .unwrap();
+
+    assert_eq!(
+        kept.result(2).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+        (1 << 18) as f32
+    );
+    assert!(
+        kept.metrics.comm_bytes * 4 < not_kept.metrics.comm_bytes,
+        "kept {} B vs not-kept {} B",
+        kept.metrics.comm_bytes,
+        not_kept.metrics.comm_bytes
+    );
+}
+
+#[test]
+fn thread_packing_runs_jobs_concurrently() {
+    // Two 2-thread sleep jobs on one 4-core worker (paper §3.3's example):
+    // wall time must be well under 2x the sleep.
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "sleep50", |_in, _out| {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        Ok(())
+    });
+    let report = fw(1, 1, reg)
+        .run(Algorithm::parse("J1(1,2,0), J2(1,2,0);").unwrap())
+        .unwrap();
+    assert_eq!(report.metrics.workers_spawned, 1);
+    assert!(
+        report.metrics.wall_time_us < 95_000,
+        "packing failed: {} us",
+        report.metrics.wall_time_us
+    );
+}
+
+#[test]
+fn per_chunk_distribution_across_sequences() {
+    // One 4-thread job over 8 chunks each sleeping 20 ms: sequential would
+    // be 160 ms, 4 sequences should land well under that.
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "emit8", |_in, out| {
+        for i in 0..8 {
+            out.push(DataChunk::scalar_f32(i as f32));
+        }
+        Ok(())
+    });
+    reg.register_per_chunk(2, "slowid", |c| {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        c.clone()
+    });
+    let report = fw(1, 1, reg)
+        .run(Algorithm::parse("J1(1,1,0); J2(2,4,R1);").unwrap())
+        .unwrap();
+    assert_eq!(report.result(2).unwrap().len(), 8);
+    assert!(
+        report.metrics.wall_time_us < 150_000,
+        "sequences not parallel: {} us",
+        report.metrics.wall_time_us
+    );
+}
+
+#[test]
+fn dynamic_injection_iterates_to_completion() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    let count = Arc::new(AtomicUsize::new(0));
+    let c2 = count.clone();
+    let mut reg = FunctionRegistry::new();
+    reg.register_with_ctx(1, "self_injecting", move |_in, out, ctx| {
+        let n = c2.fetch_add(1, Ordering::SeqCst) + 1;
+        out.push(DataChunk::scalar_i32(n as i32));
+        if n < 5 {
+            ctx.inject(
+                1,
+                vec![InjectedJob {
+                    local_id: 0,
+                    func: FuncId(1),
+                    threads: ThreadCount::Exact(1),
+                    inputs: vec![],
+                    keep: false,
+                }],
+            );
+        }
+        Ok(())
+    });
+    let report = fw(2, 2, reg)
+        .run(Algorithm::parse("J1(1,1,0);").unwrap())
+        .unwrap();
+    assert_eq!(count.load(Ordering::SeqCst), 5);
+    assert_eq!(report.metrics.jobs_executed, 5);
+    assert_eq!(report.metrics.jobs_injected, 4);
+    // Final segment holds the last injected job's result.
+    let (_, data) = report.results.iter().next_back().unwrap();
+    assert_eq!(data.chunk(0).unwrap().first_i32().unwrap(), 5);
+}
+
+#[test]
+fn framework_jacobi_matches_sequential_rust_path() {
+    for (schedulers, procs) in [(1usize, 1usize), (1, 2), (2, 4)] {
+        let cfg = JacobiConfig::new(96, procs, 20);
+        let seq = solvers::jacobi_seq(&cfg);
+        let topo = jacobi_fw::FwTopology { schedulers, cores_per_worker: 4 };
+        let (out, metrics) = jacobi_fw::run(&cfg, &topo).unwrap();
+        assert_eq!(out.x.len(), seq.x.len());
+        for (i, (a, b)) in out.x.iter().zip(&seq.x).enumerate() {
+            assert_eq!(a, b, "x[{i}] diverged (s={schedulers}, p={procs})");
+        }
+        // 20 iterations -> 19 injected rounds of (p sweeps + 1 assemble).
+        assert_eq!(metrics.jobs_injected, 19 * (procs + 1));
+    }
+}
+
+#[test]
+fn framework_jacobi_converges() {
+    let cfg = JacobiConfig::new(96, 2, 150);
+    let (out, _) = jacobi_fw::run(&cfg, &jacobi_fw::FwTopology::default()).unwrap();
+    assert!(out.error_vs(&cfg) < 1e-3, "err {}", out.error_vs(&cfg));
+    assert!(out.res_norm < 1e-2);
+}
+
+#[test]
+fn framework_heat_matches_sequential() {
+    let cfg = heat::HeatConfig::new(24, 16, 4, 6);
+    let want = heat::heat_seq(&cfg);
+    let (got, metrics) = heat::run(&cfg, 2).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-5, "field[{i}]: {a} vs {b}");
+    }
+    // 1 params + 4 init + 6 steps x (4 edges + 4 steps)
+    assert_eq!(metrics.jobs_executed, 1 + 4 + 6 * 8);
+}
+
+#[test]
+fn lagged_release_policy_still_solves_jacobi() {
+    let cfg = JacobiConfig::new(64, 2, 12);
+    let registry = jacobi_fw::build_registry(&cfg).unwrap();
+    let algo = jacobi_fw::build_algorithm(&cfg).unwrap();
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(3)
+        .registry(registry)
+        .release_policy(ReleasePolicy::Lagged { lag: 3 })
+        .build()
+        .unwrap();
+    let report = fw.run(algo).unwrap();
+    let seq = solvers::jacobi_seq(&cfg);
+    let (_, data) = report.results.iter().next_back().unwrap();
+    let x = data.chunk(0).unwrap();
+    assert_eq!(x.as_f32().unwrap(), seq.x.as_slice());
+}
+
+#[test]
+fn unknown_function_rejected_before_running() {
+    let err = fw(1, 1, demo_registry())
+        .run(Algorithm::parse("J1(77,1,0);").unwrap())
+        .unwrap_err();
+    assert!(matches!(err, hypar::Error::UnknownFunction(_)));
+}
+
+#[test]
+fn failing_user_function_aborts_run() {
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "boom", |_in, _out| {
+        Err(hypar::Error::Assemble("deliberate failure".into()))
+    });
+    let err = fw(1, 1, reg)
+        .run(Algorithm::parse("J1(1,1,0);").unwrap())
+        .unwrap_err();
+    match err {
+        hypar::Error::JobFailed { job, msg } => {
+            assert_eq!(job, JobId(1));
+            assert!(msg.contains("deliberate failure"));
+        }
+        other => panic!("expected JobFailed, got {other}"),
+    }
+}
+
+#[test]
+fn chunk_range_out_of_bounds_is_reported() {
+    // J1 emits 2 chunks; J2 asks for chunks 0..5.
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "two", |_in, out| {
+        out.push(DataChunk::scalar_f32(1.0));
+        out.push(DataChunk::scalar_f32(2.0));
+        Ok(())
+    });
+    reg.register_per_chunk(2, "id", |c| c.clone());
+    let err = fw(1, 1, reg)
+        .run(Algorithm::parse("J1(1,1,0); J2(2,1,R1[0..5]);").unwrap())
+        .unwrap_err();
+    assert!(
+        matches!(
+            err,
+            hypar::Error::ResultNotAvailable(_) | hypar::Error::JobFailed { .. }
+        ),
+        "got {err}"
+    );
+}
+
+#[test]
+fn many_schedulers_many_small_jobs() {
+    // Scheduling stress: 3 schedulers, 40 independent jobs in one segment.
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "tiny", |_in, out| {
+        out.push(DataChunk::scalar_f32(1.0));
+        Ok(())
+    });
+    let jobs: Vec<String> = (1..=40).map(|i| format!("J{i}(1,1,0)")).collect();
+    let script = format!("{};", jobs.join(", "));
+    let report = fw(3, 4, reg).run(Algorithm::parse(&script).unwrap()).unwrap();
+    assert_eq!(report.metrics.jobs_executed, 40);
+    assert_eq!(report.results.len(), 40);
+}

@@ -1,0 +1,348 @@
+//! Cross-module integration: script files from disk, JSON topology
+//! configs, cost-model-injected runs, solver cross-checks, metrics
+//! consistency — the glue the other suites don't cover.
+
+use std::io::Write;
+
+use hypar::comm::CostModel;
+use hypar::prelude::*;
+use hypar::job::registry::demo_registry;
+use hypar::solvers::{self, cg, jacobi_fw, jacobi_mpi, JacobiConfig};
+
+#[test]
+fn script_file_plus_config_file_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("hypar-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let script_path = dir.join("pipeline.job");
+    let mut f = std::fs::File::create(&script_path).unwrap();
+    writeln!(f, "# demo pipeline").unwrap();
+    writeln!(f, "J1(1,1,0);").unwrap();
+
+    let cfg_path = dir.join("topo.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{"schedulers": 2, "workers_per_scheduler": 2, "cores_per_worker": 2}"#,
+    )
+    .unwrap();
+
+    let cfg = TopologyConfig::from_json_file(&cfg_path).unwrap();
+    assert_eq!(cfg.schedulers, 2);
+    let algo = Algorithm::parse(&std::fs::read_to_string(&script_path).unwrap()).unwrap();
+    let fw = Framework::builder()
+        .config(cfg)
+        .registry(demo_registry())
+        .build()
+        .unwrap();
+    let report = fw.run(algo).unwrap();
+    assert_eq!(report.metrics.jobs_executed, 1);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cost_model_injection_shows_in_wall_time() {
+    // Same workload with and without injected latency: the simulated
+    // cluster must be measurably slower and the modelled time recorded.
+    let algo = || {
+        Algorithm::parse(
+            "J1(1,1,0), J2(1,1,0), J3(1,1,0), J4(1,1,0);
+             J5(3,1,R1 R2 R3 R4);",
+        )
+        .unwrap()
+    };
+    let mk = |cost: CostModel| {
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(1, "emit", |_in, out| {
+            out.push(DataChunk::from_f32(vec![1.0; 50_000])); // 200 KB
+            Ok(())
+        });
+        reg.register_plain(3, "sum", |input, out| {
+            let mut acc = 0.0f32;
+            for c in input.chunks() {
+                acc += c.as_f32()?.iter().sum::<f32>();
+            }
+            out.push(DataChunk::scalar_f32(acc));
+            Ok(())
+        });
+        Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .cost_model(cost)
+            .registry(reg)
+            .build()
+            .unwrap()
+    };
+    let fast = mk(CostModel::free()).run(algo()).unwrap();
+    // 200 KB at 0.1 GB/s = 2 ms per result hop; several hops per job.
+    let slow = mk(CostModel::cluster(100.0, 0.1)).run(algo()).unwrap();
+    assert_eq!(
+        fast.result(5).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+        200_000.0
+    );
+    assert_eq!(
+        slow.result(5).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+        200_000.0
+    );
+    assert!(slow.metrics.modelled_comm_us > 4_000);
+    assert!(
+        slow.metrics.wall_time_us > fast.metrics.wall_time_us,
+        "injection had no effect: {} vs {}",
+        slow.metrics.wall_time_us,
+        fast.metrics.wall_time_us
+    );
+}
+
+#[test]
+fn fw_and_mpi_jacobi_agree_bitwise_rust_path() {
+    // The central Figure-3 precondition: both sides compute the same
+    // trajectory, so runtime differences are pure coordination cost.
+    for procs in [1usize, 2, 4] {
+        let cfg = JacobiConfig::new(128, procs, 15);
+        let (fw_out, _) =
+            jacobi_fw::run(&cfg, &jacobi_fw::FwTopology::default()).unwrap();
+        let mpi_out = jacobi_mpi::run(&cfg).unwrap();
+        assert_eq!(fw_out.x, mpi_out.x, "p={procs}");
+        assert_eq!(fw_out.res_norm, mpi_out.res_norm, "p={procs}");
+    }
+}
+
+#[test]
+fn metrics_are_internally_consistent() {
+    let cfg = JacobiConfig::new(96, 2, 10);
+    let (_, m) = jacobi_fw::run(&cfg, &jacobi_fw::FwTopology::default()).unwrap();
+    // jobs: 2 (params,x0) + 2 D + 10 iterations x (2 sweeps + 1 assemble)
+    assert_eq!(m.jobs_executed, 2 + 2 + 10 * 3);
+    assert_eq!(m.jobs_injected, 9 * 3);
+    assert!(m.workers_spawned >= 2);
+    assert!(m.comm_msgs > 0);
+    assert!(m.wall_time_us > 0);
+    // every segment closed after opening
+    for s in &m.segments {
+        assert!(s.closed_us >= s.opened_us);
+    }
+    // per-job lifecycle ordering
+    for j in m.jobs.values() {
+        assert!(j.started_us >= j.assigned_us);
+        assert!(j.finished_us >= j.started_us);
+    }
+    assert!(m.total_exec_time().as_micros() > 0);
+    let _ = m.mean_dispatch_latency();
+    let _ = m.scheduling_overhead();
+}
+
+#[test]
+fn cg_beats_jacobi_on_iterations() {
+    // Extension sanity: CG converges far faster on the same (symmetrised)
+    // system family.
+    let cfg = JacobiConfig::new(96, 2, 400);
+    let jac = solvers::jacobi_seq(&JacobiConfig::new(96, 1, 400));
+    let cgr = cg::run(&cfg, 1e-6).unwrap();
+    assert!(cgr.iters * 3 < 400, "cg took {} iters", cgr.iters);
+    assert!(cgr.res_norm < 1e-4);
+    let _ = jac;
+}
+
+#[test]
+fn demo_registry_runs_paper_like_script() {
+    // A multi-segment script shaped like the paper's §3.3 sample, adapted
+    // to the demo registry's functions (1=identity, 2=square, 3=sum,
+    // 4=max, 5=noop): emitters first, then slicing consumers, then a
+    // global reduction.
+    let mut reg = demo_registry();
+    // an emitter that yields 10 chunks
+    reg.register_plain(7, "emit10", |_in, out| {
+        for i in 0..10 {
+            out.push(DataChunk::from_f32(vec![i as f32, (i * i) as f32]));
+        }
+        Ok(())
+    });
+    let script = "
+        J1(7,0,0), J2(7,1,0);
+        J3(2,2,R1[0..5],true), J4(2,2,R1[5..10],true), J5(3,0,R1 R2),
+         J6(4,0,R1 R2);
+        J7(3,1, R3 R4 R5 R6);
+    ";
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(3)
+        .cores_per_worker(4)
+        .registry(reg)
+        .build()
+        .unwrap();
+    let report = fw.run(Algorithm::parse(script).unwrap()).unwrap();
+    assert_eq!(report.metrics.jobs_executed, 7);
+    let final_sum = report.result(7).unwrap().chunk(0).unwrap().first_f32().unwrap();
+    assert!(final_sum.is_finite());
+    // keep-results jobs J3/J4 must not have shipped data back
+    assert!(report.results.contains_key(&JobId(7)));
+}
+
+#[test]
+fn report_result_accessor() {
+    let fw = Framework::builder()
+        .schedulers(1)
+        .workers_per_scheduler(1)
+        .registry(demo_registry())
+        .build()
+        .unwrap();
+    let report = fw.run(Algorithm::parse("J9(5,1,0);").unwrap()).unwrap();
+    assert!(report.result(9).is_some());
+    assert!(report.result(1).is_none());
+}
+
+#[test]
+fn config_dump_parses_back() {
+    let dumped = TopologyConfig::default().to_json();
+    let back = TopologyConfig::from_json_text(&dumped).unwrap();
+    assert_eq!(back.schedulers, TopologyConfig::default().schedulers);
+    back.validate().unwrap();
+}
+
+#[test]
+fn cross_scheduler_kept_fetch_via_pull() {
+    // J1 and J2 both keep results, landing on different schedulers
+    // (least-loaded placement); J3 consumes both -> pinned to J1's worker,
+    // while J2's data must travel: FetchResult -> PullKept -> KeptData ->
+    // ResultData across schedulers.
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "seven", |_in, out| {
+        out.push(DataChunk::from_f32(vec![7.0; 1000]));
+        Ok(())
+    });
+    reg.register_plain(2, "eleven", |_in, out| {
+        out.push(DataChunk::from_f32(vec![11.0; 1000]));
+        Ok(())
+    });
+    reg.register_plain(3, "sum_both", |input, out| {
+        let a: f32 = input.chunk(0)?.as_f32()?.iter().sum();
+        let b: f32 = input.chunk(1)?.as_f32()?.iter().sum();
+        out.push(DataChunk::scalar_f32(a + b));
+        Ok(())
+    });
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .registry(reg)
+        .build()
+        .unwrap();
+    let report = fw
+        .run(Algorithm::parse("J1(1,1,0,true), J2(2,1,0,true); J3(3,1,R1 R2);").unwrap())
+        .unwrap();
+    assert_eq!(
+        report.result(3).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+        7000.0 + 11000.0
+    );
+}
+
+#[test]
+fn engineless_worker_rejects_engine_functions() {
+    let mut reg = FunctionRegistry::new();
+    reg.register_with_ctx(1, "wants_engine", |_in, _out, ctx| {
+        ctx.engine()?; // NoEngine -> job fails -> run fails
+        Ok(())
+    });
+    let fw = Framework::builder()
+        .schedulers(1)
+        .workers_per_scheduler(1)
+        .registry(reg)
+        .build()
+        .unwrap();
+    let err = fw.run(Algorithm::parse("J1(1,1,0);").unwrap()).unwrap_err();
+    match err {
+        hypar::Error::JobFailed { msg, .. } => {
+            assert!(msg.contains("engine"), "unexpected message: {msg}")
+        }
+        other => panic!("expected JobFailed, got {other}"),
+    }
+}
+
+#[test]
+fn deep_pipeline_many_segments() {
+    // 50-segment chain J_{i+1}(R_i): stresses segment turnover, release
+    // bookkeeping, placement with data affinity.
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "start", |_in, out| {
+        out.push(DataChunk::scalar_f32(1.0));
+        Ok(())
+    });
+    reg.register_plain(2, "inc", |input, out| {
+        out.push(DataChunk::scalar_f32(
+            input.chunk(0)?.first_f32()? + 1.0,
+        ));
+        Ok(())
+    });
+    let mut script = String::from("J1(1,1,0);\n");
+    for i in 2..=50 {
+        script.push_str(&format!("J{i}(2,1,R{});\n", i - 1));
+    }
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .registry(reg)
+        .build()
+        .unwrap();
+    let report = fw.run(Algorithm::parse(&script).unwrap()).unwrap();
+    assert_eq!(
+        report.result(50).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+        50.0
+    );
+    assert_eq!(report.metrics.segments.len(), 50);
+}
+
+#[test]
+fn wide_fanout_fanin() {
+    // One producer, 30 parallel consumers, one reducer — placement and
+    // result-serving fan-out across 3 schedulers.
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "emit", |_in, out| {
+        for c in DataChunk::from_f32((0..300).map(|i| i as f32).collect()).split(30) {
+            out.push(c);
+        }
+        Ok(())
+    });
+    reg.register_per_chunk_try(2, "sum_chunk", |c| {
+        Ok(DataChunk::scalar_f32(c.as_f32()?.iter().sum()))
+    });
+    reg.register_plain(3, "reduce", |input, out| {
+        let mut acc = 0.0f32;
+        for c in input.chunks() {
+            acc += c.first_f32()?;
+        }
+        out.push(DataChunk::scalar_f32(acc));
+        Ok(())
+    });
+    let mut mids = Vec::new();
+    let mut script = String::from("J1(1,1,0);\n");
+    for k in 0..30usize {
+        mids.push(format!("J{}(2,1,R1[{}..{}])", k + 2, k, k + 1));
+    }
+    script.push_str(&mids.join(", "));
+    script.push_str(";\n");
+    let refs: Vec<String> = (0..30).map(|k| format!("R{}", k + 2)).collect();
+    script.push_str(&format!("J40(3,1,{});", refs.join(" ")));
+    let fw = Framework::builder()
+        .schedulers(3)
+        .workers_per_scheduler(3)
+        .registry(reg)
+        .build()
+        .unwrap();
+    let report = fw.run(Algorithm::parse(&script).unwrap()).unwrap();
+    assert_eq!(
+        report.result(40).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+        (0..300).sum::<i32>() as f32
+    );
+}
+
+#[test]
+fn timeline_and_json_for_real_run() {
+    let cfg = JacobiConfig::new(96, 2, 5);
+    let (_, m) = jacobi_fw::run(&cfg, &jacobi_fw::FwTopology::default()).unwrap();
+    let tl = m.render_timeline(60);
+    assert!(tl.contains('#'));
+    let parsed = hypar::util::json::parse(&m.to_json().to_string()).unwrap();
+    assert_eq!(
+        parsed.get("jobs_executed").unwrap().as_usize(),
+        Some(m.jobs_executed)
+    );
+}

@@ -1,0 +1,227 @@
+//! PJRT runtime tests: load the real AOT artifacts (HLO text produced by
+//! `python/compile/aot.py`), execute them, and compare against rust
+//! oracles — the full python→rust interchange, end to end.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! works on a fresh checkout).
+
+use hypar::data::{matrix, DataChunk};
+use hypar::runtime::{ComputeBackend, Engine, Manifest};
+use hypar::solvers::{self, heat, jacobi_fw, jacobi_mpi, JacobiConfig, KernelPath};
+use hypar::util::rng::Rng;
+
+const DIR: &str = "artifacts";
+
+fn artifacts_available() -> bool {
+    std::path::Path::new(DIR).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn engine_loads_and_caches_executables() {
+    require_artifacts!();
+    let engine = Engine::load(DIR).unwrap();
+    assert!(engine.manifest().artifacts.len() >= 12);
+    engine.warmup(&["jacobi_block_ref_n512_bm256"]).unwrap();
+    assert_eq!(engine.cached_executables(), 1);
+    engine.warmup(&["jacobi_block_ref_n512_bm256"]).unwrap();
+    assert_eq!(engine.cached_executables(), 1); // cached, not recompiled
+}
+
+#[test]
+fn jacobi_block_artifact_matches_rust_sweep() {
+    require_artifacts!();
+    let engine = Engine::load(DIR).unwrap();
+    let (n, bm, off) = (512usize, 256usize, 256usize);
+    let mut rng = Rng::new(11);
+    let a: Vec<f32> = (0..bm * n).map(|_| rng.range_f32(-0.1, 0.1)).collect();
+    let x: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let b: Vec<f32> = (0..bm).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let invd: Vec<f32> = (0..bm).map(|_| 0.5 + rng.f32()).collect();
+
+    for variant in ["ref", "pallas"] {
+        let name = engine.manifest().jacobi_block(variant, n, bm).unwrap().to_string();
+        let out = engine
+            .execute(
+                &name,
+                &[
+                    DataChunk::from_f32(a.clone()),
+                    DataChunk::from_f32(x.clone()),
+                    DataChunk::from_f32(b.clone()),
+                    DataChunk::from_f32(invd.clone()),
+                    DataChunk::scalar_i32(off as i32),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let x_new = out[0].as_f32().unwrap();
+        let res2 = out[1].first_f32().unwrap() as f64;
+
+        let mut want = vec![0.0f32; bm];
+        let want_res2 =
+            solvers::rust_block_sweep(&a, &x, &b, &invd, off, &mut want, n);
+        for (i, (g, w)) in x_new.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-3,
+                "{variant} x[{i}]: {g} vs {w}"
+            );
+        }
+        assert!(
+            (res2 - want_res2).abs() < 1e-2 * want_res2.max(1.0),
+            "{variant} res2: {res2} vs {want_res2}"
+        );
+    }
+}
+
+#[test]
+fn pallas_and_ref_variants_agree_on_artifacts() {
+    require_artifacts!();
+    let engine = Engine::load(DIR).unwrap();
+    let (n, bm) = (512usize, 128usize);
+    let mut rng = Rng::new(5);
+    let inputs = vec![
+        DataChunk::from_f32((0..bm * n).map(|_| rng.range_f32(-0.1, 0.1)).collect()),
+        DataChunk::from_f32((0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect()),
+        DataChunk::from_f32((0..bm).map(|_| rng.range_f32(-1.0, 1.0)).collect()),
+        DataChunk::from_f32((0..bm).map(|_| 0.5 + rng.f32()).collect()),
+        DataChunk::scalar_i32(128),
+    ];
+    let name_p = engine.manifest().jacobi_block("pallas", n, bm).unwrap().to_string();
+    let name_r = engine.manifest().jacobi_block("ref", n, bm).unwrap().to_string();
+    let out_p = engine.execute(&name_p, &inputs).unwrap();
+    let out_r = engine.execute(&name_r, &inputs).unwrap();
+    let xp = out_p[0].as_f32().unwrap();
+    let xr = out_r[0].as_f32().unwrap();
+    for (i, (a, b)) in xp.iter().zip(xr).enumerate() {
+        assert!((a - b).abs() < 1e-3, "x[{i}]: pallas {a} vs ref {b}");
+    }
+}
+
+#[test]
+fn heat_artifact_matches_rust_stencil() {
+    require_artifacts!();
+    let engine = Engine::load(DIR).unwrap();
+    let (rows, w) = (34usize, 64usize);
+    let mut rng = Rng::new(3);
+    let u: Vec<f32> = (0..rows * w).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let alpha = 0.2f32;
+    for variant in ["ref", "pallas"] {
+        let name = engine.manifest().heat_strip(variant, rows, w).unwrap().to_string();
+        let out = engine
+            .execute(&name, &[DataChunk::from_f32(u.clone()), DataChunk::scalar_f32(alpha)])
+            .unwrap();
+        let got = out[0].as_f32().unwrap();
+        assert_eq!(got.len(), (rows - 2) * w);
+        // Oracle: interior update with Dirichlet columns.
+        for i in 1..rows - 1 {
+            for c in 1..w - 1 {
+                let centre = u[i * w + c];
+                let lap = u[(i - 1) * w + c] + u[(i + 1) * w + c] + u[i * w + c - 1]
+                    + u[i * w + c + 1]
+                    - 4.0 * centre;
+                let want = centre + alpha * lap;
+                let g = got[(i - 1) * w + c];
+                assert!((g - want).abs() < 1e-4, "{variant} [{i},{c}]: {g} vs {want}");
+            }
+            // Dirichlet columns preserved
+            assert_eq!(got[(i - 1) * w], u[i * w]);
+            assert_eq!(got[(i - 1) * w + w - 1], u[i * w + w - 1]);
+        }
+    }
+}
+
+#[test]
+fn bad_feed_shapes_are_rejected_before_pjrt() {
+    require_artifacts!();
+    let engine = Engine::load(DIR).unwrap();
+    let name = engine.manifest().jacobi_block("ref", 512, 256).unwrap().to_string();
+    // wrong arity
+    assert!(engine.execute(&name, &[]).is_err());
+    // wrong element count
+    let bad = vec![
+        DataChunk::from_f32(vec![0.0; 10]),
+        DataChunk::from_f32(vec![0.0; 512]),
+        DataChunk::from_f32(vec![0.0; 256]),
+        DataChunk::from_f32(vec![0.0; 256]),
+        DataChunk::scalar_i32(0),
+    ];
+    assert!(engine.execute(&name, &bad).is_err());
+    // wrong dtype for the scalar
+    let bad2 = vec![
+        DataChunk::from_f32(vec![0.0; 256 * 512]),
+        DataChunk::from_f32(vec![0.0; 512]),
+        DataChunk::from_f32(vec![0.0; 256]),
+        DataChunk::from_f32(vec![0.0; 256]),
+        DataChunk::scalar_f32(0.0),
+    ];
+    assert!(engine.execute(&name, &bad2).is_err());
+}
+
+#[test]
+fn framework_jacobi_on_engine_matches_rust_path_closely() {
+    require_artifacts!();
+    // Same system solved via PJRT (ref-lowered artifact) and via rust
+    // loops: trajectories agree to accumulation-order tolerance.
+    let base = JacobiConfig::new(500, 2, 15); // pads to 512
+    let rust_out = {
+        let (o, _) = jacobi_fw::run(&base, &jacobi_fw::FwTopology::default()).unwrap();
+        o
+    };
+    let engine_cfg = base.clone().with_kernel(KernelPath::EngineRef).with_artifacts(DIR);
+    let (engine_out, _) =
+        jacobi_fw::run(&engine_cfg, &jacobi_fw::FwTopology::default()).unwrap();
+    assert_eq!(engine_out.x.len(), rust_out.x.len());
+    for (i, (a, b)) in engine_out.x.iter().zip(&rust_out.x).enumerate() {
+        assert!((a - b).abs() < 1e-3, "x[{i}]: engine {a} vs rust {b}");
+    }
+}
+
+#[test]
+fn tailored_mpi_on_engine_converges() {
+    require_artifacts!();
+    let cfg = JacobiConfig::new(500, 4, 120)
+        .with_kernel(KernelPath::EngineRef)
+        .with_artifacts(DIR);
+    let out = jacobi_mpi::run(&cfg).unwrap();
+    assert!(out.error_vs(&cfg) < 5e-3, "err {}", out.error_vs(&cfg));
+}
+
+#[test]
+fn framework_heat_on_pallas_engine_matches_sequential() {
+    require_artifacts!();
+    // Test-config artifact: rows=34, w=64 -> h=32, strips=1.
+    let mut cfg = heat::HeatConfig::new(32, 64, 1, 5).with_kernel(KernelPath::EnginePallas);
+    cfg.artifact_dir = DIR.into();
+    let want = heat::heat_seq(&cfg);
+    let (got, _) = heat::run(&cfg, 1).unwrap();
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-4, "field[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn manifest_paper_sizes_cover_figure3() {
+    require_artifacts!();
+    let m = Manifest::load(DIR).unwrap();
+    for (paper, padded) in [(2709usize, 2816usize), (4209, 4352), (7209, 7424)] {
+        assert_eq!(m.padded_size(paper), padded);
+        for p in [1usize, 2, 4, 8] {
+            let bm = padded / p;
+            assert!(
+                m.jacobi_block("ref", padded, bm).is_ok(),
+                "missing jacobi_block ref n={padded} bm={bm}"
+            );
+        }
+    }
+    // padding preserves the solution (rust-side check)
+    let sys = matrix::diag_dominant_system(100, 128, 7);
+    assert_eq!(sys.n(), 128);
+}
