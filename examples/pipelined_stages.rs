@@ -1,0 +1,99 @@
+//! Pipelined stages: the dataflow executor in one screenful.
+//!
+//! Four independent lanes, each a chain of six stage jobs; one rotating
+//! lane per stage is a straggler.  The barrier control plane serialises
+//! the stages (every stage costs the straggler's time), the dataflow
+//! control plane releases each lane as soon as its own predecessor is
+//! done — same algorithm text, same results, very different schedule.
+//!
+//! ```text
+//! cargo run --example pipelined_stages
+//! ```
+
+use hypar::prelude::*;
+
+const LANES: usize = 4;
+const STAGES: usize = 6;
+
+fn registry() -> FunctionRegistry {
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "fast_stage", |input, out| {
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        let sum: f32 = input
+            .chunks()
+            .iter()
+            .filter_map(|c| c.first_f32().ok())
+            .sum();
+        out.push(DataChunk::scalar_f32(sum + 1.0));
+        Ok(())
+    });
+    reg.register_plain(2, "slow_stage", |input, out| {
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let sum: f32 = input
+            .chunks()
+            .iter()
+            .filter_map(|c| c.first_f32().ok())
+            .sum();
+        out.push(DataChunk::scalar_f32(sum + 1.0));
+        Ok(())
+    });
+    reg
+}
+
+fn algorithm() -> Algorithm {
+    let mut b = Algorithm::builder();
+    for s in 0..STAGES {
+        let mut jobs = Vec::new();
+        for lane in 0..LANES {
+            let id = (s * LANES + lane + 1) as u32;
+            let func = if s % LANES == lane { 2 } else { 1 };
+            let mut spec = JobSpec::new(id, func, 1);
+            if s > 0 {
+                let prev = ((s - 1) * LANES + lane + 1) as u32;
+                spec = spec.with_inputs(vec![ChunkRef::all(JobId(prev))]);
+            }
+            jobs.push(spec);
+        }
+        b = b.segment(jobs);
+    }
+    b.build().expect("valid algorithm")
+}
+
+fn run(mode: ExecutionMode) -> RunReport {
+    Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .cores_per_worker(2)
+        .execution_mode(mode)
+        .registry(registry())
+        .build()
+        .expect("build")
+        .run(algorithm())
+        .expect("run")
+}
+
+fn main() {
+    for mode in [ExecutionMode::Barrier, ExecutionMode::Dataflow] {
+        let report = run(mode);
+        // Every lane performed STAGES increments from 0.0.
+        for lane in 0..LANES {
+            let id = ((STAGES - 1) * LANES + lane + 1) as u32;
+            let v = report
+                .result(id)
+                .and_then(|d| d.chunk(0).ok())
+                .and_then(|c| c.first_f32().ok())
+                .expect("final lane result");
+            assert_eq!(v, STAGES as f32, "lane {lane} result");
+        }
+        println!(
+            "\n== {mode} ==  wall {:.1} ms, {} jobs, {} overlapped across segments, \
+             mean queue latency {:?}",
+            report.metrics.wall_time_us as f64 / 1e3,
+            report.metrics.jobs_executed,
+            report.metrics.pipeline_overlap_jobs,
+            report.metrics.mean_queue_latency(),
+        );
+        print!("{}", report.metrics.render_timeline(60));
+    }
+    println!("\nsame results, same script — the dataflow schedule just refuses to idle.");
+}

@@ -21,6 +21,7 @@
 use hypar::comm::CostModel;
 use hypar::solvers::{jacobi_fw, jacobi_mpi, projection, JacobiConfig};
 use hypar::util::bench::{Bench, Report};
+use hypar::util::json::Json;
 
 fn env_list(name: &str, default: &[usize]) -> Vec<usize> {
     std::env::var(name)
@@ -50,6 +51,9 @@ fn main() {
     );
 
     let mut overheads: Vec<(usize, usize, f64)> = Vec::new();
+    // (size, procs, fw_ms, mpi_ms, overhead_pct) — serialised to
+    // BENCH_fig3.json so the perf trajectory is trackable across PRs.
+    let mut json_rows: Vec<(usize, usize, f64, f64, f64)> = Vec::new();
     for &size in &sizes {
         let mut report = Report::new(format!("fig3 size {size}"));
         for &p in &procs {
@@ -65,6 +69,7 @@ fn main() {
                 jacobi_mpi::run(&cfg3).expect("mpi run")
             });
             let overhead = (m_fw.mean.as_secs_f64() / m_mpi.mean.as_secs_f64() - 1.0) * 100.0;
+            json_rows.push((size, p, m_fw.mean_ms(), m_mpi.mean_ms(), overhead));
             report.add(m_fw);
             report.add(m_mpi);
             println!("    -> overhead {overhead:+.1}%");
@@ -85,6 +90,33 @@ fn main() {
         .map(|(_, _, o)| *o)
         .fold(f64::NEG_INFINITY, f64::max);
     println!("mean {mean:+.1}%  min {min:+.1}%  max {max:+.1}%");
+
+    // Machine-readable trajectory file: wall time per topology.
+    let out_path = std::env::var("HYPAR_FIG3_JSON")
+        .unwrap_or_else(|_| "BENCH_fig3.json".to_string());
+    let rows_json: Vec<Json> = json_rows
+        .iter()
+        .map(|&(size, p, fw_ms, mpi_ms, overhead)| {
+            Json::obj(vec![
+                ("size", Json::num(size as f64)),
+                ("procs", Json::num(p as f64)),
+                ("fw_mean_ms", Json::num(fw_ms)),
+                ("mpi_mean_ms", Json::num(mpi_ms)),
+                ("overhead_pct", Json::num(overhead)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fig3_jacobi".to_string())),
+        ("iters", Json::num(iters as f64)),
+        ("reps", Json::num(bench.reps as f64)),
+        ("mean_overhead_pct", Json::num(mean)),
+        ("rows", Json::Array(rows_json)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string_pretty(2)) {
+        Ok(()) => println!("wrote {out_path} ({} topology rows)", json_rows.len()),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
 
     // --------------------------------------------------------------------
     // Projected cluster panel (the Figure-3 *scaling shape*): this testbed

@@ -16,7 +16,8 @@
 //!   "prespawn_workers": false,
 //!   "fault_timeout_ms": 5000,
 //!   "cost_model": {"alpha_us": 2.0, "bandwidth_gbps": 10.0, "simulate": false},
-//!   "engine": {"artifact_dir": "artifacts", "variant": "ref"}
+//!   "engine": {"artifact_dir": "artifacts", "variant": "ref"},
+//!   "execution_mode": "dataflow"
 //! }
 //! ```
 
@@ -71,6 +72,48 @@ impl Default for EngineConfig {
     }
 }
 
+/// How the master releases work to the cluster (DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecutionMode {
+    /// Segment-barrier execution (the paper's literal model): every job of
+    /// segment *k* completes before any job of segment *k+1* is assigned.
+    /// Pick this for workloads with genuine per-segment side effects, for
+    /// apples-to-apples comparison against the paper, or when debugging —
+    /// the schedule is easier to reason about.
+    Barrier,
+    /// Dependency-DAG execution: a job is assigned the moment every result
+    /// it references is available, across segment boundaries.  Stragglers
+    /// stall only their own dependents, so computation and communication
+    /// of independent lanes overlap.  The default.
+    #[default]
+    Dataflow,
+}
+
+impl ExecutionMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ExecutionMode::Barrier => "barrier",
+            ExecutionMode::Dataflow => "dataflow",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "barrier" => Ok(ExecutionMode::Barrier),
+            "dataflow" => Ok(ExecutionMode::Dataflow),
+            other => Err(Error::Config(format!(
+                "execution_mode must be \"barrier\" or \"dataflow\", got {other:?}"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecutionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Full topology configuration.
 #[derive(Debug, Clone)]
 pub struct TopologyConfig {
@@ -88,6 +131,8 @@ pub struct TopologyConfig {
     pub cost_model: CostModelConfig,
     /// Optional compute engine (absent = pure-rust user functions only).
     pub engine: Option<EngineConfig>,
+    /// Barrier vs dataflow control plane (DESIGN.md §7).
+    pub execution_mode: ExecutionMode,
 }
 
 impl Default for TopologyConfig {
@@ -100,6 +145,7 @@ impl Default for TopologyConfig {
             fault_timeout_ms: 5_000,
             cost_model: CostModelConfig::default(),
             engine: None,
+            execution_mode: ExecutionMode::default(),
         }
     }
 }
@@ -145,6 +191,12 @@ impl TopologyConfig {
                 cfg.cost_model.simulate = v;
             }
         }
+        if let Some(v) = doc.get("execution_mode") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::Config("execution_mode must be a string".into()))?;
+            cfg.execution_mode = ExecutionMode::parse(s)?;
+        }
         if let Some(e) = doc.get("engine") {
             if *e != Json::Null {
                 let dir = e
@@ -172,6 +224,10 @@ impl TopologyConfig {
             ("cores_per_worker", Json::num(self.cores_per_worker as f64)),
             ("prespawn_workers", Json::Bool(self.prespawn_workers)),
             ("fault_timeout_ms", Json::num(self.fault_timeout_ms as f64)),
+            (
+                "execution_mode",
+                Json::str(self.execution_mode.as_str().to_string()),
+            ),
             (
                 "cost_model",
                 Json::obj(vec![
@@ -234,6 +290,18 @@ mod tests {
     #[test]
     fn defaults_validate() {
         TopologyConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn execution_mode_parses_and_roundtrips() {
+        assert_eq!(TopologyConfig::default().execution_mode, ExecutionMode::Dataflow);
+        let cfg =
+            TopologyConfig::from_json_text(r#"{"execution_mode": "barrier"}"#).unwrap();
+        assert_eq!(cfg.execution_mode, ExecutionMode::Barrier);
+        let back = TopologyConfig::from_json_text(&cfg.to_json()).unwrap();
+        assert_eq!(back.execution_mode, ExecutionMode::Barrier);
+        assert!(TopologyConfig::from_json_text(r#"{"execution_mode": "bsp"}"#).is_err());
+        assert!(TopologyConfig::from_json_text(r#"{"execution_mode": 3}"#).is_err());
     }
 
     #[test]

@@ -96,6 +96,7 @@ pub enum Error {
     Json(#[from] crate::util::json::JsonError),
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -19,13 +19,45 @@
 //! let report = fw.run(Algorithm::parse("J1(4,0,0);").unwrap()).unwrap();
 //! println!("wall: {} us", report.metrics.wall_time_us);
 //! ```
+//!
+//! ## Execution modes
+//!
+//! The master can drive an algorithm two ways
+//! ([`FrameworkBuilder::execution_mode`], DESIGN.md §7):
+//!
+//! * [`ExecutionMode::Dataflow`] (**default**) — jobs are assigned the
+//!   moment their referenced results are available, across segment
+//!   boundaries.  A straggler stalls only its own dependents; independent
+//!   pipeline lanes overlap.  Pick this for throughput.
+//! * [`ExecutionMode::Barrier`] — segment *k+1* starts only after every
+//!   job of segment *k* finished, the paper's literal semantics.  Pick
+//!   this for apples-to-apples comparison against the paper, for
+//!   workloads relying on whole-segment side effects (e.g. a segment
+//!   whose jobs all mutate shared external state), or when a simpler,
+//!   stepwise schedule makes debugging easier.
+//!
+//! ```no_run
+//! use hypar::prelude::*;
+//! use hypar::job::registry::demo_registry;
+//!
+//! let report = Framework::builder()
+//!     .schedulers(2)
+//!     .workers_per_scheduler(2)
+//!     .execution_mode(ExecutionMode::Barrier) // paper-faithful barriers
+//!     .registry(demo_registry())
+//!     .build()
+//!     .unwrap()
+//!     .run(Algorithm::parse("J1(1,1,0); J2(1,1,0);").unwrap())
+//!     .unwrap();
+//! assert_eq!(report.metrics.pipeline_overlap_jobs, 0); // barriers: no overlap
+//! ```
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::comm::{CostModel, World};
-use crate::config::TopologyConfig;
+use crate::config::{ExecutionMode, TopologyConfig};
 use crate::data::FunctionData;
 use crate::error::Result;
 use crate::fault::FaultInjector;
@@ -117,7 +149,11 @@ impl Framework {
         let result = run_master(
             &mut master_comm,
             algo,
-            MasterConfig { subs: sub_ranks, release: self.release },
+            MasterConfig {
+                subs: sub_ranks,
+                release: self.release,
+                mode: self.cfg.execution_mode,
+            },
             &metrics,
         );
 
@@ -210,6 +246,12 @@ impl FrameworkBuilder {
 
     pub fn release_policy(mut self, p: ReleasePolicy) -> Self {
         self.release = p;
+        self
+    }
+
+    /// Barrier vs dataflow control plane (default: [`ExecutionMode::Dataflow`]).
+    pub fn execution_mode(mut self, m: ExecutionMode) -> Self {
+        self.cfg.execution_mode = m;
         self
     }
 

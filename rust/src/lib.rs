@@ -18,7 +18,10 @@
 //! ## The runtime (paper §3)
 //!
 //! A **master scheduler** (rank 0) holds the whole algorithm description
-//! and assigns ready jobs to **sub-schedulers** (ranks `1..=S`), which
+//! and assigns ready jobs — by default via a dependency-DAG **dataflow
+//! executor** that releases each job the moment its inputs exist, with an
+//! optional paper-faithful segment-**barrier** mode
+//! ([`config::ExecutionMode`]) — to **sub-schedulers** (ranks `1..=S`), which
 //! dispatch them to dynamically spawned, isolated **workers** and store the
 //! job results, serving them (whole or as chunk slices) to any other
 //! scheduler that needs them as inputs.  Workers can retain results
@@ -77,7 +80,7 @@ pub use framework::{Framework, FrameworkBuilder, RunReport};
 /// One-stop imports for framework users.
 pub mod prelude {
     pub use crate::comm::{Comm, CommSender, Rank, Tag, World};
-    pub use crate::config::{CostModelConfig, EngineConfig, TopologyConfig};
+    pub use crate::config::{CostModelConfig, EngineConfig, ExecutionMode, TopologyConfig};
     pub use crate::data::{DataChunk, Dtype, FunctionData};
     pub use crate::error::{Error, Result};
     pub use crate::framework::{Framework, FrameworkBuilder, RunReport};

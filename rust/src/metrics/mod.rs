@@ -18,6 +18,9 @@ use crate::job::JobId;
 /// Lifecycle timestamps of one job (all relative to run start).
 #[derive(Debug, Clone, Default)]
 pub struct JobTimes {
+    /// Every input became available — the job entered the ready set (µs
+    /// since run start).  Equal to `assigned_us` under barrier execution.
+    pub ready_us: u64,
     /// Master put it on a scheduler (µs since run start).
     pub assigned_us: u64,
     /// Worker began executing (µs).
@@ -41,6 +44,12 @@ impl JobTimes {
     /// Pure execution time.
     pub fn exec_time(&self) -> Duration {
         Duration::from_micros(self.finished_us.saturating_sub(self.started_us))
+    }
+
+    /// Ready → executing: the full control-plane queueing cost of this
+    /// job (master ready-queue + placement + transit + worker queue).
+    pub fn queue_latency(&self) -> Duration {
+        Duration::from_micros(self.started_us.saturating_sub(self.ready_us))
     }
 }
 
@@ -67,12 +76,29 @@ pub struct MetricsSnapshot {
     pub jobs_injected: usize,
     pub workers_spawned: usize,
     pub recomputed_jobs: usize,
+    /// Jobs assigned while an *earlier* segment still had unfinished jobs —
+    /// the pipeline-overlap counter.  Always 0 under barrier execution;
+    /// under dataflow it measures how much cross-segment overlap the DAG
+    /// executor actually extracted.
+    pub pipeline_overlap_jobs: usize,
 }
 
 impl MetricsSnapshot {
     /// Sum of all job execution times (the "work" in the overhead ratio).
     pub fn total_exec_time(&self) -> Duration {
         self.jobs.values().map(|j| j.exec_time()).sum()
+    }
+
+    /// Mean queue latency (ready -> execution start).
+    pub fn mean_queue_latency(&self) -> Duration {
+        if self.jobs.is_empty() {
+            return Duration::ZERO;
+        }
+        self.jobs
+            .values()
+            .map(|j| j.queue_latency())
+            .sum::<Duration>()
+            / self.jobs.len() as u32
     }
 
     /// Mean dispatch latency (assignment -> execution start).
@@ -104,6 +130,10 @@ impl MetricsSnapshot {
             ("jobs_injected", Json::num(self.jobs_injected as f64)),
             ("workers_spawned", Json::num(self.workers_spawned as f64)),
             ("recomputed_jobs", Json::num(self.recomputed_jobs as f64)),
+            (
+                "pipeline_overlap_jobs",
+                Json::num(self.pipeline_overlap_jobs as f64),
+            ),
             ("comm_msgs", Json::num(self.comm_msgs as f64)),
             ("comm_bytes", Json::num(self.comm_bytes as f64)),
             ("modelled_comm_us", Json::num(self.modelled_comm_us as f64)),
@@ -111,6 +141,10 @@ impl MetricsSnapshot {
             (
                 "mean_dispatch_latency_us",
                 Json::num(self.mean_dispatch_latency().as_micros() as f64),
+            ),
+            (
+                "mean_queue_latency_us",
+                Json::num(self.mean_queue_latency().as_micros() as f64),
             ),
             (
                 "total_exec_us",
@@ -189,13 +223,32 @@ impl MetricsCollector {
         f(&mut self.inner.lock().expect("metrics lock poisoned"))
     }
 
+    /// All inputs of `job` are available; it entered the ready set.
+    pub fn job_ready(&self, job: JobId) {
+        let t = self.now_us();
+        self.with(|m| {
+            m.jobs.entry(job.0).or_default().ready_us = t;
+        });
+    }
+
     pub fn job_assigned(&self, job: JobId, input_bytes: u64) {
         let t = self.now_us();
         self.with(|m| {
             let e = m.jobs.entry(job.0).or_default();
             e.assigned_us = t;
             e.input_bytes = input_bytes;
+            if e.ready_us == 0 {
+                // Barrier mode (or re-assignment after recovery): ready
+                // coincides with assignment.
+                e.ready_us = t;
+            }
         });
+    }
+
+    /// `job` was assigned while an earlier segment still had unfinished
+    /// jobs — cross-segment pipeline overlap.
+    pub fn job_overlapped(&self) {
+        self.with(|m| m.pipeline_overlap_jobs += 1);
     }
 
     pub fn job_started(&self, job: JobId, worker: u32) {
@@ -233,10 +286,32 @@ impl MetricsCollector {
         });
     }
 
+    /// Close a specific segment (dataflow mode — segments drain out of
+    /// order, so "the last opened one" is meaningless there).
+    pub fn segment_closed_idx(&self, idx: usize) {
+        let t = self.now_us();
+        self.with(|m| {
+            if let Some(s) = m.segments.get_mut(idx) {
+                s.closed_us = t;
+            }
+        });
+    }
+
     pub fn jobs_injected(&self, count: usize) {
         self.with(|m| {
             m.jobs_injected += count;
             if let Some(s) = m.segments.last_mut() {
+                s.injected += count;
+            }
+        });
+    }
+
+    /// Attribute injected jobs to their actual target segment (dataflow
+    /// mode keeps every segment entry open simultaneously).
+    pub fn jobs_injected_into(&self, count: usize, idx: usize) {
+        self.with(|m| {
+            m.jobs_injected += count;
+            if let Some(s) = m.segments.get_mut(idx) {
                 s.injected += count;
             }
         });

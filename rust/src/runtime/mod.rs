@@ -17,9 +17,11 @@
 //! engine so coordinator tests can run against [`MockBackend`] without
 //! artifacts on disk.
 
+#[cfg(feature = "pjrt")]
 pub mod literal;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -47,11 +49,78 @@ pub trait ComputeBackend {
 pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn ComputeBackend>> + Send + Sync>;
 
 /// PJRT engine factory rooted at an artifact directory.
+#[cfg(feature = "pjrt")]
 pub fn pjrt_factory(artifact_dir: impl Into<PathBuf>) -> EngineFactory {
     let dir = artifact_dir.into();
     Arc::new(move || Ok(Box::new(Engine::load(&dir)?) as Box<dyn ComputeBackend>))
 }
 
+/// Without the `pjrt` feature the factory still exists (so topology
+/// configs naming an engine parse and build), but engine construction —
+/// which only happens when a user function first requests compute —
+/// reports the missing feature.
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt_factory(artifact_dir: impl Into<PathBuf>) -> EngineFactory {
+    let dir = artifact_dir.into();
+    Arc::new(move || {
+        Err(Error::Xla(format!(
+            "hypar was built without the `pjrt` cargo feature; cannot load \
+             artifacts from {dir:?} (rebuild with `--features pjrt`)"
+        )))
+    })
+}
+
+/// Feature-stub [`Engine`]: keeps the type (and the prelude) stable when
+/// the `pjrt` feature is off.  [`Engine::load`] always errors, so none of
+/// the other methods can be reached with a live instance.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    manifest: Arc<Manifest>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    fn unavailable<T>() -> Result<T> {
+        Err(Error::Xla(
+            "hypar was built without the `pjrt` cargo feature (rebuild with \
+             `--features pjrt`)"
+                .into(),
+        ))
+    }
+
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = artifact_dir;
+        Self::unavailable()
+    }
+
+    pub fn with_manifest(dir: impl Into<PathBuf>, manifest: Arc<Manifest>) -> Result<Self> {
+        let _ = (dir.into(), manifest);
+        Self::unavailable()
+    }
+
+    pub fn warmup(&self, _names: &[&str]) -> Result<()> {
+        Self::unavailable()
+    }
+
+    pub fn cached_buffers(&self) -> usize {
+        0
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        0
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ComputeBackend for Engine {
+    fn execute(&self, _name: &str, _inputs: &[DataChunk]) -> Result<Vec<DataChunk>> {
+        Self::unavailable()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}
 
 /// The PJRT-backed engine: one CPU client, an executable cache, and a
 /// **device-buffer cache** for long-lived inputs.
@@ -66,6 +135,7 @@ pub fn pjrt_factory(artifact_dir: impl Into<PathBuf>) -> EngineFactory {
 /// freed-and-reallocated buffer can never alias a cached identity (the
 /// ABA hazard of raw-pointer keys). One buffer per input slot, replaced
 /// when a different chunk arrives, so memory stays bounded.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Arc<Manifest>,
@@ -74,6 +144,7 @@ pub struct Engine {
     buf_cache: RefCell<HashMap<(String, usize), (DataChunk, xla::PjRtBuffer)>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Open the artifact directory (must contain `manifest.json`).
     pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
@@ -158,6 +229,7 @@ impl Engine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ComputeBackend for Engine {
     fn execute(&self, name: &str, inputs: &[DataChunk]) -> Result<Vec<DataChunk>> {
         let entry = self.manifest.get(name)?;

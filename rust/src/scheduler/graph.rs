@@ -1,0 +1,433 @@
+//! Job dependency graph — the dataflow executor's core (DESIGN.md §7).
+//!
+//! The barrier executor derives readiness from segment position: a job may
+//! start when its whole predecessor segment has closed.  The dataflow
+//! executor derives readiness from the *data* instead: a [`JobGraph`] node
+//! becomes ready the moment every result it references is available,
+//! regardless of segment boundaries.  Segments survive only as (a) the
+//! namespace for runtime injections (`segment_delta` arithmetic) and
+//! (b) the lag reference frame of [`super::master::ReleasePolicy::Lagged`].
+//!
+//! The graph is **incremental**: runtime job injections insert new nodes
+//! (and their edges) mid-flight, and fault recovery re-enters completed
+//! nodes as un-readied ones, so lost results are recomputed in dependency
+//! order without any global restart.
+//!
+//! Edges are stored per [`ChunkRef`] source (one edge per referenced
+//! producer, deduplicated for readiness counting — a job consuming
+//! `R1[0..2] R1[2..4]` waits on J1 once).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::job::{JobId, JobSpec};
+
+/// Lifecycle of one node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Some referenced result is not yet available.
+    Waiting,
+    /// All inputs available; queued for assignment.
+    Ready,
+    /// Handed to a sub-scheduler; completion pending.
+    Running,
+    /// Completed (its result may since have been lost — see
+    /// [`JobGraph::on_result_lost`]).
+    Done,
+}
+
+#[derive(Debug)]
+struct Node {
+    spec: JobSpec,
+    segment: usize,
+    /// Producers whose results this node still waits for.
+    unmet: HashSet<JobId>,
+    state: NodeState,
+}
+
+/// Dependency-DAG scheduler state: nodes, out-edges, the available-result
+/// set and the ready queue.
+#[derive(Debug, Default)]
+pub struct JobGraph {
+    nodes: HashMap<JobId, Node>,
+    /// producer -> consumers (out-edges, deduplicated per consumer).
+    consumers: HashMap<JobId, Vec<JobId>>,
+    /// Results currently materialised somewhere in the cluster.
+    available: HashSet<JobId>,
+    /// Nodes in `Ready` state not yet handed out (may contain stale
+    /// entries demoted back to `Waiting`; filtered on take).
+    ready: Vec<JobId>,
+}
+
+impl JobGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert one job (static build-up or runtime injection).  Idempotent
+    /// insertion of the same id is a caller bug and panics in debug.
+    pub fn insert(&mut self, spec: JobSpec, segment: usize) {
+        let id = spec.id;
+        debug_assert!(!self.nodes.contains_key(&id), "duplicate graph node {id}");
+        let mut producers: HashSet<JobId> = HashSet::new();
+        for r in &spec.inputs {
+            producers.insert(r.job);
+        }
+        for p in &producers {
+            let entry = self.consumers.entry(*p).or_default();
+            if !entry.contains(&id) {
+                entry.push(id);
+            }
+        }
+        let unmet: HashSet<JobId> = producers
+            .into_iter()
+            .filter(|p| !self.available.contains(p))
+            .collect();
+        let state = if unmet.is_empty() { NodeState::Ready } else { NodeState::Waiting };
+        if state == NodeState::Ready {
+            self.ready.push(id);
+        }
+        self.nodes.insert(id, Node { spec, segment, unmet, state });
+    }
+
+    /// Drain the ready queue in deterministic `(segment, id)` order,
+    /// marking each returned job `Running`.
+    pub fn take_ready(&mut self) -> Vec<JobId> {
+        let drained = std::mem::take(&mut self.ready);
+        let mut out: Vec<JobId> = drained
+            .into_iter()
+            .filter(|j| {
+                self.nodes.get(j).map(|n| n.state == NodeState::Ready).unwrap_or(false)
+            })
+            .collect();
+        out.sort_by_key(|j| (self.nodes[j].segment, j.0));
+        out.dedup();
+        for j in &out {
+            if let Some(n) = self.nodes.get_mut(j) {
+                n.state = NodeState::Running;
+            }
+        }
+        out
+    }
+
+    /// A job completed and its result is now available: readies every
+    /// consumer whose last unmet input this was.
+    pub fn on_done(&mut self, job: JobId) {
+        if let Some(n) = self.nodes.get_mut(&job) {
+            n.state = NodeState::Done;
+        }
+        self.on_available(job);
+    }
+
+    /// Mark `job`'s result available without state transition (used when a
+    /// result exists before its node, e.g. tests or recovery races).
+    pub fn on_available(&mut self, job: JobId) {
+        self.available.insert(job);
+        let consumers = self.consumers.get(&job).cloned().unwrap_or_default();
+        for c in consumers {
+            let Some(n) = self.nodes.get_mut(&c) else { continue };
+            if n.unmet.remove(&job) && n.unmet.is_empty() && n.state == NodeState::Waiting
+            {
+                n.state = NodeState::Ready;
+                self.ready.push(c);
+            }
+        }
+    }
+
+    /// A stored result vanished (worker loss).  Consumers that had counted
+    /// it as met are demoted back to `Waiting`; running consumers are left
+    /// alone (they abort through the sub-scheduler if assembly fails).
+    pub fn on_result_lost(&mut self, job: JobId) {
+        if !self.available.remove(&job) {
+            return;
+        }
+        let consumers = self.consumers.get(&job).cloned().unwrap_or_default();
+        for c in consumers {
+            let Some(n) = self.nodes.get_mut(&c) else { continue };
+            match n.state {
+                NodeState::Waiting => {
+                    n.unmet.insert(job);
+                }
+                NodeState::Ready => {
+                    n.unmet.insert(job);
+                    n.state = NodeState::Waiting;
+                    // stale entry in `ready` filtered by take_ready
+                }
+                NodeState::Running | NodeState::Done => {}
+            }
+        }
+    }
+
+    /// Recovery re-entry: put a (running, done or waiting) node back into
+    /// the un-readied pool so it re-executes once its inputs are available
+    /// again.  No-op for unknown nodes.
+    pub fn reenter(&mut self, job: JobId) {
+        let available = &self.available;
+        let Some(n) = self.nodes.get_mut(&job) else { return };
+        let mut unmet: HashSet<JobId> = HashSet::new();
+        for r in &n.spec.inputs {
+            if !available.contains(&r.job) {
+                unmet.insert(r.job);
+            }
+        }
+        n.unmet = unmet;
+        if n.unmet.is_empty() {
+            if n.state != NodeState::Ready {
+                n.state = NodeState::Ready;
+                self.ready.push(job);
+            }
+        } else {
+            n.state = NodeState::Waiting;
+        }
+    }
+
+    /// Does any consumer of `job` still have work to do?  (The
+    /// dependency-count release test: a result whose out-edges have all
+    /// drained is dead weight, modulo the injection lag window.)
+    pub fn has_pending_consumers(&self, job: JobId) -> bool {
+        self.consumers
+            .get(&job)
+            .map(|cs| {
+                cs.iter().any(|c| {
+                    self.nodes.get(c).map(|n| n.state != NodeState::Done).unwrap_or(false)
+                })
+            })
+            .unwrap_or(false)
+    }
+
+    /// Known consumers of `job` (look-ahead placement input).
+    pub fn consumers_of(&self, job: JobId) -> &[JobId] {
+        self.consumers.get(&job).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Smallest segment index among not-yet-done nodes — the dataflow
+    /// frontier.  `None` when everything is done.
+    pub fn frontier(&self) -> Option<usize> {
+        self.nodes
+            .values()
+            .filter(|n| n.state != NodeState::Done)
+            .map(|n| n.segment)
+            .min()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.nodes.values().all(|n| n.state == NodeState::Done)
+    }
+
+    pub fn contains(&self, job: JobId) -> bool {
+        self.nodes.contains_key(&job)
+    }
+
+    pub fn state(&self, job: JobId) -> Option<NodeState> {
+        self.nodes.get(&job).map(|n| n.state)
+    }
+
+    pub fn segment_of(&self, job: JobId) -> Option<usize> {
+        self.nodes.get(&job).map(|n| n.segment)
+    }
+
+    pub fn is_result_available(&self, job: JobId) -> bool {
+        self.available.contains(&job)
+    }
+
+    /// Jobs stuck waiting, with their missing producers — diagnostics for
+    /// the master's deadlock report.
+    pub fn waiting_report(&self) -> Vec<(JobId, Vec<JobId>)> {
+        let mut out: Vec<(JobId, Vec<JobId>)> = self
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.state == NodeState::Waiting)
+            .map(|(&id, n)| {
+                let mut missing: Vec<JobId> = n.unmet.iter().copied().collect();
+                missing.sort();
+                (id, missing)
+            })
+            .collect();
+        out.sort_by_key(|(id, _)| *id);
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::ChunkRef;
+
+    fn spec(id: u32, inputs: &[u32]) -> JobSpec {
+        JobSpec::new(id, 1, 1)
+            .with_inputs(inputs.iter().map(|&i| ChunkRef::all(JobId(i))).collect())
+    }
+
+    #[test]
+    fn ready_set_progression_through_a_chain() {
+        // J1 -> J2 -> J3: exactly one job ready at a time, in order.
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[1]), 1);
+        g.insert(spec(3, &[2]), 2);
+
+        assert_eq!(g.take_ready(), vec![JobId(1)]);
+        assert!(g.take_ready().is_empty());
+        g.on_done(JobId(1));
+        assert_eq!(g.take_ready(), vec![JobId(2)]);
+        g.on_done(JobId(2));
+        assert_eq!(g.take_ready(), vec![JobId(3)]);
+        g.on_done(JobId(3));
+        assert!(g.all_done());
+        assert_eq!(g.frontier(), None);
+    }
+
+    #[test]
+    fn diamond_readies_join_only_after_both_branches() {
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[1]), 1);
+        g.insert(spec(3, &[1]), 1);
+        g.insert(spec(4, &[2, 3]), 2);
+        assert_eq!(g.take_ready(), vec![JobId(1)]);
+        g.on_done(JobId(1));
+        assert_eq!(g.take_ready(), vec![JobId(2), JobId(3)]);
+        g.on_done(JobId(2));
+        assert!(g.take_ready().is_empty(), "join ready with one branch open");
+        g.on_done(JobId(3));
+        assert_eq!(g.take_ready(), vec![JobId(4)]);
+    }
+
+    #[test]
+    fn cross_segment_release_without_barrier() {
+        // Two independent lanes in segments 0..2: lane B's segment-1 job
+        // becomes ready while lane A's segment-0 job is still running —
+        // exactly what the barrier executor forbids.
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0); // lane A
+        g.insert(spec(2, &[]), 0); // lane B
+        g.insert(spec(3, &[1]), 1); // lane A stage 2
+        g.insert(spec(4, &[2]), 1); // lane B stage 2
+        let first = g.take_ready();
+        assert_eq!(first, vec![JobId(1), JobId(2)]);
+        // Lane B finishes first; its successor is released although lane A
+        // (same segment) is still running.
+        g.on_done(JobId(2));
+        assert_eq!(g.take_ready(), vec![JobId(4)]);
+        assert_eq!(g.state(JobId(1)), Some(NodeState::Running));
+        assert_eq!(g.frontier(), Some(0));
+    }
+
+    #[test]
+    fn duplicate_chunk_refs_count_one_edge() {
+        // R1[0..2] R1[2..4]: one producer, one readiness edge.
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        let consumer = JobSpec::new(2, 1, 1).with_inputs(vec![
+            ChunkRef::slice(JobId(1), 0, 2),
+            ChunkRef::slice(JobId(1), 2, 4),
+        ]);
+        g.insert(consumer, 1);
+        assert_eq!(g.consumers_of(JobId(1)), &[JobId(2)]);
+        g.take_ready();
+        g.on_done(JobId(1));
+        assert_eq!(g.take_ready(), vec![JobId(2)]);
+    }
+
+    #[test]
+    fn injection_inserts_ready_immediately_when_inputs_available() {
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.take_ready();
+        g.on_done(JobId(1));
+        // Runtime injection referencing the already-available R1.
+        g.insert(spec(10, &[1]), 1);
+        assert_eq!(g.take_ready(), vec![JobId(10)]);
+        // And one referencing a job that does not exist yet: waits.
+        g.insert(spec(11, &[99]), 2);
+        assert!(g.take_ready().is_empty());
+        assert_eq!(g.waiting_report(), vec![(JobId(11), vec![JobId(99)])]);
+        // The missing producer arrives by a later injection batch.
+        g.insert(spec(99, &[1]), 1);
+        assert_eq!(g.take_ready(), vec![JobId(99)]);
+        g.on_done(JobId(99));
+        assert_eq!(g.take_ready(), vec![JobId(11)]);
+    }
+
+    #[test]
+    fn recovery_reentry_recomputes_in_dependency_order() {
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[1]), 1);
+        g.take_ready();
+        g.on_done(JobId(1));
+        let r = g.take_ready();
+        assert_eq!(r, vec![JobId(2)]);
+        // Worker dies: J1's result is lost while J2 runs; both re-enter.
+        g.on_result_lost(JobId(1));
+        g.reenter(JobId(2)); // aborted by its scheduler
+        g.reenter(JobId(1)); // lost result, still needed
+        // J1 must come back first, J2 only after J1 completes again.
+        assert_eq!(g.take_ready(), vec![JobId(1)]);
+        assert!(g.take_ready().is_empty());
+        g.on_done(JobId(1));
+        assert_eq!(g.take_ready(), vec![JobId(2)]);
+        g.on_done(JobId(2));
+        assert!(g.all_done());
+    }
+
+    #[test]
+    fn lost_result_demotes_ready_consumer() {
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[1]), 1);
+        g.take_ready();
+        g.on_done(JobId(1));
+        // J2 is Ready but NOT yet taken; the input vanishes first.
+        g.on_result_lost(JobId(1));
+        assert!(g.take_ready().is_empty(), "consumer ran without its input");
+        g.reenter(JobId(1));
+        assert_eq!(g.take_ready(), vec![JobId(1)]);
+        g.on_done(JobId(1));
+        assert_eq!(g.take_ready(), vec![JobId(2)]);
+    }
+
+    #[test]
+    fn pending_consumer_accounting_for_release() {
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[1]), 1);
+        g.insert(spec(3, &[1]), 2);
+        g.take_ready();
+        g.on_done(JobId(1));
+        assert!(g.has_pending_consumers(JobId(1)));
+        g.take_ready();
+        g.on_done(JobId(2));
+        assert!(g.has_pending_consumers(JobId(1)), "J3 still pending");
+        g.take_ready();
+        g.on_done(JobId(3));
+        assert!(!g.has_pending_consumers(JobId(1)), "out-edges drained");
+        // Late injection re-opens the out-edge set.
+        g.insert(spec(4, &[1]), 3);
+        assert!(g.has_pending_consumers(JobId(1)));
+    }
+
+    #[test]
+    fn frontier_tracks_oldest_live_segment() {
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[]), 0);
+        g.insert(spec(3, &[1]), 1);
+        assert_eq!(g.frontier(), Some(0));
+        g.take_ready();
+        g.on_done(JobId(1));
+        assert_eq!(g.frontier(), Some(0), "J2 still holds segment 0");
+        g.on_done(JobId(2));
+        assert_eq!(g.frontier(), Some(1));
+        g.take_ready();
+        g.on_done(JobId(3));
+        assert_eq!(g.frontier(), None);
+    }
+}

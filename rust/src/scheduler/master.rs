@@ -1,8 +1,19 @@
 //! Master scheduler (paper: rank 0) — the only process holding the
-//! complete algorithm description.  Drives segments in order, assigns jobs
-//! to sub-schedulers with locality-aware placement, processes runtime job
-//! injections, orchestrates fault recovery, releases dead results, and
-//! collects the final segment's outputs.
+//! complete algorithm description.  Assigns jobs to sub-schedulers with
+//! locality-aware placement, processes runtime job injections, orchestrates
+//! fault recovery, releases dead results, and collects the final segment's
+//! outputs.
+//!
+//! Two control planes share this file (DESIGN.md §7):
+//!
+//! * **Barrier** ([`Master::drive_barrier`]) — the paper's literal model:
+//!   segments execute in order and segment *k+1* starts only when every job
+//!   of segment *k* (including injected ones) has terminated.
+//! * **Dataflow** ([`Master::drive_dataflow`], the default) — a
+//!   dependency-DAG executor built on [`super::graph::JobGraph`]: a job is
+//!   assigned the moment every result it references is available, across
+//!   segment boundaries.  Segment indices survive as the injection
+//!   namespace and the [`ReleasePolicy::Lagged`] reference frame.
 //!
 //! The master stores **no job data** (paper §3.1): results move between
 //! sub-schedulers and workers; the master tracks only *where* they are
@@ -11,13 +22,15 @@
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
 use crate::comm::{Comm, Rank};
+use crate::config::ExecutionMode;
 use crate::data::FunctionData;
 use crate::error::{Error, Result};
-use crate::job::{Algorithm, ChunkRange, JobId, JobSpec};
+use crate::job::{Algorithm, ChunkRange, Injection, JobId, JobSpec};
 use crate::metrics::MetricsCollector;
 
 use super::dynamic::resolve_injections;
-use super::placement::choose_scheduler;
+use super::graph::{JobGraph, NodeState};
+use super::placement::choose_scheduler_lookahead;
 use super::{FwMsg, SourceLoc, TAG_CTRL};
 
 /// When stored results are freed (see DESIGN.md §6 discussion).
@@ -29,6 +42,12 @@ pub enum ReleasePolicy {
     /// Free a result `lag` segments after its last known reference.
     /// Safe when injections never reach further back than `lag` segments
     /// (the Jacobi cycle needs `lag >= 2`).
+    ///
+    /// Under barrier execution the horizon is the closing segment index;
+    /// under dataflow it is the **frontier** (oldest segment with live
+    /// jobs), and a result is additionally held until its graph out-edges
+    /// have drained — dependency-count release instead of segment-close
+    /// release (DESIGN.md §6).
     Lagged { lag: usize },
 }
 
@@ -36,6 +55,7 @@ pub enum ReleasePolicy {
 pub struct MasterConfig {
     pub subs: Vec<Rank>,
     pub release: ReleasePolicy,
+    pub mode: ExecutionMode,
 }
 
 /// Drive one algorithm to completion. Returns the results of the final
@@ -62,13 +82,22 @@ struct Master<'a> {
     last_use: HashMap<JobId, usize>,
     load: HashMap<Rank, usize>,
     pending: HashSet<JobId>,
-    /// Jobs needing (re-)execution whose inputs may not be available yet.
-    recovery: VecDeque<JobId>,
     /// Abort counts per job — a cycle-breaker: a job repeatedly aborted by
     /// its scheduler indicates an unrecoverable condition, not a fault.
     abort_counts: HashMap<JobId, usize>,
     next_id: u32,
+
+    // ----- barrier-mode state
+    /// Jobs needing (re-)execution whose inputs may not be available yet.
+    recovery: VecDeque<JobId>,
     seg_idx: usize,
+
+    // ----- dataflow-mode state
+    graph: JobGraph,
+    /// Not-yet-done jobs per segment (metrics: when a segment drains, its
+    /// entry is closed).
+    seg_outstanding: Vec<usize>,
+    seg_closed: Vec<bool>,
 }
 
 /// A job aborted more often than this fails the run.
@@ -88,10 +117,13 @@ impl<'a> Master<'a> {
             last_use: HashMap::new(),
             load: HashMap::new(),
             pending: HashSet::new(),
-            recovery: VecDeque::new(),
             abort_counts: HashMap::new(),
             next_id: 0,
+            recovery: VecDeque::new(),
             seg_idx: 0,
+            graph: JobGraph::new(),
+            seg_outstanding: Vec::new(),
+            seg_closed: Vec::new(),
         }
     }
 
@@ -106,7 +138,10 @@ impl<'a> Master<'a> {
         }
         self.recompute_last_use();
 
-        let outcome = self.drive();
+        let outcome = match self.cfg.mode {
+            ExecutionMode::Barrier => self.drive_barrier(),
+            ExecutionMode::Dataflow => self.drive_dataflow(),
+        };
         match outcome {
             Ok(()) => {
                 let finals = self.collect_final_results();
@@ -131,7 +166,9 @@ impl<'a> Master<'a> {
         }
     }
 
-    fn drive(&mut self) -> Result<()> {
+    // ================================================== barrier execution
+
+    fn drive_barrier(&mut self) -> Result<()> {
         while self.seg_idx < self.segments.len() {
             let jobs: Vec<JobId> =
                 self.segments[self.seg_idx].iter().map(|j| j.id).collect();
@@ -174,17 +211,17 @@ impl<'a> Master<'a> {
                     .comm
                     .recv()
                     .map_err(|_| Error::WorldShutdown(self.comm.rank()))?;
-                self.handle(env.into_user(), &mut to_assign)?;
+                self.handle_barrier(env.into_user(), &mut to_assign)?;
             }
 
             self.metrics.segment_closed();
-            self.apply_release_policy();
+            self.apply_barrier_release();
             self.seg_idx += 1;
         }
         Ok(())
     }
 
-    fn handle(&mut self, msg: FwMsg, to_assign: &mut VecDeque<JobId>) -> Result<()> {
+    fn handle_barrier(&mut self, msg: FwMsg, to_assign: &mut VecDeque<JobId>) -> Result<()> {
         match msg {
             FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes } => {
                 // Process injections before completing the job: a batch
@@ -218,51 +255,21 @@ impl<'a> Master<'a> {
                         }
                     }
                 }
-                if self.pending.remove(&job) {
-                    if let Some(loc) = self.owners.get(&job) {
-                        let owner = loc.owner;
-                        if let Some(l) = self.load.get_mut(&owner) {
-                            *l = l.saturating_sub(1);
-                        }
-                    }
-                }
-                // `owners` was pre-set at assignment to the chosen sub;
-                // update with the kept location.
-                if let Some(loc) = self.owners.get_mut(&job) {
-                    loc.kept_on = kept_on;
-                }
-                self.available.insert(job);
-                self.result_bytes.insert(job, output_bytes);
+                self.complete_job(job, kept_on, output_bytes);
                 let _ = chunks;
-                self.try_recovery(to_assign);
+                self.try_recovery();
                 Ok(())
             }
             FwMsg::JobError { job, msg } => Err(Error::JobFailed { job, msg }),
             FwMsg::JobAborted { job, missing } => {
-                let aborts = self.abort_counts.entry(job).or_insert(0);
-                *aborts += 1;
-                if *aborts > MAX_ABORTS_PER_JOB {
-                    return Err(Error::JobFailed {
-                        job,
-                        msg: format!(
-                            "aborted {aborts} times waiting for result of {missing}; giving up"
-                        ),
-                    });
-                }
-                if self.pending.remove(&job) {
-                    if let Some(loc) = self.owners.get(&job) {
-                        let owner = loc.owner;
-                        if let Some(l) = self.load.get_mut(&owner) {
-                            *l = l.saturating_sub(1);
-                        }
-                    }
-                }
+                self.count_abort(job, missing)?;
+                self.forget_pending(job);
                 self.queue_recovery(job);
                 if !self.available.contains(&missing) && !self.pending.contains(&missing)
                 {
                     self.queue_recovery(missing);
                 }
-                self.try_recovery(to_assign);
+                self.try_recovery();
                 Ok(())
             }
             FwMsg::WorkerLostReport { lost, running, .. } => {
@@ -271,24 +278,18 @@ impl<'a> Master<'a> {
                     if let Some(loc) = self.owners.get_mut(&job) {
                         loc.kept_on = None;
                     }
-                    if self.still_needed(job) {
+                    if self.still_needed_barrier(job) {
                         self.metrics.job_recomputed();
                         self.queue_recovery(job);
                     }
                 }
                 for job in running {
-                    if self.pending.remove(&job) {
-                        if let Some(loc) = self.owners.get(&job) {
-                            let owner = loc.owner;
-                            if let Some(l) = self.load.get_mut(&owner) {
-                                *l = l.saturating_sub(1);
-                            }
-                        }
+                    if self.forget_pending(job) {
                         self.metrics.job_recomputed();
                         self.queue_recovery(job);
                     }
                 }
-                self.try_recovery(to_assign);
+                self.try_recovery();
                 Ok(())
             }
             // Late fetch replies etc. are ignorable here.
@@ -296,7 +297,7 @@ impl<'a> Master<'a> {
         }
     }
 
-    fn still_needed(&self, job: JobId) -> bool {
+    fn still_needed_barrier(&self, job: JobId) -> bool {
         // Keep-results are live until explicitly released (paper §3.1:
         // workers hold them "until the responsible scheduler signals the
         // data is no longer required") — and dynamic injection may
@@ -309,13 +310,6 @@ impl<'a> Master<'a> {
         last >= self.seg_idx || self.in_final_segment(job)
     }
 
-    fn in_final_segment(&self, job: JobId) -> bool {
-        self.segments
-            .last()
-            .map(|s| s.iter().any(|j| j.id == job))
-            .unwrap_or(false)
-    }
-
     fn queue_recovery(&mut self, job: JobId) {
         if !self.recovery.contains(&job) && !self.pending.contains(&job) {
             self.recovery.push_back(job);
@@ -323,7 +317,7 @@ impl<'a> Master<'a> {
     }
 
     /// Assign jobs from the recovery queue whose inputs are available.
-    fn try_recovery(&mut self, _to_assign: &mut VecDeque<JobId>) {
+    fn try_recovery(&mut self) {
         let mut still_waiting = VecDeque::new();
         while let Some(job) = self.recovery.pop_front() {
             let ready = self
@@ -355,10 +349,344 @@ impl<'a> Master<'a> {
         }
     }
 
+    fn apply_barrier_release(&mut self) {
+        let ReleasePolicy::Lagged { lag } = self.cfg.release else { return };
+        let horizon = self.seg_idx.saturating_sub(lag);
+        let candidates: Vec<JobId> = self
+            .available
+            .iter()
+            .copied()
+            .filter(|j| {
+                let last = self.last_use.get(j).copied().unwrap_or(0);
+                last <= horizon
+                    && self.seg_idx >= lag
+                    && !self.in_final_segment(*j)
+                    // produced at or before the horizon too (avoid freeing
+                    // something just made for later use)
+                    && last < self.segments.len()
+            })
+            .collect();
+        for job in candidates {
+            self.release_result(job);
+        }
+    }
+
+    // ================================================= dataflow execution
+
+    /// Dependency-DAG drive loop: build the graph once, then alternate
+    /// between draining the ready set onto sub-schedulers and folding
+    /// completion / injection / fault events back into the graph.
+    fn drive_dataflow(&mut self) -> Result<()> {
+        let all: Vec<(usize, JobSpec)> = self
+            .segments
+            .iter()
+            .enumerate()
+            .flat_map(|(idx, seg)| seg.iter().cloned().map(move |s| (idx, s)))
+            .collect();
+        for seg in &self.segments {
+            self.metrics.segment_opened(seg.len());
+            self.seg_outstanding.push(seg.len());
+            self.seg_closed.push(false);
+        }
+        for (idx, spec) in all {
+            self.graph.insert(spec, idx);
+        }
+
+        loop {
+            self.assign_ready();
+            if self.pending.is_empty() {
+                if self.graph.all_done() {
+                    break;
+                }
+                // Nothing in flight, nothing ready, graph not done: some
+                // waiting node's inputs can never materialise.
+                let report = self.graph.waiting_report();
+                let (stuck, missing) = report
+                    .first()
+                    .cloned()
+                    .unwrap_or((JobId(0), Vec::new()));
+                let missing: Vec<String> =
+                    missing.iter().map(|j| j.to_string()).collect();
+                return Err(Error::JobFailed {
+                    job: stuck,
+                    msg: format!(
+                        "dataflow stuck: missing inputs {:?}, {} jobs waiting",
+                        missing,
+                        report.len()
+                    ),
+                });
+            }
+            let env = self
+                .comm
+                .recv()
+                .map_err(|_| Error::WorldShutdown(self.comm.rank()))?;
+            self.handle_dataflow(env.into_user())?;
+        }
+
+        // Close metric entries that never drained (empty injected gaps).
+        for (idx, closed) in self.seg_closed.iter_mut().enumerate() {
+            if !*closed {
+                *closed = true;
+                self.metrics.segment_closed_idx(idx);
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain the graph's ready set onto the cluster.
+    fn assign_ready(&mut self) {
+        let ready = self.graph.take_ready();
+        if ready.is_empty() {
+            return;
+        }
+        // Constant across the drain: everything taken is Running, nothing
+        // completes inside this loop.
+        let frontier = self.graph.frontier();
+        for job in ready {
+            self.metrics.job_ready(job);
+            if let (Some(f), Some(seg)) = (frontier, self.graph.segment_of(job)) {
+                if f < seg {
+                    self.metrics.job_overlapped();
+                }
+            }
+            self.assign(job);
+        }
+    }
+
+    fn handle_dataflow(&mut self, msg: FwMsg) -> Result<()> {
+        match msg {
+            FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes } => {
+                // Insert injected nodes *before* completing the job, so a
+                // producer's dependents (e.g. next-iteration consumers of a
+                // kept matrix block) are visible to the release pass.
+                if !injections.is_empty() {
+                    self.insert_injections_dataflow(job, injections)?;
+                }
+                self.complete_job(job, kept_on, output_bytes);
+                let _ = chunks;
+                self.graph.on_done(job);
+                self.note_segment_progress(job);
+                self.apply_dataflow_release();
+                Ok(())
+            }
+            FwMsg::JobError { job, msg } => Err(Error::JobFailed { job, msg }),
+            FwMsg::JobAborted { job, missing } => {
+                self.count_abort(job, missing)?;
+                self.forget_pending(job);
+                self.reenter_dataflow(job);
+                if !self.available.contains(&missing) && !self.pending.contains(&missing)
+                {
+                    // The referenced result is gone: recompute its producer
+                    // (the graph re-readies the aborted job afterwards).
+                    self.graph.on_result_lost(missing);
+                    if self.graph.contains(missing) {
+                        self.reenter_dataflow(missing);
+                    }
+                }
+                Ok(())
+            }
+            FwMsg::WorkerLostReport { lost, running, .. } => {
+                for job in lost {
+                    self.available.remove(&job);
+                    if let Some(loc) = self.owners.get_mut(&job) {
+                        loc.kept_on = None;
+                    }
+                    self.graph.on_result_lost(job);
+                    if self.still_needed_dataflow(job) {
+                        self.metrics.job_recomputed();
+                        self.reenter_dataflow(job);
+                    }
+                }
+                for job in running {
+                    if self.forget_pending(job) {
+                        self.metrics.job_recomputed();
+                        self.reenter_dataflow(job);
+                    }
+                }
+                Ok(())
+            }
+            // Late fetch replies etc. are ignorable here.
+            _ => Ok(()),
+        }
+    }
+
+    /// Resolve an injection batch against the injecting job's segment and
+    /// insert the new jobs as incremental graph nodes.
+    fn insert_injections_dataflow(
+        &mut self,
+        from_job: JobId,
+        injections: Vec<Injection>,
+    ) -> Result<()> {
+        let current = self.graph.segment_of(from_job).unwrap_or(0);
+        let resolved = resolve_injections(
+            injections,
+            current,
+            &mut self.next_id,
+            |id| self.specs.contains_key(&id),
+        )?;
+        for batch in resolved {
+            while self.segments.len() <= batch.segment_index {
+                self.segments.push(Vec::new());
+                self.metrics.segment_opened(0);
+                self.seg_outstanding.push(0);
+                self.seg_closed.push(false);
+            }
+            self.metrics.jobs_injected_into(batch.jobs.len(), batch.segment_index);
+            for spec in batch.jobs {
+                self.specs.insert(spec.id, spec.clone());
+                for r in &spec.inputs {
+                    let e = self
+                        .last_use
+                        .entry(r.job)
+                        .or_insert(batch.segment_index);
+                    *e = (*e).max(batch.segment_index);
+                }
+                self.seg_outstanding[batch.segment_index] += 1;
+                self.segments[batch.segment_index].push(spec.clone());
+                self.graph.insert(spec, batch.segment_index);
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-enter a node for (re-)execution, keeping the per-segment
+    /// outstanding counters consistent: only a `Done` node re-opens its
+    /// segment (running/waiting nodes never left it).
+    fn reenter_dataflow(&mut self, job: JobId) {
+        let was_done = self.graph.state(job) == Some(NodeState::Done);
+        self.graph.reenter(job);
+        if was_done {
+            if let Some(seg) = self.graph.segment_of(job) {
+                if let Some(c) = self.seg_outstanding.get_mut(seg) {
+                    *c += 1;
+                }
+            }
+        }
+    }
+
+    /// Segment-drain metrics bookkeeping for a completed job.
+    fn note_segment_progress(&mut self, job: JobId) {
+        let Some(seg) = self.graph.segment_of(job) else { return };
+        if let Some(c) = self.seg_outstanding.get_mut(seg) {
+            *c = c.saturating_sub(1);
+            if *c == 0 {
+                if let Some(flag) = self.seg_closed.get_mut(seg) {
+                    *flag = true;
+                }
+                self.metrics.segment_closed_idx(seg);
+            }
+        }
+    }
+
+    fn still_needed_dataflow(&self, job: JobId) -> bool {
+        // Keep-results always recompute (see still_needed_barrier).
+        if self.specs.get(&job).map(|s| s.keep).unwrap_or(false) {
+            return true;
+        }
+        self.graph.has_pending_consumers(job) || self.in_final_segment(job)
+    }
+
+    /// Dependency-count release: a result is freed once (a) every known
+    /// out-edge has drained, and (b) its last known reference lies more
+    /// than `lag` segments behind the dataflow frontier — the same horizon
+    /// arithmetic as the barrier policy (`last <= closing - lag`), with the
+    /// frontier standing in for the closing segment.
+    fn apply_dataflow_release(&mut self) {
+        let ReleasePolicy::Lagged { lag } = self.cfg.release else { return };
+        let Some(frontier) = self.graph.frontier() else { return };
+        let candidates: Vec<JobId> = self
+            .available
+            .iter()
+            .copied()
+            .filter(|&j| {
+                let produced = self.graph.segment_of(j).unwrap_or(0);
+                let last = self.last_use.get(&j).copied().unwrap_or(produced);
+                last + lag < frontier
+                    && !self.graph.has_pending_consumers(j)
+                    && !self.in_final_segment(j)
+            })
+            .collect();
+        for job in candidates {
+            self.release_result(job);
+            // The graph must see the result as gone so a late injected
+            // consumer (a `lag`-contract violation) parks as Waiting and
+            // surfaces as the deterministic "dataflow stuck" error —
+            // mirroring the barrier executor's "recovery stuck" — instead
+            // of being assigned against a freed source.
+            self.graph.on_result_lost(job);
+        }
+    }
+
+    // ====================================================== shared pieces
+
+    /// Completion bookkeeping shared by both executors: pending/load
+    /// accounting, owner update, result availability.
+    fn complete_job(&mut self, job: JobId, kept_on: Option<Rank>, output_bytes: u64) {
+        self.forget_pending(job);
+        // `owners` was pre-set at assignment to the chosen sub; update
+        // with the kept location.
+        if let Some(loc) = self.owners.get_mut(&job) {
+            loc.kept_on = kept_on;
+        }
+        self.available.insert(job);
+        self.result_bytes.insert(job, output_bytes);
+    }
+
+    /// Remove `job` from the in-flight set, crediting its scheduler's
+    /// load. Returns whether it was in flight.
+    fn forget_pending(&mut self, job: JobId) -> bool {
+        if self.pending.remove(&job) {
+            if let Some(loc) = self.owners.get(&job) {
+                let owner = loc.owner;
+                if let Some(l) = self.load.get_mut(&owner) {
+                    *l = l.saturating_sub(1);
+                }
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    fn count_abort(&mut self, job: JobId, missing: JobId) -> Result<()> {
+        let aborts = self.abort_counts.entry(job).or_insert(0);
+        *aborts += 1;
+        if *aborts > MAX_ABORTS_PER_JOB {
+            return Err(Error::JobFailed {
+                job,
+                msg: format!(
+                    "aborted {aborts} times waiting for result of {missing}; giving up"
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    fn in_final_segment(&self, job: JobId) -> bool {
+        self.segments
+            .last()
+            .map(|s| s.iter().any(|j| j.id == job))
+            .unwrap_or(false)
+    }
+
     fn assign(&mut self, job: JobId) {
         let spec = self.specs.get(&job).expect("assigning unknown job").clone();
-        let target = choose_scheduler(
+        // Look-ahead packing (dataflow): weigh where this job's known
+        // successors' inputs live, so chains pack onto the scheduler
+        // already holding their data.
+        let lookahead: Vec<JobSpec> = if self.cfg.mode == ExecutionMode::Dataflow {
+            self.graph
+                .consumers_of(job)
+                .iter()
+                .filter_map(|c| self.specs.get(c))
+                .cloned()
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let target = choose_scheduler_lookahead(
             &spec,
+            &lookahead,
             &self.owners,
             &self.result_bytes,
             &self.load,
@@ -382,32 +710,16 @@ impl<'a> Master<'a> {
             .send(target, TAG_CTRL, FwMsg::Assign { spec, sources });
     }
 
-    fn apply_release_policy(&mut self) {
-        let ReleasePolicy::Lagged { lag } = self.cfg.release else { return };
-        let horizon = self.seg_idx.saturating_sub(lag);
-        let candidates: Vec<JobId> = self
-            .available
-            .iter()
-            .copied()
-            .filter(|j| {
-                let last = self.last_use.get(j).copied().unwrap_or(0);
-                last <= horizon
-                    && self.seg_idx >= lag
-                    && !self.in_final_segment(*j)
-                    // produced at or before the horizon too (avoid freeing
-                    // something just made for later use)
-                    && last < self.segments.len()
-            })
-            .collect();
-        for job in candidates {
-            if let Some(loc) = self.owners.get(&job) {
-                let _ = self
-                    .comm
-                    .send(loc.owner, TAG_CTRL, FwMsg::ReleaseResult { job });
-            }
-            self.available.remove(&job);
-            self.owners.remove(&job);
+    /// Tell the owning scheduler to free `job`'s stored/kept result and
+    /// drop the master-side location bookkeeping.
+    fn release_result(&mut self, job: JobId) {
+        if let Some(loc) = self.owners.get(&job) {
+            let _ = self
+                .comm
+                .send(loc.owner, TAG_CTRL, FwMsg::ReleaseResult { job });
         }
+        self.available.remove(&job);
+        self.owners.remove(&job);
     }
 
     fn collect_final_results(&mut self) -> Result<BTreeMap<JobId, FunctionData>> {

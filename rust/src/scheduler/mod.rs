@@ -17,11 +17,13 @@
 //! ```
 //!
 //! This module defines the control-plane message protocol ([`FwMsg`]);
-//! [`master`] and [`sub`] implement the two scheduler roles, [`placement`]
-//! the packing policies, [`store`] the result store and [`dynamic`] the
-//! runtime job-injection resolution.
+//! [`master`] and [`sub`] implement the two scheduler roles, [`graph`] the
+//! dependency-DAG dataflow executor state, [`placement`] the packing
+//! policies, [`store`] the result store and [`dynamic`] the runtime
+//! job-injection resolution.
 
 pub mod dynamic;
+pub mod graph;
 pub mod master;
 pub mod placement;
 pub mod store;

@@ -34,6 +34,26 @@ pub fn choose_scheduler(
     load: &HashMap<Rank, usize>,
     subs: &[Rank],
 ) -> Rank {
+    choose_scheduler_lookahead(spec, &[], owners, result_bytes, load, subs)
+}
+
+/// Weight of a successor's input bytes relative to the job's own inputs
+/// in look-ahead packing (divisor: successors are one hop away, and their
+/// remaining inputs may come from elsewhere).
+const LOOKAHEAD_DISCOUNT: u64 = 2;
+
+/// [`choose_scheduler`] with dataflow look-ahead: besides the job's own
+/// inputs, weigh where its known *successors'* other inputs live (at half
+/// weight), so a chain of ready jobs packs onto the sub-scheduler that
+/// already owns the chain's data instead of ping-ponging between peers.
+pub fn choose_scheduler_lookahead(
+    spec: &JobSpec,
+    successors: &[JobSpec],
+    owners: &HashMap<crate::job::JobId, SourceLoc>,
+    result_bytes: &HashMap<crate::job::JobId, u64>,
+    load: &HashMap<Rank, usize>,
+    subs: &[Rank],
+) -> Rank {
     debug_assert!(!subs.is_empty());
 
     // 1. Hard affinity: kept inputs pin the job to the retaining scheduler
@@ -47,12 +67,25 @@ pub fn choose_scheduler(
     }
 
     // 2. Soft affinity: the scheduler owning the most input *bytes* —
-    //    but only when the data is heavy enough to matter.
+    //    but only when the data is heavy enough to matter.  Successor
+    //    inputs (minus the job's own pending output, whose location is
+    //    this very decision) count at a discount.
     let mut bytes: HashMap<Rank, u64> = HashMap::new();
     for r in &spec.inputs {
         if let Some(loc) = owners.get(&r.job) {
             let sz = result_bytes.get(&r.job).copied().unwrap_or(1);
             *bytes.entry(loc.owner).or_default() += sz.max(1);
+        }
+    }
+    for succ in successors {
+        for r in &succ.inputs {
+            if r.job == spec.id {
+                continue; // produced by the job being placed
+            }
+            if let Some(loc) = owners.get(&r.job) {
+                let sz = result_bytes.get(&r.job).copied().unwrap_or(1);
+                *bytes.entry(loc.owner).or_default() += sz.max(1) / LOOKAHEAD_DISCOUNT;
+            }
         }
     }
     if let Some((&best, &sz)) = bytes.iter().max_by_key(|(s, b)| (**b, u32::MAX - s.0)) {
@@ -230,6 +263,74 @@ mod tests {
         load.insert(Rank(2), 1);
         assert_eq!(
             choose_scheduler(&spec, &owners, &bytes, &load, &subs()),
+            Rank(2)
+        );
+    }
+
+    #[test]
+    fn lookahead_packs_chain_onto_data_owner() {
+        // J10's own input is light (would fall through to load balancing),
+        // but its successor J11 consumes a heavy result owned by Rank(2):
+        // look-ahead placement sends J10 there so the chain stays local.
+        let spec = JobSpec::new(10, 1, 1)
+            .with_inputs(vec![ChunkRef::all(JobId(1))]);
+        let succ = JobSpec::new(11, 1, 1)
+            .with_inputs(vec![ChunkRef::all(JobId(10)), ChunkRef::all(JobId(2))]);
+        let mut owners = HashMap::new();
+        let mut bytes = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(1), kept_on: None },
+        );
+        bytes.insert(JobId(1), 16);
+        owners.insert(
+            JobId(2),
+            SourceLoc { job: JobId(2), owner: Rank(2), kept_on: None },
+        );
+        bytes.insert(JobId(2), 1 << 20);
+        let mut load = HashMap::new();
+        load.insert(Rank(1), 0);
+        load.insert(Rank(2), 3);
+        // Without look-ahead: light affinity, least-loaded Rank(1) wins.
+        assert_eq!(
+            choose_scheduler(&spec, &owners, &bytes, &load, &subs()),
+            Rank(1)
+        );
+        // With look-ahead: the successor's heavy input pulls it to Rank(2).
+        assert_eq!(
+            choose_scheduler_lookahead(
+                &spec,
+                std::slice::from_ref(&succ),
+                &owners,
+                &bytes,
+                &load,
+                &subs()
+            ),
+            Rank(2)
+        );
+    }
+
+    #[test]
+    fn lookahead_ignores_own_pending_output() {
+        // The successor's reference to the job being placed must not count
+        // (its location IS the decision being made).
+        let spec = JobSpec::new(10, 1, 1);
+        let succ = JobSpec::new(11, 1, 1)
+            .with_inputs(vec![ChunkRef::all(JobId(10))]);
+        let owners = HashMap::new();
+        let bytes = HashMap::new();
+        let mut load = HashMap::new();
+        load.insert(Rank(1), 1);
+        load.insert(Rank(2), 0);
+        assert_eq!(
+            choose_scheduler_lookahead(
+                &spec,
+                std::slice::from_ref(&succ),
+                &owners,
+                &bytes,
+                &load,
+                &subs()
+            ),
             Rank(2)
         );
     }

@@ -97,16 +97,29 @@ mod tests {
 
     #[test]
     fn actually_runs_in_parallel() {
-        // With 4 sequences and 4 chunks each sleeping 30 ms, wall time must
-        // be well under the 120 ms sequential bound.
-        let f: PerChunkShared = Arc::new(|c: &DataChunk| {
-            std::thread::sleep(std::time::Duration::from_millis(30));
+        // Concurrency probe instead of a wall-clock bound (which flakes on
+        // loaded CI machines): each chunk callback records how many
+        // callbacks are in flight simultaneously.  Sequential execution
+        // can never overlap two entrants; with 4 sequences over 4 chunks
+        // that each dwell 20 ms, a real fork-join must.
+        let current = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let (cur, pk) = (current.clone(), peak.clone());
+        let f: PerChunkShared = Arc::new(move |c: &DataChunk| {
+            let now = cur.fetch_add(1, Ordering::SeqCst) + 1;
+            pk.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            cur.fetch_sub(1, Ordering::SeqCst);
             Ok(c.clone())
         });
         let input = FunctionData::of_f32_chunked(vec![0.0; 8], 4);
-        let t0 = std::time::Instant::now();
         run_per_chunk(&f, &input, 4).unwrap();
-        assert!(t0.elapsed() < std::time::Duration::from_millis(100));
+        assert_eq!(current.load(Ordering::SeqCst), 0, "entrant accounting broken");
+        assert!(
+            peak.load(Ordering::SeqCst) >= 2,
+            "no two sequences ever overlapped (peak {})",
+            peak.load(Ordering::SeqCst)
+        );
     }
 
     #[test]

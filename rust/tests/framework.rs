@@ -7,6 +7,8 @@ use hypar::job::registry::demo_registry;
 use hypar::scheduler::master::ReleasePolicy;
 use hypar::solvers::{self, heat, jacobi_fw, JacobiConfig};
 
+const BOTH_MODES: [ExecutionMode; 2] = [ExecutionMode::Barrier, ExecutionMode::Dataflow];
+
 fn fw(schedulers: usize, workers: usize, registry: FunctionRegistry) -> Framework {
     Framework::builder()
         .schedulers(schedulers)
@@ -265,6 +267,175 @@ fn lagged_release_policy_still_solves_jacobi() {
     let (_, data) = report.results.iter().next_back().unwrap();
     let x = data.chunk(0).unwrap();
     assert_eq!(x.as_f32().unwrap(), seq.x.as_slice());
+}
+
+#[test]
+fn both_modes_compute_identical_results() {
+    // The dataflow executor must change the schedule, never the values.
+    for mode in BOTH_MODES {
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(1, "emit", |_in, out| {
+            out.push(DataChunk::from_f32(vec![1.0, 2.0]));
+            out.push(DataChunk::from_f32(vec![3.0, 4.0]));
+            Ok(())
+        });
+        reg.register_per_chunk_try(2, "square", |c| {
+            Ok(DataChunk::from_f32(c.as_f32()?.iter().map(|v| v * v).collect()))
+        });
+        reg.register_plain(3, "sum", |input, out| {
+            let mut acc = 0.0f32;
+            for c in input.chunks() {
+                acc += c.as_f32()?.iter().sum::<f32>();
+            }
+            out.push(DataChunk::scalar_f32(acc));
+            Ok(())
+        });
+        let report = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .execution_mode(mode)
+            .registry(reg)
+            .build()
+            .unwrap()
+            .run(Algorithm::parse("J1(1,1,0); J2(2,0,R1); J3(3,1,R2);").unwrap())
+            .unwrap();
+        let total = report.result(3).unwrap().chunk(0).unwrap().first_f32().unwrap();
+        assert_eq!(total, 1.0 + 4.0 + 9.0 + 16.0, "mode {mode}");
+        assert_eq!(report.metrics.jobs_executed, 3, "mode {mode}");
+    }
+}
+
+#[test]
+fn dataflow_overlaps_segments_where_barrier_cannot() {
+    // Lane A's stage-0 job straggles 80 ms; lane B's chain is fast.  The
+    // dataflow executor must assign B's stage-1 job while A's stage-0 job
+    // is still in flight (pipeline overlap > 0); barriers never can.
+    let mk = |mode: ExecutionMode| {
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(1, "straggler", |_in, out| {
+            std::thread::sleep(std::time::Duration::from_millis(80));
+            out.push(DataChunk::scalar_f32(1.0));
+            Ok(())
+        });
+        reg.register_plain(2, "fast", |_in, out| {
+            out.push(DataChunk::scalar_f32(2.0));
+            Ok(())
+        });
+        reg.register_plain(3, "chain", |input, out| {
+            out.push(DataChunk::scalar_f32(
+                input.chunk(0)?.first_f32()? + 10.0,
+            ));
+            Ok(())
+        });
+        Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .execution_mode(mode)
+            .registry(reg)
+            .build()
+            .unwrap()
+            .run(
+                Algorithm::parse(
+                    "J1(1,1,0), J2(2,1,0);
+                     J3(3,1,R2);
+                     J4(3,1,R3), J5(3,1,R1);",
+                )
+                .unwrap(),
+            )
+            .unwrap()
+    };
+    let barrier = mk(ExecutionMode::Barrier);
+    let dataflow = mk(ExecutionMode::Dataflow);
+    for report in [&barrier, &dataflow] {
+        assert_eq!(report.result(4).unwrap().chunk(0).unwrap().first_f32().unwrap(), 22.0);
+        assert_eq!(report.result(5).unwrap().chunk(0).unwrap().first_f32().unwrap(), 11.0);
+    }
+    assert_eq!(barrier.metrics.pipeline_overlap_jobs, 0);
+    assert!(
+        dataflow.metrics.pipeline_overlap_jobs >= 1,
+        "dataflow never overlapped segments (J1 straggles 80 ms while the \
+         J2->J3->J4 chain should run through)"
+    );
+}
+
+#[test]
+fn lagged_release_keeps_results_alive_for_injections() {
+    // Satellite regression (ISSUE 1): a runtime-injected job references a
+    // result exactly `lag` segments behind its target segment.  Under
+    // ReleasePolicy::Lagged { lag } that result must still be alive when
+    // the injected job runs — the producer executes exactly once (a
+    // premature release would force a recovery recompute) — and the run
+    // completes with the right value in both execution modes.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    for mode in BOTH_MODES {
+        let produce_calls = Arc::new(AtomicUsize::new(0));
+        let pc = produce_calls.clone();
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(4, "filler", |_in, out| {
+            out.push(DataChunk::scalar_f32(0.0));
+            Ok(())
+        });
+        reg.register_plain(1, "produce", move |_in, out| {
+            pc.fetch_add(1, Ordering::SeqCst);
+            out.push(DataChunk::scalar_f32(21.0));
+            Ok(())
+        });
+        reg.register_with_ctx(2, "injector", |_in, out, ctx| {
+            out.push(DataChunk::scalar_f32(0.0));
+            // Target segment = injector's + 1 = 3; references R1 from
+            // segment 1 — exactly lag = 2 segments back.
+            ctx.inject(
+                1,
+                vec![InjectedJob {
+                    local_id: 0,
+                    func: FuncId(3),
+                    threads: ThreadCount::Exact(1),
+                    inputs: vec![InjectedRef::Existing(ChunkRef::all(JobId(1)))],
+                    keep: false,
+                }],
+            );
+            Ok(())
+        });
+        reg.register_plain(3, "double", |input, out| {
+            out.push(DataChunk::scalar_f32(input.chunk(0)?.first_f32()? * 2.0));
+            Ok(())
+        });
+        // Segments: 0 filler | 1 produce | 2 injector | 3 filler (+injected)
+        let algo = Algorithm::parse(
+            "J9(4,1,0);
+             J1(1,1,0);
+             J2(2,1,0);
+             J3(4,1,0);",
+        )
+        .unwrap();
+        let fw = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .execution_mode(mode)
+            .release_policy(ReleasePolicy::Lagged { lag: 2 })
+            .registry(reg)
+            .build()
+            .unwrap();
+        let report = fw.run(algo).unwrap();
+        assert_eq!(
+            produce_calls.load(Ordering::SeqCst),
+            1,
+            "mode {mode}: producer recomputed — its result was freed before \
+             the injected consumer ran"
+        );
+        assert_eq!(report.metrics.jobs_injected, 1, "mode {mode}");
+        // The injected job got the first id above the static maximum (10);
+        // its doubled value must be in the final segment's results.
+        let injected = report
+            .result(10)
+            .expect("injected job result in final segment")
+            .chunk(0)
+            .unwrap()
+            .first_f32()
+            .unwrap();
+        assert_eq!(injected, 42.0, "mode {mode}");
+    }
 }
 
 #[test]

@@ -3,7 +3,10 @@
 //! oracles — the full python→rust interchange, end to end.
 //!
 //! Requires `make artifacts` (skips gracefully when absent so `cargo test`
-//! works on a fresh checkout).
+//! works on a fresh checkout) and the `pjrt` cargo feature (the whole
+//! suite compiles away without it).
+
+#![cfg(feature = "pjrt")]
 
 use hypar::data::{matrix, DataChunk};
 use hypar::runtime::{ComputeBackend, Engine, Manifest};
