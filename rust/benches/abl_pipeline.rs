@@ -1,17 +1,29 @@
 //! ABL-PIPE: barrier vs dataflow control plane on a straggler-heavy
 //! pipeline (the tentpole ablation for the dependency-DAG executor).
 //!
-//! Workload: `LANES` independent lanes, each a chain of `STAGES` jobs;
-//! in every stage one rotating lane is a straggler (sleeps `SLOW_MS`, the
-//! rest `FAST_MS`).  Under barriers every stage costs the straggler's
-//! time (`STAGES * SLOW_MS`); under dataflow a lane only waits for its own
-//! chain (`~2*SLOW_MS + (STAGES-2)*FAST_MS` per lane at 4 lanes), so the
-//! executor should win by well over the 1.3x acceptance bar.
+//! Two scenarios:
+//!
+//! 1. **Independent lanes** — `LANES` lanes, each a chain of `STAGES`
+//!    jobs; in every stage one rotating lane is a straggler (sleeps
+//!    `SLOW_MS`, the rest `FAST_MS`).  Under barriers every stage costs
+//!    the straggler's time (`STAGES * SLOW_MS`); under dataflow a lane
+//!    only waits for its own chain, so the executor should win by well
+//!    over the 1.3x acceptance bar.
+//!
+//! 2. **Wide graph** — `WIDE_LANES` lanes × `WIDE_STAGES` stages where
+//!    every job consumes its own lane's previous result *and* its right
+//!    neighbour's (two inputs per job, ~1 KiB each).  This exercises the
+//!    incremental frontier / pending-consumer indices on a dense DAG and
+//!    opens a speculative-prefetch window on every straggler edge: the
+//!    consumer's fast input is pulled across while the straggler runs, so
+//!    the dataflow run must report `prefetch hits > 0` besides the 1.3x
+//!    speedup.  Both modes must produce byte-identical values.
 //!
 //! ```text
 //! cargo bench --bench abl_pipeline
 //! #   HYPAR_PIPE_STAGES=8  HYPAR_PIPE_LANES=4
 //! #   HYPAR_PIPE_SLOW_MS=40  HYPAR_PIPE_FAST_MS=4
+//! #   HYPAR_WIDE_STAGES=6  HYPAR_WIDE_LANES=8
 //! #   HYPAR_BENCH_REPS=5
 //! ```
 
@@ -75,11 +87,100 @@ fn run_mode(
     fw.run(pipeline_algorithm(stages, lanes)).expect("pipeline run").metrics
 }
 
+// ------------------------------------------------------------ wide graph
+
+fn wide_registry(slow_ms: u64, fast_ms: u64) -> FunctionRegistry {
+    // Each stage job folds its ~1 KiB inputs into a fresh ~1 KiB vector,
+    // so values depend on the full dependency cone (schedule-independent)
+    // and every cross-scheduler edge moves real bytes — small enough to
+    // stay under the placement affinity threshold, keeping assignment
+    // load-balanced and the input set scattered across schedulers.
+    let mut reg = FunctionRegistry::new();
+    let body = |input: &FunctionData, out: &mut FunctionData| -> Result<()> {
+        let mut acc = 1.0f32;
+        for c in input.chunks() {
+            acc += c.as_f32()?.iter().sum::<f32>() / 256.0;
+        }
+        out.push(DataChunk::from_f32(vec![acc / 256.0; 256]));
+        Ok(())
+    };
+    reg.register_plain(1, "wide_fast", move |input, out| {
+        std::thread::sleep(std::time::Duration::from_millis(fast_ms));
+        body(input, out)
+    });
+    reg.register_plain(2, "wide_slow", move |input, out| {
+        std::thread::sleep(std::time::Duration::from_millis(slow_ms));
+        body(input, out)
+    });
+    reg
+}
+
+/// `stages x lanes` grid; stage-`s` lane-`l` consumes lane `l` and lane
+/// `(l+1) % lanes` of stage `s-1`; the straggler rotates like the chain
+/// scenario.
+fn wide_algorithm(stages: usize, lanes: usize) -> Algorithm {
+    let mut b = Algorithm::builder();
+    for s in 0..stages {
+        let mut jobs = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            let id = (s * lanes + lane + 1) as u32;
+            let func = if s % lanes == lane { 2 } else { 1 };
+            let mut spec = JobSpec::new(id, func, 1);
+            if s > 0 {
+                let prev = |l: usize| ((s - 1) * lanes + (l % lanes) + 1) as u32;
+                spec = spec.with_inputs(vec![
+                    ChunkRef::all(JobId(prev(lane))),
+                    ChunkRef::all(JobId(prev(lane + 1))),
+                ]);
+            }
+            jobs.push(spec);
+        }
+        b = b.segment(jobs);
+    }
+    b.build().expect("valid wide algorithm")
+}
+
+fn run_wide(
+    mode: ExecutionMode,
+    stages: usize,
+    lanes: usize,
+    slow_ms: u64,
+    fast_ms: u64,
+) -> RunReport {
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .cores_per_worker(4)
+        .execution_mode(mode)
+        .registry(wide_registry(slow_ms, fast_ms))
+        .build()
+        .expect("framework build");
+    fw.run(wide_algorithm(stages, lanes)).expect("wide run")
+}
+
+/// Deterministically ordered digest of the final-segment values.
+fn digest(report: &RunReport) -> Vec<(u32, Vec<f32>)> {
+    report
+        .results
+        .iter()
+        .map(|(id, data)| {
+            let vals: Vec<f32> = data
+                .chunks()
+                .iter()
+                .flat_map(|c| c.as_f32().unwrap().iter().copied())
+                .collect();
+            (id.0, vals)
+        })
+        .collect()
+}
+
 fn main() {
     let stages = env_usize("HYPAR_PIPE_STAGES", 8);
     let lanes = env_usize("HYPAR_PIPE_LANES", 4);
     let slow_ms = env_usize("HYPAR_PIPE_SLOW_MS", 40) as u64;
     let fast_ms = env_usize("HYPAR_PIPE_FAST_MS", 4) as u64;
+    let wide_stages = env_usize("HYPAR_WIDE_STAGES", 6);
+    let wide_lanes = env_usize("HYPAR_WIDE_LANES", 8);
     let bench = Bench::default();
 
     println!(
@@ -100,6 +201,29 @@ fn main() {
     });
     report.add(m_barrier.clone());
     report.add(m_dataflow.clone());
+
+    // Wide graph: dense DAG + speculative prefetch.
+    let mut wide_hits = 0usize;
+    let mut wide_sent = 0usize;
+    let mut wide_digests: (Option<Vec<(u32, Vec<f32>)>>, Option<Vec<(u32, Vec<f32>)>>) =
+        (None, None);
+    let mut wide_cp_elapsed_us = 0u64;
+    let mut wide_cp_ideal_us = 0u64;
+    let w_barrier = bench.measure("wide/barrier", || {
+        let r = run_wide(ExecutionMode::Barrier, wide_stages, wide_lanes, slow_ms, fast_ms);
+        wide_digests.0 = Some(digest(&r));
+    });
+    let w_dataflow = bench.measure("wide/dataflow", || {
+        let r = run_wide(ExecutionMode::Dataflow, wide_stages, wide_lanes, slow_ms, fast_ms);
+        wide_hits += r.metrics.prefetch_hits;
+        wide_sent += r.metrics.prefetches_sent;
+        let cp = r.metrics.critical_path();
+        wide_cp_elapsed_us = cp.elapsed.as_micros() as u64;
+        wide_cp_ideal_us = cp.ideal.as_micros() as u64;
+        wide_digests.1 = Some(digest(&r));
+    });
+    report.add(w_barrier.clone());
+    report.add(w_dataflow.clone());
     report.finish();
 
     let speedup = m_barrier.mean.as_secs_f64() / m_dataflow.mean.as_secs_f64();
@@ -112,10 +236,39 @@ fn main() {
         "(model: barrier >= {:.2} s of straggler serial time; dataflow bounded by one lane's chain)",
         ideal_barrier
     );
-    if speedup >= 1.3 {
-        println!("ACCEPTANCE PASS: dataflow >= 1.3x faster on the straggler workload");
+
+    let wide_speedup = w_barrier.mean.as_secs_f64() / w_dataflow.mean.as_secs_f64();
+    println!(
+        "wide-graph speedup {wide_speedup:.2}x, prefetch hits {wide_hits} (hints {wide_sent}), \
+         critical path {:.1} ms elapsed vs {:.1} ms ideal",
+        wide_cp_elapsed_us as f64 / 1e3,
+        wide_cp_ideal_us as f64 / 1e3,
+    );
+
+    let identical = wide_digests.0 == wide_digests.1;
+    let mut pass = true;
+    if speedup < 1.3 {
+        println!("ACCEPTANCE FAIL: dataflow only {speedup:.2}x on independent lanes");
+        pass = false;
+    }
+    if wide_speedup < 1.3 {
+        println!("ACCEPTANCE FAIL: dataflow only {wide_speedup:.2}x on the wide graph");
+        pass = false;
+    }
+    if wide_hits == 0 {
+        println!("ACCEPTANCE FAIL: wide graph reported zero prefetch hits");
+        pass = false;
+    }
+    if !identical {
+        println!("ACCEPTANCE FAIL: barrier and dataflow wide-graph values differ");
+        pass = false;
+    }
+    if pass {
+        println!(
+            "ACCEPTANCE PASS: dataflow >= 1.3x on both workloads, prefetch hits > 0, \
+             identical values"
+        );
     } else {
-        println!("ACCEPTANCE FAIL: dataflow only {speedup:.2}x");
         std::process::exit(1);
     }
 }

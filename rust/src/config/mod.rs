@@ -17,7 +17,8 @@
 //!   "fault_timeout_ms": 5000,
 //!   "cost_model": {"alpha_us": 2.0, "bandwidth_gbps": 10.0, "simulate": false},
 //!   "engine": {"artifact_dir": "artifacts", "variant": "ref"},
-//!   "execution_mode": "dataflow"
+//!   "execution_mode": "dataflow",
+//!   "speculative_prefetch": true
 //! }
 //! ```
 
@@ -133,6 +134,12 @@ pub struct TopologyConfig {
     pub engine: Option<EngineConfig>,
     /// Barrier vs dataflow control plane (DESIGN.md §7).
     pub execution_mode: ExecutionMode,
+    /// Speculative input prefetch under dataflow execution (DESIGN.md §7):
+    /// when a waiting job has all inputs but one materialised, its probable
+    /// target scheduler pulls the remote ones while the last producer
+    /// still runs.  On by default; purely a transfer/latency trade — never
+    /// affects computed values.
+    pub speculative_prefetch: bool,
 }
 
 impl Default for TopologyConfig {
@@ -146,6 +153,7 @@ impl Default for TopologyConfig {
             cost_model: CostModelConfig::default(),
             engine: None,
             execution_mode: ExecutionMode::default(),
+            speculative_prefetch: true,
         }
     }
 }
@@ -197,6 +205,11 @@ impl TopologyConfig {
                 .ok_or_else(|| Error::Config("execution_mode must be a string".into()))?;
             cfg.execution_mode = ExecutionMode::parse(s)?;
         }
+        if let Some(v) = doc.get("speculative_prefetch") {
+            cfg.speculative_prefetch = v.as_bool().ok_or_else(|| {
+                Error::Config("speculative_prefetch must be a bool".into())
+            })?;
+        }
         if let Some(e) = doc.get("engine") {
             if *e != Json::Null {
                 let dir = e
@@ -228,6 +241,7 @@ impl TopologyConfig {
                 "execution_mode",
                 Json::str(self.execution_mode.as_str().to_string()),
             ),
+            ("speculative_prefetch", Json::Bool(self.speculative_prefetch)),
             (
                 "cost_model",
                 Json::obj(vec![
@@ -302,6 +316,19 @@ mod tests {
         assert_eq!(back.execution_mode, ExecutionMode::Barrier);
         assert!(TopologyConfig::from_json_text(r#"{"execution_mode": "bsp"}"#).is_err());
         assert!(TopologyConfig::from_json_text(r#"{"execution_mode": 3}"#).is_err());
+    }
+
+    #[test]
+    fn speculative_prefetch_parses_and_roundtrips() {
+        assert!(TopologyConfig::default().speculative_prefetch, "on by default");
+        let cfg = TopologyConfig::from_json_text(r#"{"speculative_prefetch": false}"#)
+            .unwrap();
+        assert!(!cfg.speculative_prefetch);
+        let back = TopologyConfig::from_json_text(&cfg.to_json()).unwrap();
+        assert!(!back.speculative_prefetch);
+        assert!(
+            TopologyConfig::from_json_text(r#"{"speculative_prefetch": "yes"}"#).is_err()
+        );
     }
 
     #[test]

@@ -153,6 +153,7 @@ impl Framework {
                 subs: sub_ranks,
                 release: self.release,
                 mode: self.cfg.execution_mode,
+                prefetch: self.cfg.speculative_prefetch,
             },
             &metrics,
         );
@@ -252,6 +253,16 @@ impl FrameworkBuilder {
     /// Barrier vs dataflow control plane (default: [`ExecutionMode::Dataflow`]).
     pub fn execution_mode(mut self, m: ExecutionMode) -> Self {
         self.cfg.execution_mode = m;
+        self
+    }
+
+    /// Speculative input prefetch under dataflow execution (default: on).
+    /// A `Waiting` job with all inputs but one materialised gets its
+    /// probable target scheduler hinted to pull the remote ones while the
+    /// last producer still runs (DESIGN.md §7).  Never affects values —
+    /// only where and when bytes move.
+    pub fn speculative_prefetch(mut self, on: bool) -> Self {
+        self.cfg.speculative_prefetch = on;
         self
     }
 

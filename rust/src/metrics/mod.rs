@@ -69,6 +69,9 @@ pub struct MetricsSnapshot {
     pub wall_time_us: u64,
     pub segments: Vec<SegmentTimes>,
     pub jobs: HashMap<u32, JobTimes>,
+    /// Consumer job → its distinct producer jobs (the executed dependency
+    /// DAG; feeds [`Self::critical_path`]).
+    pub job_deps: HashMap<u32, Vec<u32>>,
     pub comm_msgs: u64,
     pub comm_bytes: u64,
     pub modelled_comm_us: u64,
@@ -81,6 +84,29 @@ pub struct MetricsSnapshot {
     /// under dataflow it measures how much cross-segment overlap the DAG
     /// executor actually extracted.
     pub pipeline_overlap_jobs: usize,
+    /// Results freed mid-run by
+    /// [`crate::scheduler::master::ReleasePolicy::Lagged`].
+    pub results_released: usize,
+    /// Speculative-prefetch hints the master sent (dataflow mode).
+    pub prefetches_sent: usize,
+    /// Assignment inputs found already materialised in the target
+    /// scheduler's store thanks to a prefetch hint.
+    pub prefetch_hits: usize,
+}
+
+/// One dependency chain through the executed DAG (see
+/// [`MetricsSnapshot::critical_path`]).
+#[derive(Debug, Clone, Default)]
+pub struct CriticalPath {
+    /// Job ids, chain start → end.
+    pub jobs: Vec<u32>,
+    /// Wall-clock span from the start job entering the ready set to the
+    /// end job finishing — what the chain actually cost.
+    pub elapsed: Duration,
+    /// Sum of pure execution times along the chain — what it would cost
+    /// on an infinitely wide cluster with free communication.  The gap to
+    /// `elapsed` is the chain's accumulated scheduling + transfer stall.
+    pub ideal: Duration,
 }
 
 impl MetricsSnapshot {
@@ -113,6 +139,89 @@ impl MetricsSnapshot {
             / self.jobs.len() as u32
     }
 
+    /// The longest dependency chain by summed execution time — the run's
+    /// critical path.  Empty when no jobs were recorded.
+    pub fn critical_path(&self) -> CriticalPath {
+        self.critical_paths().into_iter().next().unwrap_or_default()
+    }
+
+    /// Longest chain ending at every sink job (no executed consumers),
+    /// heaviest first — the per-lane view of a lanes × stages pipeline:
+    /// each lane's tail is a sink, so each entry is that lane's critical
+    /// path (`elapsed` vs `ideal` shows where a lane stalled).
+    pub fn critical_paths(&self) -> Vec<CriticalPath> {
+        // Edges restricted to executed jobs; Kahn order so every chain
+        // value is final before its consumers are folded.
+        let mut consumers: HashMap<u32, Vec<u32>> = HashMap::new();
+        let mut indeg: HashMap<u32, usize> = HashMap::new();
+        for &id in self.jobs.keys() {
+            indeg.insert(id, 0);
+        }
+        for (&c, ps) in &self.job_deps {
+            if !self.jobs.contains_key(&c) {
+                continue;
+            }
+            for &p in ps {
+                if self.jobs.contains_key(&p) {
+                    consumers.entry(p).or_default().push(c);
+                    *indeg.entry(c).or_default() += 1;
+                }
+            }
+        }
+        // best incoming chain per job: (ideal µs, predecessor)
+        let mut best_in: HashMap<u32, (u64, Option<u32>)> = HashMap::new();
+        let mut queue: Vec<u32> =
+            indeg.iter().filter(|(_, &d)| d == 0).map(|(&id, _)| id).collect();
+        queue.sort_unstable();
+        let mut chain: HashMap<u32, u64> = HashMap::new();
+        let mut i = 0;
+        while i < queue.len() {
+            let n = queue[i];
+            i += 1;
+            let total = best_in.get(&n).map(|&(t, _)| t).unwrap_or(0)
+                + self.jobs[&n].exec_time().as_micros() as u64;
+            chain.insert(n, total);
+            for &c in consumers.get(&n).map(Vec::as_slice).unwrap_or(&[]) {
+                let cur = best_in.get(&c).map(|&(t, _)| t).unwrap_or(0);
+                if total > cur || best_in.get(&c).is_none() {
+                    best_in.insert(c, (total, Some(n)));
+                }
+                let d = indeg.get_mut(&c).expect("edge target indexed");
+                *d -= 1;
+                if *d == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        let mut sinks: Vec<u32> = chain
+            .keys()
+            .copied()
+            .filter(|id| !consumers.contains_key(id))
+            .collect();
+        sinks.sort_unstable_by_key(|id| (u64::MAX - chain[id], *id));
+        sinks
+            .into_iter()
+            .map(|end| {
+                let mut jobs = vec![end];
+                let mut cur = end;
+                while let Some(&(_, Some(pred))) = best_in.get(&cur) {
+                    jobs.push(pred);
+                    cur = pred;
+                }
+                jobs.reverse();
+                let start = jobs[0];
+                let elapsed = self.jobs[&end]
+                    .finished_us
+                    .saturating_sub(self.jobs[&start].ready_us);
+                CriticalPath {
+                    jobs,
+                    elapsed: Duration::from_micros(elapsed),
+                    ideal: Duration::from_micros(chain[&end]),
+                }
+            })
+            .collect()
+    }
+
     /// Wall time not explained by the per-worker serialised compute:
     /// `wall - total_exec/workers` (coarse but comparable across configs).
     pub fn scheduling_overhead(&self) -> Duration {
@@ -124,6 +233,7 @@ impl MetricsSnapshot {
     /// Serialise for bench harnesses / monitoring pipelines.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
+        let cp = self.critical_path();
         Json::obj(vec![
             ("wall_time_us", Json::num(self.wall_time_us as f64)),
             ("jobs_executed", Json::num(self.jobs_executed as f64)),
@@ -149,6 +259,18 @@ impl MetricsSnapshot {
             (
                 "total_exec_us",
                 Json::num(self.total_exec_time().as_micros() as f64),
+            ),
+            ("results_released", Json::num(self.results_released as f64)),
+            ("prefetches_sent", Json::num(self.prefetches_sent as f64)),
+            ("prefetch_hits", Json::num(self.prefetch_hits as f64)),
+            ("critical_path_jobs", Json::num(cp.jobs.len() as f64)),
+            (
+                "critical_path_elapsed_us",
+                Json::num(cp.elapsed.as_micros() as f64),
+            ),
+            (
+                "critical_path_ideal_us",
+                Json::num(cp.ideal.as_micros() as f64),
             ),
         ])
     }
@@ -325,6 +447,33 @@ impl MetricsCollector {
         self.with(|m| m.recomputed_jobs += 1);
     }
 
+    /// Record `job`'s distinct producers (critical-path edges).  Called
+    /// once per spec (static build-up or injection resolution).
+    pub fn job_dependencies(&self, job: JobId, producers: &[JobId]) {
+        if producers.is_empty() {
+            return;
+        }
+        let deps: Vec<u32> = producers.iter().map(|j| j.0).collect();
+        self.with(|m| {
+            m.job_deps.insert(job.0, deps);
+        });
+    }
+
+    /// A stored result was freed mid-run (`ReleasePolicy::Lagged`).
+    pub fn result_released(&self) {
+        self.with(|m| m.results_released += 1);
+    }
+
+    /// The master sent a speculative-prefetch hint.
+    pub fn prefetch_sent(&self) {
+        self.with(|m| m.prefetches_sent += 1);
+    }
+
+    /// An assignment input was already warm thanks to a prefetch hint.
+    pub fn prefetch_hit(&self) {
+        self.with(|m| m.prefetch_hits += 1);
+    }
+
     /// Fold in the comm totals and wall time, producing the final snapshot.
     pub fn finish(&self, comm: StatsSnapshot) -> MetricsSnapshot {
         let wall = self.now_us();
@@ -410,6 +559,44 @@ mod tests {
         assert!(t.contains("w6"));
         assert!(t.contains('#'));
         assert!(t.contains("2 workers"));
+    }
+
+    #[test]
+    fn critical_path_follows_longest_chain() {
+        // Chain J1→J2→J3 (2 ms each) beside a lone J4 (fast): the critical
+        // path must be the chain, its ideal the summed exec time, and its
+        // elapsed at least that (the chain ran serialised).
+        let c = MetricsCollector::new();
+        c.job_dependencies(JobId(2), &[JobId(1)]);
+        c.job_dependencies(JobId(3), &[JobId(2)]);
+        for id in [1u32, 2, 3] {
+            c.job_ready(JobId(id));
+            c.job_assigned(JobId(id), 0);
+            c.job_started(JobId(id), 1);
+            std::thread::sleep(Duration::from_millis(2));
+            c.job_finished(JobId(id), 0);
+        }
+        c.job_assigned(JobId(4), 0);
+        c.job_started(JobId(4), 2);
+        c.job_finished(JobId(4), 0);
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        let cp = snap.critical_path();
+        assert_eq!(cp.jobs, vec![1, 2, 3]);
+        assert!(cp.ideal >= Duration::from_millis(6), "ideal {:?}", cp.ideal);
+        assert!(cp.elapsed >= cp.ideal, "elapsed {:?} < ideal {:?}", cp.elapsed, cp.ideal);
+        // Two sinks (J3 and J4); the chain outweighs the lone job.
+        let all = snap.critical_paths();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[1].jobs, vec![4]);
+    }
+
+    #[test]
+    fn critical_path_empty_run_is_default() {
+        let c = MetricsCollector::new();
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        let cp = snap.critical_path();
+        assert!(cp.jobs.is_empty());
+        assert_eq!(cp.ideal, Duration::ZERO);
     }
 
     #[test]

@@ -16,7 +16,17 @@
 //! Edges are stored per [`ChunkRef`] source (one edge per referenced
 //! producer, deduplicated for readiness counting — a job consuming
 //! `R1[0..2] R1[2..4]` waits on J1 once).
+//!
+//! The queries the master runs on every completion — [`JobGraph::frontier`]
+//! and [`JobGraph::has_pending_consumers`] — are served from **incremental
+//! indices** (a per-segment live-node counter and a per-producer
+//! pending-consumer counter, both updated O(degree) on
+//! `insert`/`on_done`/`reenter`), not by scanning the node table.  The
+//! original O(nodes) scans survive as [`JobGraph::frontier_scan`] /
+//! [`JobGraph::has_pending_consumers_scan`] and are cross-checked against
+//! the indices by `debug_assert!` on every query (DESIGN.md §7).
 
+use std::cell::Cell;
 use std::collections::{HashMap, HashSet};
 
 use crate::job::{JobId, JobSpec};
@@ -39,6 +49,8 @@ pub enum NodeState {
 struct Node {
     spec: JobSpec,
     segment: usize,
+    /// Distinct producers this node references (fixed at insert).
+    producers: usize,
     /// Producers whose results this node still waits for.
     unmet: HashSet<JobId>,
     state: NodeState,
@@ -56,6 +68,19 @@ pub struct JobGraph {
     /// Nodes in `Ready` state not yet handed out (may contain stale
     /// entries demoted back to `Waiting`; filtered on take).
     ready: Vec<JobId>,
+    /// Live (not-`Done`) node count per segment index — the incremental
+    /// frontier index.
+    seg_live: Vec<usize>,
+    /// Lazily advanced lower bound for the frontier: every segment below
+    /// it has zero live nodes.  Moved back by `insert`/`reenter` into an
+    /// older segment, forward by `frontier()` skipping drained segments.
+    frontier_hint: Cell<usize>,
+    /// Not-`Done` consumer count per producer — the incremental release
+    /// index behind [`JobGraph::has_pending_consumers`].
+    pending: HashMap<JobId, usize>,
+    /// Waiting nodes that just reached exactly one unmet producer —
+    /// speculative-prefetch candidates (stale entries filtered on take).
+    prefetch_candidates: Vec<JobId>,
 }
 
 impl JobGraph {
@@ -76,8 +101,11 @@ impl JobGraph {
             let entry = self.consumers.entry(*p).or_default();
             if !entry.contains(&id) {
                 entry.push(id);
+                // The new node is live; its producers gain a pending edge.
+                *self.pending.entry(*p).or_default() += 1;
             }
         }
+        let n_producers = producers.len();
         let unmet: HashSet<JobId> = producers
             .into_iter()
             .filter(|p| !self.available.contains(p))
@@ -85,8 +113,23 @@ impl JobGraph {
         let state = if unmet.is_empty() { NodeState::Ready } else { NodeState::Waiting };
         if state == NodeState::Ready {
             self.ready.push(id);
+        } else if unmet.len() == 1 && n_producers >= 2 {
+            // Injected with every input but one already materialised.
+            self.prefetch_candidates.push(id);
         }
-        self.nodes.insert(id, Node { spec, segment, unmet, state });
+        self.mark_live(segment);
+        self.nodes.insert(id, Node { spec, segment, producers: n_producers, unmet, state });
+    }
+
+    /// A node became live in `segment` (insert or Done-node re-entry).
+    fn mark_live(&mut self, segment: usize) {
+        if self.seg_live.len() <= segment {
+            self.seg_live.resize(segment + 1, 0);
+        }
+        self.seg_live[segment] += 1;
+        if self.frontier_hint.get() > segment {
+            self.frontier_hint.set(segment);
+        }
     }
 
     /// Drain the ready queue in deterministic `(segment, id)` order,
@@ -112,8 +155,23 @@ impl JobGraph {
     /// A job completed and its result is now available: readies every
     /// consumer whose last unmet input this was.
     pub fn on_done(&mut self, job: JobId) {
-        if let Some(n) = self.nodes.get_mut(&job) {
-            n.state = NodeState::Done;
+        // Index maintenance happens only on a genuine live→Done transition
+        // (an already-Done node can be reported again by recovery races).
+        let transition = match self.nodes.get_mut(&job) {
+            Some(n) if n.state != NodeState::Done => {
+                n.state = NodeState::Done;
+                let producers: HashSet<JobId> = n.spec.inputs.iter().map(|r| r.job).collect();
+                Some((n.segment, producers))
+            }
+            _ => None,
+        };
+        if let Some((segment, producers)) = transition {
+            self.seg_live[segment] = self.seg_live[segment].saturating_sub(1);
+            for p in producers {
+                if let Some(c) = self.pending.get_mut(&p) {
+                    *c = c.saturating_sub(1);
+                }
+            }
         }
         self.on_available(job);
     }
@@ -125,10 +183,17 @@ impl JobGraph {
         let consumers = self.consumers.get(&job).cloned().unwrap_or_default();
         for c in consumers {
             let Some(n) = self.nodes.get_mut(&c) else { continue };
-            if n.unmet.remove(&job) && n.unmet.is_empty() && n.state == NodeState::Waiting
-            {
-                n.state = NodeState::Ready;
-                self.ready.push(c);
+            if n.unmet.remove(&job) {
+                if n.unmet.is_empty() && n.state == NodeState::Waiting {
+                    n.state = NodeState::Ready;
+                    self.ready.push(c);
+                } else if n.unmet.len() == 1
+                    && n.state == NodeState::Waiting
+                    && n.producers >= 2
+                {
+                    // All inputs but one materialised: prefetch window.
+                    self.prefetch_candidates.push(c);
+                }
             }
         }
     }
@@ -163,6 +228,8 @@ impl JobGraph {
     pub fn reenter(&mut self, job: JobId) {
         let available = &self.available;
         let Some(n) = self.nodes.get_mut(&job) else { return };
+        let was_done = n.state == NodeState::Done;
+        let segment = n.segment;
         let mut unmet: HashSet<JobId> = HashSet::new();
         for r in &n.spec.inputs {
             if !available.contains(&r.job) {
@@ -170,6 +237,7 @@ impl JobGraph {
             }
         }
         n.unmet = unmet;
+        let one_missing = n.unmet.len() == 1 && n.producers >= 2;
         if n.unmet.is_empty() {
             if n.state != NodeState::Ready {
                 n.state = NodeState::Ready;
@@ -177,13 +245,40 @@ impl JobGraph {
             }
         } else {
             n.state = NodeState::Waiting;
+            if one_missing {
+                self.prefetch_candidates.push(job);
+            }
+        }
+        if was_done {
+            // A Done node turned live again: revive the indices its
+            // completion had retired.
+            let producers: HashSet<JobId> =
+                self.nodes[&job].spec.inputs.iter().map(|r| r.job).collect();
+            for p in producers {
+                *self.pending.entry(p).or_default() += 1;
+            }
+            self.mark_live(segment);
         }
     }
 
     /// Does any consumer of `job` still have work to do?  (The
     /// dependency-count release test: a result whose out-edges have all
     /// drained is dead weight, modulo the injection lag window.)
+    /// Served by the per-producer counter, O(1); cross-checked against
+    /// [`Self::has_pending_consumers_scan`] in debug builds.
     pub fn has_pending_consumers(&self, job: JobId) -> bool {
+        let fast = self.pending.get(&job).map(|&c| c > 0).unwrap_or(false);
+        debug_assert_eq!(
+            fast,
+            self.has_pending_consumers_scan(job),
+            "pending-consumer counter diverged from scan for {job}"
+        );
+        fast
+    }
+
+    /// O(out-degree) reference implementation of the release test — kept
+    /// as the `debug_assert!` cross-check of the incremental counter.
+    pub fn has_pending_consumers_scan(&self, job: JobId) -> bool {
         self.consumers
             .get(&job)
             .map(|cs| {
@@ -200,8 +295,28 @@ impl JobGraph {
     }
 
     /// Smallest segment index among not-yet-done nodes — the dataflow
-    /// frontier.  `None` when everything is done.
+    /// frontier.  `None` when everything is done.  Served by the
+    /// per-segment live counters: amortised O(1) (the hint only re-walks a
+    /// segment after a re-entry moved it back); cross-checked against
+    /// [`Self::frontier_scan`] in debug builds.
     pub fn frontier(&self) -> Option<usize> {
+        let mut i = self.frontier_hint.get();
+        while i < self.seg_live.len() && self.seg_live[i] == 0 {
+            i += 1;
+        }
+        self.frontier_hint.set(i);
+        let fast = if i < self.seg_live.len() { Some(i) } else { None };
+        debug_assert_eq!(
+            fast,
+            self.frontier_scan(),
+            "incremental frontier diverged from scan"
+        );
+        fast
+    }
+
+    /// O(nodes) reference implementation of the frontier — kept as the
+    /// `debug_assert!` cross-check of the incremental index.
+    pub fn frontier_scan(&self) -> Option<usize> {
         self.nodes
             .values()
             .filter(|n| n.state != NodeState::Done)
@@ -210,7 +325,33 @@ impl JobGraph {
     }
 
     pub fn all_done(&self) -> bool {
-        self.nodes.values().all(|n| n.state == NodeState::Done)
+        let fast = self.frontier().is_none();
+        debug_assert_eq!(
+            fast,
+            self.nodes.values().all(|n| n.state == NodeState::Done),
+            "live-count all_done diverged from scan"
+        );
+        fast
+    }
+
+    /// Drain the nodes that entered the speculative-prefetch window (all
+    /// distinct producers but one materialised) since the last call.
+    /// Entries whose state moved on (readied, assigned, re-lost an input)
+    /// are filtered out here, mirroring [`Self::take_ready`].
+    pub fn take_prefetch_candidates(&mut self) -> Vec<JobId> {
+        let drained = std::mem::take(&mut self.prefetch_candidates);
+        let mut out: Vec<JobId> = drained
+            .into_iter()
+            .filter(|j| {
+                self.nodes
+                    .get(j)
+                    .map(|n| n.state == NodeState::Waiting && n.unmet.len() == 1)
+                    .unwrap_or(false)
+            })
+            .collect();
+        out.sort();
+        out.dedup();
+        out
     }
 
     pub fn contains(&self, job: JobId) -> bool {
@@ -412,6 +553,121 @@ mod tests {
         // Late injection re-opens the out-edge set.
         g.insert(spec(4, &[1]), 3);
         assert!(g.has_pending_consumers(JobId(1)));
+    }
+
+    /// Assert the incremental indices agree with the O(nodes) scans for
+    /// every interesting query point.
+    fn check_indices(g: &JobGraph, ids: &[u32]) {
+        assert_eq!(g.frontier(), g.frontier_scan(), "frontier diverged");
+        for &id in ids {
+            assert_eq!(
+                g.has_pending_consumers(JobId(id)),
+                g.has_pending_consumers_scan(JobId(id)),
+                "pending-consumer count diverged for J{id}"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_indices_match_scans_under_injection_loss_and_reentry() {
+        // Diamond + a cross-segment tail, then: runtime injection, worker
+        // loss (result lost + running consumer re-entered), recovery, and
+        // a late injection against a drained producer.  After every event
+        // the counters must agree with the scan implementations.
+        let ids: Vec<u32> = vec![1, 2, 3, 4, 5, 10, 11, 99];
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[1]), 1);
+        g.insert(spec(3, &[1]), 1);
+        g.insert(spec(4, &[2, 3]), 2);
+        check_indices(&g, &ids);
+
+        assert_eq!(g.take_ready(), vec![JobId(1)]);
+        g.on_done(JobId(1));
+        check_indices(&g, &ids);
+        assert_eq!(g.take_ready(), vec![JobId(2), JobId(3)]);
+        g.on_done(JobId(2));
+        check_indices(&g, &ids);
+
+        // Runtime injection mid-flight, referencing a live result.
+        g.insert(spec(10, &[2]), 2);
+        check_indices(&g, &ids);
+
+        // Worker loss: R2 vanishes; J4 (waiting) and J10 (ready) demote,
+        // J3 (running) re-enters via the master's abort path.
+        g.on_result_lost(JobId(2));
+        check_indices(&g, &ids);
+        g.reenter(JobId(2)); // recompute the lost producer (was Done)
+        g.reenter(JobId(3)); // aborted while running
+        check_indices(&g, &ids);
+
+        // Recovery drains in dependency order.
+        let r = g.take_ready();
+        assert_eq!(r, vec![JobId(2), JobId(3)]);
+        g.on_done(JobId(2));
+        g.on_done(JobId(3));
+        check_indices(&g, &ids);
+        assert_eq!(g.take_ready(), vec![JobId(4), JobId(10)]);
+        g.on_done(JobId(4));
+        g.on_done(JobId(10));
+        check_indices(&g, &ids);
+        assert!(g.all_done());
+
+        // Late injection re-opens a drained producer's out-edges and the
+        // frontier (segment 3 goes live).
+        g.insert(spec(11, &[4]), 3);
+        check_indices(&g, &ids);
+        assert!(g.has_pending_consumers(JobId(4)));
+        assert_eq!(g.frontier(), Some(3));
+        g.take_ready();
+        g.on_done(JobId(11));
+        check_indices(&g, &ids);
+        assert!(g.all_done());
+    }
+
+    #[test]
+    fn prefetch_candidates_surface_all_but_one_waiting_joins() {
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[]), 0);
+        g.insert(spec(3, &[1, 2]), 1); // join: prefetch-worthy
+        g.insert(spec(4, &[1]), 1); // single producer: nothing to prefetch
+        assert!(g.take_prefetch_candidates().is_empty());
+        g.take_ready();
+        g.on_done(JobId(1));
+        // J3 now waits on J2 only; J4 went Ready (never a candidate).
+        assert_eq!(g.take_prefetch_candidates(), vec![JobId(3)]);
+        // Drained: not re-offered without a new transition.
+        assert!(g.take_prefetch_candidates().is_empty());
+        g.on_done(JobId(2));
+        assert!(g.take_prefetch_candidates().is_empty());
+        assert_eq!(g.take_ready(), vec![JobId(3), JobId(4)]);
+    }
+
+    #[test]
+    fn prefetch_candidate_gone_stale_is_filtered() {
+        // The window closes before the master drains the queue: J3's last
+        // input arrives right after the candidate was recorded.
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[]), 0);
+        g.insert(spec(3, &[1, 2]), 1);
+        g.take_ready();
+        g.on_done(JobId(1));
+        g.on_done(JobId(2)); // J3 Ready; the queued candidate is stale
+        assert!(g.take_prefetch_candidates().is_empty());
+    }
+
+    #[test]
+    fn injected_node_with_one_missing_input_is_a_candidate() {
+        let mut g = JobGraph::new();
+        g.insert(spec(1, &[]), 0);
+        g.insert(spec(2, &[]), 0);
+        g.take_ready();
+        g.on_done(JobId(1));
+        // Injected join: R1 exists, R2 does not — immediately in window.
+        g.insert(spec(10, &[1, 2]), 1);
+        assert_eq!(g.take_prefetch_candidates(), vec![JobId(10)]);
     }
 
     #[test]

@@ -56,6 +56,10 @@ pub struct MasterConfig {
     pub subs: Vec<Rank>,
     pub release: ReleasePolicy,
     pub mode: ExecutionMode,
+    /// Speculative input prefetch (dataflow mode, DESIGN.md §7): hint the
+    /// probable target of a `Waiting` job with all inputs but one
+    /// materialised to pull the remote ones early.
+    pub prefetch: bool,
 }
 
 /// Drive one algorithm to completion. Returns the results of the final
@@ -76,6 +80,9 @@ struct Master<'a> {
 
     segments: Vec<Vec<JobSpec>>,
     specs: HashMap<JobId, JobSpec>,
+    /// Segment each job was declared in (release horizon anchor; O(1)
+    /// final-segment membership).
+    produced_in: HashMap<JobId, usize>,
     owners: HashMap<JobId, SourceLoc>,
     result_bytes: HashMap<JobId, u64>,
     available: HashSet<JobId>,
@@ -84,6 +91,8 @@ struct Master<'a> {
     pending: HashSet<JobId>,
     /// Abort counts per job — a cycle-breaker: a job repeatedly aborted by
     /// its scheduler indicates an unrecoverable condition, not a fault.
+    /// Cleared on completion so a long fault-heavy run cannot trip the
+    /// limit across independent recovery episodes.
     abort_counts: HashMap<JobId, usize>,
     next_id: u32,
 
@@ -98,10 +107,31 @@ struct Master<'a> {
     /// entry is closed).
     seg_outstanding: Vec<usize>,
     seg_closed: Vec<bool>,
+    /// Results whose release eligibility may have changed since the last
+    /// release pass (their own completion, a consumer draining, or the
+    /// final segment moving) — the incremental replacement for scanning
+    /// every available result per completion.
+    release_candidates: Vec<JobId>,
+    /// Results blocked only on the lag horizon, keyed by the frontier
+    /// value that unblocks them (`last_use + lag`).
+    lag_parked: BTreeMap<usize, Vec<JobId>>,
+    /// Membership set for `lag_parked` (dedupe).
+    parked: HashSet<JobId>,
+    /// Jobs a prefetch hint was already sent for.
+    prefetch_sent: HashSet<JobId>,
 }
 
 /// A job aborted more often than this fails the run.
 const MAX_ABORTS_PER_JOB: usize = 8;
+
+/// Distinct producer jobs referenced by a spec (dependency edges for the
+/// critical-path metrics and the release-candidate offers).
+fn distinct_inputs(spec: &JobSpec) -> Vec<JobId> {
+    let mut ps: Vec<JobId> = spec.inputs.iter().map(|r| r.job).collect();
+    ps.sort();
+    ps.dedup();
+    ps
+}
 
 impl<'a> Master<'a> {
     fn new(comm: &'a mut Comm<FwMsg>, cfg: MasterConfig, metrics: &'a MetricsCollector) -> Self {
@@ -111,6 +141,7 @@ impl<'a> Master<'a> {
             metrics,
             segments: Vec::new(),
             specs: HashMap::new(),
+            produced_in: HashMap::new(),
             owners: HashMap::new(),
             result_bytes: HashMap::new(),
             available: HashSet::new(),
@@ -124,6 +155,10 @@ impl<'a> Master<'a> {
             graph: JobGraph::new(),
             seg_outstanding: Vec::new(),
             seg_closed: Vec::new(),
+            release_candidates: Vec::new(),
+            lag_parked: BTreeMap::new(),
+            parked: HashSet::new(),
+            prefetch_sent: HashSet::new(),
         }
     }
 
@@ -131,9 +166,11 @@ impl<'a> Master<'a> {
         algo.validate()?;
         self.next_id = algo.max_job_id() + 1;
         self.segments = algo.segments.into_iter().map(|s| s.jobs).collect();
-        for seg in &self.segments {
+        for (idx, seg) in self.segments.iter().enumerate() {
             for j in seg {
                 self.specs.insert(j.id, j.clone());
+                self.produced_in.insert(j.id, idx);
+                self.metrics.job_dependencies(j.id, &distinct_inputs(j));
             }
         }
         self.recompute_last_use();
@@ -241,6 +278,9 @@ impl<'a> Master<'a> {
                         }
                         for spec in batch.jobs {
                             self.specs.insert(spec.id, spec.clone());
+                            self.produced_in.insert(spec.id, batch.segment_index);
+                            self.metrics
+                                .job_dependencies(spec.id, &distinct_inputs(&spec));
                             for r in &spec.inputs {
                                 let e = self
                                     .last_use
@@ -306,8 +346,19 @@ impl<'a> Master<'a> {
         if self.specs.get(&job).map(|s| s.keep).unwrap_or(false) {
             return true;
         }
-        let last = self.last_use.get(&job).copied().unwrap_or(0);
-        last >= self.seg_idx || self.in_final_segment(job)
+        // The producing segment anchors liveness, like the release horizon
+        // (a result with no recorded consumer is not dead — an injection
+        // may still reference it).  Under `Lagged` the whole lag window is
+        // live: a lag-compliant injection may reference up to `lag`
+        // segments back, so a lost result inside the window must be
+        // recomputed — recovery mirrors the release horizon (DESIGN.md §6).
+        let produced = self.produced_in.get(&job).copied().unwrap_or(0);
+        let last = self.last_use.get(&job).copied().unwrap_or(produced).max(produced);
+        let alive = match self.cfg.release {
+            ReleasePolicy::Lagged { lag } => last + lag >= self.seg_idx,
+            ReleasePolicy::AtShutdown => last >= self.seg_idx,
+        };
+        alive || self.in_final_segment(job)
     }
 
     fn queue_recovery(&mut self, job: JobId) {
@@ -349,21 +400,30 @@ impl<'a> Master<'a> {
         }
     }
 
+    /// At the close of segment `seg_idx`, free every result whose
+    /// producing segment *and* last known reference lie at or before the
+    /// horizon `seg_idx - lag` — the unified horizon arithmetic
+    /// `last + lag <= horizon` shared with the dataflow executor
+    /// (DESIGN.md §6).
     fn apply_barrier_release(&mut self) {
         let ReleasePolicy::Lagged { lag } = self.cfg.release else { return };
-        let horizon = self.seg_idx.saturating_sub(lag);
+        if self.seg_idx < lag {
+            return;
+        }
+        let horizon = self.seg_idx - lag;
         let candidates: Vec<JobId> = self
             .available
             .iter()
             .copied()
             .filter(|j| {
-                let last = self.last_use.get(j).copied().unwrap_or(0);
-                last <= horizon
-                    && self.seg_idx >= lag
-                    && !self.in_final_segment(*j)
-                    // produced at or before the horizon too (avoid freeing
-                    // something just made for later use)
-                    && last < self.segments.len()
+                // The producing segment anchors the horizon: a result with
+                // no recorded consumer (one made for a future injection)
+                // must survive the full lag window from where it was
+                // produced, not from segment 0.
+                let produced = self.produced_in.get(j).copied().unwrap_or(0);
+                let last =
+                    self.last_use.get(j).copied().unwrap_or(produced).max(produced);
+                produced <= horizon && last <= horizon && !self.in_final_segment(*j)
             })
             .collect();
         for job in candidates {
@@ -394,6 +454,7 @@ impl<'a> Master<'a> {
 
         loop {
             self.assign_ready();
+            self.send_prefetch_hints();
             if self.pending.is_empty() {
                 if self.graph.all_done() {
                     break;
@@ -433,6 +494,57 @@ impl<'a> Master<'a> {
         Ok(())
     }
 
+    /// Speculative input prefetch (DESIGN.md §7): for every `Waiting` node
+    /// that just reached all-inputs-but-one materialised, predict its
+    /// assignment target with the same look-ahead placement [`Self::assign`]
+    /// will use and hint that scheduler to pull the remote chunks now —
+    /// transfer overlaps the last producer's execution, and the eventual
+    /// assignment finds its inputs warm in the target's store.
+    fn send_prefetch_hints(&mut self) {
+        let candidates = self.graph.take_prefetch_candidates();
+        if !self.cfg.prefetch || candidates.is_empty() {
+            return;
+        }
+        for job in candidates {
+            // One hint per job: the window opens once per missing input,
+            // and a wrong prediction only costs one redundant transfer.
+            if !self.prefetch_sent.insert(job) {
+                continue;
+            }
+            let Some(spec) = self.specs.get(&job) else { continue };
+            let lookahead: Vec<JobSpec> = self
+                .graph
+                .consumers_of(job)
+                .iter()
+                .filter_map(|c| self.specs.get(c))
+                .cloned()
+                .collect();
+            let target = choose_scheduler_lookahead(
+                spec,
+                &lookahead,
+                &self.owners,
+                &self.result_bytes,
+                &self.load,
+                &self.cfg.subs,
+            );
+            let mut seen = HashSet::new();
+            let sources: Vec<SourceLoc> = spec
+                .inputs
+                .iter()
+                .filter(|r| self.available.contains(&r.job) && seen.insert(r.job))
+                .filter_map(|r| self.owners.get(&r.job).copied())
+                .filter(|loc| loc.owner != target)
+                .collect();
+            if sources.is_empty() {
+                continue; // everything already local to the prediction
+            }
+            self.metrics.prefetch_sent();
+            let _ = self
+                .comm
+                .send(target, TAG_CTRL, FwMsg::Prefetch { job, sources });
+        }
+    }
+
     /// Drain the graph's ready set onto the cluster.
     fn assign_ready(&mut self) {
         let ready = self.graph.take_ready();
@@ -466,6 +578,10 @@ impl<'a> Master<'a> {
                 let _ = chunks;
                 self.graph.on_done(job);
                 self.note_segment_progress(job);
+                // Exactly the results this completion may have made
+                // releasable: the fresh one and its producers (whose
+                // pending-consumer count just dropped).
+                self.offer_release_candidates(job);
                 self.apply_dataflow_release();
                 Ok(())
             }
@@ -524,6 +640,7 @@ impl<'a> Master<'a> {
             &mut self.next_id,
             |id| self.specs.contains_key(&id),
         )?;
+        let old_len = self.segments.len();
         for batch in resolved {
             while self.segments.len() <= batch.segment_index {
                 self.segments.push(Vec::new());
@@ -534,6 +651,8 @@ impl<'a> Master<'a> {
             self.metrics.jobs_injected_into(batch.jobs.len(), batch.segment_index);
             for spec in batch.jobs {
                 self.specs.insert(spec.id, spec.clone());
+                self.produced_in.insert(spec.id, batch.segment_index);
+                self.metrics.job_dependencies(spec.id, &distinct_inputs(&spec));
                 for r in &spec.inputs {
                     let e = self
                         .last_use
@@ -545,6 +664,13 @@ impl<'a> Master<'a> {
                 self.segments[batch.segment_index].push(spec.clone());
                 self.graph.insert(spec, batch.segment_index);
             }
+        }
+        if self.segments.len() > old_len && old_len > 0 {
+            // The final segment moved: jobs of the previous final segment
+            // lost their release exemption — offer them to the next pass.
+            let ex_final: Vec<JobId> =
+                self.segments[old_len - 1].iter().map(|j| j.id).collect();
+            self.release_candidates.extend(ex_final);
         }
         Ok(())
     }
@@ -583,38 +709,119 @@ impl<'a> Master<'a> {
         if self.specs.get(&job).map(|s| s.keep).unwrap_or(false) {
             return true;
         }
-        self.graph.has_pending_consumers(job) || self.in_final_segment(job)
+        if self.graph.has_pending_consumers(job) || self.in_final_segment(job) {
+            return true;
+        }
+        // Under `Lagged`, a lost result still inside its lag window may be
+        // referenced by a future lag-compliant injection: recompute it,
+        // mirroring the release horizon (`last + lag <= frontier` frees —
+        // so anything short of that horizon is still live, DESIGN.md §6).
+        if let ReleasePolicy::Lagged { lag } = self.cfg.release {
+            let produced = self.graph.segment_of(job).unwrap_or(0);
+            let last =
+                self.last_use.get(&job).copied().unwrap_or(produced).max(produced);
+            if let Some(frontier) = self.graph.frontier() {
+                return last + lag > frontier;
+            }
+        }
+        false
+    }
+
+    /// Feed the release pass the results whose eligibility may have
+    /// changed when `job` completed: its own fresh result and each of its
+    /// producers (their pending-consumer count just dropped).
+    fn offer_release_candidates(&mut self, job: JobId) {
+        if !matches!(self.cfg.release, ReleasePolicy::Lagged { .. }) {
+            return;
+        }
+        self.release_candidates.push(job);
+        if let Some(spec) = self.specs.get(&job) {
+            self.release_candidates.extend(distinct_inputs(spec));
+        }
     }
 
     /// Dependency-count release: a result is freed once (a) every known
-    /// out-edge has drained, and (b) its last known reference lies more
-    /// than `lag` segments behind the dataflow frontier — the same horizon
-    /// arithmetic as the barrier policy (`last <= closing - lag`), with the
-    /// frontier standing in for the closing segment.
+    /// out-edge has drained, and (b) its last known reference lies at
+    /// least `lag` segments behind the dataflow frontier — the same
+    /// horizon arithmetic as the barrier policy (`last + lag <= horizon`,
+    /// DESIGN.md §6), with the frontier standing in for the closing
+    /// segment, so both modes free a result at the same lag distance.
+    ///
+    /// The pass is **incremental**: it examines only the candidates
+    /// offered by the completion event ([`Self::offer_release_candidates`],
+    /// O(degree)) plus results previously parked on the lag horizon that
+    /// the frontier just reached — never the whole available set.  A
+    /// candidate that fails the consumer test is simply dropped: the
+    /// completion of its last consumer will re-offer it.  A debug
+    /// cross-check scans the available set and asserts nothing eligible
+    /// was missed.
     fn apply_dataflow_release(&mut self) {
-        let ReleasePolicy::Lagged { lag } = self.cfg.release else { return };
+        let ReleasePolicy::Lagged { lag } = self.cfg.release else {
+            self.release_candidates.clear();
+            return;
+        };
         let Some(frontier) = self.graph.frontier() else { return };
-        let candidates: Vec<JobId> = self
-            .available
+        // Results blocked only on the horizon, now inside it.
+        while let Some((&key, _)) = self.lag_parked.range(..=frontier).next() {
+            let unparked = self.lag_parked.remove(&key).unwrap_or_default();
+            for j in unparked {
+                self.parked.remove(&j);
+                self.release_candidates.push(j);
+            }
+        }
+        let candidates = std::mem::take(&mut self.release_candidates);
+        for j in candidates {
+            if !self.available.contains(&j)
+                || self.in_final_segment(j)
+                || self.graph.has_pending_consumers(j)
+            {
+                continue;
+            }
+            let produced = self.graph.segment_of(j).unwrap_or(0);
+            let last = self.last_use.get(&j).copied().unwrap_or(produced).max(produced);
+            if last + lag <= frontier {
+                self.release_result(j);
+                // The graph must see the result as gone so a late injected
+                // consumer (a `lag`-contract violation) parks as Waiting
+                // and surfaces as the deterministic "dataflow stuck" error
+                // — mirroring the barrier executor's "recovery stuck" —
+                // instead of being assigned against a freed source.
+                self.graph.on_result_lost(j);
+            } else if self.parked.insert(j) {
+                // Consumers drained, horizon not reached: park until the
+                // frontier arrives (re-verified then — an injection may
+                // have pushed `last_use` forward or added a consumer).
+                self.lag_parked.entry(last + lag).or_default().push(j);
+            }
+        }
+        debug_assert!(
+            self.dataflow_release_scan_missed().is_empty(),
+            "incremental release pass missed eligible results: {:?}",
+            self.dataflow_release_scan_missed()
+        );
+    }
+
+    /// Debug cross-check of the incremental release pass: the original
+    /// full scan over the available set, returning anything that is
+    /// eligible right now and neither freed nor parked.  Only invoked from
+    /// `debug_assert!` — release builds compile it out with the assert.
+    fn dataflow_release_scan_missed(&self) -> Vec<JobId> {
+        let ReleasePolicy::Lagged { lag } = self.cfg.release else {
+            return Vec::new();
+        };
+        let Some(frontier) = self.graph.frontier() else { return Vec::new() };
+        self.available
             .iter()
             .copied()
             .filter(|&j| {
                 let produced = self.graph.segment_of(j).unwrap_or(0);
-                let last = self.last_use.get(&j).copied().unwrap_or(produced);
-                last + lag < frontier
-                    && !self.graph.has_pending_consumers(j)
+                let last =
+                    self.last_use.get(&j).copied().unwrap_or(produced).max(produced);
+                last + lag <= frontier
+                    && !self.graph.has_pending_consumers_scan(j)
                     && !self.in_final_segment(j)
             })
-            .collect();
-        for job in candidates {
-            self.release_result(job);
-            // The graph must see the result as gone so a late injected
-            // consumer (a `lag`-contract violation) parks as Waiting and
-            // surfaces as the deterministic "dataflow stuck" error —
-            // mirroring the barrier executor's "recovery stuck" — instead
-            // of being assigned against a freed source.
-            self.graph.on_result_lost(job);
-        }
+            .collect()
     }
 
     // ====================================================== shared pieces
@@ -630,6 +837,11 @@ impl<'a> Master<'a> {
         }
         self.available.insert(job);
         self.result_bytes.insert(job, output_bytes);
+        // A completed job starts a clean abort slate: the limit guards
+        // against a single unrecoverable abort *cycle*, not against the
+        // sum of independent recovery episodes a long fault-heavy run
+        // accumulates (abort → recover → complete → lost → re-enter …).
+        self.abort_counts.remove(&job);
     }
 
     /// Remove `job` from the in-flight set, crediting its scheduler's
@@ -662,11 +874,11 @@ impl<'a> Master<'a> {
         Ok(())
     }
 
+    /// Does `job` belong to the (current) final segment?  O(1) via the
+    /// producing-segment index — injections may append segments, so this
+    /// is evaluated against the live segment list, never cached.
     fn in_final_segment(&self, job: JobId) -> bool {
-        self.segments
-            .last()
-            .map(|s| s.iter().any(|j| j.id == job))
-            .unwrap_or(false)
+        self.produced_in.get(&job).is_some_and(|&s| s + 1 == self.segments.len())
     }
 
     fn assign(&mut self, job: JobId) {
@@ -710,16 +922,19 @@ impl<'a> Master<'a> {
             .send(target, TAG_CTRL, FwMsg::Assign { spec, sources });
     }
 
-    /// Tell the owning scheduler to free `job`'s stored/kept result and
-    /// drop the master-side location bookkeeping.
+    /// Free `job`'s stored/kept result and drop the master-side location
+    /// bookkeeping.  Broadcast to every sub-scheduler: the owner frees its
+    /// store (and tells a retaining worker to drop its kept copy), and the
+    /// others drop any *transient* copy they fetched as consumers or on a
+    /// prefetch hint — under `Lagged`, the policy that exists to bound
+    /// mid-run memory, those copies must not outlive the result.
     fn release_result(&mut self, job: JobId) {
-        if let Some(loc) = self.owners.get(&job) {
-            let _ = self
-                .comm
-                .send(loc.owner, TAG_CTRL, FwMsg::ReleaseResult { job });
+        for &s in &self.cfg.subs {
+            let _ = self.comm.send(s, TAG_CTRL, FwMsg::ReleaseResult { job });
         }
         self.available.remove(&job);
         self.owners.remove(&job);
+        self.metrics.result_released();
     }
 
     fn collect_final_results(&mut self) -> Result<BTreeMap<JobId, FunctionData>> {
@@ -731,14 +946,18 @@ impl<'a> Master<'a> {
             .unwrap_or_default();
         let mut expected = HashSet::new();
         for job in &finals {
-            if let Some(loc) = self.owners.get(job) {
-                let _ = self.comm.send(
-                    loc.owner,
-                    TAG_CTRL,
-                    FwMsg::FetchResult { job: *job, range: ChunkRange::All, reply_to: me },
-                );
-                expected.insert(*job);
-            }
+            // A final job with no recorded owner was released or never
+            // completed: silently omitting it would hand the caller a
+            // partial result map that looks successful.  Fail loudly.
+            let Some(loc) = self.owners.get(job) else {
+                return Err(Error::ResultNotAvailable(*job));
+            };
+            let _ = self.comm.send(
+                loc.owner,
+                TAG_CTRL,
+                FwMsg::FetchResult { job: *job, range: ChunkRange::All, reply_to: me },
+            );
+            expected.insert(*job);
         }
         let mut out = BTreeMap::new();
         while !expected.is_empty() {
@@ -765,5 +984,62 @@ impl<'a> Master<'a> {
         for &s in &self.cfg.subs {
             let _ = self.comm.send(s, TAG_CTRL, FwMsg::Shutdown);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CostModel, World};
+
+    fn with_master(f: impl FnOnce(&mut Master<'_>)) {
+        let world: World<FwMsg> = World::new(CostModel::default());
+        let mut comm = world.add_rank();
+        let metrics = MetricsCollector::new();
+        let cfg = MasterConfig {
+            subs: vec![],
+            release: ReleasePolicy::AtShutdown,
+            mode: ExecutionMode::Dataflow,
+            prefetch: true,
+        };
+        let mut m = Master::new(&mut comm, cfg, &metrics);
+        f(&mut m);
+    }
+
+    #[test]
+    fn abort_counter_resets_when_a_job_completes() {
+        // A job may abort up to the limit within ONE recovery episode; a
+        // completion wipes the slate so a later, independent episode (the
+        // job re-entered after worker loss) gets the full budget again.
+        with_master(|m| {
+            let job = JobId(1);
+            for _ in 0..MAX_ABORTS_PER_JOB {
+                m.count_abort(job, JobId(2)).expect("within budget");
+            }
+            m.complete_job(job, None, 0);
+            for _ in 0..MAX_ABORTS_PER_JOB {
+                m.count_abort(job, JobId(2))
+                    .expect("budget must reset across completions");
+            }
+            assert!(
+                m.count_abort(job, JobId(2)).is_err(),
+                "limit still enforced within one episode"
+            );
+        });
+    }
+
+    #[test]
+    fn missing_final_result_is_an_error_not_a_partial_map() {
+        // A final-segment job with no owner entry (released / never
+        // completed) must fail the collection loudly instead of silently
+        // returning a partial result map.
+        with_master(|m| {
+            m.segments = vec![vec![JobSpec::new(1, 1, 1), JobSpec::new(2, 1, 1)]];
+            m.produced_in.insert(JobId(1), 0);
+            m.produced_in.insert(JobId(2), 0);
+            // No owners recorded at all: the very first final is missing.
+            let err = m.collect_final_results().unwrap_err();
+            assert!(matches!(err, Error::ResultNotAvailable(JobId(1))));
+        });
     }
 }

@@ -85,6 +85,13 @@ pub enum FwMsg {
     // ------------------------------------------------- master → sub
     /// Execute this job; `sources` locates every referenced result.
     Assign { spec: JobSpec, sources: Vec<SourceLoc> },
+    /// Speculative-prefetch hint (dataflow mode, DESIGN.md §7): `job` is a
+    /// `Waiting` node with all inputs but one materialised and this
+    /// scheduler is its probable assignment target; pull the listed remote
+    /// sources now so the eventual `Assign` finds them warm.  Purely
+    /// advisory — a wrong prediction costs one redundant transfer, never
+    /// correctness.
+    Prefetch { job: JobId, sources: Vec<SourceLoc> },
     /// Free a stored (or kept) result.
     ReleaseResult { job: JobId },
     /// End of run: shut down workers and exit.
@@ -145,6 +152,7 @@ impl WireSize for FwMsg {
             FwMsg::Assign { spec, sources } => {
                 CTRL + spec.inputs.len() * 24 + sources.len() * 24
             }
+            FwMsg::Prefetch { sources, .. } => CTRL + sources.len() * 24,
             FwMsg::Exec(req) => CTRL + req.shipped_bytes(),
             FwMsg::ExecDone { data, injections, .. } => {
                 CTRL + data.as_ref().map_or(0, |d| d.size_bytes())

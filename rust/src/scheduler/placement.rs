@@ -46,6 +46,12 @@ const LOOKAHEAD_DISCOUNT: u64 = 2;
 /// inputs, weigh where its known *successors'* other inputs live (at half
 /// weight), so a chain of ready jobs packs onto the sub-scheduler that
 /// already owns the chain's data instead of ping-ponging between peers.
+///
+/// Doubles as the **speculative-prefetch target predictor** (DESIGN.md
+/// §7): the master evaluates it early — while a job still waits on its
+/// last input — so the hinted scheduler and the eventual assignment
+/// target coincide whenever the intervening completions don't shift the
+/// byte-affinity balance.
 pub fn choose_scheduler_lookahead(
     spec: &JobSpec,
     successors: &[JobSpec],

@@ -78,6 +78,10 @@ pub struct SubScheduler {
     waiting_on: HashMap<JobId, Vec<JobId>>,
     /// Fetches already in flight (dedupe).
     fetch_inflight: HashSet<JobId>,
+    /// Source jobs pulled (or being pulled) because of a master `Prefetch`
+    /// hint — an `Assign` input served from the store against one of these
+    /// counts as a prefetch hit.
+    prefetched: HashSet<JobId>,
     /// Peer `FetchResult`s waiting on a `PullKept` round-trip:
     /// source job → (range, reply_to).
     pending_serves: HashMap<JobId, Vec<(ChunkRange, Rank)>>,
@@ -102,6 +106,7 @@ impl SubScheduler {
             ready: VecDeque::new(),
             waiting_on: HashMap::new(),
             fetch_inflight: HashSet::new(),
+            prefetched: HashSet::new(),
             pending_serves: HashMap::new(),
         }
     }
@@ -135,6 +140,7 @@ impl SubScheduler {
     fn handle(&mut self, from: Rank, msg: FwMsg) -> bool {
         match msg {
             FwMsg::Assign { spec, sources } => self.on_assign(spec, sources),
+            FwMsg::Prefetch { sources, .. } => self.on_prefetch(sources),
             FwMsg::ResultData { job, data } => {
                 self.store.insert_transient(job, data);
                 self.fetch_inflight.remove(&job);
@@ -213,6 +219,13 @@ impl SubScheduler {
                 Some(SourceLoc { owner, .. }) => {
                     // Remote: fetch the full result once, slice locally.
                     if self.store.contains(src) {
+                        if self.prefetched.remove(&src) {
+                            // Warm thanks to a Prefetch hint: the transfer
+                            // overlapped the last producer's execution.
+                            // Counted once — later consumers would have
+                            // been served from the cached copy anyway.
+                            self.metrics.prefetch_hit();
+                        }
                         match self.store.read(src, range) {
                             Ok(data) => PartState::Ready(InputPart::Data(data)),
                             Err(e) => {
@@ -254,6 +267,29 @@ impl SubScheduler {
             self.ready.push_back(job);
         } else {
             self.pending.insert(job, pj);
+        }
+    }
+
+    /// Master prefetch hint: an assignment consuming these sources will
+    /// probably land here — pull what is remote and not already present so
+    /// the `Assign` finds it warm (DESIGN.md §7).  Replies flow through
+    /// the ordinary `ResultData` path; a source that vanished meanwhile
+    /// answers `ResultUnavailable`, which is harmless with no waiter.
+    fn on_prefetch(&mut self, sources: Vec<SourceLoc>) {
+        let me = self.comm.rank();
+        for loc in sources {
+            let src = loc.job;
+            if loc.owner == me || self.store.contains(src) {
+                continue;
+            }
+            if self.fetch_inflight.insert(src) {
+                self.prefetched.insert(src);
+                let _ = self.comm.send(
+                    loc.owner,
+                    TAG_CTRL,
+                    FwMsg::FetchResult { job: src, range: ChunkRange::All, reply_to: me },
+                );
+            }
         }
     }
 
@@ -313,6 +349,7 @@ impl SubScheduler {
 
     fn on_source_lost(&mut self, src: JobId) {
         self.fetch_inflight.remove(&src);
+        self.prefetched.remove(&src);
         let Some(waiters) = self.waiting_on.remove(&src) else { return };
         for dep in waiters {
             if self.pending.remove(&dep).is_some() {
@@ -408,6 +445,7 @@ impl SubScheduler {
     fn on_release(&mut self, job: JobId) {
         self.store.release(job);
         self.store.drop_transient(job);
+        self.prefetched.remove(&job);
         if let Some(w) = self.kept_index.remove(&job) {
             if let Some(entry) = self.workers.get_mut(&w) {
                 entry.kept.remove(&job);

@@ -439,6 +439,218 @@ fn lagged_release_keeps_results_alive_for_injections() {
 }
 
 #[test]
+fn lagged_release_boundary_matches_across_modes() {
+    // Chain J1→J2→J3→J4 (4 segments), lag 2.  R1's last use is segment 1,
+    // so under the unified horizon arithmetic (`last + lag <= horizon`,
+    // DESIGN.md §6) it is freed exactly when the horizon reaches segment 3
+    // — the barrier close of segment 3 / the dataflow frontier arriving
+    // there — and it is the ONLY mid-run release: R2/R3's horizons lie
+    // past the last segment and J4 is final.  Both modes must free at the
+    // same lag distance (the dataflow executor used to be one segment
+    // stricter and would release nothing here).
+    for mode in BOTH_MODES {
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(1, "one", |_in, out| {
+            out.push(DataChunk::scalar_f32(1.0));
+            Ok(())
+        });
+        reg.register_plain(2, "inc", |input, out| {
+            out.push(DataChunk::scalar_f32(input.chunk(0)?.first_f32()? + 1.0));
+            Ok(())
+        });
+        let report = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .execution_mode(mode)
+            .release_policy(ReleasePolicy::Lagged { lag: 2 })
+            .registry(reg)
+            .build()
+            .unwrap()
+            .run(Algorithm::parse("J1(1,1,0); J2(2,1,R1); J3(2,1,R2); J4(2,1,R3);").unwrap())
+            .unwrap();
+        assert_eq!(
+            report.result(4).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+            4.0,
+            "mode {mode}"
+        );
+        assert_eq!(
+            report.metrics.results_released, 1,
+            "mode {mode}: exactly R1 must be freed at lag distance 2"
+        );
+    }
+}
+
+#[test]
+fn unconsumed_result_survives_lag_window_for_injection() {
+    // Satellite regression (ISSUE 2): a result with NO static consumers
+    // used to anchor its barrier release horizon at segment 0 (missing
+    // `last_use` defaulted to 0), so it was freed as soon as `lag`
+    // segments closed — long before an injection referencing it exactly
+    // `lag` segments after its producing segment could run.  The producing
+    // segment must anchor the horizon: the producer executes exactly once.
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    for mode in BOTH_MODES {
+        let produce_calls = Arc::new(AtomicUsize::new(0));
+        let pc = produce_calls.clone();
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(4, "filler", |_in, out| {
+            out.push(DataChunk::scalar_f32(0.0));
+            Ok(())
+        });
+        reg.register_plain(1, "produce", move |_in, out| {
+            pc.fetch_add(1, Ordering::SeqCst);
+            out.push(DataChunk::scalar_f32(21.0));
+            Ok(())
+        });
+        reg.register_with_ctx(2, "injector", |_in, out, ctx| {
+            out.push(DataChunk::scalar_f32(0.0));
+            // Target segment = injector's + 1 = 4; references R1 from
+            // segment 2 — exactly lag = 2 segments back.
+            ctx.inject(
+                1,
+                vec![InjectedJob {
+                    local_id: 0,
+                    func: FuncId(3),
+                    threads: ThreadCount::Exact(1),
+                    inputs: vec![InjectedRef::Existing(ChunkRef::all(JobId(1)))],
+                    keep: false,
+                }],
+            );
+            Ok(())
+        });
+        reg.register_plain(3, "double", |input, out| {
+            out.push(DataChunk::scalar_f32(input.chunk(0)?.first_f32()? * 2.0));
+            Ok(())
+        });
+        // Segments: 0 filler | 1 filler | 2 produce | 3 injector |
+        // 4 filler (+ injected double).  J1's result has no static
+        // consumer at all.
+        let algo = Algorithm::parse(
+            "J8(4,1,0);
+             J9(4,1,0);
+             J1(1,1,0);
+             J2(2,1,0);
+             J3(4,1,0);",
+        )
+        .unwrap();
+        let report = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .execution_mode(mode)
+            .release_policy(ReleasePolicy::Lagged { lag: 2 })
+            .registry(reg)
+            .build()
+            .unwrap()
+            .run(algo)
+            .unwrap();
+        assert_eq!(
+            produce_calls.load(Ordering::SeqCst),
+            1,
+            "mode {mode}: producer recomputed — its unconsumed result was \
+             freed inside the lag window"
+        );
+        // The injected job doubles R1; its id is the first above the
+        // static maximum (10) and it lands in the final segment.
+        let injected = report
+            .result(10)
+            .expect("injected job result in final segment")
+            .chunk(0)
+            .unwrap()
+            .first_f32()
+            .unwrap();
+        assert_eq!(injected, 42.0, "mode {mode}");
+    }
+}
+
+#[test]
+fn speculative_prefetch_warms_remote_inputs() {
+    // J1 (8 KiB) and J2 (6 KiB) land on different schedulers (load
+    // balancing); J3 straggles 120 ms.  J4 = f(R1, R2, R3): once J3 is its
+    // only missing input, the master hints J4's probable target (J1's
+    // owner, by byte affinity) to pull R2 across — by the time J3
+    // finishes, R2 is warm in the target's store and the assignment
+    // reports a prefetch hit.  With the knob off nothing is hinted, and
+    // the computed values are identical either way.
+    let run = |prefetch: bool| {
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(1, "big_a", |_in, out| {
+            out.push(DataChunk::from_f32(vec![1.0; 2048])); // 8 KiB
+            Ok(())
+        });
+        reg.register_plain(2, "big_b", |_in, out| {
+            out.push(DataChunk::from_f32(vec![2.0; 1536])); // 6 KiB
+            Ok(())
+        });
+        reg.register_plain(3, "straggler", |_in, out| {
+            std::thread::sleep(std::time::Duration::from_millis(120));
+            out.push(DataChunk::scalar_f32(3.0));
+            Ok(())
+        });
+        reg.register_plain(4, "join", |input, out| {
+            let mut acc = 0.0f32;
+            for c in input.chunks() {
+                acc += c.as_f32()?.iter().sum::<f32>();
+            }
+            out.push(DataChunk::scalar_f32(acc));
+            Ok(())
+        });
+        Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .cores_per_worker(4)
+            .execution_mode(ExecutionMode::Dataflow)
+            .speculative_prefetch(prefetch)
+            .registry(reg)
+            .build()
+            .unwrap()
+            .run(
+                Algorithm::parse("J1(1,1,0), J2(2,1,0), J3(3,1,0); J4(4,1,R1 R2 R3);")
+                    .unwrap(),
+            )
+            .unwrap()
+    };
+    let on = run(true);
+    let off = run(false);
+    let want = 2048.0 + 2.0 * 1536.0 + 3.0;
+    for (report, label) in [(&on, "on"), (&off, "off")] {
+        assert_eq!(
+            report.result(4).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+            want,
+            "prefetch {label}: values must not depend on the knob"
+        );
+    }
+    assert!(on.metrics.prefetches_sent >= 1, "no prefetch hint sent");
+    assert!(
+        on.metrics.prefetch_hits >= 1,
+        "prefetched input not warm at assignment (sent {})",
+        on.metrics.prefetches_sent
+    );
+    assert_eq!(off.metrics.prefetches_sent, 0, "knob off must disable hints");
+    assert_eq!(off.metrics.prefetch_hits, 0);
+}
+
+#[test]
+fn critical_path_metrics_cover_the_chain() {
+    // A 3-job chain with measurable work: the critical path must span all
+    // three jobs, its ideal equal the summed exec time, and its elapsed at
+    // least that (ready→started→done spans are causally ordered).
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "work", |_in, out| {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        out.push(DataChunk::scalar_f32(1.0));
+        Ok(())
+    });
+    let report = fw(2, 2, reg)
+        .run(Algorithm::parse("J1(1,1,0); J2(1,1,R1); J3(1,1,R2);").unwrap())
+        .unwrap();
+    let cp = report.metrics.critical_path();
+    assert_eq!(cp.jobs, vec![1, 2, 3]);
+    assert!(cp.ideal >= std::time::Duration::from_millis(30), "ideal {:?}", cp.ideal);
+    assert!(cp.elapsed >= cp.ideal, "elapsed {:?} < ideal {:?}", cp.elapsed, cp.ideal);
+}
+
+#[test]
 fn unknown_function_rejected_before_running() {
     let err = fw(1, 1, demo_registry())
         .run(Algorithm::parse("J1(77,1,0);").unwrap())
