@@ -1,0 +1,263 @@
+//! ABL-SEQ: static round-robin chunk split vs chunk-granular work stealing
+//! on the worker sequence pool (DESIGN.md §8 — the intra-node tentpole
+//! ablation).
+//!
+//! Skewed-chunk workload: one emitter publishes `JOBS * CHUNKS` chunks
+//! whose first element encodes the chunk's cost in milliseconds; each
+//! consumer job maps `CHUNKS` of them through a sleep-then-transform
+//! per-chunk function on a single `cores`-sequence worker.  Every job has
+//! exactly **one heavy chunk** (`HEAVY_MS`) among light ones (`LIGHT_MS`),
+//! rotating across the first `cores` chunk slots — so under the static
+//! split the heavy chunk's owning sequence always serialises the job's
+//! tail behind it, while stealing lets the idle sequences drain the
+//! owner's remaining lights.
+//!
+//! Model (cores=4, CHUNKS=32, heavy 20 ms, light 2 ms): static ≈
+//! `heavy + 7·light` = 34 ms per job; stealing ≈ `max(heavy,
+//! 31·light/3)` ≈ 21 ms — a ~1.6× speedup against the 1.4× acceptance
+//! bar, with identical output values in both configurations.
+//!
+//! ```text
+//! cargo bench --bench abl_sequences
+//! # env knobs:
+//! #   HYPAR_SEQ_JOBS=6  HYPAR_SEQ_CHUNKS=32  HYPAR_SEQ_CORES=4
+//! #   HYPAR_SEQ_HEAVY_MS=20  HYPAR_SEQ_LIGHT_MS=2
+//! #   HYPAR_SEQ_JSON=BENCH_sequences.json
+//! #   HYPAR_BENCH_REPS=5  HYPAR_BENCH_WARMUP=1
+//! #   HYPAR_BENCH_SMOKE=1   (tiny sizes, perf assertions skipped)
+//! ```
+
+use hypar::prelude::*;
+use hypar::util::bench::{Bench, Report};
+use hypar::util::json::Json;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Shape {
+    jobs: usize,
+    chunks: usize,
+    cores: usize,
+    heavy_ms: usize,
+    light_ms: usize,
+}
+
+/// Emitter: `jobs * chunks` cost-tagged chunks; job `j` consumes the slice
+/// `[j*chunks, (j+1)*chunks)` and finds its heavy chunk at in-job index
+/// `j % cores` — always the front of its owning sequence's deque, so both
+/// split policies start it immediately and the difference measured is
+/// purely who runs the remaining lights.
+fn registry(s: &Shape) -> FunctionRegistry {
+    let (jobs, chunks, cores) = (s.jobs, s.chunks, s.cores);
+    let (heavy, light) = (s.heavy_ms as f32, s.light_ms as f32);
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "emit_skewed", move |_in, out| {
+        for j in 0..jobs {
+            for c in 0..chunks {
+                let ms = if c == j % cores { heavy } else { light };
+                // [cost_ms, payload...] — 8 elements so the transform has
+                // real data to touch.
+                let mut v = vec![ms];
+                v.extend((0..7).map(|i| (j * chunks + c) as f32 + i as f32 * 0.125));
+                out.push(DataChunk::from_f32(v));
+            }
+        }
+        Ok(())
+    });
+    reg.register_per_chunk_try(2, "sleep_transform", |c| {
+        let v = c.as_f32()?;
+        let ms = v.first().copied().unwrap_or(0.0);
+        std::thread::sleep(std::time::Duration::from_micros((ms * 1000.0) as u64));
+        Ok(DataChunk::from_f32(v.iter().map(|x| x * 2.0 + 1.0).collect()))
+    });
+    reg
+}
+
+/// Segment 1: the emitter.  Segment 2: one whole-node consumer per job
+/// (threads=0 → Auto), serialised on the single worker so wall time is the
+/// sum of per-job makespans — exactly the intra-node quantity under test.
+fn algorithm(s: &Shape) -> Algorithm {
+    let mut b = Algorithm::builder();
+    b = b.segment(vec![JobSpec::new(1, 1, 1)]);
+    let consumers = (0..s.jobs)
+        .map(|j| {
+            JobSpec::new((j + 2) as u32, 2, 0).with_inputs(vec![ChunkRef::slice(
+                JobId(1),
+                j * s.chunks,
+                (j + 1) * s.chunks,
+            )])
+        })
+        .collect();
+    b = b.segment(consumers);
+    b.build().expect("valid skewed-chunk algorithm")
+}
+
+fn run_once(s: &Shape, work_stealing: bool) -> RunReport {
+    let fw = Framework::builder()
+        .schedulers(1)
+        .workers_per_scheduler(1)
+        .cores_per_worker(s.cores)
+        .work_stealing(work_stealing)
+        .registry(registry(s))
+        .build()
+        .expect("framework build");
+    fw.run(algorithm(s)).expect("skewed-chunk run")
+}
+
+/// Deterministically ordered digest of the final-segment values.
+fn digest(report: &RunReport) -> Vec<(u32, Vec<f32>)> {
+    report
+        .results
+        .iter()
+        .map(|(id, data)| {
+            let vals: Vec<f32> = data
+                .chunks()
+                .iter()
+                .flat_map(|c| c.as_f32().unwrap().iter().copied())
+                .collect();
+            (id.0, vals)
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::var("HYPAR_BENCH_SMOKE").is_ok();
+    let shape = if smoke {
+        Shape {
+            jobs: env_usize("HYPAR_SEQ_JOBS", 2),
+            chunks: env_usize("HYPAR_SEQ_CHUNKS", 8),
+            cores: env_usize("HYPAR_SEQ_CORES", 4),
+            heavy_ms: env_usize("HYPAR_SEQ_HEAVY_MS", 2),
+            light_ms: env_usize("HYPAR_SEQ_LIGHT_MS", 1),
+        }
+    } else {
+        Shape {
+            jobs: env_usize("HYPAR_SEQ_JOBS", 6),
+            chunks: env_usize("HYPAR_SEQ_CHUNKS", 32),
+            cores: env_usize("HYPAR_SEQ_CORES", 4),
+            heavy_ms: env_usize("HYPAR_SEQ_HEAVY_MS", 20),
+            light_ms: env_usize("HYPAR_SEQ_LIGHT_MS", 2),
+        }
+    };
+    // Reps/warmup stay env-driven in smoke mode too (CI pins them to 1/0);
+    // smoke only shrinks the shape and skips the perf gates.
+    let bench = Bench::default();
+
+    println!(
+        "ABL-SEQ: {} jobs x {} chunks on {} sequences, heavy {} ms / light {} ms, \
+         reps {}{}",
+        shape.jobs,
+        shape.chunks,
+        shape.cores,
+        shape.heavy_ms,
+        shape.light_ms,
+        bench.reps,
+        if smoke { " [SMOKE: no perf assertions]" } else { "" }
+    );
+
+    let mut report = Report::new("abl_sequences: static split vs work stealing");
+    let mut digests: (Option<Vec<(u32, Vec<f32>)>>, Option<Vec<(u32, Vec<f32>)>>) =
+        (None, None);
+    let mut static_imbalance = 0.0f64;
+    let mut steal_imbalance = 0.0f64;
+    let mut steals = 0u64;
+    let mut static_steals = u64::MAX;
+    let mut json_keys_ok = false;
+
+    let m_static = bench.measure("sequences/static", || {
+        let r = run_once(&shape, false);
+        static_imbalance = r.metrics.mean_imbalance();
+        static_steals = r.metrics.seq_steals;
+        digests.0 = Some(digest(&r));
+    });
+    let m_steal = bench.measure("sequences/stealing", || {
+        let r = run_once(&shape, true);
+        steal_imbalance = r.metrics.mean_imbalance();
+        steals = r.metrics.seq_steals;
+        // Acceptance: the imbalance/steal counters must be part of the
+        // serialised snapshot, not just the struct.
+        let doc = hypar::util::json::parse(&r.metrics.to_json().to_string())
+            .expect("snapshot json parses");
+        json_keys_ok = doc.get("seq_steals").is_some()
+            && doc.get("mean_imbalance").is_some()
+            && doc.get("max_imbalance").is_some();
+        digests.1 = Some(digest(&r));
+    });
+    report.add(m_static.clone());
+    report.add(m_steal.clone());
+    report.finish();
+
+    let speedup = m_static.mean.as_secs_f64() / m_steal.mean.as_secs_f64();
+    let identical = digests.0 == digests.1;
+    println!(
+        "\nstealing speedup {speedup:.2}x over static split \
+         (imbalance {static_imbalance:.2} -> {steal_imbalance:.2}, {steals} steals)"
+    );
+
+    // Machine-readable perf-trajectory row.
+    let out_path = std::env::var("HYPAR_SEQ_JSON")
+        .unwrap_or_else(|_| "BENCH_sequences.json".to_string());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("abl_sequences".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("jobs", Json::num(shape.jobs as f64)),
+        ("chunks", Json::num(shape.chunks as f64)),
+        ("cores", Json::num(shape.cores as f64)),
+        ("heavy_ms", Json::num(shape.heavy_ms as f64)),
+        ("light_ms", Json::num(shape.light_ms as f64)),
+        ("reps", Json::num(bench.reps as f64)),
+        ("static_mean_ms", Json::num(m_static.mean_ms())),
+        ("stealing_mean_ms", Json::num(m_steal.mean_ms())),
+        ("speedup", Json::num(speedup)),
+        ("steals", Json::num(steals as f64)),
+        ("static_imbalance", Json::num(static_imbalance)),
+        ("stealing_imbalance", Json::num(steal_imbalance)),
+        ("identical_values", Json::Bool(identical)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string_pretty(2)) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+
+    // Correctness gates hold even in smoke mode; perf gates only in a
+    // full run.
+    let mut pass = true;
+    if !identical {
+        println!("ACCEPTANCE FAIL: static and stealing values differ");
+        pass = false;
+    }
+    if static_steals != 0 {
+        println!("ACCEPTANCE FAIL: static split recorded {static_steals} steals");
+        pass = false;
+    }
+    if !json_keys_ok {
+        println!("ACCEPTANCE FAIL: steal/imbalance metrics missing from to_json");
+        pass = false;
+    }
+    if !smoke {
+        if speedup < 1.4 {
+            println!("ACCEPTANCE FAIL: stealing only {speedup:.2}x over the static split");
+            pass = false;
+        }
+        if steals == 0 {
+            println!("ACCEPTANCE FAIL: stealing run recorded zero steals");
+            pass = false;
+        }
+        if steal_imbalance >= static_imbalance {
+            println!(
+                "ACCEPTANCE FAIL: stealing did not reduce imbalance \
+                 ({static_imbalance:.2} -> {steal_imbalance:.2})"
+            );
+            pass = false;
+        }
+    }
+    if pass {
+        println!(
+            "ACCEPTANCE PASS: {}identical values, static split steal-free",
+            if smoke { "(smoke) " } else { ">= 1.4x, steals > 0, " }
+        );
+    } else {
+        std::process::exit(1);
+    }
+}

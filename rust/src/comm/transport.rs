@@ -13,8 +13,8 @@
 //! collectives in program order).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -26,9 +26,42 @@ use crate::error::{Error, Result};
 
 struct WorldInner<M> {
     mailboxes: RwLock<HashMap<Rank, Sender<Envelope<M>>>>,
+    /// Bumped on every rank removal; send-side caches revalidate against
+    /// it so sends to deregistered ranks keep failing fast.
+    epoch: AtomicU64,
     next_rank: AtomicU32,
     cost: CostModel,
     stats: CommStats,
+}
+
+impl<M> WorldInner<M> {
+    fn remove(&self, rank: Rank) {
+        self.mailboxes
+            .write()
+            .expect("mailbox lock poisoned")
+            .remove(&rank);
+        // Release-ordered after the map write so a sender that observes
+        // the new epoch also observes the removal.
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// Per-endpoint cache of destination mailbox handles: the hot send path
+/// clones each destination's `Sender` once and skips the registry
+/// `RwLock` read on every subsequent message.  Invalidated wholesale when
+/// any rank deregisters (world epoch bump) and on send failure (receiver
+/// endpoint dropped), preserving `RankUnreachable` fail-fast semantics
+/// for crashed workers.  Uncontended: caches are per `Comm`/`CommSender`
+/// instance and clones get a fresh one.
+struct SendCache<M> {
+    epoch: u64,
+    map: HashMap<Rank, Sender<Envelope<M>>>,
+}
+
+impl<M> SendCache<M> {
+    fn fresh() -> Mutex<SendCache<M>> {
+        Mutex::new(SendCache { epoch: 0, map: HashMap::new() })
+    }
 }
 
 /// The communication universe: rank registry + cost model + stats.
@@ -50,6 +83,7 @@ impl<M: Send + WireSize + 'static> World<M> {
         World {
             inner: Arc::new(WorldInner {
                 mailboxes: RwLock::new(HashMap::new()),
+                epoch: AtomicU64::new(0),
                 next_rank: AtomicU32::new(0),
                 cost,
                 stats: CommStats::default(),
@@ -68,18 +102,20 @@ impl<M: Send + WireSize + 'static> World<M> {
             .write()
             .expect("mailbox lock poisoned")
             .insert(rank, tx);
-        Comm { rank, world: self.inner.clone(), rx, pending: VecDeque::new() }
+        Comm {
+            rank,
+            world: self.inner.clone(),
+            rx,
+            pending: VecDeque::new(),
+            cache: SendCache::fresh(),
+        }
     }
 
     /// Make a rank unreachable: subsequent sends to it fail with
     /// [`Error::RankUnreachable`].  Used on clean worker shutdown and by
     /// the fault injector to simulate a crashed node.
     pub fn remove_rank(&self, rank: Rank) {
-        self.inner
-            .mailboxes
-            .write()
-            .expect("mailbox lock poisoned")
-            .remove(&rank);
+        self.inner.remove(rank);
     }
 
     /// Is the rank currently reachable?
@@ -108,37 +144,59 @@ impl<M: Send + WireSize + 'static> World<M> {
     /// A free-standing send handle not tied to any rank (rank is encoded
     /// per send call as `src`). Used by the framework driver thread.
     pub fn sender_for(&self, src: Rank) -> CommSender<M> {
-        CommSender { src, world: self.inner.clone() }
+        CommSender { src, world: self.inner.clone(), cache: SendCache::fresh() }
     }
 }
 
 fn deliver<M: WireSize>(
     inner: &WorldInner<M>,
+    cache: &Mutex<SendCache<M>>,
     env: Envelope<M>,
 ) -> Result<()> {
     let bytes = env.wire_size();
     let dst = env.dst;
     let local = env.src == dst;
-    let guard = inner.mailboxes.read().expect("mailbox lock poisoned");
-    let tx = guard.get(&dst).ok_or(Error::RankUnreachable(dst))?;
+    let mut cache = cache.lock().expect("send cache poisoned");
+    let now = inner.epoch.load(Ordering::Acquire);
+    if cache.epoch != now {
+        // A rank deregistered since the last send from this endpoint:
+        // drop every cached handle so removed ranks fail fast again.
+        cache.map.clear();
+        cache.epoch = now;
+    }
+    if !cache.map.contains_key(&dst) {
+        let guard = inner.mailboxes.read().expect("mailbox lock poisoned");
+        let tx = guard.get(&dst).ok_or(Error::RankUnreachable(dst))?.clone();
+        drop(guard);
+        cache.map.insert(dst, tx);
+    }
+    let tx = cache.map.get(&dst).expect("just ensured");
     // Account (and possibly sleep) *before* enqueuing, modelling the wire.
     // Self-sends are process-local (a worker depositing into its own cache)
     // and never touch the interconnect — no charge.
     if !local {
         inner.cost.on_send(bytes, &inner.stats);
     }
-    tx.send(env).map_err(|_| Error::RankUnreachable(dst))
+    if tx.send(env).is_err() {
+        // Receiver endpoint dropped (rank died without deregistering).
+        cache.map.remove(&dst);
+        return Err(Error::RankUnreachable(dst));
+    }
+    Ok(())
 }
 
 /// Cloneable, `Send` send-only handle bound to a source rank.
 pub struct CommSender<M> {
     src: Rank,
     world: Arc<WorldInner<M>>,
+    cache: Mutex<SendCache<M>>,
 }
 
 impl<M> Clone for CommSender<M> {
     fn clone(&self) -> Self {
-        CommSender { src: self.src, world: self.world.clone() }
+        // Fresh cache: clones live on other threads; sharing would only
+        // serialise their sends on one mutex.
+        CommSender { src: self.src, world: self.world.clone(), cache: SendCache::fresh() }
     }
 }
 
@@ -150,6 +208,7 @@ impl<M: Send + WireSize + 'static> CommSender<M> {
     pub fn send(&self, dst: Rank, tag: Tag, msg: M) -> Result<()> {
         deliver(
             &self.world,
+            &self.cache,
             Envelope { src: self.src, dst, tag, payload: Inner::User(msg) },
         )
     }
@@ -162,6 +221,8 @@ pub struct Comm<M> {
     rx: Receiver<Envelope<M>>,
     /// Out-of-order buffer for matched receives.
     pending: VecDeque<Envelope<M>>,
+    /// Destination-sender cache for the hot send path.
+    cache: Mutex<SendCache<M>>,
 }
 
 /// Receive filter: `None` = wildcard (MPI_ANY_SOURCE / MPI_ANY_TAG).
@@ -198,12 +259,13 @@ impl<M: Send + WireSize + 'static> Comm<M> {
 
     /// Cloneable send-only handle stamped with this rank as source.
     pub fn sender(&self) -> CommSender<M> {
-        CommSender { src: self.rank, world: self.world.clone() }
+        CommSender { src: self.rank, world: self.world.clone(), cache: SendCache::fresh() }
     }
 
     pub fn send(&self, dst: Rank, tag: Tag, msg: M) -> Result<()> {
         deliver(
             &self.world,
+            &self.cache,
             Envelope { src: self.rank, dst, tag, payload: Inner::User(msg) },
         )
     }
@@ -269,6 +331,7 @@ impl<M: Send + WireSize + 'static> Comm<M> {
         debug_assert!(tag.is_collective());
         deliver(
             &self.world,
+            &self.cache,
             Envelope { src: self.rank, dst, tag, payload: Inner::Coll(payload) },
         )
     }
@@ -304,22 +367,14 @@ impl<M: Send + WireSize + 'static> Comm<M> {
     /// Deregister this rank (future sends to it fail) without dropping the
     /// endpoint. Used by workers that announce clean shutdown first.
     pub fn deregister(&self) {
-        self.world
-            .mailboxes
-            .write()
-            .expect("mailbox lock poisoned")
-            .remove(&self.rank);
+        self.world.remove(self.rank);
     }
 }
 
 impl<M> Drop for Comm<M> {
     fn drop(&mut self) {
         // Fail-fast for anyone still holding our rank.
-        self.world
-            .mailboxes
-            .write()
-            .expect("mailbox lock poisoned")
-            .remove(&self.rank);
+        self.world.remove(self.rank);
     }
 }
 
@@ -384,6 +439,58 @@ mod tests {
             Err(Error::RankUnreachable(r)) => assert_eq!(r, b_rank),
             other => panic!("expected RankUnreachable, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn cached_sender_fails_fast_after_rank_drop() {
+        let w = W::new(CostModel::free());
+        let a = w.add_rank();
+        let mut b = w.add_rank();
+        let b_rank = b.rank();
+        // Warm a's cache for b, then kill b.
+        a.send(b_rank, Tag(0), vec![1]).unwrap();
+        b.recv().unwrap();
+        drop(b);
+        match a.send(b_rank, Tag(0), vec![2]) {
+            Err(Error::RankUnreachable(r)) => assert_eq!(r, b_rank),
+            other => panic!("expected RankUnreachable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cached_sender_respects_deregistration() {
+        // deregister() removes the rank while its endpoint stays alive —
+        // the epoch bump must invalidate warm caches, not just dropped
+        // channels.
+        let w = W::new(CostModel::free());
+        let a = w.add_rank();
+        let mut b = w.add_rank();
+        let b_rank = b.rank();
+        a.send(b_rank, Tag(0), vec![1]).unwrap();
+        b.recv().unwrap();
+        b.deregister();
+        match a.send(b_rank, Tag(0), vec![2]) {
+            Err(Error::RankUnreachable(r)) => assert_eq!(r, b_rank),
+            other => panic!("expected RankUnreachable, got {other:?}"),
+        }
+        // A third rank registered after the bump is still reachable.
+        let mut c = w.add_rank();
+        a.send(c.rank(), Tag(1), vec![3]).unwrap();
+        assert_eq!(c.recv().unwrap().into_user(), vec![3]);
+    }
+
+    #[test]
+    fn cache_survives_many_sends_with_stable_stats() {
+        let w = W::new(CostModel::free());
+        let a = w.add_rank();
+        let mut b = w.add_rank();
+        for i in 0..100u8 {
+            a.send(b.rank(), Tag(0), vec![i]).unwrap();
+        }
+        for i in 0..100u8 {
+            assert_eq!(b.recv().unwrap().into_user(), vec![i]);
+        }
+        assert_eq!(w.stats().msgs, 100);
     }
 
     #[test]

@@ -18,7 +18,9 @@
 //!   "cost_model": {"alpha_us": 2.0, "bandwidth_gbps": 10.0, "simulate": false},
 //!   "engine": {"artifact_dir": "artifacts", "variant": "ref"},
 //!   "execution_mode": "dataflow",
-//!   "speculative_prefetch": true
+//!   "speculative_prefetch": true,
+//!   "work_stealing": true,
+//!   "steal_granularity": 1
 //! }
 //! ```
 
@@ -140,6 +142,14 @@ pub struct TopologyConfig {
     /// still runs.  On by default; purely a transfer/latency trade — never
     /// affects computed values.
     pub speculative_prefetch: bool,
+    /// Chunk-granular work stealing on the worker sequence pool
+    /// (DESIGN.md §8).  On by default; off reverts to the paper's static
+    /// round-robin chunk split (byte-identical results either way — only
+    /// where and when chunks execute changes).
+    pub work_stealing: bool,
+    /// Chunks taken per steal operation (>= 1).  1 = finest-grained
+    /// balancing; larger values amortise deque locking for tiny chunks.
+    pub steal_granularity: usize,
 }
 
 impl Default for TopologyConfig {
@@ -154,6 +164,8 @@ impl Default for TopologyConfig {
             engine: None,
             execution_mode: ExecutionMode::default(),
             speculative_prefetch: true,
+            work_stealing: true,
+            steal_granularity: 1,
         }
     }
 }
@@ -210,6 +222,12 @@ impl TopologyConfig {
                 Error::Config("speculative_prefetch must be a bool".into())
             })?;
         }
+        if let Some(v) = doc.get("work_stealing") {
+            cfg.work_stealing = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("work_stealing must be a bool".into()))?;
+        }
+        cfg.steal_granularity = get_usize("steal_granularity", cfg.steal_granularity)?;
         if let Some(e) = doc.get("engine") {
             if *e != Json::Null {
                 let dir = e
@@ -242,6 +260,11 @@ impl TopologyConfig {
                 Json::str(self.execution_mode.as_str().to_string()),
             ),
             ("speculative_prefetch", Json::Bool(self.speculative_prefetch)),
+            ("work_stealing", Json::Bool(self.work_stealing)),
+            (
+                "steal_granularity",
+                Json::num(self.steal_granularity as f64),
+            ),
             (
                 "cost_model",
                 Json::obj(vec![
@@ -275,6 +298,9 @@ impl TopologyConfig {
         }
         if self.cores_per_worker == 0 {
             return Err(Error::Config("cores_per_worker must be >= 1".into()));
+        }
+        if self.steal_granularity == 0 {
+            return Err(Error::Config("steal_granularity must be >= 1".into()));
         }
         if let Some(e) = &self.engine {
             if e.variant != "pallas" && e.variant != "ref" {
@@ -329,6 +355,32 @@ mod tests {
         assert!(
             TopologyConfig::from_json_text(r#"{"speculative_prefetch": "yes"}"#).is_err()
         );
+    }
+
+    #[test]
+    fn work_stealing_parses_and_roundtrips() {
+        let d = TopologyConfig::default();
+        assert!(d.work_stealing, "on by default");
+        assert_eq!(d.steal_granularity, 1);
+        let cfg = TopologyConfig::from_json_text(
+            r#"{"work_stealing": false, "steal_granularity": 3}"#,
+        )
+        .unwrap();
+        assert!(!cfg.work_stealing);
+        assert_eq!(cfg.steal_granularity, 3);
+        let back = TopologyConfig::from_json_text(&cfg.to_json()).unwrap();
+        assert!(!back.work_stealing);
+        assert_eq!(back.steal_granularity, 3);
+        assert!(TopologyConfig::from_json_text(r#"{"work_stealing": 1}"#).is_err());
+        assert!(
+            TopologyConfig::from_json_text(r#"{"steal_granularity": "lots"}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn zero_steal_granularity_rejected() {
+        let cfg = TopologyConfig { steal_granularity: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

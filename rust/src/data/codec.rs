@@ -12,6 +12,11 @@
 //! [`crate::comm::WireSize`] accounting matches what `encode` produces
 //! (± the fixed header), so cost-model numbers stay meaningful if the
 //! transport is swapped for a real network.
+//!
+//! Numeric payloads move as whole slices on little-endian hosts (one
+//! `memcpy` per chunk instead of a per-element `to_le_bytes` loop); the
+//! portable per-element path remains as the big-endian fallback and the
+//! roundtrip property tests pin both to the same wire bytes.
 
 use super::chunk::{DataChunk, Dtype};
 use super::function_data::FunctionData;
@@ -40,32 +45,72 @@ fn tag_dtype(t: u8) -> Result<Dtype> {
     })
 }
 
+/// Reinterpret a numeric slice as its raw bytes (native endianness).
+///
+/// Sound for the primitive element types used here: they have no padding,
+/// `size_of_val` gives the exact byte length, and `u8` has alignment 1.
+#[cfg(target_endian = "little")]
+fn native_bytes<T: Copy>(s: &[T]) -> &[u8] {
+    // SAFETY: see above — primitive numeric `T`, exact length, align 1.
+    unsafe { std::slice::from_raw_parts(s.as_ptr().cast::<u8>(), std::mem::size_of_val(s)) }
+}
+
+/// Append a numeric slice in wire (little-endian) order: one bulk
+/// `memcpy` on LE hosts, the portable per-element loop elsewhere.
+macro_rules! put_le_slice {
+    ($out:expr, $slice:expr) => {{
+        #[cfg(target_endian = "little")]
+        $out.extend_from_slice(native_bytes($slice));
+        #[cfg(not(target_endian = "little"))]
+        for v in $slice {
+            $out.extend_from_slice(&v.to_le_bytes());
+        }
+    }};
+}
+
+/// Decode `raw` (validated length) into a numeric vector: bulk byte copy
+/// on LE hosts (unaligned-safe: the copy is byte-wise into a fresh,
+/// properly aligned allocation, and every bit pattern is a valid value),
+/// per-element `from_le_bytes` elsewhere.
+macro_rules! get_le_vec {
+    ($raw:expr, $ty:ty) => {{
+        let raw: &[u8] = $raw;
+        #[cfg(target_endian = "little")]
+        let v = {
+            let n = raw.len() / std::mem::size_of::<$ty>();
+            let mut v: Vec<$ty> = Vec::with_capacity(n);
+            // SAFETY: the reservation holds exactly `n` elements and the
+            // source is exactly `n * size_of::<$ty>()` bytes (the caller
+            // took a length-checked slice).
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    v.as_mut_ptr().cast::<u8>(),
+                    n * std::mem::size_of::<$ty>(),
+                );
+                v.set_len(n);
+            }
+            v
+        };
+        #[cfg(not(target_endian = "little"))]
+        let v = raw
+            .chunks_exact(std::mem::size_of::<$ty>())
+            .map(|b| <$ty>::from_le_bytes(b.try_into().expect("exact chunk")))
+            .collect::<Vec<$ty>>();
+        v
+    }};
+}
+
 /// Append one chunk to `out`.
 pub fn encode_chunk(chunk: &DataChunk, out: &mut Vec<u8>) {
     out.push(dtype_tag(chunk.dtype()));
     out.extend_from_slice(&(chunk.len() as u64).to_le_bytes());
     match chunk.dtype() {
         Dtype::U8 => out.extend_from_slice(chunk.as_u8().expect("dtype checked")),
-        Dtype::I32 => {
-            for v in chunk.as_i32().expect("dtype checked") {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-        }
-        Dtype::I64 => {
-            for v in chunk.as_i64().expect("dtype checked") {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-        }
-        Dtype::F32 => {
-            for v in chunk.as_f32().expect("dtype checked") {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-        }
-        Dtype::F64 => {
-            for v in chunk.as_f64().expect("dtype checked") {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
-        }
+        Dtype::I32 => put_le_slice!(out, chunk.as_i32().expect("dtype checked")),
+        Dtype::I64 => put_le_slice!(out, chunk.as_i64().expect("dtype checked")),
+        Dtype::F32 => put_le_slice!(out, chunk.as_f32().expect("dtype checked")),
+        Dtype::F64 => put_le_slice!(out, chunk.as_f64().expect("dtype checked")),
     }
 }
 
@@ -108,38 +153,10 @@ fn decode_chunk_at(r: &mut Reader) -> Result<DataChunk> {
     }
     Ok(match dtype {
         Dtype::U8 => DataChunk::from_u8(r.take(len)?.to_vec()),
-        Dtype::I32 => {
-            let raw = r.take(len * 4)?;
-            DataChunk::from_i32(
-                raw.chunks_exact(4)
-                    .map(|b| i32::from_le_bytes(b.try_into().expect("4")))
-                    .collect(),
-            )
-        }
-        Dtype::I64 => {
-            let raw = r.take(len * 8)?;
-            DataChunk::from_i64(
-                raw.chunks_exact(8)
-                    .map(|b| i64::from_le_bytes(b.try_into().expect("8")))
-                    .collect(),
-            )
-        }
-        Dtype::F32 => {
-            let raw = r.take(len * 4)?;
-            DataChunk::from_f32(
-                raw.chunks_exact(4)
-                    .map(|b| f32::from_le_bytes(b.try_into().expect("4")))
-                    .collect(),
-            )
-        }
-        Dtype::F64 => {
-            let raw = r.take(len * 8)?;
-            DataChunk::from_f64(
-                raw.chunks_exact(8)
-                    .map(|b| f64::from_le_bytes(b.try_into().expect("8")))
-                    .collect(),
-            )
-        }
+        Dtype::I32 => DataChunk::from_i32(get_le_vec!(r.take(len * 4)?, i32)),
+        Dtype::I64 => DataChunk::from_i64(get_le_vec!(r.take(len * 8)?, i64)),
+        Dtype::F32 => DataChunk::from_f32(get_le_vec!(r.take(len * 4)?, f32)),
+        Dtype::F64 => DataChunk::from_f64(get_le_vec!(r.take(len * 8)?, f64)),
     })
 }
 

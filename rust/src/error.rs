@@ -79,6 +79,12 @@ pub enum Error {
     NoEngine,
 
     // ------------------------------------------------------------- fault
+    #[error("user function panicked: {0}")]
+    UserPanic(String),
+
+    #[error("sequence failed on chunk {index}: {msg}")]
+    Sequence { index: usize, msg: String },
+
     #[error("worker {worker:?} lost; {jobs} retained job result(s) must be recomputed")]
     WorkerLost { worker: Rank, jobs: usize },
 

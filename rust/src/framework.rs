@@ -127,6 +127,9 @@ impl Framework {
             registry: self.registry.clone(),
             engine_factory: self.engine_factory.clone(),
             fault: self.fault.clone(),
+            work_stealing: self.cfg.work_stealing,
+            steal_granularity: self.cfg.steal_granularity,
+            metrics: Some(metrics.clone()),
         };
         let subs: Vec<SubHandle> = (0..self.cfg.schedulers)
             .map(|_| {
@@ -263,6 +266,22 @@ impl FrameworkBuilder {
     /// only where and when bytes move.
     pub fn speculative_prefetch(mut self, on: bool) -> Self {
         self.cfg.speculative_prefetch = on;
+        self
+    }
+
+    /// Chunk-granular work stealing on the worker sequence pools
+    /// (default: on; DESIGN.md §8).  Off reverts to the paper's static
+    /// round-robin chunk split.  Values are identical either way — only
+    /// where and when chunks execute changes.
+    pub fn work_stealing(mut self, on: bool) -> Self {
+        self.cfg.work_stealing = on;
+        self
+    }
+
+    /// Chunks taken per steal operation (>= 1, default 1).  Raise it to
+    /// amortise deque locking when jobs have very many tiny chunks.
+    pub fn steal_granularity(mut self, chunks: usize) -> Self {
+        self.cfg.steal_granularity = chunks;
         self
     }
 

@@ -32,7 +32,9 @@
 //! substrate with ranks, tags, blocking matched receives, collectives and
 //! an α/β communication cost model, so the framework logic is written
 //! exactly as it would be against MPI.  The "OpenMP" underneath is
-//! [`worker::pool`] — fork-join sequence execution inside a worker.
+//! [`worker::pool`] — a persistent per-worker sequence pool with
+//! chunk-granular work stealing (static round-robin split available via
+//! the `work_stealing` knob).
 //!
 //! Numeric hot-spots execute as AOT-compiled XLA programs (JAX + Pallas at
 //! build time → HLO text → [`runtime`] via PJRT); python is never on the

@@ -92,6 +92,22 @@ pub struct MetricsSnapshot {
     /// Assignment inputs found already materialised in the target
     /// scheduler's store thanks to a prefetch hint.
     pub prefetch_hits: usize,
+    /// Chunks (or packed plain tasks) obtained by work stealing across all
+    /// worker sequence pools (DESIGN.md §8).
+    pub seq_steals: u64,
+    /// Microseconds sequence threads spent executing tasks, summed over
+    /// all pools.
+    pub seq_busy_us: u64,
+    /// Microseconds sequence threads spent parked or scanning, summed.
+    pub seq_idle_us: u64,
+    /// Jobs completed on worker sequence pools (chunk fan-outs; the
+    /// denominator of [`Self::mean_imbalance`]).
+    pub pool_jobs: usize,
+    /// Sum of per-job imbalance ratios (busiest participating sequence's
+    /// time over the mean participant's time; 1.0 = perfectly balanced).
+    pub imbalance_sum: f64,
+    /// Worst per-job imbalance ratio observed.
+    pub imbalance_max: f64,
 }
 
 /// One dependency chain through the executed DAG (see
@@ -222,6 +238,16 @@ impl MetricsSnapshot {
             .collect()
     }
 
+    /// Mean per-job sequence imbalance ratio (1.0 = every participating
+    /// sequence was busy equally long; the static split on skewed chunks
+    /// trends towards the dealing width).
+    pub fn mean_imbalance(&self) -> f64 {
+        if self.pool_jobs == 0 {
+            return 1.0;
+        }
+        self.imbalance_sum / self.pool_jobs as f64
+    }
+
     /// Wall time not explained by the per-worker serialised compute:
     /// `wall - total_exec/workers` (coarse but comparable across configs).
     pub fn scheduling_overhead(&self) -> Duration {
@@ -263,6 +289,12 @@ impl MetricsSnapshot {
             ("results_released", Json::num(self.results_released as f64)),
             ("prefetches_sent", Json::num(self.prefetches_sent as f64)),
             ("prefetch_hits", Json::num(self.prefetch_hits as f64)),
+            ("seq_steals", Json::num(self.seq_steals as f64)),
+            ("seq_busy_us", Json::num(self.seq_busy_us as f64)),
+            ("seq_idle_us", Json::num(self.seq_idle_us as f64)),
+            ("pool_jobs", Json::num(self.pool_jobs as f64)),
+            ("mean_imbalance", Json::num(self.mean_imbalance())),
+            ("max_imbalance", Json::num(self.imbalance_max)),
             ("critical_path_jobs", Json::num(cp.jobs.len() as f64)),
             (
                 "critical_path_elapsed_us",
@@ -474,6 +506,27 @@ impl MetricsCollector {
         self.with(|m| m.prefetch_hits += 1);
     }
 
+    /// A sequence-pool chunk job finished; `imbalance` is its busiest
+    /// participant's time over the mean participant's time.
+    pub fn pool_job_finished(&self, imbalance: f64) {
+        self.with(|m| {
+            m.pool_jobs += 1;
+            m.imbalance_sum += imbalance;
+            if imbalance > m.imbalance_max {
+                m.imbalance_max = imbalance;
+            }
+        });
+    }
+
+    /// A worker's sequence pool shut down: fold in its lifetime counters.
+    pub fn pool_flush(&self, steals: u64, busy_us: u64, idle_us: u64) {
+        self.with(|m| {
+            m.seq_steals += steals;
+            m.seq_busy_us += busy_us;
+            m.seq_idle_us += idle_us;
+        });
+    }
+
     /// Fold in the comm totals and wall time, producing the final snapshot.
     pub fn finish(&self, comm: StatsSnapshot) -> MetricsSnapshot {
         let wall = self.now_us();
@@ -588,6 +641,33 @@ mod tests {
         let all = snap.critical_paths();
         assert_eq!(all.len(), 2);
         assert_eq!(all[1].jobs, vec![4]);
+    }
+
+    #[test]
+    fn pool_counters_fold_into_snapshot_and_json() {
+        let c = MetricsCollector::new();
+        c.pool_job_finished(1.0);
+        c.pool_job_finished(3.0);
+        c.pool_flush(7, 4000, 1000);
+        c.pool_flush(2, 500, 600);
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        assert_eq!(snap.seq_steals, 9);
+        assert_eq!(snap.seq_busy_us, 4500);
+        assert_eq!(snap.seq_idle_us, 1600);
+        assert_eq!(snap.pool_jobs, 2);
+        assert!((snap.mean_imbalance() - 2.0).abs() < 1e-9);
+        assert!((snap.imbalance_max - 3.0).abs() < 1e-9);
+        let text = snap.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("seq_steals").unwrap().as_usize(), Some(9));
+        assert_eq!(back.get("mean_imbalance").unwrap().as_f64(), Some(2.0));
+        assert_eq!(back.get("max_imbalance").unwrap().as_f64(), Some(3.0));
+        assert_eq!(back.get("pool_jobs").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn mean_imbalance_defaults_to_balanced() {
+        assert_eq!(MetricsSnapshot::default().mean_imbalance(), 1.0);
     }
 
     #[test]

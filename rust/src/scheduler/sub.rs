@@ -6,6 +6,12 @@
 //! Single-threaded actor: one blocking event loop over the control-plane
 //! mailbox with a liveness tick.  All sends are non-blocking, so the loop
 //! can never deadlock against other actors.
+//!
+//! Each spawned worker owns a persistent sequence pool of
+//! `cores_per_worker` threads (DESIGN.md §8), created when the worker
+//! starts and drained when `WorkerShutdown` is delivered — so packing
+//! width stays the core budget ([`crate::job::ThreadCount::packing_width`])
+//! while chunk execution inside the node is elastic under work stealing.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
@@ -503,12 +509,27 @@ impl SubScheduler {
 
     fn try_dispatch(&mut self) {
         let mut requeue = VecDeque::new();
+        // One slot snapshot per pass, updated in place on every placement
+        // (was: re-cloning every worker's slot for every ready job, O(ready
+        // × workers) clones on the dispatch hot path).  Refreshed only when
+        // a dispatch fails, i.e. a worker died mid-pass.
+        let mut slots: Vec<WorkerSlot> =
+            self.workers.values().map(|w| w.slot.clone()).collect();
         while let Some(job) = self.ready.pop_front() {
             let Some(pj) = self.pending.get(&job) else { continue };
-            let slots: Vec<WorkerSlot> =
-                self.workers.values().map(|w| w.slot.clone()).collect();
             match choose_worker(&pj.spec, pj.pin, &slots) {
-                WorkerChoice::Run(w) => self.dispatch_to(job, w),
+                WorkerChoice::Run(w) => {
+                    let threads = pj.spec.threads;
+                    if self.dispatch_to(job, w) {
+                        if let Some(s) = slots.iter_mut().find(|s| s.rank == w) {
+                            s.occupy(threads);
+                        }
+                    } else {
+                        // Dead worker pruned inside dispatch_to; the job is
+                        // back in `ready` — rebuild the snapshot.
+                        slots = self.workers.values().map(|w| w.slot.clone()).collect();
+                    }
+                }
                 WorkerChoice::WaitFor(_) => requeue.push_back(job),
                 WorkerChoice::Lost(_) => {
                     let missing = pj
@@ -524,8 +545,16 @@ impl SubScheduler {
                 }
                 WorkerChoice::Spawn => {
                     if self.workers.len() < self.cfg.max_workers {
+                        let threads = pj.spec.threads;
                         let w = self.spawn_worker();
-                        self.dispatch_to(job, w);
+                        if self.dispatch_to(job, w) {
+                            let mut slot = WorkerSlot::new(w, self.cfg.cores_per_worker);
+                            slot.occupy(threads);
+                            slots.push(slot);
+                        } else {
+                            slots =
+                                self.workers.values().map(|w| w.slot.clone()).collect();
+                        }
                     } else {
                         requeue.push_back(job);
                     }
@@ -535,8 +564,11 @@ impl SubScheduler {
         self.ready = requeue;
     }
 
-    fn dispatch_to(&mut self, job: JobId, worker: Rank) {
-        let Some(pj) = self.pending.remove(&job) else { return };
+    /// Send `job` to `worker`.  Returns `false` when the job could not be
+    /// dispatched (worker died in the window — the job is requeued and the
+    /// dead rank pruned, so the caller must refresh any slot snapshot).
+    fn dispatch_to(&mut self, job: JobId, worker: Rank) -> bool {
+        let Some(pj) = self.pending.remove(&job) else { return false };
         let input: Vec<InputPart> = pj
             .parts
             .iter()
@@ -555,12 +587,13 @@ impl SubScheduler {
             self.pending.insert(job, pj);
             self.ready.push_back(job);
             self.check_worker_liveness();
-            return;
+            return false;
         }
         if let Some(entry) = self.workers.get_mut(&worker) {
             entry.slot.occupy(spec.threads);
             entry.running.insert(job, spec);
         }
+        true
     }
 
     fn spawn_worker(&mut self) -> Rank {

@@ -1,24 +1,39 @@
 //! Worker processes (paper §3.1): dynamically spawned, isolated executors.
 //!
-//! A worker knows only its scheduler, its function registry and its
-//! retained-result cache.  It receives fully resolved [`ExecRequest`]s,
-//! runs the user function with the requested number of sequences, and
-//! either ships the output back or retains it (keep-results).
+//! A worker knows only its scheduler, its function registry, its
+//! retained-result cache and its sequence pool.  It receives fully
+//! resolved [`ExecRequest`]s, runs the user function with the requested
+//! number of sequences, and either ships the output back or retains it
+//! (keep-results).
 //!
 //! ## Execution modes
 //!
-//! * `Plain` / `PerChunk` functions run on a **job thread**, so one worker
-//!   node can execute several thread-packed jobs concurrently (paper §3.3:
-//!   two 2-thread jobs share a 4-core worker; the sub-scheduler's core
-//!   accounting enforces the budget).
+//! * `PerChunk` functions fan their input chunks over the worker's
+//!   **persistent sequence pool** ([`pool::SequencePool`], DESIGN.md §8):
+//!   `cores` long-lived sequence threads spawned once at worker start,
+//!   parked between jobs, with chunk-granular work stealing.  Submission
+//!   is asynchronous — the main loop keeps serving the mailbox while
+//!   sequences execute, so thread-packed jobs (paper §3.3: two 2-thread
+//!   jobs share a 4-core worker) genuinely overlap.  Whole-node jobs
+//!   with a single chunk or a single sequence run inline instead (the
+//!   pool round trip would be pure overhead).
+//! * `Plain` functions that occupy the whole node run **inline** (nothing
+//!   can be packed next to them, so a pool hand-off would only add
+//!   latency); packed `Plain` jobs run as single tasks **on the pool**,
+//!   sharing sequences instead of spawning one OS thread per job.
 //! * `WithCtx` functions run **inline** on the worker's main thread — they
 //!   may use the PJRT engine, whose handles are not `Send`.  One engine
 //!   job at a time per worker mirrors "one accelerator per node".
 //!
-//! A keep-results job thread deposits its output back into the worker's
-//! cache through the worker's own mailbox (the `KeptData`-to-self message),
-//! then the worker acknowledges completion to its scheduler — so the cache
-//! is always consistent before the scheduler can route a consumer here.
+//! A panicking user function fails its own job (`ExecFailed` with
+//! [`crate::error::Error::UserPanic`]) and never takes the worker rank
+//! down: pool sequences catch unwinds, and the inline paths are wrapped
+//! the same way ([`pool::catch_user`]).
+//!
+//! A keep-results job deposits its output back into the worker's cache
+//! through the worker's own mailbox (the `KeptData`-to-self message), then
+//! the worker acknowledges completion to its scheduler — so the cache is
+//! always consistent before the scheduler can route a consumer here.
 
 pub mod cache;
 pub mod pool;
@@ -32,19 +47,29 @@ use crate::error::Result;
 use crate::fault::FaultInjector;
 use crate::job::registry::{FunctionRegistry, JobCtx, UserFunction};
 use crate::job::{Injection, JobId};
+use crate::metrics::MetricsCollector;
 use crate::runtime::{ComputeBackend, EngineFactory};
 use crate::scheduler::{ExecRequest, FwMsg, InputPart, TAG_CTRL};
 use cache::KeptCache;
+use pool::{catch_user, PoolConfig, SequencePool};
 
 /// Everything a worker thread needs at spawn (all `Send`).
 #[derive(Clone)]
 pub struct WorkerConfig {
-    /// Cores of this worker "node" (`ThreadCount::Auto` resolves to this).
+    /// Cores of this worker "node" (`ThreadCount::Auto` resolves to this;
+    /// also the number of persistent pool sequences).
     pub cores: usize,
     pub registry: Arc<FunctionRegistry>,
     /// Engine recipe; instantiated lazily on this thread at first use.
     pub engine_factory: Option<EngineFactory>,
     pub fault: Arc<FaultInjector>,
+    /// Sequence-pool policy (config knobs `work_stealing`,
+    /// `steal_granularity`).
+    pub work_stealing: bool,
+    pub steal_granularity: usize,
+    /// Sink for pool counters (steals, busy/idle, per-job imbalance);
+    /// `None` in standalone tests.
+    pub metrics: Option<Arc<MetricsCollector>>,
 }
 
 /// Worker main loop. Runs until `WorkerShutdown` (clean) or an injected
@@ -54,7 +79,15 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
     let me = comm.rank();
     let mut kept = KeptCache::new();
     let mut engine: Option<Box<dyn ComputeBackend>> = None;
-    let mut job_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // Spawned once, parked between jobs; lives exactly as long as the rank.
+    let mut pool = SequencePool::new(
+        PoolConfig {
+            sequences: cfg.cores,
+            work_stealing: cfg.work_stealing,
+            steal_granularity: cfg.steal_granularity,
+        },
+        cfg.metrics.clone(),
+    );
 
     loop {
         let env = match comm.recv() {
@@ -67,7 +100,10 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                 if cfg.fault.should_crash(me, job) {
                     // Simulated node failure: vanish without a word.
                     // Dropping `comm` deregisters the rank -> sends to us
-                    // fail fast and the scheduler reports the loss.
+                    // fail fast and the scheduler reports the loss.  The
+                    // pool is abandoned, not drained — a crashed node does
+                    // not finish its backlog.
+                    pool.abandon();
                     return;
                 }
                 let input = match assemble_input(&req, &kept) {
@@ -118,15 +154,16 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                             JobCtx::new(job, n_threads, engine.as_deref());
                         let t0 = Instant::now();
                         let mut output = FunctionData::new();
-                        let result = f(&input, &mut output, &ctx);
+                        let r = catch_user(|| f(&input, &mut output, &ctx));
                         let exec_us = t0.elapsed().as_micros() as u64;
                         let injections = ctx.take_injections();
+                        let result = r.map(|()| output);
                         finish_job(
                             &comm.sender(),
                             scheduler,
                             job,
                             req.spec.keep,
-                            result.map(|()| output),
+                            result,
                             injections,
                             exec_us,
                             &mut kept,
@@ -134,52 +171,17 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                     }
                     UserFunction::Plain(f) => {
                         // Perf: a job that occupies the whole node cannot
-                        // be packed with anything else, so a job thread
-                        // would only add spawn + context-switch cost —
-                        // run it inline (§Perf in EXPERIMENTS.md).
+                        // be packed with anything else, so a pool hand-off
+                        // would only add latency — run it inline (§Perf in
+                        // EXPERIMENTS.md).
                         let whole_node =
                             req.spec.threads.packing_width(cfg.cores) >= cfg.cores;
                         if whole_node {
                             let t0 = Instant::now();
                             let mut output = FunctionData::new();
-                            let result = f(&input, &mut output);
+                            let r = catch_user(|| f(&input, &mut output));
                             let exec_us = t0.elapsed().as_micros() as u64;
-                            finish_job(
-                                &comm.sender(),
-                                scheduler,
-                                job,
-                                req.spec.keep,
-                                result.map(|()| output),
-                                vec![],
-                                exec_us,
-                                &mut kept,
-                            );
-                        } else {
-                            let to_self = comm.sender();
-                            let keep = req.spec.keep;
-                            job_threads.push(std::thread::spawn(move || {
-                                let t0 = Instant::now();
-                                let mut output = FunctionData::new();
-                                let result = f(&input, &mut output);
-                                let exec_us = t0.elapsed().as_micros() as u64;
-                                report_from_thread(
-                                    &to_self,
-                                    scheduler,
-                                    job,
-                                    keep,
-                                    result.map(|()| output),
-                                    exec_us,
-                                );
-                            }));
-                        }
-                    }
-                    UserFunction::PerChunk(f) => {
-                        let whole_node =
-                            req.spec.threads.packing_width(cfg.cores) >= cfg.cores;
-                        if whole_node {
-                            let t0 = Instant::now();
-                            let result = pool::run_per_chunk(&f, &input, n_threads);
-                            let exec_us = t0.elapsed().as_micros() as u64;
+                            let result = r.map(|()| output);
                             finish_job(
                                 &comm.sender(),
                                 scheduler,
@@ -191,21 +193,58 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                                 &mut kept,
                             );
                         } else {
+                            // Packed job: one task on the shared pool.
                             let to_self = comm.sender();
                             let keep = req.spec.keep;
-                            job_threads.push(std::thread::spawn(move || {
-                                let t0 = Instant::now();
-                                let result = pool::run_per_chunk(&f, &input, n_threads);
-                                let exec_us = t0.elapsed().as_micros() as u64;
+                            pool.submit_plain(f, input, move |result, exec_us| {
                                 report_from_thread(
                                     &to_self, scheduler, job, keep, result, exec_us,
                                 );
-                            }));
+                            });
+                        }
+                    }
+                    UserFunction::PerChunk(f) => {
+                        let whole_node =
+                            req.spec.threads.packing_width(cfg.cores) >= cfg.cores;
+                        if whole_node && (input.len() <= 1 || n_threads == 1) {
+                            // Zero-hand-off fast path: nothing can be
+                            // packed beside a whole-node job and a single
+                            // sequence adds no parallelism, so the pool
+                            // round trip would be pure overhead.
+                            let t0 = Instant::now();
+                            let r = catch_user(|| pool::run_sequential(&f, &input));
+                            let exec_us = t0.elapsed().as_micros() as u64;
+                            finish_job(
+                                &comm.sender(),
+                                scheduler,
+                                job,
+                                req.spec.keep,
+                                r,
+                                vec![],
+                                exec_us,
+                                &mut kept,
+                            );
+                        } else {
+                            // Chunks fan over the pool's sequences (dealt
+                            // to `n_threads` deques, elastic via
+                            // stealing); the main loop stays responsive.
+                            let to_self = comm.sender();
+                            let keep = req.spec.keep;
+                            pool.submit_chunks(
+                                f,
+                                &input,
+                                n_threads,
+                                move |result, exec_us| {
+                                    report_from_thread(
+                                        &to_self, scheduler, job, keep, result, exec_us,
+                                    );
+                                },
+                            );
                         }
                     }
                 }
             }
-            // A job thread finished a keep-results job: deposit, then ack.
+            // A pool job finished a keep-results job: deposit, then ack.
             FwMsg::KeptData { job, data } => {
                 kept.insert(job, data);
                 let _ = comm.send(
@@ -225,9 +264,9 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                 kept.release(job);
             }
             FwMsg::WorkerShutdown => {
-                for h in job_threads.drain(..) {
-                    let _ = h.join();
-                }
+                // Drain in-flight pool jobs (their completion sends still
+                // need this rank alive), then flush stats and leave.
+                pool.shutdown();
                 comm.deregister();
                 return;
             }
@@ -250,7 +289,8 @@ fn assemble_input(req: &ExecRequest, kept: &KeptCache) -> Result<FunctionData> {
     Ok(out)
 }
 
-/// Inline (WithCtx) completion: cache handling happens right here.
+/// Inline (WithCtx / whole-node Plain) completion: cache handling happens
+/// right here.
 #[allow(clippy::too_many_arguments)]
 fn finish_job(
     to_sched: &CommSender<FwMsg>,
@@ -286,9 +326,9 @@ fn finish_job(
     }
 }
 
-/// Job-thread completion: keep-results must round-trip through the worker
-/// main loop (the cache is not shared), everything else goes straight to
-/// the scheduler.
+/// Pool-completion path (runs on a sequence thread): keep-results must
+/// round-trip through the worker main loop (the cache is not shared),
+/// everything else goes straight to the scheduler.
 fn report_from_thread(
     to_self: &CommSender<FwMsg>,
     scheduler: Rank,
@@ -334,6 +374,3 @@ fn report_from_thread(
 pub fn assemble_for_test(req: &ExecRequest, kept: &KeptCache) -> Result<FunctionData> {
     assemble_input(req, kept)
 }
-
-#[allow(unused_imports)]
-use crate::error::Error as _ErrorForDocs; // doc-link anchor

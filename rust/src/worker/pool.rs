@@ -1,72 +1,574 @@
 //! Sequence execution — the "OpenMP" layer (paper §2.1: a job is a set of
 //! sequences of instructions that may run in parallel).
 //!
-//! [`run_per_chunk`] implements the framework's automatic data
-//! distribution: the job's input chunks are dealt round-robin to
-//! `n_threads` sequences, each sequence maps its chunks through the user
-//! function, and the outputs are reassembled **in input order** (so the
-//! result is deterministic regardless of interleaving).  Scoped threads
-//! give fork-join semantics with zero allocation of long-lived pool state;
-//! a job's sequences never outlive the job (exactly the paper's model —
-//! a job completes when all its sequences have terminated).
+//! [`SequencePool`] is a **persistent per-worker sequence pool with
+//! chunk-granular work stealing** (DESIGN.md §8).  Each worker rank owns
+//! `cores` long-lived sequence threads, spawned once at worker start and
+//! parked between jobs.  A per-chunk job is *dealt* into per-sequence
+//! deques with the paper's static round-robin split (chunk *i* → sequence
+//! `i % width`); with `work_stealing` on, a sequence that drains its own
+//! deque steals chunks from the busiest victim, so one expensive chunk no
+//! longer serialises the tail of a job.  With `work_stealing` off the
+//! deques are never touched by other sequences and execution is exactly
+//! the paper-faithful static split.
+//!
+//! Determinism: every chunk writes its result into a pre-sized,
+//! chunk-indexed output slot ([`std::sync::OnceLock`] — disjoint
+//! single-writer slots plus a completion counter, no shared `Mutex<Vec>`),
+//! and the finishing sequence assembles the slots **in input order** — the
+//! output is identical for any interleaving, stolen or not.
+//!
+//! Failure containment: user functions run under
+//! [`std::panic::catch_unwind`]; a panicking chunk records
+//! [`Error::UserPanic`] in its slot and the job completes with that error
+//! (surfaced as `ExecFailed` by the worker) while the sequence thread — and
+//! with it the worker rank — stays alive for the next job.
+//!
+//! `Plain` jobs that don't occupy the whole node run on the same pool as
+//! single [`Task::Plain`] tasks, so thread-packed jobs share the node's
+//! sequences instead of spawning one OS thread each (paper §3.3 packing
+//! without oversubscription).
 
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 use crate::data::{DataChunk, FunctionData};
 use crate::error::{Error, Result};
-use crate::job::registry::PerChunkShared;
+use crate::job::registry::{PerChunkShared, PlainFn};
+use crate::metrics::MetricsCollector;
 
-/// Run a chunk→chunk user function over all input chunks with `n_threads`
-/// sequences. Outputs keep input-chunk order.
+/// Pool shape and scheduling policy (wired from
+/// [`crate::config::TopologyConfig`]: `work_stealing`, `steal_granularity`).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Number of long-lived sequence threads (the worker's cores).
+    pub sequences: usize,
+    /// Steal chunks from busy sequences when idle (off = the paper's
+    /// static round-robin split, byte-identical results either way).
+    pub work_stealing: bool,
+    /// Chunks taken per steal: the first is executed immediately, the rest
+    /// are re-dealt into the thief's deque.
+    pub steal_granularity: usize,
+}
+
+impl PoolConfig {
+    pub fn new(sequences: usize) -> Self {
+        PoolConfig { sequences, work_stealing: true, steal_granularity: 1 }
+    }
+}
+
+/// Completion callback: receives the assembled job result and the job's
+/// execution microseconds (first chunk starting → last chunk finishing;
+/// queue wait excluded) on the sequence thread that finished the last task.
+type OnComplete = Box<dyn FnOnce(Result<FunctionData>, u64) + Send + 'static>;
+
+/// Stringified chunk outcome kept in the per-chunk slot (errors are
+/// stringified so slots need no `Clone` on [`Error`]; `DataChunk` clones
+/// are `Arc`-cheap).
+enum SeqError {
+    User(String),
+    Panic(String),
+}
+
+/// Shared state of one in-flight per-chunk job.
+struct ChunkJob {
+    f: PerChunkShared,
+    chunks: Vec<DataChunk>,
+    /// One pre-sized slot per input chunk, written exactly once by
+    /// whichever sequence executed that chunk.
+    slots: Vec<OnceLock<std::result::Result<DataChunk, SeqError>>>,
+    /// Chunks finished so far; whoever raises it to `chunks.len()`
+    /// assembles and completes the job.
+    done: AtomicUsize,
+    /// When the job's first chunk began executing — the anchor for the
+    /// reported exec time (excludes time spent queued behind other jobs).
+    started: OnceLock<Instant>,
+    /// Per-sequence busy nanoseconds on this job (imbalance metric).
+    seq_busy_ns: Vec<AtomicU64>,
+    on_complete: Mutex<Option<OnComplete>>,
+}
+
+/// One unit of work in a sequence deque.
+enum Task {
+    Chunk { job: Arc<ChunkJob>, index: usize },
+    Plain { f: Arc<PlainFn>, input: FunctionData, on_complete: OnComplete },
+}
+
+struct PoolShared {
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// Tasks currently sitting in any deque (not yet taken by a sequence).
+    pending: AtomicUsize,
+    /// Park lock + condvar for idle sequences.  Lock order is always
+    /// `sleep` → one deque at a time; submitters touch them disjointly.
+    sleep: Mutex<()>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    work_stealing: bool,
+    steal_granularity: usize,
+    /// Rotates the dealing origin per job so packed jobs spread over
+    /// different sequences instead of piling onto sequence 0.
+    deal_cursor: AtomicUsize,
+    metrics: Option<Arc<MetricsCollector>>,
+    // Lifetime stats, flushed to `metrics` on shutdown.
+    steals: AtomicU64,
+    busy_ns: AtomicU64,
+    idle_ns: AtomicU64,
+    jobs_run: AtomicU64,
+}
+
+/// Point-in-time view of the pool's lifetime counters (tests + benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Chunks (or plain tasks) obtained by stealing.
+    pub steals: u64,
+    /// Nanoseconds sequences spent executing tasks.
+    pub busy_ns: u64,
+    /// Nanoseconds sequences spent parked or scanning empty deques.
+    pub idle_ns: u64,
+    /// Jobs (chunk fan-outs + plain tasks) completed.
+    pub jobs: u64,
+}
+
+/// The persistent sequence pool. One per worker rank; dropped (drained and
+/// joined) when the worker shuts down.
+pub struct SequencePool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl SequencePool {
+    pub fn new(cfg: PoolConfig, metrics: Option<Arc<MetricsCollector>>) -> Self {
+        let n = cfg.sequences.max(1);
+        let shared = Arc::new(PoolShared {
+            deques: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: AtomicUsize::new(0),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            work_stealing: cfg.work_stealing,
+            steal_granularity: cfg.steal_granularity.max(1),
+            deal_cursor: AtomicUsize::new(0),
+            metrics,
+            steals: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            idle_ns: AtomicU64::new(0),
+            jobs_run: AtomicU64::new(0),
+        });
+        let handles = (0..n)
+            .map(|t| {
+                let s = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("hypar-seq-{t}"))
+                    .spawn(move || sequence_loop(t, &s))
+                    .expect("spawn sequence thread")
+            })
+            .collect();
+        SequencePool { shared, handles }
+    }
+
+    /// Number of sequence threads.
+    pub fn sequences(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            steals: self.shared.steals.load(Ordering::Relaxed),
+            busy_ns: self.shared.busy_ns.load(Ordering::Relaxed),
+            idle_ns: self.shared.idle_ns.load(Ordering::Relaxed),
+            jobs: self.shared.jobs_run.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fan a chunk→chunk function over `input`'s chunks across up to
+    /// `n_threads` sequences.  Returns immediately; `on_complete` fires on
+    /// a sequence thread once every chunk finished, with the outputs in
+    /// input-chunk order and the job's execution microseconds.
+    pub fn submit_chunks(
+        &self,
+        f: PerChunkShared,
+        input: &FunctionData,
+        n_threads: usize,
+        on_complete: impl FnOnce(Result<FunctionData>, u64) + Send + 'static,
+    ) {
+        let chunks: Vec<DataChunk> = input.chunks().to_vec();
+        let n = chunks.len();
+        if n == 0 {
+            on_complete(Ok(FunctionData::new()), 0);
+            return;
+        }
+        let n_seqs = self.shared.deques.len();
+        let width = n_threads.clamp(1, n_seqs).min(n);
+        let job = Arc::new(ChunkJob {
+            f,
+            slots: (0..n).map(|_| OnceLock::new()).collect(),
+            chunks,
+            done: AtomicUsize::new(0),
+            started: OnceLock::new(),
+            seq_busy_ns: (0..n_seqs).map(|_| AtomicU64::new(0)).collect(),
+            on_complete: Mutex::new(Some(Box::new(on_complete))),
+        });
+        // Counter first: `pending >= tasks in deques` must hold at every
+        // instant, or a racing pop could transiently underflow it.
+        self.shared.pending.fetch_add(n, Ordering::AcqRel);
+        // Static round-robin deal (the paper's split): chunk i → sequence
+        // (start + i % width); within a sequence's deque, chunks keep
+        // ascending index order, exactly the old per-thread iteration
+        // t, t+width, t+2*width, ...
+        let start = self.shared.deal_cursor.fetch_add(width, Ordering::Relaxed);
+        for i in 0..job.chunks.len() {
+            let seq = (start + (i % width)) % n_seqs;
+            self.shared.deques[seq]
+                .lock()
+                .expect("sequence deque poisoned")
+                .push_back(Task::Chunk { job: job.clone(), index: i });
+        }
+        self.notify();
+    }
+
+    /// Run a whole `Plain`-signature function as one task on one sequence
+    /// (thread-packed jobs share the pool instead of spawning threads).
+    pub fn submit_plain(
+        &self,
+        f: Arc<PlainFn>,
+        input: FunctionData,
+        on_complete: impl FnOnce(Result<FunctionData>, u64) + Send + 'static,
+    ) {
+        let seq = self.shared.deal_cursor.fetch_add(1, Ordering::Relaxed)
+            % self.shared.deques.len();
+        self.shared.pending.fetch_add(1, Ordering::AcqRel); // counter first, see submit_chunks
+        self.shared.deques[seq]
+            .lock()
+            .expect("sequence deque poisoned")
+            .push_back(Task::Plain { f, input, on_complete: Box::new(on_complete) });
+        self.notify();
+    }
+
+    /// Blocking convenience over [`Self::submit_chunks`] (tests, benches,
+    /// and the one-shot [`run_per_chunk`] wrapper).  Must not be called
+    /// from a sequence thread.
+    pub fn run_chunks(
+        &self,
+        f: &PerChunkShared,
+        input: &FunctionData,
+        n_threads: usize,
+    ) -> Result<FunctionData> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_chunks(f.clone(), input, n_threads, move |r, _exec_us| {
+            let _ = tx.send(r);
+        });
+        rx.recv()
+            .map_err(|_| Error::Assemble("sequence pool gone before completion".into()))?
+    }
+
+    /// Drain queued tasks, stop and join every sequence, flush lifetime
+    /// stats to the metrics collector.  Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.notify();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(m) = &self.shared.metrics {
+            m.pool_flush(
+                self.shared.steals.load(Ordering::Relaxed),
+                self.shared.busy_ns.load(Ordering::Relaxed) / 1_000,
+                self.shared.idle_ns.load(Ordering::Relaxed) / 1_000,
+            );
+        }
+    }
+
+    /// Simulated node crash: discard the queued backlog (a crashed node
+    /// does not finish its work — partially executed chunk jobs simply
+    /// never complete) and detach the sequences without joining.  Tasks
+    /// already executing on a sequence cannot be recalled; their late
+    /// completion sends are the same zombies the old detached job threads
+    /// produced and are handled by the schedulers' loss recovery.  No
+    /// stats are flushed.
+    pub fn abandon(&mut self) {
+        let mut dropped = 0usize;
+        for dq in self.shared.deques.iter() {
+            let mut q = dq.lock().expect("sequence deque poisoned");
+            dropped += q.len();
+            q.clear();
+        }
+        if dropped > 0 {
+            self.shared.pending.fetch_sub(dropped, Ordering::AcqRel);
+        }
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.notify();
+        self.handles.clear(); // dropping the JoinHandles detaches
+    }
+
+    fn notify(&self) {
+        notify(&self.shared);
+    }
+}
+
+/// Wake every parked sequence.  Taking the park lock before notifying
+/// closes the race against a sequence that already found its deque empty
+/// but has not started waiting yet (it holds the lock until `wait`) —
+/// which is also why the parkers need no wakeup timeout.
+fn notify(s: &PoolShared) {
+    drop(s.sleep.lock().expect("pool sleep lock poisoned"));
+    s.wake.notify_all();
+}
+
+impl Drop for SequencePool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn sequence_loop(me: usize, s: &PoolShared) {
+    loop {
+        let own = s.deques[me]
+            .lock()
+            .expect("sequence deque poisoned")
+            .pop_front();
+        let task = match own {
+            Some(t) => {
+                s.pending.fetch_sub(1, Ordering::AcqRel);
+                Some(t)
+            }
+            None if s.work_stealing => steal(me, s),
+            None => None,
+        };
+        match task {
+            Some(t) => run_task(me, s, t),
+            None => {
+                if s.shutdown.load(Ordering::Acquire)
+                    && s.pending.load(Ordering::Acquire) == 0
+                {
+                    return;
+                }
+                park(me, s);
+            }
+        }
+    }
+}
+
+/// Park until new work may exist.  Untimed wait: every state transition
+/// (submit, steal-requeue, shutdown, abandon) runs [`notify`], which
+/// serialises on the park lock against the condition re-check below, so a
+/// wakeup can never be lost and idle sequences cost zero churn.
+fn park(me: usize, s: &PoolShared) {
+    let t0 = Instant::now();
+    let guard = s.sleep.lock().expect("pool sleep lock poisoned");
+    let nothing_for_me = s.deques[me]
+        .lock()
+        .expect("sequence deque poisoned")
+        .is_empty()
+        && (!s.work_stealing || s.pending.load(Ordering::Acquire) == 0);
+    if nothing_for_me && !s.shutdown.load(Ordering::Acquire) {
+        let _ = s.wake.wait(guard).expect("pool sleep lock poisoned");
+    } else {
+        drop(guard);
+        std::thread::yield_now();
+    }
+    s.idle_ns
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+}
+
+/// Take up to `steal_granularity` tasks from the *front* of the busiest
+/// victim's deque (oldest-dealt chunks first — under skew these are the
+/// likeliest to gate the job's tail).  The first is returned for immediate
+/// execution, the rest move into the thief's deque.
+fn steal(me: usize, s: &PoolShared) -> Option<Task> {
+    let mut best: Option<(usize, usize)> = None;
+    for (v, dq) in s.deques.iter().enumerate() {
+        if v == me {
+            continue;
+        }
+        let len = dq.lock().expect("sequence deque poisoned").len();
+        if len > 0 && best.map_or(true, |(_, l)| len > l) {
+            best = Some((v, len));
+        }
+    }
+    let (victim, _) = best?;
+    let mut got: Vec<Task> = Vec::new();
+    {
+        let mut vq = s.deques[victim].lock().expect("sequence deque poisoned");
+        let take = s.steal_granularity.min(vq.len());
+        for _ in 0..take {
+            got.push(vq.pop_front().expect("len checked"));
+        }
+    }
+    if got.is_empty() {
+        return None; // victim drained in the window
+    }
+    s.steals.fetch_add(got.len() as u64, Ordering::Relaxed);
+    s.pending.fetch_sub(1, Ordering::AcqRel); // the task we run now
+    let mut it = got.into_iter();
+    let first = it.next().expect("non-empty");
+    let rest: Vec<Task> = it.collect();
+    if !rest.is_empty() {
+        {
+            let mut mine = s.deques[me].lock().expect("sequence deque poisoned");
+            for t in rest {
+                mine.push_back(t); // still counted in `pending`
+            }
+        }
+        // Re-queued extras are claimable by other idle sequences.
+        notify(s);
+    }
+    Some(first)
+}
+
+fn run_task(me: usize, s: &PoolShared, task: Task) {
+    let t0 = Instant::now();
+    match task {
+        Task::Chunk { job, index } => {
+            let _ = job.started.set(t0); // first chunk to run wins
+            let r = catch_unwind(AssertUnwindSafe(|| (job.f)(&job.chunks[index])));
+            let outcome = match r {
+                Ok(Ok(c)) => Ok(c),
+                Ok(Err(e)) => Err(SeqError::User(e.to_string())),
+                Err(p) => Err(SeqError::Panic(panic_message(p))),
+            };
+            let _ = job.slots[index].set(outcome); // sole writer of this slot
+            job.seq_busy_ns[me]
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            // AcqRel: the finisher's read of the counter orders it after
+            // every contributor's slot write.
+            let done = job.done.fetch_add(1, Ordering::AcqRel) + 1;
+            if done == job.chunks.len() {
+                finish_chunk_job(s, &job);
+            }
+        }
+        Task::Plain { f, input, on_complete } => {
+            let mut output = FunctionData::new();
+            let result = catch_user(|| f(&input, &mut output)).map(|()| output);
+            let exec_us = t0.elapsed().as_micros() as u64;
+            s.jobs_run.fetch_add(1, Ordering::Relaxed);
+            on_complete(result, exec_us);
+        }
+    }
+    s.busy_ns
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+}
+
+/// Assemble the slots in input order and fire the completion callback.
+/// Runs on whichever sequence finished the last chunk.
+fn finish_chunk_job(s: &PoolShared, job: &ChunkJob) {
+    let mut out = Vec::with_capacity(job.chunks.len());
+    let mut err: Option<Error> = None;
+    for (i, slot) in job.slots.iter().enumerate() {
+        match slot.get() {
+            Some(Ok(c)) => out.push(c.clone()),
+            Some(Err(SeqError::User(msg))) => {
+                err = Some(Error::Sequence { index: i, msg: msg.clone() });
+                break; // lowest-index error wins, deterministically
+            }
+            Some(Err(SeqError::Panic(msg))) => {
+                err = Some(Error::UserPanic(msg.clone()));
+                break;
+            }
+            None => {
+                err = Some(Error::Assemble(format!(
+                    "sequence result {i} missing (pool bug)"
+                )));
+                break;
+            }
+        }
+    }
+    let result = match err {
+        Some(e) => Err(e),
+        None => Ok(FunctionData::from_chunks(out)),
+    };
+    let exec_us = job
+        .started
+        .get()
+        .map(|t| t.elapsed().as_micros() as u64)
+        .unwrap_or(0);
+    s.jobs_run.fetch_add(1, Ordering::Relaxed);
+    if let Some(m) = &s.metrics {
+        m.pool_job_finished(job_imbalance(job));
+    }
+    let cb = job
+        .on_complete
+        .lock()
+        .expect("completion slot poisoned")
+        .take();
+    if let Some(cb) = cb {
+        cb(result, exec_us);
+    }
+}
+
+/// Imbalance ratio of one finished job: busiest participating sequence's
+/// time over the mean participating sequence's time (1.0 = perfectly
+/// balanced; the static split on a skewed job trends to `width`).
+fn job_imbalance(job: &ChunkJob) -> f64 {
+    let active: Vec<u64> = job
+        .seq_busy_ns
+        .iter()
+        .map(|a| a.load(Ordering::Relaxed))
+        .filter(|&v| v > 0)
+        .collect();
+    if active.is_empty() {
+        return 1.0;
+    }
+    let max = *active.iter().max().expect("non-empty") as f64;
+    let mean = active.iter().sum::<u64>() as f64 / active.len() as f64;
+    if mean > 0.0 {
+        max / mean
+    } else {
+        1.0
+    }
+}
+
+/// Human-readable payload of a caught panic.
+pub(crate) fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Run a user-function body with panic containment: a panic becomes
+/// [`Error::UserPanic`] instead of unwinding into the calling thread.
+/// Shared by the pool's sequences and the worker's inline paths.
+pub fn catch_user<R>(f: impl FnOnce() -> Result<R>) -> Result<R> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(p) => Err(Error::UserPanic(panic_message(p))),
+    }
+}
+
+/// Sequential reference path: one sequence, chunks in order.  The oracle
+/// the pool's determinism property tests compare against, and the
+/// zero-overhead path for single-chunk / single-thread jobs.
+pub fn run_sequential(f: &PerChunkShared, input: &FunctionData) -> Result<FunctionData> {
+    let mut out = Vec::with_capacity(input.len());
+    for c in input.chunks() {
+        out.push(f(c)?);
+    }
+    Ok(FunctionData::from_chunks(out))
+}
+
+/// One-shot convenience kept for tests and external callers: run a
+/// chunk→chunk function over `input` with `n_threads` sequences on a
+/// transient pool.  Workers use a persistent [`SequencePool`] instead.
 pub fn run_per_chunk(
     f: &PerChunkShared,
     input: &FunctionData,
     n_threads: usize,
 ) -> Result<FunctionData> {
-    let chunks = input.chunks();
-    let n_threads = n_threads.clamp(1, chunks.len().max(1));
-
-    if n_threads == 1 || chunks.len() <= 1 {
-        // Fast path: no thread overhead for single-sequence jobs.
-        let mut out = Vec::with_capacity(chunks.len());
-        for c in chunks {
-            out.push(f(c)?);
-        }
-        return Ok(FunctionData::from_chunks(out));
+    let n_threads = n_threads.clamp(1, input.len().max(1));
+    if n_threads == 1 || input.len() <= 1 {
+        return run_sequential(f, input);
     }
-
-    let results: Mutex<Vec<Option<Result<DataChunk>>>> =
-        Mutex::new((0..chunks.len()).map(|_| None).collect());
-
-    std::thread::scope(|scope| {
-        for t in 0..n_threads {
-            let results = &results;
-            scope.spawn(move || {
-                // Static round-robin split: sequence t takes chunks
-                // t, t+n, t+2n, ... — contiguous enough for cache locality,
-                // balanced for heterogeneous chunk sizes.
-                for i in (t..chunks.len()).step_by(n_threads) {
-                    let r = f(&chunks[i]);
-                    results.lock().expect("pool lock poisoned")[i] = Some(r);
-                }
-            });
-        }
-    });
-
-    let collected = results.into_inner().expect("pool lock poisoned");
-    let mut out = Vec::with_capacity(chunks.len());
-    for (i, slot) in collected.into_iter().enumerate() {
-        match slot {
-            Some(Ok(c)) => out.push(c),
-            Some(Err(e)) => return Err(e),
-            None => {
-                return Err(Error::Assemble(format!(
-                    "sequence result {i} missing (pool bug)"
-                )))
-            }
-        }
-    }
-    Ok(FunctionData::from_chunks(out))
+    let pool = SequencePool::new(PoolConfig::new(n_threads), None);
+    pool.run_chunks(f, input, n_threads)
 }
 
 #[cfg(test)]
@@ -101,7 +603,7 @@ mod tests {
         // loaded CI machines): each chunk callback records how many
         // callbacks are in flight simultaneously.  Sequential execution
         // can never overlap two entrants; with 4 sequences over 4 chunks
-        // that each dwell 20 ms, a real fork-join must.
+        // that each dwell 20 ms, a real pool must.
         let current = Arc::new(AtomicUsize::new(0));
         let peak = Arc::new(AtomicUsize::new(0));
         let (cur, pk) = (current.clone(), peak.clone());
@@ -146,5 +648,133 @@ mod tests {
         let input = FunctionData::of_f32_chunked(vec![1.0, 2.0], 2);
         let out = run_per_chunk(&sq(), &input, 16).unwrap();
         assert_eq!(out.concat_f32().unwrap().as_f32().unwrap(), &[1.0, 4.0]);
+    }
+
+    #[test]
+    fn panicking_chunk_fails_job_but_pool_survives() {
+        let pool = SequencePool::new(PoolConfig::new(4), None);
+        let boom: PerChunkShared = Arc::new(|c: &DataChunk| {
+            if c.first_f32().unwrap_or(0.0) > 2.0 {
+                panic!("chunk detonated");
+            }
+            Ok(c.clone())
+        });
+        let input = FunctionData::of_f32_chunked(vec![1.0, 2.0, 3.0, 4.0], 4);
+        let err = pool.run_chunks(&boom, &input, 4).unwrap_err();
+        assert!(
+            err.to_string().contains("panicked"),
+            "expected a panic error, got {err}"
+        );
+        // Same pool instance keeps working.
+        let ok = pool.run_chunks(&sq(), &input, 4).unwrap();
+        assert_eq!(
+            ok.concat_f32().unwrap().as_f32().unwrap(),
+            &[1.0, 4.0, 9.0, 16.0]
+        );
+    }
+
+    #[test]
+    fn stealing_rebalances_skewed_chunks() {
+        // One 40 ms chunk at index 0 plus 15 light chunks: under the
+        // static deal, sequence 0 owns the heavy chunk and 3 lights; with
+        // stealing on, the lights migrate and the steal counter moves.
+        let f: PerChunkShared = Arc::new(|c: &DataChunk| {
+            let ms = c.first_f32()? as u64;
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(c.clone())
+        });
+        let mut fd = FunctionData::new();
+        fd.push(DataChunk::from_f32(vec![40.0]));
+        for _ in 0..15 {
+            fd.push(DataChunk::from_f32(vec![1.0]));
+        }
+        let pool = SequencePool::new(PoolConfig::new(4), None);
+        let out = pool.run_chunks(&f, &fd, 4).unwrap();
+        assert_eq!(out.len(), 16);
+        assert_eq!(out.chunk(0).unwrap().first_f32().unwrap(), 40.0);
+        assert!(pool.stats().steals > 0, "no chunk was ever stolen");
+    }
+
+    #[test]
+    fn stealing_off_never_steals_and_matches_values() {
+        let input = FunctionData::of_f32_chunked((0..60).map(|i| i as f32).collect(), 12);
+        let on = SequencePool::new(PoolConfig::new(4), None);
+        let off = SequencePool::new(
+            PoolConfig { sequences: 4, work_stealing: false, steal_granularity: 1 },
+            None,
+        );
+        let a = on.run_chunks(&sq(), &input, 4).unwrap();
+        let b = off.run_chunks(&sq(), &input, 4).unwrap();
+        assert_eq!(
+            a.concat_f32().unwrap().as_f32().unwrap(),
+            b.concat_f32().unwrap().as_f32().unwrap()
+        );
+        assert_eq!(off.stats().steals, 0, "static split must never steal");
+    }
+
+    #[test]
+    fn plain_task_runs_on_pool() {
+        let pool = SequencePool::new(PoolConfig::new(2), None);
+        let f: Arc<PlainFn> = Arc::new(|input, output| {
+            let mut acc = 0.0f32;
+            for c in input.chunks() {
+                acc += c.as_f32()?.iter().sum::<f32>();
+            }
+            output.push(DataChunk::scalar_f32(acc));
+            Ok(())
+        });
+        let (tx, rx) = mpsc::channel();
+        pool.submit_plain(f, FunctionData::of_f32(vec![1.0, 2.0, 3.0]), move |r, _us| {
+            let _ = tx.send(r);
+        });
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.chunk(0).unwrap().first_f32().unwrap(), 6.0);
+    }
+
+    #[test]
+    fn packed_jobs_share_sequences() {
+        // Two concurrent 2-wide chunk jobs on a 4-sequence pool complete
+        // without spawning extra threads and keep their outputs separate.
+        let pool = Arc::new(SequencePool::new(PoolConfig::new(4), None));
+        let (tx, rx) = mpsc::channel();
+        for job in 0..2u32 {
+            let tx = tx.clone();
+            let base = (job * 100) as f32;
+            let input = FunctionData::of_f32_chunked(
+                (0..20).map(|i| base + i as f32).collect(),
+                5,
+            );
+            pool.submit_chunks(sq(), &input, 2, move |r, _us| {
+                let _ = tx.send((job, r));
+            });
+        }
+        drop(tx);
+        let mut seen = 0;
+        while let Ok((job, r)) = rx.recv() {
+            let base = (job * 100) as f32;
+            let flat = r.unwrap().concat_f32().unwrap();
+            let expect: Vec<f32> = (0..20).map(|i| (base + i as f32).powi(2)).collect();
+            assert_eq!(flat.as_f32().unwrap(), expect.as_slice());
+            seen += 1;
+        }
+        assert_eq!(seen, 2);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_tasks() {
+        let mut pool = SequencePool::new(PoolConfig::new(1), None);
+        let done = Arc::new(AtomicUsize::new(0));
+        let f: Arc<PlainFn> = Arc::new(|_i, _o| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            Ok(())
+        });
+        for _ in 0..6 {
+            let d = done.clone();
+            pool.submit_plain(f.clone(), FunctionData::new(), move |_r, _us| {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 6, "queued tasks must drain");
     }
 }

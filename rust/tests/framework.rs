@@ -677,6 +677,115 @@ fn failing_user_function_aborts_run() {
 }
 
 #[test]
+fn panicking_user_function_fails_job_not_worker() {
+    // Regression for the lock-poisoning panic path: a chunk that panics
+    // must surface as a clean per-job failure (`ExecFailed` → `JobFailed`
+    // at the master), not poison a pool lock or take the worker rank down
+    // (which would show up as WorkerLost + recompute storms or a hang).
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "emit", |_in, out| {
+        out.push(DataChunk::from_f32(vec![1.0]));
+        out.push(DataChunk::from_f32(vec![2.0]));
+        out.push(DataChunk::from_f32(vec![3.0]));
+        Ok(())
+    });
+    reg.register_per_chunk_try(2, "boom", |c| {
+        if c.first_f32()? > 1.5 {
+            panic!("chunk detonated");
+        }
+        Ok(c.clone())
+    });
+    // threads=2 on a 4-core worker: the packed (pool) path.
+    let err = fw(1, 1, reg)
+        .run(Algorithm::parse("J1(1,1,0); J2(2,2,R1);").unwrap())
+        .unwrap_err();
+    match err {
+        hypar::Error::JobFailed { job, msg } => {
+            assert_eq!(job, JobId(2));
+            assert!(msg.contains("panicked"), "unexpected message: {msg}");
+            assert!(msg.contains("chunk detonated"), "unexpected message: {msg}");
+        }
+        other => panic!("expected JobFailed, got {other}"),
+    }
+}
+
+#[test]
+fn panicking_plain_function_fails_cleanly_in_both_modes() {
+    for mode in BOTH_MODES {
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(1, "kaboom", |_in, _out| -> Result<()> {
+            panic!("plain detonated")
+        });
+        let err = Framework::builder()
+            .schedulers(1)
+            .workers_per_scheduler(1)
+            .cores_per_worker(4)
+            .execution_mode(mode)
+            .registry(reg)
+            .build()
+            .unwrap()
+            .run(Algorithm::parse("J1(1,1,0);").unwrap())
+            .unwrap_err();
+        match err {
+            hypar::Error::JobFailed { job, msg } => {
+                assert_eq!(job, JobId(1), "mode {mode}");
+                assert!(msg.contains("panicked"), "mode {mode}: {msg}");
+            }
+            other => panic!("mode {mode}: expected JobFailed, got {other}"),
+        }
+    }
+}
+
+#[test]
+fn work_stealing_knob_produces_identical_values() {
+    // The paper-faithful static split must stay available and agree with
+    // the stealing pool bit-for-bit; with stealing off, no steal may ever
+    // be recorded.
+    let build = |ws: bool| {
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(1, "emit", |_in, out| {
+            for c in 0..12 {
+                out.push(DataChunk::from_f32(
+                    (0..6).map(|i| (c * 6 + i) as f32 * 0.25).collect(),
+                ));
+            }
+            Ok(())
+        });
+        reg.register_per_chunk_try(2, "xform", |c| {
+            Ok(DataChunk::from_f32(
+                c.as_f32()?.iter().map(|v| v * 2.0 + 1.0).collect(),
+            ))
+        });
+        Framework::builder()
+            .schedulers(1)
+            .workers_per_scheduler(1)
+            .cores_per_worker(4)
+            .work_stealing(ws)
+            .registry(reg)
+            .build()
+            .unwrap()
+    };
+    let algo = || Algorithm::parse("J1(1,1,0); J2(2,0,R1);").unwrap();
+    let on = build(true).run(algo()).unwrap();
+    let off = build(false).run(algo()).unwrap();
+    let flat = |r: &RunReport| -> Vec<f32> {
+        r.result(2)
+            .unwrap()
+            .chunks()
+            .iter()
+            .flat_map(|c| c.as_f32().unwrap().iter().copied())
+            .collect()
+    };
+    assert_eq!(flat(&on), flat(&off));
+    assert_eq!(on.result(2).unwrap().len(), off.result(2).unwrap().len());
+    assert_eq!(
+        off.metrics.seq_steals, 0,
+        "static split must never steal"
+    );
+    assert!(off.metrics.pool_jobs >= 1, "pool job metrics missing");
+}
+
+#[test]
 fn chunk_range_out_of_bounds_is_reported() {
     // J1 emits 2 chunks; J2 asks for chunks 0..5.
     let mut reg = FunctionRegistry::new();

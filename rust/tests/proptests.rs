@@ -309,6 +309,116 @@ fn prop_chunk_split_concat_identity() {
     }
 }
 
+/// Pool determinism: for any chunk list, thread count 1..=8 and chunk
+/// count 0..=32 (below and above the thread count), the work-stealing
+/// pool produces exactly the sequential fast path's output — same chunk
+/// order, same values — and keeps doing so across reuses of the same
+/// persistent pool.
+#[test]
+fn prop_pool_matches_sequential_under_stealing() {
+    use hypar::job::registry::PerChunkShared;
+    use hypar::worker::pool::{run_sequential, PoolConfig, SequencePool};
+    use std::sync::Arc;
+
+    let f: PerChunkShared = Arc::new(|c: &DataChunk| {
+        Ok(DataChunk::from_f32(
+            c.as_f32()?.iter().map(|v| v * 3.0 - 1.0).collect(),
+        ))
+    });
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7000 + seed);
+        let threads = rng.int_in(1, 8);
+        let n_chunks = rng.below(33); // 0..=32
+        let mut fd = FunctionData::new();
+        for _ in 0..n_chunks {
+            let len = rng.int_in(1, 16);
+            fd.push(DataChunk::from_f32(
+                (0..len).map(|_| rng.range_f32(-100.0, 100.0)).collect(),
+            ));
+        }
+        let want = run_sequential(&f, &fd).unwrap();
+        let pool = SequencePool::new(
+            PoolConfig {
+                sequences: threads,
+                work_stealing: true,
+                steal_granularity: rng.int_in(1, 4),
+            },
+            None,
+        );
+        for round in 0..3 {
+            let got = pool.run_chunks(&f, &fd, threads).unwrap();
+            assert_eq!(got.len(), want.len(), "seed {seed} round {round}");
+            for (i, (a, b)) in got.chunks().iter().zip(want.chunks()).enumerate() {
+                assert_eq!(
+                    a.as_f32().unwrap(),
+                    b.as_f32().unwrap(),
+                    "seed {seed} round {round} chunk {i}"
+                );
+            }
+        }
+    }
+}
+
+/// Wire-codec roundtrip over every dtype, random lengths and values
+/// (including empty chunks and empty documents): decode(encode(x)) == x.
+#[test]
+fn prop_codec_roundtrips_all_dtypes() {
+    use hypar::data::codec;
+    use hypar::data::Dtype;
+
+    fn assert_chunks_equal(seed: u64, i: usize, a: &DataChunk, b: &DataChunk) {
+        assert_eq!(a.dtype(), b.dtype(), "seed {seed} chunk {i}");
+        assert_eq!(a.len(), b.len(), "seed {seed} chunk {i}");
+        match a.dtype() {
+            Dtype::U8 => assert_eq!(a.as_u8().unwrap(), b.as_u8().unwrap(), "seed {seed}"),
+            Dtype::I32 => {
+                assert_eq!(a.as_i32().unwrap(), b.as_i32().unwrap(), "seed {seed}")
+            }
+            Dtype::I64 => {
+                assert_eq!(a.as_i64().unwrap(), b.as_i64().unwrap(), "seed {seed}")
+            }
+            Dtype::F32 => {
+                assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(), "seed {seed}")
+            }
+            Dtype::F64 => {
+                assert_eq!(a.as_f64().unwrap(), b.as_f64().unwrap(), "seed {seed}")
+            }
+        }
+    }
+
+    for seed in 0..CASES {
+        let mut rng = Rng::new(8000 + seed);
+        let mut fd = FunctionData::new();
+        for _ in 0..rng.below(8) {
+            let n = rng.below(300);
+            let chunk = match rng.below(5) {
+                0 => DataChunk::from_u8((0..n).map(|_| rng.below(256) as u8).collect()),
+                1 => DataChunk::from_i32((0..n).map(|_| rng.next_u64() as i32).collect()),
+                2 => DataChunk::from_i64((0..n).map(|_| rng.next_u64() as i64).collect()),
+                3 => DataChunk::from_f32(
+                    (0..n).map(|_| rng.range_f32(-1e9, 1e9)).collect(),
+                ),
+                _ => DataChunk::from_f64((0..n).map(|_| rng.f64() * 1e15).collect()),
+            };
+            // Randomly encode a zero-copy sub-view instead of the whole
+            // buffer (views must serialise their window only).
+            if chunk.len() >= 4 && rng.bool() {
+                let lo = rng.below(chunk.len() / 2);
+                let hi = rng.int_in(lo + 1, chunk.len());
+                fd.push(chunk.slice(lo..hi).unwrap());
+            } else {
+                fd.push(chunk);
+            }
+        }
+        let back = codec::decode(&codec::encode(&fd))
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(back.len(), fd.len(), "seed {seed}");
+        for (i, (a, b)) in fd.chunks().iter().zip(back.chunks()).enumerate() {
+            assert_chunks_equal(seed, i, a, b);
+        }
+    }
+}
+
 #[test]
 fn prop_worker_packing_never_oversubscribes() {
     use hypar::scheduler::placement::{choose_worker, WorkerChoice, WorkerSlot};
