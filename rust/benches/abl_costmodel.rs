@@ -1,0 +1,282 @@
+//! ABL-COST: fixed-granularity work stealing (PR 3) vs feedback-driven
+//! cost-model scheduling (DESIGN.md §9 — adaptive steal amount + LPT
+//! pre-balanced deal from measured per-chunk costs).
+//!
+//! Workload: `LANES` independent job lanes, each `SWEEPS` segments deep —
+//! the iterative-solver shape where the same job kind re-runs every sweep
+//! with a **stable intra-job skew**: one heavy chunk (`HEAVY_MS`) sits at
+//! the *last* in-job chunk index among light chunks (`LIGHT_MS`).  Under
+//! the round-robin deal the heavy chunk lands at the *back* of its
+//! sequence's deque, so its owner works through its light chunks first and
+//! the job's makespan is `lights_serial + heavy` — and work stealing can't
+//! help, because by the time any sequence goes idle the heavy chunk is
+//! already the only (running) task left.  With the cost model on, sweep 1
+//! runs cold (identical to the baseline) and records the kind's per-index
+//! costs; every later sweep LPT-deals the heavy chunk *first* onto its own
+//! sequence, so the makespan drops to ≈ `max(heavy, lights/(cores-1))`.
+//!
+//! Model (cores=4, 32 chunks, heavy 20 ms, light 2 ms): baseline ≈ 7·2 +
+//! 20 = 34 ms per job every sweep; cost model ≈ 34 ms on sweep 1, then ≈
+//! max(20, 62/3) ≈ 21 ms — with 6 sweeps an aggregate ≈ 1.4× against the
+//! 1.2× acceptance bar, with identical output values in both
+//! configurations (`cost_model = off` is exactly PR 3's fixed-granularity
+//! stealing).
+//!
+//! ```text
+//! cargo bench --bench abl_costmodel
+//! # env knobs:
+//! #   HYPAR_COST_LANES=3  HYPAR_COST_SWEEPS=6  HYPAR_COST_CHUNKS=32
+//! #   HYPAR_COST_CORES=4  HYPAR_COST_HEAVY_MS=20  HYPAR_COST_LIGHT_MS=2
+//! #   HYPAR_COST_JSON=BENCH_costmodel.json
+//! #   HYPAR_BENCH_REPS=5  HYPAR_BENCH_WARMUP=1
+//! #   HYPAR_BENCH_SMOKE=1   (tiny sizes, perf assertions skipped)
+//! ```
+
+use hypar::prelude::*;
+use hypar::util::bench::{Bench, Report};
+use hypar::util::json::Json;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Shape {
+    lanes: usize,
+    sweeps: usize,
+    chunks: usize,
+    cores: usize,
+    heavy_ms: usize,
+    light_ms: usize,
+}
+
+/// Emitter: `lanes * chunks` cost-tagged chunks, the heavy one at the
+/// *last* in-job index of every lane (stable across sweeps — the profile
+/// the cost table learns).  The sweep transform preserves element 0 (the
+/// cost tag) so every sweep of a lane has the same skew.
+fn registry(s: &Shape) -> FunctionRegistry {
+    let (lanes, chunks) = (s.lanes, s.chunks);
+    let (heavy, light) = (s.heavy_ms as f32, s.light_ms as f32);
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "emit_skewed", move |_in, out| {
+        for j in 0..lanes {
+            for c in 0..chunks {
+                let ms = if c == chunks - 1 { heavy } else { light };
+                // [cost_ms, payload...] — 8 elements so the transform has
+                // real data to touch.
+                let mut v = vec![ms];
+                v.extend((0..7).map(|i| (j * chunks + c) as f32 + i as f32 * 0.125));
+                out.push(DataChunk::from_f32(v));
+            }
+        }
+        Ok(())
+    });
+    reg.register_per_chunk_try(2, "sleep_transform", |c| {
+        let v = c.as_f32()?;
+        let ms = v.first().copied().unwrap_or(0.0);
+        std::thread::sleep(std::time::Duration::from_micros((ms * 1000.0) as u64));
+        // Element 0 (the cost tag) passes through; the payload transforms.
+        let out: Vec<f32> = v
+            .iter()
+            .enumerate()
+            .map(|(i, x)| if i == 0 { *x } else { x * 2.0 + 1.0 })
+            .collect();
+        Ok(DataChunk::from_f32(out))
+    });
+    reg
+}
+
+/// Segment 0: the emitter.  Segments 1..=sweeps: one whole-node consumer
+/// per lane (threads=0 → Auto); sweep 1 slices the emitter, later sweeps
+/// chain on the same lane's previous output.  Lanes serialise on the
+/// single worker, so wall time is the sum of per-job makespans — exactly
+/// the intra-node quantity under test.
+fn algorithm(s: &Shape) -> Algorithm {
+    let id = |sweep: usize, lane: usize| (1 + sweep * s.lanes + lane + 1) as u32;
+    let mut b = Algorithm::builder();
+    b = b.segment(vec![JobSpec::new(1, 1, 1)]);
+    for sweep in 0..s.sweeps {
+        let seg = (0..s.lanes)
+            .map(|lane| {
+                let input = if sweep == 0 {
+                    ChunkRef::slice(JobId(1), lane * s.chunks, (lane + 1) * s.chunks)
+                } else {
+                    ChunkRef::all(JobId(id(sweep - 1, lane)))
+                };
+                JobSpec::new(id(sweep, lane), 2, 0).with_inputs(vec![input])
+            })
+            .collect();
+        b = b.segment(seg);
+    }
+    b.build().expect("valid skewed-sweep algorithm")
+}
+
+fn run_once(s: &Shape, cost_model: bool) -> RunReport {
+    let fw = Framework::builder()
+        .schedulers(1)
+        .workers_per_scheduler(1)
+        .cores_per_worker(s.cores)
+        .work_stealing(true)
+        .steal_granularity(1)
+        .cost_model(cost_model)
+        .registry(registry(s))
+        .build()
+        .expect("framework build");
+    fw.run(algorithm(s)).expect("skewed-sweep run")
+}
+
+/// Deterministically ordered digest of the final-segment values.
+fn digest(report: &RunReport) -> Vec<(u32, Vec<f32>)> {
+    report
+        .results
+        .iter()
+        .map(|(id, data)| {
+            let vals: Vec<f32> = data
+                .chunks()
+                .iter()
+                .flat_map(|c| c.as_f32().unwrap().iter().copied())
+                .collect();
+            (id.0, vals)
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::var("HYPAR_BENCH_SMOKE").is_ok();
+    let shape = if smoke {
+        Shape {
+            lanes: env_usize("HYPAR_COST_LANES", 2),
+            sweeps: env_usize("HYPAR_COST_SWEEPS", 2),
+            chunks: env_usize("HYPAR_COST_CHUNKS", 8),
+            cores: env_usize("HYPAR_COST_CORES", 4),
+            heavy_ms: env_usize("HYPAR_COST_HEAVY_MS", 2),
+            light_ms: env_usize("HYPAR_COST_LIGHT_MS", 1),
+        }
+    } else {
+        Shape {
+            lanes: env_usize("HYPAR_COST_LANES", 3),
+            sweeps: env_usize("HYPAR_COST_SWEEPS", 6),
+            chunks: env_usize("HYPAR_COST_CHUNKS", 32),
+            cores: env_usize("HYPAR_COST_CORES", 4),
+            heavy_ms: env_usize("HYPAR_COST_HEAVY_MS", 20),
+            light_ms: env_usize("HYPAR_COST_LIGHT_MS", 2),
+        }
+    };
+    let bench = Bench::default();
+
+    println!(
+        "ABL-COST: {} lanes x {} sweeps x {} chunks on {} sequences, \
+         heavy {} ms (tail chunk) / light {} ms, reps {}{}",
+        shape.lanes,
+        shape.sweeps,
+        shape.chunks,
+        shape.cores,
+        shape.heavy_ms,
+        shape.light_ms,
+        bench.reps,
+        if smoke { " [SMOKE: no perf assertions]" } else { "" }
+    );
+
+    let mut report = Report::new("abl_costmodel: fixed-granularity stealing vs cost model");
+    let mut digests: (Option<Vec<(u32, Vec<f32>)>>, Option<Vec<(u32, Vec<f32>)>>) =
+        (None, None);
+    let mut fixed_imbalance = 0.0f64;
+    let mut cost_imbalance = 0.0f64;
+    let mut cost_json_on = false;
+    let mut cost_json_off_empty = false;
+
+    let m_fixed = bench.measure("costmodel/fixed_granularity", || {
+        let r = run_once(&shape, false);
+        fixed_imbalance = r.metrics.mean_imbalance();
+        // Off must not accumulate cost-model stats.
+        cost_json_off_empty = r.metrics.cost_model.is_empty();
+        digests.0 = Some(digest(&r));
+    });
+    let m_cost = bench.measure("costmodel/adaptive", || {
+        let r = run_once(&shape, true);
+        cost_imbalance = r.metrics.mean_imbalance();
+        // Acceptance: estimates vs actuals must be part of the serialised
+        // snapshot, not just the struct.
+        let doc = hypar::util::json::parse(&r.metrics.to_json().to_string())
+            .expect("snapshot json parses");
+        cost_json_on = doc
+            .get("cost_model")
+            .and_then(Json::as_arr)
+            .map(|a| !a.is_empty())
+            .unwrap_or(false);
+        digests.1 = Some(digest(&r));
+    });
+    report.add(m_fixed.clone());
+    report.add(m_cost.clone());
+    report.finish();
+
+    let speedup = m_fixed.mean.as_secs_f64() / m_cost.mean.as_secs_f64();
+    let identical = digests.0 == digests.1;
+    println!(
+        "\ncost-model speedup {speedup:.2}x over fixed-granularity stealing \
+         (imbalance {fixed_imbalance:.2} -> {cost_imbalance:.2})"
+    );
+
+    // Machine-readable perf-trajectory row.
+    let out_path = std::env::var("HYPAR_COST_JSON")
+        .unwrap_or_else(|_| "BENCH_costmodel.json".to_string());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("abl_costmodel".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("lanes", Json::num(shape.lanes as f64)),
+        ("sweeps", Json::num(shape.sweeps as f64)),
+        ("chunks", Json::num(shape.chunks as f64)),
+        ("cores", Json::num(shape.cores as f64)),
+        ("heavy_ms", Json::num(shape.heavy_ms as f64)),
+        ("light_ms", Json::num(shape.light_ms as f64)),
+        ("reps", Json::num(bench.reps as f64)),
+        ("fixed_mean_ms", Json::num(m_fixed.mean_ms())),
+        ("costmodel_mean_ms", Json::num(m_cost.mean_ms())),
+        ("speedup", Json::num(speedup)),
+        ("fixed_imbalance", Json::num(fixed_imbalance)),
+        ("costmodel_imbalance", Json::num(cost_imbalance)),
+        ("identical_values", Json::Bool(identical)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string_pretty(2)) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+
+    // Correctness gates hold even in smoke mode; perf gates only in a
+    // full run.
+    let mut pass = true;
+    if !identical {
+        println!("ACCEPTANCE FAIL: fixed-granularity and cost-model values differ");
+        pass = false;
+    }
+    if !cost_json_on {
+        println!("ACCEPTANCE FAIL: cost_model estimates/actuals missing from to_json");
+        pass = false;
+    }
+    if !cost_json_off_empty {
+        println!("ACCEPTANCE FAIL: cost_model=off still accumulated cost stats");
+        pass = false;
+    }
+    if !smoke {
+        if speedup < 1.2 {
+            println!(
+                "ACCEPTANCE FAIL: cost model only {speedup:.2}x over fixed granularity"
+            );
+            pass = false;
+        }
+        if cost_imbalance >= fixed_imbalance {
+            println!(
+                "ACCEPTANCE FAIL: cost model did not reduce imbalance \
+                 ({fixed_imbalance:.2} -> {cost_imbalance:.2})"
+            );
+            pass = false;
+        }
+    }
+    if pass {
+        println!(
+            "ACCEPTANCE PASS: {}identical values, cost stats exported",
+            if smoke { "(smoke) " } else { ">= 1.2x, " }
+        );
+    } else {
+        std::process::exit(1);
+    }
+}

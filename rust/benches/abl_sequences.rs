@@ -99,6 +99,10 @@ fn run_once(s: &Shape, work_stealing: bool) -> RunReport {
         .workers_per_scheduler(1)
         .cores_per_worker(s.cores)
         .work_stealing(work_stealing)
+        // This ablation isolates *stealing*: the cost model (DESIGN.md §9)
+        // would otherwise LPT-re-deal the chunks from history in both
+        // configurations and blur the baseline (abl_costmodel covers it).
+        .cost_model(false)
         .registry(registry(s))
         .build()
         .expect("framework build");

@@ -28,8 +28,11 @@ const TAG_RING: Tag = Tag(Tag::COLLECTIVE_BASE + 5);
 /// Elementwise reduction operator for `reduce_f64` / `allreduce_f64`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReduceOp {
+    /// Elementwise sum.
     Sum,
+    /// Elementwise maximum.
     Max,
+    /// Elementwise minimum.
     Min,
 }
 

@@ -87,12 +87,16 @@ pub struct CommStats {
 /// Point-in-time copy of the counters (subtraction gives per-phase deltas).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StatsSnapshot {
+    /// Messages delivered.
     pub msgs: u64,
+    /// Payload + header bytes delivered.
     pub bytes: u64,
+    /// Summed α/β-modelled transfer time in nanoseconds.
     pub modelled_comm_ns: u64,
 }
 
 impl CommStats {
+    /// Read the counters (relaxed; safe concurrent with sends).
     pub fn snapshot(&self) -> StatsSnapshot {
         StatsSnapshot {
             msgs: self.msgs.load(Ordering::Relaxed),

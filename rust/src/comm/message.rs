@@ -11,6 +11,7 @@ impl Tag {
     /// Tags `>= COLLECTIVE_BASE` are reserved for collective plumbing.
     pub const COLLECTIVE_BASE: u32 = 1 << 30;
 
+    /// Whether this tag belongs to the reserved collective range.
     pub fn is_collective(self) -> bool {
         self.0 >= Self::COLLECTIVE_BASE
     }
@@ -101,8 +102,11 @@ pub(crate) enum Inner<M> {
 /// A delivered message with its MPI-style envelope.
 #[derive(Debug)]
 pub struct Envelope<M> {
+    /// Sending rank.
     pub src: Rank,
+    /// Receiving rank.
     pub dst: Rank,
+    /// Message tag.
     pub tag: Tag,
     pub(crate) payload: Inner<M>,
 }
@@ -120,6 +124,7 @@ impl<M> Envelope<M> {
         }
     }
 
+    /// Borrow the user payload, if this is a user message.
     pub fn user_ref(&self) -> Option<&M> {
         match &self.payload {
             Inner::User(m) => Some(m),

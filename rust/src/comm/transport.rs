@@ -79,6 +79,7 @@ impl<M> Clone for World<M> {
 }
 
 impl<M: Send + WireSize + 'static> World<M> {
+    /// New world with the given α/β communication cost model.
     pub fn new(cost: CostModel) -> Self {
         World {
             inner: Arc::new(WorldInner {
@@ -137,6 +138,7 @@ impl<M: Send + WireSize + 'static> World<M> {
         self.inner.stats.snapshot()
     }
 
+    /// The world's α/β communication cost model.
     pub fn cost_model(&self) -> &CostModel {
         &self.inner.cost
     }
@@ -201,10 +203,13 @@ impl<M> Clone for CommSender<M> {
 }
 
 impl<M: Send + WireSize + 'static> CommSender<M> {
+    /// The source rank stamped on every send from this handle.
     pub fn rank(&self) -> Rank {
         self.src
     }
 
+    /// Send `msg` to `dst` with `tag` (non-blocking, fail-fast on dead
+    /// ranks).
     pub fn send(&self, dst: Rank, tag: Tag, msg: M) -> Result<()> {
         deliver(
             &self.world,
@@ -228,19 +233,24 @@ pub struct Comm<M> {
 /// Receive filter: `None` = wildcard (MPI_ANY_SOURCE / MPI_ANY_TAG).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Match {
+    /// Required source rank (`None` = any source).
     pub src: Option<Rank>,
+    /// Required tag (`None` = any tag).
     pub tag: Option<Tag>,
 }
 
 impl Match {
+    /// Wildcard: any source, any tag.
     pub fn any() -> Self {
         Match::default()
     }
 
+    /// Match messages from `src` only.
     pub fn from(src: Rank) -> Self {
         Match { src: Some(src), tag: None }
     }
 
+    /// Match messages with `tag` only.
     pub fn tagged(tag: Tag) -> Self {
         Match { src: None, tag: Some(tag) }
     }
@@ -253,6 +263,7 @@ impl Match {
 }
 
 impl<M: Send + WireSize + 'static> Comm<M> {
+    /// This endpoint's rank.
     pub fn rank(&self) -> Rank {
         self.rank
     }
@@ -262,6 +273,8 @@ impl<M: Send + WireSize + 'static> Comm<M> {
         CommSender { src: self.rank, world: self.world.clone(), cache: SendCache::fresh() }
     }
 
+    /// Send `msg` to `dst` with `tag` (non-blocking, fail-fast on dead
+    /// ranks).
     pub fn send(&self, dst: Rank, tag: Tag, msg: M) -> Result<()> {
         deliver(
             &self.world,

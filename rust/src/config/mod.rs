@@ -15,14 +15,25 @@
 //!   "cores_per_worker": 4,
 //!   "prespawn_workers": false,
 //!   "fault_timeout_ms": 5000,
-//!   "cost_model": {"alpha_us": 2.0, "bandwidth_gbps": 10.0, "simulate": false},
+//!   "comm_cost_model": {"alpha_us": 2.0, "bandwidth_gbps": 10.0, "simulate": false},
 //!   "engine": {"artifact_dir": "artifacts", "variant": "ref"},
 //!   "execution_mode": "dataflow",
 //!   "speculative_prefetch": true,
 //!   "work_stealing": true,
-//!   "steal_granularity": 1
+//!   "steal_granularity": 1,
+//!   "cost_model": true,
+//!   "cost_ewma_alpha": 0.3
 //! }
 //! ```
+//!
+//! The canonical description of every knob — JSON key, builder method,
+//! default and effect — is the config-knob table in the repository
+//! `README.md`.
+//!
+//! Compatibility: `cost_model` used to be the name of the *communication*
+//! cost-model section (now `comm_cost_model`); an object under the
+//! `cost_model` key is still parsed as the comm model, while a boolean is
+//! the scheduling knob.
 
 use std::path::{Path, PathBuf};
 
@@ -30,11 +41,17 @@ use crate::comm::CostModel;
 use crate::error::{Error, Result};
 use crate::util::json::{self, Json};
 
-/// Cost-model section.
+/// Communication cost-model section (the α/β latency-bandwidth model of
+/// [`crate::comm`]; JSON key `comm_cost_model`).  Unrelated to the
+/// *execution* cost model of DESIGN.md §9 (knobs `cost_model` /
+/// `cost_ewma_alpha`).
 #[derive(Debug, Clone)]
 pub struct CostModelConfig {
+    /// Per-message latency in microseconds (the α term).
     pub alpha_us: f64,
+    /// Link bandwidth in Gbit/s (the β term).
     pub bandwidth_gbps: f64,
+    /// Inject the modelled delay into real sends (benchmarking aid).
     pub simulate: bool,
 }
 
@@ -93,6 +110,7 @@ pub enum ExecutionMode {
 }
 
 impl ExecutionMode {
+    /// The JSON string form of this mode.
     pub fn as_str(self) -> &'static str {
         match self {
             ExecutionMode::Barrier => "barrier",
@@ -100,6 +118,7 @@ impl ExecutionMode {
         }
     }
 
+    /// Parse the JSON string form (`"barrier"` / `"dataflow"`).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "barrier" => Ok(ExecutionMode::Barrier),
@@ -131,7 +150,8 @@ pub struct TopologyConfig {
     pub prespawn_workers: bool,
     /// Worker-loss detection timeout in milliseconds.
     pub fault_timeout_ms: u64,
-    pub cost_model: CostModelConfig,
+    /// Communication α/β cost model (JSON key `comm_cost_model`).
+    pub comm_cost_model: CostModelConfig,
     /// Optional compute engine (absent = pure-rust user functions only).
     pub engine: Option<EngineConfig>,
     /// Barrier vs dataflow control plane (DESIGN.md §7).
@@ -143,13 +163,25 @@ pub struct TopologyConfig {
     /// affects computed values.
     pub speculative_prefetch: bool,
     /// Chunk-granular work stealing on the worker sequence pool
-    /// (DESIGN.md §8).  On by default; off reverts to the paper's static
-    /// round-robin chunk split (byte-identical results either way — only
-    /// where and when chunks execute changes).
+    /// (DESIGN.md §8).  On by default; off disables stealing (pair with
+    /// `cost_model: false` for the paper's fully static round-robin
+    /// split).  Byte-identical results either way — only where and when
+    /// chunks execute changes.
     pub work_stealing: bool,
     /// Chunks taken per steal operation (>= 1).  1 = finest-grained
     /// balancing; larger values amortise deque locking for tiny chunks.
+    /// Ignored while `cost_model` is on (the steal amount adapts).
     pub steal_granularity: usize,
+    /// Feedback-driven cost-model scheduling (DESIGN.md §9): measure
+    /// per-chunk and per-job execution costs and use them to pre-balance
+    /// the chunk deal (LPT), size steals by estimated cost, and break
+    /// placement ties by estimated outstanding cost.  On by default; off
+    /// reverts every decision to the static policies.  Values are
+    /// byte-identical either way.
+    pub cost_model: bool,
+    /// EWMA smoothing factor for the execution cost tables (weight of the
+    /// newest observation, `(0, 1]`).
+    pub cost_ewma_alpha: f64,
 }
 
 impl Default for TopologyConfig {
@@ -160,12 +192,14 @@ impl Default for TopologyConfig {
             cores_per_worker: 4,
             prespawn_workers: false,
             fault_timeout_ms: 5_000,
-            cost_model: CostModelConfig::default(),
+            comm_cost_model: CostModelConfig::default(),
             engine: None,
             execution_mode: ExecutionMode::default(),
             speculative_prefetch: true,
             work_stealing: true,
             steal_granularity: 1,
+            cost_model: true,
+            cost_ewma_alpha: crate::cost::DEFAULT_COST_EWMA_ALPHA,
         }
     }
 }
@@ -179,6 +213,7 @@ impl TopologyConfig {
         Ok(cfg)
     }
 
+    /// Parse a JSON config document (missing fields default).
     pub fn from_json_text(text: &str) -> Result<Self> {
         let doc = json::parse(text).map_err(|e| Error::Config(e.to_string()))?;
         let mut cfg = TopologyConfig::default();
@@ -200,16 +235,40 @@ impl TopologyConfig {
                 .as_bool()
                 .ok_or_else(|| Error::Config("prespawn_workers must be a bool".into()))?;
         }
-        if let Some(cm) = doc.get("cost_model") {
+        // The comm model's canonical key, plus the pre-rename `cost_model`
+        // object form for compatibility (a *boolean* `cost_model` is the
+        // scheduling knob, handled below).
+        // Legacy form first so the canonical key wins when both appear.
+        for key in ["cost_model", "comm_cost_model"] {
+            let Some(cm) = doc.get(key) else { continue };
+            if !matches!(cm, Json::Obj(_)) {
+                continue;
+            }
             if let Some(v) = cm.get("alpha_us").and_then(Json::as_f64) {
-                cfg.cost_model.alpha_us = v;
+                cfg.comm_cost_model.alpha_us = v;
             }
             if let Some(v) = cm.get("bandwidth_gbps").and_then(Json::as_f64) {
-                cfg.cost_model.bandwidth_gbps = v;
+                cfg.comm_cost_model.bandwidth_gbps = v;
             }
             if let Some(v) = cm.get("simulate").and_then(Json::as_bool) {
-                cfg.cost_model.simulate = v;
+                cfg.comm_cost_model.simulate = v;
             }
+        }
+        match doc.get("cost_model") {
+            None | Some(Json::Obj(_)) => {} // absent, or the legacy comm form
+            Some(Json::Bool(b)) => cfg.cost_model = *b,
+            Some(_) => {
+                return Err(Error::Config(
+                    "cost_model must be a bool (scheduling knob) or an object \
+                     (legacy comm cost model)"
+                        .into(),
+                ))
+            }
+        }
+        if let Some(v) = doc.get("cost_ewma_alpha") {
+            cfg.cost_ewma_alpha = v
+                .as_f64()
+                .ok_or_else(|| Error::Config("cost_ewma_alpha must be a number".into()))?;
         }
         if let Some(v) = doc.get("execution_mode") {
             let s = v
@@ -265,12 +324,17 @@ impl TopologyConfig {
                 "steal_granularity",
                 Json::num(self.steal_granularity as f64),
             ),
+            ("cost_model", Json::Bool(self.cost_model)),
+            ("cost_ewma_alpha", Json::num(self.cost_ewma_alpha)),
             (
-                "cost_model",
+                "comm_cost_model",
                 Json::obj(vec![
-                    ("alpha_us", Json::num(self.cost_model.alpha_us)),
-                    ("bandwidth_gbps", Json::num(self.cost_model.bandwidth_gbps)),
-                    ("simulate", Json::Bool(self.cost_model.simulate)),
+                    ("alpha_us", Json::num(self.comm_cost_model.alpha_us)),
+                    (
+                        "bandwidth_gbps",
+                        Json::num(self.comm_cost_model.bandwidth_gbps),
+                    ),
+                    ("simulate", Json::Bool(self.comm_cost_model.simulate)),
                 ]),
             ),
         ];
@@ -289,6 +353,7 @@ impl TopologyConfig {
         Json::obj(entries).to_string_pretty(2)
     }
 
+    /// Check invariants (counts >= 1, knob ranges, engine variant).
     pub fn validate(&self) -> Result<()> {
         if self.schedulers == 0 {
             return Err(Error::Config("schedulers must be >= 1".into()));
@@ -301,6 +366,15 @@ impl TopologyConfig {
         }
         if self.steal_granularity == 0 {
             return Err(Error::Config("steal_granularity must be >= 1".into()));
+        }
+        if !self.cost_ewma_alpha.is_finite()
+            || self.cost_ewma_alpha <= 0.0
+            || self.cost_ewma_alpha > 1.0
+        {
+            return Err(Error::Config(format!(
+                "cost_ewma_alpha must be in (0, 1], got {}",
+                self.cost_ewma_alpha
+            )));
         }
         if let Some(e) = &self.engine {
             if e.variant != "pallas" && e.variant != "ref" {
@@ -318,8 +392,9 @@ impl TopologyConfig {
         self.schedulers * self.workers_per_scheduler
     }
 
-    pub fn cost_model(&self) -> CostModel {
-        self.cost_model.clone().into()
+    /// The communication α/β [`CostModel`] this config describes.
+    pub fn comm_cost_model(&self) -> CostModel {
+        self.comm_cost_model.clone().into()
     }
 }
 
@@ -387,7 +462,7 @@ mod tests {
     fn json_roundtrip() {
         let mut cfg = TopologyConfig::default();
         cfg.schedulers = 3;
-        cfg.cost_model.simulate = true;
+        cfg.comm_cost_model.simulate = true;
         cfg.engine = Some(EngineConfig {
             artifact_dir: PathBuf::from("/tmp/a"),
             variant: "pallas".into(),
@@ -395,9 +470,54 @@ mod tests {
         let text = cfg.to_json();
         let back = TopologyConfig::from_json_text(&text).unwrap();
         assert_eq!(back.schedulers, 3);
-        assert!(back.cost_model.simulate);
+        assert!(back.comm_cost_model.simulate);
         assert_eq!(back.engine.as_ref().unwrap().variant, "pallas");
         assert_eq!(back.engine.as_ref().unwrap().artifact_dir, PathBuf::from("/tmp/a"));
+    }
+
+    #[test]
+    fn cost_model_knobs_parse_and_roundtrip() {
+        let d = TopologyConfig::default();
+        assert!(d.cost_model, "on by default");
+        assert_eq!(d.cost_ewma_alpha, crate::cost::DEFAULT_COST_EWMA_ALPHA);
+        let cfg = TopologyConfig::from_json_text(
+            r#"{"cost_model": false, "cost_ewma_alpha": 0.5}"#,
+        )
+        .unwrap();
+        assert!(!cfg.cost_model);
+        assert_eq!(cfg.cost_ewma_alpha, 0.5);
+        let back = TopologyConfig::from_json_text(&cfg.to_json()).unwrap();
+        assert!(!back.cost_model);
+        assert_eq!(back.cost_ewma_alpha, 0.5);
+        assert!(TopologyConfig::from_json_text(r#"{"cost_model": "yes"}"#).is_err());
+        assert!(TopologyConfig::from_json_text(r#"{"cost_ewma_alpha": "big"}"#).is_err());
+    }
+
+    #[test]
+    fn legacy_cost_model_object_still_configures_the_comm_model() {
+        // Pre-rename configs used `cost_model` for the α/β comm section;
+        // the object form must keep working, and must not disturb the
+        // (boolean) scheduling knob's default.
+        let cfg = TopologyConfig::from_json_text(
+            r#"{"cost_model": {"alpha_us": 7.5, "simulate": true}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.comm_cost_model.alpha_us, 7.5);
+        assert!(cfg.comm_cost_model.simulate);
+        assert!(cfg.cost_model, "scheduling knob untouched by the legacy form");
+        // The canonical key wins over defaults too.
+        let cfg =
+            TopologyConfig::from_json_text(r#"{"comm_cost_model": {"alpha_us": 3.0}}"#)
+                .unwrap();
+        assert_eq!(cfg.comm_cost_model.alpha_us, 3.0);
+    }
+
+    #[test]
+    fn bad_cost_ewma_alpha_rejected() {
+        for bad in [0.0, -0.5, 1.5] {
+            let cfg = TopologyConfig { cost_ewma_alpha: bad, ..Default::default() };
+            assert!(cfg.validate().is_err(), "alpha {bad} must be rejected");
+        }
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! Measured execution-cost model shared by all three scheduling tiers
+//! (DESIGN.md §9).
+//!
+//! The paper's job model leaves chunk splitting and placement static: the
+//! dealer splits a job's chunks round-robin over its sequences and the
+//! master places jobs by data affinity and queue length.  Both decisions
+//! ignore how expensive the work actually is, so a known-skewed workload
+//! (one heavy chunk per job, one heavy job kind per segment) pays the skew
+//! every single sweep.  A [`CostTable`] closes the loop with *measured*
+//! costs:
+//!
+//! * the **sequence pool** ([`crate::worker::pool`]) records per-chunk
+//!   execution time per job kind and uses the table to (a) **pre-balance**
+//!   the initial deal with LPT bin packing ([`lpt_deal`]) and (b) steal
+//!   **half the victim's estimated remaining cost** instead of a fixed
+//!   chunk count ([`adaptive_steal_count`]);
+//! * the **sub-scheduler** attaches the observed execution time to every
+//!   completion report (`JobDone::exec_us`);
+//! * the **master** keeps a per-job-kind EWMA of whole-job cost and breaks
+//!   placement ties toward the sub-scheduler with the least *estimated
+//!   outstanding cost* instead of the shortest queue
+//!   ([`crate::scheduler::placement::choose_scheduler_lookahead`]).
+//!
+//! Cold start is always the paper-faithful policy: with no history for a
+//! job kind the deal stays round-robin, the steal amount halves the
+//! victim's backlog by *count*, and placement falls back to queue length —
+//! so the first sweep of any workload behaves exactly like the
+//! `cost_model = off` configuration.  The model is a pure scheduling
+//! heuristic: computed values are byte-identical with the knob on, off, or
+//! mispredicting arbitrarily badly.
+
+use std::collections::HashMap;
+
+/// Default smoothing factor for the cost EWMAs (config knob
+/// `cost_ewma_alpha`): weight of the newest observation.
+pub const DEFAULT_COST_EWMA_ALPHA: f64 = 0.3;
+
+/// Per-job-kind cost history: an EWMA of whole-job execution time plus an
+/// EWMA per chunk *index* (iterative workloads re-run the same kind with a
+/// stable intra-job skew profile, e.g. boundary blocks cheaper than
+/// interior blocks — indexing by position is what lets the dealer
+/// pre-balance them).
+#[derive(Debug, Clone, Default)]
+struct FuncCost {
+    /// EWMA of whole-job execution microseconds.
+    job_us: f64,
+    /// Whole-job samples folded in so far.
+    job_samples: u64,
+    /// EWMA execution microseconds per chunk index.
+    chunk_us: Vec<f64>,
+    /// Samples folded into each chunk-index EWMA.
+    chunk_samples: Vec<u64>,
+}
+
+/// Exponentially-weighted execution-cost estimates keyed by job kind
+/// ([`crate::job::FuncId`], stored as its raw `u32`).
+///
+/// The first sample of a series initialises the EWMA directly; later
+/// samples fold in as `est = alpha * sample + (1 - alpha) * est`.
+///
+/// ```
+/// use hypar::cost::CostTable;
+///
+/// let mut t = CostTable::new(0.5);
+/// assert_eq!(t.estimate_job_us(7), None); // cold start: no estimate
+/// t.record_job(7, 100);
+/// t.record_job(7, 200);
+/// assert_eq!(t.estimate_job_us(7), Some(150.0)); // 0.5*200 + 0.5*100
+/// ```
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    alpha: f64,
+    funcs: HashMap<u32, FuncCost>,
+}
+
+impl Default for CostTable {
+    fn default() -> Self {
+        CostTable::new(DEFAULT_COST_EWMA_ALPHA)
+    }
+}
+
+impl CostTable {
+    /// New table with the given EWMA smoothing factor (clamped into
+    /// `(0, 1]`; out-of-range values fall back to the default).
+    pub fn new(alpha: f64) -> Self {
+        let alpha = if alpha.is_finite() && alpha > 0.0 && alpha <= 1.0 {
+            alpha
+        } else {
+            DEFAULT_COST_EWMA_ALPHA
+        };
+        CostTable { alpha, funcs: HashMap::new() }
+    }
+
+    /// The smoothing factor in effect.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Fold one observed whole-job execution time into the kind's EWMA.
+    pub fn record_job(&mut self, kind: u32, exec_us: u64) {
+        let e = self.funcs.entry(kind).or_default();
+        e.job_us = ewma(self.alpha, e.job_us, e.job_samples, exec_us as f64);
+        e.job_samples += 1;
+    }
+
+    /// Fold one observed chunk execution time (microseconds, fractional
+    /// for sub-microsecond chunks) into the kind's per-index EWMA.
+    pub fn record_chunk(&mut self, kind: u32, index: usize, us: f64) {
+        let e = self.funcs.entry(kind).or_default();
+        if e.chunk_us.len() <= index {
+            e.chunk_us.resize(index + 1, 0.0);
+            e.chunk_samples.resize(index + 1, 0);
+        }
+        e.chunk_us[index] = ewma(self.alpha, e.chunk_us[index], e.chunk_samples[index], us);
+        e.chunk_samples[index] += 1;
+    }
+
+    /// EWMA whole-job cost estimate for `kind` in microseconds; `None`
+    /// until at least one job of that kind completed.
+    pub fn estimate_job_us(&self, kind: u32) -> Option<f64> {
+        self.funcs
+            .get(&kind)
+            .filter(|e| e.job_samples > 0)
+            .map(|e| e.job_us)
+    }
+
+    /// Per-chunk cost estimates for a job of `kind` with `n` chunks, in
+    /// microseconds.  `None` until at least one chunk of that kind was
+    /// measured (cold start — caller falls back to the round-robin deal).
+    /// Indices beyond the recorded history get the mean of the recorded
+    /// estimates, so a job that grew a few chunks still pre-balances.
+    pub fn chunk_estimates_us(&self, kind: u32, n: usize) -> Option<Vec<f64>> {
+        let e = self.funcs.get(&kind)?;
+        let known: Vec<f64> = e
+            .chunk_us
+            .iter()
+            .zip(&e.chunk_samples)
+            .filter(|(_, &s)| s > 0)
+            .map(|(&c, _)| c)
+            .collect();
+        if known.is_empty() {
+            return None;
+        }
+        let mean = known.iter().sum::<f64>() / known.len() as f64;
+        Some(
+            (0..n)
+                .map(|i| match (e.chunk_us.get(i), e.chunk_samples.get(i)) {
+                    (Some(&c), Some(&s)) if s > 0 => c,
+                    _ => mean,
+                })
+                .collect(),
+        )
+    }
+
+    /// Number of job kinds with any recorded history.
+    pub fn len(&self) -> usize {
+        self.funcs.len()
+    }
+
+    /// Whether the table has no history at all.
+    pub fn is_empty(&self) -> bool {
+        self.funcs.is_empty()
+    }
+}
+
+/// One EWMA step; the first sample initialises the average directly.
+fn ewma(alpha: f64, current: f64, samples: u64, sample: f64) -> f64 {
+    if samples == 0 {
+        sample
+    } else {
+        alpha * sample + (1.0 - alpha) * current
+    }
+}
+
+/// Longest-processing-time deal: assign chunks (by estimated cost) to
+/// `width` sequence slots so each slot's summed cost is as even as greedy
+/// gets.  Returns one ordered chunk-index list per slot; within a slot the
+/// chunks are ordered heaviest-first, so the most expensive chunk starts
+/// the moment its sequence wakes instead of languishing at the back of a
+/// round-robin deque.
+///
+/// Deterministic: ties in cost break toward the lower chunk index, ties in
+/// slot load toward the lower slot.
+///
+/// ```
+/// use hypar::cost::lpt_deal;
+///
+/// // One 20 ms chunk among 2 ms chunks, 2 slots: the heavy chunk gets a
+/// // slot to itself and the lights share the other.
+/// let costs = vec![2.0, 2.0, 20.0, 2.0];
+/// let deal = lpt_deal(&costs, 2);
+/// assert_eq!(deal[0], vec![2]);          // heaviest first, alone
+/// assert_eq!(deal[1], vec![0, 1, 3]);    // the lights
+/// ```
+pub fn lpt_deal(costs_us: &[f64], width: usize) -> Vec<Vec<usize>> {
+    let width = width.max(1);
+    let mut order: Vec<usize> = (0..costs_us.len()).collect();
+    // Heaviest first; equal costs keep ascending index order.
+    order.sort_by(|&a, &b| {
+        costs_us[b]
+            .partial_cmp(&costs_us[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut slots: Vec<Vec<usize>> = vec![Vec::new(); width];
+    let mut loads = vec![0.0f64; width];
+    for i in order {
+        let slot = (0..width)
+            .min_by(|&a, &b| {
+                loads[a]
+                    .partial_cmp(&loads[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            })
+            .expect("width >= 1");
+        loads[slot] += costs_us[i].max(0.0);
+        slots[slot].push(i);
+    }
+    slots
+}
+
+/// Adaptive steal amount: how many tasks to take from the *front* of a
+/// victim's deque so the thief walks away with about **half the victim's
+/// estimated remaining cost**.  `costs` are the estimated costs of the
+/// victim's queued tasks, front first; entries of `0.0` mean "unknown".
+///
+/// Cold start (no estimate for anything in the deque) halves the backlog
+/// by *count* — the ROADMAP's "halve the victim's backlog" fallback —
+/// instead of a fixed chunk constant.  Returns `0` only for an empty
+/// deque.
+pub fn adaptive_steal_count(costs: &[f64]) -> usize {
+    if costs.is_empty() {
+        return 0;
+    }
+    let total: f64 = costs.iter().map(|c| c.max(0.0)).sum();
+    if total <= 0.0 {
+        // No cost information: treat every task as equal.
+        return costs.len().div_ceil(2);
+    }
+    let mut taken = 0.0f64;
+    for (k, c) in costs.iter().enumerate() {
+        taken += c.max(0.0);
+        if 2.0 * taken >= total {
+            return k + 1;
+        }
+    }
+    costs.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_first_sample_initialises_then_blends() {
+        let mut t = CostTable::new(0.25);
+        assert_eq!(t.estimate_job_us(1), None);
+        t.record_job(1, 1000);
+        assert_eq!(t.estimate_job_us(1), Some(1000.0), "first sample direct");
+        t.record_job(1, 2000);
+        // 0.25 * 2000 + 0.75 * 1000
+        assert_eq!(t.estimate_job_us(1), Some(1250.0));
+        t.record_job(1, 1250);
+        assert_eq!(t.estimate_job_us(1), Some(1250.0), "steady state stays put");
+        // Kinds are independent.
+        assert_eq!(t.estimate_job_us(2), None);
+    }
+
+    #[test]
+    fn chunk_ewma_tracks_per_index_profile() {
+        let mut t = CostTable::new(0.5);
+        assert_eq!(t.chunk_estimates_us(1, 3), None, "cold table: no estimates");
+        t.record_chunk(1, 0, 2.0);
+        t.record_chunk(1, 2, 20.0);
+        let est = t.chunk_estimates_us(1, 4).unwrap();
+        assert_eq!(est[0], 2.0);
+        assert_eq!(est[2], 20.0);
+        // Unmeasured indices (1 was never recorded, 3 is beyond history)
+        // fall back to the mean of the known estimates.
+        assert_eq!(est[1], 11.0);
+        assert_eq!(est[3], 11.0);
+        // Second samples blend.
+        t.record_chunk(1, 2, 10.0);
+        let est = t.chunk_estimates_us(1, 3).unwrap();
+        assert_eq!(est[2], 15.0);
+    }
+
+    #[test]
+    fn bad_alpha_falls_back_to_default() {
+        for bad in [0.0, -1.0, 1.5, f64::NAN, f64::INFINITY] {
+            assert_eq!(CostTable::new(bad).alpha(), DEFAULT_COST_EWMA_ALPHA);
+        }
+        assert_eq!(CostTable::new(1.0).alpha(), 1.0, "alpha = 1 is valid (no smoothing)");
+    }
+
+    #[test]
+    fn lpt_deal_balances_known_skew() {
+        // 1 heavy (20) + 7 lights (2 each) on 4 slots: heavy alone, lights
+        // spread 3/2/2 over the rest.
+        let mut costs = vec![2.0; 8];
+        costs[7] = 20.0;
+        let deal = lpt_deal(&costs, 4);
+        assert_eq!(deal[0], vec![7], "heavy chunk starts first, alone");
+        let light_total: usize = deal[1..].iter().map(Vec::len).sum();
+        assert_eq!(light_total, 7);
+        for slot in &deal[1..] {
+            assert!(slot.len() >= 2 && slot.len() <= 3, "lights uneven: {deal:?}");
+        }
+        // Every chunk dealt exactly once.
+        let mut all: Vec<usize> = deal.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lpt_deal_uniform_costs_is_deterministic_and_even() {
+        let costs = vec![1.0; 6];
+        let deal = lpt_deal(&costs, 3);
+        assert_eq!(deal, vec![vec![0, 3], vec![1, 4], vec![2, 5]]);
+        // Degenerate widths.
+        assert_eq!(lpt_deal(&costs, 1), vec![vec![0, 1, 2, 3, 4, 5]]);
+        assert_eq!(lpt_deal(&[], 3), vec![Vec::<usize>::new(); 3]);
+    }
+
+    #[test]
+    fn adaptive_steal_cold_start_halves_backlog_by_count() {
+        // Empty cost table → every queued task estimates 0.0 → halve by
+        // count, never a fixed constant.
+        assert_eq!(adaptive_steal_count(&[]), 0);
+        assert_eq!(adaptive_steal_count(&[0.0]), 1);
+        assert_eq!(adaptive_steal_count(&[0.0; 2]), 1);
+        assert_eq!(adaptive_steal_count(&[0.0; 7]), 4);
+        assert_eq!(adaptive_steal_count(&[0.0; 8]), 4);
+    }
+
+    #[test]
+    fn adaptive_steal_takes_half_the_estimated_cost() {
+        // Front-heavy deque: the first task already holds half the cost.
+        assert_eq!(adaptive_steal_count(&[20.0, 2.0, 2.0, 2.0]), 1);
+        // Back-heavy: take all the lights and the heavy one.
+        assert_eq!(adaptive_steal_count(&[2.0, 2.0, 2.0, 20.0]), 4);
+        // Uniform costs behave like the count fallback.
+        assert_eq!(adaptive_steal_count(&[5.0; 6]), 3);
+        // Mixed known/unknown: unknowns count as zero cost.
+        assert_eq!(adaptive_steal_count(&[0.0, 10.0, 0.0, 10.0]), 2);
+    }
+}

@@ -15,10 +15,15 @@ use crate::error::{Error, Result};
 /// ships.  (User-defined MPI types from the paper map to `U8` byte blobs.)
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dtype {
+    /// Raw bytes (also the stand-in for user-defined MPI types).
     U8,
+    /// 32-bit signed integers.
     I32,
+    /// 64-bit signed integers.
     I64,
+    /// 32-bit floats (the solvers' working precision).
     F32,
+    /// 64-bit floats.
     F64,
 }
 
@@ -130,6 +135,7 @@ impl DataChunk {
         Self::from_i32(vec![v])
     }
 
+    /// One-element f32 chunk.
     pub fn scalar_f32(v: f32) -> Self {
         Self::from_f32(vec![v])
     }
@@ -139,10 +145,12 @@ impl DataChunk {
         self.range.len()
     }
 
+    /// Whether the view holds zero elements.
     pub fn is_empty(&self) -> bool {
         self.range.is_empty()
     }
 
+    /// Element type of this chunk.
     pub fn dtype(&self) -> Dtype {
         self.buf.dtype()
     }
@@ -206,6 +214,7 @@ impl DataChunk {
         s.first().copied().ok_or(Error::ChunkIndex { index: 0, len: 0 })
     }
 
+    /// First element as i32 (convenience for scalar control chunks).
     pub fn first_i32(&self) -> Result<i32> {
         let s = self.as_i32()?;
         s.first().copied().ok_or(Error::ChunkIndex { index: 0, len: 0 })

@@ -20,10 +20,12 @@ impl fmt::Debug for FunctionData {
 }
 
 impl FunctionData {
+    /// Empty chunk list.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Wrap an existing chunk list.
     pub fn from_chunks(chunks: Vec<DataChunk>) -> Self {
         FunctionData { chunks }
     }
@@ -40,14 +42,17 @@ impl FunctionData {
             .ok_or(Error::ChunkIndex { index, len: self.chunks.len() })
     }
 
+    /// All chunks, in order.
     pub fn chunks(&self) -> &[DataChunk] {
         &self.chunks
     }
 
+    /// Number of chunks.
     pub fn len(&self) -> usize {
         self.chunks.len()
     }
 
+    /// Whether there are no chunks.
     pub fn is_empty(&self) -> bool {
         self.chunks.is_empty()
     }

@@ -20,10 +20,12 @@ pub struct Matrix {
 }
 
 impl Matrix {
+    /// All-zero `rows x cols` matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap row-major `data` as a `rows x cols` matrix.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
         if data.len() != rows * cols {
             return Err(Error::Assemble(format!(
@@ -35,22 +37,27 @@ impl Matrix {
         Ok(Matrix { rows, cols, data })
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Element at `(r, c)`.
     pub fn get(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]
     }
 
+    /// Set element at `(r, c)`.
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         self.data[r * self.cols + c] = v;
     }
 
+    /// The full row-major backing slice.
     pub fn as_slice(&self) -> &[f32] {
         &self.data
     }
@@ -90,14 +97,18 @@ impl Matrix {
 /// A ready-to-solve linear system `A x = b` with known solution `x_star`.
 #[derive(Clone, Debug)]
 pub struct LinearSystem {
+    /// The system matrix.
     pub a: Matrix,
+    /// Right-hand side.
     pub b: Vec<f32>,
+    /// Known exact solution (for error checks).
     pub x_star: Vec<f32>,
     /// Logical (unpadded) size; rows `n_logical..n` are identity padding.
     pub n_logical: usize,
 }
 
 impl LinearSystem {
+    /// Padded system size (matrix rows).
     pub fn n(&self) -> usize {
         self.a.rows()
     }

@@ -11,93 +11,184 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 #[derive(Debug, thiserror::Error)]
 pub enum Error {
     // ------------------------------------------------------------- parsing
+    /// The job-script text is malformed.
     #[error("job script parse error at line {line}, column {col}: {msg}")]
-    Parse { line: usize, col: usize, msg: String },
+    Parse {
+        /// 1-based line of the offending token.
+        line: usize,
+        /// 1-based column of the offending token.
+        col: usize,
+        /// What the parser expected / found.
+        msg: String,
+    },
 
     // ----------------------------------------------------------- job model
+    /// A job references a result no earlier segment produces.
     #[error("job {job:?} references result of job {referenced:?} which is not produced by any earlier segment")]
-    UnknownResultRef { job: JobId, referenced: JobId },
+    UnknownResultRef {
+        /// The referencing job.
+        job: JobId,
+        /// The producer that does not exist.
+        referenced: JobId,
+    },
 
+    /// A chunk-range reference exceeds the producer's output arity.
     #[error("job {job:?} requests chunks {lo}..{hi} of job {referenced:?} but only {available} chunks exist")]
     ChunkRangeOutOfBounds {
+        /// The referencing job.
         job: JobId,
+        /// The producer being sliced.
         referenced: JobId,
+        /// Requested range start (inclusive).
         lo: usize,
+        /// Requested range end (exclusive).
         hi: usize,
+        /// Chunks the producer actually emitted.
         available: usize,
     },
 
+    /// Two jobs in one algorithm share an id.
     #[error("duplicate job id {0:?} in algorithm")]
     DuplicateJobId(JobId),
 
+    /// An algorithm with no parallel segments.
     #[error("algorithm has no segments")]
     EmptyAlgorithm,
 
+    /// A job names a function id absent from the worker registry.
     #[error("function {0:?} is not registered in the worker registry")]
     UnknownFunction(FuncId),
 
+    /// A referenced result is gone (released, or never stored).
     #[error("result of job {0:?} was released or never stored; a dynamically injected job may only reference keep-results or results of the current/previous segment")]
     ResultNotAvailable(JobId),
 
     // ---------------------------------------------------------------- comm
+    /// Send to a rank that terminated or never existed.
     #[error("rank {0:?} is unreachable (worker terminated or never spawned)")]
     RankUnreachable(Rank),
 
+    /// The communication world was torn down under a blocked receiver.
     #[error("communication world was shut down while rank {0:?} was blocked in recv")]
     WorldShutdown(Rank),
 
+    /// A collective operation failed mid-flight.
     #[error("collective {op} over {participants} ranks failed: {msg}")]
-    Collective { op: &'static str, participants: usize, msg: String },
+    Collective {
+        /// Collective name (`barrier`, `allreduce`, ...).
+        op: &'static str,
+        /// Ranks participating when it failed.
+        participants: usize,
+        /// Failure detail.
+        msg: String,
+    },
 
     // ---------------------------------------------------------------- data
+    /// A chunk was read as a different dtype than it holds.
     #[error("dtype mismatch: expected {expected:?}, got {got:?}")]
-    DtypeMismatch { expected: crate::data::Dtype, got: crate::data::Dtype },
+    DtypeMismatch {
+        /// The dtype the caller asked for.
+        expected: crate::data::Dtype,
+        /// The dtype the chunk holds.
+        got: crate::data::Dtype,
+    },
 
+    /// Chunk index past the end of a [`crate::data::FunctionData`].
     #[error("chunk index {index} out of bounds ({len} chunks)")]
-    ChunkIndex { index: usize, len: usize },
+    ChunkIndex {
+        /// The requested index.
+        index: usize,
+        /// Number of chunks present.
+        len: usize,
+    },
 
+    /// Result assembly failed (mismatched shapes, missing pieces).
     #[error("cannot assemble chunks: {0}")]
     Assemble(String),
 
     // ------------------------------------------------------------- runtime
+    /// An AOT artifact name missing from the manifest.
     #[error("artifact {0:?} not found in manifest")]
     UnknownArtifact(String),
 
+    /// Wrong number of inputs for an AOT artifact.
     #[error("artifact {name:?} expects {expected} inputs, got {got}")]
-    ArtifactArity { name: String, expected: usize, got: usize },
+    ArtifactArity {
+        /// Artifact name.
+        name: String,
+        /// Inputs the manifest declares.
+        expected: usize,
+        /// Inputs the caller supplied.
+        got: usize,
+    },
 
+    /// One artifact input failed validation (shape/dtype).
     #[error("artifact {name:?} input {index}: {msg}")]
-    ArtifactInput { name: String, index: usize, msg: String },
+    ArtifactInput {
+        /// Artifact name.
+        name: String,
+        /// 0-based input position.
+        index: usize,
+        /// What was wrong with it.
+        msg: String,
+    },
 
+    /// The artifact manifest is malformed.
     #[error("manifest error: {0}")]
     Manifest(String),
 
+    /// An error surfaced by the XLA/PJRT runtime.
     #[error("xla/pjrt error: {0}")]
     Xla(String),
 
+    /// A user function asked for the compute engine on an engine-less
+    /// worker.
     #[error("user function requested the compute engine but none is configured for this worker (set TopologyConfig.engine)")]
     NoEngine,
 
     // ------------------------------------------------------------- fault
+    /// A user function panicked (caught; the job fails, the rank lives).
     #[error("user function panicked: {0}")]
     UserPanic(String),
 
+    /// One sequence of a per-chunk job failed.
     #[error("sequence failed on chunk {index}: {msg}")]
-    Sequence { index: usize, msg: String },
+    Sequence {
+        /// Input-chunk index of the failing sequence (lowest failing
+        /// index wins deterministically).
+        index: usize,
+        /// The underlying error, stringified.
+        msg: String,
+    },
 
+    /// A worker rank vanished along with its retained results.
     #[error("worker {worker:?} lost; {jobs} retained job result(s) must be recomputed")]
-    WorkerLost { worker: Rank, jobs: usize },
+    WorkerLost {
+        /// The dead rank.
+        worker: Rank,
+        /// Kept results that died with it.
+        jobs: usize,
+    },
 
+    /// A job failed permanently (user error, abort-limit exceeded).
     #[error("job {job:?} failed during execution: {msg}")]
-    JobFailed { job: JobId, msg: String },
+    JobFailed {
+        /// The failing job.
+        job: JobId,
+        /// Failure detail.
+        msg: String,
+    },
 
     // ------------------------------------------------------------- config
+    /// Invalid topology / engine configuration.
     #[error("invalid configuration: {0}")]
     Config(String),
 
+    /// Filesystem error (config load, artifact read, bench output).
     #[error("i/o error: {0}")]
     Io(#[from] std::io::Error),
 
+    /// JSON parse error (config files, manifests).
     #[error("json error: {0}")]
     Json(#[from] crate::util::json::JsonError),
 }

@@ -36,6 +36,7 @@ pub struct FaultInjector {
 }
 
 impl FaultInjector {
+    /// An injector that never fires.
     pub fn none() -> Self {
         Self::default()
     }

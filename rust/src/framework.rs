@@ -1,7 +1,11 @@
 //! The user-facing facade: build a topology, register functions, run
 //! algorithms, get results + metrics.
 //!
-//! ```no_run
+//! Every configuration knob is wired through [`FrameworkBuilder`]; the
+//! repository `README.md` holds the canonical knob table (JSON key,
+//! builder method, default, effect).
+//!
+//! ```
 //! use hypar::prelude::*;
 //!
 //! let mut registry = FunctionRegistry::new();
@@ -36,7 +40,7 @@
 //!   whose jobs all mutate shared external state), or when a simpler,
 //!   stepwise schedule makes debugging easier.
 //!
-//! ```no_run
+//! ```
 //! use hypar::prelude::*;
 //! use hypar::job::registry::demo_registry;
 //!
@@ -75,6 +79,7 @@ use crate::worker::WorkerConfig;
 pub struct RunReport {
     /// Results of the jobs in the final parallel segment.
     pub results: BTreeMap<JobId, FunctionData>,
+    /// Aggregated run metrics.
     pub metrics: MetricsSnapshot,
 }
 
@@ -97,6 +102,7 @@ pub struct Framework {
 }
 
 impl Framework {
+    /// Start configuring a framework.
     pub fn builder() -> FrameworkBuilder {
         FrameworkBuilder::default()
     }
@@ -106,6 +112,7 @@ impl Framework {
         self.fault.clone()
     }
 
+    /// The topology this framework runs on.
     pub fn config(&self) -> &TopologyConfig {
         &self.cfg
     }
@@ -115,7 +122,7 @@ impl Framework {
         algo.validate()?;
         self.registry.check_algorithm(&algo)?;
 
-        let world: World<FwMsg> = World::new(self.cfg.cost_model());
+        let world: World<FwMsg> = World::new(self.cfg.comm_cost_model());
         let metrics = Arc::new(MetricsCollector::new());
 
         // Rank 0: master (this thread).
@@ -129,6 +136,8 @@ impl Framework {
             fault: self.fault.clone(),
             work_stealing: self.cfg.work_stealing,
             steal_granularity: self.cfg.steal_granularity,
+            cost_model: self.cfg.cost_model,
+            cost_ewma_alpha: self.cfg.cost_ewma_alpha,
             metrics: Some(metrics.clone()),
         };
         let subs: Vec<SubHandle> = (0..self.cfg.schedulers)
@@ -157,6 +166,8 @@ impl Framework {
                 release: self.release,
                 mode: self.cfg.execution_mode,
                 prefetch: self.cfg.speculative_prefetch,
+                cost_model: self.cfg.cost_model,
+                cost_ewma_alpha: self.cfg.cost_ewma_alpha,
             },
             &metrics,
         );
@@ -197,28 +208,33 @@ impl FrameworkBuilder {
         self
     }
 
+    /// Number of sub-schedulers (paper: fixed for the run, >= 1).
     pub fn schedulers(mut self, n: usize) -> Self {
         self.cfg.schedulers = n;
         self
     }
 
+    /// Upper bound of workers each sub-scheduler may spawn.
     pub fn workers_per_scheduler(mut self, n: usize) -> Self {
         self.cfg.workers_per_scheduler = n;
         self
     }
 
+    /// Cores per worker node (sequence threads + packing budget).
     pub fn cores_per_worker(mut self, n: usize) -> Self {
         self.cfg.cores_per_worker = n;
         self
     }
 
+    /// Spawn every worker eagerly at startup instead of on demand.
     pub fn prespawn_workers(mut self, yes: bool) -> Self {
         self.cfg.prespawn_workers = yes;
         self
     }
 
-    pub fn cost_model(mut self, m: CostModel) -> Self {
-        self.cfg.cost_model = crate::config::CostModelConfig {
+    /// Communication α/β cost model (JSON key `comm_cost_model`).
+    pub fn comm_cost_model(mut self, m: CostModel) -> Self {
+        self.cfg.comm_cost_model = crate::config::CostModelConfig {
             alpha_us: m.alpha_us,
             bandwidth_gbps: m.bandwidth_gbps,
             simulate: m.simulate,
@@ -226,6 +242,7 @@ impl FrameworkBuilder {
         self
     }
 
+    /// The user-function registry workers execute from.
     pub fn registry(mut self, r: FunctionRegistry) -> Self {
         self.registry = r;
         self
@@ -243,11 +260,13 @@ impl FrameworkBuilder {
         self
     }
 
+    /// Install a fault injector (tests arm it before `run`).
     pub fn fault_injector(mut self, f: Arc<FaultInjector>) -> Self {
         self.fault = Some(f);
         self
     }
 
+    /// When stored results are freed (default: at shutdown).
     pub fn release_policy(mut self, p: ReleasePolicy) -> Self {
         self.release = p;
         self
@@ -270,9 +289,10 @@ impl FrameworkBuilder {
     }
 
     /// Chunk-granular work stealing on the worker sequence pools
-    /// (default: on; DESIGN.md §8).  Off reverts to the paper's static
-    /// round-robin chunk split.  Values are identical either way — only
-    /// where and when chunks execute changes.
+    /// (default: on; DESIGN.md §8).  Off disables stealing; combine with
+    /// `cost_model(false)` for the paper's fully static round-robin chunk
+    /// split.  Values are identical either way — only where and when
+    /// chunks execute changes.
     pub fn work_stealing(mut self, on: bool) -> Self {
         self.cfg.work_stealing = on;
         self
@@ -280,11 +300,33 @@ impl FrameworkBuilder {
 
     /// Chunks taken per steal operation (>= 1, default 1).  Raise it to
     /// amortise deque locking when jobs have very many tiny chunks.
+    /// Ignored while [`Self::cost_model`] is on — the steal amount then
+    /// adapts to the victim's estimated backlog cost.
     pub fn steal_granularity(mut self, chunks: usize) -> Self {
         self.cfg.steal_granularity = chunks;
         self
     }
 
+    /// Feedback-driven cost-model scheduling (default: on; DESIGN.md §9).
+    /// Measured per-chunk / per-job execution costs drive an LPT
+    /// pre-balanced chunk deal, cost-halving adaptive steals, and
+    /// estimated-outstanding-cost placement tie-breaks.  Off reverts every
+    /// decision to the static policies (the paper-faithful split stays
+    /// available); computed values are byte-identical either way.
+    pub fn cost_model(mut self, on: bool) -> Self {
+        self.cfg.cost_model = on;
+        self
+    }
+
+    /// EWMA smoothing factor for the execution cost tables (weight of the
+    /// newest observation, `(0, 1]`; default
+    /// [`crate::cost::DEFAULT_COST_EWMA_ALPHA`]).
+    pub fn cost_ewma_alpha(mut self, alpha: f64) -> Self {
+        self.cfg.cost_ewma_alpha = alpha;
+        self
+    }
+
+    /// Validate the configuration and produce the framework.
     pub fn build(self) -> Result<Framework> {
         self.cfg.validate()?;
         let engine_factory = match (&self.engine_factory, &self.cfg.engine) {

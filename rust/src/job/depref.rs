@@ -16,7 +16,12 @@ pub enum ChunkRange {
     /// Every chunk (`Rk`).
     All,
     /// Chunk indices `lo..hi`, half-open (`Rk[lo..hi]`).
-    Range { lo: usize, hi: usize },
+    Range {
+        /// First chunk index (inclusive).
+        lo: usize,
+        /// End chunk index (exclusive).
+        hi: usize,
+    },
 }
 
 impl ChunkRange {
@@ -36,6 +41,7 @@ impl ChunkRange {
         }
     }
 
+    /// Whether this is the whole-result reference.
     pub fn is_all(self) -> bool {
         matches!(self, ChunkRange::All)
     }
@@ -44,7 +50,9 @@ impl ChunkRange {
 /// One input source of a job: `range` of job `job`'s result chunks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ChunkRef {
+    /// The producing job.
     pub job: JobId,
+    /// Which chunks of its result.
     pub range: ChunkRange,
 }
 

@@ -72,8 +72,11 @@ impl From<u32> for ThreadCount {
 /// definition language plus its identity.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
+    /// Job identity (unique per algorithm).
     pub id: JobId,
+    /// Registered user function to execute.
     pub func: FuncId,
+    /// Requested intra-job parallelism.
     pub threads: ThreadCount,
     /// Result references consumed as input, in chunk order.
     pub inputs: Vec<ChunkRef>,
@@ -83,6 +86,8 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
+    /// New job `id` running function `func` with `threads` sequences
+    /// (0 = all cores), no inputs, keep off.
     pub fn new(id: u32, func: u32, threads: u32) -> Self {
         JobSpec {
             id: JobId(id),
@@ -93,11 +98,13 @@ impl JobSpec {
         }
     }
 
+    /// Set the job's input result references.
     pub fn with_inputs(mut self, inputs: Vec<ChunkRef>) -> Self {
         self.inputs = inputs;
         self
     }
 
+    /// Set keep-results retention.
     pub fn with_keep(mut self, keep: bool) -> Self {
         self.keep = keep;
         self
@@ -108,8 +115,16 @@ impl JobSpec {
 /// job's results or another job injected in the same batch (by local id).
 #[derive(Debug, Clone, PartialEq)]
 pub enum InjectedRef {
+    /// Reference to an already-known job's result.
     Existing(ChunkRef),
-    Local { local_id: u32, range: ChunkRange },
+    /// Reference to another job of the same injection batch, by its
+    /// batch-local id.
+    Local {
+        /// The referenced job's batch-local id.
+        local_id: u32,
+        /// Chunk range consumed from it.
+        range: ChunkRange,
+    },
 }
 
 /// A job created at runtime by another job (paper §3.3: "during runtime
@@ -119,10 +134,15 @@ pub enum InjectedRef {
 /// other before that.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InjectedJob {
+    /// Batch-local id other injected jobs may reference.
     pub local_id: u32,
+    /// Registered user function to execute.
     pub func: FuncId,
+    /// Requested intra-job parallelism.
     pub threads: ThreadCount,
+    /// Inputs: existing results or batch-local references.
     pub inputs: Vec<InjectedRef>,
+    /// Keep-results retention for the injected job.
     pub keep: bool,
 }
 
@@ -130,7 +150,9 @@ pub struct InjectedJob {
 /// injecting job belongs to (0 = same segment, 1 = next, ...).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Injection {
+    /// Target segment, relative to the injecting job's (0 = same).
     pub segment_delta: usize,
+    /// The injected jobs.
     pub jobs: Vec<InjectedJob>,
 }
 

@@ -21,8 +21,11 @@ use crate::data::{DataChunk, FunctionData};
 use crate::error::{Error, Result};
 use crate::runtime::ComputeBackend;
 
+/// The paper's function signature: whole input → whole output.
 pub type PlainFn = dyn Fn(&FunctionData, &mut FunctionData) -> Result<()> + Send + Sync;
+/// A chunk→chunk map, fanned over the job's sequences.
 pub type PerChunkFn = dyn Fn(&DataChunk) -> Result<DataChunk> + Send + Sync;
+/// Paper signature plus the execution context (engine, injection).
 pub type CtxFn = dyn Fn(&FunctionData, &mut FunctionData, &JobCtx) -> Result<()> + Send + Sync;
 
 /// Shared handle to a per-chunk function (what the sequence pool fans out).
@@ -31,8 +34,11 @@ pub type PerChunkShared = Arc<PerChunkFn>;
 /// A registered user function.
 #[derive(Clone)]
 pub enum UserFunction {
+    /// Exactly the paper's signature, one sequence.
     Plain(Arc<PlainFn>),
+    /// Chunk→chunk map, distributed over the job's sequences.
     PerChunk(Arc<PerChunkFn>),
+    /// Paper signature plus engine access and dynamic job injection.
     WithCtx(Arc<CtxFn>),
 }
 
@@ -61,6 +67,7 @@ pub struct JobCtx<'a> {
 }
 
 impl<'a> JobCtx<'a> {
+    /// Context for one execution of `job` with `n_threads` sequences.
     pub fn new(job: JobId, n_threads: usize, engine: Option<&'a dyn ComputeBackend>) -> Self {
         JobCtx { job, n_threads, engine, injections: RefCell::new(Vec::new()) }
     }
@@ -70,6 +77,7 @@ impl<'a> JobCtx<'a> {
         self.engine.ok_or(Error::NoEngine)
     }
 
+    /// Whether a compute engine is configured for this worker.
     pub fn has_engine(&self) -> bool {
         self.engine.is_some()
     }
@@ -77,6 +85,45 @@ impl<'a> JobCtx<'a> {
     /// Dynamically add jobs to the segment `segment_delta` segments after
     /// the current one (0 = current segment; paper §3.3). The master
     /// allocates real job ids when the injection arrives.
+    ///
+    /// The job-injection entry point, end to end:
+    ///
+    /// ```
+    /// use hypar::prelude::*;
+    /// use hypar::job::InjectedJob;
+    ///
+    /// let mut registry = FunctionRegistry::new();
+    /// registry.register_with_ctx(1, "spawner", |_input, output, ctx| {
+    ///     output.push(DataChunk::scalar_f32(21.0));
+    ///     // Inject a consumer of this job's own result into the next
+    ///     // parallel segment.
+    ///     ctx.inject(1, vec![InjectedJob {
+    ///         local_id: 0,
+    ///         func: FuncId(2),
+    ///         threads: ThreadCount::Exact(1),
+    ///         inputs: vec![InjectedRef::Existing(ChunkRef::all(ctx.job))],
+    ///         keep: false,
+    ///     }]);
+    ///     Ok(())
+    /// });
+    /// registry.register_per_chunk(2, "double", |c| {
+    ///     DataChunk::from_f32(c.as_f32().unwrap().iter().map(|v| v * 2.0).collect())
+    /// });
+    ///
+    /// let report = Framework::builder()
+    ///     .schedulers(1)
+    ///     .workers_per_scheduler(1)
+    ///     .registry(registry)
+    ///     .build()
+    ///     .unwrap()
+    ///     .run(Algorithm::parse("J1(1,1,0);").unwrap())
+    ///     .unwrap();
+    /// // The injected job got the next free id (2) and is the final segment.
+    /// assert_eq!(
+    ///     report.result(2).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+    ///     42.0
+    /// );
+    /// ```
     pub fn inject(&self, segment_delta: usize, jobs: Vec<InjectedJob>) {
         self.injections
             .borrow_mut()
@@ -105,10 +152,12 @@ impl std::fmt::Debug for FunctionRegistry {
 }
 
 impl FunctionRegistry {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Register `f` under numeric id `id` (replacing any previous entry).
     pub fn register(&mut self, id: u32, name: impl Into<String>, f: UserFunction) -> &mut Self {
         self.map.insert(FuncId(id), (name.into(), f));
         self
@@ -132,6 +181,7 @@ impl FunctionRegistry {
         self.register(id, name, UserFunction::PerChunk(Arc::new(move |c| Ok(f(c)))))
     }
 
+    /// Fallible chunk→chunk map (errors fail the job deterministically).
     pub fn register_per_chunk_try<F>(&mut self, id: u32, name: impl Into<String>, f: F) -> &mut Self
     where
         F: Fn(&DataChunk) -> Result<DataChunk> + Send + Sync + 'static,
@@ -147,6 +197,7 @@ impl FunctionRegistry {
         self.register(id, name, UserFunction::WithCtx(Arc::new(f)))
     }
 
+    /// Look up a function by id.
     pub fn get(&self, id: FuncId) -> Result<&UserFunction> {
         self.map
             .get(&id)
@@ -154,18 +205,22 @@ impl FunctionRegistry {
             .ok_or(Error::UnknownFunction(id))
     }
 
+    /// Human-readable name of a registered function.
     pub fn name(&self, id: FuncId) -> Option<&str> {
         self.map.get(&id).map(|(n, _)| n.as_str())
     }
 
+    /// Whether `id` is registered.
     pub fn contains(&self, id: FuncId) -> bool {
         self.map.contains_key(&id)
     }
 
+    /// Number of registered functions.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether no functions are registered.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

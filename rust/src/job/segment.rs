@@ -13,18 +13,22 @@ use crate::error::{Error, Result};
 /// One set of concurrently executable jobs.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ParallelSegment {
+    /// The segment's jobs, in declaration order.
     pub jobs: Vec<JobSpec>,
 }
 
 impl ParallelSegment {
+    /// Wrap a job list as one segment.
     pub fn new(jobs: Vec<JobSpec>) -> Self {
         ParallelSegment { jobs }
     }
 
+    /// Number of jobs in the segment.
     pub fn len(&self) -> usize {
         self.jobs.len()
     }
 
+    /// Whether the segment has no jobs.
     pub fn is_empty(&self) -> bool {
         self.jobs.is_empty()
     }
@@ -33,10 +37,12 @@ impl ParallelSegment {
 /// The complete (static) algorithm description held by the master.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Algorithm {
+    /// The segments, in execution order.
     pub segments: Vec<ParallelSegment>,
 }
 
 impl Algorithm {
+    /// Wrap a segment list (validate separately).
     pub fn new(segments: Vec<ParallelSegment>) -> Self {
         Algorithm { segments }
     }
@@ -51,10 +57,12 @@ impl Algorithm {
         AlgorithmBuilder { segments: Vec::new() }
     }
 
+    /// Every job of every segment, in order.
     pub fn all_jobs(&self) -> impl Iterator<Item = &JobSpec> {
         self.segments.iter().flat_map(|s| s.jobs.iter())
     }
 
+    /// Total number of jobs.
     pub fn job_count(&self) -> usize {
         self.segments.iter().map(|s| s.jobs.len()).sum()
     }
@@ -140,11 +148,13 @@ pub struct AlgorithmBuilder {
 }
 
 impl AlgorithmBuilder {
+    /// Append one segment.
     pub fn segment(mut self, jobs: Vec<JobSpec>) -> Self {
         self.segments.push(ParallelSegment::new(jobs));
         self
     }
 
+    /// Validate and produce the algorithm.
     pub fn build(self) -> Result<Algorithm> {
         let algo = Algorithm::new(self.segments);
         algo.validate()?;

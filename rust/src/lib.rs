@@ -42,15 +42,27 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! The repository `README.md` walks through porting a sequential solver
+//! step by step and holds the canonical config-knob table; the short
+//! version:
+//!
+//! ```
 //! use hypar::prelude::*;
 //!
+//! // 1. Register the sequential code's functions.
 //! let mut registry = FunctionRegistry::new();
-//! registry.register_per_chunk(1, "double", |c| {
+//! registry.register_plain(1, "emit", |_input, output| {
+//!     output.push(DataChunk::from_f32(vec![1.0, 2.0, 3.0]));
+//!     Ok(())
+//! });
+//! registry.register_per_chunk(2, "double", |c| {
 //!     DataChunk::from_f32(c.as_f32().unwrap().iter().map(|v| v * 2.0).collect())
 //! });
 //!
-//! let algo = Algorithm::parse("J1(1,0,0);").unwrap();
+//! // 2. Describe the parallel structure (job script or builder API).
+//! let algo = Algorithm::parse("J1(1,1,0); J2(2,0,R1);").unwrap();
+//!
+//! // 3. Run it on a simulated cluster.
 //! let report = Framework::builder()
 //!     .schedulers(2)
 //!     .workers_per_scheduler(2)
@@ -59,11 +71,16 @@
 //!     .unwrap()
 //!     .run(algo)
 //!     .unwrap();
-//! # let _ = report;
+//! assert_eq!(
+//!     report.result(2).unwrap().concat_f32().unwrap().as_f32().unwrap(),
+//!     &[2.0, 4.0, 6.0]
+//! );
 //! ```
+#![warn(missing_docs)]
 
 pub mod comm;
 pub mod config;
+pub mod cost;
 pub mod data;
 pub mod error;
 pub mod fault;

@@ -8,7 +8,7 @@
 //! compute time, the quantity the paper's "~10 % from tailored MPI" claim
 //! is about.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -53,11 +53,53 @@ impl JobTimes {
     }
 }
 
+/// Estimate-vs-actual accuracy of the cost model for one job kind
+/// (DESIGN.md §9).  `est_samples` counts only completions that had an
+/// estimate to compare against (the kind's first completion is the
+/// estimate's seed and has nothing to be scored on).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostModelStat {
+    /// Completions observed for this kind.
+    pub samples: u64,
+    /// Sum of observed execution microseconds (mean = `/ samples`).
+    pub actual_sum_us: u64,
+    /// The EWMA estimate in force when the latest completion arrived.
+    pub last_est_us: f64,
+    /// Completions that had a prior estimate to score.
+    pub est_samples: u64,
+    /// Sum of |estimate - actual| over the scored completions.
+    pub abs_err_sum_us: f64,
+}
+
+impl CostModelStat {
+    /// Mean observed execution time in microseconds.
+    pub fn mean_actual_us(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.actual_sum_us as f64 / self.samples as f64
+        }
+    }
+
+    /// Mean absolute estimate error in microseconds (0 until a second
+    /// completion of the kind gives the EWMA something to be wrong about).
+    pub fn mean_abs_err_us(&self) -> f64 {
+        if self.est_samples == 0 {
+            0.0
+        } else {
+            self.abs_err_sum_us / self.est_samples as f64
+        }
+    }
+}
+
 /// One segment's span and job population.
 #[derive(Debug, Clone, Default)]
 pub struct SegmentTimes {
+    /// When the segment opened (µs since run start).
     pub opened_us: u64,
+    /// When its last job finished (µs since run start).
     pub closed_us: u64,
+    /// Statically declared jobs.
     pub jobs: usize,
     /// Jobs injected into this segment at runtime (dynamic job creation).
     pub injected: usize,
@@ -66,18 +108,28 @@ pub struct SegmentTimes {
 /// Aggregated, serialisable view of one run.
 #[derive(Debug, Clone, Default)]
 pub struct MetricsSnapshot {
+    /// Total run wall time in microseconds.
     pub wall_time_us: u64,
+    /// Per-segment spans and job populations.
     pub segments: Vec<SegmentTimes>,
+    /// Per-job lifecycle timestamps, keyed by job id.
     pub jobs: HashMap<u32, JobTimes>,
     /// Consumer job → its distinct producer jobs (the executed dependency
     /// DAG; feeds [`Self::critical_path`]).
     pub job_deps: HashMap<u32, Vec<u32>>,
+    /// Control + data messages delivered.
     pub comm_msgs: u64,
+    /// Bytes shipped (payload + headers).
     pub comm_bytes: u64,
+    /// Summed α/β-modelled transfer time.
     pub modelled_comm_us: u64,
+    /// Jobs that completed execution.
     pub jobs_executed: usize,
+    /// Jobs created at runtime by other jobs.
     pub jobs_injected: usize,
+    /// Worker processes spawned over the run.
     pub workers_spawned: usize,
+    /// Jobs re-executed because their result was lost.
     pub recomputed_jobs: usize,
     /// Jobs assigned while an *earlier* segment still had unfinished jobs —
     /// the pipeline-overlap counter.  Always 0 under barrier execution;
@@ -92,6 +144,13 @@ pub struct MetricsSnapshot {
     /// Assignment inputs found already materialised in the target
     /// scheduler's store thanks to a prefetch hint.
     pub prefetch_hits: usize,
+    /// Cancel hints sent for mispredicted / stale prefetches (the copies
+    /// the predicted target pulled are released instead of lingering
+    /// until shutdown).
+    pub prefetch_cancels: usize,
+    /// Cost-model accuracy per job kind: estimate vs observed execution
+    /// time (DESIGN.md §9; empty while `cost_model` is off).
+    pub cost_model: BTreeMap<u32, CostModelStat>,
     /// Chunks (or packed plain tasks) obtained by work stealing across all
     /// worker sequence pools (DESIGN.md §8).
     pub seq_steals: u64,
@@ -289,6 +348,24 @@ impl MetricsSnapshot {
             ("results_released", Json::num(self.results_released as f64)),
             ("prefetches_sent", Json::num(self.prefetches_sent as f64)),
             ("prefetch_hits", Json::num(self.prefetch_hits as f64)),
+            ("prefetch_cancels", Json::num(self.prefetch_cancels as f64)),
+            (
+                "cost_model",
+                Json::Arr(
+                    self.cost_model
+                        .iter()
+                        .map(|(&func, s)| {
+                            Json::obj(vec![
+                                ("func", Json::num(func as f64)),
+                                ("samples", Json::num(s.samples as f64)),
+                                ("mean_actual_us", Json::num(s.mean_actual_us())),
+                                ("last_est_us", Json::num(s.last_est_us)),
+                                ("mean_abs_err_us", Json::num(s.mean_abs_err_us())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("seq_steals", Json::num(self.seq_steals as f64)),
             ("seq_busy_us", Json::num(self.seq_busy_us as f64)),
             ("seq_idle_us", Json::num(self.seq_idle_us as f64)),
@@ -365,6 +442,7 @@ impl Default for MetricsCollector {
 }
 
 impl MetricsCollector {
+    /// Start the clock now.
     pub fn new() -> Self {
         MetricsCollector { start: Instant::now(), inner: Mutex::new(MetricsSnapshot::default()) }
     }
@@ -385,6 +463,7 @@ impl MetricsCollector {
         });
     }
 
+    /// `job` was placed on a scheduler with `input_bytes` shipped.
     pub fn job_assigned(&self, job: JobId, input_bytes: u64) {
         let t = self.now_us();
         self.with(|m| {
@@ -405,6 +484,7 @@ impl MetricsCollector {
         self.with(|m| m.pipeline_overlap_jobs += 1);
     }
 
+    /// `job` began executing on `worker`.
     pub fn job_started(&self, job: JobId, worker: u32) {
         let t = self.now_us();
         self.with(|m| {
@@ -414,6 +494,7 @@ impl MetricsCollector {
         });
     }
 
+    /// `job` finished, shipping `output_bytes` back.
     pub fn job_finished(&self, job: JobId, output_bytes: u64) {
         let t = self.now_us();
         self.with(|m| {
@@ -424,6 +505,7 @@ impl MetricsCollector {
         });
     }
 
+    /// A segment with `jobs` static jobs opened.
     pub fn segment_opened(&self, jobs: usize) {
         let t = self.now_us();
         self.with(|m| {
@@ -431,6 +513,7 @@ impl MetricsCollector {
         });
     }
 
+    /// The most recently opened segment drained (barrier mode).
     pub fn segment_closed(&self) {
         let t = self.now_us();
         self.with(|m| {
@@ -451,6 +534,7 @@ impl MetricsCollector {
         });
     }
 
+    /// `count` jobs were injected into the open segment (barrier mode).
     pub fn jobs_injected(&self, count: usize) {
         self.with(|m| {
             m.jobs_injected += count;
@@ -471,10 +555,12 @@ impl MetricsCollector {
         });
     }
 
+    /// A worker process was spawned.
     pub fn worker_spawned(&self) {
         self.with(|m| m.workers_spawned += 1);
     }
 
+    /// A lost result's producer was queued for recomputation.
     pub fn job_recomputed(&self) {
         self.with(|m| m.recomputed_jobs += 1);
     }
@@ -504,6 +590,27 @@ impl MetricsCollector {
     /// An assignment input was already warm thanks to a prefetch hint.
     pub fn prefetch_hit(&self) {
         self.with(|m| m.prefetch_hits += 1);
+    }
+
+    /// The master cancelled a mispredicted / stale prefetch copy.
+    pub fn prefetch_cancelled(&self) {
+        self.with(|m| m.prefetch_cancels += 1);
+    }
+
+    /// One completion observed by the cost model: `est_us` is the EWMA
+    /// estimate that was in force (None on the kind's first completion),
+    /// `actual_us` the measured execution time.
+    pub fn cost_observed(&self, func: u32, est_us: Option<f64>, actual_us: u64) {
+        self.with(|m| {
+            let e = m.cost_model.entry(func).or_default();
+            e.samples += 1;
+            e.actual_sum_us += actual_us;
+            if let Some(est) = est_us {
+                e.last_est_us = est;
+                e.est_samples += 1;
+                e.abs_err_sum_us += (est - actual_us as f64).abs();
+            }
+        });
     }
 
     /// A sequence-pool chunk job finished; `imbalance` is its busiest
@@ -663,6 +770,31 @@ mod tests {
         assert_eq!(back.get("mean_imbalance").unwrap().as_f64(), Some(2.0));
         assert_eq!(back.get("max_imbalance").unwrap().as_f64(), Some(3.0));
         assert_eq!(back.get("pool_jobs").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn cost_model_stats_fold_and_export() {
+        let c = MetricsCollector::new();
+        c.cost_observed(5, None, 1000); // first completion seeds, unscored
+        c.cost_observed(5, Some(1000.0), 1200);
+        c.cost_observed(5, Some(1060.0), 1060);
+        c.prefetch_cancelled();
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        let s = &snap.cost_model[&5];
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.est_samples, 2);
+        assert!((s.mean_actual_us() - 3260.0 / 3.0).abs() < 1e-9);
+        assert!((s.mean_abs_err_us() - 100.0).abs() < 1e-9, "only the miss counts");
+        assert_eq!(s.last_est_us, 1060.0);
+        assert_eq!(snap.prefetch_cancels, 1);
+        let text = snap.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        let arr = back.get("cost_model").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("func").unwrap().as_usize(), Some(5));
+        assert_eq!(arr[0].get("samples").unwrap().as_usize(), Some(3));
+        assert!(arr[0].get("mean_abs_err_us").unwrap().as_f64().is_some());
+        assert_eq!(back.get("prefetch_cancels").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -14,11 +14,14 @@ use crate::util::json::{self, Json};
 /// Shape + dtype of one artifact input or output.
 #[derive(Debug, Clone)]
 pub struct IoSpec {
+    /// Tensor dimensions (row-major).
     pub shape: Vec<usize>,
+    /// Element type name (`"f32"`, ...).
     pub dtype: String,
 }
 
 impl IoSpec {
+    /// Product of the dimensions.
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
@@ -58,6 +61,7 @@ impl IoSpec {
 /// One AOT artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// HLO text file name, relative to the artifact directory.
     pub file: String,
     /// Family: `jacobi_block`, `jacobi_full`, `heat_strip`, `dot_block`,
     /// `axpy_block`, `matvec_block`.
@@ -66,7 +70,9 @@ pub struct ArtifactEntry {
     pub variant: String,
     /// Family-specific integer parameters (`n`, `bm`, `rows`, `w`, ...).
     pub params: BTreeMap<String, i64>,
+    /// Input tensor specs, in call order.
     pub inputs: Vec<IoSpec>,
+    /// Output tensor specs, in result order.
     pub outputs: Vec<IoSpec>,
 }
 
@@ -113,9 +119,11 @@ impl ArtifactEntry {
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Row-block size the kernels were lowered for.
     pub block_n: usize,
     /// Paper size → padded size (`"2709" -> 2816`, Figure-3 configs).
     pub paper_sizes: BTreeMap<String, usize>,
+    /// Artifact entries keyed by name.
     pub artifacts: BTreeMap<String, ArtifactEntry>,
 }
 
@@ -155,16 +163,19 @@ impl Manifest {
         Ok(Manifest { block_n, paper_sizes, artifacts })
     }
 
+    /// Look up an artifact by name.
     pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
         self.artifacts
             .get(name)
             .ok_or_else(|| Error::UnknownArtifact(name.to_string()))
     }
 
+    /// Whether `name` is in the manifest.
     pub fn contains(&self, name: &str) -> bool {
         self.artifacts.contains_key(name)
     }
 
+    /// All artifact names, sorted.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.artifacts.keys().map(String::as_str)
     }

@@ -88,24 +88,29 @@ impl Engine {
         ))
     }
 
+    /// Load the engine from an artifact directory (reads `manifest.json`).
     pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Self> {
         let _ = artifact_dir;
         Self::unavailable()
     }
 
+    /// Engine over an already-parsed manifest rooted at `dir`.
     pub fn with_manifest(dir: impl Into<PathBuf>, manifest: Arc<Manifest>) -> Result<Self> {
         let _ = (dir.into(), manifest);
         Self::unavailable()
     }
 
+    /// Pre-compile the named artifacts (first-use latency off the hot path).
     pub fn warmup(&self, _names: &[&str]) -> Result<()> {
         Self::unavailable()
     }
 
+    /// Device buffers currently cached.
     pub fn cached_buffers(&self) -> usize {
         0
     }
 
+    /// Executables currently cached.
     pub fn cached_executables(&self) -> usize {
         0
     }
@@ -287,10 +292,12 @@ pub struct MockBackend {
 }
 
 impl MockBackend {
+    /// Empty mock (no artifacts).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Register a closure as artifact `name`.
     pub fn with(
         mut self,
         name: impl Into<String>,

@@ -16,7 +16,9 @@ use crate::job::{ChunkRef, Injection, InjectedRef, JobId, JobSpec};
 /// Resolved injection: absolute target segment index → new job specs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ResolvedInjection {
+    /// Absolute segment the jobs land in.
     pub segment_index: usize,
+    /// The injected jobs with real ids allocated.
     pub jobs: Vec<JobSpec>,
 }
 

@@ -84,6 +84,7 @@ pub struct JobGraph {
 }
 
 impl JobGraph {
+    /// Empty graph.
     pub fn new() -> Self {
         Self::default()
     }
@@ -324,6 +325,7 @@ impl JobGraph {
             .min()
     }
 
+    /// Whether every node is `Done` (served by the frontier index).
     pub fn all_done(&self) -> bool {
         let fast = self.frontier().is_none();
         debug_assert_eq!(
@@ -354,18 +356,22 @@ impl JobGraph {
         out
     }
 
+    /// Whether `job` has a node.
     pub fn contains(&self, job: JobId) -> bool {
         self.nodes.contains_key(&job)
     }
 
+    /// Lifecycle state of `job`'s node, if present.
     pub fn state(&self, job: JobId) -> Option<NodeState> {
         self.nodes.get(&job).map(|n| n.state)
     }
 
+    /// Segment `job` was declared in, if present.
     pub fn segment_of(&self, job: JobId) -> Option<usize> {
         self.nodes.get(&job).map(|n| n.segment)
     }
 
+    /// Whether `job`'s result is currently materialised.
     pub fn is_result_available(&self, job: JobId) -> bool {
         self.available.contains(&job)
     }
@@ -387,10 +393,12 @@ impl JobGraph {
         out
     }
 
+    /// Number of nodes.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Whether the graph has no nodes.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }

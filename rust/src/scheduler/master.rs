@@ -6,10 +6,10 @@
 //!
 //! Two control planes share this file (DESIGN.md §7):
 //!
-//! * **Barrier** ([`Master::drive_barrier`]) — the paper's literal model:
+//! * **Barrier** (`Master::drive_barrier`) — the paper's literal model:
 //!   segments execute in order and segment *k+1* starts only when every job
 //!   of segment *k* (including injected ones) has terminated.
-//! * **Dataflow** ([`Master::drive_dataflow`], the default) — a
+//! * **Dataflow** (`Master::drive_dataflow`, the default) — a
 //!   dependency-DAG executor built on [`super::graph::JobGraph`]: a job is
 //!   assigned the moment every result it references is available, across
 //!   segment boundaries.  Segment indices survive as the injection
@@ -23,6 +23,7 @@ use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
 use crate::comm::{Comm, Rank};
 use crate::config::ExecutionMode;
+use crate::cost::CostTable;
 use crate::data::FunctionData;
 use crate::error::{Error, Result};
 use crate::job::{Algorithm, ChunkRange, Injection, JobId, JobSpec};
@@ -48,18 +49,30 @@ pub enum ReleasePolicy {
     /// jobs), and a result is additionally held until its graph out-edges
     /// have drained — dependency-count release instead of segment-close
     /// release (DESIGN.md §6).
-    Lagged { lag: usize },
+    Lagged {
+        /// Segments a result survives past its last known reference.
+        lag: usize,
+    },
 }
 
 /// Master-side run parameters.
 pub struct MasterConfig {
+    /// Sub-scheduler ranks the master assigns to.
     pub subs: Vec<Rank>,
+    /// When stored results are freed.
     pub release: ReleasePolicy,
+    /// Barrier vs dataflow control plane.
     pub mode: ExecutionMode,
     /// Speculative input prefetch (dataflow mode, DESIGN.md §7): hint the
     /// probable target of a `Waiting` job with all inputs but one
     /// materialised to pull the remote ones early.
     pub prefetch: bool,
+    /// Feedback-driven cost model (DESIGN.md §9): fold observed job
+    /// execution times into a per-kind EWMA and break placement ties by
+    /// estimated outstanding cost instead of queue length.
+    pub cost_model: bool,
+    /// EWMA smoothing factor of the cost table (`(0, 1]`).
+    pub cost_ewma_alpha: f64,
 }
 
 /// Drive one algorithm to completion. Returns the results of the final
@@ -88,6 +101,17 @@ struct Master<'a> {
     available: HashSet<JobId>,
     last_use: HashMap<JobId, usize>,
     load: HashMap<Rank, usize>,
+    /// Per-job-kind EWMA of observed execution time (DESIGN.md §9; only
+    /// fed while `cfg.cost_model` is on).
+    costs: CostTable,
+    /// Estimated execution microseconds charged per in-flight job at
+    /// assignment (refunded when the job leaves the in-flight set, so the
+    /// books stay balanced even when the estimate has drifted since).
+    est_charged: HashMap<JobId, u64>,
+    /// Estimated outstanding execution microseconds per sub-scheduler —
+    /// the cost model's replacement for queue length in placement
+    /// tie-breaks.
+    est_load: HashMap<Rank, u64>,
     pending: HashSet<JobId>,
     /// Abort counts per job — a cycle-breaker: a job repeatedly aborted by
     /// its scheduler indicates an unrecoverable condition, not a fault.
@@ -117,8 +141,11 @@ struct Master<'a> {
     lag_parked: BTreeMap<usize, Vec<JobId>>,
     /// Membership set for `lag_parked` (dedupe).
     parked: HashSet<JobId>,
-    /// Jobs a prefetch hint was already sent for.
-    prefetch_sent: HashSet<JobId>,
+    /// Outstanding prefetch hints: hinted job → (predicted target, hinted
+    /// source jobs).  Resolved at assignment — a mispredicted target gets
+    /// cancel hints (`ReleaseResult`) for the copies it pulled — or on
+    /// node re-entry, which also re-opens the hint window for the job.
+    prefetch_hints: HashMap<JobId, (Rank, Vec<JobId>)>,
 }
 
 /// A job aborted more often than this fails the run.
@@ -135,6 +162,7 @@ fn distinct_inputs(spec: &JobSpec) -> Vec<JobId> {
 
 impl<'a> Master<'a> {
     fn new(comm: &'a mut Comm<FwMsg>, cfg: MasterConfig, metrics: &'a MetricsCollector) -> Self {
+        let costs = CostTable::new(cfg.cost_ewma_alpha);
         Master {
             comm,
             cfg,
@@ -147,6 +175,9 @@ impl<'a> Master<'a> {
             available: HashSet::new(),
             last_use: HashMap::new(),
             load: HashMap::new(),
+            costs,
+            est_charged: HashMap::new(),
+            est_load: HashMap::new(),
             pending: HashSet::new(),
             abort_counts: HashMap::new(),
             next_id: 0,
@@ -158,7 +189,7 @@ impl<'a> Master<'a> {
             release_candidates: Vec::new(),
             lag_parked: BTreeMap::new(),
             parked: HashSet::new(),
-            prefetch_sent: HashSet::new(),
+            prefetch_hints: HashMap::new(),
         }
     }
 
@@ -260,7 +291,8 @@ impl<'a> Master<'a> {
 
     fn handle_barrier(&mut self, msg: FwMsg, to_assign: &mut VecDeque<JobId>) -> Result<()> {
         match msg {
-            FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes } => {
+            FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes, exec_us } => {
+                self.observe_cost(job, exec_us);
                 // Process injections before completing the job: a batch
                 // may target the *current* segment.
                 if !injections.is_empty() {
@@ -506,9 +538,11 @@ impl<'a> Master<'a> {
             return;
         }
         for job in candidates {
-            // One hint per job: the window opens once per missing input,
-            // and a wrong prediction only costs one redundant transfer.
-            if !self.prefetch_sent.insert(job) {
+            // One hint per open window: the entry is cleared when the job
+            // is assigned (hit or cancel) or re-enters after a loss, so a
+            // job whose window re-opens can be hinted afresh — and a wrong
+            // prediction costs one redundant (and now cancelled) transfer.
+            if self.prefetch_hints.contains_key(&job) {
                 continue;
             }
             let Some(spec) = self.specs.get(&job) else { continue };
@@ -525,6 +559,7 @@ impl<'a> Master<'a> {
                 &self.owners,
                 &self.result_bytes,
                 &self.load,
+                &self.est_load,
                 &self.cfg.subs,
             );
             let mut seen = HashSet::new();
@@ -538,6 +573,8 @@ impl<'a> Master<'a> {
             if sources.is_empty() {
                 continue; // everything already local to the prediction
             }
+            self.prefetch_hints
+                .insert(job, (target, sources.iter().map(|l| l.job).collect()));
             self.metrics.prefetch_sent();
             let _ = self
                 .comm
@@ -567,7 +604,8 @@ impl<'a> Master<'a> {
 
     fn handle_dataflow(&mut self, msg: FwMsg) -> Result<()> {
         match msg {
-            FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes } => {
+            FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes, exec_us } => {
+                self.observe_cost(job, exec_us);
                 // Insert injected nodes *before* completing the job, so a
                 // producer's dependents (e.g. next-iteration consumers of a
                 // kept matrix block) are visible to the release pass.
@@ -678,7 +716,14 @@ impl<'a> Master<'a> {
     /// Re-enter a node for (re-)execution, keeping the per-segment
     /// outstanding counters consistent: only a `Done` node re-opens its
     /// segment (running/waiting nodes never left it).
+    ///
+    /// A re-entered node's outstanding prefetch hint is cancelled: the
+    /// prediction was made against inputs that may no longer exist, and
+    /// clearing the entry re-opens the hint window for the recovery pass.
     fn reenter_dataflow(&mut self, job: JobId) {
+        if let Some((predicted, srcs)) = self.prefetch_hints.remove(&job) {
+            self.cancel_prefetch(predicted, &srcs);
+        }
         let was_done = self.graph.state(job) == Some(NodeState::Done);
         self.graph.reenter(job);
         if was_done {
@@ -845,7 +890,7 @@ impl<'a> Master<'a> {
     }
 
     /// Remove `job` from the in-flight set, crediting its scheduler's
-    /// load. Returns whether it was in flight.
+    /// load (count and estimated cost). Returns whether it was in flight.
     fn forget_pending(&mut self, job: JobId) -> bool {
         if self.pending.remove(&job) {
             if let Some(loc) = self.owners.get(&job) {
@@ -853,10 +898,47 @@ impl<'a> Master<'a> {
                 if let Some(l) = self.load.get_mut(&owner) {
                     *l = l.saturating_sub(1);
                 }
+                // Refund exactly what assignment charged — the estimate
+                // may have drifted since, so the charge is remembered, not
+                // recomputed.
+                if let Some(est) = self.est_charged.remove(&job) {
+                    if let Some(l) = self.est_load.get_mut(&owner) {
+                        *l = l.saturating_sub(est);
+                    }
+                }
             }
             true
         } else {
             false
+        }
+    }
+
+    /// Fold a completion's observed execution time into the cost model and
+    /// record estimate-vs-actual accuracy (DESIGN.md §9).  `exec_us == 0`
+    /// means "not measured" (e.g. a legacy kept-data ack) and is skipped.
+    fn observe_cost(&mut self, job: JobId, exec_us: u64) {
+        if !self.cfg.cost_model || exec_us == 0 {
+            return;
+        }
+        let Some(func) = self.specs.get(&job).map(|s| s.func.0) else { return };
+        let est = self.costs.estimate_job_us(func);
+        self.metrics.cost_observed(func, est, exec_us);
+        self.costs.record_job(func, exec_us);
+    }
+
+    /// Cancel a mispredicted (or stale) prefetch hint: tell the predicted
+    /// target to drop the copies it pulled (`ReleaseResult` per hinted
+    /// source).  A source whose *owner* meanwhile became the predicted
+    /// target is skipped — the copy there is the authoritative one now.
+    fn cancel_prefetch(&mut self, predicted: Rank, srcs: &[JobId]) {
+        for &src in srcs {
+            if self.owners.get(&src).map(|l| l.owner) == Some(predicted) {
+                continue;
+            }
+            self.metrics.prefetch_cancelled();
+            let _ = self
+                .comm
+                .send(predicted, TAG_CTRL, FwMsg::ReleaseResult { job: src });
         }
     }
 
@@ -902,8 +984,32 @@ impl<'a> Master<'a> {
             &self.owners,
             &self.result_bytes,
             &self.load,
+            &self.est_load,
             &self.cfg.subs,
         );
+        // Resolve the outstanding prefetch hint: a correct prediction is
+        // consumed by this very assignment; a wrong one gets cancel hints
+        // so the mispredicted copies don't linger until shutdown.
+        if let Some((predicted, srcs)) = self.prefetch_hints.remove(&job) {
+            if predicted != target {
+                self.cancel_prefetch(predicted, &srcs);
+            }
+        }
+        // Charge the target's estimated outstanding cost (0 while the
+        // model is off or the kind is cold — placement then degrades to
+        // pure queue length).
+        let est = if self.cfg.cost_model {
+            self.costs
+                .estimate_job_us(spec.func.0)
+                .map(|us| us.round().max(1.0) as u64)
+                .unwrap_or(0)
+        } else {
+            0
+        };
+        if est > 0 {
+            self.est_charged.insert(job, est);
+            *self.est_load.entry(target).or_default() += est;
+        }
         let sources: Vec<SourceLoc> = spec
             .inputs
             .iter()
@@ -993,17 +1099,26 @@ mod tests {
     use crate::comm::{CostModel, World};
 
     fn with_master(f: impl FnOnce(&mut Master<'_>)) {
+        with_master_and_sub(|m, _| f(m));
+    }
+
+    /// Master plus one live "sub-scheduler" mailbox so tests can observe
+    /// what the master actually sends.
+    fn with_master_and_sub(f: impl FnOnce(&mut Master<'_>, &mut Comm<FwMsg>)) {
         let world: World<FwMsg> = World::new(CostModel::default());
         let mut comm = world.add_rank();
+        let mut sub = world.add_rank();
         let metrics = MetricsCollector::new();
         let cfg = MasterConfig {
-            subs: vec![],
+            subs: vec![sub.rank()],
             release: ReleasePolicy::AtShutdown,
             mode: ExecutionMode::Dataflow,
             prefetch: true,
+            cost_model: true,
+            cost_ewma_alpha: 0.3,
         };
         let mut m = Master::new(&mut comm, cfg, &metrics);
-        f(&mut m);
+        f(&mut m, &mut sub);
     }
 
     #[test]
@@ -1025,6 +1140,78 @@ mod tests {
                 m.count_abort(job, JobId(2)).is_err(),
                 "limit still enforced within one episode"
             );
+        });
+    }
+
+    #[test]
+    fn cost_model_charges_est_load_on_assign_and_refunds_on_completion() {
+        with_master_and_sub(|m, sub| {
+            let target = m.cfg.subs[0];
+            // Warm the table: one observed 1000 µs job of kind 5.
+            m.specs.insert(JobId(1), JobSpec::new(1, 5, 1));
+            m.observe_cost(JobId(1), 1000);
+            assert_eq!(m.costs.estimate_job_us(5), Some(1000.0));
+            // Assigning another kind-5 job charges the target's estimated
+            // outstanding cost...
+            m.specs.insert(JobId(2), JobSpec::new(2, 5, 1));
+            m.assign(JobId(2));
+            assert_eq!(m.est_load.get(&target).copied(), Some(1000));
+            assert_eq!(m.est_charged.get(&JobId(2)).copied(), Some(1000));
+            // ...and completion refunds exactly that charge.
+            m.complete_job(JobId(2), None, 0);
+            assert_eq!(m.est_load.get(&target).copied(), Some(0));
+            assert!(m.est_charged.is_empty());
+            // A cold kind charges nothing (placement degrades to queue
+            // length) and the refund bookkeeping stays balanced.
+            m.specs.insert(JobId(3), JobSpec::new(3, 9, 1));
+            m.assign(JobId(3));
+            assert!(m.est_charged.is_empty());
+            // Drain the Assign messages so the world can shut down clean.
+            while sub.try_recv().unwrap().is_some() {}
+        });
+    }
+
+    #[test]
+    fn mispredicted_prefetch_sends_cancel_hints() {
+        with_master_and_sub(|m, sub| {
+            let predicted = m.cfg.subs[0];
+            let elsewhere = Rank(predicted.0 + 100);
+            // Source 3 lives elsewhere: cancelling the hint must release
+            // the predicted target's pulled copy.
+            m.owners.insert(
+                JobId(3),
+                SourceLoc { job: JobId(3), owner: elsewhere, kept_on: None },
+            );
+            // Source 4 is now *owned* by the predicted target (recomputed
+            // there after a loss): releasing it would free live data.
+            m.owners.insert(
+                JobId(4),
+                SourceLoc { job: JobId(4), owner: predicted, kept_on: None },
+            );
+            m.cancel_prefetch(predicted, &[JobId(3), JobId(4)]);
+            let env = sub.try_recv().unwrap().expect("cancel hint sent");
+            match env.into_user() {
+                FwMsg::ReleaseResult { job } => assert_eq!(job, JobId(3)),
+                other => panic!("expected ReleaseResult, got {other:?}"),
+            }
+            assert!(sub.try_recv().unwrap().is_none(), "owned source must not be released");
+        });
+    }
+
+    #[test]
+    fn reentry_clears_and_cancels_the_prefetch_hint() {
+        with_master_and_sub(|m, sub| {
+            let predicted = m.cfg.subs[0];
+            let elsewhere = Rank(predicted.0 + 100);
+            m.owners.insert(
+                JobId(7),
+                SourceLoc { job: JobId(7), owner: elsewhere, kept_on: None },
+            );
+            m.prefetch_hints.insert(JobId(5), (predicted, vec![JobId(7)]));
+            m.reenter_dataflow(JobId(5));
+            assert!(m.prefetch_hints.is_empty(), "hint window must re-open");
+            let env = sub.try_recv().unwrap().expect("cancel hint sent on re-entry");
+            assert!(matches!(env.into_user(), FwMsg::ReleaseResult { job } if job == JobId(7)));
         });
     }
 

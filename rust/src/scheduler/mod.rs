@@ -41,8 +41,11 @@ pub const TAG_CTRL: Tag = Tag(1);
 /// keep-results — which of its workers physically retains it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SourceLoc {
+    /// The producing job.
     pub job: JobId,
+    /// Sub-scheduler owning (storing or routing) the result.
     pub owner: Rank,
+    /// Worker physically retaining it under keep-results, if any.
     pub kept_on: Option<Rank>,
 }
 
@@ -57,6 +60,7 @@ pub enum InputPart {
 }
 
 impl InputPart {
+    /// Bytes physically shipped with this part (0 for kept inputs).
     pub fn shipped_bytes(&self) -> usize {
         match self {
             InputPart::Data(d) => d.size_bytes(),
@@ -68,11 +72,14 @@ impl InputPart {
 /// A fully resolved execution request (sub-scheduler → worker).
 #[derive(Debug, Clone)]
 pub struct ExecRequest {
+    /// The job to run.
     pub spec: JobSpec,
+    /// Resolved input parts, in the spec's reference order.
     pub input: Vec<InputPart>,
 }
 
 impl ExecRequest {
+    /// Total bytes physically shipped with the request.
     pub fn shipped_bytes(&self) -> usize {
         self.input.iter().map(|p| p.shipped_bytes()).sum()
     }
@@ -84,65 +91,144 @@ impl ExecRequest {
 pub enum FwMsg {
     // ------------------------------------------------- master → sub
     /// Execute this job; `sources` locates every referenced result.
-    Assign { spec: JobSpec, sources: Vec<SourceLoc> },
+    Assign {
+        /// The job to execute.
+        spec: JobSpec,
+        /// Location of every referenced result.
+        sources: Vec<SourceLoc>,
+    },
     /// Speculative-prefetch hint (dataflow mode, DESIGN.md §7): `job` is a
     /// `Waiting` node with all inputs but one materialised and this
     /// scheduler is its probable assignment target; pull the listed remote
     /// sources now so the eventual `Assign` finds them warm.  Purely
-    /// advisory — a wrong prediction costs one redundant transfer, never
-    /// correctness.
-    Prefetch { job: JobId, sources: Vec<SourceLoc> },
+    /// advisory — a wrong prediction costs one redundant transfer (now
+    /// reclaimed by a cancel hint), never correctness.
+    Prefetch {
+        /// The predicted job (informational).
+        job: JobId,
+        /// Remote sources worth pulling early.
+        sources: Vec<SourceLoc>,
+    },
     /// Free a stored (or kept) result.
-    ReleaseResult { job: JobId },
+    ReleaseResult {
+        /// The producing job whose result is released.
+        job: JobId,
+    },
     /// End of run: shut down workers and exit.
     Shutdown,
 
     // ------------------------------------------------- sub → master
     /// Job completed; `kept_on` set when the worker retained the output.
     JobDone {
+        /// The completed job.
         job: JobId,
+        /// Worker retaining the output under keep-results, if any.
         kept_on: Option<Rank>,
+        /// Size of the stored output (0 when kept).
         output_bytes: u64,
+        /// Chunk count of the stored output (0 when kept).
         chunks: usize,
+        /// Dynamic job injections the function recorded.
         injections: Vec<Injection>,
+        /// Worker-observed execution time — the feedback sample of the
+        /// master's cost model (DESIGN.md §9; 0 = not measured).
+        exec_us: u64,
     },
     /// Job execution failed (user function error).
-    JobError { job: JobId, msg: String },
+    JobError {
+        /// The failing job.
+        job: JobId,
+        /// Stringified failure reason.
+        msg: String,
+    },
     /// A worker died; its retained results and running jobs are listed.
-    WorkerLostReport { worker: Rank, lost: Vec<JobId>, running: Vec<JobId> },
+    WorkerLostReport {
+        /// The dead worker rank.
+        worker: Rank,
+        /// Kept results that died with it.
+        lost: Vec<JobId>,
+        /// Jobs that were executing on it.
+        running: Vec<JobId>,
+    },
     /// Could not assemble inputs (a source vanished mid-assignment);
     /// master re-queues the job through recovery.
-    JobAborted { job: JobId, missing: JobId },
+    JobAborted {
+        /// The aborted job.
+        job: JobId,
+        /// The input result that could not be found.
+        missing: JobId,
+    },
 
     // ------------------------------------------------- sub ↔ sub (+ master)
     /// Request chunks of a stored result; reply goes to `reply_to`.
-    FetchResult { job: JobId, range: ChunkRange, reply_to: Rank },
+    FetchResult {
+        /// The producing job whose result is wanted.
+        job: JobId,
+        /// Which chunks.
+        range: ChunkRange,
+        /// Rank to send the `ResultData` reply to.
+        reply_to: Rank,
+    },
     /// Reply to `FetchResult`.
-    ResultData { job: JobId, data: FunctionData },
+    ResultData {
+        /// The producing job.
+        job: JobId,
+        /// The requested chunks.
+        data: FunctionData,
+    },
     /// The requested result is gone (lost worker); requester aborts the
     /// dependent job back to the master.
-    ResultUnavailable { job: JobId },
+    ResultUnavailable {
+        /// The missing result's producing job.
+        job: JobId,
+    },
 
     // ------------------------------------------------- sub → worker
+    /// Run a fully resolved request on the receiving worker.
     Exec(ExecRequest),
     /// Upload a retained result to the scheduler.
-    PullKept { job: JobId },
+    PullKept {
+        /// The retained result's producing job.
+        job: JobId,
+    },
     /// Retained result no longer needed.
-    DropKept { job: JobId },
+    DropKept {
+        /// The retained result's producing job.
+        job: JobId,
+    },
     /// Clean shutdown.
     WorkerShutdown,
 
     // ------------------------------------------------- worker → sub
+    /// Execution finished successfully.
     ExecDone {
+        /// The completed job.
         job: JobId,
-        /// `None` when retained under keep-results.
+        /// The output; `None` when retained under keep-results.
         data: Option<FunctionData>,
+        /// Dynamic job injections the function recorded.
         injections: Vec<Injection>,
+        /// Measured execution microseconds (queue wait excluded).
         exec_us: u64,
     },
-    ExecFailed { job: JobId, msg: String },
-    /// Reply to `PullKept`.
-    KeptData { job: JobId, data: FunctionData },
+    /// Execution failed (user error or contained panic).
+    ExecFailed {
+        /// The failing job.
+        job: JobId,
+        /// Stringified failure reason.
+        msg: String,
+    },
+    /// Reply to `PullKept` (`exec_us` 0), and the worker's deposit-to-self
+    /// of a pool-executed keep-results output (`exec_us` = measured
+    /// execution time, forwarded on the `ExecDone` ack).
+    KeptData {
+        /// The producing job.
+        job: JobId,
+        /// The retained output.
+        data: FunctionData,
+        /// Measured execution microseconds (0 on pull replies).
+        exec_us: u64,
+    },
 }
 
 impl WireSize for FwMsg {

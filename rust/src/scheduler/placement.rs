@@ -34,7 +34,7 @@ pub fn choose_scheduler(
     load: &HashMap<Rank, usize>,
     subs: &[Rank],
 ) -> Rank {
-    choose_scheduler_lookahead(spec, &[], owners, result_bytes, load, subs)
+    choose_scheduler_lookahead(spec, &[], owners, result_bytes, load, &HashMap::new(), subs)
 }
 
 /// Weight of a successor's input bytes relative to the job's own inputs
@@ -47,6 +47,15 @@ const LOOKAHEAD_DISCOUNT: u64 = 2;
 /// weight), so a chain of ready jobs packs onto the sub-scheduler that
 /// already owns the chain's data instead of ping-ponging between peers.
 ///
+/// `est_load` is the cost model's estimated outstanding execution
+/// microseconds per scheduler (DESIGN.md §9): when populated, the final
+/// least-loaded tie-break prefers the scheduler with the least estimated
+/// *cost* in flight, falling back to queue length only among equals — so
+/// two queued one-job schedulers stop looking identical when one of the
+/// jobs is a known hundred-millisecond kind.  Pass an empty map to
+/// reproduce the pure queue-length policy (`cost_model = off`, or a cold
+/// table charging zero everywhere).
+///
 /// Doubles as the **speculative-prefetch target predictor** (DESIGN.md
 /// §7): the master evaluates it early — while a job still waits on its
 /// last input — so the hinted scheduler and the eventual assignment
@@ -58,6 +67,7 @@ pub fn choose_scheduler_lookahead(
     owners: &HashMap<crate::job::JobId, SourceLoc>,
     result_bytes: &HashMap<crate::job::JobId, u64>,
     load: &HashMap<Rank, usize>,
+    est_load: &HashMap<Rank, u64>,
     subs: &[Rank],
 ) -> Rank {
     debug_assert!(!subs.is_empty());
@@ -100,37 +110,52 @@ pub fn choose_scheduler_lookahead(
         }
     }
 
-    // 3. Least loaded, lowest rank for determinism.
+    // 3. Least loaded — by estimated outstanding cost first (zero when the
+    //    cost model is off or cold, degrading to the original queue-length
+    //    policy), then queue length, then lowest rank for determinism.
     subs.iter()
         .copied()
-        .min_by_key(|s| (load.get(s).copied().unwrap_or(0), s.0))
+        .min_by_key(|s| {
+            (
+                est_load.get(s).copied().unwrap_or(0),
+                load.get(s).copied().unwrap_or(0),
+                s.0,
+            )
+        })
         .expect("subs non-empty")
 }
 
 /// One worker's packing state as seen by its sub-scheduler.
 #[derive(Debug, Clone)]
 pub struct WorkerSlot {
+    /// The worker's rank.
     pub rank: Rank,
+    /// Total cores of the worker node.
     pub cores: usize,
+    /// Cores not currently occupied by running jobs.
     pub free_cores: usize,
     /// Jobs currently executing.
     pub running: usize,
 }
 
 impl WorkerSlot {
+    /// Fresh idle slot for a worker with `cores` cores.
     pub fn new(rank: Rank, cores: usize) -> Self {
         WorkerSlot { rank, cores, free_cores: cores, running: 0 }
     }
 
+    /// Whether a job with this thread request fits right now.
     pub fn fits(&self, threads: ThreadCount) -> bool {
         threads.packing_width(self.cores) <= self.free_cores
     }
 
+    /// Account a job starting (claims its packing width).
     pub fn occupy(&mut self, threads: ThreadCount) {
         self.free_cores -= threads.packing_width(self.cores);
         self.running += 1;
     }
 
+    /// Account a job finishing (returns its packing width).
     pub fn vacate(&mut self, threads: ThreadCount) {
         self.free_cores =
             (self.free_cores + threads.packing_width(self.cores)).min(self.cores);
@@ -310,6 +335,7 @@ mod tests {
                 &owners,
                 &bytes,
                 &load,
+                &HashMap::new(),
                 &subs()
             ),
             Rank(2)
@@ -335,9 +361,44 @@ mod tests {
                 &owners,
                 &bytes,
                 &load,
+                &HashMap::new(),
                 &subs()
             ),
             Rank(2)
+        );
+    }
+
+    #[test]
+    fn estimated_cost_breaks_queue_length_ties() {
+        // Both schedulers hold one outstanding job, but Rank(1)'s is a
+        // known-expensive kind: the cost model sends the new job to
+        // Rank(2) even though plain queue length (and rank order) would
+        // pick Rank(1).
+        let spec = JobSpec::new(10, 1, 1);
+        let owners = HashMap::new();
+        let bytes = HashMap::new();
+        let mut load = HashMap::new();
+        load.insert(Rank(1), 1);
+        load.insert(Rank(2), 1);
+        let mut est = HashMap::new();
+        est.insert(Rank(1), 100_000u64); // 100 ms estimated outstanding
+        est.insert(Rank(2), 2_000u64);
+        assert_eq!(
+            choose_scheduler_lookahead(&spec, &[], &owners, &bytes, &load, &est, &subs()),
+            Rank(2)
+        );
+        // Empty estimates reproduce the queue-length policy exactly.
+        assert_eq!(
+            choose_scheduler_lookahead(
+                &spec,
+                &[],
+                &owners,
+                &bytes,
+                &load,
+                &HashMap::new(),
+                &subs()
+            ),
+            Rank(1)
         );
     }
 

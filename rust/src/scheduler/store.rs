@@ -18,14 +18,17 @@ pub struct ResultStore {
 }
 
 impl ResultStore {
+    /// Empty store.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Store a result this scheduler owns.
     pub fn insert_owned(&mut self, job: JobId, data: FunctionData) {
         self.owned.insert(job, data);
     }
 
+    /// Cache a remote result fetched for local consumers.
     pub fn insert_transient(&mut self, job: JobId, data: FunctionData) {
         self.transient.insert(job, data);
     }
@@ -41,10 +44,12 @@ impl ResultStore {
         data.select(r)
     }
 
+    /// Whether the result is readable here (owned or transient).
     pub fn contains(&self, job: JobId) -> bool {
         self.owned.contains_key(&job) || self.transient.contains_key(&job)
     }
 
+    /// Whether this scheduler owns the result.
     pub fn is_owned(&self, job: JobId) -> bool {
         self.owned.contains_key(&job)
     }
@@ -59,10 +64,12 @@ impl ResultStore {
         self.transient.remove(&job);
     }
 
+    /// Total bytes of owned results.
     pub fn owned_bytes(&self) -> usize {
         self.owned.values().map(|d| d.size_bytes()).sum()
     }
 
+    /// Number of owned results.
     pub fn owned_count(&self) -> usize {
         self.owned.len()
     }

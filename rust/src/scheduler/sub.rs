@@ -30,10 +30,15 @@ use super::{ExecRequest, FwMsg, InputPart, SourceLoc, TAG_CTRL};
 /// Sub-scheduler runtime parameters.
 #[derive(Clone)]
 pub struct SubConfig {
+    /// The master scheduler's rank.
     pub master: Rank,
+    /// Upper bound of workers this sub-scheduler may spawn.
     pub max_workers: usize,
+    /// Cores (sequence threads + packing budget) per worker.
     pub cores_per_worker: usize,
+    /// Spawn the full worker complement at startup.
     pub prespawn: bool,
+    /// Configuration handed to every spawned worker.
     pub worker: WorkerConfig,
     /// Liveness tick (worker-loss detection granularity).
     pub tick: Duration,
@@ -88,12 +93,19 @@ pub struct SubScheduler {
     /// hint — an `Assign` input served from the store against one of these
     /// counts as a prefetch hit.
     prefetched: HashSet<JobId>,
+    /// Fetches released (`ReleaseResult`) while still in flight: the
+    /// eventual `ResultData` reply must not be re-cached, or a cancelled
+    /// mispredicted prefetch would leak its copy until shutdown after all
+    /// (the DESIGN.md §7 cancel-hint path).
+    cancelled_fetches: HashSet<JobId>,
     /// Peer `FetchResult`s waiting on a `PullKept` round-trip:
     /// source job → (range, reply_to).
     pending_serves: HashMap<JobId, Vec<(ChunkRange, Rank)>>,
 }
 
 impl SubScheduler {
+    /// New sub-scheduler actor over its comm endpoint (run with
+    /// [`Self::run`]; usually spawned via [`spawn_sub`]).
     pub fn new(
         comm: Comm<FwMsg>,
         world: World<FwMsg>,
@@ -113,6 +125,7 @@ impl SubScheduler {
             waiting_on: HashMap::new(),
             fetch_inflight: HashSet::new(),
             prefetched: HashSet::new(),
+            cancelled_fetches: HashSet::new(),
             pending_serves: HashMap::new(),
         }
     }
@@ -151,6 +164,12 @@ impl SubScheduler {
                 self.store.insert_transient(job, data);
                 self.fetch_inflight.remove(&job);
                 self.fill_waiters(job);
+                if self.cancelled_fetches.remove(&job) {
+                    // Released while the fetch was in flight (cancelled
+                    // prefetch hint): any waiters were just served from
+                    // the copy; do not retain it.
+                    self.store.drop_transient(job);
+                }
             }
             FwMsg::ResultUnavailable { job } => self.on_source_lost(job),
             FwMsg::FetchResult { job, range, reply_to } => {
@@ -166,7 +185,7 @@ impl SubScheduler {
                     .comm
                     .send(self.cfg.master, TAG_CTRL, FwMsg::JobError { job, msg });
             }
-            FwMsg::KeptData { job, data } => {
+            FwMsg::KeptData { job, data, .. } => {
                 // A worker uploaded a retained result (PullKept reply).
                 self.store.insert_owned(job, data);
                 self.serve_pending(job);
@@ -356,6 +375,7 @@ impl SubScheduler {
     fn on_source_lost(&mut self, src: JobId) {
         self.fetch_inflight.remove(&src);
         self.prefetched.remove(&src);
+        self.cancelled_fetches.remove(&src);
         let Some(waiters) = self.waiting_on.remove(&src) else { return };
         for dep in waiters {
             if self.pending.remove(&dep).is_some() {
@@ -452,6 +472,11 @@ impl SubScheduler {
         self.store.release(job);
         self.store.drop_transient(job);
         self.prefetched.remove(&job);
+        if self.fetch_inflight.contains(&job) {
+            // The copy is still on the wire; drop it on arrival instead of
+            // caching it (mispredicted-prefetch cancel, DESIGN.md §7).
+            self.cancelled_fetches.insert(job);
+        }
         if let Some(w) = self.kept_index.remove(&job) {
             if let Some(entry) = self.workers.get_mut(&w) {
                 entry.kept.remove(&job);
@@ -466,7 +491,7 @@ impl SubScheduler {
         job: JobId,
         data: Option<FunctionData>,
         injections: Vec<crate::job::Injection>,
-        _exec_us: u64,
+        exec_us: u64,
     ) {
         let spec = self.forget_running(worker, job);
         let (kept_on, output_bytes, chunks) = match data {
@@ -488,10 +513,12 @@ impl SubScheduler {
         };
         let _ = spec; // cores already vacated in forget_running
         self.metrics.job_finished(job, output_bytes);
+        // The observed execution time rides along: the master's cost model
+        // feeds on it (DESIGN.md §9).
         let _ = self.comm.send(
             self.cfg.master,
             TAG_CTRL,
-            FwMsg::JobDone { job, kept_on, output_bytes, chunks, injections },
+            FwMsg::JobDone { job, kept_on, output_bytes, chunks, injections, exec_us },
         );
     }
 
@@ -648,6 +675,7 @@ impl SubScheduler {
                     );
                 }
                 self.fetch_inflight.remove(j);
+                self.cancelled_fetches.remove(j);
             }
             // Local jobs pinned to (or awaiting pulls from) the dead worker.
             let lost_set: HashSet<JobId> = lost.iter().copied().collect();
@@ -701,7 +729,9 @@ impl Drop for SubScheduler {
 /// Public result: the sub-scheduler's identity and join handle as seen by
 /// the framework.
 pub struct SubHandle {
+    /// The sub-scheduler's rank.
     pub rank: Rank,
+    /// Join handle of its actor thread.
     pub handle: std::thread::JoinHandle<()>,
 }
 

@@ -37,6 +37,7 @@ pub fn run(cfg: &JacobiConfig, tol: f64) -> Result<SolveOutcome> {
     run_with_cost(cfg, tol, CostModel::free())
 }
 
+/// CG to tolerance `tol` under an explicit comm cost model.
 pub fn run_with_cost(cfg: &JacobiConfig, tol: f64, cost: CostModel) -> Result<SolveOutcome> {
     let p = cfg.procs;
     let n_pad = cfg.n_pad();

@@ -27,9 +27,13 @@ use crate::runtime::Manifest;
 
 use super::KernelPath;
 
+/// Function id: emit the run parameters chunk.
 pub const F_PARAMS: u32 = 200;
+/// Function id: build a strip's initial state.
 pub const F_INIT: u32 = 201;
+/// Function id: extract a strip's boundary rows.
 pub const F_EDGES: u32 = 202;
+/// Function id: advance a strip one diffusion step.
 pub const F_STEP: u32 = 203;
 
 const J_PARAMS: u32 = 1;
@@ -43,17 +47,22 @@ pub struct HeatConfig {
     pub h: usize,
     /// Columns (first/last are Dirichlet).
     pub w: usize,
+    /// Row strips (one framework job each per step).
     pub strips: usize,
+    /// Diffusion steps.
     pub steps: usize,
     /// Diffusion number `dt*k/dx^2` (stability: `<= 0.25`).
     pub alpha: f32,
     /// Hot-square initial temperature.
     pub hot: f32,
+    /// Compute path of the step hot-spot.
     pub kernel: KernelPath,
+    /// Artifact directory (engine paths).
     pub artifact_dir: std::path::PathBuf,
 }
 
 impl HeatConfig {
+    /// Defaults: rust kernel, alpha 0.2, hot square at 100.
     pub fn new(h: usize, w: usize, strips: usize, steps: usize) -> Self {
         HeatConfig {
             h,
@@ -67,15 +76,18 @@ impl HeatConfig {
         }
     }
 
+    /// Select the step compute path.
     pub fn with_kernel(mut self, k: KernelPath) -> Self {
         self.kernel = k;
         self
     }
 
+    /// Rows per strip.
     pub fn bm(&self) -> usize {
         self.h / self.strips
     }
 
+    /// Check divisibility and stability constraints.
     pub fn validate(&self) -> Result<()> {
         if self.strips == 0 || self.h % self.strips != 0 {
             return Err(Error::Config(format!(

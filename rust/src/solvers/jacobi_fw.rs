@@ -41,9 +41,13 @@ use super::{rust_block_sweep, JacobiConfig, SolveOutcome};
 
 /// Function ids of the Jacobi job family.
 pub const F_PARAMS: u32 = 100;
+/// Function id: emit the initial iterate.
 pub const F_X0: u32 = 101;
+/// Function id: generate + retain a matrix block (keep-results).
 pub const F_GEN: u32 = 102;
+/// Function id: one block's Jacobi sweep.
 pub const F_SWEEP: u32 = 103;
+/// Function id: concatenate block results, inject next iteration.
 pub const F_ASSEMBLE: u32 = 104;
 
 /// Static job ids (injection allocates above these).
@@ -259,7 +263,9 @@ pub fn build_algorithm(cfg: &JacobiConfig) -> Result<Algorithm> {
 /// Scheduler topology for a Jacobi run.
 #[derive(Debug, Clone)]
 pub struct FwTopology {
+    /// Sub-scheduler count.
     pub schedulers: usize,
+    /// Cores per worker node.
     pub cores_per_worker: usize,
 }
 

@@ -37,6 +37,7 @@ pub enum KernelPath {
 }
 
 impl KernelPath {
+    /// Manifest variant name this path needs (`None` = no artifacts).
     pub fn variant(self) -> Option<&'static str> {
         match self {
             KernelPath::EnginePallas => Some("pallas"),
@@ -55,7 +56,9 @@ pub struct JacobiConfig {
     pub procs: usize,
     /// Fixed iteration count (paper: 500).
     pub iters: usize,
+    /// System-generation seed (deterministic across participants).
     pub seed: u64,
+    /// Compute path of the sweep hot-spot.
     pub kernel: KernelPath,
     /// Artifact directory (engine paths).
     pub artifact_dir: std::path::PathBuf,
@@ -68,6 +71,7 @@ pub struct JacobiConfig {
 }
 
 impl JacobiConfig {
+    /// Defaults: rust kernel, seed 42, keep-results on, 256-pad.
     pub fn new(n: usize, procs: usize, iters: usize) -> Self {
         JacobiConfig {
             n,
@@ -81,21 +85,25 @@ impl JacobiConfig {
         }
     }
 
+    /// Toggle keep-results block retention.
     pub fn with_keep_blocks(mut self, keep: bool) -> Self {
         self.keep_blocks = keep;
         self
     }
 
+    /// Select the sweep compute path.
     pub fn with_kernel(mut self, k: KernelPath) -> Self {
         self.kernel = k;
         self
     }
 
+    /// Set the AOT artifact directory.
     pub fn with_artifacts(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
         self.artifact_dir = dir.into();
         self
     }
 
+    /// Padded system size (tile-aligned, divisible by `procs`).
     pub fn n_pad(&self) -> usize {
         matrix::pad_to(self.n, self.pad_multiple.max(self.procs).max(1))
             .max(self.procs) // at least one row per participant
@@ -111,10 +119,13 @@ impl JacobiConfig {
 /// Result of one solver run.
 #[derive(Debug, Clone)]
 pub struct SolveOutcome {
+    /// Final iterate (padded length).
     pub x: Vec<f32>,
+    /// Iterations actually performed.
     pub iters: usize,
     /// `sqrt(sum r^2)` of the final sweep.
     pub res_norm: f64,
+    /// Wall time of the solve.
     pub wall: Duration,
     /// Comm traffic attributable to the run.
     pub comm: StatsSnapshot,

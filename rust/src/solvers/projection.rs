@@ -41,6 +41,7 @@ use super::{jacobi_fw, rust_block_sweep, JacobiConfig};
 /// Calibration data for one problem size.
 #[derive(Debug, Clone)]
 pub struct Calibration {
+    /// Padded system size the measurements were taken at.
     pub n_pad: usize,
     /// Seconds per iteration for a block of `bm` rows, measured at several
     /// `bm` values and interpolated linearly in `bm` (the sweep is
@@ -105,21 +106,28 @@ pub fn calibrate(n: usize, seed: u64) -> Calibration {
 /// One projected Figure-3 cell.
 #[derive(Debug, Clone)]
 pub struct Projection {
+    /// Cluster size this cell projects.
     pub procs: usize,
+    /// Projected per-node compute seconds.
     pub compute_s: f64,
+    /// Projected halo/iterate exchange seconds.
     pub exchange_s: f64,
+    /// Projected framework coordination seconds.
     pub coord_s: f64,
 }
 
 impl Projection {
+    /// Projected framework wall time.
     pub fn fw_total(&self) -> f64 {
         self.compute_s + self.exchange_s + self.coord_s
     }
 
+    /// Projected tailored-MPI wall time.
     pub fn mpi_total(&self) -> f64 {
         self.compute_s + self.exchange_s
     }
 
+    /// Framework overhead over tailored MPI, percent.
     pub fn overhead_pct(&self) -> f64 {
         (self.fw_total() / self.mpi_total() - 1.0) * 100.0
     }

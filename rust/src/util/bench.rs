@@ -9,20 +9,29 @@ use super::json::Json;
 /// Summary of repeated measurements of one configuration.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Configuration label (one table row).
     pub name: String,
+    /// Measured repetitions (after warmup).
     pub reps: usize,
+    /// Mean over the repetitions.
     pub mean: Duration,
+    /// Population standard deviation.
     pub stddev: Duration,
+    /// Fastest repetition.
     pub min: Duration,
+    /// Slowest repetition.
     pub max: Duration,
+    /// Median repetition.
     pub median: Duration,
 }
 
 impl Measurement {
+    /// Mean in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.mean.as_secs_f64() * 1e3
     }
 
+    /// One JSON row for the trajectory files.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -53,7 +62,9 @@ impl Measurement {
 /// `HYPAR_BENCH_REPS`, `HYPAR_BENCH_WARMUP`).
 #[derive(Debug, Clone)]
 pub struct Bench {
+    /// Untimed warmup runs before measuring.
     pub warmup: usize,
+    /// Timed repetitions per measurement.
     pub reps: usize,
 }
 
@@ -72,6 +83,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Small fixed shape for tests (no warmup, 3 reps).
     pub fn quick() -> Self {
         Bench { warmup: 0, reps: 3 }
     }
@@ -123,12 +135,14 @@ pub struct Report {
 }
 
 impl Report {
+    /// Start a report and print its header.
     pub fn new(title: impl Into<String>) -> Self {
         let title = title.into();
         println!("\n=== {title} ===");
         Report { title, rows: Vec::new() }
     }
 
+    /// Append (and print) one measurement row.
     pub fn add(&mut self, m: Measurement) {
         println!("{}", m.row());
         self.rows.push(m);
@@ -141,6 +155,7 @@ impl Report {
         Some(fa.mean.as_secs_f64() / fb.mean.as_secs_f64())
     }
 
+    /// Print the JSON lines and the footer.
     pub fn finish(self) {
         for m in &self.rows {
             println!("JSON {}", m.to_json().to_string());

@@ -20,7 +20,9 @@ pub struct ArgError(pub String);
 
 /// Flag specification for validation + usage text.
 pub struct Spec {
+    /// Flag name (without the leading `--`).
     pub name: &'static str,
+    /// One-line description for the usage text.
     pub help: &'static str,
     /// `true` = boolean switch (no value).
     pub switch: bool,
@@ -62,14 +64,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Raw value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(String::as_str)
     }
 
+    /// String value of `--name`, or `default`.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Integer value of `--name`, or `default`.
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, ArgError> {
         match self.get(name) {
             None => Ok(default),
@@ -79,6 +84,7 @@ impl Args {
         }
     }
 
+    /// Float value of `--name`, or `default`.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, ArgError> {
         match self.get(name) {
             None => Ok(default),
@@ -88,6 +94,7 @@ impl Args {
         }
     }
 
+    /// Whether boolean switch `--name` was given (or set truthy).
     pub fn bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
@@ -107,6 +114,7 @@ impl Args {
         }
     }
 
+    /// Positional (non-flag) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -11,10 +11,15 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string (escapes already resolved).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// Keys in insertion order.
     Obj(Vec<(String, Json)>),
@@ -24,13 +29,16 @@ pub enum Json {
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 #[error("json parse error at byte {offset}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub offset: usize,
+    /// What the parser expected / found.
     pub msg: String,
 }
 
 impl Json {
     // ------------------------------------------------------------ access
 
+    /// The number, if this is `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -38,6 +46,7 @@ impl Json {
         }
     }
 
+    /// The number as an integer, if it is one exactly.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().and_then(|n| {
             if n.fract() == 0.0 && n.abs() < 9e15 {
@@ -48,10 +57,12 @@ impl Json {
         })
     }
 
+    /// The number as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|n| usize::try_from(n).ok())
     }
 
+    /// The string, if this is `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -59,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -66,6 +78,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -73,6 +86,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup (`None` on non-objects and absent keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -80,6 +94,7 @@ impl Json {
         }
     }
 
+    /// The key/value entries, if this is `Obj`.
     pub fn entries(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(e) => Some(e),
@@ -95,14 +110,17 @@ impl Json {
 
     // ------------------------------------------------------------- build
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(entries: Vec<(&str, Json)>) -> Json {
         Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a number.
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
 
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }

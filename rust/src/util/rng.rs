@@ -14,11 +14,13 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Start the stream at `seed`.
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
     }
 
     #[inline]
+    /// Next 64 uniformly distributed bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -41,6 +43,7 @@ impl Rng {
         Rng { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
     }
 
+    /// Next 64 uniformly distributed bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -87,6 +90,7 @@ impl Rng {
         lo + self.below(hi - lo + 1)
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.next_u64() & 1 == 1
     }

@@ -23,6 +23,7 @@ pub struct KeptCache {
 }
 
 impl KeptCache {
+    /// Empty cache.
     pub fn new() -> Self {
         Self::default()
     }
@@ -52,14 +53,17 @@ impl KeptCache {
         self.entries.remove(&job).is_some()
     }
 
+    /// Whether `job`'s result is retained here.
     pub fn contains(&self, job: JobId) -> bool {
         self.entries.contains_key(&job)
     }
 
+    /// Number of retained results.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether nothing is retained.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -59,14 +59,24 @@ pub struct WorkerConfig {
     /// Cores of this worker "node" (`ThreadCount::Auto` resolves to this;
     /// also the number of persistent pool sequences).
     pub cores: usize,
+    /// User functions this worker can execute.
     pub registry: Arc<FunctionRegistry>,
     /// Engine recipe; instantiated lazily on this thread at first use.
     pub engine_factory: Option<EngineFactory>,
+    /// Shared fault injector (crash simulation).
     pub fault: Arc<FaultInjector>,
-    /// Sequence-pool policy (config knobs `work_stealing`,
+    /// Sequence-pool stealing policy (config knobs `work_stealing`,
     /// `steal_granularity`).
     pub work_stealing: bool,
+    /// Chunks per steal when the cost model is off (config knob
+    /// `steal_granularity`).
     pub steal_granularity: usize,
+    /// Feedback-driven cost model on the sequence pool (config knob
+    /// `cost_model`, DESIGN.md §9).
+    pub cost_model: bool,
+    /// EWMA smoothing factor of the pool's cost table (config knob
+    /// `cost_ewma_alpha`).
+    pub cost_ewma_alpha: f64,
     /// Sink for pool counters (steals, busy/idle, per-job imbalance);
     /// `None` in standalone tests.
     pub metrics: Option<Arc<MetricsCollector>>,
@@ -85,6 +95,8 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
             sequences: cfg.cores,
             work_stealing: cfg.work_stealing,
             steal_granularity: cfg.steal_granularity,
+            cost_model: cfg.cost_model,
+            cost_ewma_alpha: cfg.cost_ewma_alpha,
         },
         cfg.metrics.clone(),
     );
@@ -232,6 +244,7 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                             let keep = req.spec.keep;
                             pool.submit_chunks(
                                 f,
+                                req.spec.func.0,
                                 &input,
                                 n_threads,
                                 move |result, exec_us| {
@@ -244,18 +257,19 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                     }
                 }
             }
-            // A pool job finished a keep-results job: deposit, then ack.
-            FwMsg::KeptData { job, data } => {
+            // A pool job finished a keep-results job: deposit, then ack
+            // (forwarding the measured execution time for the cost model).
+            FwMsg::KeptData { job, data, exec_us } => {
                 kept.insert(job, data);
                 let _ = comm.send(
                     scheduler,
                     TAG_CTRL,
-                    FwMsg::ExecDone { job, data: None, injections: vec![], exec_us: 0 },
+                    FwMsg::ExecDone { job, data: None, injections: vec![], exec_us },
                 );
             }
             FwMsg::PullKept { job } => {
                 let reply = match kept.get(job) {
-                    Ok(data) => FwMsg::KeptData { job, data: data.clone() },
+                    Ok(data) => FwMsg::KeptData { job, data: data.clone(), exec_us: 0 },
                     Err(_) => FwMsg::ResultUnavailable { job },
                 };
                 let _ = comm.send(scheduler, TAG_CTRL, reply);
@@ -344,7 +358,7 @@ fn report_from_thread(
                 let _ = to_self.send(
                     to_self.rank(),
                     TAG_CTRL,
-                    FwMsg::KeptData { job, data: output },
+                    FwMsg::KeptData { job, data: output, exec_us },
                 );
             } else {
                 let _ = to_self.send(

@@ -9,7 +9,8 @@
 //! `i % width`); with `work_stealing` on, a sequence that drains its own
 //! deque steals chunks from the busiest victim, so one expensive chunk no
 //! longer serialises the tail of a job.  With `work_stealing` off the
-//! deques are never touched by other sequences and execution is exactly
+//! deques are never touched by other sequences; with `cost_model` off as
+//! well (both knobs independent, both on by default) execution is exactly
 //! the paper-faithful static split.
 //!
 //! Determinism: every chunk writes its result into a pre-sized,
@@ -25,9 +26,19 @@
 //! with it the worker rank — stays alive for the next job.
 //!
 //! `Plain` jobs that don't occupy the whole node run on the same pool as
-//! single [`Task::Plain`] tasks, so thread-packed jobs share the node's
+//! single `Task::Plain` tasks, so thread-packed jobs share the node's
 //! sequences instead of spawning one OS thread each (paper §3.3 packing
 //! without oversubscription).
+//!
+//! With `cost_model` on (DESIGN.md §9) the pool additionally *measures*
+//! every chunk it executes into a per-job-kind [`CostTable`] and uses the
+//! history to (a) pre-balance the initial deal with LPT bin packing
+//! ([`crate::cost::lpt_deal`]) once the kind has history, and (b) steal
+//! **half the victim's estimated remaining cost** instead of the fixed
+//! `steal_granularity` chunk count ([`crate::cost::adaptive_steal_count`];
+//! cold start halves the victim's backlog by count).  The cost model is a
+//! scheduling heuristic only: output values are byte-identical with it on
+//! or off.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -35,28 +46,48 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::cost::{lpt_deal, CostTable, DEFAULT_COST_EWMA_ALPHA};
 use crate::data::{DataChunk, FunctionData};
 use crate::error::{Error, Result};
 use crate::job::registry::{PerChunkShared, PlainFn};
 use crate::metrics::MetricsCollector;
 
 /// Pool shape and scheduling policy (wired from
-/// [`crate::config::TopologyConfig`]: `work_stealing`, `steal_granularity`).
+/// [`crate::config::TopologyConfig`]: `work_stealing`, `steal_granularity`,
+/// `cost_model`, `cost_ewma_alpha`).
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
     /// Number of long-lived sequence threads (the worker's cores).
     pub sequences: usize,
-    /// Steal chunks from busy sequences when idle (off = the paper's
-    /// static round-robin split, byte-identical results either way).
+    /// Steal chunks from busy sequences when idle.  Off disables
+    /// stealing only; pair with `cost_model: false` for the paper's fully
+    /// static round-robin split (byte-identical results either way).
     pub work_stealing: bool,
     /// Chunks taken per steal: the first is executed immediately, the rest
-    /// are re-dealt into the thief's deque.
+    /// are re-dealt into the thief's deque.  Ignored while `cost_model` is
+    /// on — the steal amount adapts to the victim's estimated backlog cost.
     pub steal_granularity: usize,
+    /// Feedback-driven scheduling (DESIGN.md §9): record per-chunk costs
+    /// per job kind, LPT-pre-balance the deal once a kind has history, and
+    /// size steals by estimated cost.  Off reverts both decisions to the
+    /// fixed-granularity behaviour; values never differ.
+    pub cost_model: bool,
+    /// EWMA smoothing factor for the cost table (newest-observation
+    /// weight, `(0, 1]`).
+    pub cost_ewma_alpha: f64,
 }
 
 impl PoolConfig {
+    /// Default policy for `sequences` threads: stealing on, granularity 1,
+    /// cost model on with the default EWMA alpha.
     pub fn new(sequences: usize) -> Self {
-        PoolConfig { sequences, work_stealing: true, steal_granularity: 1 }
+        PoolConfig {
+            sequences,
+            work_stealing: true,
+            steal_granularity: 1,
+            cost_model: true,
+            cost_ewma_alpha: DEFAULT_COST_EWMA_ALPHA,
+        }
     }
 }
 
@@ -76,10 +107,19 @@ enum SeqError {
 /// Shared state of one in-flight per-chunk job.
 struct ChunkJob {
     f: PerChunkShared,
+    /// Job kind ([`crate::job::FuncId`] raw value) — the cost-table key.
+    kind: u32,
     chunks: Vec<DataChunk>,
     /// One pre-sized slot per input chunk, written exactly once by
     /// whichever sequence executed that chunk.
     slots: Vec<OnceLock<std::result::Result<DataChunk, SeqError>>>,
+    /// Estimated cost per chunk in microseconds, snapshotted from the cost
+    /// table at submit (all zeros when cold or `cost_model` is off) — what
+    /// the adaptive steal sizes itself against without locking the table.
+    est_us: Vec<f64>,
+    /// Measured execution nanoseconds per chunk (0 = not executed), folded
+    /// into the cost table when the job completes.
+    chunk_ns: Vec<AtomicU64>,
     /// Chunks finished so far; whoever raises it to `chunks.len()`
     /// assembles and completes the job.
     done: AtomicUsize,
@@ -99,6 +139,11 @@ enum Task {
 
 struct PoolShared {
     deques: Vec<Mutex<VecDeque<Task>>>,
+    /// Estimated cost (whole microseconds) queued per deque — the steal
+    /// victim selector's O(1) read.  Every update happens while holding
+    /// the corresponding deque's lock and uses the task's deterministic
+    /// [`task_est_units`] value, so adds and removals cancel exactly.
+    deque_est: Vec<AtomicU64>,
     /// Tasks currently sitting in any deque (not yet taken by a sequence).
     pending: AtomicUsize,
     /// Park lock + condvar for idle sequences.  Lock order is always
@@ -108,6 +153,11 @@ struct PoolShared {
     shutdown: AtomicBool,
     work_stealing: bool,
     steal_granularity: usize,
+    cost_model: bool,
+    /// Measured per-chunk costs per job kind (DESIGN.md §9).  Locked once
+    /// per job submit (estimate snapshot) and once per job completion
+    /// (fold-in) — never on the per-chunk hot path.
+    costs: Mutex<CostTable>,
     /// Rotates the dealing origin per job so packed jobs spread over
     /// different sequences instead of piling onto sequence 0.
     deal_cursor: AtomicUsize,
@@ -140,16 +190,20 @@ pub struct SequencePool {
 }
 
 impl SequencePool {
+    /// Spawn the pool's sequence threads (parked until work arrives).
     pub fn new(cfg: PoolConfig, metrics: Option<Arc<MetricsCollector>>) -> Self {
         let n = cfg.sequences.max(1);
         let shared = Arc::new(PoolShared {
             deques: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            deque_est: (0..n).map(|_| AtomicU64::new(0)).collect(),
             pending: AtomicUsize::new(0),
             sleep: Mutex::new(()),
             wake: Condvar::new(),
             shutdown: AtomicBool::new(false),
             work_stealing: cfg.work_stealing,
             steal_granularity: cfg.steal_granularity.max(1),
+            cost_model: cfg.cost_model,
+            costs: Mutex::new(CostTable::new(cfg.cost_ewma_alpha)),
             deal_cursor: AtomicUsize::new(0),
             metrics,
             steals: AtomicU64::new(0),
@@ -174,6 +228,21 @@ impl SequencePool {
         self.shared.deques.len()
     }
 
+    /// The cost-model estimates this pool currently holds for `kind`'s
+    /// first `n` chunk indices, in microseconds (`None` while the kind is
+    /// cold or `cost_model` is off) — introspection for tests and tuning.
+    pub fn chunk_cost_estimates(&self, kind: u32, n: usize) -> Option<Vec<f64>> {
+        if !self.shared.cost_model {
+            return None;
+        }
+        self.shared
+            .costs
+            .lock()
+            .expect("cost table poisoned")
+            .chunk_estimates_us(kind, n)
+    }
+
+    /// Point-in-time lifetime counters.
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             steals: self.shared.steals.load(Ordering::Relaxed),
@@ -184,12 +253,15 @@ impl SequencePool {
     }
 
     /// Fan a chunk→chunk function over `input`'s chunks across up to
-    /// `n_threads` sequences.  Returns immediately; `on_complete` fires on
-    /// a sequence thread once every chunk finished, with the outputs in
-    /// input-chunk order and the job's execution microseconds.
+    /// `n_threads` sequences.  `kind` is the job's function id (the cost
+    /// table key; pass 0 for one-off jobs outside the worker path).
+    /// Returns immediately; `on_complete` fires on a sequence thread once
+    /// every chunk finished, with the outputs in input-chunk order and the
+    /// job's execution microseconds.
     pub fn submit_chunks(
         &self,
         f: PerChunkShared,
+        kind: u32,
         input: &FunctionData,
         n_threads: usize,
         on_complete: impl FnOnce(Result<FunctionData>, u64) + Send + 'static,
@@ -202,9 +274,25 @@ impl SequencePool {
         }
         let n_seqs = self.shared.deques.len();
         let width = n_threads.clamp(1, n_seqs).min(n);
+        // Cost-model estimates for this kind's chunks (DESIGN.md §9):
+        // `None` while the kind is cold or the model is off — the deal then
+        // stays the paper's round-robin split.
+        let est: Option<Vec<f64>> = if self.shared.cost_model && width > 1 {
+            self.shared
+                .costs
+                .lock()
+                .expect("cost table poisoned")
+                .chunk_estimates_us(kind, n)
+        } else {
+            None
+        };
+        let lpt = est.is_some();
         let job = Arc::new(ChunkJob {
             f,
+            kind,
             slots: (0..n).map(|_| OnceLock::new()).collect(),
+            est_us: est.unwrap_or_else(|| vec![0.0; n]),
+            chunk_ns: (0..n).map(|_| AtomicU64::new(0)).collect(),
             chunks,
             done: AtomicUsize::new(0),
             started: OnceLock::new(),
@@ -214,17 +302,38 @@ impl SequencePool {
         // Counter first: `pending >= tasks in deques` must hold at every
         // instant, or a racing pop could transiently underflow it.
         self.shared.pending.fetch_add(n, Ordering::AcqRel);
-        // Static round-robin deal (the paper's split): chunk i → sequence
-        // (start + i % width); within a sequence's deque, chunks keep
-        // ascending index order, exactly the old per-thread iteration
-        // t, t+width, t+2*width, ...
         let start = self.shared.deal_cursor.fetch_add(width, Ordering::Relaxed);
-        for i in 0..job.chunks.len() {
-            let seq = (start + (i % width)) % n_seqs;
-            self.shared.deques[seq]
-                .lock()
-                .expect("sequence deque poisoned")
-                .push_back(Task::Chunk { job: job.clone(), index: i });
+        if lpt {
+            // Cost-informed deal: LPT bin packing over the estimated chunk
+            // costs — each sequence slot receives a near-equal cost share,
+            // heaviest chunk first in its deque so it starts immediately.
+            for (slot, chunk_ids) in lpt_deal(&job.est_us, width).into_iter().enumerate() {
+                if chunk_ids.is_empty() {
+                    continue;
+                }
+                let seq = (start + slot) % n_seqs;
+                let mut dq =
+                    self.shared.deques[seq].lock().expect("sequence deque poisoned");
+                let mut est_units = 0u64;
+                for i in chunk_ids {
+                    let t = Task::Chunk { job: job.clone(), index: i };
+                    est_units += task_est_units(&t);
+                    dq.push_back(t);
+                }
+                self.shared.deque_est[seq].fetch_add(est_units, Ordering::Relaxed);
+            }
+        } else {
+            // Static round-robin deal (the paper's split): chunk i →
+            // sequence (start + i % width); within a sequence's deque,
+            // chunks keep ascending index order, exactly the old
+            // per-thread iteration t, t+width, t+2*width, ...
+            for i in 0..job.chunks.len() {
+                let seq = (start + (i % width)) % n_seqs;
+                self.shared.deques[seq]
+                    .lock()
+                    .expect("sequence deque poisoned")
+                    .push_back(Task::Chunk { job: job.clone(), index: i });
+            }
         }
         self.notify();
     }
@@ -257,7 +366,7 @@ impl SequencePool {
         n_threads: usize,
     ) -> Result<FunctionData> {
         let (tx, rx) = mpsc::channel();
-        self.submit_chunks(f.clone(), input, n_threads, move |r, _exec_us| {
+        self.submit_chunks(f.clone(), 0, input, n_threads, move |r, _exec_us| {
             let _ = tx.send(r);
         });
         rx.recv()
@@ -293,10 +402,11 @@ impl SequencePool {
     /// stats are flushed.
     pub fn abandon(&mut self) {
         let mut dropped = 0usize;
-        for dq in self.shared.deques.iter() {
+        for (i, dq) in self.shared.deques.iter().enumerate() {
             let mut q = dq.lock().expect("sequence deque poisoned");
             dropped += q.len();
             q.clear();
+            self.shared.deque_est[i].store(0, Ordering::Relaxed);
         }
         if dropped > 0 {
             self.shared.pending.fetch_sub(dropped, Ordering::AcqRel);
@@ -328,10 +438,14 @@ impl Drop for SequencePool {
 
 fn sequence_loop(me: usize, s: &PoolShared) {
     loop {
-        let own = s.deques[me]
-            .lock()
-            .expect("sequence deque poisoned")
-            .pop_front();
+        let own = {
+            let mut q = s.deques[me].lock().expect("sequence deque poisoned");
+            let t = q.pop_front();
+            if let Some(t) = &t {
+                s.deque_est[me].fetch_sub(task_est_units(t), Ordering::Relaxed);
+            }
+            t
+        };
         let task = match own {
             Some(t) => {
                 s.pending.fetch_sub(1, Ordering::AcqRel);
@@ -376,29 +490,73 @@ fn park(me: usize, s: &PoolShared) {
         .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
 }
 
-/// Take up to `steal_granularity` tasks from the *front* of the busiest
-/// victim's deque (oldest-dealt chunks first — under skew these are the
-/// likeliest to gate the job's tail).  The first is returned for immediate
-/// execution, the rest move into the thief's deque.
+/// Steal tasks from the *front* of the busiest victim's deque
+/// (oldest-dealt chunks first — under skew these are the likeliest to gate
+/// the job's tail).  The first is returned for immediate execution, the
+/// rest move into the thief's deque.
+///
+/// How much is stolen depends on the policy: with `cost_model` off, the
+/// fixed `steal_granularity` chunk count; with it on, enough tasks to move
+/// about **half the victim's estimated remaining cost** (cold start —
+/// nothing in the deque has an estimate — halves the backlog by count).
+/// Victim choice follows the same metric: largest estimated backlog cost,
+/// falling back to longest deque when no estimates exist.
 fn steal(me: usize, s: &PoolShared) -> Option<Task> {
-    let mut best: Option<(usize, usize)> = None;
+    // Victim selection is O(1) per candidate: the queued-cost counter is a
+    // relaxed atomic read (0 while the model is off or everything queued
+    // is cold, degrading to longest-deque) and `len` a brief lock.
+    let mut best: Option<(usize, u64, usize)> = None;
     for (v, dq) in s.deques.iter().enumerate() {
         if v == me {
             continue;
         }
         let len = dq.lock().expect("sequence deque poisoned").len();
-        if len > 0 && best.map_or(true, |(_, l)| len > l) {
-            best = Some((v, len));
+        if len == 0 {
+            continue;
+        }
+        let cost = s.deque_est[v].load(Ordering::Relaxed);
+        let better = match best {
+            None => true,
+            Some((_, bc, bl)) => cost > bc || (cost == bc && len > bl),
+        };
+        if better {
+            best = Some((v, cost, len));
         }
     }
-    let (victim, _) = best?;
+    let (victim, _, _) = best?;
     let mut got: Vec<Task> = Vec::new();
     {
         let mut vq = s.deques[victim].lock().expect("sequence deque poisoned");
-        let take = s.steal_granularity.min(vq.len());
-        for _ in 0..take {
-            got.push(vq.pop_front().expect("len checked"));
+        let mut taken_units = 0u64;
+        if s.cost_model {
+            // Incremental [`crate::cost::adaptive_steal_count`]: the
+            // queued-cost counter is exact under this lock (every update
+            // happens while holding it), so pop from the front until the
+            // haul reaches half the victim's estimated remaining cost —
+            // O(stolen), no walk of the rest of the backlog.  A zero total
+            // (cold kinds, plain tasks) halves the backlog by count.
+            let total = s.deque_est[victim].load(Ordering::Relaxed);
+            if total == 0 {
+                for _ in 0..vq.len().div_ceil(2) {
+                    got.push(vq.pop_front().expect("len checked"));
+                }
+            } else {
+                while let Some(t) = vq.pop_front() {
+                    taken_units += task_est_units(&t);
+                    got.push(t);
+                    if 2 * taken_units >= total {
+                        break;
+                    }
+                }
+            }
+        } else {
+            for _ in 0..s.steal_granularity.min(vq.len()) {
+                let t = vq.pop_front().expect("len checked");
+                taken_units += task_est_units(&t);
+                got.push(t);
+            }
         }
+        s.deque_est[victim].fetch_sub(taken_units, Ordering::Relaxed);
     }
     if got.is_empty() {
         return None; // victim drained in the window
@@ -411,14 +569,33 @@ fn steal(me: usize, s: &PoolShared) -> Option<Task> {
     if !rest.is_empty() {
         {
             let mut mine = s.deques[me].lock().expect("sequence deque poisoned");
+            let mut est_units = 0u64;
             for t in rest {
+                est_units += task_est_units(&t);
                 mine.push_back(t); // still counted in `pending`
             }
+            s.deque_est[me].fetch_add(est_units, Ordering::Relaxed);
         }
         // Re-queued extras are claimable by other idle sequences.
         notify(s);
     }
     Some(first)
+}
+
+/// Estimated cost of one queued task in microseconds (0.0 = unknown —
+/// plain tasks and cold chunk jobs carry no estimate).
+fn task_est_us(t: &Task) -> f64 {
+    match t {
+        Task::Chunk { job, index } => job.est_us.get(*index).copied().unwrap_or(0.0),
+        Task::Plain { .. } => 0.0,
+    }
+}
+
+/// The same estimate as whole microseconds — the unit of the per-deque
+/// queued-cost counters.  Deterministic per task, so the counter's adds
+/// and removals cancel exactly.
+fn task_est_units(t: &Task) -> u64 {
+    task_est_us(t).round().max(0.0) as u64
 }
 
 fn run_task(me: usize, s: &PoolShared, task: Task) {
@@ -433,8 +610,10 @@ fn run_task(me: usize, s: &PoolShared, task: Task) {
                 Err(p) => Err(SeqError::Panic(panic_message(p))),
             };
             let _ = job.slots[index].set(outcome); // sole writer of this slot
-            job.seq_busy_ns[me]
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let elapsed_ns = t0.elapsed().as_nanos() as u64;
+            // Sole executor of this chunk: a plain store, read at fold-in.
+            job.chunk_ns[index].store(elapsed_ns.max(1), Ordering::Relaxed);
+            job.seq_busy_ns[me].fetch_add(elapsed_ns, Ordering::Relaxed);
             // AcqRel: the finisher's read of the counter orders it after
             // every contributor's slot write.
             let done = job.done.fetch_add(1, Ordering::AcqRel) + 1;
@@ -488,6 +667,18 @@ fn finish_chunk_job(s: &PoolShared, job: &ChunkJob) {
         .map(|t| t.elapsed().as_micros() as u64)
         .unwrap_or(0);
     s.jobs_run.fetch_add(1, Ordering::Relaxed);
+    if s.cost_model {
+        // Fold this job's measured chunk costs into the kind's history —
+        // one table lock per job, not per chunk.  The `done` counter's
+        // AcqRel handoff ordered every `chunk_ns` store before this read.
+        let mut table = s.costs.lock().expect("cost table poisoned");
+        for (i, ns) in job.chunk_ns.iter().enumerate() {
+            let ns = ns.load(Ordering::Relaxed);
+            if ns > 0 {
+                table.record_chunk(job.kind, i, ns as f64 / 1_000.0);
+            }
+        }
+    }
     if let Some(m) = &s.metrics {
         m.pool_job_finished(job_imbalance(job));
     }
@@ -700,7 +891,7 @@ mod tests {
         let input = FunctionData::of_f32_chunked((0..60).map(|i| i as f32).collect(), 12);
         let on = SequencePool::new(PoolConfig::new(4), None);
         let off = SequencePool::new(
-            PoolConfig { sequences: 4, work_stealing: false, steal_granularity: 1 },
+            PoolConfig { work_stealing: false, cost_model: false, ..PoolConfig::new(4) },
             None,
         );
         let a = on.run_chunks(&sq(), &input, 4).unwrap();
@@ -744,7 +935,7 @@ mod tests {
                 (0..20).map(|i| base + i as f32).collect(),
                 5,
             );
-            pool.submit_chunks(sq(), &input, 2, move |r, _us| {
+            pool.submit_chunks(sq(), 0, &input, 2, move |r, _us| {
                 let _ = tx.send((job, r));
             });
         }
@@ -758,6 +949,64 @@ mod tests {
             seen += 1;
         }
         assert_eq!(seen, 2);
+    }
+
+    #[test]
+    fn cost_model_learns_and_keeps_values_identical() {
+        // A skewed kind (heavy last chunk) run repeatedly on one pool:
+        // round 1 is cold (round-robin deal), later rounds LPT-deal from
+        // the recorded history.  Values must match the sequential oracle
+        // every round, and the table must actually have learned the kind.
+        let f: PerChunkShared = Arc::new(|c: &DataChunk| {
+            let ms = c.first_f32()? as u64;
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(DataChunk::from_f32(c.as_f32()?.iter().map(|v| v + 0.5).collect()))
+        });
+        let mut fd = FunctionData::new();
+        for i in 0..11 {
+            fd.push(DataChunk::from_f32(vec![1.0, i as f32]));
+        }
+        fd.push(DataChunk::from_f32(vec![8.0, 99.0])); // heavy tail chunk
+        let want = run_sequential(&f, &fd).unwrap();
+        let pool = SequencePool::new(PoolConfig::new(4), None);
+        assert_eq!(pool.chunk_cost_estimates(0, 12), None, "table must start cold");
+        for round in 0..3 {
+            let got = pool.run_chunks(&f, &fd, 4).unwrap();
+            assert_eq!(
+                got.concat_f32().unwrap().as_f32().unwrap(),
+                want.concat_f32().unwrap().as_f32().unwrap(),
+                "round {round}"
+            );
+            // The table really learned the kind's skew profile: estimates
+            // exist from round 1 on (so later rounds LPT-deal, not
+            // round-robin) and the heavy tail chunk dominates them.
+            let est = pool
+                .chunk_cost_estimates(0, 12)
+                .expect("per-chunk history recorded after a completed job");
+            let (tail_idx, _) = est
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite estimates"))
+                .expect("non-empty estimates");
+            assert_eq!(tail_idx, 11, "heavy chunk not the costliest estimate: {est:?}");
+            assert!(est[11] >= 4_000.0, "8 ms chunk estimated at {} us", est[11]);
+        }
+    }
+
+    #[test]
+    fn cost_model_off_steals_fixed_granularity() {
+        // With the model off the steal amount must stay the configured
+        // constant — PR 3 behaviour, byte-identical schedules.
+        let input = FunctionData::of_f32_chunked((0..80).map(|i| i as f32).collect(), 16);
+        let pool = SequencePool::new(
+            PoolConfig { cost_model: false, steal_granularity: 2, ..PoolConfig::new(4) },
+            None,
+        );
+        let out = pool.run_chunks(&sq(), &input, 4).unwrap();
+        assert_eq!(out.len(), 16);
+        let flat = out.concat_f32().unwrap();
+        let expect: Vec<f32> = (0..80).map(|i| (i * i) as f32).collect();
+        assert_eq!(flat.as_f32().unwrap(), expect.as_slice());
     }
 
     #[test]

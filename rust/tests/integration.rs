@@ -68,7 +68,7 @@ fn cost_model_injection_shows_in_wall_time() {
         Framework::builder()
             .schedulers(2)
             .workers_per_scheduler(2)
-            .cost_model(cost)
+            .comm_cost_model(cost)
             .registry(reg)
             .build()
             .unwrap()

@@ -339,9 +339,12 @@ fn prop_pool_matches_sequential_under_stealing() {
         let want = run_sequential(&f, &fd).unwrap();
         let pool = SequencePool::new(
             PoolConfig {
-                sequences: threads,
                 work_stealing: true,
                 steal_granularity: rng.int_in(1, 4),
+                // Fixed-granularity stealing (PR 3 behaviour) — the
+                // cost-model variant is pinned separately below.
+                cost_model: false,
+                ..PoolConfig::new(threads)
             },
             None,
         );
@@ -354,6 +357,65 @@ fn prop_pool_matches_sequential_under_stealing() {
                     b.as_f32().unwrap(),
                     "seed {seed} round {round} chunk {i}"
                 );
+            }
+        }
+    }
+}
+
+/// Cost-model determinism (DESIGN.md §9): for any thread count 1..=8 and
+/// any skewed per-chunk cost profile, a `cost_model = on` pool produces
+/// exactly the sequential fast path's values — and exactly what a
+/// `cost_model = off` pool produces — across repeated runs of the same
+/// kind on one persistent pool (run 1 deals cold/round-robin, later runs
+/// LPT-deal from the recorded history; the schedule changes, the values
+/// must not).
+#[test]
+fn prop_pool_cost_model_matches_sequential_and_off() {
+    use hypar::job::registry::PerChunkShared;
+    use hypar::worker::pool::{run_sequential, PoolConfig, SequencePool};
+    use std::sync::Arc;
+
+    // Chunk cost is data-dependent: element 0 encodes a dwell time in
+    // tens of microseconds, so generated profiles are arbitrarily skewed.
+    let f: PerChunkShared = Arc::new(|c: &DataChunk| {
+        let v = c.as_f32()?;
+        let dwell = v.first().copied().unwrap_or(0.0) as u64 * 10;
+        std::thread::sleep(std::time::Duration::from_micros(dwell));
+        Ok(DataChunk::from_f32(v.iter().map(|x| x * 3.0 - 1.0).collect()))
+    });
+    for seed in 0..10 {
+        let mut rng = Rng::new(9100 + seed);
+        let threads = rng.int_in(1, 8);
+        let n_chunks = rng.below(17); // 0..=16
+        let mut fd = FunctionData::new();
+        for _ in 0..n_chunks {
+            // One-in-four chunks is heavy (up to ~2 ms), the rest light.
+            let cost = if rng.below(4) == 0 { rng.int_in(50, 200) } else { rng.int_in(0, 5) };
+            let len = rng.int_in(1, 8);
+            let mut v = vec![cost as f32];
+            v.extend((0..len).map(|_| rng.range_f32(-100.0, 100.0)));
+            fd.push(DataChunk::from_f32(v));
+        }
+        let want = run_sequential(&f, &fd).unwrap();
+        let on = SequencePool::new(
+            PoolConfig { cost_ewma_alpha: 0.5, ..PoolConfig::new(threads) },
+            None,
+        );
+        let off = SequencePool::new(
+            PoolConfig { cost_model: false, ..PoolConfig::new(threads) },
+            None,
+        );
+        for round in 0..3 {
+            for (label, pool) in [("on", &on), ("off", &off)] {
+                let got = pool.run_chunks(&f, &fd, threads).unwrap();
+                assert_eq!(got.len(), want.len(), "seed {seed} round {round} {label}");
+                for (i, (a, b)) in got.chunks().iter().zip(want.chunks()).enumerate() {
+                    assert_eq!(
+                        a.as_f32().unwrap(),
+                        b.as_f32().unwrap(),
+                        "seed {seed} round {round} {label} chunk {i}"
+                    );
+                }
             }
         }
     }
