@@ -1,0 +1,339 @@
+//! ABL-PLACE: compute-only placement (PR 4 byte-affinity + cost
+//! tie-breaks) vs comm-aware placement + kept-result prefetch
+//! (DESIGN.md §10) on a transfer-heavy cross-node workload.
+//!
+//! Workload: `LANES` independent stencil chains, each sweep computing
+//! `state_s = 0.6·state_{s−1} + 0.2·param_a + 0.2·param_b` from the
+//! lane's chain state plus two constant per-lane parameter blocks whose
+//! seed placement pins them on *opposite* sub-schedulers.  Every operand
+//! is a single ~1.9 KB chunk — deliberately *under* the PR 4
+//! `AFFINITY_MIN_BYTES` threshold, the regime where thresholding (vs
+//! pricing) is maximally wrong: the old policy classifies the operands as
+//! "light", ignores where they live and load-balances every sweep job by
+//! (estimated cost, queue, rank).  The per-sweep compute rotates across
+//! lanes (`base + ((lane+sweep) % lanes) · step`), so the lanes'
+//! readiness order rotates too and the old policy's order-driven
+//! assignment keeps migrating chains between sub-schedulers — every
+//! migration re-fetches the chain state through the simulated
+//! (α/β-injected) interconnect.  Comm-aware placement prices those
+//! transfers (~2 ms each on the modelled link, far above the
+//! sub-millisecond compute estimates) and keeps each chain resident where
+//! its state lives; the calibrated model converges to the injected link
+//! within a few transfers.  On top, kept-result prefetch fires every
+//! sweep: while the chain state is still being produced, the two params
+//! are already available and one of them is always remote to the
+//! predicted target, so the hinted sub pushes it into the predicted
+//! worker's cache (`CachePush`) and the eventual dispatch ships zero
+//! bytes for it.
+//!
+//! Values are identical in both configurations (placement never changes
+//! results); acceptance: ≥ 1.2× aggregate, identical values, kept-prefetch
+//! activity and comm-model calibration present in the metrics snapshot.
+//!
+//! ```text
+//! cargo bench --bench abl_placement
+//! # env knobs:
+//! #   HYPAR_PLACE_LANES=4  HYPAR_PLACE_SWEEPS=10  HYPAR_PLACE_ELEMS=480
+//! #   HYPAR_PLACE_BASE_US=200  HYPAR_PLACE_STEP_US=150
+//! #   HYPAR_PLACE_ALPHA_US=20  HYPAR_PLACE_KBPUS=1
+//! #   HYPAR_PLACE_JSON=BENCH_placement.json
+//! #   HYPAR_BENCH_REPS=5  HYPAR_BENCH_WARMUP=1
+//! #   HYPAR_BENCH_SMOKE=1   (tiny sizes, perf assertions skipped)
+//! ```
+
+use hypar::comm::CostModel;
+use hypar::prelude::*;
+use hypar::util::bench::{Bench, Report};
+use hypar::util::json::Json;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Shape {
+    lanes: usize,
+    sweeps: usize,
+    /// f32 elements per state chunk (2 of them are lane/sweep tags).
+    elems: usize,
+    /// Base compute sleep per sweep job, µs.
+    base_us: usize,
+    /// Rotation step of the compute sleep, µs.
+    step_us: usize,
+    /// Modelled per-message latency, µs.
+    alpha_us: usize,
+    /// Modelled link cost in **kilobytes per µs** inverse form: the bench
+    /// uses `1/kbpus` µs per byte ≈ `kbpus` GB/s · 10⁻³.
+    kbpus: usize,
+}
+
+/// Per-lane seed emitters (param A and param B, which double as the
+/// chain's initial state) plus the stencil itself.  Element 0 of every
+/// state is the lane tag, element 1 the sweep counter; the stencil's
+/// sleep rotates with `(lane + sweep) % lanes` so lane completion order
+/// shifts every sweep.
+fn registry(s: &Shape) -> FunctionRegistry {
+    let mut reg = FunctionRegistry::new();
+    let elems = s.elems;
+    for l in 0..s.lanes {
+        reg.register_plain(100 + l as u32, format!("param_a{l}"), move |_in, out| {
+            let mut v = vec![l as f32, -1.0];
+            v.extend((0..elems.saturating_sub(2)).map(|i| (l * 31 + i) as f32 * 0.001 + 1.0));
+            out.push(DataChunk::from_f32(v));
+            Ok(())
+        });
+        reg.register_plain(200 + l as u32, format!("param_b{l}"), move |_in, out| {
+            let mut v = vec![l as f32, 0.0];
+            v.extend((0..elems.saturating_sub(2)).map(|i| (l * 17 + i) as f32 * 0.002 + 0.5));
+            out.push(DataChunk::from_f32(v));
+            Ok(())
+        });
+    }
+    let lanes = s.lanes;
+    let (base_us, step_us) = (s.base_us, s.step_us);
+    reg.register_plain(1, "stencil", move |input, out| {
+        let chunks = input.chunks();
+        let prev = chunks[0].as_f32()?;
+        let pa = chunks[1].as_f32()?;
+        let pb = chunks[2].as_f32()?;
+        let lane = prev[0] as usize;
+        let sweep = prev[1] as usize + 1;
+        let us = base_us + ((lane + sweep) % lanes.max(1)) * step_us;
+        std::thread::sleep(std::time::Duration::from_micros(us as u64));
+        let v: Vec<f32> = prev
+            .iter()
+            .zip(pa.iter().zip(pb.iter()))
+            .enumerate()
+            .map(|(i, (p, (a, b)))| match i {
+                0 => lane as f32,
+                1 => sweep as f32,
+                _ => p * 0.6 + a * 0.2 + b * 0.2 + 0.01,
+            })
+            .collect();
+        out.push(DataChunk::from_f32(v));
+        Ok(())
+    });
+    reg
+}
+
+/// Segment 0: both params per lane, interleaved so the load-balanced seed
+/// placement pins every lane's param A on one sub-scheduler and its param
+/// B on the other (a guaranteed cross-node input split every sweep).
+/// Segments 1..=sweeps: one stencil job per lane referencing the lane's
+/// previous state plus both params (param B doubles as the initial
+/// state).
+fn algorithm(s: &Shape) -> Algorithm {
+    let param_a = |l: usize| (1 + l) as u32;
+    let param_b = |l: usize| (1 + s.lanes + l) as u32;
+    let sweep_id = |sw: usize, l: usize| (1 + 2 * s.lanes + (sw - 1) * s.lanes + l) as u32;
+    let mut b = Algorithm::builder();
+    let mut seg0 = Vec::new();
+    for l in 0..s.lanes {
+        seg0.push(JobSpec::new(param_a(l), 100 + l as u32, 1));
+        seg0.push(JobSpec::new(param_b(l), 200 + l as u32, 1));
+    }
+    b = b.segment(seg0);
+    for sw in 1..=s.sweeps {
+        let seg = (0..s.lanes)
+            .map(|l| {
+                let prev = if sw == 1 { param_b(l) } else { sweep_id(sw - 1, l) };
+                JobSpec::new(sweep_id(sw, l), 1, 1).with_inputs(vec![
+                    ChunkRef::all(JobId(prev)),
+                    ChunkRef::all(JobId(param_a(l))),
+                    ChunkRef::all(JobId(param_b(l))),
+                ])
+            })
+            .collect();
+        b = b.segment(seg);
+    }
+    b.build().expect("valid stencil-chain algorithm")
+}
+
+fn run_once(s: &Shape, comm_aware: bool) -> RunReport {
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(1)
+        .cores_per_worker(2)
+        .prespawn_workers(true)
+        .comm_cost_model(CostModel {
+            alpha_us: s.alpha_us as f64,
+            // kbpus KB/µs → kbpus·10⁻³ GB/s (1 GB/s == 1 B/ns).
+            bandwidth_gbps: s.kbpus as f64 * 1e-3,
+            simulate: true,
+        })
+        .comm_aware_placement(comm_aware)
+        .registry(registry(s))
+        .build()
+        .expect("framework build");
+    fw.run(algorithm(s)).expect("stencil-chain run")
+}
+
+/// Deterministically ordered digest of the final-segment values.
+fn digest(report: &RunReport) -> Vec<(u32, Vec<f32>)> {
+    report
+        .results
+        .iter()
+        .map(|(id, data)| {
+            let vals: Vec<f32> = data
+                .chunks()
+                .iter()
+                .flat_map(|c| c.as_f32().unwrap().iter().copied())
+                .collect();
+            (id.0, vals)
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::var("HYPAR_BENCH_SMOKE").is_ok();
+    let shape = if smoke {
+        Shape {
+            lanes: env_usize("HYPAR_PLACE_LANES", 2),
+            sweeps: env_usize("HYPAR_PLACE_SWEEPS", 3),
+            elems: env_usize("HYPAR_PLACE_ELEMS", 64),
+            base_us: env_usize("HYPAR_PLACE_BASE_US", 100),
+            step_us: env_usize("HYPAR_PLACE_STEP_US", 50),
+            alpha_us: env_usize("HYPAR_PLACE_ALPHA_US", 5),
+            kbpus: env_usize("HYPAR_PLACE_KBPUS", 100),
+        }
+    } else {
+        Shape {
+            lanes: env_usize("HYPAR_PLACE_LANES", 4),
+            sweeps: env_usize("HYPAR_PLACE_SWEEPS", 10),
+            elems: env_usize("HYPAR_PLACE_ELEMS", 480),
+            base_us: env_usize("HYPAR_PLACE_BASE_US", 200),
+            step_us: env_usize("HYPAR_PLACE_STEP_US", 150),
+            alpha_us: env_usize("HYPAR_PLACE_ALPHA_US", 20),
+            kbpus: env_usize("HYPAR_PLACE_KBPUS", 1),
+        }
+    };
+    let bench = Bench::default();
+
+    println!(
+        "ABL-PLACE: {} lanes x {} sweeps, {}-elem states (~{} B), link α={} µs \
+         β≈{} µs/KB, compute {}+rot·{} µs, reps {}{}",
+        shape.lanes,
+        shape.sweeps,
+        shape.elems,
+        shape.elems * 4,
+        shape.alpha_us,
+        1000 / shape.kbpus.max(1),
+        shape.base_us,
+        shape.step_us,
+        bench.reps,
+        if smoke { " [SMOKE: no perf assertions]" } else { "" }
+    );
+
+    let mut report = Report::new("abl_placement: compute-only vs comm-aware placement");
+    let mut digests: (Option<Vec<(u32, Vec<f32>)>>, Option<Vec<(u32, Vec<f32>)>>) =
+        (None, None);
+    let mut off_pushes = 0usize;
+    let mut on_pushes = 0usize;
+    let mut on_hits = 0usize;
+    let mut on_cancels = 0usize;
+    let mut on_comm_samples = 0u64;
+    let mut snapshot_has_comm_model = false;
+
+    let m_off = bench.measure("placement/compute_only", || {
+        let r = run_once(&shape, false);
+        off_pushes = r.metrics.kept_prefetch_pushes;
+        digests.0 = Some(digest(&r));
+    });
+    let m_on = bench.measure("placement/comm_aware", || {
+        let r = run_once(&shape, true);
+        on_pushes = r.metrics.kept_prefetch_pushes;
+        on_hits = r.metrics.kept_prefetch_hits;
+        on_cancels = r.metrics.kept_prefetch_cancels;
+        on_comm_samples = r.metrics.comm_model.samples;
+        // Acceptance: calibration accuracy + kept-prefetch counters must
+        // ride the serialised snapshot, not just the struct.
+        let doc = hypar::util::json::parse(&r.metrics.to_json().to_string())
+            .expect("snapshot json parses");
+        snapshot_has_comm_model = doc
+            .get("comm_model")
+            .map(|cm| cm.get("samples").is_some() && cm.get("mean_abs_err_us").is_some())
+            .unwrap_or(false)
+            && doc.get("kept_prefetch_hits").is_some()
+            && doc.get("kept_prefetch_cancels").is_some();
+        digests.1 = Some(digest(&r));
+    });
+    report.add(m_off.clone());
+    report.add(m_on.clone());
+    report.finish();
+
+    let speedup = m_off.mean.as_secs_f64() / m_on.mean.as_secs_f64();
+    let identical = digests.0 == digests.1;
+    println!(
+        "\ncomm-aware speedup {speedup:.2}x over compute-only placement \
+         (kept prefetch: {on_pushes} pushes, {on_hits} hits, {on_cancels} cancels; \
+         comm model: {on_comm_samples} samples)"
+    );
+
+    // Machine-readable perf-trajectory row.
+    let out_path = std::env::var("HYPAR_PLACE_JSON")
+        .unwrap_or_else(|_| "BENCH_placement.json".to_string());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("abl_placement".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("lanes", Json::num(shape.lanes as f64)),
+        ("sweeps", Json::num(shape.sweeps as f64)),
+        ("elems", Json::num(shape.elems as f64)),
+        ("alpha_us", Json::num(shape.alpha_us as f64)),
+        ("bandwidth_gbps", Json::num(shape.kbpus as f64 * 1e-3)),
+        ("reps", Json::num(bench.reps as f64)),
+        ("compute_only_mean_ms", Json::num(m_off.mean_ms())),
+        ("comm_aware_mean_ms", Json::num(m_on.mean_ms())),
+        ("speedup", Json::num(speedup)),
+        ("kept_prefetch_pushes", Json::num(on_pushes as f64)),
+        ("kept_prefetch_hits", Json::num(on_hits as f64)),
+        ("kept_prefetch_cancels", Json::num(on_cancels as f64)),
+        ("comm_model_samples", Json::num(on_comm_samples as f64)),
+        ("identical_values", Json::Bool(identical)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string_pretty(2)) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+
+    // Correctness gates hold even in smoke mode; perf gates only in a
+    // full run.
+    let mut pass = true;
+    if !identical {
+        println!("ACCEPTANCE FAIL: compute-only and comm-aware values differ");
+        pass = false;
+    }
+    if !snapshot_has_comm_model {
+        println!(
+            "ACCEPTANCE FAIL: comm_model / kept_prefetch metrics missing from to_json"
+        );
+        pass = false;
+    }
+    if off_pushes != 0 {
+        println!("ACCEPTANCE FAIL: comm_aware_placement=off still pushed kept prefetches");
+        pass = false;
+    }
+    if !smoke {
+        if speedup < 1.2 {
+            println!(
+                "ACCEPTANCE FAIL: comm-aware placement only {speedup:.2}x over \
+                 compute-only"
+            );
+            pass = false;
+        }
+        if on_pushes == 0 {
+            println!("ACCEPTANCE FAIL: kept-result prefetch never pushed a copy");
+            pass = false;
+        }
+        if on_comm_samples == 0 {
+            println!("ACCEPTANCE FAIL: comm-model calibration never observed a transfer");
+            pass = false;
+        }
+    }
+    if pass {
+        println!(
+            "ACCEPTANCE PASS: {}identical values, comm metrics exported",
+            if smoke { "(smoke) " } else { ">= 1.2x, " }
+        );
+    } else {
+        std::process::exit(1);
+    }
+}

@@ -1,7 +1,8 @@
-//! α/β communication cost model and global traffic statistics.
+//! α/β communication cost model, per-peer calibration, and global traffic
+//! statistics.
 //!
 //! Every send is charged `α + β · bytes` (the classic latency/bandwidth
-//! model).  Two uses:
+//! model).  Three uses:
 //!
 //! 1. **Accounting** (always on): totals land in [`CommStats`]; benchmark
 //!    reports include message/byte counts so communication-volume claims
@@ -10,9 +11,19 @@
 //!    sleeps for the modelled duration, so a single host exhibits
 //!    cluster-like timing and the Figure-3 curves have a realistic
 //!    communication/computation ratio.
+//! 3. **Scheduling input** ([`CommCalibration`], DESIGN.md §10): the
+//!    master's comm-aware placement prices candidate targets by estimated
+//!    transfer time.  Observed per-peer transfer durations (recorded by the
+//!    transport on every cross-rank send) refine the configured α/β with an
+//!    EWMA per link, falling back to the configured values while a link is
+//!    cold.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
+
+use super::Rank;
 
 /// Latency/bandwidth model. Default: accounting only, no injected delay.
 #[derive(Debug, Clone)]
@@ -117,6 +128,207 @@ impl StatsSnapshot {
     }
 }
 
+/// Something that can price a transfer between two ranks — the
+/// communication half of the master's comm-aware placement score
+/// (DESIGN.md §10).  Implemented by [`CommCalibration`]; placement takes
+/// the trait so tests can substitute fixed models.
+pub trait TransferEstimate {
+    /// Estimated microseconds to move `bytes` from `from` to `to`.
+    /// Zero for a rank-local move (no wire involved) and for zero bytes
+    /// (no message needed).
+    fn modelled_transfer_us(&self, from: Rank, to: Rank, bytes: u64) -> f64;
+}
+
+/// Messages at or above this size feed the bandwidth (β) EWMA of a link;
+/// smaller ones feed the latency (α) EWMA.  At 4 KiB the cross-term error
+/// (α on a β sample, β·bytes on an α sample) is below a percent for any
+/// plausible α/β pair, which beats solving the two-parameter fit online.
+pub const CALIBRATION_SPLIT_BYTES: usize = 4096;
+
+/// Default EWMA smoothing factor for link calibration (config knob
+/// `comm_calibration_ewma_alpha`): weight of the newest observation.
+pub const DEFAULT_CALIBRATION_EWMA_ALPHA: f64 = 0.3;
+
+/// One directed link's calibrated state.
+#[derive(Debug, Clone, Default)]
+struct LinkCal {
+    /// EWMA of observed per-message latency in µs (small messages).
+    alpha_us: f64,
+    alpha_samples: u64,
+    /// EWMA of observed µs per byte (large messages).
+    us_per_byte: f64,
+    beta_samples: u64,
+    /// Observations folded into this link (either EWMA).
+    samples: u64,
+    /// Σ |predicted − observed| µs, predicted with the estimate in force
+    /// *before* folding the observation (calibration accuracy).
+    abs_err_sum_us: f64,
+}
+
+/// Measured-bandwidth calibration of the α/β model, per directed peer pair
+/// (DESIGN.md §10).
+///
+/// The transport records every cross-rank send's `(bytes, elapsed)` here;
+/// [`TransferEstimate::modelled_transfer_us`] answers with the link's
+/// calibrated α/β when warm and the *configured* [`CostModel`] values when
+/// cold — so placement is usable from the first job, and converges to what
+/// transfers actually cost on this substrate (with `simulate = on`, the
+/// injected model; without it, the near-zero in-process truth).
+/// Lock shards for the link map: observation happens on every cross-rank
+/// send, concurrently from every sending thread — one global mutex would
+/// serialise them all.  A link's shard is a function of the (from, to)
+/// pair, so distinct links mostly take distinct locks and the per-link
+/// EWMA state itself needs no atomics.
+const CALIBRATION_SHARDS: usize = 8;
+
+#[derive(Debug)]
+pub struct CommCalibration {
+    cfg_alpha_us: f64,
+    cfg_us_per_byte: f64,
+    ewma_alpha: f64,
+    enabled: bool,
+    links: [Mutex<HashMap<(u32, u32), LinkCal>>; CALIBRATION_SHARDS],
+}
+
+/// Point-in-time calibration accuracy, exported by
+/// `MetricsSnapshot::to_json` under `"comm_model"`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommModelAccuracy {
+    /// Directed links with any calibration history.
+    pub links: usize,
+    /// Transfer observations folded in across all links.
+    pub samples: u64,
+    /// Mean |predicted − observed| µs over all observations (0 when no
+    /// samples).
+    pub mean_abs_err_us: f64,
+}
+
+impl CommCalibration {
+    /// Calibration over `model`'s configured α/β with the given EWMA
+    /// smoothing factor (out-of-range values fall back to the default).
+    /// With `enabled = false`, observations are ignored and estimates
+    /// always answer with the configured values.
+    pub fn new(model: &CostModel, ewma_alpha: f64, enabled: bool) -> Self {
+        let ewma_alpha =
+            if ewma_alpha.is_finite() && ewma_alpha > 0.0 && ewma_alpha <= 1.0 {
+                ewma_alpha
+            } else {
+                DEFAULT_CALIBRATION_EWMA_ALPHA
+            };
+        let cfg_us_per_byte =
+            if model.bandwidth_gbps.is_finite() && model.bandwidth_gbps > 0.0 {
+                // GB/s == bytes/ns, so ns/byte = 1/gbps; µs/byte = /1000.
+                1.0 / model.bandwidth_gbps / 1_000.0
+            } else {
+                0.0
+            };
+        CommCalibration {
+            cfg_alpha_us: model.alpha_us,
+            cfg_us_per_byte,
+            ewma_alpha,
+            enabled,
+            links: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+        }
+    }
+
+    /// Whether observations are being folded in.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The lock shard owning the `(from, to)` link.
+    fn shard(&self, from: Rank, to: Rank) -> &Mutex<HashMap<(u32, u32), LinkCal>> {
+        let idx = (from.0 as usize).wrapping_mul(31).wrapping_add(to.0 as usize)
+            % CALIBRATION_SHARDS;
+        &self.links[idx]
+    }
+
+    /// Fold one observed cross-rank transfer into the `(from, to)` link:
+    /// messages of [`CALIBRATION_SPLIT_BYTES`] or more refine the
+    /// bandwidth EWMA (µs/byte), smaller ones the latency EWMA.  Called by
+    /// the transport on every delivered send; no-op when disabled.
+    pub fn observe(&self, from: Rank, to: Rank, bytes: usize, elapsed_us: f64) {
+        if !self.enabled || from == to || !elapsed_us.is_finite() || elapsed_us < 0.0 {
+            return;
+        }
+        let mut links = self.shard(from, to).lock().expect("calibration lock poisoned");
+        let link = links.entry((from.0, to.0)).or_default();
+        let predicted =
+            link_modelled(link, self.cfg_alpha_us, self.cfg_us_per_byte, bytes as u64);
+        link.abs_err_sum_us += (predicted - elapsed_us).abs();
+        link.samples += 1;
+        if bytes >= CALIBRATION_SPLIT_BYTES {
+            let sample = elapsed_us / bytes as f64;
+            link.us_per_byte =
+                cal_ewma(self.ewma_alpha, link.us_per_byte, link.beta_samples, sample);
+            link.beta_samples += 1;
+        } else {
+            link.alpha_us =
+                cal_ewma(self.ewma_alpha, link.alpha_us, link.alpha_samples, elapsed_us);
+            link.alpha_samples += 1;
+        }
+    }
+
+    /// Calibration accuracy across all links (for the metrics snapshot).
+    pub fn accuracy(&self) -> CommModelAccuracy {
+        let mut links = 0usize;
+        let mut samples = 0u64;
+        let mut err = 0.0f64;
+        for shard in &self.links {
+            let shard = shard.lock().expect("calibration lock poisoned");
+            links += shard.len();
+            samples += shard.values().map(|l| l.samples).sum::<u64>();
+            err += shard.values().map(|l| l.abs_err_sum_us).sum::<f64>();
+        }
+        let mean_abs_err_us = if samples == 0 {
+            0.0
+        } else {
+            err / samples as f64
+        };
+        CommModelAccuracy { links, samples, mean_abs_err_us }
+    }
+}
+
+impl TransferEstimate for CommCalibration {
+    fn modelled_transfer_us(&self, from: Rank, to: Rank, bytes: u64) -> f64 {
+        if from == to || bytes == 0 {
+            return 0.0;
+        }
+        let links = self.shard(from, to).lock().expect("calibration lock poisoned");
+        match links.get(&(from.0, to.0)) {
+            Some(link) => {
+                link_modelled(link, self.cfg_alpha_us, self.cfg_us_per_byte, bytes)
+            }
+            None => self.cfg_alpha_us + self.cfg_us_per_byte * bytes as f64,
+        }
+    }
+}
+
+/// Modelled µs for one link, each term falling back to the configured
+/// value until it has at least one sample.
+fn link_modelled(link: &LinkCal, cfg_alpha_us: f64, cfg_us_per_byte: f64, bytes: u64) -> f64 {
+    let alpha = if link.alpha_samples > 0 {
+        link.alpha_us
+    } else {
+        cfg_alpha_us
+    };
+    let upb = if link.beta_samples > 0 {
+        link.us_per_byte
+    } else {
+        cfg_us_per_byte
+    };
+    alpha + upb * bytes as f64
+}
+
+/// One EWMA step; the first sample initialises the average directly.
+fn cal_ewma(alpha: f64, current: f64, samples: u64, sample: f64) -> f64 {
+    if samples == 0 {
+        sample
+    } else {
+        alpha * sample + (1.0 - alpha) * current
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,5 +367,82 @@ mod tests {
         let d = stats.snapshot().delta(a);
         assert_eq!(d.msgs, 1);
         assert_eq!(d.bytes, 30);
+    }
+
+    // ------------------------------------------------------- calibration
+
+    fn model_1us_1gbps() -> CostModel {
+        // α = 1 µs; 1 GB/s == 1 byte/ns == 0.001 µs/byte.
+        CostModel { alpha_us: 1.0, bandwidth_gbps: 1.0, simulate: false }
+    }
+
+    #[test]
+    fn cold_calibration_answers_with_configured_values() {
+        let c = CommCalibration::new(&model_1us_1gbps(), 0.5, true);
+        // α + β·1000 = 1 + 1 = 2 µs, straight from the config.
+        let est = c.modelled_transfer_us(Rank(1), Rank(2), 1_000);
+        assert!((est - 2.0).abs() < 1e-9, "cold estimate {est}");
+        assert_eq!(c.accuracy(), CommModelAccuracy::default());
+    }
+
+    #[test]
+    fn zero_bytes_and_self_links_are_free() {
+        let c = CommCalibration::new(&model_1us_1gbps(), 0.5, true);
+        assert_eq!(c.modelled_transfer_us(Rank(1), Rank(2), 0), 0.0);
+        assert_eq!(c.modelled_transfer_us(Rank(3), Rank(3), 1 << 20), 0.0);
+        // Degenerate observations are ignored, not folded.
+        c.observe(Rank(3), Rank(3), 1 << 20, 5000.0);
+        c.observe(Rank(1), Rank(2), 100, f64::NAN);
+        assert_eq!(c.accuracy().samples, 0);
+    }
+
+    #[test]
+    fn bandwidth_ewma_cold_start_then_refines_per_peer() {
+        let c = CommCalibration::new(&model_1us_1gbps(), 0.5, true);
+        // Two large-message observations on (1→2): 1 MiB in 10_000 µs
+        // (≈ 0.0095 µs/B), then in 30_000 µs.  First sample initialises
+        // the EWMA directly, second blends at α = 0.5.
+        let mib = (1usize << 20) as f64;
+        c.observe(Rank(1), Rank(2), 1 << 20, 10_000.0);
+        let est = c.modelled_transfer_us(Rank(1), Rank(2), 1 << 20);
+        // α still configured (1 µs) — no small-message samples yet.
+        assert!((est - (1.0 + 10_000.0)).abs() < 1.0, "first sample direct: {est}");
+        c.observe(Rank(1), Rank(2), 1 << 20, 30_000.0);
+        let est = c.modelled_transfer_us(Rank(1), Rank(2), 1 << 20);
+        assert!((est - (1.0 + 20_000.0)).abs() < 1.0, "blended: {est}");
+        // Per-peer: the reverse direction and other pairs stay cold.
+        let cold = c.modelled_transfer_us(Rank(2), Rank(1), 1 << 20);
+        assert!((cold - (1.0 + mib * 0.001)).abs() < 1e-6, "reverse link cold: {cold}");
+        // Accuracy scored the second observation against the warm estimate.
+        let acc = c.accuracy();
+        assert_eq!(acc.links, 1);
+        assert_eq!(acc.samples, 2);
+        assert!(acc.mean_abs_err_us > 0.0);
+    }
+
+    #[test]
+    fn small_messages_calibrate_latency_not_bandwidth() {
+        let c = CommCalibration::new(&model_1us_1gbps(), 1.0, true);
+        c.observe(Rank(1), Rank(2), 64, 7.0); // < CALIBRATION_SPLIT_BYTES
+        // α is now the observed 7 µs; β still configured.
+        let est = c.modelled_transfer_us(Rank(1), Rank(2), 1_000);
+        assert!((est - (7.0 + 1.0)).abs() < 1e-9, "{est}");
+    }
+
+    #[test]
+    fn disabled_calibration_ignores_observations() {
+        let c = CommCalibration::new(&model_1us_1gbps(), 0.5, false);
+        c.observe(Rank(1), Rank(2), 1 << 20, 99_999.0);
+        let est = c.modelled_transfer_us(Rank(1), Rank(2), 1_000);
+        assert!((est - 2.0).abs() < 1e-9, "configured values only: {est}");
+        assert_eq!(c.accuracy().samples, 0);
+    }
+
+    #[test]
+    fn bad_ewma_alpha_falls_back_to_default() {
+        for bad in [0.0, -1.0, 1.5, f64::NAN] {
+            let c = CommCalibration::new(&model_1us_1gbps(), bad, true);
+            assert_eq!(c.ewma_alpha, DEFAULT_CALIBRATION_EWMA_ALPHA);
+        }
     }
 }

@@ -26,7 +26,10 @@ pub mod costmodel;
 pub mod message;
 pub mod transport;
 
-pub use costmodel::{CommStats, CostModel, StatsSnapshot};
+pub use costmodel::{
+    CommCalibration, CommModelAccuracy, CommStats, CostModel, StatsSnapshot,
+    TransferEstimate,
+};
 pub use message::{Envelope, Tag, WireSize};
 pub use transport::{Comm, CommSender, Match, World};
 

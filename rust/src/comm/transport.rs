@@ -19,7 +19,9 @@ use std::time::Duration;
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-use super::costmodel::{CommStats, CostModel, StatsSnapshot};
+use super::costmodel::{
+    CommCalibration, CommStats, CostModel, StatsSnapshot, DEFAULT_CALIBRATION_EWMA_ALPHA,
+};
 use super::message::{CollPayload, Envelope, Inner, Tag, WireSize};
 use super::Rank;
 use crate::error::{Error, Result};
@@ -31,6 +33,9 @@ struct WorldInner<M> {
     epoch: AtomicU64,
     next_rank: AtomicU32,
     cost: CostModel,
+    /// Per-peer measured-transfer calibration of the α/β model
+    /// (DESIGN.md §10); fed by [`deliver`] on every cross-rank send.
+    calibration: Arc<CommCalibration>,
     stats: CommStats,
 }
 
@@ -79,14 +84,25 @@ impl<M> Clone for World<M> {
 }
 
 impl<M: Send + WireSize + 'static> World<M> {
-    /// New world with the given α/β communication cost model.
+    /// New world with the given α/β communication cost model (link
+    /// calibration on, default smoothing).
     pub fn new(cost: CostModel) -> Self {
+        Self::new_with_calibration(cost, DEFAULT_CALIBRATION_EWMA_ALPHA, true)
+    }
+
+    /// New world with explicit calibration settings (config knobs
+    /// `comm_calibration` / `comm_calibration_ewma_alpha`): with
+    /// `calibrate = false` the calibration always answers with the
+    /// configured α/β and observations are discarded.
+    pub fn new_with_calibration(cost: CostModel, ewma_alpha: f64, calibrate: bool) -> Self {
+        let calibration = Arc::new(CommCalibration::new(&cost, ewma_alpha, calibrate));
         World {
             inner: Arc::new(WorldInner {
                 mailboxes: RwLock::new(HashMap::new()),
                 epoch: AtomicU64::new(0),
                 next_rank: AtomicU32::new(0),
                 cost,
+                calibration,
                 stats: CommStats::default(),
             }),
         }
@@ -143,6 +159,12 @@ impl<M: Send + WireSize + 'static> World<M> {
         &self.inner.cost
     }
 
+    /// The world's per-peer transfer calibration (shared handle — the
+    /// master's comm-aware placement reads it, see DESIGN.md §10).
+    pub fn calibration(&self) -> Arc<CommCalibration> {
+        self.inner.calibration.clone()
+    }
+
     /// A free-standing send handle not tied to any rank (rank is encoded
     /// per send call as `src`). Used by the framework driver thread.
     pub fn sender_for(&self, src: Rank) -> CommSender<M> {
@@ -175,7 +197,13 @@ fn deliver<M: WireSize>(
     let tx = cache.map.get(&dst).expect("just ensured");
     // Account (and possibly sleep) *before* enqueuing, modelling the wire.
     // Self-sends are process-local (a worker depositing into its own cache)
-    // and never touch the interconnect — no charge.
+    // and never touch the interconnect — no charge, no calibration sample.
+    let src = env.src;
+    let t0 = if !local && inner.calibration.enabled() {
+        Some(std::time::Instant::now())
+    } else {
+        None
+    };
     if !local {
         inner.cost.on_send(bytes, &inner.stats);
     }
@@ -183,6 +211,13 @@ fn deliver<M: WireSize>(
         // Receiver endpoint dropped (rank died without deregistering).
         cache.map.remove(&dst);
         return Err(Error::RankUnreachable(dst));
+    }
+    if let Some(t0) = t0 {
+        // Observed send-side transfer time (includes the injected α/β
+        // sleep under `simulate`) refines the per-peer calibration.
+        inner
+            .calibration
+            .observe(src, dst, bytes, t0.elapsed().as_secs_f64() * 1e6);
     }
     Ok(())
 }
@@ -536,6 +571,49 @@ mod tests {
             root.recv().unwrap();
         }
         assert_eq!(w.stats().msgs, 4);
+    }
+
+    #[test]
+    fn calibration_learns_simulated_link_and_disabled_stays_cold() {
+        use super::super::costmodel::TransferEstimate;
+        // simulate = true: the injected sleep IS the observed transfer
+        // time, so the calibrated estimate converges to the configured
+        // model instead of the near-zero in-process truth.
+        let model = CostModel { alpha_us: 0.0, bandwidth_gbps: 0.001, simulate: true };
+        let w: W = World::new(model);
+        let a = w.add_rank();
+        let mut b = w.add_rank();
+        // 8 KiB at 0.001 GB/s (1 µs/byte) ≈ 8 ms injected — a β sample.
+        a.send(b.rank(), Tag(0), vec![0u8; 8192]).unwrap();
+        b.recv().unwrap();
+        let cal = w.calibration();
+        assert_eq!(cal.accuracy().samples, 1);
+        let est = cal.modelled_transfer_us(a.rank(), b.rank(), 8192);
+        assert!(
+            est > 4_000.0,
+            "calibration must have learned the injected delay, got {est} µs"
+        );
+        // Disabled world: sends are never observed.
+        let model = CostModel { alpha_us: 0.0, bandwidth_gbps: 0.001, simulate: false };
+        let w: W = World::new_with_calibration(model, 0.3, false);
+        let a = w.add_rank();
+        let mut b = w.add_rank();
+        a.send(b.rank(), Tag(0), vec![0u8; 8192]).unwrap();
+        b.recv().unwrap();
+        assert_eq!(w.calibration().accuracy().samples, 0);
+        // Cold + disabled: configured model (8192 bytes · 1 µs/byte).
+        let est = w.calibration().modelled_transfer_us(a.rank(), b.rank(), 8192);
+        assert!((est - 8192.0).abs() < 1e-6, "{est}");
+    }
+
+    #[test]
+    fn self_sends_are_not_observed() {
+        let w: W = World::new(CostModel::default());
+        let mut a = w.add_rank();
+        let me = a.rank();
+        a.send(me, Tag(0), vec![0u8; 8192]).unwrap();
+        a.recv().unwrap();
+        assert_eq!(w.calibration().accuracy().samples, 0);
     }
 
     #[test]

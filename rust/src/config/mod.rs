@@ -22,13 +22,18 @@
 //!   "work_stealing": true,
 //!   "steal_granularity": 1,
 //!   "cost_model": true,
-//!   "cost_ewma_alpha": 0.3
+//!   "cost_ewma_alpha": 0.3,
+//!   "comm_aware_placement": true,
+//!   "comm_calibration": true,
+//!   "comm_calibration_ewma_alpha": 0.3
 //! }
 //! ```
 //!
 //! The canonical description of every knob — JSON key, builder method,
 //! default and effect — is the config-knob table in the repository
-//! `README.md`.
+//! `README.md`; its "Which knobs for which workload" section maps
+//! workload shapes (compute-skewed, transfer-heavy, paper-faithful) to
+//! knob combinations.
 //!
 //! Compatibility: `cost_model` used to be the name of the *communication*
 //! cost-model section (now `comm_cost_model`); an object under the
@@ -182,6 +187,22 @@ pub struct TopologyConfig {
     /// EWMA smoothing factor for the execution cost tables (weight of the
     /// newest observation, `(0, 1]`).
     pub cost_ewma_alpha: f64,
+    /// Comm-aware placement (DESIGN.md §10): the master prices candidate
+    /// targets by estimated compute backlog **plus** modelled transfer
+    /// time (per-peer calibrated α/β), sizes job estimates per input byte,
+    /// and kept-result prefetch warms predicted worker caches.  On by
+    /// default; off reproduces the PR 4 byte-affinity placement exactly.
+    /// Values are byte-identical either way — only where jobs run and
+    /// when bytes move changes.  See the README tuning guide for which
+    /// workloads benefit.
+    pub comm_aware_placement: bool,
+    /// Refine the configured comm α/β per peer from observed transfer
+    /// times (DESIGN.md §10).  Off = placement always prices with the
+    /// configured `comm_cost_model` values.
+    pub comm_calibration: bool,
+    /// EWMA smoothing factor of the per-peer link calibration (weight of
+    /// the newest observed transfer, `(0, 1]`).
+    pub comm_calibration_ewma_alpha: f64,
 }
 
 impl Default for TopologyConfig {
@@ -200,6 +221,9 @@ impl Default for TopologyConfig {
             steal_granularity: 1,
             cost_model: true,
             cost_ewma_alpha: crate::cost::DEFAULT_COST_EWMA_ALPHA,
+            comm_aware_placement: true,
+            comm_calibration: true,
+            comm_calibration_ewma_alpha: crate::comm::costmodel::DEFAULT_CALIBRATION_EWMA_ALPHA,
         }
     }
 }
@@ -270,6 +294,21 @@ impl TopologyConfig {
                 .as_f64()
                 .ok_or_else(|| Error::Config("cost_ewma_alpha must be a number".into()))?;
         }
+        if let Some(v) = doc.get("comm_aware_placement") {
+            cfg.comm_aware_placement = v.as_bool().ok_or_else(|| {
+                Error::Config("comm_aware_placement must be a bool".into())
+            })?;
+        }
+        if let Some(v) = doc.get("comm_calibration") {
+            cfg.comm_calibration = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("comm_calibration must be a bool".into()))?;
+        }
+        if let Some(v) = doc.get("comm_calibration_ewma_alpha") {
+            cfg.comm_calibration_ewma_alpha = v.as_f64().ok_or_else(|| {
+                Error::Config("comm_calibration_ewma_alpha must be a number".into())
+            })?;
+        }
         if let Some(v) = doc.get("execution_mode") {
             let s = v
                 .as_str()
@@ -327,6 +366,15 @@ impl TopologyConfig {
             ("cost_model", Json::Bool(self.cost_model)),
             ("cost_ewma_alpha", Json::num(self.cost_ewma_alpha)),
             (
+                "comm_aware_placement",
+                Json::Bool(self.comm_aware_placement),
+            ),
+            ("comm_calibration", Json::Bool(self.comm_calibration)),
+            (
+                "comm_calibration_ewma_alpha",
+                Json::num(self.comm_calibration_ewma_alpha),
+            ),
+            (
                 "comm_cost_model",
                 Json::obj(vec![
                     ("alpha_us", Json::num(self.comm_cost_model.alpha_us)),
@@ -374,6 +422,15 @@ impl TopologyConfig {
             return Err(Error::Config(format!(
                 "cost_ewma_alpha must be in (0, 1], got {}",
                 self.cost_ewma_alpha
+            )));
+        }
+        if !self.comm_calibration_ewma_alpha.is_finite()
+            || self.comm_calibration_ewma_alpha <= 0.0
+            || self.comm_calibration_ewma_alpha > 1.0
+        {
+            return Err(Error::Config(format!(
+                "comm_calibration_ewma_alpha must be in (0, 1], got {}",
+                self.comm_calibration_ewma_alpha
             )));
         }
         if let Some(e) = &self.engine {
@@ -510,6 +567,48 @@ mod tests {
             TopologyConfig::from_json_text(r#"{"comm_cost_model": {"alpha_us": 3.0}}"#)
                 .unwrap();
         assert_eq!(cfg.comm_cost_model.alpha_us, 3.0);
+    }
+
+    #[test]
+    fn comm_aware_knobs_parse_and_roundtrip() {
+        let d = TopologyConfig::default();
+        assert!(d.comm_aware_placement, "on by default");
+        assert!(d.comm_calibration, "on by default");
+        assert_eq!(
+            d.comm_calibration_ewma_alpha,
+            crate::comm::costmodel::DEFAULT_CALIBRATION_EWMA_ALPHA
+        );
+        let cfg = TopologyConfig::from_json_text(
+            r#"{"comm_aware_placement": false, "comm_calibration": false,
+                "comm_calibration_ewma_alpha": 0.7}"#,
+        )
+        .unwrap();
+        assert!(!cfg.comm_aware_placement);
+        assert!(!cfg.comm_calibration);
+        assert_eq!(cfg.comm_calibration_ewma_alpha, 0.7);
+        let back = TopologyConfig::from_json_text(&cfg.to_json()).unwrap();
+        assert!(!back.comm_aware_placement);
+        assert!(!back.comm_calibration);
+        assert_eq!(back.comm_calibration_ewma_alpha, 0.7);
+        assert!(
+            TopologyConfig::from_json_text(r#"{"comm_aware_placement": "on"}"#).is_err()
+        );
+        assert!(TopologyConfig::from_json_text(r#"{"comm_calibration": 1}"#).is_err());
+        assert!(TopologyConfig::from_json_text(
+            r#"{"comm_calibration_ewma_alpha": "fast"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn bad_comm_calibration_ewma_alpha_rejected() {
+        for bad in [0.0, -0.5, 1.5] {
+            let cfg = TopologyConfig {
+                comm_calibration_ewma_alpha: bad,
+                ..Default::default()
+            };
+            assert!(cfg.validate().is_err(), "alpha {bad} must be rejected");
+        }
     }
 
     #[test]

@@ -46,6 +46,12 @@ struct FuncCost {
     job_us: f64,
     /// Whole-job samples folded in so far.
     job_samples: u64,
+    /// EWMA of execution microseconds per input byte (per-byte
+    /// normalisation, DESIGN.md §10 — kinds with variable input sizes
+    /// estimate as µs/byte instead of a size-blind whole-job mean).
+    us_per_byte: f64,
+    /// Sized samples folded into the per-byte EWMA.
+    byte_samples: u64,
     /// EWMA execution microseconds per chunk index.
     chunk_us: Vec<f64>,
     /// Samples folded into each chunk-index EWMA.
@@ -101,6 +107,34 @@ impl CostTable {
         let e = self.funcs.entry(kind).or_default();
         e.job_us = ewma(self.alpha, e.job_us, e.job_samples, exec_us as f64);
         e.job_samples += 1;
+    }
+
+    /// Fold one *sized* whole-job observation: besides the whole-job EWMA
+    /// (identical to [`Self::record_job`]), record the job's cost per
+    /// input byte, so kinds whose jobs vary in input size estimate as
+    /// µs/byte (DESIGN.md §10).  `input_bytes == 0` (size unknown, or a
+    /// pure emitter) skips the per-byte term.
+    pub fn record_job_sized(&mut self, kind: u32, exec_us: u64, input_bytes: u64) {
+        self.record_job(kind, exec_us);
+        if input_bytes == 0 {
+            return;
+        }
+        let e = self.funcs.entry(kind).or_default();
+        let sample = exec_us as f64 / input_bytes as f64;
+        e.us_per_byte = ewma(self.alpha, e.us_per_byte, e.byte_samples, sample);
+        e.byte_samples += 1;
+    }
+
+    /// Size-normalised whole-job estimate: `µs/byte · input_bytes` when
+    /// the kind has per-byte history and the size is known, else the plain
+    /// whole-job EWMA ([`Self::estimate_job_us`]), else `None` (cold).
+    pub fn estimate_job_us_sized(&self, kind: u32, input_bytes: u64) -> Option<f64> {
+        if input_bytes > 0 {
+            if let Some(e) = self.funcs.get(&kind).filter(|e| e.byte_samples > 0) {
+                return Some(e.us_per_byte * input_bytes as f64);
+            }
+        }
+        self.estimate_job_us(kind)
     }
 
     /// Fold one observed chunk execution time (microseconds, fractional
@@ -283,6 +317,29 @@ mod tests {
         t.record_chunk(1, 2, 10.0);
         let est = t.chunk_estimates_us(1, 3).unwrap();
         assert_eq!(est[2], 15.0);
+    }
+
+    #[test]
+    fn sized_estimates_normalise_per_byte_and_fall_back() {
+        let mut t = CostTable::new(0.5);
+        // Cold: no estimate at all.
+        assert_eq!(t.estimate_job_us_sized(1, 1000), None);
+        // 1000 µs over 1000 bytes → 1 µs/byte; the whole-job EWMA is fed
+        // too, so unsized queries still answer.
+        t.record_job_sized(1, 1000, 1000);
+        assert_eq!(t.estimate_job_us_sized(1, 4000), Some(4000.0));
+        assert_eq!(t.estimate_job_us(1), Some(1000.0));
+        // Unknown size falls back to the whole-job estimate.
+        assert_eq!(t.estimate_job_us_sized(1, 0), Some(1000.0));
+        // A second sized sample blends: 0.5·(3000/1000) + 0.5·1 = 2 µs/B.
+        t.record_job_sized(1, 3000, 1000);
+        assert_eq!(t.estimate_job_us_sized(1, 100), Some(200.0));
+        // Zero-byte observations leave the per-byte EWMA untouched.
+        t.record_job_sized(1, 500_000, 0);
+        assert_eq!(t.estimate_job_us_sized(1, 100), Some(200.0));
+        // A kind with only unsized history estimates size-blind.
+        t.record_job(2, 700);
+        assert_eq!(t.estimate_job_us_sized(2, 1 << 20), Some(700.0));
     }
 
     #[test]

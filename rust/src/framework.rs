@@ -122,7 +122,11 @@ impl Framework {
         algo.validate()?;
         self.registry.check_algorithm(&algo)?;
 
-        let world: World<FwMsg> = World::new(self.cfg.comm_cost_model());
+        let world: World<FwMsg> = World::new_with_calibration(
+            self.cfg.comm_cost_model(),
+            self.cfg.comm_calibration_ewma_alpha,
+            self.cfg.comm_calibration,
+        );
         let metrics = Arc::new(MetricsCollector::new());
 
         // Rank 0: master (this thread).
@@ -149,6 +153,8 @@ impl Framework {
                         max_workers: self.cfg.workers_per_scheduler,
                         cores_per_worker: self.cfg.cores_per_worker,
                         prespawn: self.cfg.prespawn_workers,
+                        kept_prefetch: self.cfg.comm_aware_placement
+                            && self.cfg.speculative_prefetch,
                         worker: worker_cfg.clone(),
                         tick: Duration::from_millis(20),
                     },
@@ -168,6 +174,8 @@ impl Framework {
                 prefetch: self.cfg.speculative_prefetch,
                 cost_model: self.cfg.cost_model,
                 cost_ewma_alpha: self.cfg.cost_ewma_alpha,
+                comm_aware: self.cfg.comm_aware_placement,
+                comm: world.calibration(),
             },
             &metrics,
         );
@@ -175,6 +183,7 @@ impl Framework {
         for s in subs {
             let _ = s.handle.join();
         }
+        metrics.comm_model(world.calibration().accuracy());
         let snapshot = metrics.finish(world.stats());
         result.map(|results| RunReport { results, metrics: snapshot })
     }
@@ -304,6 +313,63 @@ impl FrameworkBuilder {
     /// adapts to the victim's estimated backlog cost.
     pub fn steal_granularity(mut self, chunks: usize) -> Self {
         self.cfg.steal_granularity = chunks;
+        self
+    }
+
+    /// Comm-aware placement (default: on; DESIGN.md §10).  The master
+    /// prices every candidate sub-scheduler by estimated compute backlog
+    /// **plus** modelled transfer time for the bytes the job would pull
+    /// there, using the `comm_cost_model` α/β refined per peer by
+    /// [`Self::comm_calibration`]; job-cost estimates are normalised per
+    /// input byte, and kept-result prefetch pushes predicted inputs into
+    /// worker caches.  Off reproduces the PR 4 byte-affinity placement
+    /// exactly.  Computed values are identical either way — see the README
+    /// tuning guide ("Which knobs for which workload").
+    ///
+    /// Configuring the transfer model and the placement knob together:
+    ///
+    /// ```
+    /// use hypar::prelude::*;
+    /// use hypar::comm::CostModel;
+    /// use hypar::job::registry::demo_registry;
+    ///
+    /// let report = Framework::builder()
+    ///     .schedulers(2)
+    ///     .workers_per_scheduler(1)
+    ///     // Model a 5 µs / 1 GB/s interconnect; `simulate: false` keeps
+    ///     // it accounting-only (no injected sleeps).
+    ///     .comm_cost_model(CostModel {
+    ///         alpha_us: 5.0,
+    ///         bandwidth_gbps: 1.0,
+    ///         simulate: false,
+    ///     })
+    ///     .comm_aware_placement(true) // price compute + transfer end to end
+    ///     .registry(demo_registry())
+    ///     .build()
+    ///     .unwrap()
+    ///     .run(Algorithm::parse("J1(1,1,0); J2(1,1,R1);").unwrap())
+    ///     .unwrap();
+    /// // The calibration accuracy rides the metrics snapshot.
+    /// assert!(report.metrics.comm_model.samples > 0);
+    /// ```
+    pub fn comm_aware_placement(mut self, on: bool) -> Self {
+        self.cfg.comm_aware_placement = on;
+        self
+    }
+
+    /// Refine the configured comm α/β per peer from observed transfer
+    /// times (default: on; DESIGN.md §10).  Off pins the transfer
+    /// estimates to the configured [`Self::comm_cost_model`] values.
+    pub fn comm_calibration(mut self, on: bool) -> Self {
+        self.cfg.comm_calibration = on;
+        self
+    }
+
+    /// EWMA smoothing factor of the per-peer link calibration (weight of
+    /// the newest observed transfer, `(0, 1]`; default
+    /// [`crate::comm::costmodel::DEFAULT_CALIBRATION_EWMA_ALPHA`]).
+    pub fn comm_calibration_ewma_alpha(mut self, alpha: f64) -> Self {
+        self.cfg.comm_calibration_ewma_alpha = alpha;
         self
     }
 

@@ -12,7 +12,7 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::comm::StatsSnapshot;
+use crate::comm::{CommModelAccuracy, StatsSnapshot};
 use crate::job::JobId;
 
 /// Lifecycle timestamps of one job (all relative to run start).
@@ -148,6 +148,18 @@ pub struct MetricsSnapshot {
     /// the predicted target pulled are released instead of lingering
     /// until shutdown).
     pub prefetch_cancels: usize,
+    /// Kept-result prefetch (DESIGN.md §10): results pushed into a
+    /// predicted worker's retained cache ahead of dispatch.
+    pub kept_prefetch_pushes: usize,
+    /// Dispatches that consumed a pushed copy as a kept input (zero bytes
+    /// shipped with the `Exec` for that source).
+    pub kept_prefetch_hits: usize,
+    /// Pushed copies dropped without ever being consumed (mispredicted
+    /// worker or sub target, released source, dead worker).
+    pub kept_prefetch_cancels: usize,
+    /// Accuracy of the per-peer comm-model calibration (DESIGN.md §10):
+    /// how well the α/β estimates in force predicted observed transfers.
+    pub comm_model: CommModelAccuracy,
     /// Cost-model accuracy per job kind: estimate vs observed execution
     /// time (DESIGN.md §9; empty while `cost_model` is off).
     pub cost_model: BTreeMap<u32, CostModelStat>,
@@ -349,6 +361,26 @@ impl MetricsSnapshot {
             ("prefetches_sent", Json::num(self.prefetches_sent as f64)),
             ("prefetch_hits", Json::num(self.prefetch_hits as f64)),
             ("prefetch_cancels", Json::num(self.prefetch_cancels as f64)),
+            (
+                "kept_prefetch_pushes",
+                Json::num(self.kept_prefetch_pushes as f64),
+            ),
+            ("kept_prefetch_hits", Json::num(self.kept_prefetch_hits as f64)),
+            (
+                "kept_prefetch_cancels",
+                Json::num(self.kept_prefetch_cancels as f64),
+            ),
+            (
+                "comm_model",
+                Json::obj(vec![
+                    ("links", Json::num(self.comm_model.links as f64)),
+                    ("samples", Json::num(self.comm_model.samples as f64)),
+                    (
+                        "mean_abs_err_us",
+                        Json::num(self.comm_model.mean_abs_err_us),
+                    ),
+                ]),
+            ),
             (
                 "cost_model",
                 Json::Arr(
@@ -597,6 +629,28 @@ impl MetricsCollector {
         self.with(|m| m.prefetch_cancels += 1);
     }
 
+    /// A sub-scheduler pushed a prefetched result into a predicted
+    /// worker's retained cache (kept-result prefetch, DESIGN.md §10).
+    pub fn kept_prefetch_pushed(&self) {
+        self.with(|m| m.kept_prefetch_pushes += 1);
+    }
+
+    /// A dispatch consumed a pushed copy as a kept input.
+    pub fn kept_prefetch_hit(&self) {
+        self.with(|m| m.kept_prefetch_hits += 1);
+    }
+
+    /// A pushed copy was dropped without ever being consumed.
+    pub fn kept_prefetch_cancelled(&self) {
+        self.with(|m| m.kept_prefetch_cancels += 1);
+    }
+
+    /// Record the comm-model calibration accuracy (folded in by the
+    /// framework right before [`Self::finish`]).
+    pub fn comm_model(&self, acc: CommModelAccuracy) {
+        self.with(|m| m.comm_model = acc);
+    }
+
     /// One completion observed by the cost model: `est_us` is the EWMA
     /// estimate that was in force (None on the kind's first completion),
     /// `actual_us` the measured execution time.
@@ -795,6 +849,28 @@ mod tests {
         assert_eq!(arr[0].get("samples").unwrap().as_usize(), Some(3));
         assert!(arr[0].get("mean_abs_err_us").unwrap().as_f64().is_some());
         assert_eq!(back.get("prefetch_cancels").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn kept_prefetch_and_comm_model_fold_and_export() {
+        let c = MetricsCollector::new();
+        c.kept_prefetch_pushed();
+        c.kept_prefetch_pushed();
+        c.kept_prefetch_hit();
+        c.kept_prefetch_cancelled();
+        c.comm_model(CommModelAccuracy { links: 3, samples: 40, mean_abs_err_us: 12.5 });
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        assert_eq!(snap.kept_prefetch_pushes, 2);
+        assert_eq!(snap.kept_prefetch_hits, 1);
+        assert_eq!(snap.kept_prefetch_cancels, 1);
+        let text = snap.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("kept_prefetch_hits").unwrap().as_usize(), Some(1));
+        assert_eq!(back.get("kept_prefetch_cancels").unwrap().as_usize(), Some(1));
+        let cm = back.get("comm_model").unwrap();
+        assert_eq!(cm.get("links").unwrap().as_usize(), Some(3));
+        assert_eq!(cm.get("samples").unwrap().as_usize(), Some(40));
+        assert_eq!(cm.get("mean_abs_err_us").unwrap().as_f64(), Some(12.5));
     }
 
     #[test]

@@ -20,8 +20,9 @@
 //! ([`SourceLoc`]) and *whether* they are still needed.
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::sync::Arc;
 
-use crate::comm::{Comm, Rank};
+use crate::comm::{Comm, CommCalibration, Rank, TransferEstimate};
 use crate::config::ExecutionMode;
 use crate::cost::CostTable;
 use crate::data::FunctionData;
@@ -31,7 +32,7 @@ use crate::metrics::MetricsCollector;
 
 use super::dynamic::resolve_injections;
 use super::graph::{JobGraph, NodeState};
-use super::placement::choose_scheduler_lookahead;
+use super::placement::choose_scheduler_policy;
 use super::{FwMsg, SourceLoc, TAG_CTRL};
 
 /// When stored results are freed (see DESIGN.md §6 discussion).
@@ -73,6 +74,15 @@ pub struct MasterConfig {
     pub cost_model: bool,
     /// EWMA smoothing factor of the cost table (`(0, 1]`).
     pub cost_ewma_alpha: f64,
+    /// Comm-aware placement (DESIGN.md §10, knob `comm_aware_placement`):
+    /// price candidate targets by estimated compute backlog **plus**
+    /// modelled transfer time, with size-normalised (µs/byte) job
+    /// estimates.  Off reproduces the PR 4 byte-affinity placement
+    /// bit-for-bit.
+    pub comm_aware: bool,
+    /// The world's per-peer transfer calibration — the α/β model refined
+    /// by observed transfer times (read-only here; the transport feeds it).
+    pub comm: Arc<CommCalibration>,
 }
 
 /// Drive one algorithm to completion. Returns the results of the final
@@ -546,6 +556,7 @@ impl<'a> Master<'a> {
                 continue;
             }
             let Some(spec) = self.specs.get(&job) else { continue };
+            let threads = spec.threads;
             let lookahead: Vec<JobSpec> = self
                 .graph
                 .consumers_of(job)
@@ -553,15 +564,7 @@ impl<'a> Master<'a> {
                 .filter_map(|c| self.specs.get(c))
                 .cloned()
                 .collect();
-            let target = choose_scheduler_lookahead(
-                spec,
-                &lookahead,
-                &self.owners,
-                &self.result_bytes,
-                &self.load,
-                &self.est_load,
-                &self.cfg.subs,
-            );
+            let target = self.place(spec, &lookahead);
             let mut seen = HashSet::new();
             let sources: Vec<SourceLoc> = spec
                 .inputs
@@ -578,8 +581,41 @@ impl<'a> Master<'a> {
             self.metrics.prefetch_sent();
             let _ = self
                 .comm
-                .send(target, TAG_CTRL, FwMsg::Prefetch { job, sources });
+                .send(target, TAG_CTRL, FwMsg::Prefetch { job, threads, sources });
         }
+    }
+
+    /// The master's placement decision for `spec` (with look-ahead
+    /// successors): comm-aware pricing when the knob is on, the PR 4
+    /// byte-affinity policy otherwise.  Shared by real assignment and the
+    /// prefetch target predictor so both always agree.
+    fn place(&self, spec: &JobSpec, lookahead: &[JobSpec]) -> Rank {
+        let comm: Option<&dyn TransferEstimate> = if self.cfg.comm_aware {
+            Some(self.cfg.comm.as_ref())
+        } else {
+            None
+        };
+        choose_scheduler_policy(
+            spec,
+            lookahead,
+            &self.owners,
+            &self.result_bytes,
+            &self.load,
+            &self.est_load,
+            &self.cfg.subs,
+            comm,
+        )
+    }
+
+    /// Total known bytes of `spec`'s distinct inputs (the size term of the
+    /// µs/byte cost normalisation; 0 when nothing is known).
+    fn input_bytes_of(&self, spec: &JobSpec) -> u64 {
+        let mut seen = HashSet::new();
+        spec.inputs
+            .iter()
+            .filter(|r| seen.insert(r.job))
+            .filter_map(|r| self.result_bytes.get(&r.job))
+            .sum()
     }
 
     /// Drain the graph's ready set onto the cluster.
@@ -916,14 +952,23 @@ impl<'a> Master<'a> {
     /// Fold a completion's observed execution time into the cost model and
     /// record estimate-vs-actual accuracy (DESIGN.md §9).  `exec_us == 0`
     /// means "not measured" (e.g. a legacy kept-data ack) and is skipped.
+    /// Under comm-aware placement the sample is additionally normalised
+    /// per input byte (DESIGN.md §10), so kinds with variable input sizes
+    /// estimate as µs/byte.
     fn observe_cost(&mut self, job: JobId, exec_us: u64) {
         if !self.cfg.cost_model || exec_us == 0 {
             return;
         }
-        let Some(func) = self.specs.get(&job).map(|s| s.func.0) else { return };
+        let Some(spec) = self.specs.get(&job) else { return };
+        let func = spec.func.0;
         let est = self.costs.estimate_job_us(func);
         self.metrics.cost_observed(func, est, exec_us);
-        self.costs.record_job(func, exec_us);
+        if self.cfg.comm_aware {
+            let bytes = self.input_bytes_of(spec);
+            self.costs.record_job_sized(func, exec_us, bytes);
+        } else {
+            self.costs.record_job(func, exec_us);
+        }
     }
 
     /// Cancel a mispredicted (or stale) prefetch hint: tell the predicted
@@ -978,15 +1023,7 @@ impl<'a> Master<'a> {
         } else {
             Vec::new()
         };
-        let target = choose_scheduler_lookahead(
-            &spec,
-            &lookahead,
-            &self.owners,
-            &self.result_bytes,
-            &self.load,
-            &self.est_load,
-            &self.cfg.subs,
-        );
+        let target = self.place(&spec, &lookahead);
         // Resolve the outstanding prefetch hint: a correct prediction is
         // consumed by this very assignment; a wrong one gets cancel hints
         // so the mispredicted copies don't linger until shutdown.
@@ -997,12 +1034,16 @@ impl<'a> Master<'a> {
         }
         // Charge the target's estimated outstanding cost (0 while the
         // model is off or the kind is cold — placement then degrades to
-        // pure queue length).
+        // pure queue length).  Comm-aware placement sizes the estimate by
+        // the job's input bytes (µs/byte normalisation, DESIGN.md §10).
         let est = if self.cfg.cost_model {
-            self.costs
-                .estimate_job_us(spec.func.0)
-                .map(|us| us.round().max(1.0) as u64)
-                .unwrap_or(0)
+            let estimate = if self.cfg.comm_aware {
+                self.costs
+                    .estimate_job_us_sized(spec.func.0, self.input_bytes_of(&spec))
+            } else {
+                self.costs.estimate_job_us(spec.func.0)
+            };
+            estimate.map(|us| us.round().max(1.0) as u64).unwrap_or(0)
         } else {
             0
         };
@@ -1116,6 +1157,8 @@ mod tests {
             prefetch: true,
             cost_model: true,
             cost_ewma_alpha: 0.3,
+            comm_aware: true,
+            comm: world.calibration(),
         };
         let mut m = Master::new(&mut comm, cfg, &metrics);
         f(&mut m, &mut sub);

@@ -31,7 +31,7 @@ pub mod sub;
 
 use crate::comm::{Rank, Tag, WireSize};
 use crate::data::FunctionData;
-use crate::job::{ChunkRange, Injection, JobId, JobSpec};
+use crate::job::{ChunkRange, Injection, JobId, JobSpec, ThreadCount};
 
 /// The single user tag of the control plane (matching is by content, the
 /// event loops consume everything).
@@ -106,6 +106,10 @@ pub enum FwMsg {
     Prefetch {
         /// The predicted job (informational).
         job: JobId,
+        /// The predicted job's thread request — lets the hinted scheduler
+        /// predict the worker too and warm its cache (kept-result
+        /// prefetch, DESIGN.md §10).
+        threads: ThreadCount,
         /// Remote sources worth pulling early.
         sources: Vec<SourceLoc>,
     },
@@ -186,6 +190,19 @@ pub enum FwMsg {
     // ------------------------------------------------- sub → worker
     /// Run a fully resolved request on the receiving worker.
     Exec(ExecRequest),
+    /// Kept-result prefetch (DESIGN.md §10): warm the worker's retained
+    /// cache with a copy of a result a predicted assignment will consume,
+    /// so the eventual `Exec` references it as a kept input (zero shipped
+    /// bytes at dispatch).  Sent on the same FIFO channel as `Exec`, so
+    /// the copy is always cached before any request referencing it.  The
+    /// worker inserts silently; the copy is dropped by the ordinary
+    /// `DropKept` path when released or mispredicted.
+    CachePush {
+        /// The producing job whose result is being pushed.
+        job: JobId,
+        /// The full result.
+        data: FunctionData,
+    },
     /// Upload a retained result to the scheduler.
     PullKept {
         /// The retained result's producing job.
@@ -247,9 +264,9 @@ impl WireSize for FwMsg {
             FwMsg::JobDone { injections, .. } => {
                 CTRL + injections.iter().map(|i| i.jobs.len() * 32).sum::<usize>()
             }
-            FwMsg::ResultData { data, .. } | FwMsg::KeptData { data, .. } => {
-                CTRL + data.size_bytes()
-            }
+            FwMsg::ResultData { data, .. }
+            | FwMsg::KeptData { data, .. }
+            | FwMsg::CachePush { data, .. } => CTRL + data.size_bytes(),
             FwMsg::JobError { msg, .. } | FwMsg::ExecFailed { msg, .. } => CTRL + msg.len(),
             FwMsg::WorkerLostReport { lost, running, .. } => {
                 CTRL + (lost.len() + running.len()) * 8

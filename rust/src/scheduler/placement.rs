@@ -14,8 +14,8 @@
 use std::collections::HashMap;
 
 use super::SourceLoc;
-use crate::comm::Rank;
-use crate::job::{JobSpec, ThreadCount};
+use crate::comm::{Rank, TransferEstimate};
+use crate::job::{JobId, JobSpec, ThreadCount};
 
 /// Below this many bytes of owned input, data affinity is ignored in
 /// favour of load balancing (shipping a few KB is cheaper than idling a
@@ -125,6 +125,154 @@ pub fn choose_scheduler_lookahead(
         .expect("subs non-empty")
 }
 
+/// Master-side placement entry point: comm-aware when a transfer model is
+/// supplied (`comm_aware_placement = on`), the PR 4 byte-affinity policy
+/// otherwise.  Keeping the off-path a literal call to
+/// [`choose_scheduler_lookahead`] is what makes the knob's "off reproduces
+/// the previous placement bit-for-bit" guarantee structural rather than
+/// behavioural (pinned by `prop_comm_aware_off_is_pr4_placement`).
+#[allow(clippy::too_many_arguments)]
+pub fn choose_scheduler_policy(
+    spec: &JobSpec,
+    successors: &[JobSpec],
+    owners: &HashMap<JobId, SourceLoc>,
+    result_bytes: &HashMap<JobId, u64>,
+    load: &HashMap<Rank, usize>,
+    est_load: &HashMap<Rank, u64>,
+    subs: &[Rank],
+    comm: Option<&dyn TransferEstimate>,
+) -> Rank {
+    match comm {
+        Some(model) => choose_scheduler_comm_aware(
+            spec,
+            successors,
+            owners,
+            result_bytes,
+            load,
+            est_load,
+            subs,
+            model,
+        ),
+        None => choose_scheduler_lookahead(
+            spec,
+            successors,
+            owners,
+            result_bytes,
+            load,
+            est_load,
+            subs,
+        ),
+    }
+}
+
+/// Comm-aware master placement (DESIGN.md §10): minimise estimated
+/// **compute + transfer** time end-to-end.  Each candidate sub-scheduler
+/// is priced as
+///
+/// ```text
+/// score(s) = est_outstanding_us(s) + queued(s) · α̂
+///          + Σ_own    modelled_transfer_us(owner → s, bytes)
+///          + Σ_succ   modelled_transfer_us(owner → s, bytes) / 2
+/// ```
+///
+/// over the job's distinct inputs not already resident on `s` (and its
+/// known successors' other inputs at the look-ahead discount), and the
+/// cheapest candidate wins — exact ties break by queue length, then
+/// lowest rank.  `α̂` is the queue-depth floor: the dearest one-byte
+/// (≈ pure-latency) transfer price among the job's priced links.  With a
+/// cold or disabled execution-cost model `est_outstanding_us` is zero for
+/// everyone, and without the floor every consumer of a result would herd
+/// onto its owner no matter how deep that sub's queue grew; pricing each
+/// queued job at one message latency makes light inputs spill to idle
+/// peers once the queue outweighs the move (the comm-aware analogue of
+/// the old light-affinity load balancing) while a genuinely heavy
+/// operand still outweighs any realistic queue.
+///
+/// This subsumes PR 4's threshold logic: heavy co-located data wins
+/// because moving it is expensive, and light data yields to load
+/// balancing because its transfer prices near α — without the hard
+/// [`AFFINITY_MIN_BYTES`] cliff.  Kept inputs still pin the job to the
+/// retaining scheduler (step 1, unchanged: the data physically lives in a
+/// worker cache there).
+#[allow(clippy::too_many_arguments)]
+pub fn choose_scheduler_comm_aware(
+    spec: &JobSpec,
+    successors: &[JobSpec],
+    owners: &HashMap<JobId, SourceLoc>,
+    result_bytes: &HashMap<JobId, u64>,
+    load: &HashMap<Rank, usize>,
+    est_load: &HashMap<Rank, u64>,
+    subs: &[Rank],
+    comm: &dyn TransferEstimate,
+) -> Rank {
+    debug_assert!(!subs.is_empty());
+
+    // 1. Hard affinity: kept inputs pin the job to the retaining scheduler.
+    for r in &spec.inputs {
+        if let Some(loc) = owners.get(&r.job) {
+            if loc.kept_on.is_some() {
+                return loc.owner;
+            }
+        }
+    }
+
+    // Distinct priced sources: the consuming sub fetches a referenced
+    // result once however many ChunkRefs point at it.
+    let mut own: HashMap<JobId, (Rank, u64)> = HashMap::new();
+    for r in &spec.inputs {
+        if let Some(loc) = owners.get(&r.job) {
+            let sz = result_bytes.get(&r.job).copied().unwrap_or(1).max(1);
+            own.entry(r.job).or_insert((loc.owner, sz));
+        }
+    }
+    let mut succ: HashMap<JobId, (Rank, u64)> = HashMap::new();
+    for s in successors {
+        for r in &s.inputs {
+            if r.job == spec.id || own.contains_key(&r.job) {
+                continue; // our own output / already priced at full weight
+            }
+            if let Some(loc) = owners.get(&r.job) {
+                let sz = result_bytes.get(&r.job).copied().unwrap_or(1).max(1);
+                succ.entry(r.job).or_insert((loc.owner, sz));
+            }
+        }
+    }
+
+    // Queue-depth floor α̂: the dearest one-byte transfer among the
+    // priced links — zero when the job has no priced inputs (score then
+    // degrades to est_load with the queue/rank tie-breaks, as before).
+    let mut alpha_hat = 0.0f64;
+    for &s in subs {
+        for &(owner, _) in own.values().chain(succ.values()) {
+            alpha_hat = alpha_hat.max(comm.modelled_transfer_us(owner, s, 1));
+        }
+    }
+
+    // 2. One unified score per candidate; deterministic tie-breaks.
+    let mut best: Option<(f64, usize, Rank)> = None;
+    for &s in subs {
+        let queued = load.get(&s).copied().unwrap_or(0);
+        let mut score =
+            est_load.get(&s).copied().unwrap_or(0) as f64 + queued as f64 * alpha_hat;
+        for &(owner, sz) in own.values() {
+            score += comm.modelled_transfer_us(owner, s, sz);
+        }
+        for &(owner, sz) in succ.values() {
+            score += comm.modelled_transfer_us(owner, s, sz) / LOOKAHEAD_DISCOUNT as f64;
+        }
+        let better = match best {
+            None => true,
+            Some((bs, bq, br)) => {
+                score < bs || (score == bs && (queued, s.0) < (bq, br.0))
+            }
+        };
+        if better {
+            best = Some((score, queued, s));
+        }
+    }
+    best.expect("subs non-empty").2
+}
+
 /// One worker's packing state as seen by its sub-scheduler.
 #[derive(Debug, Clone)]
 pub struct WorkerSlot {
@@ -179,6 +327,23 @@ pub fn choose_worker(
     kept_on: Option<Rank>,
     workers: &[WorkerSlot],
 ) -> WorkerChoice {
+    choose_worker_preferring(spec, kept_on, &[], workers)
+}
+
+/// [`choose_worker`] with a soft data-locality preference (kept-result
+/// prefetch, DESIGN.md §10): among *fitting* workers, one holding a
+/// pushed copy of the job's inputs in its cache beats a tighter best-fit
+/// surplus — avoiding the input ship at dispatch is worth more than
+/// packing tightness.  An empty `preferred` slice reproduces
+/// [`choose_worker`] exactly, and the preference never overrides the hard
+/// kept-affinity pin or the fits test (a busy preferred worker is simply
+/// not chosen — the job runs elsewhere off the scheduler-store copy).
+pub fn choose_worker_preferring(
+    spec: &JobSpec,
+    kept_on: Option<Rank>,
+    preferred: &[Rank],
+    workers: &[WorkerSlot],
+) -> WorkerChoice {
     if let Some(pin) = kept_on {
         return match workers.iter().find(|w| w.rank == pin) {
             Some(w) if w.fits(spec.threads) => WorkerChoice::Run(pin),
@@ -187,19 +352,34 @@ pub fn choose_worker(
             None => WorkerChoice::Lost(pin),
         };
     }
-    let fit = workers
-        .iter()
-        .filter(|w| w.fits(spec.threads))
-        .min_by_key(|w| {
-            (
-                w.free_cores - spec.threads.packing_width(w.cores), // best fit
-                w.rank.0,                                           // determinism
-            )
-        });
-    match fit {
-        Some(w) => WorkerChoice::Run(w.rank),
+    match best_fit(spec.threads, preferred, workers) {
+        Some(rank) => WorkerChoice::Run(rank),
         None => WorkerChoice::Spawn,
     }
+}
+
+/// The §3.3 best-fit packing rule as a bare selector: among the workers
+/// that fit `threads`, pick (preferred first, tightest surplus, lowest
+/// rank); `None` when nothing fits.  One definition shared by dispatch
+/// ([`choose_worker_preferring`]) and the kept-prefetch worker predictor
+/// (DESIGN.md §10), so the prediction cannot drift from the dispatch
+/// policy.
+pub fn best_fit(
+    threads: ThreadCount,
+    preferred: &[Rank],
+    workers: &[WorkerSlot],
+) -> Option<Rank> {
+    workers
+        .iter()
+        .filter(|w| w.fits(threads))
+        .min_by_key(|w| {
+            (
+                !preferred.contains(&w.rank),              // warm cache first
+                w.free_cores - threads.packing_width(w.cores), // best fit
+                w.rank.0,                                  // determinism
+            )
+        })
+        .map(|w| w.rank)
 }
 
 /// Outcome of [`choose_worker`].
@@ -399,6 +579,312 @@ mod tests {
                 &subs()
             ),
             Rank(1)
+        );
+    }
+
+    /// Fixed uniform α/β estimator for placement tests.
+    struct FlatLink {
+        alpha_us: f64,
+        us_per_byte: f64,
+    }
+
+    impl TransferEstimate for FlatLink {
+        fn modelled_transfer_us(&self, from: Rank, to: Rank, bytes: u64) -> f64 {
+            if from == to || bytes == 0 {
+                0.0
+            } else {
+                self.alpha_us + self.us_per_byte * bytes as f64
+            }
+        }
+    }
+
+    #[test]
+    fn comm_aware_prices_sub_threshold_data_instead_of_ignoring_it() {
+        // 2000 bytes on Rank(2): below AFFINITY_MIN_BYTES, so the PR 4
+        // policy ignores it and load-balances to Rank(1) — the comm-aware
+        // score keeps the job with its data because moving 2000 bytes
+        // costs 2 ms on this link and nothing is queued anywhere.
+        let spec = JobSpec::new(10, 1, 1).with_inputs(vec![ChunkRef::all(JobId(1))]);
+        let mut owners = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(2), kept_on: None },
+        );
+        let mut bytes = HashMap::new();
+        bytes.insert(JobId(1), 2000);
+        let load = HashMap::new();
+        let link = FlatLink { alpha_us: 20.0, us_per_byte: 1.0 };
+        assert_eq!(
+            choose_scheduler_lookahead(
+                &spec,
+                &[],
+                &owners,
+                &bytes,
+                &load,
+                &HashMap::new(),
+                &subs()
+            ),
+            Rank(1),
+            "PR 4 treats sub-threshold bytes as no affinity"
+        );
+        assert_eq!(
+            choose_scheduler_comm_aware(
+                &spec,
+                &[],
+                &owners,
+                &bytes,
+                &load,
+                &HashMap::new(),
+                &subs(),
+                &link
+            ),
+            Rank(2),
+            "comm-aware placement prices the transfer and stays resident"
+        );
+    }
+
+    #[test]
+    fn comm_aware_trades_transfer_against_estimated_backlog() {
+        // The data owner Rank(2) has 10 ms of estimated outstanding work;
+        // shipping the 2000-byte input costs ~2 ms — moving wins.  Shrink
+        // the backlog below the transfer price and staying wins again.
+        let spec = JobSpec::new(10, 1, 1).with_inputs(vec![ChunkRef::all(JobId(1))]);
+        let mut owners = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(2), kept_on: None },
+        );
+        let mut bytes = HashMap::new();
+        bytes.insert(JobId(1), 2000);
+        let load = HashMap::new();
+        let link = FlatLink { alpha_us: 20.0, us_per_byte: 1.0 };
+        let mut est = HashMap::new();
+        est.insert(Rank(2), 10_000u64);
+        assert_eq!(
+            choose_scheduler_comm_aware(
+                &spec, &[], &owners, &bytes, &load, &est, &subs(), &link
+            ),
+            Rank(1),
+            "2 ms transfer beats 10 ms backlog"
+        );
+        est.insert(Rank(2), 500u64);
+        assert_eq!(
+            choose_scheduler_comm_aware(
+                &spec, &[], &owners, &bytes, &load, &est, &subs(), &link
+            ),
+            Rank(2),
+            "0.5 ms backlog beats 2 ms transfer"
+        );
+    }
+
+    #[test]
+    fn comm_aware_cold_model_spills_off_a_deep_queue() {
+        // With the execution-cost model cold or off (est_load empty), the
+        // queue-depth floor must keep the policy from herding every
+        // consumer onto the data owner: once the owner's queue outweighs
+        // the move price (queued · α̂ > transfer), the job spills to the
+        // idle peer.  Here the 2000-byte move costs 2020 µs and α̂ is
+        // 21 µs, so ~100 queued jobs tip the balance.
+        let spec = JobSpec::new(10, 1, 1).with_inputs(vec![ChunkRef::all(JobId(1))]);
+        let mut owners = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(2), kept_on: None },
+        );
+        let mut bytes = HashMap::new();
+        bytes.insert(JobId(1), 2000);
+        let link = FlatLink { alpha_us: 20.0, us_per_byte: 1.0 };
+        let mut load = HashMap::new();
+        load.insert(Rank(2), 10);
+        assert_eq!(
+            choose_scheduler_comm_aware(
+                &spec,
+                &[],
+                &owners,
+                &bytes,
+                &load,
+                &HashMap::new(),
+                &subs(),
+                &link
+            ),
+            Rank(2),
+            "shallow queue: staying with the data still wins"
+        );
+        load.insert(Rank(2), 200);
+        assert_eq!(
+            choose_scheduler_comm_aware(
+                &spec,
+                &[],
+                &owners,
+                &bytes,
+                &load,
+                &HashMap::new(),
+                &subs(),
+                &link
+            ),
+            Rank(1),
+            "deep queue: the floor spills the job to the idle peer"
+        );
+    }
+
+    #[test]
+    fn comm_aware_keeps_kept_pin_and_dedupes_refs() {
+        // Kept inputs pin regardless of any pricing...
+        let spec = JobSpec::new(10, 1, 1).with_inputs(vec![ChunkRef::all(JobId(1))]);
+        let mut owners = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(2), kept_on: Some(Rank(9)) },
+        );
+        let link = FlatLink { alpha_us: 1.0, us_per_byte: 1.0 };
+        let mut est = HashMap::new();
+        est.insert(Rank(2), u64::MAX / 2);
+        assert_eq!(
+            choose_scheduler_comm_aware(
+                &spec,
+                &[],
+                &owners,
+                &HashMap::new(),
+                &HashMap::new(),
+                &est,
+                &subs(),
+                &link
+            ),
+            Rank(2)
+        );
+        // ...and two ChunkRefs to one producer price one fetch, not two:
+        // J10 slices J1 (3000 B, on Rank 2) twice; J2 owns 5000 B on
+        // Rank(1).  Deduped: moving to Rank(1) ships 3000, to Rank(2)
+        // ships 5000 → Rank(1).  (Double-counted, Rank(2) would win.)
+        let spec = JobSpec::new(10, 1, 1).with_inputs(vec![
+            ChunkRef::slice(JobId(1), 0, 1),
+            ChunkRef::slice(JobId(1), 1, 2),
+            ChunkRef::all(JobId(2)),
+        ]);
+        let mut owners = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(2), kept_on: None },
+        );
+        owners.insert(
+            JobId(2),
+            SourceLoc { job: JobId(2), owner: Rank(1), kept_on: None },
+        );
+        let mut bytes = HashMap::new();
+        bytes.insert(JobId(1), 3000);
+        bytes.insert(JobId(2), 5000);
+        assert_eq!(
+            choose_scheduler_comm_aware(
+                &spec,
+                &[],
+                &owners,
+                &bytes,
+                &HashMap::new(),
+                &HashMap::new(),
+                &subs(),
+                &link
+            ),
+            Rank(1)
+        );
+    }
+
+    #[test]
+    fn comm_aware_free_link_degrades_to_load_then_rank() {
+        // With transfers priced at zero the score is pure est_load, and
+        // full ties fall back to queue length then lowest rank — the same
+        // final ordering as the PR 4 tie-break.
+        let spec = JobSpec::new(10, 1, 1).with_inputs(vec![ChunkRef::all(JobId(1))]);
+        let mut owners = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(2), kept_on: None },
+        );
+        let mut bytes = HashMap::new();
+        bytes.insert(JobId(1), 1 << 20);
+        let free = FlatLink { alpha_us: 0.0, us_per_byte: 0.0 };
+        let mut load = HashMap::new();
+        load.insert(Rank(1), 3);
+        load.insert(Rank(2), 1);
+        assert_eq!(
+            choose_scheduler_comm_aware(
+                &spec,
+                &[],
+                &owners,
+                &bytes,
+                &load,
+                &HashMap::new(),
+                &subs(),
+                &free
+            ),
+            Rank(2),
+            "free transfers: least queue wins even against heavy affinity"
+        );
+    }
+
+    #[test]
+    fn policy_dispatches_on_the_knob() {
+        let spec = JobSpec::new(10, 1, 1).with_inputs(vec![ChunkRef::all(JobId(1))]);
+        let mut owners = HashMap::new();
+        owners.insert(
+            JobId(1),
+            SourceLoc { job: JobId(1), owner: Rank(2), kept_on: None },
+        );
+        let mut bytes = HashMap::new();
+        bytes.insert(JobId(1), 2000);
+        let link = FlatLink { alpha_us: 20.0, us_per_byte: 1.0 };
+        let off = choose_scheduler_policy(
+            &spec,
+            &[],
+            &owners,
+            &bytes,
+            &HashMap::new(),
+            &HashMap::new(),
+            &subs(),
+            None,
+        );
+        assert_eq!(off, Rank(1), "off = PR 4 light-affinity load balancing");
+        let on = choose_scheduler_policy(
+            &spec,
+            &[],
+            &owners,
+            &bytes,
+            &HashMap::new(),
+            &HashMap::new(),
+            &subs(),
+            Some(&link),
+        );
+        assert_eq!(on, Rank(2));
+    }
+
+    #[test]
+    fn preferred_worker_beats_best_fit_but_not_fits() {
+        let mut a = WorkerSlot::new(Rank(1), 4);
+        a.occupy(ThreadCount::Exact(1)); // 3 free: sloppier fit
+        let mut b = WorkerSlot::new(Rank(2), 4);
+        b.occupy(ThreadCount::Exact(2)); // 2 free: best fit
+        let j = JobSpec::new(9, 1, 2);
+        // No preference: best-fit picks b (same as choose_worker).
+        assert_eq!(
+            choose_worker_preferring(&j, None, &[], &[a.clone(), b.clone()]),
+            WorkerChoice::Run(Rank(2))
+        );
+        // A pushed copy on a flips the choice.
+        assert_eq!(
+            choose_worker_preferring(&j, None, &[Rank(1)], &[a.clone(), b.clone()]),
+            WorkerChoice::Run(Rank(1))
+        );
+        // A full preferred worker is not waited for — the job runs on the
+        // fitting one instead.
+        let mut full = WorkerSlot::new(Rank(3), 4);
+        full.occupy(ThreadCount::Auto);
+        assert_eq!(
+            choose_worker_preferring(&j, None, &[Rank(3)], &[full, b]),
+            WorkerChoice::Run(Rank(2))
+        );
+        // The hard kept pin still wins over any preference.
+        assert_eq!(
+            choose_worker_preferring(&j, Some(Rank(1)), &[Rank(2)], &[a]),
+            WorkerChoice::Run(Rank(1))
         );
     }
 

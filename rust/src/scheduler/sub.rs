@@ -19,11 +19,11 @@ use std::time::Duration;
 
 use crate::comm::{Comm, Match, Rank, World};
 use crate::data::FunctionData;
-use crate::job::{ChunkRange, JobId, JobSpec};
+use crate::job::{ChunkRange, JobId, JobSpec, ThreadCount};
 use crate::metrics::MetricsCollector;
 use crate::worker::{run_worker, WorkerConfig};
 
-use super::placement::{choose_worker, WorkerChoice, WorkerSlot};
+use super::placement::{best_fit, choose_worker_preferring, WorkerChoice, WorkerSlot};
 use super::store::ResultStore;
 use super::{ExecRequest, FwMsg, InputPart, SourceLoc, TAG_CTRL};
 
@@ -38,6 +38,12 @@ pub struct SubConfig {
     pub cores_per_worker: usize,
     /// Spawn the full worker complement at startup.
     pub prespawn: bool,
+    /// Kept-result prefetch (DESIGN.md §10): push prefetched results into
+    /// the predicted worker's retained cache (`CachePush`) so the eventual
+    /// dispatch ships zero bytes for them.  Wired from
+    /// `comm_aware_placement && speculative_prefetch`; off = PR 4
+    /// store-only prefetch.
+    pub kept_prefetch: bool,
     /// Configuration handed to every spawned worker.
     pub worker: WorkerConfig,
     /// Liveness tick (worker-loss detection granularity).
@@ -98,6 +104,15 @@ pub struct SubScheduler {
     /// mispredicted prefetch would leak its copy until shutdown after all
     /// (the DESIGN.md §7 cancel-hint path).
     cancelled_fetches: HashSet<JobId>,
+    /// Kept-result prefetch (DESIGN.md §10): source job → (worker whose
+    /// cache holds a pushed copy, whether any dispatch consumed it).  A
+    /// copy dropped with the flag still `false` counts as a
+    /// `kept_prefetch_cancels`.
+    cache_pushed: HashMap<JobId, (Rank, bool)>,
+    /// Prefetch fetches whose `ResultData` should be pushed on arrival:
+    /// source job → the hinted job's thread request (the worker
+    /// predictor's input).
+    pending_cache_push: HashMap<JobId, ThreadCount>,
     /// Peer `FetchResult`s waiting on a `PullKept` round-trip:
     /// source job → (range, reply_to).
     pending_serves: HashMap<JobId, Vec<(ChunkRange, Rank)>>,
@@ -126,6 +141,8 @@ impl SubScheduler {
             fetch_inflight: HashSet::new(),
             prefetched: HashSet::new(),
             cancelled_fetches: HashSet::new(),
+            cache_pushed: HashMap::new(),
+            pending_cache_push: HashMap::new(),
             pending_serves: HashMap::new(),
         }
     }
@@ -159,7 +176,7 @@ impl SubScheduler {
     fn handle(&mut self, from: Rank, msg: FwMsg) -> bool {
         match msg {
             FwMsg::Assign { spec, sources } => self.on_assign(spec, sources),
-            FwMsg::Prefetch { sources, .. } => self.on_prefetch(sources),
+            FwMsg::Prefetch { threads, sources, .. } => self.on_prefetch(threads, sources),
             FwMsg::ResultData { job, data } => {
                 self.store.insert_transient(job, data);
                 self.fetch_inflight.remove(&job);
@@ -168,7 +185,12 @@ impl SubScheduler {
                     // Released while the fetch was in flight (cancelled
                     // prefetch hint): any waiters were just served from
                     // the copy; do not retain it.
+                    self.pending_cache_push.remove(&job);
                     self.store.drop_transient(job);
+                } else if let Some(threads) = self.pending_cache_push.remove(&job) {
+                    // A kept-prefetch fetch landed: warm the predicted
+                    // worker's cache while the hinted job still waits.
+                    self.push_to_worker(job, threads);
                 }
             }
             FwMsg::ResultUnavailable { job } => self.on_source_lost(job),
@@ -215,6 +237,17 @@ impl SubScheduler {
                         // Locality win: consume straight from the worker cache.
                         pin = Some(w);
                         PartState::Ready(InputPart::Kept { job: src, range })
+                    } else if self.store.contains(src) {
+                        // Kept on a different worker than the pin, but a
+                        // copy was already pulled up (an earlier pull or a
+                        // prefetch warm-up): no round-trip needed.
+                        match self.store.read(src, range) {
+                            Ok(data) => PartState::Ready(InputPart::Data(data)),
+                            Err(e) => {
+                                self.fail_job(job, &e);
+                                return;
+                            }
+                        }
                     } else {
                         // Kept on a *different* local worker than the pin:
                         // pull it up to the scheduler.
@@ -300,12 +333,25 @@ impl SubScheduler {
     /// the `Assign` finds it warm (DESIGN.md §7).  Replies flow through
     /// the ordinary `ResultData` path; a source that vanished meanwhile
     /// answers `ResultUnavailable`, which is harmless with no waiter.
-    fn on_prefetch(&mut self, sources: Vec<SourceLoc>) {
+    ///
+    /// With `kept_prefetch` on (DESIGN.md §10) the warm-up goes one layer
+    /// deeper: sources already present (and fetched ones, on arrival) are
+    /// additionally pushed into the *predicted worker's* retained cache,
+    /// so the eventual dispatch references them as kept inputs and ships
+    /// zero bytes.
+    fn on_prefetch(&mut self, threads: ThreadCount, sources: Vec<SourceLoc>) {
         let me = self.comm.rank();
         for loc in sources {
             let src = loc.job;
-            if loc.owner == me || self.store.contains(src) {
+            if loc.owner == me {
                 continue;
+            }
+            if self.store.contains(src) {
+                self.push_to_worker(src, threads);
+                continue;
+            }
+            if self.cfg.kept_prefetch {
+                self.pending_cache_push.insert(src, threads);
             }
             if self.fetch_inflight.insert(src) {
                 self.prefetched.insert(src);
@@ -315,6 +361,31 @@ impl SubScheduler {
                     FwMsg::FetchResult { job: src, range: ChunkRange::All, reply_to: me },
                 );
             }
+        }
+    }
+
+    /// Kept-result prefetch push (DESIGN.md §10): predict the worker a job
+    /// with this thread request would be packed onto right now (best fit,
+    /// same policy as dispatch) and warm its retained cache with `src`'s
+    /// full result.  Skipped when the feature is off, the copy is already
+    /// pushed, or no spawned worker fits — a hint must never spawn
+    /// workers or block.
+    fn push_to_worker(&mut self, src: JobId, threads: ThreadCount) {
+        if !self.cfg.kept_prefetch || self.cache_pushed.contains_key(&src) {
+            return;
+        }
+        let slots: Vec<WorkerSlot> = self.workers.values().map(|w| w.slot.clone()).collect();
+        let Some(worker) = best_fit(threads, &[], &slots) else { return };
+        let Ok(data) = self.store.read(src, ChunkRange::All) else { return };
+        if self
+            .comm
+            .send(worker, TAG_CTRL, FwMsg::CachePush { job: src, data })
+            .is_ok()
+        {
+            self.cache_pushed.insert(src, (worker, false));
+            self.metrics.kept_prefetch_pushed();
+        } else {
+            self.check_worker_liveness();
         }
     }
 
@@ -376,6 +447,8 @@ impl SubScheduler {
         self.fetch_inflight.remove(&src);
         self.prefetched.remove(&src);
         self.cancelled_fetches.remove(&src);
+        self.pending_cache_push.remove(&src);
+        self.drop_pushed_copy(src);
         let Some(waiters) = self.waiting_on.remove(&src) else { return };
         for dep in waiters {
             if self.pending.remove(&dep).is_some() {
@@ -472,6 +545,11 @@ impl SubScheduler {
         self.store.release(job);
         self.store.drop_transient(job);
         self.prefetched.remove(&job);
+        self.pending_cache_push.remove(&job);
+        // A pushed worker-cache copy must not outlive the release either —
+        // the master's cancel-hint `ReleaseResult` lands here too, so a
+        // mispredicted kept prefetch is reclaimed mid-run (DESIGN.md §10).
+        self.drop_pushed_copy(job);
         if self.fetch_inflight.contains(&job) {
             // The copy is still on the wire; drop it on arrival instead of
             // caching it (mispredicted-prefetch cancel, DESIGN.md §7).
@@ -482,6 +560,17 @@ impl SubScheduler {
                 entry.kept.remove(&job);
             }
             let _ = self.comm.send(w, TAG_CTRL, FwMsg::DropKept { job });
+        }
+    }
+
+    /// Drop `src`'s pushed worker-cache copy, if any: `DropKept` to the
+    /// holding worker, and a `kept_prefetch_cancels` tick when no dispatch
+    /// ever consumed it (the push was wasted).
+    fn drop_pushed_copy(&mut self, src: JobId) {
+        let Some((worker, hit)) = self.cache_pushed.remove(&src) else { return };
+        let _ = self.comm.send(worker, TAG_CTRL, FwMsg::DropKept { job: src });
+        if !hit {
+            self.metrics.kept_prefetch_cancelled();
         }
     }
 
@@ -544,7 +633,23 @@ impl SubScheduler {
             self.workers.values().map(|w| w.slot.clone()).collect();
         while let Some(job) = self.ready.pop_front() {
             let Some(pj) = self.pending.get(&job) else { continue };
-            match choose_worker(&pj.spec, pj.pin, &slots) {
+            // Soft preference for workers whose caches hold pushed copies
+            // of this job's inputs (kept-result prefetch, DESIGN.md §10);
+            // empty (and thus a no-op) while the feature is off.
+            let preferred: Vec<Rank> = if self.cache_pushed.is_empty() {
+                Vec::new()
+            } else {
+                let mut v: Vec<Rank> = pj
+                    .spec
+                    .inputs
+                    .iter()
+                    .filter_map(|r| self.cache_pushed.get(&r.job).map(|&(w, _)| w))
+                    .collect();
+                v.sort_unstable_by_key(|r| r.0);
+                v.dedup();
+                v
+            };
+            match choose_worker_preferring(&pj.spec, pj.pin, &preferred, &slots) {
                 WorkerChoice::Run(w) => {
                     let threads = pj.spec.threads;
                     if self.dispatch_to(job, w) {
@@ -594,12 +699,29 @@ impl SubScheduler {
     /// Send `job` to `worker`.  Returns `false` when the job could not be
     /// dispatched (worker died in the window — the job is requeued and the
     /// dead rank pruned, so the caller must refresh any slot snapshot).
+    ///
+    /// Inputs whose source has a pushed copy in exactly this worker's
+    /// cache are dispatched as *kept* references instead of shipped data
+    /// (kept-result prefetch, DESIGN.md §10) — the `CachePush` moved the
+    /// bytes off the critical path, the `Exec` ships none.
     fn dispatch_to(&mut self, job: JobId, worker: Rank) -> bool {
         let Some(pj) = self.pending.remove(&job) else { return false };
+        debug_assert_eq!(pj.parts.len(), pj.spec.inputs.len());
+        let mut warm: Vec<JobId> = Vec::new();
         let input: Vec<InputPart> = pj
             .parts
             .iter()
-            .map(|p| match p {
+            .zip(&pj.spec.inputs)
+            .map(|(p, r)| match p {
+                PartState::Ready(InputPart::Data(d)) => {
+                    match self.cache_pushed.get(&r.job) {
+                        Some(&(w, _)) if w == worker => {
+                            warm.push(r.job);
+                            InputPart::Kept { job: r.job, range: r.range }
+                        }
+                        _ => InputPart::Data(d.clone()),
+                    }
+                }
                 PartState::Ready(part) => part.clone(),
                 PartState::Await { .. } => {
                     unreachable!("dispatching job with unresolved inputs")
@@ -615,6 +737,14 @@ impl SubScheduler {
             self.ready.push_back(job);
             self.check_worker_liveness();
             return false;
+        }
+        warm.sort_unstable_by_key(|j| j.0);
+        warm.dedup();
+        for src in warm {
+            if let Some(entry) = self.cache_pushed.get_mut(&src) {
+                entry.1 = true;
+            }
+            self.metrics.kept_prefetch_hit();
         }
         if let Some(entry) = self.workers.get_mut(&worker) {
             entry.slot.occupy(spec.threads);
@@ -676,6 +806,21 @@ impl SubScheduler {
                 }
                 self.fetch_inflight.remove(j);
                 self.cancelled_fetches.remove(j);
+            }
+            // Pushed kept-prefetch copies died with the worker's cache;
+            // an unconsumed one was a wasted push.
+            let dead_pushes: Vec<JobId> = self
+                .cache_pushed
+                .iter()
+                .filter(|(_, &(w, _))| w == rank)
+                .map(|(&j, _)| j)
+                .collect();
+            for j in dead_pushes {
+                if let Some((_, hit)) = self.cache_pushed.remove(&j) {
+                    if !hit {
+                        self.metrics.kept_prefetch_cancelled();
+                    }
+                }
             }
             // Local jobs pinned to (or awaiting pulls from) the dead worker.
             let lost_set: HashSet<JobId> = lost.iter().copied().collect();

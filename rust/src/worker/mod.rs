@@ -267,6 +267,14 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                     FwMsg::ExecDone { job, data: None, injections: vec![], exec_us },
                 );
             }
+            // Kept-result prefetch (DESIGN.md §10): the scheduler warms
+            // this worker's cache ahead of a predicted dispatch.  Insert
+            // silently — no ack, the FIFO channel already guarantees the
+            // copy precedes any `Exec` referencing it; the scheduler's
+            // `DropKept` reclaims it like any retained result.
+            FwMsg::CachePush { job, data } => {
+                kept.insert(job, data);
+            }
             FwMsg::PullKept { job } => {
                 let reply = match kept.get(job) {
                     Ok(data) => FwMsg::KeptData { job, data: data.clone(), exec_us: 0 },

@@ -631,6 +631,83 @@ fn speculative_prefetch_warms_remote_inputs() {
 }
 
 #[test]
+fn kept_prefetch_warms_worker_cache_and_off_is_inert() {
+    // Same shape as `speculative_prefetch_warms_remote_inputs`, with
+    // comm-aware placement on: besides landing in the predicted target's
+    // *store*, the prefetched remote input is pushed into the predicted
+    // *worker's* retained cache (`CachePush`), so the eventual dispatch
+    // references it as a kept input and ships zero bytes for it
+    // (DESIGN.md §10).  With `comm_aware_placement` off the kept-prefetch
+    // layer is fully inert and values are identical.
+    let run = |comm_aware: bool| {
+        let mut reg = FunctionRegistry::new();
+        reg.register_plain(1, "big_a", |_in, out| {
+            out.push(DataChunk::from_f32(vec![1.0; 2048])); // 8 KiB
+            Ok(())
+        });
+        reg.register_plain(2, "big_b", |_in, out| {
+            out.push(DataChunk::from_f32(vec![2.0; 1536])); // 6 KiB
+            Ok(())
+        });
+        reg.register_plain(3, "straggler", |_in, out| {
+            std::thread::sleep(std::time::Duration::from_millis(120));
+            out.push(DataChunk::scalar_f32(3.0));
+            Ok(())
+        });
+        reg.register_plain(4, "join", |input, out| {
+            let mut acc = 0.0f32;
+            for c in input.chunks() {
+                acc += c.as_f32()?.iter().sum::<f32>();
+            }
+            out.push(DataChunk::scalar_f32(acc));
+            Ok(())
+        });
+        Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .cores_per_worker(4)
+            .prespawn_workers(true) // hints must find a worker to warm
+            .execution_mode(ExecutionMode::Dataflow)
+            .speculative_prefetch(true)
+            .comm_aware_placement(comm_aware)
+            .registry(reg)
+            .build()
+            .unwrap()
+            .run(
+                Algorithm::parse("J1(1,1,0), J2(2,1,0), J3(3,1,0); J4(4,1,R1 R2 R3);")
+                    .unwrap(),
+            )
+            .unwrap()
+    };
+    let on = run(true);
+    let off = run(false);
+    let want = 2048.0 + 2.0 * 1536.0 + 3.0;
+    for (report, label) in [(&on, "on"), (&off, "off")] {
+        assert_eq!(
+            report.result(4).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+            want,
+            "comm_aware {label}: values must not depend on the knob"
+        );
+    }
+    assert!(
+        on.metrics.kept_prefetch_pushes >= 1,
+        "no CachePush sent (prefetches_sent {})",
+        on.metrics.prefetches_sent
+    );
+    assert!(
+        on.metrics.kept_prefetch_hits >= 1,
+        "pushed copy not consumed as a kept input (pushes {})",
+        on.metrics.kept_prefetch_pushes
+    );
+    // Calibration observed the run's traffic (on by default).
+    assert!(on.metrics.comm_model.samples > 0, "comm model never calibrated");
+    // Off = PR 4: the kept-prefetch layer never engages.
+    assert_eq!(off.metrics.kept_prefetch_pushes, 0, "off must not push");
+    assert_eq!(off.metrics.kept_prefetch_hits, 0);
+    assert_eq!(off.metrics.kept_prefetch_cancels, 0);
+}
+
+#[test]
 fn critical_path_metrics_cover_the_chain() {
     // A 3-job chain with measurable work: the critical path must span all
     // three jobs, its ideal equal the summed exec time, and its elapsed at

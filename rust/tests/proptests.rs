@@ -551,3 +551,93 @@ fn prop_json_roundtrip_random_documents() {
         }
     }
 }
+
+/// `comm_aware_placement = off` must reproduce the PR 4 placement decision
+/// **bit-for-bit** for any owner / byte / load / estimate configuration:
+/// the policy entry point with no transfer model is pinned to
+/// `choose_scheduler_lookahead`, the untouched pre-§10 function.
+#[test]
+fn prop_comm_aware_off_is_pr4_placement() {
+    use std::collections::HashMap;
+
+    use hypar::scheduler::placement::{
+        choose_scheduler_lookahead, choose_scheduler_policy,
+    };
+    use hypar::scheduler::SourceLoc;
+
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let n_subs = rng.int_in(1, 5);
+        let subs: Vec<Rank> = (0..n_subs).map(|i| Rank(1 + i as u32)).collect();
+
+        // A pool of producer results with random owners, sizes (spanning
+        // the AFFINITY_MIN_BYTES threshold both ways) and kept flags.
+        let n_results = rng.int_in(1, 8);
+        let mut owners: HashMap<JobId, SourceLoc> = HashMap::new();
+        let mut result_bytes: HashMap<JobId, u64> = HashMap::new();
+        for i in 0..n_results {
+            let id = JobId(1 + i as u32);
+            let owner = subs[rng.below(subs.len())];
+            let kept_on = if rng.below(4) == 0 {
+                Some(Rank(100 + rng.below(4) as u32))
+            } else {
+                None
+            };
+            owners.insert(id, SourceLoc { job: id, owner, kept_on });
+            if rng.bool() {
+                result_bytes.insert(id, rng.int_in(0, 20_000) as u64);
+            }
+        }
+
+        // The job: random subset of the results as inputs (with repeats).
+        let job_id = 50u32;
+        let n_inputs = rng.below(5);
+        let inputs: Vec<ChunkRef> = (0..n_inputs)
+            .map(|_| ChunkRef::all(JobId(1 + rng.below(n_results) as u32)))
+            .collect();
+        let spec = JobSpec::new(job_id, 1, rng.int_in(0, 3) as u32).with_inputs(inputs);
+
+        // A successor referencing the job's own output plus random results.
+        let succ_inputs: Vec<ChunkRef> = std::iter::once(ChunkRef::all(JobId(job_id)))
+            .chain(
+                (0..rng.below(3))
+                    .map(|_| ChunkRef::all(JobId(1 + rng.below(n_results) as u32))),
+            )
+            .collect();
+        let succ = JobSpec::new(51, 1, 1).with_inputs(succ_inputs);
+        let successors = if rng.bool() { vec![succ] } else { Vec::new() };
+
+        // Random queue lengths and outstanding-cost estimates.
+        let mut load: HashMap<Rank, usize> = HashMap::new();
+        let mut est: HashMap<Rank, u64> = HashMap::new();
+        for &s in &subs {
+            if rng.bool() {
+                load.insert(s, rng.below(6));
+            }
+            if rng.bool() {
+                est.insert(s, rng.int_in(0, 100_000) as u64);
+            }
+        }
+
+        let pr4 = choose_scheduler_lookahead(
+            &spec,
+            &successors,
+            &owners,
+            &result_bytes,
+            &load,
+            &est,
+            &subs,
+        );
+        let off = choose_scheduler_policy(
+            &spec,
+            &successors,
+            &owners,
+            &result_bytes,
+            &load,
+            &est,
+            &subs,
+            None,
+        );
+        assert_eq!(off, pr4, "seed {seed}: off-knob placement diverged from PR 4");
+    }
+}

@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Markdown cross-reference checker (CI "docs" job).
+
+Guards the two rot classes the rustdoc gate cannot see:
+
+1. Relative markdown links ``[text](path)`` in the repo's ``*.md`` files
+   must point at files or directories that exist (http(s) and #-anchor
+   links are skipped).
+2. ``DESIGN.md §N`` section references — the cross-link convention used by
+   README.md, ROADMAP.md, CHANGES.md and the rustdoc — must resolve to an
+   actual ``## §N`` heading in DESIGN.md, so renumbering a section without
+   fixing its citations fails the build.
+
+Exit code 0 = all references resolve; 1 = at least one is broken.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_REF_RE = re.compile(r"DESIGN\.md\s+§([0-9]+)")
+HEADING_RE = re.compile(r"^##\s+§([0-9]+)\b", re.MULTILINE)
+
+
+SKIP_DIRS = {"target", ".git", ".github", "node_modules", "__pycache__"}
+
+
+def markdown_files():
+    for p in sorted(ROOT.rglob("*.md")):
+        parts = p.relative_to(ROOT).parts
+        # Skip build/VCS output anywhere in the path (a local `cargo
+        # build` drops dependency markdown under rust/target/**).
+        if any(part in SKIP_DIRS for part in parts[:-1]):
+            continue
+        yield p
+
+
+def rust_sources():
+    for base in ("src", "benches", "tests", "examples"):
+        for p in sorted((ROOT / "rust" / base).rglob("*.rs")):
+            parts = p.relative_to(ROOT).parts
+            if any(part in SKIP_DIRS for part in parts[:-1]):
+                continue
+            yield p
+    yield from sorted((ROOT / "examples").glob("*.rs"))
+
+
+def check_links(errors):
+    for md in markdown_files():
+        text = md.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+
+
+def check_section_refs(errors):
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        errors.append("DESIGN.md missing")
+        return
+    headings = set(HEADING_RE.findall(design.read_text(encoding="utf-8")))
+    # Section references are checked in every markdown file AND in the
+    # rust sources (code comments cite sections by number too).
+    sources = list(markdown_files()) + list(rust_sources())
+    for src in sources:
+        text = src.read_text(encoding="utf-8")
+        for m in SECTION_REF_RE.finditer(text):
+            if m.group(1) not in headings:
+                errors.append(
+                    f"{src.relative_to(ROOT)}: reference to DESIGN.md §{m.group(1)}"
+                    " which has no matching '## §' heading"
+                )
+
+
+def main():
+    errors = []
+    check_links(errors)
+    check_section_refs(errors)
+    if errors:
+        print(f"doc-link check: {len(errors)} broken reference(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("doc-link check: all markdown links and DESIGN.md § references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
