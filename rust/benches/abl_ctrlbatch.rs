@@ -1,0 +1,306 @@
+//! ABL-CTRLB: per-message control plane (PR 5) vs coalesced control
+//! frames + amortised master passes (DESIGN.md §12) under a job storm.
+//!
+//! Workload: `LANES` independent chains of `SWEEPS` **tiny** jobs — a few
+//! microseconds of compute over a ~128 B state each — on a simulated
+//! (α/β-injected) interconnect.  With jobs this small the run is
+//! control-plane bound: every job costs an `Assign`, an `Exec`, an
+//! `ExecDone` and a `JobDone`, each paying the modelled per-message
+//! latency α, and the master schedules after every single completion.
+//! All lanes complete near-simultaneously, so with `ctrl_batching = on`
+//! each sub-scheduler's completions coalesce into one `Batch` frame per
+//! loop pass (one α instead of many), the master drains the whole storm
+//! before running ONE graph-update → release → bulk-LPT placement →
+//! dispatch pass, and its `Assign` replies batch per destination on the
+//! way back out.  `ctrl_batching = off` is the PR 5 wire and loop,
+//! message for message.
+//!
+//! Values are identical in both configurations (batching never changes
+//! results — pinned independently by `prop_ctrl_batching_off_is_pr5`);
+//! acceptance: ≥ 1.2× aggregate, identical values, coalescing activity
+//! (`ctrl_msgs_coalesced > 0` on, `== 0` off) and master busy/idle
+//! accounting present in the serialised metrics snapshot.
+//!
+//! ```text
+//! cargo bench --bench abl_ctrlbatch
+//! # env knobs:
+//! #   HYPAR_CTRLB_LANES=8  HYPAR_CTRLB_SWEEPS=30  HYPAR_CTRLB_ELEMS=32
+//! #   HYPAR_CTRLB_BASE_US=10  HYPAR_CTRLB_ALPHA_US=20  HYPAR_CTRLB_KBPUS=1
+//! #   HYPAR_CTRLB_JSON=BENCH_ctrlbatch.json
+//! #   HYPAR_BENCH_REPS=5  HYPAR_BENCH_WARMUP=1
+//! #   HYPAR_BENCH_SMOKE=1   (tiny sizes, perf assertions skipped)
+//! ```
+
+use hypar::comm::CostModel;
+use hypar::prelude::*;
+use hypar::util::bench::{Bench, Report};
+use hypar::util::json::Json;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Shape {
+    /// Independent chains (width of the storm).
+    lanes: usize,
+    /// Chain length (tiny jobs per lane).
+    sweeps: usize,
+    /// f32 elements per state chunk (2 of them are lane/sweep tags).
+    elems: usize,
+    /// Compute sleep per job, µs — kept tiny so messages dominate.
+    base_us: usize,
+    /// Modelled per-message latency, µs (paid per wire *frame*).
+    alpha_us: usize,
+    /// Modelled link throughput, KB per µs (`kbpus·10⁻³` GB/s).
+    kbpus: usize,
+}
+
+/// Per-lane seed emitters plus one tiny transform.  Element 0 of every
+/// state is the lane tag, element 1 the sweep counter — the digest check
+/// below verifies the full final state of every lane.
+fn registry(s: &Shape) -> FunctionRegistry {
+    let mut reg = FunctionRegistry::new();
+    let elems = s.elems;
+    for l in 0..s.lanes {
+        reg.register_plain(100 + l as u32, format!("seed{l}"), move |_in, out| {
+            let mut v = vec![l as f32, 0.0];
+            v.extend((0..elems.saturating_sub(2)).map(|i| (l * 13 + i) as f32 * 0.01));
+            out.push(DataChunk::from_f32(v));
+            Ok(())
+        });
+    }
+    let base_us = s.base_us;
+    reg.register_plain(1, "tick", move |input, out| {
+        let prev = input.chunks()[0].as_f32()?;
+        let lane = prev[0];
+        let sweep = prev[1] + 1.0;
+        std::thread::sleep(std::time::Duration::from_micros(base_us as u64));
+        let v: Vec<f32> = prev
+            .iter()
+            .enumerate()
+            .map(|(i, p)| match i {
+                0 => lane,
+                1 => sweep,
+                _ => p * 1.01 + 0.1,
+            })
+            .collect();
+        out.push(DataChunk::from_f32(v));
+        Ok(())
+    });
+    reg
+}
+
+/// Segment 0: one seed per lane.  Segments 1..=sweeps: one tiny `tick`
+/// per lane, each consuming only its lane's previous state — `lanes`
+/// independent dataflow chains whose completions land together.
+fn algorithm(s: &Shape) -> Algorithm {
+    let seed_id = |l: usize| (1 + l) as u32;
+    let sweep_id = |sw: usize, l: usize| (1 + s.lanes + (sw - 1) * s.lanes + l) as u32;
+    let mut b = Algorithm::builder();
+    b = b.segment((0..s.lanes).map(|l| JobSpec::new(seed_id(l), 100 + l as u32, 1)).collect());
+    for sw in 1..=s.sweeps {
+        let seg = (0..s.lanes)
+            .map(|l| {
+                let prev = if sw == 1 { seed_id(l) } else { sweep_id(sw - 1, l) };
+                JobSpec::new(sweep_id(sw, l), 1, 1)
+                    .with_inputs(vec![ChunkRef::all(JobId(prev))])
+            })
+            .collect();
+        b = b.segment(seg);
+    }
+    b.build().expect("valid chain-storm algorithm")
+}
+
+fn run_once(s: &Shape, batching: bool) -> RunReport {
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .cores_per_worker(2)
+        .prespawn_workers(true)
+        .comm_cost_model(CostModel {
+            alpha_us: s.alpha_us as f64,
+            bandwidth_gbps: s.kbpus as f64 * 1e-3,
+            simulate: true,
+        })
+        .ctrl_batching(batching)
+        .registry(registry(s))
+        .build()
+        .expect("framework build");
+    fw.run(algorithm(s)).expect("chain-storm run")
+}
+
+/// Deterministically ordered digest of the final-segment values.
+fn digest(report: &RunReport) -> Vec<(u32, Vec<f32>)> {
+    report
+        .results
+        .iter()
+        .map(|(id, data)| {
+            let vals: Vec<f32> = data
+                .chunks()
+                .iter()
+                .flat_map(|c| c.as_f32().unwrap().iter().copied())
+                .collect();
+            (id.0, vals)
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::var("HYPAR_BENCH_SMOKE").is_ok();
+    let shape = if smoke {
+        Shape {
+            lanes: env_usize("HYPAR_CTRLB_LANES", 3),
+            sweeps: env_usize("HYPAR_CTRLB_SWEEPS", 4),
+            elems: env_usize("HYPAR_CTRLB_ELEMS", 16),
+            base_us: env_usize("HYPAR_CTRLB_BASE_US", 5),
+            alpha_us: env_usize("HYPAR_CTRLB_ALPHA_US", 10),
+            kbpus: env_usize("HYPAR_CTRLB_KBPUS", 100),
+        }
+    } else {
+        Shape {
+            lanes: env_usize("HYPAR_CTRLB_LANES", 8),
+            sweeps: env_usize("HYPAR_CTRLB_SWEEPS", 30),
+            elems: env_usize("HYPAR_CTRLB_ELEMS", 32),
+            base_us: env_usize("HYPAR_CTRLB_BASE_US", 10),
+            alpha_us: env_usize("HYPAR_CTRLB_ALPHA_US", 20),
+            kbpus: env_usize("HYPAR_CTRLB_KBPUS", 1),
+        }
+    };
+    let bench = Bench::default();
+
+    println!(
+        "ABL-CTRLB: {} lanes x {} tiny jobs ({} µs compute, ~{} B states), \
+         link α={} µs β≈{} µs/KB, reps {}{}",
+        shape.lanes,
+        shape.sweeps,
+        shape.base_us,
+        shape.elems * 4,
+        shape.alpha_us,
+        1000 / shape.kbpus.max(1),
+        bench.reps,
+        if smoke { " [SMOKE: no perf assertions]" } else { "" }
+    );
+
+    let mut report = Report::new("abl_ctrlbatch: per-message vs coalesced control plane");
+    let mut digests: (Option<Vec<(u32, Vec<f32>)>>, Option<Vec<(u32, Vec<f32>)>>) =
+        (None, None);
+    let mut off_coalesced = 0u64;
+    let mut on_coalesced = 0u64;
+    let mut on_batches = 0u64;
+    let mut on_batch_max = 0u64;
+    let mut on_mean_batch = 0.0f64;
+    let mut on_master_busy = 0u64;
+    let mut on_master_idle = 0u64;
+    let mut snapshot_has_ctrl_keys = false;
+
+    let m_off = bench.measure("ctrlbatch/per_message", || {
+        let r = run_once(&shape, false);
+        off_coalesced = r.metrics.ctrl_msgs_coalesced;
+        digests.0 = Some(digest(&r));
+    });
+    let m_on = bench.measure("ctrlbatch/coalesced", || {
+        let r = run_once(&shape, true);
+        on_coalesced = r.metrics.ctrl_msgs_coalesced;
+        on_batches = r.metrics.ctrl_batches;
+        on_batch_max = r.metrics.ctrl_batch_max;
+        on_mean_batch = r.metrics.mean_ctrl_batch_size();
+        on_master_busy = r.metrics.master_busy_us;
+        on_master_idle = r.metrics.master_idle_us;
+        // Acceptance: the coalescing counters and the master busy/idle
+        // split must ride the serialised snapshot, not just the struct.
+        let doc = hypar::util::json::parse(&r.metrics.to_json().to_string())
+            .expect("snapshot json parses");
+        snapshot_has_ctrl_keys = doc.get("ctrl_batches").is_some()
+            && doc.get("ctrl_msgs_coalesced").is_some()
+            && doc.get("ctrl_batch_max").is_some()
+            && doc.get("mean_ctrl_batch_size").is_some()
+            && doc.get("master_busy_us").is_some()
+            && doc.get("master_idle_us").is_some()
+            && doc.get("master_utilisation").is_some();
+        digests.1 = Some(digest(&r));
+    });
+    report.add(m_off.clone());
+    report.add(m_on.clone());
+    report.finish();
+
+    let speedup = m_off.mean.as_secs_f64() / m_on.mean.as_secs_f64();
+    let identical = digests.0 == digests.1;
+    println!(
+        "\ncoalesced speedup {speedup:.2}x over per-message control plane \
+         ({on_coalesced} msgs in {on_batches} batches, max {on_batch_max}, \
+         mean {on_mean_batch:.1}; master busy {on_master_busy} µs / idle \
+         {on_master_idle} µs)"
+    );
+
+    // Machine-readable perf-trajectory row.
+    let out_path = std::env::var("HYPAR_CTRLB_JSON")
+        .unwrap_or_else(|_| "BENCH_ctrlbatch.json".to_string());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("abl_ctrlbatch".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("lanes", Json::num(shape.lanes as f64)),
+        ("sweeps", Json::num(shape.sweeps as f64)),
+        ("elems", Json::num(shape.elems as f64)),
+        ("base_us", Json::num(shape.base_us as f64)),
+        ("alpha_us", Json::num(shape.alpha_us as f64)),
+        ("bandwidth_gbps", Json::num(shape.kbpus as f64 * 1e-3)),
+        ("reps", Json::num(bench.reps as f64)),
+        ("per_message_mean_ms", Json::num(m_off.mean_ms())),
+        ("coalesced_mean_ms", Json::num(m_on.mean_ms())),
+        ("speedup", Json::num(speedup)),
+        ("ctrl_batches", Json::num(on_batches as f64)),
+        ("ctrl_msgs_coalesced", Json::num(on_coalesced as f64)),
+        ("ctrl_batch_max", Json::num(on_batch_max as f64)),
+        ("mean_ctrl_batch_size", Json::num(on_mean_batch)),
+        ("master_busy_us", Json::num(on_master_busy as f64)),
+        ("master_idle_us", Json::num(on_master_idle as f64)),
+        ("identical_values", Json::Bool(identical)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string_pretty(2)) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+
+    // Correctness gates hold even in smoke mode; perf gates only in a
+    // full run.
+    let mut pass = true;
+    if !identical {
+        println!("ACCEPTANCE FAIL: per-message and coalesced values differ");
+        pass = false;
+    }
+    if !snapshot_has_ctrl_keys {
+        println!(
+            "ACCEPTANCE FAIL: ctrl batching / master loop metrics missing from to_json"
+        );
+        pass = false;
+    }
+    if off_coalesced != 0 {
+        println!("ACCEPTANCE FAIL: ctrl_batching=off still coalesced messages");
+        pass = false;
+    }
+    if on_coalesced == 0 {
+        println!("ACCEPTANCE FAIL: ctrl_batching=on never coalesced a message");
+        pass = false;
+    }
+    if !smoke {
+        if speedup < 1.2 {
+            println!(
+                "ACCEPTANCE FAIL: coalescing only {speedup:.2}x over per-message"
+            );
+            pass = false;
+        }
+        if on_master_busy == 0 && on_master_idle == 0 {
+            println!("ACCEPTANCE FAIL: master busy/idle accounting never ticked");
+            pass = false;
+        }
+    }
+    if pass {
+        println!(
+            "ACCEPTANCE PASS: {}identical values, coalescing active, ctrl metrics \
+             exported",
+            if smoke { "(smoke) " } else { ">= 1.2x, " }
+        );
+    } else {
+        std::process::exit(1);
+    }
+}

@@ -67,6 +67,15 @@ impl WireSize for crate::data::FunctionData {
     }
 }
 
+/// Summed wire size of a message slice — the inner-payload term of a
+/// coalesced batch frame (DESIGN.md §12).  A batch charges one fixed
+/// control overhead for the frame plus the sum of its members, so α/β
+/// accounting sees exactly one message envelope per flush instead of one
+/// per member (that saving *is* the point of coalescing).
+pub fn wire_size_sum<M: WireSize>(items: &[M]) -> usize {
+    items.iter().map(WireSize::wire_size).sum()
+}
+
 /// Collective plumbing payloads (kept separate from the user message type
 /// so collectives never collide with user traffic).
 #[derive(Debug, Clone)]
@@ -160,5 +169,12 @@ mod tests {
         assert_eq!(vec![0f64; 3].wire_size(), 24);
         assert_eq!(CollPayload::F32(vec![0.0; 4]).wire_size(), 16);
         assert_eq!(CollPayload::Token.wire_size(), 0);
+    }
+
+    #[test]
+    fn wire_size_sum_adds_members() {
+        let items = vec![vec![0u8; 10], vec![0u8; 3], Vec::new()];
+        assert_eq!(wire_size_sum(&items), 13);
+        assert_eq!(wire_size_sum::<Vec<u8>>(&[]), 0);
     }
 }

@@ -30,7 +30,7 @@ pub use costmodel::{
     CommCalibration, CommModelAccuracy, CommStats, CostModel, StatsSnapshot,
     TransferEstimate,
 };
-pub use message::{Envelope, Tag, WireSize};
+pub use message::{wire_size_sum, Envelope, Tag, WireSize};
 pub use transport::{Comm, CommSender, Match, World};
 
 /// Process identity inside a [`World`] (the MPI rank).

@@ -373,6 +373,24 @@ impl<M: Send + WireSize + 'static> Comm<M> {
         self.recv_match_timeout(Match::any(), Duration::ZERO)
     }
 
+    /// Blocking receive of one user message followed by a non-blocking
+    /// drain of everything already queued, up to `max` envelopes total —
+    /// the mailbox-amortisation primitive of the batched control plane
+    /// (DESIGN.md §12).  The returned vector preserves arrival order, so
+    /// per-(src,dst) FIFO guarantees carry over to batch processing.
+    /// `max` bounds one drain so a sustained message storm cannot starve
+    /// the caller's between-drain work (e.g. the master's placement pass).
+    pub fn recv_drain(&mut self, max: usize) -> Result<Vec<Envelope<M>>> {
+        let mut out = vec![self.recv()?];
+        while out.len() < max {
+            match self.try_recv()? {
+                Some(env) => out.push(env),
+                None => break,
+            }
+        }
+        Ok(out)
+    }
+
     // ------------------------------------------------------ collective I/O
 
     pub(crate) fn send_coll(&self, dst: Rank, tag: Tag, payload: CollPayload) -> Result<()> {
@@ -539,6 +557,27 @@ mod tests {
             assert_eq!(b.recv().unwrap().into_user(), vec![i]);
         }
         assert_eq!(w.stats().msgs, 100);
+    }
+
+    #[test]
+    fn recv_drain_preserves_arrival_order_and_bound() {
+        let w = W::new(CostModel::free());
+        let a = w.add_rank();
+        let mut b = w.add_rank();
+        for i in 0..5u8 {
+            a.send(b.rank(), Tag(0), vec![i]).unwrap();
+        }
+        // Bounded drain: one blocking recv + up to (max-1) queued.
+        let batch = b.recv_drain(3).unwrap();
+        assert_eq!(batch.len(), 3);
+        for (i, env) in batch.into_iter().enumerate() {
+            assert_eq!(env.into_user(), vec![i as u8]);
+        }
+        // The rest is still queued, still in order.
+        let rest = b.recv_drain(usize::MAX).unwrap();
+        assert_eq!(rest.len(), 2);
+        assert_eq!(rest[0].user_ref(), Some(&vec![3u8]));
+        assert_eq!(rest[1].user_ref(), Some(&vec![4u8]));
     }
 
     #[test]

@@ -25,7 +25,10 @@
 //!   "cost_ewma_alpha": 0.3,
 //!   "comm_aware_placement": true,
 //!   "comm_calibration": true,
-//!   "comm_calibration_ewma_alpha": 0.3
+//!   "comm_calibration_ewma_alpha": 0.3,
+//!   "ctrl_batching": true,
+//!   "ctrl_batch_max_msgs": 64,
+//!   "ctrl_batch_max_delay_us": 200
 //! }
 //! ```
 //!
@@ -203,6 +206,20 @@ pub struct TopologyConfig {
     /// EWMA smoothing factor of the per-peer link calibration (weight of
     /// the newest observed transfer, `(0, 1]`).
     pub comm_calibration_ewma_alpha: f64,
+    /// Control-plane message coalescing + amortised master passes
+    /// (DESIGN.md §12): subs and workers buffer same-destination control
+    /// messages into `FwMsg::Batch` frames, and the master drains its
+    /// whole mailbox per scheduling pass.  On by default; off reproduces
+    /// the PR 5 one-message-one-pass control plane exactly (pinned by
+    /// property test).  Values are byte-identical either way.
+    pub ctrl_batching: bool,
+    /// Most control messages a coalescer buffers per destination before
+    /// flushing a frame (>= 1).  Larger batches amortise more per-message
+    /// overhead at the cost of dispatch latency.
+    pub ctrl_batch_max_msgs: usize,
+    /// Longest a buffered control message may wait before a flush is
+    /// forced, in microseconds (latency bound of the coalescers).
+    pub ctrl_batch_max_delay_us: u64,
 }
 
 impl Default for TopologyConfig {
@@ -224,6 +241,9 @@ impl Default for TopologyConfig {
             comm_aware_placement: true,
             comm_calibration: true,
             comm_calibration_ewma_alpha: crate::comm::costmodel::DEFAULT_CALIBRATION_EWMA_ALPHA,
+            ctrl_batching: true,
+            ctrl_batch_max_msgs: 64,
+            ctrl_batch_max_delay_us: 200,
         }
     }
 }
@@ -309,6 +329,16 @@ impl TopologyConfig {
                 Error::Config("comm_calibration_ewma_alpha must be a number".into())
             })?;
         }
+        if let Some(v) = doc.get("ctrl_batching") {
+            cfg.ctrl_batching = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("ctrl_batching must be a bool".into()))?;
+        }
+        cfg.ctrl_batch_max_msgs =
+            get_usize("ctrl_batch_max_msgs", cfg.ctrl_batch_max_msgs)?;
+        cfg.ctrl_batch_max_delay_us =
+            get_usize("ctrl_batch_max_delay_us", cfg.ctrl_batch_max_delay_us as usize)?
+                as u64;
         if let Some(v) = doc.get("execution_mode") {
             let s = v
                 .as_str()
@@ -374,6 +404,15 @@ impl TopologyConfig {
                 "comm_calibration_ewma_alpha",
                 Json::num(self.comm_calibration_ewma_alpha),
             ),
+            ("ctrl_batching", Json::Bool(self.ctrl_batching)),
+            (
+                "ctrl_batch_max_msgs",
+                Json::num(self.ctrl_batch_max_msgs as f64),
+            ),
+            (
+                "ctrl_batch_max_delay_us",
+                Json::num(self.ctrl_batch_max_delay_us as f64),
+            ),
             (
                 "comm_cost_model",
                 Json::obj(vec![
@@ -414,6 +453,9 @@ impl TopologyConfig {
         }
         if self.steal_granularity == 0 {
             return Err(Error::Config("steal_granularity must be >= 1".into()));
+        }
+        if self.ctrl_batch_max_msgs == 0 {
+            return Err(Error::Config("ctrl_batch_max_msgs must be >= 1".into()));
         }
         if !self.cost_ewma_alpha.is_finite()
             || self.cost_ewma_alpha <= 0.0
@@ -598,6 +640,40 @@ mod tests {
             r#"{"comm_calibration_ewma_alpha": "fast"}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn ctrl_batching_knobs_parse_and_roundtrip() {
+        let d = TopologyConfig::default();
+        assert!(d.ctrl_batching, "on by default");
+        assert_eq!(d.ctrl_batch_max_msgs, 64);
+        assert_eq!(d.ctrl_batch_max_delay_us, 200);
+        let cfg = TopologyConfig::from_json_text(
+            r#"{"ctrl_batching": false, "ctrl_batch_max_msgs": 16,
+                "ctrl_batch_max_delay_us": 50}"#,
+        )
+        .unwrap();
+        assert!(!cfg.ctrl_batching);
+        assert_eq!(cfg.ctrl_batch_max_msgs, 16);
+        assert_eq!(cfg.ctrl_batch_max_delay_us, 50);
+        let back = TopologyConfig::from_json_text(&cfg.to_json()).unwrap();
+        assert!(!back.ctrl_batching);
+        assert_eq!(back.ctrl_batch_max_msgs, 16);
+        assert_eq!(back.ctrl_batch_max_delay_us, 50);
+        assert!(TopologyConfig::from_json_text(r#"{"ctrl_batching": "on"}"#).is_err());
+        assert!(
+            TopologyConfig::from_json_text(r#"{"ctrl_batch_max_msgs": "many"}"#).is_err()
+        );
+        assert!(
+            TopologyConfig::from_json_text(r#"{"ctrl_batch_max_delay_us": false}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn zero_ctrl_batch_max_msgs_rejected() {
+        let cfg = TopologyConfig { ctrl_batch_max_msgs: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

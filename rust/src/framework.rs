@@ -132,6 +132,13 @@ impl Framework {
         // Rank 0: master (this thread).
         let mut master_comm = world.add_rank();
 
+        // One CtrlBatchCfg for master, subs and workers (DESIGN.md §12).
+        let ctrl_batch = crate::scheduler::CtrlBatchCfg {
+            enabled: self.cfg.ctrl_batching,
+            max_msgs: self.cfg.ctrl_batch_max_msgs,
+            max_delay: Duration::from_micros(self.cfg.ctrl_batch_max_delay_us),
+        };
+
         // Ranks 1..=S: sub-schedulers.
         let worker_cfg = WorkerConfig {
             cores: self.cfg.cores_per_worker,
@@ -143,6 +150,7 @@ impl Framework {
             cost_model: self.cfg.cost_model,
             cost_ewma_alpha: self.cfg.cost_ewma_alpha,
             metrics: Some(metrics.clone()),
+            ctrl_batch,
         };
         let subs: Vec<SubHandle> = (0..self.cfg.schedulers)
             .map(|_| {
@@ -157,6 +165,7 @@ impl Framework {
                             && self.cfg.speculative_prefetch,
                         worker: worker_cfg.clone(),
                         tick: Duration::from_millis(20),
+                        ctrl_batch,
                     },
                     metrics.clone(),
                 )
@@ -176,6 +185,7 @@ impl Framework {
                 cost_ewma_alpha: self.cfg.cost_ewma_alpha,
                 comm_aware: self.cfg.comm_aware_placement,
                 comm: world.calibration(),
+                ctrl_batch,
             },
             &metrics,
         );
@@ -389,6 +399,39 @@ impl FrameworkBuilder {
     /// [`crate::cost::DEFAULT_COST_EWMA_ALPHA`]).
     pub fn cost_ewma_alpha(mut self, alpha: f64) -> Self {
         self.cfg.cost_ewma_alpha = alpha;
+        self
+    }
+
+    /// Control-plane message coalescing + amortised master passes
+    /// (default: on; DESIGN.md §12).  Same-destination control messages
+    /// (completions, fetches, release broadcasts, prefetch hints) batch
+    /// into single wire frames, and the master drains its whole mailbox
+    /// before running one scheduling pass over the combined ready
+    /// frontier (bulk LPT assignment).  Off reproduces the PR 5 control
+    /// plane message-for-message (pinned by
+    /// `prop_ctrl_batching_off_is_pr5`); computed values are identical
+    /// either way.
+    pub fn ctrl_batching(mut self, on: bool) -> Self {
+        self.cfg.ctrl_batching = on;
+        self
+    }
+
+    /// Messages buffered per destination before a forced flush (>= 1,
+    /// default 64; DESIGN.md §12).  Also scales the master's drain bound
+    /// (`max_msgs × schedulers` messages per pass), so raising it trades
+    /// scheduling latency for bigger frames under job storms.
+    pub fn ctrl_batch_max_msgs(mut self, n: usize) -> Self {
+        self.cfg.ctrl_batch_max_msgs = n;
+        self
+    }
+
+    /// Upper bound, in microseconds, on how long a buffered control
+    /// message may wait inside one event-loop pass before everything is
+    /// flushed (default 200; DESIGN.md §12).  Loops additionally flush at
+    /// every pass boundary, before blocking — this knob only matters
+    /// during unusually long passes.
+    pub fn ctrl_batch_max_delay_us(mut self, us: u64) -> Self {
+        self.cfg.ctrl_batch_max_delay_us = us;
         self
     }
 

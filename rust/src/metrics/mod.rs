@@ -171,6 +171,22 @@ pub struct MetricsSnapshot {
     pub seq_busy_us: u64,
     /// Microseconds sequence threads spent parked or scanning, summed.
     pub seq_idle_us: u64,
+    /// Coalesced control frames shipped (`FwMsg::Batch`, DESIGN.md §12).
+    /// Single-message flushes ship unwrapped and are not counted here.
+    pub ctrl_batches: u64,
+    /// Control messages that travelled inside a coalesced frame — the
+    /// sends *saved* is `ctrl_msgs_coalesced - ctrl_batches`.
+    pub ctrl_msgs_coalesced: u64,
+    /// Largest coalesced frame observed (batch-size histogram tail; the
+    /// mean is `ctrl_msgs_coalesced / ctrl_batches`).
+    pub ctrl_batch_max: u64,
+    /// Microseconds the master event loop spent processing messages and
+    /// running scheduling passes (DESIGN.md §12 headroom metric).
+    pub master_busy_us: u64,
+    /// Microseconds the master event loop spent blocked waiting for mail.
+    /// `busy / (busy + idle)` is control-plane utilisation: near 1.0 the
+    /// single master is the throughput ceiling.
+    pub master_idle_us: u64,
     /// Jobs completed on worker sequence pools (chunk fan-outs; the
     /// denominator of [`Self::mean_imbalance`]).
     pub pool_jobs: usize,
@@ -319,6 +335,25 @@ impl MetricsSnapshot {
         self.imbalance_sum / self.pool_jobs as f64
     }
 
+    /// Mean members per coalesced control frame (0 when nothing was
+    /// coalesced; ~1 would mean batching is on but never aggregating).
+    pub fn mean_ctrl_batch_size(&self) -> f64 {
+        if self.ctrl_batches == 0 {
+            return 0.0;
+        }
+        self.ctrl_msgs_coalesced as f64 / self.ctrl_batches as f64
+    }
+
+    /// Fraction of master event-loop time spent working rather than
+    /// blocked on mail (1.0 = the single master is saturated).
+    pub fn master_utilisation(&self) -> f64 {
+        let total = self.master_busy_us + self.master_idle_us;
+        if total == 0 {
+            return 0.0;
+        }
+        self.master_busy_us as f64 / total as f64
+    }
+
     /// Wall time not explained by the per-worker serialised compute:
     /// `wall - total_exec/workers` (coarse but comparable across configs).
     pub fn scheduling_overhead(&self) -> Duration {
@@ -398,6 +433,19 @@ impl MetricsSnapshot {
                         .collect(),
                 ),
             ),
+            ("ctrl_batches", Json::num(self.ctrl_batches as f64)),
+            (
+                "ctrl_msgs_coalesced",
+                Json::num(self.ctrl_msgs_coalesced as f64),
+            ),
+            ("ctrl_batch_max", Json::num(self.ctrl_batch_max as f64)),
+            (
+                "mean_ctrl_batch_size",
+                Json::num(self.mean_ctrl_batch_size()),
+            ),
+            ("master_busy_us", Json::num(self.master_busy_us as f64)),
+            ("master_idle_us", Json::num(self.master_idle_us as f64)),
+            ("master_utilisation", Json::num(self.master_utilisation())),
             ("seq_steals", Json::num(self.seq_steals as f64)),
             ("seq_busy_us", Json::num(self.seq_busy_us as f64)),
             ("seq_idle_us", Json::num(self.seq_idle_us as f64)),
@@ -667,6 +715,29 @@ impl MetricsCollector {
         });
     }
 
+    /// A coalescer shipped one `FwMsg::Batch` frame carrying `members`
+    /// control messages (DESIGN.md §12).  Called per multi-member flush,
+    /// from any rank's coalescer — the shared collector folds all ranks.
+    pub fn ctrl_batch_flushed(&self, members: usize) {
+        let members = members as u64;
+        self.with(|m| {
+            m.ctrl_batches += 1;
+            m.ctrl_msgs_coalesced += members;
+            if members > m.ctrl_batch_max {
+                m.ctrl_batch_max = members;
+            }
+        });
+    }
+
+    /// The master event loop exited: fold in its lifetime busy/idle split
+    /// (busy = message handling + scheduling passes, idle = blocked recv).
+    pub fn master_loop(&self, busy_us: u64, idle_us: u64) {
+        self.with(|m| {
+            m.master_busy_us += busy_us;
+            m.master_idle_us += idle_us;
+        });
+    }
+
     /// A sequence-pool chunk job finished; `imbalance` is its busiest
     /// participant's time over the mean participant's time.
     pub fn pool_job_finished(&self, imbalance: f64) {
@@ -871,6 +942,43 @@ mod tests {
         assert_eq!(cm.get("links").unwrap().as_usize(), Some(3));
         assert_eq!(cm.get("samples").unwrap().as_usize(), Some(40));
         assert_eq!(cm.get("mean_abs_err_us").unwrap().as_f64(), Some(12.5));
+    }
+
+    #[test]
+    fn ctrl_batching_counters_fold_multi_rank_and_export() {
+        // Frames reported from several ranks' coalescers (sub 1, sub 2,
+        // a worker outbox) fold into one snapshot, and the master loop
+        // split folds additively too.
+        let c = MetricsCollector::new();
+        c.ctrl_batch_flushed(3); // sub 1
+        c.ctrl_batch_flushed(5); // sub 2
+        c.ctrl_batch_flushed(2); // worker outbox
+        c.master_loop(4_000, 6_000);
+        c.master_loop(500, 500); // barrier loop re-entry folds in
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        assert_eq!(snap.ctrl_batches, 3);
+        assert_eq!(snap.ctrl_msgs_coalesced, 10);
+        assert_eq!(snap.ctrl_batch_max, 5);
+        assert!((snap.mean_ctrl_batch_size() - 10.0 / 3.0).abs() < 1e-9);
+        assert_eq!(snap.master_busy_us, 4_500);
+        assert_eq!(snap.master_idle_us, 6_500);
+        assert!((snap.master_utilisation() - 4_500.0 / 11_000.0).abs() < 1e-9);
+        let text = snap.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("ctrl_batches").unwrap().as_usize(), Some(3));
+        assert_eq!(back.get("ctrl_msgs_coalesced").unwrap().as_usize(), Some(10));
+        assert_eq!(back.get("ctrl_batch_max").unwrap().as_usize(), Some(5));
+        assert_eq!(back.get("master_busy_us").unwrap().as_usize(), Some(4_500));
+        assert_eq!(back.get("master_idle_us").unwrap().as_usize(), Some(6_500));
+        assert!(back.get("master_utilisation").unwrap().as_f64().is_some());
+        assert!(back.get("mean_ctrl_batch_size").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn ctrl_batching_counters_default_safe() {
+        let snap = MetricsSnapshot::default();
+        assert_eq!(snap.mean_ctrl_batch_size(), 0.0);
+        assert_eq!(snap.master_utilisation(), 0.0);
     }
 
     #[test]

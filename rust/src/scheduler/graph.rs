@@ -135,6 +135,14 @@ impl JobGraph {
 
     /// Drain the ready queue in deterministic `(segment, id)` order,
     /// marking each returned job `Running`.
+    ///
+    /// Under amortised batch scheduling (DESIGN.md §12) the master applies
+    /// a whole drained mailbox of completions before calling this once, so
+    /// the returned frontier is the union of everything those completions
+    /// unblocked — the bulk-LPT placement pass reorders it by estimated
+    /// cost.  With `ctrl_batching` off the master calls this after every
+    /// single completion and the `(segment, id)` order here *is* the
+    /// assignment order, exactly as in PR 5.
     pub fn take_ready(&mut self) -> Vec<JobId> {
         let drained = std::mem::take(&mut self.ready);
         let mut out: Vec<JobId> = drained

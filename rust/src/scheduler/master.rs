@@ -21,6 +21,7 @@
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::comm::{Comm, CommCalibration, Rank, TransferEstimate};
 use crate::config::ExecutionMode;
@@ -32,8 +33,8 @@ use crate::metrics::MetricsCollector;
 
 use super::dynamic::resolve_injections;
 use super::graph::{JobGraph, NodeState};
-use super::placement::choose_scheduler_policy;
-use super::{FwMsg, SourceLoc, TAG_CTRL};
+use super::placement::{bulk_assign_order, choose_scheduler_policy};
+use super::{Coalescer, CtrlBatchCfg, FwMsg, SourceLoc};
 
 /// When stored results are freed (see DESIGN.md §6 discussion).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,6 +84,12 @@ pub struct MasterConfig {
     /// The world's per-peer transfer calibration — the α/β model refined
     /// by observed transfer times (read-only here; the transport feeds it).
     pub comm: Arc<CommCalibration>,
+    /// Control-plane coalescing + amortised passes (DESIGN.md §12, knob
+    /// `ctrl_batching`): buffer outgoing control messages into `Batch`
+    /// frames, drain the whole mailbox per dataflow scheduling pass, and
+    /// place the ready frontier in one cost-sorted bulk pass.  Disabled =
+    /// the PR 5 one-message-one-pass control plane, bit for bit.
+    pub ctrl_batch: CtrlBatchCfg,
 }
 
 /// Drive one algorithm to completion. Returns the results of the final
@@ -156,6 +163,14 @@ struct Master<'a> {
     /// cancel hints (`ReleaseResult`) for the copies it pulled — or on
     /// node re-entry, which also re-opens the hint window for the job.
     prefetch_hints: HashMap<JobId, (Rank, Vec<JobId>)>,
+
+    // ----- control-plane batching (DESIGN.md §12)
+    /// Per-destination outgoing-message coalescer.
+    coal: Coalescer,
+    /// Event-loop microseconds spent handling messages + scheduling.
+    busy_us: u64,
+    /// Event-loop microseconds spent blocked waiting for mail.
+    idle_us: u64,
 }
 
 /// A job aborted more often than this fails the run.
@@ -173,7 +188,11 @@ fn distinct_inputs(spec: &JobSpec) -> Vec<JobId> {
 impl<'a> Master<'a> {
     fn new(comm: &'a mut Comm<FwMsg>, cfg: MasterConfig, metrics: &'a MetricsCollector) -> Self {
         let costs = CostTable::new(cfg.cost_ewma_alpha);
+        let coal = Coalescer::new(cfg.ctrl_batch);
         Master {
+            coal,
+            busy_us: 0,
+            idle_us: 0,
             comm,
             cfg,
             metrics,
@@ -220,6 +239,7 @@ impl<'a> Master<'a> {
             ExecutionMode::Barrier => self.drive_barrier(),
             ExecutionMode::Dataflow => self.drive_dataflow(),
         };
+        self.metrics.master_loop(self.busy_us, self.idle_us);
         match outcome {
             Ok(()) => {
                 let finals = self.collect_final_results();
@@ -285,6 +305,9 @@ impl<'a> Master<'a> {
                         ),
                     });
                 }
+                // Pass boundary: ship buffered Assigns before blocking
+                // (DESIGN.md §12); a no-op with coalescing off.
+                self.coal.flush_all(self.comm, self.metrics);
                 let env = self
                     .comm
                     .recv()
@@ -372,6 +395,14 @@ impl<'a> Master<'a> {
                     }
                 }
                 self.try_recovery();
+                Ok(())
+            }
+            FwMsg::Batch(msgs) => {
+                // Coalesced frame from a sub (DESIGN.md §12): members
+                // apply in arrival order.
+                for m in msgs {
+                    self.handle_barrier(m, to_assign)?;
+                }
                 Ok(())
             }
             // Late fetch replies etc. are ignorable here.
@@ -494,11 +525,22 @@ impl<'a> Master<'a> {
             self.graph.insert(spec, idx);
         }
 
+        // With coalescing on the mailbox is drained whole per pass; each
+        // drain is bounded so one endless storm cannot starve the
+        // scheduling pass that would absorb it.
+        let drain_cap = self
+            .cfg
+            .ctrl_batch
+            .max_msgs
+            .saturating_mul(self.cfg.subs.len().max(1))
+            .max(1);
         loop {
+            let pass = Instant::now();
             self.assign_ready();
             self.send_prefetch_hints();
             if self.pending.is_empty() {
                 if self.graph.all_done() {
+                    self.busy_us += pass.elapsed().as_micros() as u64;
                     break;
                 }
                 // Nothing in flight, nothing ready, graph not done: some
@@ -519,11 +561,42 @@ impl<'a> Master<'a> {
                     ),
                 });
             }
-            let env = self
-                .comm
-                .recv()
-                .map_err(|_| Error::WorldShutdown(self.comm.rank()))?;
-            self.handle_dataflow(env.into_user())?;
+            // Pass boundary: ship everything buffered before blocking.
+            self.coal.flush_all(self.comm, self.metrics);
+            self.busy_us += pass.elapsed().as_micros() as u64;
+            if self.coal.enabled() {
+                // Amortised pass (DESIGN.md §12): drain the whole mailbox,
+                // fold every event into the graph, then run ONE release →
+                // placement → dispatch pass for the batch (the loop head).
+                let wait = Instant::now();
+                let envs = self
+                    .comm
+                    .recv_drain(drain_cap)
+                    .map_err(|_| Error::WorldShutdown(self.comm.rank()))?;
+                self.idle_us += wait.elapsed().as_micros() as u64;
+                let work = Instant::now();
+                let mut any_done = false;
+                for env in envs {
+                    any_done |= self.handle_dataflow_event(env.into_user())?;
+                }
+                if any_done {
+                    self.apply_dataflow_release();
+                }
+                self.busy_us += work.elapsed().as_micros() as u64;
+            } else {
+                // PR 5 control plane: one message, one full pass.
+                let wait = Instant::now();
+                let env = self
+                    .comm
+                    .recv()
+                    .map_err(|_| Error::WorldShutdown(self.comm.rank()))?;
+                self.idle_us += wait.elapsed().as_micros() as u64;
+                let work = Instant::now();
+                if self.handle_dataflow_event(env.into_user())? {
+                    self.apply_dataflow_release();
+                }
+                self.busy_us += work.elapsed().as_micros() as u64;
+            }
         }
 
         // Close metric entries that never drained (empty injected gaps).
@@ -579,9 +652,12 @@ impl<'a> Master<'a> {
             self.prefetch_hints
                 .insert(job, (target, sources.iter().map(|l| l.job).collect()));
             self.metrics.prefetch_sent();
-            let _ = self
-                .comm
-                .send(target, TAG_CTRL, FwMsg::Prefetch { job, threads, sources });
+            self.coal.send(
+                self.comm,
+                self.metrics,
+                target,
+                FwMsg::Prefetch { job, threads, sources },
+            );
         }
     }
 
@@ -619,26 +695,44 @@ impl<'a> Master<'a> {
     }
 
     /// Drain the graph's ready set onto the cluster.
+    ///
+    /// With coalescing on the whole frontier is placed in one bulk pass,
+    /// heaviest estimated cost first (LPT over the per-sub outstanding
+    /// cost, DESIGN.md §12): each job's estimate is computed once here and
+    /// handed to [`Self::assign_with_est`], so big jobs claim targets
+    /// before small ones fill the gaps.  With it off, the PR 5 take-ready
+    /// order is preserved exactly.
     fn assign_ready(&mut self) {
         let ready = self.graph.take_ready();
         if ready.is_empty() {
             return;
         }
+        let ests: Vec<(JobId, u64)> =
+            ready.iter().map(|&j| (j, self.estimate_cost(j))).collect();
+        let ordered = if self.coal.enabled() && ests.len() > 1 {
+            bulk_assign_order(ests)
+        } else {
+            ests
+        };
         // Constant across the drain: everything taken is Running, nothing
         // completes inside this loop.
         let frontier = self.graph.frontier();
-        for job in ready {
+        for (job, est) in ordered {
             self.metrics.job_ready(job);
             if let (Some(f), Some(seg)) = (frontier, self.graph.segment_of(job)) {
                 if f < seg {
                     self.metrics.job_overlapped();
                 }
             }
-            self.assign(job);
+            self.assign_with_est(job, est);
         }
     }
 
-    fn handle_dataflow(&mut self, msg: FwMsg) -> Result<()> {
+    /// Fold one dataflow event into the graph.  Returns whether a
+    /// completion was processed — the caller owes a release pass then
+    /// ([`Self::apply_dataflow_release`] runs once per drained batch with
+    /// coalescing on, once per completion with it off, DESIGN.md §12).
+    fn handle_dataflow_event(&mut self, msg: FwMsg) -> Result<bool> {
         match msg {
             FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes, exec_us } => {
                 self.observe_cost(job, exec_us);
@@ -656,8 +750,7 @@ impl<'a> Master<'a> {
                 // releasable: the fresh one and its producers (whose
                 // pending-consumer count just dropped).
                 self.offer_release_candidates(job);
-                self.apply_dataflow_release();
-                Ok(())
+                Ok(true)
             }
             FwMsg::JobError { job, msg } => Err(Error::JobFailed { job, msg }),
             FwMsg::JobAborted { job, missing } => {
@@ -673,7 +766,7 @@ impl<'a> Master<'a> {
                         self.reenter_dataflow(missing);
                     }
                 }
-                Ok(())
+                Ok(false)
             }
             FwMsg::WorkerLostReport { lost, running, .. } => {
                 for job in lost {
@@ -693,10 +786,19 @@ impl<'a> Master<'a> {
                         self.reenter_dataflow(job);
                     }
                 }
-                Ok(())
+                Ok(false)
+            }
+            FwMsg::Batch(msgs) => {
+                // Coalesced frame from a sub: members fold in order; the
+                // release debt aggregates across them.
+                let mut any_done = false;
+                for m in msgs {
+                    any_done |= self.handle_dataflow_event(m)?;
+                }
+                Ok(any_done)
             }
             // Late fetch replies etc. are ignorable here.
-            _ => Ok(()),
+            _ => Ok(false),
         }
     }
 
@@ -981,9 +1083,12 @@ impl<'a> Master<'a> {
                 continue;
             }
             self.metrics.prefetch_cancelled();
-            let _ = self
-                .comm
-                .send(predicted, TAG_CTRL, FwMsg::ReleaseResult { job: src });
+            self.coal.send(
+                self.comm,
+                self.metrics,
+                predicted,
+                FwMsg::ReleaseResult { job: src },
+            );
         }
     }
 
@@ -1008,7 +1113,34 @@ impl<'a> Master<'a> {
         self.produced_in.get(&job).is_some_and(|&s| s + 1 == self.segments.len())
     }
 
+    /// Estimated execution microseconds of `job` for placement charging:
+    /// 0 while the model is off or the kind is cold (placement then
+    /// degrades to pure queue length).  Comm-aware placement sizes the
+    /// estimate by the job's input bytes (µs/byte normalisation,
+    /// DESIGN.md §10).
+    fn estimate_cost(&self, job: JobId) -> u64 {
+        if !self.cfg.cost_model {
+            return 0;
+        }
+        let Some(spec) = self.specs.get(&job) else { return 0 };
+        let estimate = if self.cfg.comm_aware {
+            self.costs
+                .estimate_job_us_sized(spec.func.0, self.input_bytes_of(spec))
+        } else {
+            self.costs.estimate_job_us(spec.func.0)
+        };
+        estimate.map(|us| us.round().max(1.0) as u64).unwrap_or(0)
+    }
+
     fn assign(&mut self, job: JobId) {
+        let est = self.estimate_cost(job);
+        self.assign_with_est(job, est);
+    }
+
+    /// Place and dispatch `job`, charging the precomputed cost estimate
+    /// (shared by single assignment and the bulk LPT pass, which prices
+    /// the whole frontier before placing any of it).
+    fn assign_with_est(&mut self, job: JobId, est: u64) {
         let spec = self.specs.get(&job).expect("assigning unknown job").clone();
         // Look-ahead packing (dataflow): weigh where this job's known
         // successors' inputs live, so chains pack onto the scheduler
@@ -1032,21 +1164,6 @@ impl<'a> Master<'a> {
                 self.cancel_prefetch(predicted, &srcs);
             }
         }
-        // Charge the target's estimated outstanding cost (0 while the
-        // model is off or the kind is cold — placement then degrades to
-        // pure queue length).  Comm-aware placement sizes the estimate by
-        // the job's input bytes (µs/byte normalisation, DESIGN.md §10).
-        let est = if self.cfg.cost_model {
-            let estimate = if self.cfg.comm_aware {
-                self.costs
-                    .estimate_job_us_sized(spec.func.0, self.input_bytes_of(&spec))
-            } else {
-                self.costs.estimate_job_us(spec.func.0)
-            };
-            estimate.map(|us| us.round().max(1.0) as u64).unwrap_or(0)
-        } else {
-            0
-        };
         if est > 0 {
             self.est_charged.insert(job, est);
             *self.est_load.entry(target).or_default() += est;
@@ -1064,9 +1181,8 @@ impl<'a> Master<'a> {
         );
         *self.load.entry(target).or_default() += 1;
         self.pending.insert(job);
-        let _ = self
-            .comm
-            .send(target, TAG_CTRL, FwMsg::Assign { spec, sources });
+        self.coal
+            .send(self.comm, self.metrics, target, FwMsg::Assign { spec, sources });
     }
 
     /// Free `job`'s stored/kept result and drop the master-side location
@@ -1076,8 +1192,13 @@ impl<'a> Master<'a> {
     /// prefetch hint — under `Lagged`, the policy that exists to bound
     /// mid-run memory, those copies must not outlive the result.
     fn release_result(&mut self, job: JobId) {
-        for &s in &self.cfg.subs {
-            let _ = self.comm.send(s, TAG_CTRL, FwMsg::ReleaseResult { job });
+        // Broadcast storms (a drained lag window frees many results at
+        // once) are a main coalescing payload: one frame per sub instead
+        // of one send per (result, sub) pair.
+        for i in 0..self.cfg.subs.len() {
+            let s = self.cfg.subs[i];
+            self.coal
+                .send(self.comm, self.metrics, s, FwMsg::ReleaseResult { job });
         }
         self.available.remove(&job);
         self.owners.remove(&job);
@@ -1099,20 +1220,30 @@ impl<'a> Master<'a> {
             let Some(loc) = self.owners.get(job) else {
                 return Err(Error::ResultNotAvailable(*job));
             };
-            let _ = self.comm.send(
-                loc.owner,
-                TAG_CTRL,
+            let owner = loc.owner;
+            self.coal.send(
+                self.comm,
+                self.metrics,
+                owner,
                 FwMsg::FetchResult { job: *job, range: ChunkRange::All, reply_to: me },
             );
             expected.insert(*job);
         }
+        // The loop below blocks: everything buffered must be on the wire.
+        self.coal.flush_all(self.comm, self.metrics);
         let mut out = BTreeMap::new();
+        let mut queue: VecDeque<FwMsg> = VecDeque::new();
         while !expected.is_empty() {
-            let env = self
-                .comm
-                .recv()
-                .map_err(|_| Error::WorldShutdown(me))?;
-            match env.into_user() {
+            let msg = match queue.pop_front() {
+                Some(m) => m,
+                None => self
+                    .comm
+                    .recv()
+                    .map_err(|_| Error::WorldShutdown(me))?
+                    .into_user(),
+            };
+            match msg {
+                FwMsg::Batch(msgs) => queue.extend(msgs),
                 FwMsg::ResultData { job, data } => {
                     if expected.remove(&job) {
                         out.insert(job, data);
@@ -1128,8 +1259,13 @@ impl<'a> Master<'a> {
     }
 
     fn broadcast_shutdown(&mut self) {
-        for &s in &self.cfg.subs {
-            let _ = self.comm.send(s, TAG_CTRL, FwMsg::Shutdown);
+        for i in 0..self.cfg.subs.len() {
+            let s = self.cfg.subs[i];
+            // Flushes the sub's buffer first: a `Shutdown` must never
+            // overtake buffered control traffic to the same sub.
+            let _ = self
+                .coal
+                .send_now(self.comm, self.metrics, s, FwMsg::Shutdown);
         }
     }
 }
@@ -1144,8 +1280,22 @@ mod tests {
     }
 
     /// Master plus one live "sub-scheduler" mailbox so tests can observe
-    /// what the master actually sends.
+    /// what the master actually sends.  Coalescing is off here so sends
+    /// are immediately observable; [`with_batching_master_and_sub`] is the
+    /// buffered variant.
     fn with_master_and_sub(f: impl FnOnce(&mut Master<'_>, &mut Comm<FwMsg>)) {
+        let ctrl = CtrlBatchCfg { enabled: false, ..CtrlBatchCfg::default() };
+        with_master_and_sub_ctrl(ctrl, f);
+    }
+
+    fn with_batching_master_and_sub(f: impl FnOnce(&mut Master<'_>, &mut Comm<FwMsg>)) {
+        with_master_and_sub_ctrl(CtrlBatchCfg::default(), f);
+    }
+
+    fn with_master_and_sub_ctrl(
+        ctrl: CtrlBatchCfg,
+        f: impl FnOnce(&mut Master<'_>, &mut Comm<FwMsg>),
+    ) {
         let world: World<FwMsg> = World::new(CostModel::default());
         let mut comm = world.add_rank();
         let mut sub = world.add_rank();
@@ -1159,6 +1309,7 @@ mod tests {
             cost_ewma_alpha: 0.3,
             comm_aware: true,
             comm: world.calibration(),
+            ctrl_batch: ctrl,
         };
         let mut m = Master::new(&mut comm, cfg, &metrics);
         f(&mut m, &mut sub);
@@ -1255,6 +1406,38 @@ mod tests {
             assert!(m.prefetch_hints.is_empty(), "hint window must re-open");
             let env = sub.try_recv().unwrap().expect("cancel hint sent on re-entry");
             assert!(matches!(env.into_user(), FwMsg::ReleaseResult { job } if job == JobId(7)));
+        });
+    }
+
+    #[test]
+    fn batched_assigns_coalesce_into_one_wire_frame() {
+        // With ctrl batching on, back-to-back Assigns to the same sub stay
+        // buffered until the pass-boundary flush, then travel as ONE Batch
+        // frame whose members preserve send order (DESIGN.md §12).
+        with_batching_master_and_sub(|m, sub| {
+            m.specs.insert(JobId(1), JobSpec::new(1, 5, 1));
+            m.specs.insert(JobId(2), JobSpec::new(2, 5, 1));
+            m.assign(JobId(1));
+            m.assign(JobId(2));
+            assert!(
+                sub.try_recv().unwrap().is_none(),
+                "assigns must buffer until the pass boundary"
+            );
+            m.coal.flush_all(m.comm, m.metrics);
+            let env = sub.try_recv().unwrap().expect("flushed batch");
+            match env.into_user() {
+                FwMsg::Batch(msgs) => {
+                    assert_eq!(msgs.len(), 2);
+                    assert!(
+                        matches!(&msgs[0], FwMsg::Assign { spec, .. } if spec.id == JobId(1))
+                    );
+                    assert!(
+                        matches!(&msgs[1], FwMsg::Assign { spec, .. } if spec.id == JobId(2))
+                    );
+                }
+                other => panic!("expected Batch, got {other:?}"),
+            }
+            assert!(sub.try_recv().unwrap().is_none(), "exactly one frame");
         });
     }
 

@@ -29,9 +29,12 @@ pub mod placement;
 pub mod store;
 pub mod sub;
 
-use crate::comm::{Rank, Tag, WireSize};
+use std::time::{Duration, Instant};
+
+use crate::comm::{wire_size_sum, Comm, Rank, Tag, WireSize};
 use crate::data::FunctionData;
 use crate::job::{ChunkRange, Injection, JobId, JobSpec, ThreadCount};
+use crate::metrics::MetricsCollector;
 
 /// The single user tag of the control plane (matching is by content, the
 /// event loops consume everything).
@@ -246,16 +249,35 @@ pub enum FwMsg {
         /// Measured execution microseconds (0 on pull replies).
         exec_us: u64,
     },
+
+    // ------------------------------------------------- coalesced frames
+    /// Coalesced control frame (DESIGN.md §12): several same-destination
+    /// control messages shipped as one send.  Receivers unwrap the members
+    /// **in order**, so per-(src,dst) FIFO delivery carries through
+    /// batching — the §10 `CachePush`-before-`Exec` invariant holds
+    /// exactly as on the unbatched wire.  Producers never nest batches
+    /// (a frame contains only plain messages), but every receiver unwraps
+    /// depth-first anyway, so a nested frame would still flatten in order.
+    Batch(Vec<FwMsg>),
 }
+
+/// Per-entry wire charge of a [`SourceLoc`] hint (job id + owner rank +
+/// kept-on option).  Shared by `Assign` and `Prefetch` so a source-location
+/// hint costs the same wherever it rides and the α/β calibration stays
+/// honest when hints move between message kinds (DESIGN.md §12).
+const SRC_LOC_BYTES: usize = 24;
+/// Per-entry wire charge of a spec's input chunk reference.
+const CHUNK_REF_BYTES: usize = 24;
 
 impl WireSize for FwMsg {
     fn wire_size(&self) -> usize {
         const CTRL: usize = 32; // envelope-ish fixed cost of control fields
         match self {
             FwMsg::Assign { spec, sources } => {
-                CTRL + spec.inputs.len() * 24 + sources.len() * 24
+                CTRL + spec.inputs.len() * CHUNK_REF_BYTES
+                    + sources.len() * SRC_LOC_BYTES
             }
-            FwMsg::Prefetch { sources, .. } => CTRL + sources.len() * 24,
+            FwMsg::Prefetch { sources, .. } => CTRL + sources.len() * SRC_LOC_BYTES,
             FwMsg::Exec(req) => CTRL + req.shipped_bytes(),
             FwMsg::ExecDone { data, injections, .. } => {
                 CTRL + data.as_ref().map_or(0, |d| d.size_bytes())
@@ -271,7 +293,190 @@ impl WireSize for FwMsg {
             FwMsg::WorkerLostReport { lost, running, .. } => {
                 CTRL + (lost.len() + running.len()) * 8
             }
+            // One frame charge for the batch, then exactly the members'
+            // own sizes: coalescing saves (n-1) CTRL charges plus (n-1)
+            // transport headers per flush, and nothing else — the data
+            // bytes are priced identically to n individual sends.
+            FwMsg::Batch(inner) => CTRL + wire_size_sum(inner),
             _ => CTRL,
+        }
+    }
+}
+
+// ===================================================== control batching
+
+/// Control-plane batching knobs (DESIGN.md §12), shared by the master,
+/// the sub-schedulers and the workers.
+#[derive(Debug, Clone, Copy)]
+pub struct CtrlBatchCfg {
+    /// Master switch (config knob `ctrl_batching`).  Off = every control
+    /// message is sent individually and the master handles one message
+    /// per receive — exactly the PR 5 control plane, pinned by
+    /// `prop_ctrl_batching_off_is_pr5`.
+    pub enabled: bool,
+    /// Flush a destination's buffer once it holds this many messages
+    /// (config knob `ctrl_batch_max_msgs`).
+    pub max_msgs: usize,
+    /// Flush everything once the oldest buffered message has waited this
+    /// long (config knob `ctrl_batch_max_delay_us`).  Bounds the latency a
+    /// message can accrue *inside* one long event-loop pass; the loops
+    /// additionally flush at every pass boundary, before blocking.
+    pub max_delay: Duration,
+}
+
+impl Default for CtrlBatchCfg {
+    fn default() -> Self {
+        CtrlBatchCfg {
+            enabled: true,
+            max_msgs: 64,
+            max_delay: Duration::from_micros(200),
+        }
+    }
+}
+
+/// Per-destination control-message coalescer (DESIGN.md §12).
+///
+/// Buffers same-destination control messages and ships each destination's
+/// run as one [`FwMsg::Batch`] frame, on three triggers: a destination
+/// buffer reaching `max_msgs` (count), the oldest buffered message
+/// exceeding `max_delay` (delay), and the owning event loop finishing a
+/// pass ([`Self::flush_all`] before it blocks — the immediate-barrier
+/// trigger).  Messages that need an error-checked immediate send go
+/// through [`Self::send_now`], which flushes the destination's buffer
+/// first — so **every** path preserves per-destination FIFO order and the
+/// §10 `CachePush`-before-`Exec` invariant survives batching.
+///
+/// With `enabled` off, [`Self::send`] degenerates to a plain
+/// `comm.send(dst, TAG_CTRL, msg)` — byte-for-byte the PR 5 wire.
+pub(crate) struct Coalescer {
+    cfg: CtrlBatchCfg,
+    /// Insertion-ordered per-destination buffers.  A `Vec`, not a map: one
+    /// actor talks to a handful of destinations (master + peers + own
+    /// workers), and insertion order gives deterministic flush order.
+    buf: Vec<(Rank, Vec<FwMsg>)>,
+    /// Push time of the oldest still-buffered message (delay trigger).
+    oldest: Option<Instant>,
+}
+
+impl Coalescer {
+    pub fn new(cfg: CtrlBatchCfg) -> Self {
+        Coalescer { cfg, buf: Vec::new(), oldest: None }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Queue `msg` for `dst` (batching on) or send it immediately
+    /// (batching off — the PR 5 path).  Send errors on the buffered path
+    /// surface at flush time and are dropped there, matching the
+    /// fire-and-forget `let _ = send(...)` call sites this replaces.
+    pub fn send(
+        &mut self,
+        comm: &Comm<FwMsg>,
+        metrics: &MetricsCollector,
+        dst: Rank,
+        msg: FwMsg,
+    ) {
+        if !self.cfg.enabled {
+            let _ = comm.send(dst, TAG_CTRL, msg);
+            return;
+        }
+        let idx = match self.buf.iter().position(|(r, _)| *r == dst) {
+            Some(i) => i,
+            None => {
+                self.buf.push((dst, Vec::new()));
+                self.buf.len() - 1
+            }
+        };
+        self.buf[idx].1.push(msg);
+        if self.oldest.is_none() {
+            self.oldest = Some(Instant::now());
+        }
+        if self.buf[idx].1.len() >= self.cfg.max_msgs.max(1) {
+            self.flush_dst(comm, metrics, dst);
+        } else if self
+            .oldest
+            .is_some_and(|t| t.elapsed() >= self.cfg.max_delay)
+        {
+            self.flush_all(comm, metrics);
+        }
+    }
+
+    /// FIFO-preserving immediate send: flush `dst`'s buffer, then send
+    /// `msg` directly, returning the transport's verdict (the dispatch and
+    /// kept-pull paths need the dead-rank error to trigger recovery).
+    pub fn send_now(
+        &mut self,
+        comm: &Comm<FwMsg>,
+        metrics: &MetricsCollector,
+        dst: Rank,
+        msg: FwMsg,
+    ) -> crate::error::Result<()> {
+        self.flush_dst(comm, metrics, dst);
+        comm.send(dst, TAG_CTRL, msg)
+    }
+
+    /// Ship a pre-assembled group as **one** frame right now (the
+    /// multi-source `CachePush` push of DESIGN.md §10/§12): flush `dst`
+    /// first (FIFO), then send a single `Batch` — or the sole member
+    /// unwrapped, or nothing for an empty group.
+    pub fn send_group_now(
+        &mut self,
+        comm: &Comm<FwMsg>,
+        metrics: &MetricsCollector,
+        dst: Rank,
+        mut msgs: Vec<FwMsg>,
+    ) -> crate::error::Result<()> {
+        self.flush_dst(comm, metrics, dst);
+        match msgs.len() {
+            0 => Ok(()),
+            1 => comm.send(dst, TAG_CTRL, msgs.pop().expect("len checked")),
+            n => {
+                metrics.ctrl_batch_flushed(n);
+                comm.send(dst, TAG_CTRL, FwMsg::Batch(msgs))
+            }
+        }
+    }
+
+    /// Flush one destination's buffer (count trigger / pre-direct-send).
+    pub fn flush_dst(&mut self, comm: &Comm<FwMsg>, metrics: &MetricsCollector, dst: Rank) {
+        let Some(pos) = self
+            .buf
+            .iter()
+            .position(|(r, v)| *r == dst && !v.is_empty())
+        else {
+            return;
+        };
+        let msgs = std::mem::take(&mut self.buf[pos].1);
+        Self::ship(comm, metrics, dst, msgs);
+        if self.buf.iter().all(|(_, v)| v.is_empty()) {
+            self.oldest = None;
+        }
+    }
+
+    /// Flush every buffered destination, in first-buffered order (the
+    /// pass-boundary trigger — called before the event loop blocks).
+    pub fn flush_all(&mut self, comm: &Comm<FwMsg>, metrics: &MetricsCollector) {
+        if self.oldest.is_none() {
+            return; // cheap no-op on every quiet loop pass
+        }
+        for (dst, msgs) in &mut self.buf {
+            if !msgs.is_empty() {
+                Self::ship(comm, metrics, *dst, std::mem::take(msgs));
+            }
+        }
+        self.oldest = None;
+    }
+
+    fn ship(comm: &Comm<FwMsg>, metrics: &MetricsCollector, dst: Rank, mut msgs: Vec<FwMsg>) {
+        if msgs.len() == 1 {
+            // A lone message needs no frame — identical to the unbatched
+            // wire, so a quiet run pays zero batching overhead.
+            let _ = comm.send(dst, TAG_CTRL, msgs.pop().expect("len checked"));
+        } else {
+            metrics.ctrl_batch_flushed(msgs.len());
+            let _ = comm.send(dst, TAG_CTRL, FwMsg::Batch(msgs));
         }
     }
 }
@@ -279,6 +484,7 @@ impl WireSize for FwMsg {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::{CostModel, World};
     use crate::data::DataChunk;
 
     #[test]
@@ -305,5 +511,156 @@ mod tests {
             data: FunctionData::from_chunks(vec![DataChunk::from_f32(vec![0.0; 1000])]),
         };
         assert!(big.wire_size() > small.wire_size() + 3000);
+    }
+
+    #[test]
+    fn batch_wire_size_is_ctrl_plus_sum_of_inner() {
+        let inner = vec![
+            FwMsg::JobDone {
+                job: JobId(1),
+                kept_on: None,
+                output_bytes: 0,
+                chunks: 0,
+                injections: vec![],
+                exec_us: 5,
+            },
+            FwMsg::ReleaseResult { job: JobId(2) },
+            FwMsg::ResultData {
+                job: JobId(3),
+                data: FunctionData::of_f32(vec![0.0; 10]),
+            },
+        ];
+        let sum: usize = inner.iter().map(|m| m.wire_size()).sum();
+        assert_eq!(FwMsg::Batch(inner).wire_size(), 32 + sum);
+        assert_eq!(FwMsg::Batch(Vec::new()).wire_size(), 32);
+    }
+
+    #[test]
+    fn assign_and_prefetch_charge_sources_at_the_same_rate() {
+        // Satellite of DESIGN.md §12: a per-source location hint must cost
+        // the same whether it rides an Assign or a Prefetch, so moving
+        // hints between the two (as coalescing does) never skews the α/β
+        // calibration.
+        let src = |j: u32| SourceLoc { job: JobId(j), owner: Rank(1), kept_on: None };
+        let assign = |n: u32| FwMsg::Assign {
+            spec: JobSpec::new(9, 1, 1),
+            sources: (0..n).map(src).collect(),
+        };
+        let prefetch = |n: u32| FwMsg::Prefetch {
+            job: JobId(9),
+            threads: ThreadCount::Exact(1),
+            sources: (0..n).map(src).collect(),
+        };
+        let da = assign(4).wire_size() - assign(1).wire_size();
+        let dp = prefetch(4).wire_size() - prefetch(1).wire_size();
+        assert_eq!(da, dp, "per-source hint rate differs between Assign and Prefetch");
+        assert_eq!(dp, 3 * SRC_LOC_BYTES);
+    }
+
+    #[test]
+    fn coalescer_off_sends_each_message_immediately_and_unbatched() {
+        let world: World<FwMsg> = World::new(CostModel::free());
+        let a = world.add_rank();
+        let mut b = world.add_rank();
+        let metrics = MetricsCollector::new();
+        let mut coal =
+            Coalescer::new(CtrlBatchCfg { enabled: false, ..Default::default() });
+        for j in 0..3 {
+            coal.send(&a, &metrics, b.rank(), FwMsg::ReleaseResult { job: JobId(j) });
+        }
+        for j in 0..3 {
+            let env = b.try_recv().unwrap().expect("off-knob sends are immediate");
+            assert!(
+                matches!(env.into_user(), FwMsg::ReleaseResult { job } if job == JobId(j)),
+                "off-knob wire must be the plain PR 5 message sequence"
+            );
+        }
+        assert!(b.try_recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn coalescer_flushes_one_frame_per_destination_preserving_fifo() {
+        let world: World<FwMsg> = World::new(CostModel::free());
+        let a = world.add_rank();
+        let mut b = world.add_rank();
+        let mut c = world.add_rank();
+        let metrics = MetricsCollector::new();
+        let mut coal = Coalescer::new(CtrlBatchCfg::default());
+        for j in 0..3 {
+            coal.send(&a, &metrics, b.rank(), FwMsg::ReleaseResult { job: JobId(j) });
+        }
+        coal.send(&a, &metrics, c.rank(), FwMsg::ReleaseResult { job: JobId(7) });
+        coal.send(&a, &metrics, c.rank(), FwMsg::ReleaseResult { job: JobId(8) });
+        // Nothing on the wire before the pass-boundary flush.
+        assert!(b.try_recv().unwrap().is_none());
+        coal.flush_all(&a, &metrics);
+        let env = b.try_recv().unwrap().expect("one frame for b");
+        match env.into_user() {
+            FwMsg::Batch(msgs) => {
+                let jobs: Vec<u32> = msgs
+                    .iter()
+                    .map(|m| match m {
+                        FwMsg::ReleaseResult { job } => job.0,
+                        other => panic!("unexpected member {other:?}"),
+                    })
+                    .collect();
+                assert_eq!(jobs, vec![0, 1, 2], "members must keep send order");
+            }
+            other => panic!("expected Batch, got {other:?}"),
+        }
+        assert!(b.try_recv().unwrap().is_none(), "exactly one send to b");
+        assert!(matches!(
+            c.try_recv().unwrap().expect("one frame for c").into_user(),
+            FwMsg::Batch(msgs) if msgs.len() == 2
+        ));
+        let snap = metrics
+            .finish(crate::comm::StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        assert_eq!(snap.ctrl_batches, 2);
+        assert_eq!(snap.ctrl_msgs_coalesced, 5);
+        assert_eq!(snap.ctrl_batch_max, 3);
+    }
+
+    #[test]
+    fn coalescer_count_trigger_and_send_now_keep_fifo() {
+        let world: World<FwMsg> = World::new(CostModel::free());
+        let a = world.add_rank();
+        let mut b = world.add_rank();
+        let metrics = MetricsCollector::new();
+        let mut coal = Coalescer::new(CtrlBatchCfg {
+            enabled: true,
+            max_msgs: 2,
+            max_delay: Duration::from_secs(3600),
+        });
+        // Count trigger: the second push flushes a 2-frame.
+        coal.send(&a, &metrics, b.rank(), FwMsg::ReleaseResult { job: JobId(1) });
+        coal.send(&a, &metrics, b.rank(), FwMsg::ReleaseResult { job: JobId(2) });
+        // Buffer one more, then an immediate send must drain it first.
+        coal.send(&a, &metrics, b.rank(), FwMsg::ReleaseResult { job: JobId(3) });
+        coal.send_now(&a, &metrics, b.rank(), FwMsg::Shutdown).unwrap();
+        let mut seen: Vec<FwMsg> = Vec::new();
+        while let Some(env) = b.try_recv().unwrap() {
+            match env.into_user() {
+                FwMsg::Batch(msgs) => seen.extend(msgs),
+                m => seen.push(m),
+            }
+        }
+        let order: Vec<String> = seen.iter().map(|m| format!("{m:?}")).collect();
+        assert!(
+            matches!(seen[0], FwMsg::ReleaseResult { job } if job == JobId(1)),
+            "{order:?}"
+        );
+        assert!(matches!(seen[1], FwMsg::ReleaseResult { job } if job == JobId(2)));
+        assert!(
+            matches!(seen[2], FwMsg::ReleaseResult { job } if job == JobId(3)),
+            "send_now must flush the destination buffer first: {order:?}"
+        );
+        assert!(matches!(seen[3], FwMsg::Shutdown));
+        // A lone buffered message ships unwrapped (no 1-element frames).
+        coal.send(&a, &metrics, b.rank(), FwMsg::ReleaseResult { job: JobId(9) });
+        coal.flush_all(&a, &metrics);
+        assert!(matches!(
+            b.try_recv().unwrap().expect("flushed").into_user(),
+            FwMsg::ReleaseResult { job } if job == JobId(9)
+        ));
     }
 }

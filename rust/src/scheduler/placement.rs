@@ -382,6 +382,24 @@ pub fn best_fit(
         .map(|w| w.rank)
 }
 
+/// Bulk LPT ordering for an amortised assignment pass (DESIGN.md §12).
+///
+/// When control-plane batching lets the master drain a whole mailbox of
+/// completions before scheduling, the ready frontier it then assigns is
+/// *many* jobs, not one — and greedy least-loaded placement is famously
+/// order-sensitive.  Longest-Processing-Time-first fixes the worst case:
+/// sort the frontier by estimated cost descending before running the
+/// existing sequential greedy (which charges `est_load` per placement),
+/// so the big rocks land first and the pebbles fill the gaps.  Cold
+/// estimates (all zeros) sort by `JobId` ascending, reproducing the
+/// plain ready-queue order, and the caller skips this entirely when the
+/// `ctrl_batching` knob is off or the frontier is a single job — keeping
+/// the off-knob path the PR 5 order bit-for-bit.
+pub fn bulk_assign_order(mut jobs: Vec<(JobId, u64)>) -> Vec<(JobId, u64)> {
+    jobs.sort_by(|a, b| b.1.cmp(&a.1).then(a.0 .0.cmp(&b.0 .0)));
+    jobs
+}
+
 /// Outcome of [`choose_worker`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WorkerChoice {
@@ -925,6 +943,25 @@ mod tests {
         let j = JobSpec::new(9, 1, 2);
         // Both fit; best-fit picks b (surplus 0 < surplus 1).
         assert_eq!(choose_worker(&j, None, &[a, b]), WorkerChoice::Run(Rank(2)));
+    }
+
+    #[test]
+    fn bulk_assign_order_is_lpt_and_deterministic() {
+        // Costly jobs first; equal costs (including the all-cold case)
+        // fall back to JobId order so the pass is reproducible.
+        let ordered = bulk_assign_order(vec![
+            (JobId(4), 100),
+            (JobId(1), 5000),
+            (JobId(3), 100),
+            (JobId(2), 0),
+        ]);
+        assert_eq!(
+            ordered,
+            vec![(JobId(1), 5000), (JobId(3), 100), (JobId(4), 100), (JobId(2), 0)]
+        );
+        // A cold cost table degrades to plain ready-queue (id) order.
+        let cold = bulk_assign_order(vec![(JobId(9), 0), (JobId(2), 0), (JobId(5), 0)]);
+        assert_eq!(cold, vec![(JobId(2), 0), (JobId(5), 0), (JobId(9), 0)]);
     }
 
     #[test]

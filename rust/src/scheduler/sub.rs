@@ -25,7 +25,7 @@ use crate::worker::{run_worker, WorkerConfig};
 
 use super::placement::{best_fit, choose_worker_preferring, WorkerChoice, WorkerSlot};
 use super::store::ResultStore;
-use super::{ExecRequest, FwMsg, InputPart, SourceLoc, TAG_CTRL};
+use super::{Coalescer, CtrlBatchCfg, ExecRequest, FwMsg, InputPart, SourceLoc};
 
 /// Sub-scheduler runtime parameters.
 #[derive(Clone)]
@@ -48,6 +48,10 @@ pub struct SubConfig {
     pub worker: WorkerConfig,
     /// Liveness tick (worker-loss detection granularity).
     pub tick: Duration,
+    /// Control-plane coalescing (DESIGN.md §12): buffer same-destination
+    /// control messages into `Batch` frames, flushed at pass boundaries.
+    /// Disabled = the PR 5 one-send-per-message control plane.
+    pub ctrl_batch: CtrlBatchCfg,
 }
 
 /// One input part being resolved.
@@ -116,6 +120,8 @@ pub struct SubScheduler {
     /// Peer `FetchResult`s waiting on a `PullKept` round-trip:
     /// source job → (range, reply_to).
     pending_serves: HashMap<JobId, Vec<(ChunkRange, Rank)>>,
+    /// Per-destination control-message coalescer (DESIGN.md §12).
+    coal: Coalescer,
 }
 
 impl SubScheduler {
@@ -127,11 +133,13 @@ impl SubScheduler {
         cfg: SubConfig,
         metrics: Arc<MetricsCollector>,
     ) -> Self {
+        let coal = Coalescer::new(cfg.ctrl_batch);
         SubScheduler {
             comm,
             world,
             cfg,
             metrics,
+            coal,
             workers: HashMap::new(),
             store: ResultStore::new(),
             kept_index: HashMap::new(),
@@ -158,7 +166,20 @@ impl SubScheduler {
             match self.comm.recv_match_timeout(Match::any(), self.cfg.tick) {
                 Ok(Some(env)) => {
                     let src = env.src;
-                    if !self.handle(src, env.into_user()) {
+                    let mut done = !self.handle(src, env.into_user());
+                    // Batched passes (DESIGN.md §12): greedily drain what
+                    // is already queued so liveness + dispatch + flush run
+                    // once per burst instead of once per message.
+                    while !done && self.coal.enabled() {
+                        match self.comm.try_recv() {
+                            Ok(Some(env)) => {
+                                let src = env.src;
+                                done = !self.handle(src, env.into_user());
+                            }
+                            _ => break,
+                        }
+                    }
+                    if done {
                         break;
                     }
                 }
@@ -167,7 +188,14 @@ impl SubScheduler {
             }
             self.check_worker_liveness();
             self.try_dispatch();
+            // Pass boundary: the loop is about to block, so nothing more
+            // will join the buffers — ship them (the immediate-barrier
+            // flush trigger of DESIGN.md §12).
+            self.coal.flush_all(&self.comm, &self.metrics);
         }
+        // Anything buffered in the same drain that delivered `Shutdown`
+        // must still ship before the workers go down.
+        self.coal.flush_all(&self.comm, &self.metrics);
         self.shutdown_workers();
     }
 
@@ -203,9 +231,18 @@ impl SubScheduler {
             }
             FwMsg::ExecFailed { job, msg } => {
                 self.forget_running(from, job);
-                let _ = self
-                    .comm
-                    .send(self.cfg.master, TAG_CTRL, FwMsg::JobError { job, msg });
+                let master = self.cfg.master;
+                self.coal
+                    .send(&self.comm, &self.metrics, master, FwMsg::JobError { job, msg });
+            }
+            FwMsg::Batch(msgs) => {
+                // Coalesced frame (DESIGN.md §12): members apply in order,
+                // so the per-(src,dst) FIFO guarantee carries through.
+                for m in msgs {
+                    if !self.handle(from, m) {
+                        return false;
+                    }
+                }
             }
             FwMsg::KeptData { job, data, .. } => {
                 // A worker uploaded a retained result (PullKept reply).
@@ -293,9 +330,10 @@ impl SubScheduler {
                         }
                     } else {
                         if self.fetch_inflight.insert(src) {
-                            let _ = self.comm.send(
+                            self.coal.send(
+                                &self.comm,
+                                &self.metrics,
                                 owner,
-                                TAG_CTRL,
                                 FwMsg::FetchResult {
                                     job: src,
                                     range: ChunkRange::All,
@@ -341,13 +379,14 @@ impl SubScheduler {
     /// zero bytes.
     fn on_prefetch(&mut self, threads: ThreadCount, sources: Vec<SourceLoc>) {
         let me = self.comm.rank();
+        let mut warm: Vec<JobId> = Vec::new();
         for loc in sources {
             let src = loc.job;
             if loc.owner == me {
                 continue;
             }
             if self.store.contains(src) {
-                self.push_to_worker(src, threads);
+                warm.push(src);
                 continue;
             }
             if self.cfg.kept_prefetch {
@@ -355,13 +394,15 @@ impl SubScheduler {
             }
             if self.fetch_inflight.insert(src) {
                 self.prefetched.insert(src);
-                let _ = self.comm.send(
+                self.coal.send(
+                    &self.comm,
+                    &self.metrics,
                     loc.owner,
-                    TAG_CTRL,
                     FwMsg::FetchResult { job: src, range: ChunkRange::All, reply_to: me },
                 );
             }
         }
+        self.push_sources_to_worker(warm, threads);
     }
 
     /// Kept-result prefetch push (DESIGN.md §10): predict the worker a job
@@ -378,11 +419,56 @@ impl SubScheduler {
         let Some(worker) = best_fit(threads, &[], &slots) else { return };
         let Ok(data) = self.store.read(src, ChunkRange::All) else { return };
         if self
-            .comm
-            .send(worker, TAG_CTRL, FwMsg::CachePush { job: src, data })
+            .coal
+            .send_now(&self.comm, &self.metrics, worker, FwMsg::CachePush { job: src, data })
             .is_ok()
         {
             self.cache_pushed.insert(src, (worker, false));
+            self.metrics.kept_prefetch_pushed();
+        } else {
+            self.check_worker_liveness();
+        }
+    }
+
+    /// Multi-source variant of [`Self::push_to_worker`] for a `Prefetch`
+    /// hint whose sources are already warm in the store: predict the
+    /// target worker once and, with coalescing on, ship every pushed copy
+    /// in a single `Batch` frame counted once in `kept_prefetch_pushes`
+    /// (DESIGN.md §12).  With coalescing off this is exactly the PR 5
+    /// per-source push loop, per-source counting included.
+    fn push_sources_to_worker(&mut self, srcs: Vec<JobId>, threads: ThreadCount) {
+        if !self.cfg.kept_prefetch || srcs.is_empty() {
+            return;
+        }
+        if !self.coal.enabled() {
+            for src in srcs {
+                self.push_to_worker(src, threads);
+            }
+            return;
+        }
+        let slots: Vec<WorkerSlot> = self.workers.values().map(|w| w.slot.clone()).collect();
+        let Some(worker) = best_fit(threads, &[], &slots) else { return };
+        let mut msgs = Vec::new();
+        let mut pushed = Vec::new();
+        for src in srcs {
+            if self.cache_pushed.contains_key(&src) {
+                continue;
+            }
+            let Ok(data) = self.store.read(src, ChunkRange::All) else { continue };
+            msgs.push(FwMsg::CachePush { job: src, data });
+            pushed.push(src);
+        }
+        if msgs.is_empty() {
+            return;
+        }
+        if self
+            .coal
+            .send_group_now(&self.comm, &self.metrics, worker, msgs)
+            .is_ok()
+        {
+            for src in pushed {
+                self.cache_pushed.insert(src, (worker, false));
+            }
             self.metrics.kept_prefetch_pushed();
         } else {
             self.check_worker_liveness();
@@ -393,8 +479,8 @@ impl SubScheduler {
         if self.fetch_inflight.insert(src) {
             if let Some(&w) = self.kept_index.get(&src) {
                 if self
-                    .comm
-                    .send(w, TAG_CTRL, FwMsg::PullKept { job: src })
+                    .coal
+                    .send_now(&self.comm, &self.metrics, w, FwMsg::PullKept { job: src })
                     .is_err()
                 {
                     // Worker died between bookkeeping and pull.
@@ -424,9 +510,11 @@ impl SubScheduler {
                                 // Range invalid against the fetched result —
                                 // permanent user error.
                                 self.pending.remove(&dep);
-                                let _ = self.comm.send(
-                                    self.cfg.master,
-                                    TAG_CTRL,
+                                let master = self.cfg.master;
+                                self.coal.send(
+                                    &self.comm,
+                                    &self.metrics,
+                                    master,
                                     FwMsg::JobError { job: dep, msg: e.to_string() },
                                 );
                                 break;
@@ -465,9 +553,11 @@ impl SubScheduler {
         }
         self.pending.remove(&job);
         self.ready.retain(|&j| j != job);
-        let _ = self.comm.send(
-            self.cfg.master,
-            TAG_CTRL,
+        let master = self.cfg.master;
+        self.coal.send(
+            &self.comm,
+            &self.metrics,
+            master,
             FwMsg::JobError { job, msg: e.to_string() },
         );
     }
@@ -479,65 +569,59 @@ impl SubScheduler {
         }
         self.pending.remove(&job);
         self.ready.retain(|&j| j != job);
-        let _ = self.comm.send(
-            self.cfg.master,
-            TAG_CTRL,
+        let master = self.cfg.master;
+        self.coal.send(
+            &self.comm,
+            &self.metrics,
+            master,
             FwMsg::JobAborted { job, missing },
         );
     }
 
     fn serve_fetch(&mut self, job: JobId, range: ChunkRange, reply_to: Rank) {
         if self.store.contains(job) {
-            match self.store.read(job, range) {
-                Ok(data) => {
-                    let _ = self
-                        .comm
-                        .send(reply_to, TAG_CTRL, FwMsg::ResultData { job, data });
-                }
-                Err(_) => {
-                    let _ = self.comm.send(
-                        reply_to,
-                        TAG_CTRL,
+            let reply = match self.store.read(job, range) {
+                Ok(data) => FwMsg::ResultData { job, data },
+                Err(_) => FwMsg::ResultUnavailable { job },
+            };
+            self.coal.send(&self.comm, &self.metrics, reply_to, reply);
+        } else if let Some(&w) = self.kept_index.get(&job) {
+            // Pull from the retaining worker, serve when it arrives.
+            self.pending_serves.entry(job).or_default().push((range, reply_to));
+            if self
+                .coal
+                .send_now(&self.comm, &self.metrics, w, FwMsg::PullKept { job })
+                .is_err()
+            {
+                self.check_worker_liveness();
+                // Liveness pass reported the loss; answer unavailable.
+                for (_, r) in self.pending_serves.remove(&job).unwrap_or_default() {
+                    self.coal.send(
+                        &self.comm,
+                        &self.metrics,
+                        r,
                         FwMsg::ResultUnavailable { job },
                     );
                 }
             }
-        } else if let Some(&w) = self.kept_index.get(&job) {
-            // Pull from the retaining worker, serve when it arrives.
-            self.pending_serves.entry(job).or_default().push((range, reply_to));
-            if self.comm.send(w, TAG_CTRL, FwMsg::PullKept { job }).is_err() {
-                self.check_worker_liveness();
-                // Liveness pass reported the loss; answer unavailable.
-                for (_, r) in self.pending_serves.remove(&job).unwrap_or_default() {
-                    let _ = self
-                        .comm
-                        .send(r, TAG_CTRL, FwMsg::ResultUnavailable { job });
-                }
-            }
         } else {
-            let _ = self
-                .comm
-                .send(reply_to, TAG_CTRL, FwMsg::ResultUnavailable { job });
+            self.coal.send(
+                &self.comm,
+                &self.metrics,
+                reply_to,
+                FwMsg::ResultUnavailable { job },
+            );
         }
     }
 
     /// Serve peer fetches queued behind a `PullKept`.
     fn serve_pending(&mut self, job: JobId) {
         for (range, reply_to) in self.pending_serves.remove(&job).unwrap_or_default() {
-            match self.store.read(job, range) {
-                Ok(data) => {
-                    let _ = self
-                        .comm
-                        .send(reply_to, TAG_CTRL, FwMsg::ResultData { job, data });
-                }
-                Err(_) => {
-                    let _ = self.comm.send(
-                        reply_to,
-                        TAG_CTRL,
-                        FwMsg::ResultUnavailable { job },
-                    );
-                }
-            }
+            let reply = match self.store.read(job, range) {
+                Ok(data) => FwMsg::ResultData { job, data },
+                Err(_) => FwMsg::ResultUnavailable { job },
+            };
+            self.coal.send(&self.comm, &self.metrics, reply_to, reply);
         }
     }
 
@@ -559,7 +643,7 @@ impl SubScheduler {
             if let Some(entry) = self.workers.get_mut(&w) {
                 entry.kept.remove(&job);
             }
-            let _ = self.comm.send(w, TAG_CTRL, FwMsg::DropKept { job });
+            self.coal.send(&self.comm, &self.metrics, w, FwMsg::DropKept { job });
         }
     }
 
@@ -568,7 +652,7 @@ impl SubScheduler {
     /// ever consumed it (the push was wasted).
     fn drop_pushed_copy(&mut self, src: JobId) {
         let Some((worker, hit)) = self.cache_pushed.remove(&src) else { return };
-        let _ = self.comm.send(worker, TAG_CTRL, FwMsg::DropKept { job: src });
+        self.coal.send(&self.comm, &self.metrics, worker, FwMsg::DropKept { job: src });
         if !hit {
             self.metrics.kept_prefetch_cancelled();
         }
@@ -603,10 +687,13 @@ impl SubScheduler {
         let _ = spec; // cores already vacated in forget_running
         self.metrics.job_finished(job, output_bytes);
         // The observed execution time rides along: the master's cost model
-        // feeds on it (DESIGN.md §9).
-        let _ = self.comm.send(
-            self.cfg.master,
-            TAG_CTRL,
+        // feeds on it (DESIGN.md §9).  Completion storms are the main
+        // coalescing payload (DESIGN.md §12).
+        let master = self.cfg.master;
+        self.coal.send(
+            &self.comm,
+            &self.metrics,
+            master,
             FwMsg::JobDone { job, kept_on, output_bytes, chunks, injections, exec_us },
         );
     }
@@ -731,7 +818,13 @@ impl SubScheduler {
         let spec = pj.spec.clone();
         let req = ExecRequest { spec: spec.clone(), input };
         self.metrics.job_started(job, worker.0);
-        if self.comm.send(worker, TAG_CTRL, FwMsg::Exec(req)).is_err() {
+        // `send_now` flushes the worker's buffer first, so an `Exec` can
+        // never overtake a buffered `DropKept` for one of its inputs.
+        if self
+            .coal
+            .send_now(&self.comm, &self.metrics, worker, FwMsg::Exec(req))
+            .is_err()
+        {
             // Worker died in the window: report and requeue via master.
             self.pending.insert(job, pj);
             self.ready.push_back(job);
@@ -798,9 +891,10 @@ impl SubScheduler {
             // Peer fetches waiting on this worker's kept data fail now.
             for j in &lost {
                 for (_, reply_to) in self.pending_serves.remove(j).unwrap_or_default() {
-                    let _ = self.comm.send(
+                    self.coal.send(
+                        &self.comm,
+                        &self.metrics,
                         reply_to,
-                        TAG_CTRL,
                         FwMsg::ResultUnavailable { job: *j },
                     );
                 }
@@ -845,9 +939,11 @@ impl SubScheduler {
                 self.ready.retain(|&j| j != dep);
                 self.abort_job(dep, missing);
             }
-            let _ = self.comm.send(
-                self.cfg.master,
-                TAG_CTRL,
+            let master = self.cfg.master;
+            self.coal.send(
+                &self.comm,
+                &self.metrics,
+                master,
                 FwMsg::WorkerLostReport { worker: rank, lost, running },
             );
         }
@@ -857,7 +953,11 @@ impl SubScheduler {
 
     fn shutdown_workers(&mut self) {
         for (rank, entry) in self.workers.iter_mut() {
-            let _ = self.comm.send(*rank, TAG_CTRL, FwMsg::WorkerShutdown);
+            // Flushes the worker's buffer first (any straggling `DropKept`
+            // lands before the shutdown) then ships directly.
+            let _ = self
+                .coal
+                .send_now(&self.comm, &self.metrics, *rank, FwMsg::WorkerShutdown);
             let _ = entry.handle.take().map(|h| h.join());
         }
         self.workers.clear();

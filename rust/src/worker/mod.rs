@@ -38,6 +38,7 @@
 pub mod cache;
 pub mod pool;
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -49,7 +50,7 @@ use crate::job::registry::{FunctionRegistry, JobCtx, UserFunction};
 use crate::job::{Injection, JobId};
 use crate::metrics::MetricsCollector;
 use crate::runtime::{ComputeBackend, EngineFactory};
-use crate::scheduler::{ExecRequest, FwMsg, InputPart, TAG_CTRL};
+use crate::scheduler::{CtrlBatchCfg, ExecRequest, FwMsg, InputPart, TAG_CTRL};
 use cache::KeptCache;
 use pool::{catch_user, PoolConfig, SequencePool};
 
@@ -80,6 +81,71 @@ pub struct WorkerConfig {
     /// Sink for pool counters (steals, busy/idle, per-job imbalance);
     /// `None` in standalone tests.
     pub metrics: Option<Arc<MetricsCollector>>,
+    /// Control-plane batching knobs (DESIGN.md §12): replies to the
+    /// scheduler coalesce through the worker's outbox.
+    pub ctrl_batch: CtrlBatchCfg,
+}
+
+/// Single-destination reply coalescer for the worker → scheduler wire
+/// (DESIGN.md §12).  The worker only ever talks to its one scheduler, so
+/// this is the [`crate::scheduler`] `Coalescer` reduced to one buffer:
+/// replies produced while draining the mailbox queue accumulate and ship
+/// as one [`FwMsg::Batch`] at the pass boundary (before the loop blocks)
+/// or when `max_msgs` is hit.  No delay trigger is needed — the worker
+/// never buffers across a blocking receive, so a reply waits at most one
+/// queue drain.  Off-knob: every push is an immediate send, byte-for-byte
+/// the PR 5 wire.  Pool sequence threads bypass this entirely (they hold
+/// no `&mut` to the main loop's state) and send directly, as before.
+struct Outbox {
+    cfg: CtrlBatchCfg,
+    scheduler: Rank,
+    buf: Vec<FwMsg>,
+}
+
+impl Outbox {
+    fn new(cfg: CtrlBatchCfg, scheduler: Rank) -> Self {
+        Outbox { cfg, scheduler, buf: Vec::new() }
+    }
+
+    fn push(
+        &mut self,
+        to: &CommSender<FwMsg>,
+        metrics: Option<&MetricsCollector>,
+        msg: FwMsg,
+    ) {
+        if !self.cfg.enabled {
+            let _ = to.send(self.scheduler, TAG_CTRL, msg);
+            return;
+        }
+        self.buf.push(msg);
+        if self.buf.len() >= self.cfg.max_msgs.max(1) {
+            self.flush(to, metrics);
+        }
+    }
+
+    fn flush(&mut self, to: &CommSender<FwMsg>, metrics: Option<&MetricsCollector>) {
+        match self.buf.len() {
+            0 => {}
+            1 => {
+                // A lone reply ships unwrapped — no frame overhead.
+                let _ = to.send(
+                    self.scheduler,
+                    TAG_CTRL,
+                    self.buf.pop().expect("len checked"),
+                );
+            }
+            n => {
+                if let Some(m) = metrics {
+                    m.ctrl_batch_flushed(n);
+                }
+                let _ = to.send(
+                    self.scheduler,
+                    TAG_CTRL,
+                    FwMsg::Batch(std::mem::take(&mut self.buf)),
+                );
+            }
+        }
+    }
 }
 
 /// Worker main loop. Runs until `WorkerShutdown` (clean) or an injected
@@ -101,12 +167,24 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
         cfg.metrics.clone(),
     );
 
+    let mut outbox = Outbox::new(cfg.ctrl_batch, scheduler);
+    // Pending messages unwrapped from a received `Batch` frame; drained
+    // before blocking on the mailbox again.
+    let mut queue: VecDeque<FwMsg> = VecDeque::new();
+
     loop {
-        let env = match comm.recv() {
-            Ok(env) => env,
-            Err(_) => return, // world torn down
+        let msg = match queue.pop_front() {
+            Some(m) => m,
+            None => {
+                // Pass boundary: ship buffered replies before blocking.
+                outbox.flush(&comm.sender(), cfg.metrics.as_deref());
+                match comm.recv() {
+                    Ok(env) => env.into_user(),
+                    Err(_) => return, // world torn down
+                }
+            }
         };
-        match env.into_user() {
+        match msg {
             FwMsg::Exec(req) => {
                 let job = req.spec.id;
                 if cfg.fault.should_crash(me, job) {
@@ -121,9 +199,9 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                 let input = match assemble_input(&req, &kept) {
                     Ok(i) => i,
                     Err(e) => {
-                        let _ = comm.send(
-                            scheduler,
-                            TAG_CTRL,
+                        outbox.push(
+                            &comm.sender(),
+                            cfg.metrics.as_deref(),
                             FwMsg::ExecFailed { job, msg: e.to_string() },
                         );
                         continue;
@@ -132,9 +210,9 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                 let func = match cfg.registry.get(req.spec.func) {
                     Ok(f) => f.clone(),
                     Err(e) => {
-                        let _ = comm.send(
-                            scheduler,
-                            TAG_CTRL,
+                        outbox.push(
+                            &comm.sender(),
+                            cfg.metrics.as_deref(),
                             FwMsg::ExecFailed { job, msg: e.to_string() },
                         );
                         continue;
@@ -149,9 +227,9 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                                 match factory() {
                                     Ok(e) => engine = Some(e),
                                     Err(e) => {
-                                        let _ = comm.send(
-                                            scheduler,
-                                            TAG_CTRL,
+                                        outbox.push(
+                                            &comm.sender(),
+                                            cfg.metrics.as_deref(),
                                             FwMsg::ExecFailed {
                                                 job,
                                                 msg: format!("engine init: {e}"),
@@ -171,8 +249,9 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                         let injections = ctx.take_injections();
                         let result = r.map(|()| output);
                         finish_job(
+                            &mut outbox,
                             &comm.sender(),
-                            scheduler,
+                            cfg.metrics.as_deref(),
                             job,
                             req.spec.keep,
                             result,
@@ -195,8 +274,9 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                             let exec_us = t0.elapsed().as_micros() as u64;
                             let result = r.map(|()| output);
                             finish_job(
+                                &mut outbox,
                                 &comm.sender(),
-                                scheduler,
+                                cfg.metrics.as_deref(),
                                 job,
                                 req.spec.keep,
                                 result,
@@ -227,8 +307,9 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                             let r = catch_user(|| pool::run_sequential(&f, &input));
                             let exec_us = t0.elapsed().as_micros() as u64;
                             finish_job(
+                                &mut outbox,
                                 &comm.sender(),
-                                scheduler,
+                                cfg.metrics.as_deref(),
                                 job,
                                 req.spec.keep,
                                 r,
@@ -261,9 +342,9 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
             // (forwarding the measured execution time for the cost model).
             FwMsg::KeptData { job, data, exec_us } => {
                 kept.insert(job, data);
-                let _ = comm.send(
-                    scheduler,
-                    TAG_CTRL,
+                outbox.push(
+                    &comm.sender(),
+                    cfg.metrics.as_deref(),
                     FwMsg::ExecDone { job, data: None, injections: vec![], exec_us },
                 );
             }
@@ -280,15 +361,26 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                     Ok(data) => FwMsg::KeptData { job, data: data.clone(), exec_us: 0 },
                     Err(_) => FwMsg::ResultUnavailable { job },
                 };
-                let _ = comm.send(scheduler, TAG_CTRL, reply);
+                outbox.push(&comm.sender(), cfg.metrics.as_deref(), reply);
             }
             FwMsg::DropKept { job } => {
                 kept.release(job);
             }
+            // Coalesced control frame (DESIGN.md §12): unwrap members at
+            // the queue front, preserving their in-batch order — the
+            // per-destination FIFO the §10 CachePush-before-Exec invariant
+            // rests on carries straight through the frame.
+            FwMsg::Batch(msgs) => {
+                for m in msgs.into_iter().rev() {
+                    queue.push_front(m);
+                }
+            }
             FwMsg::WorkerShutdown => {
                 // Drain in-flight pool jobs (their completion sends still
-                // need this rank alive), then flush stats and leave.
+                // need this rank alive), flush any replies buffered in
+                // this pass, then flush stats and leave.
                 pool.shutdown();
+                outbox.flush(&comm.sender(), cfg.metrics.as_deref());
                 comm.deregister();
                 return;
             }
@@ -312,11 +404,12 @@ fn assemble_input(req: &ExecRequest, kept: &KeptCache) -> Result<FunctionData> {
 }
 
 /// Inline (WithCtx / whole-node Plain) completion: cache handling happens
-/// right here.
+/// right here; the ack coalesces through the worker's [`Outbox`].
 #[allow(clippy::too_many_arguments)]
 fn finish_job(
+    outbox: &mut Outbox,
     to_sched: &CommSender<FwMsg>,
-    scheduler: Rank,
+    metrics: Option<&MetricsCollector>,
     job: JobId,
     keep: bool,
     result: Result<FunctionData>,
@@ -332,16 +425,16 @@ fn finish_job(
             } else {
                 Some(output)
             };
-            let _ = to_sched.send(
-                scheduler,
-                TAG_CTRL,
+            outbox.push(
+                to_sched,
+                metrics,
                 FwMsg::ExecDone { job, data, injections, exec_us },
             );
         }
         Err(e) => {
-            let _ = to_sched.send(
-                scheduler,
-                TAG_CTRL,
+            outbox.push(
+                to_sched,
+                metrics,
                 FwMsg::ExecFailed { job, msg: e.to_string() },
             );
         }

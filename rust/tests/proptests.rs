@@ -552,6 +552,102 @@ fn prop_json_roundtrip_random_documents() {
     }
 }
 
+/// Control-plane batching (DESIGN.md §12) must never change computed
+/// values.  For any random DAG — including runs with an injected worker
+/// crash, which exercises kept-result loss and dataflow re-entry — the
+/// `ctrl_batching = off` run (structurally the PR 5 control plane:
+/// per-message sends, one-completion-per-receive master loop) and the
+/// `ctrl_batching = on` run (coalesced frames, whole-mailbox drains, bulk
+/// LPT assignment, tiny flush thresholds to force mid-pass flushes) must
+/// both match the sequential reference interpreter bit-for-bit, and hence
+/// each other.
+#[test]
+fn prop_ctrl_batching_off_is_pr5() {
+    use hypar::fault::FaultInjector;
+    use std::sync::Arc;
+
+    for seed in 0..CASES {
+        let mut rng = Rng::new(11_000 + seed);
+        let (mut gen, mut arity) = gen_algorithm(&mut rng);
+        fix_emitter_arity(&mut gen, &mut arity);
+        let mut ok = true;
+        for seg in &gen {
+            for j in seg {
+                for r in &j.inputs {
+                    if let ChunkRange::Range { hi, .. } = r.range {
+                        if hi > arity[&r.job.0] {
+                            ok = false;
+                        }
+                    }
+                }
+            }
+        }
+        if !ok {
+            continue; // generator picked a stale emitter arity; skip (rare)
+        }
+
+        let want = interpret(&gen);
+        let schedulers = (seed % 3 + 1) as usize;
+        // One case in three injects a crash on a random job: the fault
+        // path (loss report, kept-result recovery, re-entry) must be
+        // value-transparent under batching too.
+        let crash_job: Option<u32> = if seed % 3 == 0 {
+            let all: Vec<u32> =
+                gen.iter().flatten().map(|j| j.id).collect();
+            Some(all[rng.below(all.len())])
+        } else {
+            None
+        };
+
+        for batching in [false, true] {
+            let fault = Arc::new(FaultInjector::none());
+            if let Some(j) = crash_job {
+                fault.crash_on_job(JobId(j));
+            }
+            let mut b = Framework::builder()
+                .schedulers(schedulers)
+                .workers_per_scheduler(3)
+                .cores_per_worker(4)
+                .ctrl_batching(batching)
+                .fault_injector(fault)
+                .registry(registry());
+            if batching {
+                // Tiny thresholds force count- and delay-trigger flushes
+                // mid-pass, not just the pass-boundary flush.
+                b = b.ctrl_batch_max_msgs(1 + (seed % 4) as usize)
+                    .ctrl_batch_max_delay_us(if seed % 2 == 0 { 0 } else { 200 });
+            }
+            let report = b
+                .build()
+                .unwrap()
+                .run(to_algorithm(&gen))
+                .unwrap_or_else(|e| {
+                    panic!("seed {seed} batching={batching}: run failed: {e}")
+                });
+            for j in gen.last().unwrap() {
+                let got = report.results.get(&JobId(j.id)).unwrap_or_else(|| {
+                    panic!("seed {seed} batching={batching}: missing J{}", j.id)
+                });
+                let expect = &want[&j.id];
+                assert_eq!(
+                    got.len(),
+                    expect.len(),
+                    "seed {seed} batching={batching}: J{} chunk count",
+                    j.id
+                );
+                for (ci, (gc, wc)) in got.chunks().iter().zip(expect).enumerate() {
+                    assert_eq!(
+                        gc.as_f32().unwrap(),
+                        wc.as_slice(),
+                        "seed {seed} batching={batching}: J{} chunk {ci}",
+                        j.id
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// `comm_aware_placement = off` must reproduce the PR 4 placement decision
 /// **bit-for-bit** for any owner / byte / load / estimate configuration:
 /// the policy entry point with no transfer model is pinned to

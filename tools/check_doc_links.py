@@ -7,9 +7,12 @@ Guards the two rot classes the rustdoc gate cannot see:
    must point at files or directories that exist (http(s) and #-anchor
    links are skipped).
 2. ``DESIGN.md §N`` section references — the cross-link convention used by
-   README.md, ROADMAP.md, CHANGES.md and the rustdoc — must resolve to an
-   actual ``## §N`` heading in DESIGN.md, so renumbering a section without
-   fixing its citations fails the build.
+   README.md, ROADMAP.md, CHANGES.md, the rustdoc and the python/tools
+   sources — must resolve to an actual ``## §N`` heading in DESIGN.md, so
+   renumbering a section without fixing its citations fails the build.
+3. Every ``cargo bench --bench NAME`` the CI workflow smoke-runs must have
+   a matching ``rust/benches/NAME.rs``, so a renamed or dropped bench
+   fails here instead of deep inside the CI run.
 
 Exit code 0 = all references resolve; 1 = at least one is broken.
 """
@@ -48,6 +51,15 @@ def rust_sources():
     yield from sorted((ROOT / "examples").glob("*.rs"))
 
 
+def python_sources():
+    for base in ("python", "tools"):
+        for p in sorted((ROOT / base).rglob("*.py")):
+            parts = p.relative_to(ROOT).parts
+            if any(part in SKIP_DIRS for part in parts[:-1]):
+                continue
+            yield p
+
+
 def check_links(errors):
     for md in markdown_files():
         text = md.read_text(encoding="utf-8")
@@ -70,8 +82,8 @@ def check_section_refs(errors):
         return
     headings = set(HEADING_RE.findall(design.read_text(encoding="utf-8")))
     # Section references are checked in every markdown file AND in the
-    # rust sources (code comments cite sections by number too).
-    sources = list(markdown_files()) + list(rust_sources())
+    # rust and python sources (code comments cite sections by number too).
+    sources = list(markdown_files()) + list(rust_sources()) + list(python_sources())
     for src in sources:
         text = src.read_text(encoding="utf-8")
         for m in SECTION_REF_RE.finditer(text):
@@ -82,10 +94,24 @@ def check_section_refs(errors):
                 )
 
 
+def check_ci_benches(errors):
+    workflow = ROOT / ".github" / "workflows" / "ci.yml"
+    if not workflow.exists():
+        return
+    text = workflow.read_text(encoding="utf-8")
+    for name in re.findall(r"cargo bench --bench\s+(\S+)", text):
+        if not (ROOT / "rust" / "benches" / f"{name}.rs").exists():
+            errors.append(
+                f".github/workflows/ci.yml: smoke-runs bench '{name}' but"
+                f" rust/benches/{name}.rs does not exist"
+            )
+
+
 def main():
     errors = []
     check_links(errors)
     check_section_refs(errors)
+    check_ci_benches(errors)
     if errors:
         print(f"doc-link check: {len(errors)} broken reference(s)")
         for e in errors:
