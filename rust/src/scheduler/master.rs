@@ -34,7 +34,7 @@ use crate::metrics::MetricsCollector;
 use super::dynamic::resolve_injections;
 use super::graph::{JobGraph, NodeState};
 use super::placement::{bulk_assign_order, choose_scheduler_policy};
-use super::{Coalescer, CtrlBatchCfg, FwMsg, SourceLoc};
+use super::{log_unroutable, Coalescer, CtrlBatchCfg, FwMsg, SourceLoc};
 
 /// When stored results are freed (see DESIGN.md §6 discussion).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -405,8 +405,16 @@ impl<'a> Master<'a> {
                 }
                 Ok(())
             }
-            // Late fetch replies etc. are ignorable here.
-            _ => Ok(()),
+            // hypar-lint: L1 wildcard-ok — subs route only the
+            // completion-shaped traffic matched above to the master
+            // mid-run.  Late fetch replies racing a collection pass are
+            // tolerated silently; anything else is a protocol bug and the
+            // drop is loud in debug builds (DESIGN.md §13).
+            FwMsg::ResultData { .. } | FwMsg::ResultUnavailable { .. } => Ok(()),
+            other => {
+                log_unroutable("master/barrier", &other);
+                Ok(())
+            }
         }
     }
 
@@ -797,8 +805,15 @@ impl<'a> Master<'a> {
                 }
                 Ok(any_done)
             }
-            // Late fetch replies etc. are ignorable here.
-            _ => Ok(false),
+            // hypar-lint: L1 wildcard-ok — same routing contract as the
+            // barrier handler: late fetch replies are tolerated silently,
+            // anything else is a protocol bug dropped loudly in debug
+            // builds (DESIGN.md §13).
+            FwMsg::ResultData { .. } | FwMsg::ResultUnavailable { .. } => Ok(false),
+            other => {
+                log_unroutable("master/dataflow", &other);
+                Ok(false)
+            }
         }
     }
 
@@ -1252,7 +1267,17 @@ impl<'a> Master<'a> {
                 FwMsg::ResultUnavailable { job } => {
                     return Err(Error::ResultNotAvailable(job));
                 }
-                _ => {}
+                // hypar-lint: L1 wildcard-ok — completion-shaped
+                // stragglers can legally race the final collection (a
+                // sub's liveness pass may still report a lost worker after
+                // the last job finished); the run's outcome is already
+                // decided, so they are acknowledged and dropped.  Anything
+                // else is a protocol bug, loud in debug builds.
+                FwMsg::JobDone { .. }
+                | FwMsg::JobError { .. }
+                | FwMsg::JobAborted { .. }
+                | FwMsg::WorkerLostReport { .. } => {}
+                other => log_unroutable("master/collect", &other),
             }
         }
         Ok(out)

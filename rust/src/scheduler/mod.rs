@@ -40,6 +40,19 @@ use crate::metrics::MetricsCollector;
 /// event loops consume everything).
 pub const TAG_CTRL: Tag = Tag(1);
 
+/// Explicit drop site for a control message its receiver cannot route
+/// (DESIGN.md §13, invariant L1).  Every receiver loop's catch-all arm
+/// funnels through here instead of silently discarding: debug builds print
+/// the dropped message, so widening the protocol without teaching a
+/// receiver shows up in test output instead of as a silent hang.  Release
+/// builds stay quiet — an unroutable message is ignorable by construction
+/// (the sender gets no reply either way).
+pub(crate) fn log_unroutable(role: &str, msg: &FwMsg) {
+    if cfg!(debug_assertions) {
+        eprintln!("hypar[{role}]: dropping unroutable control message {msg:?}");
+    }
+}
+
 /// Where a job's result lives: which sub-scheduler owns it, and — under
 /// keep-results — which of its workers physically retains it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -348,7 +361,11 @@ impl Default for CtrlBatchCfg {
 ///
 /// With `enabled` off, [`Self::send`] degenerates to a plain
 /// `comm.send(dst, TAG_CTRL, msg)` — byte-for-byte the PR 5 wire.
-pub(crate) struct Coalescer {
+///
+/// Public so the concurrency model checks (`rust/tests/loom_models.rs`,
+/// DESIGN.md §13) can drive the real implementation through exhaustive
+/// interleavings; user code has no reason to touch it.
+pub struct Coalescer {
     cfg: CtrlBatchCfg,
     /// Insertion-ordered per-destination buffers.  A `Vec`, not a map: one
     /// actor talks to a handful of destinations (master + peers + own
@@ -359,10 +376,12 @@ pub(crate) struct Coalescer {
 }
 
 impl Coalescer {
+    /// Fresh coalescer with empty per-destination buffers.
     pub fn new(cfg: CtrlBatchCfg) -> Self {
         Coalescer { cfg, buf: Vec::new(), oldest: None }
     }
 
+    /// Whether batching is on (the `ctrl_batching` knob).
     pub fn enabled(&self) -> bool {
         self.cfg.enabled
     }

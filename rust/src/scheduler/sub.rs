@@ -25,7 +25,7 @@ use crate::worker::{run_worker, WorkerConfig};
 
 use super::placement::{best_fit, choose_worker_preferring, WorkerChoice, WorkerSlot};
 use super::store::ResultStore;
-use super::{Coalescer, CtrlBatchCfg, ExecRequest, FwMsg, InputPart, SourceLoc};
+use super::{log_unroutable, Coalescer, CtrlBatchCfg, ExecRequest, FwMsg, InputPart, SourceLoc};
 
 /// Sub-scheduler runtime parameters.
 #[derive(Clone)]
@@ -251,8 +251,11 @@ impl SubScheduler {
                 self.fill_waiters(job);
             }
             FwMsg::Shutdown => return false,
-            // Worker-only / master-only messages are protocol noise here.
-            _ => {}
+            // hypar-lint: L1 wildcard-ok — worker-only (`Exec`,
+            // `CachePush`, ...) and master-only (`JobDone`, ...) messages
+            // cannot legally route to a sub-scheduler; the drop is
+            // explicit and loud in debug builds (DESIGN.md §13).
+            other => log_unroutable("sub", &other),
         }
         true
     }

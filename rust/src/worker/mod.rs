@@ -50,7 +50,7 @@ use crate::job::registry::{FunctionRegistry, JobCtx, UserFunction};
 use crate::job::{Injection, JobId};
 use crate::metrics::MetricsCollector;
 use crate::runtime::{ComputeBackend, EngineFactory};
-use crate::scheduler::{CtrlBatchCfg, ExecRequest, FwMsg, InputPart, TAG_CTRL};
+use crate::scheduler::{log_unroutable, CtrlBatchCfg, ExecRequest, FwMsg, InputPart, TAG_CTRL};
 use cache::KeptCache;
 use pool::{catch_user, PoolConfig, SequencePool};
 
@@ -384,9 +384,12 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                 comm.deregister();
                 return;
             }
-            // Anything else is a protocol error; workers are isolated and
-            // conservative: ignore.
-            _ => {}
+            // hypar-lint: L1 wildcard-ok — anything else is a protocol
+            // error (scheduler-bound messages cannot route to a worker);
+            // workers are isolated and conservative, so the message is
+            // dropped — but explicitly, and loudly in debug builds
+            // (DESIGN.md §13).
+            other => log_unroutable("worker", &other),
         }
     }
 }

@@ -1,0 +1,527 @@
+//! Exhaustive-interleaving model checks for the two invariants e2e tests
+//! cannot explore (DESIGN.md §13): the `Coalescer` flush-before-direct-send
+//! FIFO contract (DESIGN.md §12) and the `SequencePool` result-slot
+//! determinism under steal races (DESIGN.md §8).
+//!
+//! No external model-checking dependency: a plain DFS enumerates every
+//! schedule of the modelled threads' atomic steps.  The coalescer suite
+//! replays the *real* `Coalescer` against a real two-rank `World` for each
+//! schedule; the pool suite walks a cloneable state machine that mirrors
+//! `worker/pool.rs` step for step (counter-first submit, slot-indexed
+//! single-writer results, in-order assembly).  Each suite also validates
+//! the checker itself: a deliberately buggy mutant must be caught.
+//!
+//! Default bounds keep `cargo test` fast; building with
+//! `RUSTFLAGS="--cfg loom"` (the dedicated CI step) deepens the
+//! exploration — more model threads, more chunks, longer schedules.
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
+
+use std::collections::{HashSet, VecDeque};
+use std::time::Duration;
+
+use hypar::comm::{Comm, CostModel, Rank, World};
+use hypar::job::JobId;
+use hypar::metrics::MetricsCollector;
+use hypar::scheduler::{Coalescer, CtrlBatchCfg, FwMsg, TAG_CTRL};
+
+#[cfg(not(loom))]
+const POOL_THREADS: usize = 2;
+#[cfg(loom)]
+const POOL_THREADS: usize = 3;
+
+#[cfg(not(loom))]
+const POOL_CHUNKS: usize = 4;
+#[cfg(loom)]
+const POOL_CHUNKS: usize = 6;
+
+#[cfg(not(loom))]
+const MAX_RECV_STEPS: usize = 6;
+#[cfg(loom)]
+const MAX_RECV_STEPS: usize = 10;
+
+// ========================================================================
+// Schedule enumeration: interleave N sender steps with receiver drains.
+// `true` = the sender takes its next step, `false` = the receiver attempts
+// one `try_recv`.  Trailing receiver steps beyond the last sender step are
+// deterministic, so the closure finishes with its own final drain.
+// ========================================================================
+
+fn explore_schedules(sender_steps: usize, max_recv: usize, run: &mut dyn FnMut(&[bool])) {
+    fn rec(
+        prefix: &mut Vec<bool>,
+        s_left: usize,
+        r_left: usize,
+        run: &mut dyn FnMut(&[bool]),
+    ) {
+        if s_left == 0 {
+            run(prefix);
+            return;
+        }
+        prefix.push(true);
+        rec(prefix, s_left - 1, r_left, run);
+        prefix.pop();
+        if r_left > 0 {
+            prefix.push(false);
+            rec(prefix, s_left, r_left - 1, run);
+            prefix.pop();
+        }
+    }
+    rec(&mut Vec::new(), sender_steps, max_recv, run);
+}
+
+// ========================================================================
+// Coalescer models: real implementation, fresh world per schedule.
+// ========================================================================
+
+struct CoalHarness {
+    sender: Comm<FwMsg>,
+    receiver: Comm<FwMsg>,
+    coal: Coalescer,
+    metrics: MetricsCollector,
+    dst: Rank,
+}
+
+fn harness(max_msgs: usize) -> CoalHarness {
+    let world: World<FwMsg> = World::new(CostModel::free());
+    let sender = world.add_rank();
+    let receiver = world.add_rank();
+    let dst = receiver.rank();
+    CoalHarness {
+        sender,
+        receiver,
+        coal: Coalescer::new(CtrlBatchCfg {
+            enabled: true,
+            max_msgs,
+            // Never trigger on wall time: schedules must be deterministic.
+            max_delay: Duration::from_secs(3600),
+        }),
+        metrics: MetricsCollector::new(),
+        dst,
+    }
+}
+
+/// Marker message `k`: fixed-size, trivially distinguishable.
+fn mk(k: u32) -> FwMsg {
+    FwMsg::ReleaseResult { job: JobId(k) }
+}
+
+fn push_flat(msg: FwMsg, out: &mut Vec<u32>) {
+    match msg {
+        FwMsg::Batch(inner) => {
+            for m in inner {
+                push_flat(m, out);
+            }
+        }
+        FwMsg::ReleaseResult { job } => out.push(job.0),
+        other => panic!("unexpected message in model run: {other:?}"),
+    }
+}
+
+fn drain_one(receiver: &mut Comm<FwMsg>, out: &mut Vec<u32>) {
+    if let Ok(Some(env)) = receiver.try_recv() {
+        push_flat(env.into_user(), out);
+    }
+}
+
+/// Replay `steps` under every schedule; assert the receiver observes
+/// exactly `expected`, in order, with every intermediate view a prefix.
+fn check_fifo_all_schedules(
+    expected: &[u32],
+    max_msgs: usize,
+    steps: &[&dyn Fn(&mut CoalHarness)],
+) {
+    let mut schedules = 0usize;
+    explore_schedules(steps.len(), MAX_RECV_STEPS, &mut |schedule| {
+        schedules += 1;
+        let mut h = harness(max_msgs);
+        let mut out = Vec::new();
+        let mut next = 0usize;
+        for &sender_turn in schedule {
+            if sender_turn {
+                steps[next](&mut h);
+                next += 1;
+            } else {
+                drain_one(&mut h.receiver, &mut out);
+                assert!(
+                    expected.starts_with(&out),
+                    "receiver observed {out:?}, not a prefix of {expected:?}"
+                );
+            }
+        }
+        // Everything is on the wire after the last step; a bounded drain
+        // must produce the full expected sequence.
+        for _ in 0..expected.len() + 2 {
+            drain_one(&mut h.receiver, &mut out);
+        }
+        assert_eq!(out, expected, "schedule {schedule:?} broke FIFO");
+    });
+    assert!(schedules > 1, "explorer degenerated to a single schedule");
+}
+
+#[test]
+fn coalescer_send_now_flushes_before_direct_send_all_schedules() {
+    // Two buffered messages, then a direct send: §12 requires the flush
+    // to precede the direct message on the wire in every interleaving.
+    check_fifo_all_schedules(
+        &[1, 2, 3],
+        64,
+        &[
+            &|h| h.coal.send(&h.sender, &h.metrics, h.dst, mk(1)),
+            &|h| h.coal.send(&h.sender, &h.metrics, h.dst, mk(2)),
+            &|h| {
+                h.coal
+                    .send_now(&h.sender, &h.metrics, h.dst, mk(3))
+                    .expect("rank alive");
+            },
+            &|h| h.coal.flush_all(&h.sender, &h.metrics),
+        ],
+    );
+}
+
+#[test]
+fn coalescer_count_trigger_preserves_fifo_all_schedules() {
+    // max_msgs = 2: the second buffered send auto-flushes; a later
+    // buffered message then rides the pass-boundary flush after a direct
+    // send already overtook the buffer — order must still hold.
+    check_fifo_all_schedules(
+        &[1, 2, 3, 4],
+        2,
+        &[
+            &|h| h.coal.send(&h.sender, &h.metrics, h.dst, mk(1)),
+            &|h| h.coal.send(&h.sender, &h.metrics, h.dst, mk(2)),
+            &|h| h.coal.send(&h.sender, &h.metrics, h.dst, mk(3)),
+            &|h| {
+                h.coal
+                    .send_now(&h.sender, &h.metrics, h.dst, mk(4))
+                    .expect("rank alive");
+            },
+        ],
+    );
+}
+
+#[test]
+fn coalescer_group_send_preserves_fifo_all_schedules() {
+    // A pre-assembled group (the multi-source CachePush frame) must also
+    // flush the destination first.
+    check_fifo_all_schedules(
+        &[1, 2, 3],
+        64,
+        &[
+            &|h| h.coal.send(&h.sender, &h.metrics, h.dst, mk(1)),
+            &|h| {
+                h.coal
+                    .send_group_now(&h.sender, &h.metrics, h.dst, vec![mk(2), mk(3)])
+                    .expect("rank alive");
+            },
+            &|h| h.coal.flush_all(&h.sender, &h.metrics),
+        ],
+    );
+}
+
+/// The checker checks itself: a mutant "send_now" that skips the flush
+/// (direct send first, buffered messages after) must be caught as a FIFO
+/// violation in every schedule.
+#[test]
+fn model_checker_catches_direct_send_without_flush() {
+    let mut violations = 0usize;
+    let mut runs = 0usize;
+    explore_schedules(3, MAX_RECV_STEPS, &mut |schedule| {
+        runs += 1;
+        let mut h = harness(64);
+        let mut out = Vec::new();
+        let mut next = 0usize;
+        for &sender_turn in schedule {
+            if sender_turn {
+                match next {
+                    0 => h.coal.send(&h.sender, &h.metrics, h.dst, mk(1)),
+                    1 => h.coal.send(&h.sender, &h.metrics, h.dst, mk(2)),
+                    _ => {
+                        // BUG under test: direct send without flush_dst.
+                        h.sender.send(h.dst, TAG_CTRL, mk(3)).expect("rank alive");
+                        h.coal.flush_all(&h.sender, &h.metrics);
+                    }
+                }
+                next += 1;
+            } else {
+                drain_one(&mut h.receiver, &mut out);
+            }
+        }
+        for _ in 0..5 {
+            drain_one(&mut h.receiver, &mut out);
+        }
+        if out != [1, 2, 3] {
+            violations += 1;
+        }
+    });
+    assert_eq!(
+        violations, runs,
+        "every schedule must expose the missing flush (got {violations}/{runs})"
+    );
+}
+
+// ========================================================================
+// SequencePool model: a cloneable state machine mirroring worker/pool.rs.
+//
+// Mapping to the real code: `deques` are the per-sequence chunk deques
+// (`PoolShared::deques`), `holding` is the task a sequence thread popped
+// and is executing, the execute step is `run_task`'s chunk path — write
+// the slot (`slots[i].set`, sole writer), bump `done` (AcqRel), and the
+// thread observing `done == chunks` assembles in input order
+// (`finish_chunk_job`).  The steal step takes the front half of the
+// busiest victim's deque, runs the first stolen task and re-queues the
+// rest, like `SequencePool::steal`.
+// ========================================================================
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct PoolState {
+    deques: Vec<VecDeque<usize>>,
+    holding: Vec<Option<usize>>,
+    slots: Vec<Option<usize>>,
+    writes: Vec<u8>,
+    done: usize,
+    assembled: usize,
+    output: Vec<usize>,
+}
+
+impl PoolState {
+    fn initial(threads: usize, chunks: usize) -> Self {
+        let mut deques = vec![VecDeque::new(); threads];
+        // The LPT deal of equal-cost chunks degenerates to round-robin.
+        for c in 0..chunks {
+            deques[c % threads].push_back(c);
+        }
+        PoolState {
+            deques,
+            holding: vec![None; threads],
+            slots: vec![None; chunks],
+            writes: vec![0; chunks],
+            done: 0,
+            assembled: 0,
+            output: Vec::new(),
+        }
+    }
+}
+
+#[derive(Default)]
+struct PoolStats {
+    states: usize,
+    terminals: usize,
+    max_slot_writes: u8,
+    double_assembly: bool,
+    unwritten_at_assembly: bool,
+    outputs: HashSet<Vec<usize>>,
+}
+
+/// One atomic step of model thread `t`, or `None` if it has nothing to do.
+/// `slot_of` maps an executed chunk to the slot it writes — identity in
+/// the faithful model, skewed in the mutant.
+fn pool_step(s: &PoolState, t: usize, slot_of: &dyn Fn(usize) -> usize) -> Option<PoolState> {
+    let chunks = s.slots.len();
+    let mut n = s.clone();
+    if let Some(chunk) = n.holding[t] {
+        // Execute: the slot write (sole writer in the real pool) and the
+        // done-counter bump are one atomic step here because the real
+        // ordering (set before fetch_add(AcqRel)) makes the write visible
+        // to whichever thread sees the final count.
+        let slot = slot_of(chunk);
+        n.writes[slot] = n.writes[slot].saturating_add(1);
+        n.slots[slot] = Some(chunk);
+        n.done += 1;
+        n.holding[t] = None;
+        if n.done == chunks {
+            n.output = n.slots.iter().map(|s| s.unwrap_or(usize::MAX)).collect();
+            n.assembled += 1;
+        }
+        return Some(n);
+    }
+    if let Some(chunk) = n.deques[t].pop_front() {
+        n.holding[t] = Some(chunk);
+        return Some(n);
+    }
+    // Steal: busiest victim first (the deque_est heuristic), front half.
+    let victim = (0..n.deques.len())
+        .filter(|&v| v != t && !n.deques[v].is_empty())
+        .max_by_key(|&v| n.deques[v].len())?;
+    let take = n.deques[victim].len().div_ceil(2);
+    let mut grabbed = Vec::with_capacity(take);
+    for _ in 0..take {
+        grabbed.push(n.deques[victim].pop_front().expect("len checked"));
+    }
+    n.holding[t] = Some(grabbed[0]);
+    for &c in &grabbed[1..] {
+        n.deques[t].push_back(c);
+    }
+    Some(n)
+}
+
+fn explore_pool(
+    state: PoolState,
+    seen: &mut HashSet<PoolState>,
+    stats: &mut PoolStats,
+    slot_of: &dyn Fn(usize) -> usize,
+) {
+    if !seen.insert(state.clone()) {
+        return;
+    }
+    stats.states += 1;
+    stats.max_slot_writes = stats
+        .max_slot_writes
+        .max(state.writes.iter().copied().max().unwrap_or(0));
+    if state.assembled > 1 {
+        stats.double_assembly = true;
+    }
+    if state.assembled > 0 && state.output.contains(&usize::MAX) {
+        stats.unwritten_at_assembly = true;
+    }
+    let mut any = false;
+    for t in 0..state.holding.len() {
+        if let Some(next) = pool_step(&state, t, slot_of) {
+            any = true;
+            explore_pool(next, seen, stats, slot_of);
+        }
+    }
+    if !any {
+        stats.terminals += 1;
+        stats.outputs.insert(state.output.clone());
+    }
+}
+
+#[test]
+fn pool_result_slots_deterministic_under_all_steal_interleavings() {
+    let mut seen = HashSet::new();
+    let mut stats = PoolStats::default();
+    explore_pool(
+        PoolState::initial(POOL_THREADS, POOL_CHUNKS),
+        &mut seen,
+        &mut stats,
+        &|chunk| chunk,
+    );
+    let expected: Vec<usize> = (0..POOL_CHUNKS).collect();
+    assert!(stats.states > POOL_CHUNKS, "explorer degenerated");
+    assert!(stats.terminals > 0, "no terminal state reached");
+    assert_eq!(stats.max_slot_writes, 1, "a result slot was written twice");
+    assert!(!stats.double_assembly, "assembly ran more than once");
+    assert!(!stats.unwritten_at_assembly, "assembly saw an unwritten slot");
+    assert_eq!(
+        stats.outputs,
+        HashSet::from([expected]),
+        "output order must equal input order on every schedule"
+    );
+}
+
+/// Checker self-test: a mutant that writes chunk `c`'s result into slot
+/// `c+1` (mod chunks) fills every slot exactly once — only the in-order
+/// assembly assertion can catch it, and it must.
+#[test]
+fn model_checker_catches_wrong_slot_writes() {
+    let chunks = POOL_CHUNKS;
+    let mut seen = HashSet::new();
+    let mut stats = PoolStats::default();
+    explore_pool(
+        PoolState::initial(POOL_THREADS, chunks),
+        &mut seen,
+        &mut stats,
+        &|chunk| (chunk + 1) % chunks,
+    );
+    let expected: Vec<usize> = (0..chunks).collect();
+    assert!(stats.terminals > 0);
+    assert!(
+        !stats.outputs.contains(&expected),
+        "the wrong-slot mutant must never produce the correct order"
+    );
+}
+
+// ========================================================================
+// Pending-counter model: `submit_chunks` increments `pending` *before*
+// pushing to the deques ("counter first" in pool.rs) so a racing pop can
+// never observe more queued tasks than the counter admits — the park
+// predicate (`pending == 0`) would otherwise sleep through live work.
+// ========================================================================
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct CounterState {
+    pending: i64,
+    queued: i64,
+    running: i64,
+    submit_pc: Vec<u8>,
+}
+
+fn counter_violation(counter_first: bool) -> bool {
+    let submitters = 2;
+    let mut stack = vec![CounterState {
+        pending: 0,
+        queued: 0,
+        running: 0,
+        submit_pc: vec![0; submitters],
+    }];
+    let mut seen: HashSet<CounterState> = stack.iter().cloned().collect();
+    let mut violated = false;
+    while let Some(s) = stack.pop() {
+        // The invariant the real pool relies on, checked at every state.
+        if s.queued > s.pending || s.pending < 0 {
+            violated = true;
+            continue;
+        }
+        let mut push = |n: CounterState| {
+            if seen.insert(n.clone()) {
+                stack.push(n);
+            }
+        };
+        for i in 0..submitters {
+            let mut n = s.clone();
+            match n.submit_pc[i] {
+                0 => {
+                    if counter_first {
+                        n.pending += 1;
+                    } else {
+                        n.queued += 1;
+                    }
+                    n.submit_pc[i] = 1;
+                    push(n);
+                }
+                1 => {
+                    if counter_first {
+                        n.queued += 1;
+                    } else {
+                        n.pending += 1;
+                    }
+                    n.submit_pc[i] = 2;
+                    push(n);
+                }
+                _ => {}
+            }
+        }
+        // The consumer: pop a queued task, or retire a running one
+        // (pending is decremented only after the task completes).
+        if s.queued > 0 {
+            let mut n = s.clone();
+            n.queued -= 1;
+            n.running += 1;
+            push(n);
+        }
+        if s.running > 0 {
+            let mut n = s.clone();
+            n.running -= 1;
+            n.pending -= 1;
+            push(n);
+        }
+    }
+    violated
+}
+
+#[test]
+fn pool_counter_first_submit_holds_on_all_schedules() {
+    assert!(
+        !counter_violation(true),
+        "counter-first submit must keep pending >= queued everywhere"
+    );
+}
+
+#[test]
+fn model_checker_catches_queue_before_counter_submit() {
+    assert!(
+        counter_violation(false),
+        "queue-before-counter must expose a transient pending < queued"
+    );
+}

@@ -1,0 +1,727 @@
+#!/usr/bin/env python3
+"""hypar-lint: cross-cutting invariant checker for the hypar tree.
+
+The framework's correctness story spans five hand-synchronised surfaces
+that no single compiler pass sees end to end (DESIGN.md §13).  This
+linter re-checks them on every CI run, using nothing but the standard
+library (same zero-dependency contract as check_doc_links.py):
+
+  L1  protocol exhaustiveness — every `FwMsg` variant is either matched
+      or explicitly wildcard-acknowledged (a `hypar-lint: L1 wildcard-ok`
+      comment) in each receiver loop; every variant is consumed by at
+      least one receiver and referenced somewhere outside its definition.
+  L2  wire-size consistency — every payload-carrying `FwMsg` variant
+      (FunctionData / String / Vec / ExecRequest fields) has an explicit
+      `wire_size` arm, fixed-size variants may share the wildcard arm,
+      and `Batch` charging stays "one CTRL + sum of inner sizes".
+  L3  knob registry — every `TopologyConfig` field appears in the README
+      knob table, `from_json_text`, and `to_json`; builder methods named
+      in the table exist on `FrameworkBuilder`; README rows are not
+      stale; knobs whose documented effect carries a range constraint
+      ("x >= 1", "(0, 1]") are enforced in `validate()`; knobs whose
+      README row cites a DESIGN.md section are named in that section.
+  L4  metrics registry — every scalar counter of `MetricsSnapshot` is
+      reachable from the snapshot's export surface (the
+      `impl MetricsSnapshot` block feeding `to_json`), and every
+      top-level `to_json` key is documented in README.md or DESIGN.md.
+  L5  lock discipline — heuristically flag mutex/rwlock guards held
+      across `send` / `recv` / condvar-wait calls in scheduler, worker
+      and comm hot paths.  Audited sites live in the allowlist file with
+      a one-line justification each.
+
+Usage:
+    python3 tools/hypar_lint.py [--root DIR] [--allowlist FILE]
+                                [--json-report FILE] [-q]
+
+Exit status: 0 when the tree is clean, 1 when any rule fires (or the
+tree is missing one of the files the rules are anchored to).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+# --------------------------------------------------------------------------
+# Anchors: the files and receiver loops the rules are tied to.  Renaming a
+# drive function or moving the enum is expected to fail the lint — the fix
+# is to update this table in the same PR, keeping the catalog honest.
+# --------------------------------------------------------------------------
+
+PROTOCOL_FILE = "rust/src/scheduler/mod.rs"
+CONFIG_FILE = "rust/src/config/mod.rs"
+FRAMEWORK_FILE = "rust/src/framework.rs"
+METRICS_FILE = "rust/src/metrics/mod.rs"
+README_FILE = "README.md"
+DESIGN_FILE = "DESIGN.md"
+
+# (file, function) pairs that consume control messages in a loop.
+RECEIVERS = [
+    ("rust/src/scheduler/master.rs", "handle_barrier"),
+    ("rust/src/scheduler/master.rs", "handle_dataflow_event"),
+    ("rust/src/scheduler/master.rs", "collect_final_results"),
+    ("rust/src/scheduler/sub.rs", "handle"),
+    ("rust/src/worker/mod.rs", "run_worker"),
+]
+
+WILDCARD_ACK = "hypar-lint: L1 wildcard-ok"
+
+# Directories whose .rs files are scanned for lock discipline (hot paths).
+L5_DIRS = ["rust/src/scheduler", "rust/src/worker", "rust/src/comm"]
+
+# Field types that make an FwMsg variant "payload-carrying" for L2.
+PAYLOAD_TYPES = ("FunctionData", "String", "Vec<", "ExecRequest")
+
+# Scalar field types counted as exported counters for L4.
+SCALAR_TYPES = {"u64", "usize", "f64", "u32", "u128"}
+
+BLOCKING_CALL = re.compile(
+    r"\.(send|send_now|send_group_now|send_to|recv|try_recv|recv_match|"
+    r"recv_match_timeout|wait|wait_timeout|wait_timeout_while)\s*\("
+)
+# A let binds a *held* guard only when the RHS ends at the lock call plus
+# result adapters; `...lock().unwrap().is_empty()` is a temporary dropped at
+# the end of the statement and never escapes.
+GUARD_LET = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*=\s*([^;]*);")
+GUARD_RHS = re.compile(
+    r"\.(?:lock|write)\s*\(\s*\)\s*"
+    r"(?:\.\s*(?:unwrap|expect|unwrap_or_else|unwrap_or_default|map_err)"
+    r"\s*\((?:[^()]|\([^()]*\))*\)\s*)*$"
+)
+
+
+class Lint:
+    def __init__(self, root: Path, allowlist: Path | None):
+        self.root = root
+        self.errors: list[dict] = []
+        self.allow: list[dict] = []
+        self.allow_used: set[int] = set()
+        if allowlist and allowlist.is_file():
+            self._load_allowlist(allowlist)
+
+    # -- infrastructure ----------------------------------------------------
+
+    def err(self, rule: str, path: str, line: int, msg: str) -> None:
+        self.errors.append({"rule": rule, "path": path, "line": line, "msg": msg})
+
+    def read(self, rel: str) -> str | None:
+        p = self.root / rel
+        if not p.is_file():
+            self.err("anchor", rel, 0, "expected file is missing")
+            return None
+        return p.read_text(encoding="utf-8")
+
+    def _load_allowlist(self, path: Path) -> None:
+        for n, raw in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            m = re.match(r"(L\d)\s+([^\s:]+):(\w+):(\w+)\s+[—-]+\s+(.+)", line)
+            if not m:
+                self.err("allowlist", str(path), n, f"unparseable entry: {line!r}")
+                continue
+            self.allow.append(
+                {
+                    "idx": len(self.allow),
+                    "rule": m.group(1),
+                    "path": m.group(2),
+                    "func": m.group(3),
+                    "guard": m.group(4),
+                    "why": m.group(5),
+                    "line": n,
+                    "file": str(path),
+                }
+            )
+
+    def allowed(self, rule: str, path: str, func: str, guard: str) -> bool:
+        for a in self.allow:
+            if (a["rule"], a["path"], a["func"], a["guard"]) == (
+                rule,
+                path,
+                func,
+                guard,
+            ):
+                self.allow_used.add(a["idx"])
+                return True
+        return False
+
+    # -- Rust-aware text helpers ------------------------------------------
+
+
+def strip_rust(src: str) -> str:
+    """Blank comments and string/char literals, preserving offsets.
+
+    Good enough for brace matching and identifier scans; not a parser.
+    Handles nested block comments, raw strings (r"", r#""#), and
+    distinguishes char literals from lifetimes.
+    """
+    out = list(src)
+    i, n = 0, len(src)
+
+    def blank(a: int, b: int) -> None:
+        for k in range(a, b):
+            if out[k] != "\n":
+                out[k] = " "
+
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            j = src.find("\n", i)
+            j = n if j == -1 else j
+            blank(i, j)
+            i = j
+        elif c == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if src.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif src.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            blank(i, j)
+            i = j
+        elif c == "r" and re.match(r'r#*"', src[i : i + 8]):
+            m = re.match(r'r(#*)"', src[i:])
+            closer = '"' + m.group(1)
+            j = src.find(closer, i + len(m.group(0)))
+            j = n if j == -1 else j + len(closer)
+            blank(i + 1, j)
+            i = j
+        elif c == '"':
+            j = i + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                elif src[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            blank(i + 1, j - 1)
+            i = j
+        elif c == "'":
+            # char literal vs lifetime: a literal closes within a few chars.
+            m = re.match(r"'(\\.[^']*|[^'\\])'", src[i : i + 12])
+            if m:
+                blank(i + 1, i + len(m.group(0)) - 1)
+                i += len(m.group(0))
+            else:
+                i += 1
+        else:
+            i += 1
+    return "".join(out)
+
+
+def line_of(src: str, offset: int) -> int:
+    return src.count("\n", 0, offset) + 1
+
+
+def find_block(stripped: str, open_at: int) -> int:
+    """Given the offset of a '{', return the offset just past its '}'."""
+    depth = 0
+    for i in range(open_at, len(stripped)):
+        if stripped[i] == "{":
+            depth += 1
+        elif stripped[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(stripped)
+
+
+def fn_body(src: str, stripped: str, name: str) -> tuple[int, int] | None:
+    """Offsets (start, end) of `fn name`'s body braces, or None."""
+    m = re.search(rf"\bfn\s+{re.escape(name)}\b", stripped)
+    if not m:
+        return None
+    open_at = stripped.find("{", m.end())
+    if open_at == -1:
+        return None
+    return open_at, find_block(stripped, open_at)
+
+
+def item_block(stripped: str, pattern: str) -> tuple[int, int] | None:
+    """Offsets of the brace block following the first match of `pattern`."""
+    m = re.search(pattern, stripped)
+    if not m:
+        return None
+    open_at = stripped.find("{", m.end())
+    if open_at == -1:
+        return None
+    return open_at, find_block(stripped, open_at)
+
+
+def enum_variants(stripped: str, name: str) -> list[tuple[str, str, int]]:
+    """[(variant, fields_text, offset)] for `enum name`, or []."""
+    blk = item_block(stripped, rf"\benum\s+{re.escape(name)}\b")
+    if blk is None:
+        return []
+    a, b = blk
+    body = stripped[a + 1 : b - 1]
+    out, depth, start = [], 0, 0
+    chunks = []
+    for i, c in enumerate(body):
+        if c in "{(<[":
+            depth += 1
+        elif c in "})>]":
+            depth -= 1
+        elif c == "," and depth == 0:
+            chunks.append((body[start:i], start))
+            start = i + 1
+    chunks.append((body[start:], start))
+    for text, off in chunks:
+        m = re.search(r"(?:#\[[^\]]*\]\s*)*\b([A-Z]\w*)", text)
+        if m:
+            fields = text[m.end() :]
+            out.append((m.group(1), fields, a + 1 + off + m.start(1)))
+    return out
+
+
+def top_level_json_keys(body: str) -> list[str]:
+    """Keys of `("key", ...)` tuples at depth 1 inside a vec![...] body."""
+    return re.findall(r'\(\s*"([a-z0-9_]+)"\s*,', body)
+
+
+# --------------------------------------------------------------------------
+# Rules
+# --------------------------------------------------------------------------
+
+
+def check_l1_l2(lint: Lint) -> None:
+    src = lint.read(PROTOCOL_FILE)
+    if src is None:
+        return
+    stripped = strip_rust(src)
+    variants = enum_variants(stripped, "FwMsg")
+    if not variants:
+        lint.err("L1", PROTOCOL_FILE, 0, "enum FwMsg not found")
+        return
+    names = [v for v, _, _ in variants]
+
+    # --- receiver coverage -----------------------------------------------
+    matched_anywhere: set[str] = set()
+    for rel, fname in RECEIVERS:
+        rsrc = lint.read(rel)
+        if rsrc is None:
+            continue
+        rstripped = strip_rust(rsrc)
+        span = fn_body(rsrc, rstripped, fname)
+        if span is None:
+            lint.err("L1", rel, 0, f"receiver function `{fname}` not found")
+            continue
+        a, b = span
+        body_stripped = rstripped[a:b]
+        body_raw = rsrc[a:b]
+        seen = set(re.findall(r"\bFwMsg::([A-Z]\w*)", body_stripped))
+        matched_anywhere |= seen
+        acked = WILDCARD_ACK in body_raw
+        missing = [v for v in names if v not in seen]
+        if missing and not acked:
+            lint.err(
+                "L1",
+                rel,
+                line_of(rsrc, a),
+                f"receiver `{fname}` neither matches nor wildcard-acknowledges "
+                f"FwMsg variant(s): {', '.join(missing)} "
+                f"(add arms or a `{WILDCARD_ACK}` comment on the catch-all)",
+            )
+
+    # --- every variant consumed and referenced ---------------------------
+    enum_blk = item_block(stripped, r"\benum\s+FwMsg\b")
+    refs_outside: set[str] = set()
+    for p in sorted((lint.root / "rust/src").rglob("*.rs")):
+        rel = str(p.relative_to(lint.root))
+        s = strip_rust(p.read_text(encoding="utf-8"))
+        for m in re.finditer(r"\bFwMsg::([A-Z]\w*)", s):
+            if rel == PROTOCOL_FILE and enum_blk and enum_blk[0] <= m.start() < enum_blk[1]:
+                continue
+            refs_outside.add(m.group(1))
+    for v, _, off in variants:
+        if v not in refs_outside:
+            lint.err(
+                "L1",
+                PROTOCOL_FILE,
+                line_of(src, off),
+                f"FwMsg::{v} is defined but never referenced outside the enum "
+                "(dead protocol variant)",
+            )
+        elif v not in matched_anywhere:
+            lint.err(
+                "L1",
+                PROTOCOL_FILE,
+                line_of(src, off),
+                f"FwMsg::{v} is constructed but matched by no receiver loop",
+            )
+
+    # --- L2: wire-size arms ----------------------------------------------
+    blk = item_block(stripped, r"\bimpl\s+WireSize\s+for\s+FwMsg\b")
+    if blk is None:
+        lint.err("L2", PROTOCOL_FILE, 0, "impl WireSize for FwMsg not found")
+        return
+    a, b = blk
+    wbody = stripped[a:b]
+    explicit = set(re.findall(r"\bFwMsg::([A-Z]\w*)", wbody))
+    has_wildcard = re.search(r"\n\s*_\s*=>", wbody) is not None
+    for v, fields, off in variants:
+        payload = any(t in fields for t in PAYLOAD_TYPES)
+        if v not in explicit and not (has_wildcard and not payload):
+            why = (
+                "carries payload fields and must be charged explicitly"
+                if payload
+                else "has no wire_size arm and there is no wildcard arm"
+            )
+            lint.err(
+                "L2",
+                PROTOCOL_FILE,
+                line_of(src, off),
+                f"FwMsg::{v} {why}",
+            )
+    bm = re.search(r"FwMsg::Batch\s*\(\s*(\w+)\s*\)\s*=>\s*([^,}]*)", wbody)
+    if bm is None:
+        lint.err("L2", PROTOCOL_FILE, line_of(src, a), "no wire_size arm for FwMsg::Batch")
+    elif not ("CTRL" in bm.group(2) and "wire_size_sum" in bm.group(2)):
+        lint.err(
+            "L2",
+            PROTOCOL_FILE,
+            line_of(src, a + bm.start()),
+            "FwMsg::Batch must be charged as one CTRL + wire_size_sum(inner), "
+            f"found: {src[a + bm.start(2) : a + bm.end(2)].strip()!r}",
+        )
+
+
+def parse_readme_knob_table(readme: str) -> list[dict]:
+    """Rows of the canonical knob table: JSON key / builder / default / effect."""
+    rows = []
+    in_table = False
+    for n, line in enumerate(readme.splitlines(), 1):
+        if re.match(r"\|\s*JSON key\s*\|", line):
+            in_table = True
+            continue
+        if in_table:
+            if not line.strip().startswith("|"):
+                in_table = False
+                continue
+            cells = [c.strip() for c in line.strip().strip("|").split("|")]
+            if len(cells) < 4 or set(cells[0]) <= {"-", " ", ":"}:
+                continue
+            key = cells[0].strip("`")
+            rows.append(
+                {"key": key, "builder": cells[1], "default": cells[2],
+                 "effect": cells[3], "line": n}
+            )
+    return rows
+
+
+def check_l3(lint: Lint) -> None:
+    cfg = lint.read(CONFIG_FILE)
+    fw = lint.read(FRAMEWORK_FILE)
+    readme = lint.read(README_FILE)
+    design = lint.read(DESIGN_FILE)
+    if None in (cfg, fw, readme, design):
+        return
+    cstr = strip_rust(cfg)
+    blk = item_block(cstr, r"\bstruct\s+TopologyConfig\b")
+    if blk is None:
+        lint.err("L3", CONFIG_FILE, 0, "struct TopologyConfig not found")
+        return
+    a, b = blk
+    fields: list[tuple[str, str, int]] = []
+    for m in re.finditer(r"\bpub\s+(\w+)\s*:\s*([^,\n]+)", cstr[a:b]):
+        fields.append((m.group(1), m.group(2).strip(), a + m.start(1)))
+
+    rows = parse_readme_knob_table(readme)
+    row_by_key = {r["key"]: r for r in rows}
+    field_names = {f for f, _, _ in fields}
+
+    def body_text(src: str, name: str) -> str:
+        s = strip_rust(src)
+        span = fn_body(src, s, name)
+        return src[span[0] : span[1]] if span else ""
+
+    parse_body = body_text(cfg, "from_json_text")
+    tojson_body = body_text(cfg, "to_json")
+    validate_body = body_text(cfg, "validate")
+    builder_methods = set(re.findall(r"\bpub\s+fn\s+(\w+)", strip_rust(fw)))
+    design_secs = {
+        m.group(1): m.start()
+        for m in re.finditer(r"^##\s+§(\d+)", design, re.M)
+    }
+
+    def design_section(num: str) -> str:
+        if num not in design_secs:
+            return ""
+        start = design_secs[num]
+        more = [m.start() for m in re.finditer(r"^##\s+§", design[start + 1 :], re.M)]
+        end = start + 1 + more[0] if more else len(design)
+        return design[start:end]
+
+    for name, _ty, off in fields:
+        line = line_of(cfg, off)
+        row = row_by_key.get(name)
+        if row is None:
+            lint.err(
+                "L3", CONFIG_FILE, line,
+                f"config knob `{name}` has no row in the README knob table",
+            )
+        if f'"{name}"' not in parse_body:
+            lint.err(
+                "L3", CONFIG_FILE, line,
+                f"config knob `{name}` is not parsed in from_json_text",
+            )
+        if f'"{name}"' not in tojson_body:
+            lint.err(
+                "L3", CONFIG_FILE, line,
+                f"config knob `{name}` is not exported in TopologyConfig::to_json",
+            )
+        if row is not None:
+            # Builder methods the README claims must exist.
+            methods = re.findall(r"\.([a-z_]\w*)\s*\(", row["builder"])
+            for meth in methods:
+                if meth not in builder_methods:
+                    lint.err(
+                        "L3", README_FILE, row["line"],
+                        f"README knob row `{name}` names builder method "
+                        f"`.{meth}()` which does not exist on FrameworkBuilder",
+                    )
+            if not methods and row["builder"] not in ("—", "-", ""):
+                lint.err(
+                    "L3", README_FILE, row["line"],
+                    f"README knob row `{name}`: unparseable builder cell "
+                    f"{row['builder']!r} (use `.method(..)` or `—`)",
+                )
+            # Documented range constraints must be enforced in validate().
+            effect = row["effect"]
+            if re.search(r"≥\s*1|>=\s*1|\(0,\s*1\]", effect):
+                if name not in validate_body:
+                    lint.err(
+                        "L3", CONFIG_FILE, line,
+                        f"README documents a range constraint for `{name}` "
+                        "but TopologyConfig::validate never checks it",
+                    )
+            # A cited DESIGN.md section must actually name the knob.
+            cited = re.findall(r"DESIGN\.md\s+§(\d+)", effect)
+            for num in cited:
+                sec = design_section(num)
+                if not sec:
+                    lint.err(
+                        "L3", README_FILE, row["line"],
+                        f"README knob row `{name}` cites DESIGN.md §{num} "
+                        "which has no `## §" + num + "` heading",
+                    )
+                elif name not in sec:
+                    lint.err(
+                        "L3", DESIGN_FILE, 0,
+                        f"DESIGN.md §{num} is cited for knob `{name}` but "
+                        "never names it",
+                    )
+
+    for r in rows:
+        if r["key"] not in field_names:
+            lint.err(
+                "L3", README_FILE, r["line"],
+                f"stale README knob row `{r['key']}`: no such TopologyConfig field",
+            )
+
+
+def check_l4(lint: Lint) -> None:
+    met = lint.read(METRICS_FILE)
+    readme = lint.read(README_FILE)
+    design = lint.read(DESIGN_FILE)
+    if None in (met, readme, design):
+        return
+    mstr = strip_rust(met)
+    blk = item_block(mstr, r"\bstruct\s+MetricsSnapshot\b")
+    if blk is None:
+        lint.err("L4", METRICS_FILE, 0, "struct MetricsSnapshot not found")
+        return
+    a, b = blk
+    scalars = [
+        (m.group(1), a + m.start(1))
+        for m in re.finditer(r"\bpub\s+(\w+)\s*:\s*(\w+)\s*,", mstr[a:b])
+        if m.group(2) in SCALAR_TYPES
+    ]
+
+    # Export surface: every `impl MetricsSnapshot` block (to_json + the
+    # derived accessors it calls).
+    surface = ""
+    for m in re.finditer(r"\bimpl\s+MetricsSnapshot\b", mstr):
+        open_at = mstr.find("{", m.end())
+        if open_at != -1:
+            surface += met[open_at : find_block(mstr, open_at)]
+    if not surface:
+        lint.err("L4", METRICS_FILE, 0, "impl MetricsSnapshot not found")
+        return
+    for name, off in scalars:
+        if not re.search(rf"\bself\s*\.\s*{re.escape(name)}\b", surface):
+            lint.err(
+                "L4", METRICS_FILE, line_of(met, off),
+                f"counter `{name}` is recorded but unreachable from the "
+                "MetricsSnapshot export surface (to_json / accessors)",
+            )
+
+    span = fn_body(met, mstr, "to_json")
+    if span is None:
+        lint.err("L4", METRICS_FILE, 0, "MetricsSnapshot::to_json not found")
+        return
+    docs = readme + design
+    for key in top_level_json_keys(met[span[0] : span[1]]):
+        if not re.search(rf"\b{re.escape(key)}\b", docs):
+            lint.err(
+                "L4", METRICS_FILE, line_of(met, span[0]),
+                f"to_json key `{key}` is not documented in README.md or DESIGN.md",
+            )
+
+
+def check_l5(lint: Lint) -> None:
+    files: list[Path] = []
+    for d in L5_DIRS:
+        base = lint.root / d
+        if base.is_dir():
+            files.extend(sorted(base.rglob("*.rs")))
+    for p in files:
+        rel = str(p.relative_to(lint.root))
+        src = p.read_text(encoding="utf-8")
+        stripped = strip_rust(src)
+        # Blank out test modules: lock-across-send in tests is fine.
+        for m in re.finditer(r"#\[cfg\(test\)\]\s*(?:pub\s+)?mod\s+\w+", stripped):
+            open_at = stripped.find("{", m.end())
+            if open_at != -1:
+                end = find_block(stripped, open_at)
+                stripped = stripped[:open_at] + re.sub(
+                    r"[^\n]", " ", stripped[open_at:end]
+                ) + stripped[end:]
+        fn_starts = [
+            (m.start(), m.group(1))
+            for m in re.finditer(r"\bfn\s+(\w+)", stripped)
+        ]
+
+        def enclosing_fn(off: int) -> str:
+            name = "?"
+            for s, nm in fn_starts:
+                if s <= off:
+                    name = nm
+                else:
+                    break
+            return name
+
+        for g in GUARD_LET.finditer(stripped):
+            guard = g.group(1)
+            if not GUARD_RHS.search(g.group(2)):
+                continue
+            stmt_end = g.end() - 1
+            # Scope: from the end of the let-statement to the close of the
+            # enclosing block (depth relative to the let's position).
+            depth = 0
+            end = len(stripped)
+            for i in range(stmt_end, len(stripped)):
+                c = stripped[i]
+                if c == "{":
+                    depth += 1
+                elif c == "}":
+                    depth -= 1
+                    if depth < 0:
+                        end = i
+                        break
+            scope = stripped[stmt_end:end]
+            dropped = re.search(
+                rf"\bdrop\s*\(\s*{re.escape(guard)}\s*\)", scope
+            )
+            limit = stmt_end + dropped.start() if dropped else end
+            region = stripped[stmt_end:limit]
+            hit = BLOCKING_CALL.search(region)
+            if hit is None:
+                continue
+            func = enclosing_fn(g.start())
+            if lint.allowed("L5", rel, func, guard):
+                continue
+            lint.err(
+                "L5", rel, line_of(src, stmt_end + hit.start()),
+                f"guard `{guard}` (taken in `{func}`, line "
+                f"{line_of(src, g.start())}) is held across a blocking "
+                f"`{hit.group(1)}` call — audit, then fix or allowlist",
+            )
+        # Same-statement chains: a temporary guard feeding a blocking call.
+        for m in re.finditer(r"[^;{}]*\.(?:lock|write)\s*\(\s*\)[^;{}]*", stripped):
+            text = m.group(0)
+            hit = BLOCKING_CALL.search(text)
+            if hit and ".lock" in text[: hit.start()] or (
+                hit and ".write" in text[: hit.start()]
+            ):
+                func = enclosing_fn(m.start())
+                if lint.allowed("L5", rel, func, "<inline>"):
+                    continue
+                lint.err(
+                    "L5", rel, line_of(src, m.start() + hit.start()),
+                    f"inline guard in `{func}` chains a lock into a blocking "
+                    f"`{hit.group(1)}` call — audit, then fix or allowlist",
+                )
+
+
+def check_allowlist_staleness(lint: Lint) -> None:
+    for a in lint.allow:
+        if a["idx"] not in lint.allow_used:
+            lint.err(
+                "allowlist", a["file"], a["line"],
+                f"stale allowlist entry (nothing matched): "
+                f"{a['rule']} {a['path']}:{a['func']}:{a['guard']}",
+            )
+
+
+# --------------------------------------------------------------------------
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path,
+                    default=Path(__file__).resolve().parent.parent)
+    ap.add_argument("--allowlist", type=Path, default=None,
+                    help="default: <root>/tools/hypar_lint_allow.txt")
+    ap.add_argument("--json-report", type=Path, default=None)
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = args.root.resolve()
+    allowlist = args.allowlist or root / "tools" / "hypar_lint_allow.txt"
+    lint = Lint(root, allowlist)
+
+    check_l1_l2(lint)
+    check_l3(lint)
+    check_l4(lint)
+    check_l5(lint)
+    check_allowlist_staleness(lint)
+
+    counts: dict[str, int] = {}
+    for e in lint.errors:
+        counts[e["rule"]] = counts.get(e["rule"], 0) + 1
+    report = {
+        "root": str(root),
+        "clean": not lint.errors,
+        "counts": counts,
+        "allowlisted": len(lint.allow_used),
+        "errors": lint.errors,
+    }
+    if args.json_report:
+        args.json_report.write_text(json.dumps(report, indent=2) + "\n",
+                                    encoding="utf-8")
+
+    if lint.errors:
+        if not args.quiet:
+            for e in lint.errors:
+                print(f"{e['path']}:{e['line']}: [{e['rule']}] {e['msg']}")
+            print(f"\nhypar-lint: {len(lint.errors)} error(s) "
+                  f"({', '.join(f'{k}={v}' for k, v in sorted(counts.items()))})")
+        return 1
+    if not args.quiet:
+        print(f"hypar-lint: clean ({len(lint.allow_used)} allowlisted site(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

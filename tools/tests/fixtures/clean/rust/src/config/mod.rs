@@ -1,0 +1,31 @@
+pub struct TopologyConfig {
+    pub schedulers: usize,
+    pub cost_ewma_alpha: f64,
+}
+
+impl TopologyConfig {
+    pub fn from_json_text(text: &str) -> Result<Self, String> {
+        let doc = parse(text)?;
+        Ok(Self {
+            schedulers: get_usize(&doc, "schedulers", 1)?,
+            cost_ewma_alpha: get_f64(&doc, "cost_ewma_alpha", 0.4)?,
+        })
+    }
+
+    pub fn to_json(&self) -> String {
+        render(vec![
+            ("schedulers", Json::num(self.schedulers)),
+            ("cost_ewma_alpha", Json::num(self.cost_ewma_alpha)),
+        ])
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.schedulers < 1 {
+            return Err("schedulers must be >= 1".into());
+        }
+        if !(self.cost_ewma_alpha > 0.0 && self.cost_ewma_alpha <= 1.0) {
+            return Err("cost_ewma_alpha must be in (0, 1]".into());
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,15 @@
+pub struct FrameworkBuilder {
+    cfg: TopologyConfig,
+}
+
+impl FrameworkBuilder {
+    pub fn schedulers(mut self, n: usize) -> Self {
+        self.cfg.schedulers = n;
+        self
+    }
+
+    pub fn cost_ewma_alpha(mut self, a: f64) -> Self {
+        self.cfg.cost_ewma_alpha = a;
+        self
+    }
+}

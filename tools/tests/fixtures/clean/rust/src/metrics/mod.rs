@@ -1,0 +1,13 @@
+pub struct MetricsSnapshot {
+    pub jobs_executed: usize,
+    pub wall_time_us: u64,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> String {
+        render(vec![
+            ("jobs_executed", Json::num(self.jobs_executed)),
+            ("wall_time_us", Json::num(self.wall_time_us)),
+        ])
+    }
+}

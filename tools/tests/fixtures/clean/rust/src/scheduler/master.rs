@@ -1,0 +1,43 @@
+use super::{log_unroutable, FwMsg};
+
+impl Master {
+    fn handle_barrier(&mut self, msg: FwMsg) {
+        match msg {
+            FwMsg::Hello { job } => self.note(job),
+            FwMsg::Batch(msgs) => {
+                for m in msgs {
+                    self.handle_barrier(m);
+                }
+            }
+            // hypar-lint: L1 wildcard-ok — fixture master routes only
+            // completion traffic; the drop is loud in debug builds.
+            other => log_unroutable("master/barrier", &other),
+        }
+    }
+
+    fn handle_dataflow_event(&mut self, msg: FwMsg) {
+        match msg {
+            FwMsg::Hello { job } => self.note(job),
+            FwMsg::Batch(msgs) => {
+                for m in msgs {
+                    self.handle_dataflow_event(m);
+                }
+            }
+            // hypar-lint: L1 wildcard-ok — same contract as the barrier
+            // handler.
+            other => log_unroutable("master/dataflow", &other),
+        }
+    }
+
+    fn collect_final_results(&mut self) {
+        loop {
+            match self.recv() {
+                FwMsg::Data { data } => self.store(data),
+                FwMsg::Batch(msgs) => self.queue.extend(msgs),
+                // hypar-lint: L1 wildcard-ok — stragglers racing the
+                // final collection are acknowledged and dropped.
+                other => log_unroutable("master/collect", &other),
+            }
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! Golden-fixture protocol module: the minimal shape `tools/hypar_lint.py`
+//! anchors its L1/L2 rules to.  This tree never compiles — the linter is a
+//! text analyzer — it only has to exercise every rule's clean path.
+
+pub const CTRL: usize = 32;
+
+pub enum FwMsg {
+    Hello { job: u32 },
+    Data { data: FunctionData },
+    Shutdown,
+    Batch(Vec<FwMsg>),
+}
+
+impl WireSize for FwMsg {
+    fn wire_size(&self) -> usize {
+        match self {
+            FwMsg::Data { data } => CTRL + data.size_bytes(),
+            FwMsg::Batch(inner) => CTRL + wire_size_sum(inner),
+            _ => CTRL,
+        }
+    }
+}
+
+pub(crate) fn log_unroutable(role: &str, msg: &FwMsg) {
+    if cfg!(debug_assertions) {
+        eprintln!("fixture[{role}]: dropping {msg:?}");
+    }
+}

@@ -1,0 +1,26 @@
+use super::{log_unroutable, FwMsg};
+
+impl Sub {
+    fn handle(&mut self, msg: FwMsg) -> bool {
+        match msg {
+            FwMsg::Shutdown => return false,
+            FwMsg::Batch(msgs) => {
+                for m in msgs {
+                    if !self.handle(m) {
+                        return false;
+                    }
+                }
+            }
+            // hypar-lint: L1 wildcard-ok — worker-only / master-only
+            // messages cannot legally route here.
+            other => log_unroutable("sub", &other),
+        }
+        true
+    }
+
+    fn produce(&mut self) {
+        self.send(FwMsg::Hello { job: 1 });
+        self.send(FwMsg::Data { data: self.payload() });
+        self.send(FwMsg::Batch(vec![FwMsg::Shutdown]));
+    }
+}

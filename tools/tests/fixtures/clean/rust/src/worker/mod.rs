@@ -1,0 +1,17 @@
+use crate::scheduler::{log_unroutable, FwMsg};
+
+pub fn run_worker(mut rx: Receiver) {
+    loop {
+        match rx.recv() {
+            FwMsg::Data { data } => execute(data),
+            FwMsg::Batch(msgs) => {
+                for m in msgs.into_iter().rev() {
+                    rx.push_front(m);
+                }
+            }
+            // hypar-lint: L1 wildcard-ok — scheduler-bound messages cannot
+            // route to a worker; the drop is loud in debug builds.
+            other => log_unroutable("worker", &other),
+        }
+    }
+}

@@ -1,0 +1,222 @@
+#!/usr/bin/env python3
+"""Golden-fixture tests for tools/hypar_lint.py (stdlib only, no pytest).
+
+The clean fixture tree under fixtures/clean/ must pass every rule; each
+test then copies it to a temp dir, seeds exactly one violation, and
+asserts the matching rule family fires with a non-zero exit.  Finally the
+real repository tree itself must be clean — the linter is a CI gate, so
+this file failing means either the tree or the linter regressed.
+
+Run: python3 tools/tests/test_hypar_lint.py
+"""
+
+import json
+import shutil
+import subprocess
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+TOOLS = Path(__file__).resolve().parent.parent
+REPO = TOOLS.parent
+LINTER = TOOLS / "hypar_lint.py"
+CLEAN = TOOLS / "tests" / "fixtures" / "clean"
+
+
+def run_lint(root: Path, *extra: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(LINTER), "--root", str(root), *extra],
+        capture_output=True,
+        text=True,
+    )
+
+
+class FixtureCase(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory(prefix="hypar_lint_fixture_")
+        self.root = Path(self._tmp.name) / "tree"
+        shutil.copytree(CLEAN, self.root)
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def mutate(self, rel: str, old: str, new: str) -> None:
+        p = self.root / rel
+        text = p.read_text(encoding="utf-8")
+        self.assertIn(old, text, f"mutation anchor missing in {rel}")
+        p.write_text(text.replace(old, new, 1), encoding="utf-8")
+
+    def assert_fires(self, rule: str, needle: str = "") -> None:
+        r = run_lint(self.root)
+        self.assertNotEqual(
+            r.returncode, 0, f"expected {rule} to fire:\n{r.stdout}{r.stderr}"
+        )
+        self.assertIn(f"[{rule}]", r.stdout, r.stdout)
+        if needle:
+            self.assertIn(needle, r.stdout, r.stdout)
+
+    # -- negative control --------------------------------------------------
+
+    def test_clean_fixture_passes(self):
+        r = run_lint(self.root)
+        self.assertEqual(r.returncode, 0, f"{r.stdout}{r.stderr}")
+
+    def test_json_report_written(self):
+        report = self.root / "report.json"
+        r = run_lint(self.root, "--json-report", str(report))
+        self.assertEqual(r.returncode, 0, f"{r.stdout}{r.stderr}")
+        doc = json.loads(report.read_text(encoding="utf-8"))
+        self.assertTrue(doc["clean"])
+        self.assertEqual(doc["errors"], [])
+
+    # -- L1: protocol exhaustiveness --------------------------------------
+
+    def test_l1_unacknowledged_receiver_wildcard(self):
+        # Strip the worker's wildcard acknowledgement: it matches only
+        # Data and Batch, so Hello/Shutdown become silently droppable.
+        self.mutate(
+            "rust/src/worker/mod.rs",
+            "// hypar-lint: L1 wildcard-ok",
+            "//",
+        )
+        self.assert_fires("L1", "run_worker")
+
+    def test_l1_unhandled_variant_without_wildcard(self):
+        # Replace the sub's catch-all with a unit arm for one variant:
+        # remaining variants are neither matched nor acknowledged.
+        self.mutate(
+            "rust/src/scheduler/sub.rs",
+            "// hypar-lint: L1 wildcard-ok — worker-only / master-only\n"
+            "            // messages cannot legally route here.\n"
+            "            other => log_unroutable(\"sub\", &other),",
+            "FwMsg::Hello { .. } => {}",
+        )
+        self.assert_fires("L1", "handle")
+
+    def test_l1_dead_variant(self):
+        self.mutate(
+            "rust/src/scheduler/mod.rs",
+            "    Shutdown,",
+            "    Shutdown,\n    Zombie,",
+        )
+        self.assert_fires("L1", "Zombie")
+
+    # -- L2: wire-size consistency ----------------------------------------
+
+    def test_l2_missing_payload_arm(self):
+        self.mutate(
+            "rust/src/scheduler/mod.rs",
+            "            FwMsg::Data { data } => CTRL + data.size_bytes(),\n",
+            "",
+        )
+        self.assert_fires("L2", "Data")
+
+    def test_l2_batch_charging(self):
+        self.mutate(
+            "rust/src/scheduler/mod.rs",
+            "FwMsg::Batch(inner) => CTRL + wire_size_sum(inner),",
+            "FwMsg::Batch(inner) => wire_size_sum(inner),",
+        )
+        self.assert_fires("L2", "Batch")
+
+    # -- L3: knob registry -------------------------------------------------
+
+    def test_l3_undocumented_knob(self):
+        self.mutate(
+            "rust/src/config/mod.rs",
+            "    pub cost_ewma_alpha: f64,",
+            "    pub cost_ewma_alpha: f64,\n    pub new_knob: bool,",
+        )
+        self.assert_fires("L3", "new_knob")
+
+    def test_l3_stale_readme_row(self):
+        self.mutate(
+            "README.md",
+            "| `schedulers` | `.schedulers(n)` | `1` | Sub-scheduler count (≥ 1). |",
+            "| `schedulers` | `.schedulers(n)` | `1` | Sub-scheduler count (≥ 1). |\n"
+            "| `ghost_knob` | — | `0` | Long gone. |",
+        )
+        self.assert_fires("L3", "ghost_knob")
+
+    def test_l3_unenforced_range_constraint(self):
+        self.mutate(
+            "rust/src/config/mod.rs",
+            'if self.schedulers < 1 {\n            return Err("schedulers must be >= 1".into());\n        }\n        ',
+            "",
+        )
+        self.assert_fires("L3", "schedulers")
+
+    def test_l3_design_section_missing_knob(self):
+        self.mutate("DESIGN.md", "`cost_ewma_alpha`", "`that knob`")
+        self.assert_fires("L3", "cost_ewma_alpha")
+
+    # -- L4: metrics registry ----------------------------------------------
+
+    def test_l4_unexported_counter(self):
+        self.mutate(
+            "rust/src/metrics/mod.rs",
+            "    pub wall_time_us: u64,",
+            "    pub wall_time_us: u64,\n    pub lost_counter: u64,",
+        )
+        self.assert_fires("L4", "lost_counter")
+
+    def test_l4_undocumented_export(self):
+        self.mutate("README.md", "`wall_time_us`", "`that counter`")
+        self.mutate("DESIGN.md", "`wall_time_us`", "`that counter`")
+        self.assert_fires("L4", "wall_time_us")
+
+    # -- L5: lock discipline -----------------------------------------------
+
+    def test_l5_guard_across_send(self):
+        self.mutate(
+            "rust/src/scheduler/sub.rs",
+            "    fn produce(&mut self) {",
+            "    fn bad_send(&self) {\n"
+            "        let guard = self.state.lock().unwrap();\n"
+            "        self.comm.send(guard.dst);\n"
+            "    }\n\n"
+            "    fn produce(&mut self) {",
+        )
+        self.assert_fires("L5", "bad_send")
+
+    def test_l5_allowlisted_site_passes(self):
+        self.mutate(
+            "rust/src/scheduler/sub.rs",
+            "    fn produce(&mut self) {",
+            "    fn audited_send(&self) {\n"
+            "        let guard = self.state.lock().unwrap();\n"
+            "        self.comm.send(guard.dst);\n"
+            "    }\n\n"
+            "    fn produce(&mut self) {",
+        )
+        allow = self.root / "tools" / "hypar_lint_allow.txt"
+        allow.parent.mkdir(parents=True, exist_ok=True)
+        allow.write_text(
+            "L5 rust/src/scheduler/sub.rs:audited_send:guard — fixture "
+            "audit: the send is a non-blocking local deposit.\n",
+            encoding="utf-8",
+        )
+        r = run_lint(self.root)
+        self.assertEqual(r.returncode, 0, f"{r.stdout}{r.stderr}")
+
+    def test_stale_allowlist_entry_fails(self):
+        allow = self.root / "tools" / "hypar_lint_allow.txt"
+        allow.parent.mkdir(parents=True, exist_ok=True)
+        allow.write_text(
+            "L5 rust/src/scheduler/sub.rs:gone:guard — nothing matches.\n",
+            encoding="utf-8",
+        )
+        r = run_lint(self.root)
+        self.assertNotEqual(r.returncode, 0, r.stdout)
+        self.assertIn("stale allowlist entry", r.stdout)
+
+
+class RealTreeCase(unittest.TestCase):
+    def test_real_tree_is_clean(self):
+        r = run_lint(REPO)
+        self.assertEqual(r.returncode, 0, f"{r.stdout}{r.stderr}")
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
