@@ -1,0 +1,330 @@
+//! ABL-RESIL: failure-domain hardening (DESIGN.md §14) under seeded
+//! chaos — the run must *complete*, produce *bit-identical values*, and
+//! pay a *bounded* recovery overhead.
+//!
+//! Three scenarios over the same lane-chain workload:
+//!
+//! 1. **fault-free** — hardening armed (heartbeats + straggler
+//!    deadlines), no chaos: the reference digest and wall-clock.
+//! 2. **chaos** — seeded drops, duplicates and delays plus one worker
+//!    rank doomed at its n-th send: heartbeat detection, deadline-based
+//!    re-execution and duplicate-completion tolerance must absorb every
+//!    perturbation.
+//! 3. **straggler** — one job hangs far past its deadline: a speculative
+//!    replica must be dispatched and *win*.
+//!
+//! Acceptance: chaos run completes with the fault-free digest; recovery
+//! overhead ≤ 2× fault-free wall-clock (full runs only); the straggler
+//! scenario records `speculative_wins ≥ 1`; the §14 metric keys ride the
+//! serialised snapshot.
+//!
+//! ```text
+//! cargo bench --bench abl_resilience
+//! # env knobs:
+//! #   HYPAR_RESIL_LANES=6  HYPAR_RESIL_SWEEPS=30  HYPAR_RESIL_ELEMS=32
+//! #   HYPAR_RESIL_BASE_US=2000
+//! #   HYPAR_RESIL_JSON=BENCH_resilience.json
+//! #   HYPAR_BENCH_REPS=5  HYPAR_BENCH_WARMUP=1
+//! #   HYPAR_BENCH_SMOKE=1   (tiny sizes, perf assertions skipped)
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hypar::fault::{ChaosConfig, ChaosCrash, ChaosPlan};
+use hypar::prelude::*;
+use hypar::util::bench::{Bench, Report};
+use hypar::util::json::Json;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct Shape {
+    /// Independent chains.
+    lanes: usize,
+    /// Chain length (jobs per lane).
+    sweeps: usize,
+    /// f32 elements per state chunk (2 of them are lane/sweep tags).
+    elems: usize,
+    /// Compute sleep per job, µs.
+    base_us: usize,
+    /// Straggler cold-start deadline floor, µs.
+    cold_us: usize,
+}
+
+/// Per-lane seed emitters plus one deterministic transform (same chain
+/// model as ABL-CTRLB: element 0 tags the lane, element 1 the sweep).
+fn registry(s: &Shape) -> FunctionRegistry {
+    let mut reg = FunctionRegistry::new();
+    let elems = s.elems;
+    for l in 0..s.lanes {
+        reg.register_plain(100 + l as u32, format!("seed{l}"), move |_in, out| {
+            let mut v = vec![l as f32, 0.0];
+            v.extend((0..elems.saturating_sub(2)).map(|i| (l * 13 + i) as f32 * 0.01));
+            out.push(DataChunk::from_f32(v));
+            Ok(())
+        });
+    }
+    let base_us = s.base_us;
+    reg.register_plain(1, "tick", move |input, out| {
+        let prev = input.chunks()[0].as_f32()?;
+        let lane = prev[0];
+        let sweep = prev[1] + 1.0;
+        std::thread::sleep(std::time::Duration::from_micros(base_us as u64));
+        let v: Vec<f32> = prev
+            .iter()
+            .enumerate()
+            .map(|(i, p)| match i {
+                0 => lane,
+                1 => sweep,
+                _ => p * 1.01 + 0.1,
+            })
+            .collect();
+        out.push(DataChunk::from_f32(v));
+        Ok(())
+    });
+    reg
+}
+
+fn algorithm(s: &Shape) -> Algorithm {
+    let seed_id = |l: usize| (1 + l) as u32;
+    let sweep_id = |sw: usize, l: usize| (1 + s.lanes + (sw - 1) * s.lanes + l) as u32;
+    let mut b = Algorithm::builder();
+    b = b.segment((0..s.lanes).map(|l| JobSpec::new(seed_id(l), 100 + l as u32, 1)).collect());
+    for sw in 1..=s.sweeps {
+        let seg = (0..s.lanes)
+            .map(|l| {
+                let prev = if sw == 1 { seed_id(l) } else { sweep_id(sw - 1, l) };
+                JobSpec::new(sweep_id(sw, l), 1, 1)
+                    .with_inputs(vec![ChunkRef::all(JobId(prev))])
+            })
+            .collect();
+        b = b.segment(seg);
+    }
+    b.build().expect("valid chain algorithm")
+}
+
+/// A hardened framework for the chain workload; `chaos` arms a seeded
+/// perturbation schedule (fresh per run — budgets and dooms are consumed).
+fn run_once(s: &Shape, chaos: Option<ChaosConfig>) -> RunReport {
+    let mut b = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .cores_per_worker(2)
+        .prespawn_workers(true)
+        .heartbeats(true)
+        .heartbeat_interval_ms(25)
+        .heartbeat_miss_limit(40)
+        .straggler_deadlines(true)
+        .straggler_factor(8.0)
+        .straggler_cold_us(s.cold_us as u64)
+        .job_retry_backoff_us(50_000)
+        .max_rank_losses(2)
+        .registry(registry(s));
+    if let Some(cfg) = chaos {
+        b = b.chaos(Arc::new(ChaosPlan::new(cfg)));
+    }
+    b.build().expect("framework build").run(algorithm(s)).expect("hardened run")
+}
+
+/// Deterministically ordered digest of the final-segment values.
+fn digest(report: &RunReport) -> Vec<(u32, Vec<f32>)> {
+    report
+        .results
+        .iter()
+        .map(|(id, data)| {
+            let vals: Vec<f32> = data
+                .chunks()
+                .iter()
+                .flat_map(|c| c.as_f32().unwrap().iter().copied())
+                .collect();
+            (id.0, vals)
+        })
+        .collect()
+}
+
+/// Straggler scenario: the first execution of the only job hangs; a
+/// speculative replica on the other sub-scheduler must win.
+fn straggler_wins() -> RunReport {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "sometimes_slow", move |_in, out| {
+        if calls.fetch_add(1, Ordering::SeqCst) == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(400));
+        }
+        out.push(DataChunk::scalar_f32(6.0));
+        Ok(())
+    });
+    Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(1)
+        .heartbeats(false)
+        .straggler_deadlines(true)
+        .straggler_factor(1.0)
+        .straggler_cold_us(60_000)
+        .job_retry_backoff_us(0)
+        .registry(reg)
+        .build()
+        .expect("framework build")
+        .run(Algorithm::parse("J1(1,1,0);").unwrap())
+        .expect("straggler run")
+}
+
+fn main() {
+    let smoke = std::env::var("HYPAR_BENCH_SMOKE").is_ok();
+    let shape = if smoke {
+        Shape {
+            lanes: env_usize("HYPAR_RESIL_LANES", 2),
+            sweeps: env_usize("HYPAR_RESIL_SWEEPS", 4),
+            elems: env_usize("HYPAR_RESIL_ELEMS", 16),
+            base_us: env_usize("HYPAR_RESIL_BASE_US", 200),
+            cold_us: 30_000,
+        }
+    } else {
+        Shape {
+            lanes: env_usize("HYPAR_RESIL_LANES", 6),
+            sweeps: env_usize("HYPAR_RESIL_SWEEPS", 30),
+            elems: env_usize("HYPAR_RESIL_ELEMS", 32),
+            base_us: env_usize("HYPAR_RESIL_BASE_US", 2_000),
+            cold_us: 40_000,
+        }
+    };
+    // Ranks under prespawn: master 0, subs 1..=2, workers 3..=6.  Doom one
+    // worker at its 2nd send: its first completion vanishes mid-protocol.
+    let chaos_cfg = ChaosConfig {
+        seed: 0x5EED_14,
+        drop_one_in: 6,
+        drop_budget: 2,
+        dup_one_in: 6,
+        dup_budget: 2,
+        delay_one_in: 4,
+        delay_budget: 3,
+        max_delay_us: 2_000,
+        crash: Some(ChaosCrash { rank: Rank(3), at_send: 2 }),
+        ..ChaosConfig::default()
+    };
+    let bench = Bench::default();
+
+    println!(
+        "ABL-RESIL: {} lanes x {} jobs ({} µs compute), chaos seed {:#x} \
+         (drops/dups/delays + doomed rank 3), reps {}{}",
+        shape.lanes,
+        shape.sweeps,
+        shape.base_us,
+        chaos_cfg.seed,
+        bench.reps,
+        if smoke { " [SMOKE: no perf assertions]" } else { "" }
+    );
+
+    let mut report = Report::new("abl_resilience: fault-free vs seeded chaos");
+    let mut digests: (Option<Vec<(u32, Vec<f32>)>>, Option<Vec<(u32, Vec<f32>)>>) =
+        (None, None);
+    let mut chaos_ranks_lost = 0usize;
+    let mut chaos_reexecs = 0usize;
+    let mut chaos_dropped = 0u64;
+    let mut chaos_duplicated = 0u64;
+    let mut snapshot_has_resil_keys = false;
+
+    let m_clean = bench.measure("resilience/fault_free", || {
+        let r = run_once(&shape, None);
+        digests.0 = Some(digest(&r));
+    });
+    let m_chaos = bench.measure("resilience/chaos", || {
+        let r = run_once(&shape, Some(chaos_cfg.clone()));
+        chaos_ranks_lost = r.metrics.ranks_lost;
+        chaos_reexecs = r.metrics.speculative_reexecs;
+        chaos_dropped = r.metrics.msgs_dropped;
+        chaos_duplicated = r.metrics.msgs_duplicated;
+        // Acceptance: the §14 counters must ride the serialised snapshot.
+        let doc = hypar::util::json::parse(&r.metrics.to_json().to_string())
+            .expect("snapshot json parses");
+        snapshot_has_resil_keys = doc.get("ranks_lost").is_some()
+            && doc.get("heartbeat_misses").is_some()
+            && doc.get("speculative_reexecs").is_some()
+            && doc.get("speculative_wins").is_some()
+            && doc.get("msgs_dropped").is_some()
+            && doc.get("msgs_delayed").is_some()
+            && doc.get("msgs_duplicated").is_some();
+        digests.1 = Some(digest(&r));
+    });
+    report.add(m_clean.clone());
+    report.add(m_chaos.clone());
+    report.finish();
+
+    let straggler = straggler_wins();
+    let straggler_val = straggler
+        .result(1)
+        .and_then(|d| d.chunk(0).ok())
+        .and_then(|c| c.first_f32().ok());
+
+    let overhead = m_chaos.mean.as_secs_f64() / m_clean.mean.as_secs_f64();
+    let identical = digests.0 == digests.1;
+    println!(
+        "\nchaos overhead {overhead:.2}x over fault-free ({chaos_dropped} drops, \
+         {chaos_duplicated} dups, {chaos_ranks_lost} ranks lost, {chaos_reexecs} \
+         speculative re-execs); straggler wins {}",
+        straggler.metrics.speculative_wins
+    );
+
+    // Machine-readable perf-trajectory row.
+    let out_path = std::env::var("HYPAR_RESIL_JSON")
+        .unwrap_or_else(|_| "BENCH_resilience.json".to_string());
+    let doc = Json::obj(vec![
+        ("bench", Json::str("abl_resilience".to_string())),
+        ("smoke", Json::Bool(smoke)),
+        ("lanes", Json::num(shape.lanes as f64)),
+        ("sweeps", Json::num(shape.sweeps as f64)),
+        ("base_us", Json::num(shape.base_us as f64)),
+        ("reps", Json::num(bench.reps as f64)),
+        ("fault_free_mean_ms", Json::num(m_clean.mean_ms())),
+        ("chaos_mean_ms", Json::num(m_chaos.mean_ms())),
+        ("recovery_overhead", Json::num(overhead)),
+        ("msgs_dropped", Json::num(chaos_dropped as f64)),
+        ("msgs_duplicated", Json::num(chaos_duplicated as f64)),
+        ("ranks_lost", Json::num(chaos_ranks_lost as f64)),
+        ("speculative_reexecs", Json::num(chaos_reexecs as f64)),
+        (
+            "straggler_speculative_wins",
+            Json::num(straggler.metrics.speculative_wins as f64),
+        ),
+        ("identical_values", Json::Bool(identical)),
+    ]);
+    match std::fs::write(&out_path, doc.to_string_pretty(2)) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+
+    // Correctness gates hold even in smoke mode; the overhead gate only
+    // in a full run (smoke shapes are too small to time meaningfully).
+    let mut pass = true;
+    if !identical {
+        println!("ACCEPTANCE FAIL: chaos run values differ from fault-free");
+        pass = false;
+    }
+    if !snapshot_has_resil_keys {
+        println!("ACCEPTANCE FAIL: §14 resilience metrics missing from to_json");
+        pass = false;
+    }
+    if straggler.metrics.speculative_wins == 0 {
+        println!("ACCEPTANCE FAIL: straggler scenario never won a speculative race");
+        pass = false;
+    }
+    if straggler_val != Some(6.0) {
+        println!("ACCEPTANCE FAIL: straggler scenario value wrong: {straggler_val:?}");
+        pass = false;
+    }
+    if !smoke && overhead > 2.0 {
+        println!("ACCEPTANCE FAIL: recovery overhead {overhead:.2}x exceeds 2x");
+        pass = false;
+    }
+    if pass {
+        println!(
+            "ACCEPTANCE PASS: {}identical values under chaos, straggler replica won, \
+             resilience metrics exported",
+            if smoke { "(smoke) " } else { "overhead <= 2x, " }
+        );
+    } else {
+        std::process::exit(1);
+    }
+}

@@ -56,7 +56,7 @@ fn my_index(rank: Rank, participants: &[Rank]) -> Result<usize> {
     })
 }
 
-impl<M: Send + WireSize + 'static> Comm<M> {
+impl<M: Send + WireSize + Clone + 'static> Comm<M> {
     /// Synchronise all `participants`. Root collects one token from each
     /// non-root, then releases them.
     pub fn barrier(&mut self, participants: &[Rank]) -> Result<()> {

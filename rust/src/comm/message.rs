@@ -142,6 +142,20 @@ impl<M> Envelope<M> {
     }
 }
 
+impl<M: Clone> Envelope<M> {
+    /// A second copy of this envelope — the chaos transport's duplicate
+    /// injection (DESIGN.md §14).  Deliberately not a public `Clone`
+    /// impl: real traffic must never fork an envelope.
+    pub(crate) fn duplicate(&self) -> Envelope<M> {
+        Envelope {
+            src: self.src,
+            dst: self.dst,
+            tag: self.tag,
+            payload: self.payload.clone(),
+        }
+    }
+}
+
 impl<M: WireSize> Envelope<M> {
     pub(crate) fn wire_size(&self) -> usize {
         HEADER_BYTES

@@ -14,7 +14,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::Duration;
 
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -25,6 +25,7 @@ use super::costmodel::{
 use super::message::{CollPayload, Envelope, Inner, Tag, WireSize};
 use super::Rank;
 use crate::error::{Error, Result};
+use crate::fault::ChaosPlan;
 
 struct WorldInner<M> {
     mailboxes: RwLock<HashMap<Rank, Sender<Envelope<M>>>>,
@@ -37,6 +38,14 @@ struct WorldInner<M> {
     /// (DESIGN.md §10); fed by [`deliver`] on every cross-rank send.
     calibration: Arc<CommCalibration>,
     stats: CommStats,
+    /// Optional seeded chaos schedule consulted on every cross-rank send
+    /// (DESIGN.md §14).  Lock-free `get()` on the hot path; `None` in
+    /// every production run.
+    chaos: OnceLock<Arc<ChaosPlan>>,
+    /// Per-source held-back envelope for chaos reorder injection: a
+    /// stashed message is delivered right after the source's *next*
+    /// message (an adjacent-pair swap).
+    chaos_stash: Mutex<HashMap<Rank, Envelope<M>>>,
 }
 
 impl<M> WorldInner<M> {
@@ -104,8 +113,19 @@ impl<M: Send + WireSize + 'static> World<M> {
                 cost,
                 calibration,
                 stats: CommStats::default(),
+                chaos: OnceLock::new(),
+                chaos_stash: Mutex::new(HashMap::new()),
             }),
         }
+    }
+
+    /// Install a seeded chaos schedule (test-only; DESIGN.md §14).  Every
+    /// subsequent cross-rank send consults the plan, which may drop,
+    /// delay, duplicate or reorder the message, or swallow all traffic
+    /// from a rank past its crash-at-*n*-th-send point.  First caller
+    /// wins; self-sends are never perturbed.
+    pub fn set_chaos(&self, plan: Arc<ChaosPlan>) {
+        let _ = self.inner.chaos.set(plan);
     }
 
     /// Register a new rank and hand out its receive endpoint.  Ranks are
@@ -172,7 +192,68 @@ impl<M: Send + WireSize + 'static> World<M> {
     }
 }
 
-fn deliver<M: WireSize>(
+/// Chaos-aware delivery front door: consult the installed [`ChaosPlan`]
+/// (if any) for every cross-rank send, then hand the surviving envelope(s)
+/// to [`deliver_one`].  No chaos plan (every production run) is a single
+/// lock-free `OnceLock::get` miss and a tail call.
+fn deliver<M: WireSize + Clone>(
+    inner: &WorldInner<M>,
+    cache: &Mutex<SendCache<M>>,
+    env: Envelope<M>,
+) -> Result<()> {
+    let Some(plan) = inner.chaos.get() else {
+        return deliver_one(inner, cache, env);
+    };
+    if env.src == env.dst {
+        // Self-sends are process-local; the wire cannot hurt them.
+        return deliver_one(inner, cache, env);
+    }
+    let d = plan.decide(env.src);
+    if d.drop {
+        return Ok(());
+    }
+    if d.delay_us > 0 {
+        std::thread::sleep(Duration::from_micros(d.delay_us));
+    }
+    let copy = if d.duplicate { Some(env.duplicate()) } else { None };
+    if d.stash {
+        // Hold this envelope back; it rides out right after the source's
+        // next delivered message (adjacent-pair reorder).  A displaced
+        // earlier stash is flushed now so at most one message per source
+        // is ever in flight "backwards".
+        let src = env.src;
+        let prev = inner
+            .chaos_stash
+            .lock()
+            .expect("chaos stash poisoned")
+            .insert(src, env);
+        if let Some(p) = prev {
+            let _ = deliver_one(inner, cache, p);
+        }
+        if let Some(c) = copy {
+            let _ = deliver_one(inner, cache, c);
+        }
+        return Ok(());
+    }
+    let src = env.src;
+    let res = deliver_one(inner, cache, env);
+    // Duplicates and released stashes are best-effort: a dead destination
+    // already surfaced (or will surface) through the primary send.
+    if let Some(c) = copy {
+        let _ = deliver_one(inner, cache, c);
+    }
+    let stashed = inner
+        .chaos_stash
+        .lock()
+        .expect("chaos stash poisoned")
+        .remove(&src);
+    if let Some(p) = stashed {
+        let _ = deliver_one(inner, cache, p);
+    }
+    res
+}
+
+fn deliver_one<M: WireSize>(
     inner: &WorldInner<M>,
     cache: &Mutex<SendCache<M>>,
     env: Envelope<M>,
@@ -237,7 +318,7 @@ impl<M> Clone for CommSender<M> {
     }
 }
 
-impl<M: Send + WireSize + 'static> CommSender<M> {
+impl<M: Send + WireSize + Clone + 'static> CommSender<M> {
     /// The source rank stamped on every send from this handle.
     pub fn rank(&self) -> Rank {
         self.src
@@ -297,7 +378,7 @@ impl Match {
     }
 }
 
-impl<M: Send + WireSize + 'static> Comm<M> {
+impl<M: Send + WireSize + Clone + 'static> Comm<M> {
     /// This endpoint's rank.
     pub fn rank(&self) -> Rank {
         self.rank

@@ -28,7 +28,15 @@
 //!   "comm_calibration_ewma_alpha": 0.3,
 //!   "ctrl_batching": true,
 //!   "ctrl_batch_max_msgs": 64,
-//!   "ctrl_batch_max_delay_us": 200
+//!   "ctrl_batch_max_delay_us": 200,
+//!   "heartbeats": true,
+//!   "heartbeat_interval_ms": 200,
+//!   "heartbeat_miss_limit": 15,
+//!   "straggler_deadlines": true,
+//!   "straggler_factor": 16.0,
+//!   "straggler_cold_us": 2000000,
+//!   "max_rank_losses": 4,
+//!   "job_retry_backoff_us": 250000
 //! }
 //! ```
 //!
@@ -220,6 +228,39 @@ pub struct TopologyConfig {
     /// Longest a buffered control message may wait before a flush is
     /// forced, in microseconds (latency bound of the coalescers).
     pub ctrl_batch_max_delay_us: u64,
+    /// Master↔sub heartbeat failure detection (DESIGN.md §14): the master
+    /// beats every monitored sub and declares a rank lost after
+    /// `heartbeat_miss_limit` silent intervals, catching *hung* ranks the
+    /// fail-fast sends cannot see.  On by default; off reproduces the
+    /// PR 7 control plane exactly (pinned by property test).
+    pub heartbeats: bool,
+    /// Heartbeat probe cadence in milliseconds (>= 1).  The detection
+    /// deadline is roughly `heartbeat_interval_ms × heartbeat_miss_limit`.
+    pub heartbeat_interval_ms: u64,
+    /// Consecutive silent heartbeat intervals before a rank is declared
+    /// lost (>= 1).
+    pub heartbeat_miss_limit: u32,
+    /// Deadline-based straggler re-execution (DESIGN.md §14): jobs whose
+    /// execution exceeds the §9 cost-model estimate by `straggler_factor`
+    /// are speculatively re-placed on another scheduler; first completion
+    /// wins, the loser is cancelled.  On by default; off reproduces the
+    /// PR 7 scheduling exactly (pinned by property test).  Values are
+    /// byte-identical either way.
+    pub straggler_deadlines: bool,
+    /// Deadline multiplier over the cost-model estimate (>= 1).  Large
+    /// values only catch pathological stalls; small values trade
+    /// redundant work for latency.
+    pub straggler_factor: f64,
+    /// Deadline floor in microseconds, used while a job kind has no
+    /// estimate yet (cold start) and as the minimum deadline always.
+    pub straggler_cold_us: u64,
+    /// Rank losses tolerated before the run degrades gracefully
+    /// (DESIGN.md §14): one more loss fails the run with a structured
+    /// `Error::Degraded` report instead of recovering forever.
+    pub max_rank_losses: usize,
+    /// Minimum spacing between speculative re-executions of the same job,
+    /// in microseconds (backoff of the straggler re-placement loop).
+    pub job_retry_backoff_us: u64,
 }
 
 impl Default for TopologyConfig {
@@ -244,6 +285,14 @@ impl Default for TopologyConfig {
             ctrl_batching: true,
             ctrl_batch_max_msgs: 64,
             ctrl_batch_max_delay_us: 200,
+            heartbeats: true,
+            heartbeat_interval_ms: 200,
+            heartbeat_miss_limit: 15,
+            straggler_deadlines: true,
+            straggler_factor: 16.0,
+            straggler_cold_us: 2_000_000,
+            max_rank_losses: 4,
+            job_retry_backoff_us: 250_000,
         }
     }
 }
@@ -339,6 +388,30 @@ impl TopologyConfig {
         cfg.ctrl_batch_max_delay_us =
             get_usize("ctrl_batch_max_delay_us", cfg.ctrl_batch_max_delay_us as usize)?
                 as u64;
+        if let Some(v) = doc.get("heartbeats") {
+            cfg.heartbeats = v
+                .as_bool()
+                .ok_or_else(|| Error::Config("heartbeats must be a bool".into()))?;
+        }
+        cfg.heartbeat_interval_ms =
+            get_usize("heartbeat_interval_ms", cfg.heartbeat_interval_ms as usize)? as u64;
+        cfg.heartbeat_miss_limit =
+            get_usize("heartbeat_miss_limit", cfg.heartbeat_miss_limit as usize)? as u32;
+        if let Some(v) = doc.get("straggler_deadlines") {
+            cfg.straggler_deadlines = v.as_bool().ok_or_else(|| {
+                Error::Config("straggler_deadlines must be a bool".into())
+            })?;
+        }
+        if let Some(v) = doc.get("straggler_factor") {
+            cfg.straggler_factor = v
+                .as_f64()
+                .ok_or_else(|| Error::Config("straggler_factor must be a number".into()))?;
+        }
+        cfg.straggler_cold_us =
+            get_usize("straggler_cold_us", cfg.straggler_cold_us as usize)? as u64;
+        cfg.max_rank_losses = get_usize("max_rank_losses", cfg.max_rank_losses)?;
+        cfg.job_retry_backoff_us =
+            get_usize("job_retry_backoff_us", cfg.job_retry_backoff_us as usize)? as u64;
         if let Some(v) = doc.get("execution_mode") {
             let s = v
                 .as_str()
@@ -413,6 +486,26 @@ impl TopologyConfig {
                 "ctrl_batch_max_delay_us",
                 Json::num(self.ctrl_batch_max_delay_us as f64),
             ),
+            ("heartbeats", Json::Bool(self.heartbeats)),
+            (
+                "heartbeat_interval_ms",
+                Json::num(self.heartbeat_interval_ms as f64),
+            ),
+            (
+                "heartbeat_miss_limit",
+                Json::num(self.heartbeat_miss_limit as f64),
+            ),
+            ("straggler_deadlines", Json::Bool(self.straggler_deadlines)),
+            ("straggler_factor", Json::num(self.straggler_factor)),
+            (
+                "straggler_cold_us",
+                Json::num(self.straggler_cold_us as f64),
+            ),
+            ("max_rank_losses", Json::num(self.max_rank_losses as f64)),
+            (
+                "job_retry_backoff_us",
+                Json::num(self.job_retry_backoff_us as f64),
+            ),
             (
                 "comm_cost_model",
                 Json::obj(vec![
@@ -456,6 +549,18 @@ impl TopologyConfig {
         }
         if self.ctrl_batch_max_msgs == 0 {
             return Err(Error::Config("ctrl_batch_max_msgs must be >= 1".into()));
+        }
+        if self.heartbeat_interval_ms == 0 {
+            return Err(Error::Config("heartbeat_interval_ms must be >= 1".into()));
+        }
+        if self.heartbeat_miss_limit == 0 {
+            return Err(Error::Config("heartbeat_miss_limit must be >= 1".into()));
+        }
+        if !self.straggler_factor.is_finite() || self.straggler_factor < 1.0 {
+            return Err(Error::Config(format!(
+                "straggler_factor must be >= 1, got {}",
+                self.straggler_factor
+            )));
         }
         if !self.cost_ewma_alpha.is_finite()
             || self.cost_ewma_alpha <= 0.0
@@ -674,6 +779,66 @@ mod tests {
     fn zero_ctrl_batch_max_msgs_rejected() {
         let cfg = TopologyConfig { ctrl_batch_max_msgs: 0, ..Default::default() };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn failure_hardening_knobs_parse_and_roundtrip() {
+        let d = TopologyConfig::default();
+        assert!(d.heartbeats, "on by default");
+        assert_eq!(d.heartbeat_interval_ms, 200);
+        assert_eq!(d.heartbeat_miss_limit, 15);
+        assert!(d.straggler_deadlines, "on by default");
+        assert_eq!(d.straggler_factor, 16.0);
+        assert_eq!(d.straggler_cold_us, 2_000_000);
+        assert_eq!(d.max_rank_losses, 4);
+        assert_eq!(d.job_retry_backoff_us, 250_000);
+        let cfg = TopologyConfig::from_json_text(
+            r#"{"heartbeats": false, "heartbeat_interval_ms": 50,
+                "heartbeat_miss_limit": 3, "straggler_deadlines": false,
+                "straggler_factor": 2.5, "straggler_cold_us": 100000,
+                "max_rank_losses": 1, "job_retry_backoff_us": 5000}"#,
+        )
+        .unwrap();
+        assert!(!cfg.heartbeats);
+        assert_eq!(cfg.heartbeat_interval_ms, 50);
+        assert_eq!(cfg.heartbeat_miss_limit, 3);
+        assert!(!cfg.straggler_deadlines);
+        assert_eq!(cfg.straggler_factor, 2.5);
+        assert_eq!(cfg.straggler_cold_us, 100_000);
+        assert_eq!(cfg.max_rank_losses, 1);
+        assert_eq!(cfg.job_retry_backoff_us, 5_000);
+        let back = TopologyConfig::from_json_text(&cfg.to_json()).unwrap();
+        assert!(!back.heartbeats);
+        assert_eq!(back.heartbeat_interval_ms, 50);
+        assert_eq!(back.heartbeat_miss_limit, 3);
+        assert!(!back.straggler_deadlines);
+        assert_eq!(back.straggler_factor, 2.5);
+        assert_eq!(back.straggler_cold_us, 100_000);
+        assert_eq!(back.max_rank_losses, 1);
+        assert_eq!(back.job_retry_backoff_us, 5_000);
+        assert!(TopologyConfig::from_json_text(r#"{"heartbeats": "on"}"#).is_err());
+        assert!(
+            TopologyConfig::from_json_text(r#"{"straggler_deadlines": 1}"#).is_err()
+        );
+        assert!(
+            TopologyConfig::from_json_text(r#"{"straggler_factor": "big"}"#).is_err()
+        );
+        assert!(
+            TopologyConfig::from_json_text(r#"{"heartbeat_interval_ms": "slow"}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn bad_failure_hardening_knobs_rejected() {
+        let cfg = TopologyConfig { heartbeat_interval_ms: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = TopologyConfig { heartbeat_miss_limit: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        for bad in [0.5, 0.0, f64::NAN] {
+            let cfg = TopologyConfig { straggler_factor: bad, ..Default::default() };
+            assert!(cfg.validate().is_err(), "factor {bad} must be rejected");
+        }
     }
 
     #[test]

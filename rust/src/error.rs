@@ -179,6 +179,12 @@ pub enum Error {
         msg: String,
     },
 
+    /// The run exceeded its failure budget (`max_rank_losses`, per-job
+    /// retry cap — DESIGN.md §14) and gave up gracefully: the report
+    /// inventories what completed and what was still outstanding.
+    #[error("run degraded beyond its failure budget: {0}")]
+    Degraded(Box<crate::fault::FailureReport>),
+
     // ------------------------------------------------------------- config
     /// Invalid topology / engine configuration.
     #[error("invalid configuration: {0}")]

@@ -1,38 +1,65 @@
-//! Fault injection and the recompute contract.
+//! Fault injection, seeded chaos schedules, and the recompute contract.
 //!
 //! The paper names the keep-results drawback explicitly: "in case a worker
 //! (due to some failure) has to be shut down, all results computed so far
 //! are lost and have to be re-computed" — and lists fault tolerance as
-//! future work.  This module implements both halves:
+//! future work.  This module implements the injection half of the failure
+//! story (DESIGN.md §14):
 //!
 //! * [`FaultInjector`] — deterministic failure injection for tests and
 //!   resilience benchmarks: a worker crashes (vanishes without a message)
 //!   when it is about to execute a marked job, or when its rank is marked.
+//! * [`ChaosPlan`] — a deterministic, seeded *message-level* chaos
+//!   schedule hooked into the transport's delivery path
+//!   (`World::set_chaos`): individual messages are dropped, delayed,
+//!   duplicated or reordered, and a chosen rank "crashes" at its *n*-th
+//!   send (all subsequent sends swallowed, the worker-side probe fires).
+//!   Every decision is drawn from a per-source-rank
+//!   [`crate::util::rng::Rng`] stream, so a chaos run replays exactly for
+//!   a given seed and per-rank send sequence.
 //! * The **recovery path** lives in the schedulers: a sub-scheduler
 //!   detects the dead rank (fail-fast sends / liveness probe), reports the
 //!   lost retained results and in-flight jobs to the master
 //!   ([`crate::scheduler::FwMsg::WorkerLostReport`]), and the master
 //!   re-executes the lost closure in dependency order (only results that
-//!   are still referenced by remaining segments are recomputed).
+//!   are still referenced by remaining segments are recomputed).  Silent
+//!   failures the fail-fast sends cannot see — hung ranks, dropped
+//!   messages — are covered by the master's heartbeat detector and
+//!   deadline-based straggler re-execution (DESIGN.md §14).
 
-use std::collections::HashSet;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::comm::Rank;
 use crate::job::JobId;
+use crate::util::rng::Rng;
 
-/// Shared, thread-safe failure plan. One per framework run (defaults to
-/// "never fail").
+/// Pending crash triggers, kept under ONE mutex so a probe observes the
+/// job- and rank-trigger sets atomically (a concurrent `crash_on_job` /
+/// `crash_rank` pair can never be half-seen).
 #[derive(Debug, Default)]
-pub struct FaultInjector {
+struct Triggers {
     /// Crash the worker that is about to execute this job (consumed on
     /// trigger, so the recomputed attempt succeeds).
-    crash_on_job: Mutex<HashSet<JobId>>,
+    by_job: HashSet<JobId>,
     /// Crash this specific worker rank at its next execution.
-    crash_rank: Mutex<HashSet<Rank>>,
+    by_rank: HashSet<Rank>,
+}
+
+/// Shared, thread-safe failure plan. One per framework run (defaults to
+/// "never fail").  Shared as `Arc<FaultInjector>` across every worker,
+/// like [`ChaosPlan`].
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    /// Both trigger sets behind a single lock (see [`Triggers`]).
+    triggers: Mutex<Triggers>,
     /// Count of injected crashes (assertions in tests).
     crashes: AtomicUsize,
+    /// Optional chaos schedule: a rank the plan doomed at its *n*-th send
+    /// also answers `should_crash` with `true` (set once by the
+    /// framework when a plan is installed).
+    chaos: OnceLock<Arc<ChaosPlan>>,
 }
 
 impl FaultInjector {
@@ -43,25 +70,52 @@ impl FaultInjector {
 
     /// Crash whichever worker first attempts to execute `job`.
     pub fn crash_on_job(&self, job: JobId) {
-        self.crash_on_job.lock().expect("fault lock").insert(job);
+        self.triggers.lock().expect("fault lock").by_job.insert(job);
     }
 
     /// Crash worker `rank` at its next execution attempt.
     pub fn crash_rank(&self, rank: Rank) {
-        self.crash_rank.lock().expect("fault lock").insert(rank);
+        self.triggers.lock().expect("fault lock").by_rank.insert(rank);
+    }
+
+    /// Link a chaos plan: ranks the plan dooms at their *n*-th send also
+    /// crash at their next `should_crash` probe.  First caller wins; the
+    /// framework installs the same plan it gave the transport.
+    pub fn link_chaos(&self, plan: Arc<ChaosPlan>) {
+        let _ = self.chaos.set(plan);
+    }
+
+    /// Whether a chaos plan is linked (schedulers use this to arm their
+    /// chaos-only liveness safety nets; never true in production runs).
+    pub fn chaos_armed(&self) -> bool {
+        self.chaos.get().is_some()
     }
 
     /// Worker-side probe (called right before executing `job`).
     /// Consumes the trigger so re-execution after recovery succeeds.
     pub fn should_crash(&self, me: Rank, job: JobId) -> bool {
-        let by_job = self.crash_on_job.lock().expect("fault lock").remove(&job);
-        let by_rank = self.crash_rank.lock().expect("fault lock").remove(&me);
-        if by_job || by_rank {
+        let fired = {
+            let mut t = self.triggers.lock().expect("fault lock");
+            t.by_job.remove(&job) | t.by_rank.remove(&me)
+        };
+        let doomed =
+            !fired && self.chaos.get().map(|p| p.is_doomed(me)).unwrap_or(false);
+        if fired || doomed {
             self.crashes.fetch_add(1, Ordering::SeqCst);
             true
         } else {
             false
         }
+    }
+
+    /// Pure chaos-doom query: has the linked chaos plan already crashed
+    /// `me` at one of its sends?  Unlike [`Self::should_crash`] this does
+    /// not consume triggers or bump the crash counter — workers poll it on
+    /// *every* received message so a doomed rank (whose replies the plan
+    /// swallows) actually stops answering instead of wedging its peers
+    /// (DESIGN.md §14).
+    pub fn doomed(&self, me: Rank) -> bool {
+        self.chaos.get().map(|p| p.is_doomed(me)).unwrap_or(false)
     }
 
     /// Number of crashes injected so far.
@@ -71,8 +125,245 @@ impl FaultInjector {
 
     /// Any triggers still pending?
     pub fn is_armed(&self) -> bool {
-        !self.crash_on_job.lock().expect("fault lock").is_empty()
-            || !self.crash_rank.lock().expect("fault lock").is_empty()
+        let t = self.triggers.lock().expect("fault lock");
+        !t.by_job.is_empty() || !t.by_rank.is_empty()
+    }
+}
+
+/// Crash one rank at its `at_send`-th outbound message (1-based): that
+/// send and every later one from the rank are swallowed, and the rank's
+/// next [`FaultInjector::should_crash`] probe fires (the worker abandons
+/// its pool and vanishes, exactly like a trigger-injected crash).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosCrash {
+    /// The victim rank.
+    pub rank: Rank,
+    /// 1-based send index at which it dies.
+    pub at_send: usize,
+}
+
+/// Parameters of a seeded chaos schedule.  Every `*_one_in` rate is a
+/// uniform per-message probability of `1/n` (`0` disables the category);
+/// every `*_budget` bounds how many times the category may fire **per
+/// source rank**, keeping total injected loss bounded and the schedule
+/// deterministic per rank regardless of cross-rank interleaving.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Seed of the per-source decision streams.
+    pub seed: u64,
+    /// Drop one message in `n` (0 = never).
+    pub drop_one_in: usize,
+    /// Maximum drops per source rank.
+    pub drop_budget: usize,
+    /// Delay one message in `n` (0 = never).
+    pub delay_one_in: usize,
+    /// Maximum delays per source rank.
+    pub delay_budget: usize,
+    /// Upper bound of one injected delay, µs (uniform in `[1, max]`).
+    pub max_delay_us: u64,
+    /// Duplicate one message in `n` (0 = never).
+    pub dup_one_in: usize,
+    /// Maximum duplicates per source rank.
+    pub dup_budget: usize,
+    /// Reorder (swap with the source's next message) one in `n`
+    /// (0 = never).  A stashed message whose source never sends again is
+    /// effectively dropped, so runs enabling this must tolerate one extra
+    /// tail loss per rank.
+    pub reorder_one_in: usize,
+    /// Maximum reorders per source rank.
+    pub reorder_budget: usize,
+    /// Optional crash-at-*n*-th-send schedule.
+    pub crash: Option<ChaosCrash>,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0,
+            drop_one_in: 0,
+            drop_budget: 0,
+            delay_one_in: 0,
+            delay_budget: 0,
+            max_delay_us: 1_000,
+            dup_one_in: 0,
+            dup_budget: 0,
+            reorder_one_in: 0,
+            reorder_budget: 0,
+            crash: None,
+        }
+    }
+}
+
+/// What the transport should do with one message (default: deliver it
+/// untouched).  At most one category fires per message, chosen in fixed
+/// priority order drop > duplicate > delay > reorder.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChaosDecision {
+    /// Swallow the message entirely.
+    pub drop: bool,
+    /// Sleep this long (µs) before delivering (0 = no delay).
+    pub delay_us: u64,
+    /// Deliver the message twice.
+    pub duplicate: bool,
+    /// Hold the message back and deliver it after the source's *next*
+    /// message (an adjacent-pair reorder).
+    pub stash: bool,
+}
+
+/// Totals of what a [`ChaosPlan`] actually injected, for metrics folding
+/// and test assertions.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChaosCounters {
+    /// Messages swallowed (doomed-rank swallows not included).
+    pub dropped: u64,
+    /// Messages delivered late.
+    pub delayed: u64,
+    /// Messages delivered twice.
+    pub duplicated: u64,
+    /// Adjacent message pairs swapped.
+    pub reordered: u64,
+}
+
+/// Per-source decision stream: its own RNG (seeded from the plan seed and
+/// the rank, so the stream is independent of other ranks' traffic), its
+/// send count, and its remaining per-category budgets.
+#[derive(Debug)]
+struct SrcState {
+    rng: Rng,
+    sends: usize,
+    drops_left: usize,
+    delays_left: usize,
+    dups_left: usize,
+    reorders_left: usize,
+}
+
+impl SrcState {
+    fn new(cfg: &ChaosConfig, src: Rank) -> Self {
+        // Golden-ratio-scrambled per-rank stream seed.
+        let stream =
+            cfg.seed ^ (u64::from(src.0) + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        SrcState {
+            rng: Rng::new(stream),
+            sends: 0,
+            drops_left: cfg.drop_budget,
+            delays_left: cfg.delay_budget,
+            dups_left: cfg.dup_budget,
+            reorders_left: cfg.reorder_budget,
+        }
+    }
+}
+
+/// A deterministic, seeded message-chaos schedule (DESIGN.md §14).
+///
+/// Installed once per [`crate::comm::World`] via `World::set_chaos` and
+/// consulted by the transport for every **cross-rank** send (self-sends
+/// are never perturbed).  Decisions are content-blind: the plan sees only
+/// the source rank and its send index, so the same seed replays the same
+/// schedule for the same per-rank traffic.  Shared as `Arc<ChaosPlan>`
+/// between the transport, the [`FaultInjector`] (doom probes) and the
+/// test harness (counter assertions).
+#[derive(Debug, Default)]
+pub struct ChaosPlan {
+    cfg: ChaosConfig,
+    src: Mutex<HashMap<Rank, SrcState>>,
+    /// Ranks past their crash-at-send point: all their sends swallow.
+    doomed: Mutex<HashSet<Rank>>,
+    dropped: AtomicU64,
+    delayed: AtomicU64,
+    duplicated: AtomicU64,
+    reordered: AtomicU64,
+}
+
+impl ChaosPlan {
+    /// A plan executing `cfg`.
+    pub fn new(cfg: ChaosConfig) -> Self {
+        ChaosPlan { cfg, ..Self::default() }
+    }
+
+    /// Decide the fate of the next message from `src` (consumes one step
+    /// of the source's decision stream).  Called by the transport.
+    pub fn decide(&self, src: Rank) -> ChaosDecision {
+        if self.is_doomed(src) {
+            return ChaosDecision { drop: true, ..Default::default() };
+        }
+        let mut map = self.src.lock().expect("chaos lock");
+        let st = map.entry(src).or_insert_with(|| SrcState::new(&self.cfg, src));
+        st.sends += 1;
+        if let Some(c) = self.cfg.crash {
+            if c.rank == src && st.sends >= c.at_send {
+                drop(map);
+                self.doomed.lock().expect("chaos lock").insert(src);
+                return ChaosDecision { drop: true, ..Default::default() };
+            }
+        }
+        let mut d = ChaosDecision::default();
+        let roll = |rng: &mut Rng, one_in: usize| one_in > 0 && rng.below(one_in) == 0;
+        if roll(&mut st.rng, self.cfg.drop_one_in) && st.drops_left > 0 {
+            st.drops_left -= 1;
+            d.drop = true;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        } else if roll(&mut st.rng, self.cfg.dup_one_in) && st.dups_left > 0 {
+            st.dups_left -= 1;
+            d.duplicate = true;
+            self.duplicated.fetch_add(1, Ordering::Relaxed);
+        } else if roll(&mut st.rng, self.cfg.delay_one_in) && st.delays_left > 0 {
+            st.delays_left -= 1;
+            d.delay_us = st.rng.int_in(1, self.cfg.max_delay_us.max(1) as usize) as u64;
+            self.delayed.fetch_add(1, Ordering::Relaxed);
+        } else if roll(&mut st.rng, self.cfg.reorder_one_in) && st.reorders_left > 0 {
+            st.reorders_left -= 1;
+            d.stash = true;
+            self.reordered.fetch_add(1, Ordering::Relaxed);
+        }
+        d
+    }
+
+    /// Whether `rank` passed its crash-at-send point (the worker-side
+    /// [`FaultInjector::should_crash`] probe consults this via the link).
+    pub fn is_doomed(&self, rank: Rank) -> bool {
+        self.doomed.lock().expect("chaos lock").contains(&rank)
+    }
+
+    /// What the plan actually injected so far.
+    pub fn counters(&self) -> ChaosCounters {
+        ChaosCounters {
+            dropped: self.dropped.load(Ordering::Relaxed),
+            delayed: self.delayed.load(Ordering::Relaxed),
+            duplicated: self.duplicated.load(Ordering::Relaxed),
+            reordered: self.reordered.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Structured account of a run that exceeded its failure budget — the
+/// payload of [`crate::error::Error::Degraded`].  The run fails loudly
+/// but informatively: which ranks died, how far the run got, and which
+/// jobs never completed.
+#[derive(Debug, Clone, Default)]
+pub struct FailureReport {
+    /// Human-readable trigger ("rank-loss budget exceeded", "job J7
+    /// exhausted its retry budget", ...).
+    pub reason: String,
+    /// Ranks declared lost before the run gave up.
+    pub ranks_lost: Vec<Rank>,
+    /// Jobs that completed before degradation.
+    pub completed_jobs: usize,
+    /// Jobs still outstanding (assigned, ready or waiting) at the point
+    /// of degradation.
+    pub outstanding_jobs: Vec<JobId>,
+}
+
+impl std::fmt::Display for FailureReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} (ranks lost: {:?}, {} job(s) completed, {} outstanding: {:?})",
+            self.reason,
+            self.ranks_lost,
+            self.completed_jobs,
+            self.outstanding_jobs.len(),
+            self.outstanding_jobs,
+        )
     }
 }
 
@@ -107,5 +398,78 @@ mod tests {
         let f = FaultInjector::none();
         assert!(!f.should_crash(Rank(0), JobId(0)));
         assert_eq!(f.crash_count(), 0);
+    }
+
+    #[test]
+    fn chaos_decisions_replay_for_a_seed() {
+        let cfg = ChaosConfig {
+            seed: 42,
+            drop_one_in: 3,
+            drop_budget: 4,
+            dup_one_in: 3,
+            dup_budget: 4,
+            delay_one_in: 3,
+            delay_budget: 4,
+            max_delay_us: 500,
+            ..Default::default()
+        };
+        let a = ChaosPlan::new(cfg.clone());
+        let b = ChaosPlan::new(cfg);
+        for _ in 0..200 {
+            for r in [Rank(1), Rank(2), Rank(7)] {
+                let da = a.decide(r);
+                let db = b.decide(r);
+                assert_eq!(
+                    (da.drop, da.delay_us, da.duplicate, da.stash),
+                    (db.drop, db.delay_us, db.duplicate, db.stash)
+                );
+            }
+        }
+        assert_eq!(a.counters(), b.counters());
+    }
+
+    #[test]
+    fn chaos_streams_are_independent_per_rank() {
+        // Rank 2's decisions must not depend on how much rank 1 sent.
+        let cfg = ChaosConfig { seed: 7, drop_one_in: 2, drop_budget: 100, ..Default::default() };
+        let a = ChaosPlan::new(cfg.clone());
+        let b = ChaosPlan::new(cfg);
+        for _ in 0..50 {
+            a.decide(Rank(1)); // extra rank-1 traffic on plan `a` only
+        }
+        let da: Vec<bool> = (0..50).map(|_| a.decide(Rank(2)).drop).collect();
+        let db: Vec<bool> = (0..50).map(|_| b.decide(Rank(2)).drop).collect();
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn chaos_budgets_bound_injections() {
+        let cfg = ChaosConfig { seed: 1, drop_one_in: 1, drop_budget: 3, ..Default::default() };
+        let p = ChaosPlan::new(cfg);
+        let dropped = (0..100).filter(|_| p.decide(Rank(4)).drop).count();
+        assert_eq!(dropped, 3, "per-source drop budget not respected");
+        assert_eq!(p.counters().dropped, 3);
+    }
+
+    #[test]
+    fn chaos_crash_dooms_rank_at_nth_send() {
+        let cfg = ChaosConfig {
+            crash: Some(ChaosCrash { rank: Rank(5), at_send: 3 }),
+            ..Default::default()
+        };
+        let p = ChaosPlan::new(cfg);
+        assert!(!p.decide(Rank(5)).drop);
+        assert!(!p.decide(Rank(5)).drop);
+        assert!(!p.is_doomed(Rank(5)));
+        assert!(p.decide(Rank(5)).drop, "3rd send must be swallowed");
+        assert!(p.is_doomed(Rank(5)));
+        assert!(p.decide(Rank(5)).drop, "doomed rank stays silent");
+        assert!(!p.is_doomed(Rank(6)));
+        // The linked injector reports the doom as a crash, once armed.
+        let f = FaultInjector::none();
+        f.link_chaos(Arc::new(p));
+        assert!(f.chaos_armed());
+        assert!(f.should_crash(Rank(5), JobId(1)));
+        assert!(!f.should_crash(Rank(6), JobId(1)));
     }
 }

@@ -64,7 +64,7 @@ use crate::comm::{CostModel, World};
 use crate::config::{ExecutionMode, TopologyConfig};
 use crate::data::FunctionData;
 use crate::error::Result;
-use crate::fault::FaultInjector;
+use crate::fault::{ChaosPlan, FaultInjector};
 use crate::job::registry::FunctionRegistry;
 use crate::job::{Algorithm, JobId};
 use crate::metrics::{MetricsCollector, MetricsSnapshot};
@@ -99,6 +99,7 @@ pub struct Framework {
     engine_factory: Option<EngineFactory>,
     fault: Arc<FaultInjector>,
     release: ReleasePolicy,
+    chaos: Option<Arc<ChaosPlan>>,
 }
 
 impl Framework {
@@ -128,6 +129,14 @@ impl Framework {
             self.cfg.comm_calibration,
         );
         let metrics = Arc::new(MetricsCollector::new());
+
+        // Seeded chaos schedule (tests/benches only, DESIGN.md §14): the
+        // transport consults the plan on every delivery, and the fault
+        // injector crashes the ranks the plan dooms.
+        if let Some(plan) = &self.chaos {
+            world.set_chaos(plan.clone());
+            self.fault.link_chaos(plan.clone());
+        }
 
         // Rank 0: master (this thread).
         let mut master_comm = world.add_rank();
@@ -186,12 +195,30 @@ impl Framework {
                 comm_aware: self.cfg.comm_aware_placement,
                 comm: world.calibration(),
                 ctrl_batch,
+                heartbeats: self.cfg.heartbeats,
+                heartbeat_interval: Duration::from_millis(self.cfg.heartbeat_interval_ms),
+                heartbeat_miss_limit: self.cfg.heartbeat_miss_limit,
+                stragglers: self.cfg.straggler_deadlines,
+                straggler_factor: self.cfg.straggler_factor,
+                straggler_cold_us: self.cfg.straggler_cold_us,
+                max_rank_losses: self.cfg.max_rank_losses,
+                job_retry_backoff_us: self.cfg.job_retry_backoff_us,
             },
             &metrics,
         );
 
+        // Under chaos a sub declared lost can be blocked in `recv` on a
+        // mailbox nobody will ever write to again; dropping the master's
+        // endpoint makes the world's rank set shrink so such receives (and
+        // the subs' master-liveness safety net) resolve, letting every
+        // join below complete (DESIGN.md §14).
+        drop(master_comm);
         for s in subs {
             let _ = s.handle.join();
+        }
+        if let Some(plan) = &self.chaos {
+            let c = plan.counters();
+            metrics.chaos(c.dropped, c.delayed, c.duplicated);
         }
         metrics.comm_model(world.calibration().accuracy());
         let snapshot = metrics.finish(world.stats());
@@ -206,6 +233,7 @@ pub struct FrameworkBuilder {
     engine_factory: Option<EngineFactory>,
     fault: Option<Arc<FaultInjector>>,
     release: ReleasePolicy,
+    chaos: Option<Arc<ChaosPlan>>,
 }
 
 impl Default for FrameworkBuilder {
@@ -216,6 +244,7 @@ impl Default for FrameworkBuilder {
             engine_factory: None,
             fault: None,
             release: ReleasePolicy::AtShutdown,
+            chaos: None,
         }
     }
 }
@@ -282,6 +311,16 @@ impl FrameworkBuilder {
     /// Install a fault injector (tests arm it before `run`).
     pub fn fault_injector(mut self, f: Arc<FaultInjector>) -> Self {
         self.fault = Some(f);
+        self
+    }
+
+    /// Install a seeded chaos schedule (builder-only, no config-file key;
+    /// tests and resilience benches only, DESIGN.md §14).  The transport
+    /// consults the plan on every delivery — messages are dropped,
+    /// delayed or duplicated per its seeded budgets, and a rank it dooms
+    /// crashes at the scheduled send.  Replays exactly for a seed.
+    pub fn chaos(mut self, plan: Arc<ChaosPlan>) -> Self {
+        self.chaos = Some(plan);
         self
     }
 
@@ -435,6 +474,74 @@ impl FrameworkBuilder {
         self
     }
 
+    /// Master↔sub heartbeat liveness probes (default: on; DESIGN.md §14).
+    /// The master beats every [`Self::heartbeat_interval_ms`]; a sub whose
+    /// traffic (acks included) goes quiet for
+    /// [`Self::heartbeat_miss_limit`] consecutive intervals is declared
+    /// lost and its work recovered.  Off = PR 7 fail-fast behaviour.
+    pub fn heartbeats(mut self, on: bool) -> Self {
+        self.cfg.heartbeats = on;
+        self
+    }
+
+    /// Milliseconds between heartbeat probes (default 200).  Also the
+    /// master's event-loop poll interval while hardening is armed.
+    pub fn heartbeat_interval_ms(mut self, ms: u64) -> Self {
+        self.cfg.heartbeat_interval_ms = ms;
+        self
+    }
+
+    /// Consecutive silent intervals before a sub is declared lost
+    /// (default 15 → 3 s of silence at the default interval).
+    pub fn heartbeat_miss_limit(mut self, n: u32) -> Self {
+        self.cfg.heartbeat_miss_limit = n;
+        self
+    }
+
+    /// Deadline-based straggler re-execution (default: on; DESIGN.md
+    /// §14).  A dispatched job overdue past its deadline (§9 cost
+    /// estimate × [`Self::straggler_factor`], floored by
+    /// [`Self::straggler_cold_us`]) gets a speculative replica on another
+    /// sub; the first completion wins, the loser's copy is released.
+    /// Values are identical either way.
+    pub fn straggler_deadlines(mut self, on: bool) -> Self {
+        self.cfg.straggler_deadlines = on;
+        self
+    }
+
+    /// Deadline multiplier over the §9 cost estimate (default 16.0): a
+    /// job is a straggler once it runs this many times longer than
+    /// estimated.
+    pub fn straggler_factor(mut self, f: f64) -> Self {
+        self.cfg.straggler_factor = f;
+        self
+    }
+
+    /// Deadline floor in microseconds (default 2_000_000) for jobs whose
+    /// kind the cost model has not measured yet — a cold kind must not be
+    /// declared late after 0 µs.
+    pub fn straggler_cold_us(mut self, us: u64) -> Self {
+        self.cfg.straggler_cold_us = us;
+        self
+    }
+
+    /// Graceful-degradation budget (default 4; DESIGN.md §14): the run
+    /// fails with [`crate::error::Error::Degraded`] — a structured
+    /// [`crate::fault::FailureReport`] — once more sub-scheduler ranks
+    /// than this are lost (or a job blows its deadline too often).
+    pub fn max_rank_losses(mut self, n: usize) -> Self {
+        self.cfg.max_rank_losses = n;
+        self
+    }
+
+    /// Backoff in microseconds added per retry to a speculative replica's
+    /// next deadline (default 250_000), so a merely-slow cluster
+    /// converges instead of replica-storming.
+    pub fn job_retry_backoff_us(mut self, us: u64) -> Self {
+        self.cfg.job_retry_backoff_us = us;
+        self
+    }
+
     /// Validate the configuration and produce the framework.
     pub fn build(self) -> Result<Framework> {
         self.cfg.validate()?;
@@ -449,6 +556,7 @@ impl FrameworkBuilder {
             engine_factory,
             fault: self.fault.unwrap_or_else(|| Arc::new(FaultInjector::none())),
             release: self.release,
+            chaos: self.chaos,
         })
     }
 }

@@ -195,6 +195,24 @@ pub struct MetricsSnapshot {
     pub imbalance_sum: f64,
     /// Worst per-job imbalance ratio observed.
     pub imbalance_max: f64,
+    /// Ranks declared lost during the run (fail-fast sends, worker-lost
+    /// reports, or heartbeat deadline — DESIGN.md §14).
+    pub ranks_lost: usize,
+    /// Heartbeat intervals that elapsed without hearing from a monitored
+    /// rank (DESIGN.md §14; resets on any traffic from the rank).
+    pub heartbeat_misses: u64,
+    /// Speculative re-executions launched for jobs past their straggler
+    /// deadline (DESIGN.md §14).
+    pub speculative_reexecs: usize,
+    /// Speculative replicas that finished before the original assignee
+    /// (the loser was cancelled through `ReleaseResult`).
+    pub speculative_wins: usize,
+    /// Messages the chaos plan swallowed (test runs only; DESIGN.md §14).
+    pub msgs_dropped: u64,
+    /// Messages the chaos plan delivered late.
+    pub msgs_delayed: u64,
+    /// Messages the chaos plan delivered twice.
+    pub msgs_duplicated: u64,
 }
 
 /// One dependency chain through the executed DAG (see
@@ -461,6 +479,16 @@ impl MetricsSnapshot {
                 "critical_path_ideal_us",
                 Json::num(cp.ideal.as_micros() as f64),
             ),
+            ("ranks_lost", Json::num(self.ranks_lost as f64)),
+            ("heartbeat_misses", Json::num(self.heartbeat_misses as f64)),
+            (
+                "speculative_reexecs",
+                Json::num(self.speculative_reexecs as f64),
+            ),
+            ("speculative_wins", Json::num(self.speculative_wins as f64)),
+            ("msgs_dropped", Json::num(self.msgs_dropped as f64)),
+            ("msgs_delayed", Json::num(self.msgs_delayed as f64)),
+            ("msgs_duplicated", Json::num(self.msgs_duplicated as f64)),
         ])
     }
 
@@ -759,6 +787,39 @@ impl MetricsCollector {
         });
     }
 
+    /// A rank was declared lost (fail-fast send, worker-lost report, or
+    /// heartbeat deadline — DESIGN.md §14).
+    pub fn rank_lost(&self) {
+        self.with(|m| m.ranks_lost += 1);
+    }
+
+    /// The heartbeat detector charged `n` silent intervals this tick.
+    pub fn heartbeat_missed(&self, n: u64) {
+        if n > 0 {
+            self.with(|m| m.heartbeat_misses += n);
+        }
+    }
+
+    /// A job past its straggler deadline was speculatively re-placed.
+    pub fn speculative_reexec(&self) {
+        self.with(|m| m.speculative_reexecs += 1);
+    }
+
+    /// A speculative replica beat the original assignee to completion.
+    pub fn speculative_win(&self) {
+        self.with(|m| m.speculative_wins += 1);
+    }
+
+    /// Fold in what the chaos plan injected (framework, right before
+    /// [`Self::finish`]; all zero outside chaos test runs).
+    pub fn chaos(&self, dropped: u64, delayed: u64, duplicated: u64) {
+        self.with(|m| {
+            m.msgs_dropped += dropped;
+            m.msgs_delayed += delayed;
+            m.msgs_duplicated += duplicated;
+        });
+    }
+
     /// Fold in the comm totals and wall time, producing the final snapshot.
     pub fn finish(&self, comm: StatsSnapshot) -> MetricsSnapshot {
         let wall = self.now_us();
@@ -895,6 +956,35 @@ mod tests {
         assert_eq!(back.get("mean_imbalance").unwrap().as_f64(), Some(2.0));
         assert_eq!(back.get("max_imbalance").unwrap().as_f64(), Some(3.0));
         assert_eq!(back.get("pool_jobs").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn failure_counters_fold_and_export() {
+        let c = MetricsCollector::new();
+        c.rank_lost();
+        c.heartbeat_missed(3);
+        c.heartbeat_missed(0); // no-op, not a zero-increment lock trip
+        c.speculative_reexec();
+        c.speculative_reexec();
+        c.speculative_win();
+        c.chaos(4, 2, 1);
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        assert_eq!(snap.ranks_lost, 1);
+        assert_eq!(snap.heartbeat_misses, 3);
+        assert_eq!(snap.speculative_reexecs, 2);
+        assert_eq!(snap.speculative_wins, 1);
+        assert_eq!(snap.msgs_dropped, 4);
+        assert_eq!(snap.msgs_delayed, 2);
+        assert_eq!(snap.msgs_duplicated, 1);
+        let text = snap.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("ranks_lost").unwrap().as_usize(), Some(1));
+        assert_eq!(back.get("heartbeat_misses").unwrap().as_usize(), Some(3));
+        assert_eq!(back.get("speculative_reexecs").unwrap().as_usize(), Some(2));
+        assert_eq!(back.get("speculative_wins").unwrap().as_usize(), Some(1));
+        assert_eq!(back.get("msgs_dropped").unwrap().as_usize(), Some(4));
+        assert_eq!(back.get("msgs_delayed").unwrap().as_usize(), Some(2));
+        assert_eq!(back.get("msgs_duplicated").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -21,20 +21,21 @@
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::comm::{Comm, CommCalibration, Rank, TransferEstimate};
+use crate::comm::{Comm, CommCalibration, Envelope, Match, Rank, TransferEstimate};
 use crate::config::ExecutionMode;
 use crate::cost::CostTable;
 use crate::data::FunctionData;
 use crate::error::{Error, Result};
+use crate::fault::FailureReport;
 use crate::job::{Algorithm, ChunkRange, Injection, JobId, JobSpec};
 use crate::metrics::MetricsCollector;
 
 use super::dynamic::resolve_injections;
 use super::graph::{JobGraph, NodeState};
 use super::placement::{bulk_assign_order, choose_scheduler_policy};
-use super::{log_unroutable, Coalescer, CtrlBatchCfg, FwMsg, SourceLoc};
+use super::{log_unroutable, Coalescer, CtrlBatchCfg, FwMsg, HeartbeatDetector, SourceLoc};
 
 /// When stored results are freed (see DESIGN.md §6 discussion).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,6 +91,30 @@ pub struct MasterConfig {
     /// place the ready frontier in one cost-sorted bulk pass.  Disabled =
     /// the PR 5 one-message-one-pass control plane, bit for bit.
     pub ctrl_batch: CtrlBatchCfg,
+    /// Heartbeat failure detection (DESIGN.md §14, knob `heartbeats`):
+    /// beat every sub-scheduler each interval and declare a rank lost
+    /// after `heartbeat_miss_limit` silent intervals.  Off = the blocking
+    /// PR 7 event loop, bit for bit.
+    pub heartbeats: bool,
+    /// Beat interval (also the hardened event loop's idle poll period).
+    pub heartbeat_interval: Duration,
+    /// Consecutive silent intervals before a sub-scheduler is declared
+    /// lost and recovered.
+    pub heartbeat_miss_limit: u32,
+    /// Deadline-based straggler re-execution (DESIGN.md §14, knob
+    /// `straggler_deadlines`): speculatively re-place in-flight jobs that
+    /// outlive their §9 cost-model deadline; first completion wins.
+    pub stragglers: bool,
+    /// Deadline multiple of the cost-model estimate.
+    pub straggler_factor: f64,
+    /// Deadline floor, µs, for kinds the cost model knows nothing about.
+    pub straggler_cold_us: u64,
+    /// Sub-scheduler losses tolerated before the run degrades gracefully
+    /// with [`Error::Degraded`] (DESIGN.md §14).
+    pub max_rank_losses: usize,
+    /// Extra slack, µs, added per retry to a job's next replica deadline —
+    /// the backoff of the speculative re-placement loop.
+    pub job_retry_backoff_us: u64,
 }
 
 /// Drive one algorithm to completion. Returns the results of the final
@@ -171,10 +196,43 @@ struct Master<'a> {
     busy_us: u64,
     /// Event-loop microseconds spent blocked waiting for mail.
     idle_us: u64,
+
+    // ----- failure hardening (DESIGN.md §14)
+    /// Liveness detector over the sub-scheduler ranks (`heartbeats` on).
+    hb: Option<HeartbeatDetector>,
+    /// Per-job replica tracking for deadline-based straggler re-execution
+    /// (`straggler_deadlines` on; entries live exactly as long as the job
+    /// is in `pending`).
+    inflight: HashMap<JobId, Inflight>,
+    /// Sub-schedulers declared lost so far (the degradation budget).
+    lost_ranks: Vec<Rank>,
 }
 
 /// A job aborted more often than this fails the run.
 const MAX_ABORTS_PER_JOB: usize = 8;
+
+/// Replicas one job may be dispatched to before the run degrades — the
+/// per-job half of the graceful-degradation budget (DESIGN.md §14; the
+/// per-run half is `max_rank_losses`).
+const MAX_SPECULATIVE_TRIES: u32 = 4;
+
+/// Idle poll period of the hardened event loop when straggler deadlines
+/// are on but heartbeats are off (with heartbeats on the beat interval
+/// paces the loop instead).
+const STRAGGLER_POLL: Duration = Duration::from_millis(50);
+
+/// In-flight replica bookkeeping of one job (DESIGN.md §14).
+struct Inflight {
+    /// `(rank, estimated µs charged there)` per replica, dispatch order —
+    /// the first entry is the original assignment.
+    targets: Vec<(Rank, u64)>,
+    /// When the newest replica was dispatched.
+    since: Instant,
+    /// Deadline of the newest replica, µs past `since`.
+    deadline_us: u64,
+    /// Replicas dispatched so far.
+    tries: u32,
+}
 
 /// Distinct producer jobs referenced by a spec (dependency edges for the
 /// critical-path metrics and the release-candidate offers).
@@ -189,7 +247,20 @@ impl<'a> Master<'a> {
     fn new(comm: &'a mut Comm<FwMsg>, cfg: MasterConfig, metrics: &'a MetricsCollector) -> Self {
         let costs = CostTable::new(cfg.cost_ewma_alpha);
         let coal = Coalescer::new(cfg.ctrl_batch);
+        let hb = if cfg.heartbeats {
+            Some(HeartbeatDetector::new(
+                &cfg.subs,
+                cfg.heartbeat_interval,
+                cfg.heartbeat_miss_limit,
+                Instant::now(),
+            ))
+        } else {
+            None
+        };
         Master {
+            hb,
+            inflight: HashMap::new(),
+            lost_ranks: Vec::new(),
             coal,
             busy_us: 0,
             idle_us: 0,
@@ -308,11 +379,10 @@ impl<'a> Master<'a> {
                 // Pass boundary: ship buffered Assigns before blocking
                 // (DESIGN.md §12); a no-op with coalescing off.
                 self.coal.flush_all(self.comm, self.metrics);
-                let env = self
-                    .comm
-                    .recv()
-                    .map_err(|_| Error::WorldShutdown(self.comm.rank()))?;
-                self.handle_barrier(env.into_user(), &mut to_assign)?;
+                let env = self.recv_event()?;
+                let from = env.src;
+                self.handle_barrier(from, env.into_user(), &mut to_assign)?;
+                self.hardening_pass()?;
             }
 
             self.metrics.segment_closed();
@@ -322,9 +392,18 @@ impl<'a> Master<'a> {
         Ok(())
     }
 
-    fn handle_barrier(&mut self, msg: FwMsg, to_assign: &mut VecDeque<JobId>) -> Result<()> {
+    fn handle_barrier(
+        &mut self,
+        from: Rank,
+        msg: FwMsg,
+        to_assign: &mut VecDeque<JobId>,
+    ) -> Result<()> {
         match msg {
             FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes, exec_us } => {
+                if self.tolerate_duplicate_done(from, job) {
+                    return Ok(());
+                }
+                self.settle_replicas(from, job);
                 self.observe_cost(job, exec_us);
                 // Process injections before completing the job: a batch
                 // may target the *current* segment.
@@ -360,13 +439,16 @@ impl<'a> Master<'a> {
                         }
                     }
                 }
-                self.complete_job(job, kept_on, output_bytes);
+                self.complete_job(from, job, kept_on, output_bytes);
                 let _ = chunks;
                 self.try_recovery();
                 Ok(())
             }
             FwMsg::JobError { job, msg } => Err(Error::JobFailed { job, msg }),
             FwMsg::JobAborted { job, missing } => {
+                if self.stale_replica_abort(job) {
+                    return Ok(());
+                }
                 self.count_abort(job, missing)?;
                 self.forget_pending(job);
                 self.queue_recovery(job);
@@ -377,6 +459,9 @@ impl<'a> Master<'a> {
                 self.try_recovery();
                 Ok(())
             }
+            // Tolerated post-recovery: a sub may legitimately re-report a
+            // loss the heartbeat detector (or an earlier report) already
+            // recovered — every step below is idempotent (DESIGN.md §14).
             FwMsg::WorkerLostReport { lost, running, .. } => {
                 for job in lost {
                     self.available.remove(&job);
@@ -401,10 +486,14 @@ impl<'a> Master<'a> {
                 // Coalesced frame from a sub (DESIGN.md §12): members
                 // apply in arrival order.
                 for m in msgs {
-                    self.handle_barrier(m, to_assign)?;
+                    self.handle_barrier(from, m, to_assign)?;
                 }
                 Ok(())
             }
+            // Liveness reply (DESIGN.md §14): the receive path already
+            // credited the sender; nothing else to do — including late
+            // acks from a rank recovery already wrote off.
+            FwMsg::HeartbeatAck => Ok(()),
             // hypar-lint: L1 wildcard-ok — subs route only the
             // completion-shaped traffic matched above to the master
             // mid-run.  Late fetch replies racing a collection pass are
@@ -577,15 +666,13 @@ impl<'a> Master<'a> {
                 // fold every event into the graph, then run ONE release →
                 // placement → dispatch pass for the batch (the loop head).
                 let wait = Instant::now();
-                let envs = self
-                    .comm
-                    .recv_drain(drain_cap)
-                    .map_err(|_| Error::WorldShutdown(self.comm.rank()))?;
+                let envs = self.recv_drain_event(drain_cap)?;
                 self.idle_us += wait.elapsed().as_micros() as u64;
                 let work = Instant::now();
                 let mut any_done = false;
                 for env in envs {
-                    any_done |= self.handle_dataflow_event(env.into_user())?;
+                    let from = env.src;
+                    any_done |= self.handle_dataflow_event(from, env.into_user())?;
                 }
                 if any_done {
                     self.apply_dataflow_release();
@@ -594,17 +681,16 @@ impl<'a> Master<'a> {
             } else {
                 // PR 5 control plane: one message, one full pass.
                 let wait = Instant::now();
-                let env = self
-                    .comm
-                    .recv()
-                    .map_err(|_| Error::WorldShutdown(self.comm.rank()))?;
+                let env = self.recv_event()?;
                 self.idle_us += wait.elapsed().as_micros() as u64;
                 let work = Instant::now();
-                if self.handle_dataflow_event(env.into_user())? {
+                let from = env.src;
+                if self.handle_dataflow_event(from, env.into_user())? {
                     self.apply_dataflow_release();
                 }
                 self.busy_us += work.elapsed().as_micros() as u64;
             }
+            self.hardening_pass()?;
         }
 
         // Close metric entries that never drained (empty injected gaps).
@@ -740,9 +826,17 @@ impl<'a> Master<'a> {
     /// completion was processed — the caller owes a release pass then
     /// ([`Self::apply_dataflow_release`] runs once per drained batch with
     /// coalescing on, once per completion with it off, DESIGN.md §12).
-    fn handle_dataflow_event(&mut self, msg: FwMsg) -> Result<bool> {
+    fn handle_dataflow_event(&mut self, from: Rank, msg: FwMsg) -> Result<bool> {
         match msg {
             FwMsg::JobDone { job, kept_on, chunks, injections, output_bytes, exec_us } => {
+                // Duplicate completion (losing speculative replica, or a
+                // chaos-duplicated frame): tolerate it *before* touching
+                // the cost model or injections — re-resolving an injection
+                // batch would mint duplicate jobs (DESIGN.md §14).
+                if self.tolerate_duplicate_done(from, job) {
+                    return Ok(false);
+                }
+                self.settle_replicas(from, job);
                 self.observe_cost(job, exec_us);
                 // Insert injected nodes *before* completing the job, so a
                 // producer's dependents (e.g. next-iteration consumers of a
@@ -750,7 +844,7 @@ impl<'a> Master<'a> {
                 if !injections.is_empty() {
                     self.insert_injections_dataflow(job, injections)?;
                 }
-                self.complete_job(job, kept_on, output_bytes);
+                self.complete_job(from, job, kept_on, output_bytes);
                 let _ = chunks;
                 self.graph.on_done(job);
                 self.note_segment_progress(job);
@@ -762,6 +856,12 @@ impl<'a> Master<'a> {
             }
             FwMsg::JobError { job, msg } => Err(Error::JobFailed { job, msg }),
             FwMsg::JobAborted { job, missing } => {
+                // A losing replica whose inputs were already released after
+                // the winner completed aborts late: nothing to recover
+                // (DESIGN.md §14).
+                if self.stale_replica_abort(job) {
+                    return Ok(false);
+                }
                 self.count_abort(job, missing)?;
                 self.forget_pending(job);
                 self.reenter_dataflow(job);
@@ -777,6 +877,10 @@ impl<'a> Master<'a> {
                 Ok(false)
             }
             FwMsg::WorkerLostReport { lost, running, .. } => {
+                // Tolerated post-recovery: if the reporting sub was itself
+                // declared lost in the meantime, every step below is
+                // idempotent (the results/jobs were already recovered by
+                // `on_rank_lost`, DESIGN.md §14).
                 for job in lost {
                     self.available.remove(&job);
                     if let Some(loc) = self.owners.get_mut(&job) {
@@ -801,10 +905,14 @@ impl<'a> Master<'a> {
                 // release debt aggregates across them.
                 let mut any_done = false;
                 for m in msgs {
-                    any_done |= self.handle_dataflow_event(m)?;
+                    any_done |= self.handle_dataflow_event(from, m)?;
                 }
                 Ok(any_done)
             }
+            // Liveness reply to a heartbeat probe: the envelope's arrival
+            // already refreshed the detector in `recv_event`; the payload
+            // itself carries nothing (DESIGN.md §14).
+            FwMsg::HeartbeatAck => Ok(false),
             // hypar-lint: L1 wildcard-ok — same routing contract as the
             // barrier handler: late fetch replies are tolerated silently,
             // anything else is a protocol bug dropped loudly in debug
@@ -1026,11 +1134,14 @@ impl<'a> Master<'a> {
 
     /// Completion bookkeeping shared by both executors: pending/load
     /// accounting, owner update, result availability.
-    fn complete_job(&mut self, job: JobId, kept_on: Option<Rank>, output_bytes: u64) {
+    fn complete_job(&mut self, from: Rank, job: JobId, kept_on: Option<Rank>, output_bytes: u64) {
         self.forget_pending(job);
-        // `owners` was pre-set at assignment to the chosen sub; update
-        // with the kept location.
+        // `owners` was pre-set at assignment to the chosen sub; pin it to
+        // the rank that actually completed (with speculative replicas the
+        // latest assignment target may be the *losing* copy, DESIGN.md §14)
+        // and update with the kept location.
         if let Some(loc) = self.owners.get_mut(&job) {
+            loc.owner = from;
             loc.kept_on = kept_on;
         }
         self.available.insert(job);
@@ -1045,25 +1156,40 @@ impl<'a> Master<'a> {
     /// Remove `job` from the in-flight set, crediting its scheduler's
     /// load (count and estimated cost). Returns whether it was in flight.
     fn forget_pending(&mut self, job: JobId) -> bool {
-        if self.pending.remove(&job) {
-            if let Some(loc) = self.owners.get(&job) {
-                let owner = loc.owner;
-                if let Some(l) = self.load.get_mut(&owner) {
+        if !self.pending.remove(&job) {
+            return false;
+        }
+        if let Some(fl) = self.inflight.remove(&job) {
+            // Straggler tracking charged every replica target; refund each
+            // exactly what its dispatch charged (DESIGN.md §14).
+            for (rank, est) in fl.targets {
+                if let Some(l) = self.load.get_mut(&rank) {
                     *l = l.saturating_sub(1);
                 }
-                // Refund exactly what assignment charged — the estimate
-                // may have drifted since, so the charge is remembered, not
-                // recomputed.
-                if let Some(est) = self.est_charged.remove(&job) {
-                    if let Some(l) = self.est_load.get_mut(&owner) {
+                if est > 0 {
+                    if let Some(l) = self.est_load.get_mut(&rank) {
                         *l = l.saturating_sub(est);
                     }
                 }
             }
-            true
-        } else {
-            false
+            self.est_charged.remove(&job);
+            return true;
         }
+        if let Some(loc) = self.owners.get(&job) {
+            let owner = loc.owner;
+            if let Some(l) = self.load.get_mut(&owner) {
+                *l = l.saturating_sub(1);
+            }
+            // Refund exactly what assignment charged — the estimate
+            // may have drifted since, so the charge is remembered, not
+            // recomputed.
+            if let Some(est) = self.est_charged.remove(&job) {
+                if let Some(l) = self.est_load.get_mut(&owner) {
+                    *l = l.saturating_sub(est);
+                }
+            }
+        }
+        true
     }
 
     /// Fold a completion's observed execution time into the cost model and
@@ -1196,6 +1322,20 @@ impl<'a> Master<'a> {
         );
         *self.load.entry(target).or_default() += 1;
         self.pending.insert(job);
+        if self.cfg.stragglers {
+            // Arm the deadline clock for this dispatch (DESIGN.md §14).
+            let deadline_us = self.deadline_us(est);
+            let fl = self.inflight.entry(job).or_insert(Inflight {
+                targets: Vec::new(),
+                since: Instant::now(),
+                deadline_us,
+                tries: 0,
+            });
+            fl.targets.push((target, est));
+            fl.since = Instant::now();
+            fl.deadline_us = deadline_us;
+            fl.tries += 1;
+        }
         self.coal
             .send(self.comm, self.metrics, target, FwMsg::Assign { spec, sources });
     }
@@ -1248,9 +1388,54 @@ impl<'a> Master<'a> {
         self.coal.flush_all(self.comm, self.metrics);
         let mut out = BTreeMap::new();
         let mut queue: VecDeque<FwMsg> = VecDeque::new();
+        // Hardened collection (DESIGN.md §14): a reply from a lost or
+        // chaos-afflicted owner may never arrive, so the wait stays timed,
+        // keeps the heartbeat detector ticking, and periodically re-issues
+        // the fetches still outstanding.
+        let mut idle_polls = 0u32;
         while !expected.is_empty() {
             let msg = match queue.pop_front() {
                 Some(m) => m,
+                None if self.timed_recv() => {
+                    match self
+                        .comm
+                        .recv_match_timeout(Match::any(), self.poll_interval())
+                        .map_err(|_| Error::WorldShutdown(me))?
+                    {
+                        Some(env) => {
+                            self.note_heard(env.src);
+                            idle_polls = 0;
+                            env.into_user()
+                        }
+                        None => {
+                            self.hb_tick()?;
+                            idle_polls += 1;
+                            if idle_polls % 4 == 0 {
+                                // Re-fetch what is still missing: the
+                                // original request or its reply may have
+                                // been dropped on the floor.
+                                for job in expected.iter().copied().collect::<Vec<_>>() {
+                                    let Some(loc) = self.owners.get(&job) else {
+                                        return Err(Error::ResultNotAvailable(job));
+                                    };
+                                    let owner = loc.owner;
+                                    self.coal.send(
+                                        self.comm,
+                                        self.metrics,
+                                        owner,
+                                        FwMsg::FetchResult {
+                                            job,
+                                            range: ChunkRange::All,
+                                            reply_to: me,
+                                        },
+                                    );
+                                }
+                            }
+                            self.coal.flush_all(self.comm, self.metrics);
+                            continue;
+                        }
+                    }
+                }
                 None => self
                     .comm
                     .recv()
@@ -1267,6 +1452,8 @@ impl<'a> Master<'a> {
                 FwMsg::ResultUnavailable { job } => {
                     return Err(Error::ResultNotAvailable(job));
                 }
+                // Late liveness replies are expected while collecting.
+                FwMsg::HeartbeatAck => {}
                 // hypar-lint: L1 wildcard-ok — completion-shaped
                 // stragglers can legally race the final collection (a
                 // sub's liveness pass may still report a lost worker after
@@ -1292,6 +1479,405 @@ impl<'a> Master<'a> {
                 .coal
                 .send_now(self.comm, self.metrics, s, FwMsg::Shutdown);
         }
+        // Ranks declared lost also get a shutdown: a false positive (a
+        // healthy in-process thread the detector gave up on) must still
+        // exit so the framework's join completes; a genuinely dead rank
+        // makes the send error, which is ignored (DESIGN.md §14).
+        for i in 0..self.lost_ranks.len() {
+            let s = self.lost_ranks[i];
+            let _ = self
+                .coal
+                .send_now(self.comm, self.metrics, s, FwMsg::Shutdown);
+        }
+    }
+
+    // ============================================= failure hardening (§14)
+
+    /// Whether the event loop must poll (heartbeats or straggler scans
+    /// need periodic attention) instead of blocking indefinitely.
+    fn timed_recv(&self) -> bool {
+        self.hb.is_some() || self.cfg.stragglers
+    }
+
+    /// How long one blocking wait may last when [`Self::timed_recv`]: the
+    /// heartbeat interval paces both beats and deadline scans; without
+    /// heartbeats a fixed straggler poll does.
+    fn poll_interval(&self) -> Duration {
+        if self.hb.is_some() {
+            self.cfg.heartbeat_interval
+        } else {
+            STRAGGLER_POLL
+        }
+    }
+
+    /// Refresh the failure detector for a rank we just heard from.
+    fn note_heard(&mut self, src: Rank) {
+        if let Some(hb) = &mut self.hb {
+            hb.note_heard(src, Instant::now());
+        }
+    }
+
+    /// Receive one event.  With hardening off this is the verbatim
+    /// blocking receive of PR 7; with it on, the wait is sliced into
+    /// poll-interval chunks and each empty slice runs a hardening pass
+    /// (beats out, deadlines scanned) before blocking again.
+    fn recv_event(&mut self) -> Result<Envelope<FwMsg>> {
+        let me = self.comm.rank();
+        if !self.timed_recv() {
+            return self.comm.recv().map_err(|_| Error::WorldShutdown(me));
+        }
+        loop {
+            match self
+                .comm
+                .recv_match_timeout(Match::any(), self.poll_interval())
+                .map_err(|_| Error::WorldShutdown(me))?
+            {
+                Some(env) => {
+                    self.note_heard(env.src);
+                    return Ok(env);
+                }
+                None => {
+                    self.hardening_pass()?;
+                    // Beats and speculative re-dispatches buffered by the
+                    // pass must not wait for the next organic flush.
+                    self.coal.flush_all(self.comm, self.metrics);
+                }
+            }
+        }
+    }
+
+    /// Drain up to `cap` events: with hardening off this is the verbatim
+    /// `recv_drain` of PR 7; with it on, one hardened blocking receive
+    /// plus a non-blocking drain — the exact same one-blocking-call
+    /// contract.
+    fn recv_drain_event(&mut self, cap: usize) -> Result<Vec<Envelope<FwMsg>>> {
+        let me = self.comm.rank();
+        if !self.timed_recv() {
+            return self
+                .comm
+                .recv_drain(cap)
+                .map_err(|_| Error::WorldShutdown(me));
+        }
+        let mut envs = Vec::with_capacity(4);
+        envs.push(self.recv_event()?);
+        while envs.len() < cap {
+            match self.comm.try_recv().map_err(|_| Error::WorldShutdown(me))? {
+                Some(env) => {
+                    self.note_heard(env.src);
+                    envs.push(env);
+                }
+                None => break,
+            }
+        }
+        Ok(envs)
+    }
+
+    /// One hardening pass: tick the heartbeat detector (beats out, losses
+    /// in), then scan in-flight jobs against their deadlines.  Both are
+    /// immediate no-ops with the knobs off.
+    fn hardening_pass(&mut self) -> Result<()> {
+        self.hb_tick()?;
+        self.scan_stragglers()
+    }
+
+    /// Drive the heartbeat detector one step: record fresh misses, send
+    /// the probes it says are due, recover the peers it declares lost.
+    fn hb_tick(&mut self) -> Result<()> {
+        let tick = match self.hb.as_mut() {
+            Some(hb) => hb.on_tick(Instant::now()),
+            None => return Ok(()),
+        };
+        if tick.new_misses > 0 {
+            self.metrics.heartbeat_missed(tick.new_misses);
+        }
+        for r in tick.beat {
+            self.coal.send(self.comm, self.metrics, r, FwMsg::Heartbeat);
+        }
+        for r in tick.lost {
+            self.on_rank_lost(r)?;
+        }
+        Ok(())
+    }
+
+    /// The deadline for a dispatch with estimated cost `est` µs: the cost
+    /// model's estimate scaled by the straggler factor, floored by the
+    /// cold-start deadline (an unknown kind must not be declared late
+    /// after 0 µs, DESIGN.md §14).
+    fn deadline_us(&self, est: u64) -> u64 {
+        ((est as f64 * self.cfg.straggler_factor) as u64).max(self.cfg.straggler_cold_us)
+    }
+
+    /// Scan in-flight jobs for blown deadlines and speculatively re-place
+    /// each overdue one.
+    fn scan_stragglers(&mut self) -> Result<()> {
+        if !self.cfg.stragglers || self.inflight.is_empty() {
+            return Ok(());
+        }
+        let now = Instant::now();
+        let overdue: Vec<JobId> = self
+            .inflight
+            .iter()
+            .filter(|(_, fl)| {
+                now.duration_since(fl.since).as_micros() as u64 >= fl.deadline_us
+            })
+            .map(|(&job, _)| job)
+            .collect();
+        for job in overdue {
+            self.dispatch_replica(job)?;
+        }
+        Ok(())
+    }
+
+    /// Dispatch one more copy of an overdue job (first completion wins,
+    /// DESIGN.md §14).  Prefers a sub that has not been tried yet; when
+    /// all have been, re-sends to the best of the full set (the original
+    /// `Assign` itself may have been dropped).  Jobs whose inputs are
+    /// currently being recomputed are skipped — the next scan re-offers
+    /// them without burning a try.
+    fn dispatch_replica(&mut self, job: JobId) -> Result<()> {
+        let Some(fl) = self.inflight.get(&job) else { return Ok(()) };
+        if fl.tries >= MAX_SPECULATIVE_TRIES {
+            return Err(self.degraded(format!(
+                "job {job:?} missed its deadline {} times",
+                fl.tries
+            )));
+        }
+        let Some(spec) = self.specs.get(&job).cloned() else { return Ok(()) };
+        if !spec.inputs.iter().all(|r| self.available.contains(&r.job)) {
+            return Ok(());
+        }
+        let tried: Vec<Rank> = fl.targets.iter().map(|&(r, _)| r).collect();
+        let mut candidates: Vec<Rank> = self
+            .cfg
+            .subs
+            .iter()
+            .copied()
+            .filter(|r| !tried.contains(r))
+            .collect();
+        if candidates.is_empty() {
+            candidates = self.cfg.subs.clone();
+        }
+        let est = self.estimate_cost(job);
+        let comm: Option<&dyn TransferEstimate> = if self.cfg.comm_aware {
+            Some(self.cfg.comm.as_ref())
+        } else {
+            None
+        };
+        let target = choose_scheduler_policy(
+            &spec,
+            &[],
+            &self.owners,
+            &self.result_bytes,
+            &self.load,
+            &self.est_load,
+            &candidates,
+            comm,
+        );
+        if est > 0 {
+            self.est_charged.insert(job, est);
+            *self.est_load.entry(target).or_default() += est;
+        }
+        let sources: Vec<SourceLoc> = spec
+            .inputs
+            .iter()
+            .filter_map(|r| self.owners.get(&r.job).copied())
+            .collect();
+        self.owners
+            .insert(job, SourceLoc { job, owner: target, kept_on: None });
+        *self.load.entry(target).or_default() += 1;
+        self.metrics.speculative_reexec();
+        // Each retry stretches the next deadline by the backoff: a run
+        // that is merely slow converges instead of replica-storming.
+        let deadline =
+            self.deadline_us(est) + fl.tries as u64 * self.cfg.job_retry_backoff_us;
+        let fl = self.inflight.get_mut(&job).expect("checked above");
+        fl.targets.push((target, est));
+        fl.since = Instant::now();
+        fl.deadline_us = deadline;
+        fl.tries += 1;
+        self.coal
+            .send(self.comm, self.metrics, target, FwMsg::Assign { spec, sources });
+        Ok(())
+    }
+
+    /// A `JobDone` for a job that is no longer pending but already
+    /// available is a duplicate (losing replica or duplicated frame):
+    /// release the loser's copy and swallow the event.
+    fn tolerate_duplicate_done(&mut self, from: Rank, job: JobId) -> bool {
+        if !self.cfg.stragglers
+            || self.pending.contains(&job)
+            || !self.available.contains(&job)
+        {
+            return false;
+        }
+        self.release_losing_copy(from, job);
+        true
+    }
+
+    /// On the winning completion: cancel every other replica still out
+    /// (its sub drops queued copies and swallows a racing completion) and
+    /// record a speculative win if the winner was not the original target.
+    fn settle_replicas(&mut self, from: Rank, job: JobId) {
+        if !self.cfg.stragglers {
+            return;
+        }
+        let Some(fl) = self.inflight.get(&job) else { return };
+        if fl.targets.len() > 1 && fl.targets.first().map(|&(r, _)| r) != Some(from) {
+            self.metrics.speculative_win();
+        }
+        let losers: Vec<Rank> = fl
+            .targets
+            .iter()
+            .map(|&(r, _)| r)
+            .filter(|&r| r != from && self.cfg.subs.contains(&r))
+            .collect();
+        for r in losers {
+            self.coal
+                .send(self.comm, self.metrics, r, FwMsg::ReleaseResult { job });
+        }
+    }
+
+    /// Tell a losing replica's sub to drop its copy of `job`'s result —
+    /// unless `from` *is* the recorded owner (then the "duplicate" was a
+    /// chaos-duplicated frame of the winning completion and the copy is
+    /// authoritative) or `from` was since declared lost.
+    fn release_losing_copy(&mut self, from: Rank, job: JobId) {
+        if self.owners.get(&job).map(|l| l.owner) == Some(from)
+            || !self.cfg.subs.contains(&from)
+        {
+            return;
+        }
+        self.coal
+            .send(self.comm, self.metrics, from, FwMsg::ReleaseResult { job });
+    }
+
+    /// A `JobAborted` from a losing replica whose inputs were released
+    /// after the winner completed: the job is done, nothing to recover.
+    fn stale_replica_abort(&self, job: JobId) -> bool {
+        self.cfg.stragglers
+            && self.available.contains(&job)
+            && !self.pending.contains(&job)
+    }
+
+    /// Every rank currently holding a dispatch of `job`.
+    fn assigned_ranks(&self, job: JobId) -> Vec<Rank> {
+        if let Some(fl) = self.inflight.get(&job) {
+            return fl.targets.iter().map(|&(r, _)| r).collect();
+        }
+        self.owners.get(&job).map(|l| vec![l.owner]).unwrap_or_default()
+    }
+
+    /// Declare `rank` dead and recover everything it held: its results
+    /// re-enter the graph, its pending dispatches are re-queued, and its
+    /// load counters vanish.  Fails the run with [`Error::Degraded`] once
+    /// losses exceed `max_rank_losses` (or no subs survive).
+    fn on_rank_lost(&mut self, rank: Rank) -> Result<()> {
+        if !self.cfg.subs.contains(&rank) {
+            return Ok(()); // already processed (duplicate detection path)
+        }
+        self.metrics.rank_lost();
+        self.lost_ranks.push(rank);
+        if let Some(hb) = &mut self.hb {
+            hb.remove(rank);
+        }
+        self.cfg.subs.retain(|&r| r != rank);
+        self.load.remove(&rank);
+        self.est_load.remove(&rank);
+        if self.lost_ranks.len() > self.cfg.max_rank_losses {
+            return Err(self.degraded(format!(
+                "rank {rank:?} lost; {} losses exceed max_rank_losses={}",
+                self.lost_ranks.len(),
+                self.cfg.max_rank_losses
+            )));
+        }
+        if self.cfg.subs.is_empty() {
+            return Err(self.degraded(format!(
+                "rank {rank:?} lost; no sub-schedulers survive"
+            )));
+        }
+        // Results the dead rank owned are gone: their consumers must wait
+        // for a recompute.  Each mode's existing single-result recovery
+        // path is reused verbatim (graph re-entry vs recovery queue).
+        let dataflow = self.cfg.mode == ExecutionMode::Dataflow;
+        let lost_results: Vec<JobId> = self
+            .owners
+            .iter()
+            .filter(|(_, loc)| loc.owner == rank)
+            .map(|(&j, _)| j)
+            .filter(|j| self.available.contains(j))
+            .collect();
+        for job in lost_results {
+            self.available.remove(&job);
+            self.owners.remove(&job);
+            if dataflow {
+                self.graph.on_result_lost(job);
+                if self.still_needed_dataflow(job) {
+                    self.metrics.job_recomputed();
+                    self.reenter_dataflow(job);
+                }
+            } else if self.still_needed_barrier(job) {
+                self.metrics.job_recomputed();
+                self.queue_recovery(job);
+            }
+        }
+        // Pending dispatches on the dead rank: survivors with a live
+        // replica just lose that target; the rest re-enter for a fresh
+        // assignment.
+        let stranded: Vec<JobId> = self
+            .pending
+            .iter()
+            .copied()
+            .filter(|&j| self.assigned_ranks(j).contains(&rank))
+            .collect();
+        for job in stranded {
+            let survivors: Vec<(Rank, u64)> = self
+                .inflight
+                .get(&job)
+                .map(|fl| {
+                    fl.targets
+                        .iter()
+                        .copied()
+                        .filter(|&(r, _)| r != rank)
+                        .collect()
+                })
+                .unwrap_or_default();
+            if !survivors.is_empty() {
+                if let Some(fl) = self.inflight.get_mut(&job) {
+                    fl.targets = survivors;
+                }
+                continue; // a live replica is still running it
+            }
+            self.forget_pending(job);
+            self.metrics.job_recomputed();
+            if dataflow {
+                self.reenter_dataflow(job);
+            } else {
+                self.queue_recovery(job);
+            }
+        }
+        if !dataflow {
+            self.try_recovery();
+        }
+        Ok(())
+    }
+
+    /// Build the structured give-up error: what the run completed, what
+    /// was still outstanding, and why it stopped (DESIGN.md §14).
+    fn degraded(&self, reason: String) -> Error {
+        let mut outstanding: Vec<JobId> = self
+            .pending
+            .iter()
+            .chain(self.recovery.iter())
+            .copied()
+            .collect();
+        outstanding.sort_unstable();
+        outstanding.dedup();
+        Error::Degraded(Box::new(FailureReport {
+            reason,
+            ranks_lost: self.lost_ranks.clone(),
+            completed_jobs: self.available.len(),
+            outstanding_jobs: outstanding,
+        }))
     }
 }
 
@@ -1335,6 +1921,15 @@ mod tests {
             comm_aware: true,
             comm: world.calibration(),
             ctrl_batch: ctrl,
+            // Hardening off: these tests pin the PR 7 behaviour.
+            heartbeats: false,
+            heartbeat_interval: Duration::from_millis(200),
+            heartbeat_miss_limit: 15,
+            stragglers: false,
+            straggler_factor: 16.0,
+            straggler_cold_us: 2_000_000,
+            max_rank_losses: 4,
+            job_retry_backoff_us: 250_000,
         };
         let mut m = Master::new(&mut comm, cfg, &metrics);
         f(&mut m, &mut sub);
@@ -1350,7 +1945,8 @@ mod tests {
             for _ in 0..MAX_ABORTS_PER_JOB {
                 m.count_abort(job, JobId(2)).expect("within budget");
             }
-            m.complete_job(job, None, 0);
+            let sub = m.cfg.subs[0];
+            m.complete_job(sub, job, None, 0);
             for _ in 0..MAX_ABORTS_PER_JOB {
                 m.count_abort(job, JobId(2))
                     .expect("budget must reset across completions");
@@ -1377,7 +1973,7 @@ mod tests {
             assert_eq!(m.est_load.get(&target).copied(), Some(1000));
             assert_eq!(m.est_charged.get(&JobId(2)).copied(), Some(1000));
             // ...and completion refunds exactly that charge.
-            m.complete_job(JobId(2), None, 0);
+            m.complete_job(target, JobId(2), None, 0);
             assert_eq!(m.est_load.get(&target).copied(), Some(0));
             assert!(m.est_charged.is_empty());
             // A cold kind charges nothing (placement degrades to queue
@@ -1478,6 +2074,161 @@ mod tests {
             // No owners recorded at all: the very first final is missing.
             let err = m.collect_final_results().unwrap_err();
             assert!(matches!(err, Error::ResultNotAvailable(JobId(1))));
+        });
+    }
+
+    /// Helper: drain one sub mailbox into plain messages (flattening
+    /// nothing — coalescing is off in these tests).
+    fn drain(sub: &mut Comm<FwMsg>) -> Vec<FwMsg> {
+        let mut msgs = Vec::new();
+        while let Some(env) = sub.try_recv().unwrap() {
+            msgs.push(env.into_user());
+        }
+        msgs
+    }
+
+    #[test]
+    fn losing_replica_completion_is_tolerated_and_released() {
+        with_master_and_sub(|m, sub| {
+            m.cfg.stragglers = true;
+            let winner = Rank(sub.rank().0 + 100); // not a live sub
+            let job = JobId(1);
+            m.specs.insert(job, JobSpec::new(1, 5, 1));
+            m.assign(job); // goes to the real sub (the eventual loser)
+            drain(sub);
+            // The "winner" (a fake rank the test speaks for) finishes
+            // first: completion settles the replica set — the loser gets a
+            // ReleaseResult for its still-queued copy.
+            m.handle_dataflow_event(
+                winner,
+                FwMsg::JobDone {
+                    job,
+                    kept_on: None,
+                    chunks: 1,
+                    injections: Vec::new(),
+                    output_bytes: 0,
+                    exec_us: 10,
+                },
+            )
+            .unwrap();
+            assert!(m.available.contains(&job));
+            assert!(!m.pending.contains(&job));
+            assert_eq!(m.owners.get(&job).map(|l| l.owner), Some(winner));
+            // The loser's late completion is swallowed, and its copy is
+            // released (a second ReleaseResult to the same sub is fine —
+            // the release path is idempotent).
+            m.handle_dataflow_event(
+                sub.rank(),
+                FwMsg::JobDone {
+                    job,
+                    kept_on: None,
+                    chunks: 1,
+                    injections: Vec::new(),
+                    output_bytes: 0,
+                    exec_us: 99,
+                },
+            )
+            .unwrap();
+            assert_eq!(m.owners.get(&job).map(|l| l.owner), Some(winner));
+            let releases = drain(sub)
+                .into_iter()
+                .filter(|msg| matches!(msg, FwMsg::ReleaseResult { job: j } if *j == job))
+                .count();
+            assert_eq!(releases, 2, "settle + duplicate tolerance each release");
+            // A stale abort from the loser is equally inert.
+            m.handle_dataflow_event(
+                sub.rank(),
+                FwMsg::JobAborted { job, missing: JobId(9) },
+            )
+            .unwrap();
+            assert!(m.available.contains(&job));
+        });
+    }
+
+    #[test]
+    fn straggler_deadline_dispatches_speculative_replica() {
+        with_master_and_sub(|m, sub| {
+            m.cfg.stragglers = true;
+            m.cfg.straggler_cold_us = 1; // everything is overdue instantly
+            m.cfg.straggler_factor = 1.0;
+            m.cfg.job_retry_backoff_us = 0;
+            let job = JobId(1);
+            m.specs.insert(job, JobSpec::new(1, 5, 1));
+            m.assign(job);
+            assert_eq!(m.inflight.get(&job).map(|fl| fl.tries), Some(1));
+            std::thread::sleep(Duration::from_millis(2));
+            m.scan_stragglers().unwrap();
+            let fl = m.inflight.get(&job).expect("still in flight");
+            assert_eq!(fl.tries, 2, "one speculative replica dispatched");
+            assert_eq!(fl.targets.len(), 2);
+            let assigns = drain(sub)
+                .into_iter()
+                .filter(|msg| matches!(msg, FwMsg::Assign { .. }))
+                .count();
+            assert_eq!(assigns, 2, "original + replica Assign on the wire");
+            // The first completion clears the in-flight entry entirely.
+            m.handle_dataflow_event(
+                sub.rank(),
+                FwMsg::JobDone {
+                    job,
+                    kept_on: None,
+                    chunks: 1,
+                    injections: Vec::new(),
+                    output_bytes: 0,
+                    exec_us: 10,
+                },
+            )
+            .unwrap();
+            assert!(m.inflight.is_empty());
+            drain(sub);
+        });
+    }
+
+    #[test]
+    fn rank_loss_within_budget_requeues_pending_work() {
+        with_master_and_sub(|m, sub| {
+            m.cfg.mode = ExecutionMode::Barrier;
+            // A second (fake) sub that will die: jobs assigned there must
+            // come back to the survivor.
+            let doomed = Rank(sub.rank().0 + 100);
+            m.cfg.subs.push(doomed);
+            let job = JobId(1);
+            m.specs.insert(job, JobSpec::new(1, 5, 1));
+            // Pin the assignment onto the doomed rank by loading the
+            // survivor heavily.
+            m.load.insert(sub.rank(), 1000);
+            m.assign(job);
+            assert_eq!(m.owners.get(&job).map(|l| l.owner), Some(doomed));
+            m.load.insert(sub.rank(), 0);
+            m.on_rank_lost(doomed).unwrap();
+            assert_eq!(m.lost_ranks, vec![doomed]);
+            assert!(!m.cfg.subs.contains(&doomed));
+            // The pending job was forgotten and re-assigned — necessarily
+            // to the only survivor.
+            assert_eq!(m.owners.get(&job).map(|l| l.owner), Some(sub.rank()));
+            assert!(m.pending.contains(&job));
+            // Losing the same rank twice is a tolerated no-op.
+            m.on_rank_lost(doomed).unwrap();
+            assert_eq!(m.lost_ranks.len(), 1);
+            drain(sub);
+        });
+    }
+
+    #[test]
+    fn rank_loss_beyond_budget_degrades_with_a_report() {
+        with_master(|m| {
+            m.cfg.max_rank_losses = 0;
+            let victim = m.cfg.subs[0];
+            m.pending.insert(JobId(3));
+            let err = m.on_rank_lost(victim).unwrap_err();
+            match err {
+                Error::Degraded(report) => {
+                    assert_eq!(report.ranks_lost, vec![victim]);
+                    assert_eq!(report.completed_jobs, 0);
+                    assert_eq!(report.outstanding_jobs, vec![JobId(3)]);
+                }
+                other => panic!("expected Degraded, got {other}"),
+            }
         });
     }
 }

@@ -263,6 +263,18 @@ pub enum FwMsg {
         exec_us: u64,
     },
 
+    // ------------------------------------------------- liveness (§14)
+    /// Master → sub liveness probe (DESIGN.md §14).  Piggybacked on the
+    /// §12 coalesced batches when control traffic exists, shipped
+    /// standalone when the link is idle — so a *silent* hung rank is
+    /// probed even when the scheduler has nothing to say to it.
+    Heartbeat,
+    /// Sub → master liveness reply.  Receipt (like any other traffic from
+    /// the rank) resets the sender's miss counter in the master's
+    /// [`HeartbeatDetector`]; `heartbeat_miss_limit` consecutive silent
+    /// intervals declare the rank lost.
+    HeartbeatAck,
+
     // ------------------------------------------------- coalesced frames
     /// Coalesced control frame (DESIGN.md §12): several same-destination
     /// control messages shipped as one send.  Receivers unwrap the members
@@ -500,6 +512,113 @@ impl Coalescer {
     }
 }
 
+// ===================================================== heartbeat detector
+
+/// One monitored peer's liveness state.
+#[derive(Debug)]
+struct PeerState {
+    rank: Rank,
+    /// Last time any traffic from the peer was observed.
+    last_heard: Instant,
+    /// Last time a beat was emitted towards the peer.
+    last_beat: Instant,
+    /// Consecutive beat intervals with no traffic heard.
+    misses: u32,
+}
+
+/// What one detector tick decided: which peers to beat, which are lost.
+#[derive(Debug, Default)]
+pub struct HeartbeatTick {
+    /// Peers due a [`FwMsg::Heartbeat`] this tick.
+    pub beat: Vec<Rank>,
+    /// Peers that exhausted `heartbeat_miss_limit` and are declared lost
+    /// (removed from monitoring; recovery is the caller's job).
+    pub lost: Vec<Rank>,
+    /// Misses charged this tick (metrics key `heartbeat_misses`).
+    pub new_misses: u64,
+}
+
+/// Deadline-based liveness detector — the master side of the heartbeat
+/// protocol (DESIGN.md §14).
+///
+/// Pure state machine over an injected clock: the master's event loop
+/// calls [`Self::note_heard`] for every message it receives (any traffic
+/// proves liveness, not just acks) and [`Self::on_tick`] once per loop
+/// pass.  A peer that stays silent for `miss_limit` consecutive beat
+/// intervals is declared lost, so a hung rank is detected even though a
+/// send into it would still succeed.  Clock injection keeps the unit
+/// tests sleep-free.
+#[derive(Debug)]
+pub struct HeartbeatDetector {
+    interval: Duration,
+    miss_limit: u32,
+    peers: Vec<PeerState>,
+}
+
+impl HeartbeatDetector {
+    /// Monitor `peers`, beating every `interval`; `miss_limit` silent
+    /// intervals (≥ 1) declare a peer lost.
+    pub fn new(peers: &[Rank], interval: Duration, miss_limit: u32, now: Instant) -> Self {
+        HeartbeatDetector {
+            interval,
+            miss_limit: miss_limit.max(1),
+            peers: peers
+                .iter()
+                .map(|&rank| PeerState {
+                    rank,
+                    last_heard: now,
+                    last_beat: now,
+                    misses: 0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Record traffic from `rank`: resets its miss counter and deadline.
+    pub fn note_heard(&mut self, rank: Rank, now: Instant) {
+        if let Some(p) = self.peers.iter_mut().find(|p| p.rank == rank) {
+            p.last_heard = now;
+            p.misses = 0;
+        }
+    }
+
+    /// Stop monitoring `rank` (clean shutdown or recovery already ran).
+    pub fn remove(&mut self, rank: Rank) {
+        self.peers.retain(|p| p.rank != rank);
+    }
+
+    /// Ranks currently monitored.
+    pub fn monitored(&self) -> Vec<Rank> {
+        self.peers.iter().map(|p| p.rank).collect()
+    }
+
+    /// Advance the detector to `now`: emit due beats, charge misses for
+    /// peers silent a full interval past their last credit, and declare
+    /// peers lost at `miss_limit`.  Lost peers are removed from
+    /// monitoring (recovery must not be re-triggered every pass).
+    pub fn on_tick(&mut self, now: Instant) -> HeartbeatTick {
+        let mut tick = HeartbeatTick::default();
+        for p in &mut self.peers {
+            if now.duration_since(p.last_beat) < self.interval {
+                continue;
+            }
+            p.last_beat = now;
+            tick.beat.push(p.rank);
+            if now.duration_since(p.last_heard) >= self.interval {
+                p.misses += 1;
+                tick.new_misses += 1;
+                if p.misses >= self.miss_limit {
+                    tick.lost.push(p.rank);
+                }
+            }
+        }
+        self.peers.retain(|p| !tick.lost.contains(&p.rank));
+        // A lost peer needs no farewell beat.
+        tick.beat.retain(|r| !tick.lost.contains(r));
+        tick
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -681,5 +800,69 @@ mod tests {
             b.try_recv().unwrap().expect("flushed").into_user(),
             FwMsg::ReleaseResult { job } if job == JobId(9)
         ));
+    }
+
+    const HB: Duration = Duration::from_millis(100);
+
+    #[test]
+    fn heartbeat_detector_declares_loss_at_miss_limit() {
+        let t0 = Instant::now();
+        let mut det = HeartbeatDetector::new(&[Rank(1), Rank(2)], HB, 3, t0);
+        // Rank 2 stays chatty; rank 1 goes silent after t0.
+        let mut lost = Vec::new();
+        for k in 1..=4u32 {
+            let now = t0 + HB * k;
+            det.note_heard(Rank(2), now);
+            let tick = det.on_tick(now);
+            lost.extend(tick.lost);
+        }
+        assert_eq!(lost, vec![Rank(1)], "silent rank must be lost after 3 misses");
+        assert_eq!(det.monitored(), vec![Rank(2)], "lost rank leaves monitoring");
+        // No re-detection on later ticks.
+        assert!(det.on_tick(t0 + HB * 10).lost.is_empty());
+    }
+
+    #[test]
+    fn heartbeat_ack_resets_miss_counter() {
+        let t0 = Instant::now();
+        let mut det = HeartbeatDetector::new(&[Rank(1)], HB, 2, t0);
+        assert_eq!(det.on_tick(t0 + HB).new_misses, 1);
+        // An ack just before the second deadline wipes the count…
+        det.note_heard(Rank(1), t0 + HB + HB / 2);
+        let tick = det.on_tick(t0 + HB * 2);
+        assert!(tick.lost.is_empty(), "reset counter must not reach the limit");
+        // …and the peer survives as long as acks keep arriving.
+        for k in 3..8u32 {
+            det.note_heard(Rank(1), t0 + HB * k - HB / 2);
+            assert!(det.on_tick(t0 + HB * k).lost.is_empty());
+        }
+        assert_eq!(det.monitored(), vec![Rank(1)]);
+    }
+
+    #[test]
+    fn heartbeat_detects_hung_rank_without_any_send() {
+        // The wire never fails: the peer is registered, sends to it
+        // succeed — it just never answers.  Only the deadline notices.
+        let t0 = Instant::now();
+        let mut det = HeartbeatDetector::new(&[Rank(1)], HB, 2, t0);
+        let t1 = det.on_tick(t0 + HB);
+        assert_eq!(t1.beat, vec![Rank(1)], "idle link still gets probed");
+        assert!(t1.lost.is_empty());
+        let t2 = det.on_tick(t0 + HB * 2);
+        assert_eq!(t2.lost, vec![Rank(1)]);
+        assert!(t2.beat.is_empty(), "no farewell beat for a lost rank");
+        assert!(det.monitored().is_empty());
+    }
+
+    #[test]
+    fn heartbeat_beats_are_paced_by_interval() {
+        let t0 = Instant::now();
+        let mut det = HeartbeatDetector::new(&[Rank(1)], HB, 100, t0);
+        assert!(det.on_tick(t0 + HB / 2).beat.is_empty(), "too early to beat");
+        assert_eq!(det.on_tick(t0 + HB).beat, vec![Rank(1)]);
+        assert!(
+            det.on_tick(t0 + HB + HB / 2).beat.is_empty(),
+            "beat cadence restarts from the last beat"
+        );
     }
 }

@@ -120,6 +120,10 @@ pub struct SubScheduler {
     /// Peer `FetchResult`s waiting on a `PullKept` round-trip:
     /// source job → (range, reply_to).
     pending_serves: HashMap<JobId, Vec<(ChunkRange, Rank)>>,
+    /// Jobs still executing here whose result the master already released
+    /// (a speculative replica lost the race, DESIGN.md §14): their
+    /// eventual `ExecDone` is swallowed instead of reported.
+    cancelled_running: HashSet<JobId>,
     /// Per-destination control-message coalescer (DESIGN.md §12).
     coal: Coalescer,
 }
@@ -152,6 +156,7 @@ impl SubScheduler {
             cache_pushed: HashMap::new(),
             pending_cache_push: HashMap::new(),
             pending_serves: HashMap::new(),
+            cancelled_running: HashSet::new(),
         }
     }
 
@@ -183,7 +188,17 @@ impl SubScheduler {
                         break;
                     }
                 }
-                Ok(None) => {} // tick
+                Ok(None) => {
+                    // Chaos-only safety net (DESIGN.md §14): if the master
+                    // rank died under a chaos schedule, no `Shutdown` will
+                    // ever arrive — exit on our own instead of ticking
+                    // forever.  Never armed in production runs.
+                    if self.cfg.worker.fault.chaos_armed()
+                        && !self.world.is_alive(self.cfg.master)
+                    {
+                        break;
+                    }
+                } // tick
                 Err(_) => break, // world shut down
             }
             self.check_worker_liveness();
@@ -250,6 +265,13 @@ impl SubScheduler {
                 self.serve_pending(job);
                 self.fill_waiters(job);
             }
+            FwMsg::Heartbeat => {
+                // Liveness probe from the master (DESIGN.md §14): the ack
+                // rides the coalescer and ships at this pass's flush.
+                let master = self.cfg.master;
+                self.coal
+                    .send(&self.comm, &self.metrics, master, FwMsg::HeartbeatAck);
+            }
             FwMsg::Shutdown => return false,
             // hypar-lint: L1 wildcard-ok — worker-only (`Exec`,
             // `CachePush`, ...) and master-only (`JobDone`, ...) messages
@@ -263,6 +285,9 @@ impl SubScheduler {
     fn on_assign(&mut self, spec: JobSpec, sources: Vec<SourceLoc>) {
         let me = self.comm.rank();
         let job = spec.id;
+        // A fresh assignment supersedes any stale cancellation mark (the
+        // master may legitimately re-dispatch a job here after recovery).
+        self.cancelled_running.remove(&job);
         let mut parts = Vec::with_capacity(spec.inputs.len());
         let mut missing = 0usize;
         let mut pin: Option<Rank> = None;
@@ -629,6 +654,15 @@ impl SubScheduler {
     }
 
     fn on_release(&mut self, job: JobId) {
+        // Still executing here: this release is the master cancelling a
+        // losing speculative replica (DESIGN.md §14) — mark it so the
+        // eventual `ExecDone` is swallowed instead of reported as a second
+        // completion.  Queued-but-not-running copies are NOT cancelled:
+        // their completions converge through the master's duplicate
+        // tolerance, which releases the extra copy again.
+        if self.workers.values().any(|w| w.running.contains_key(&job)) {
+            self.cancelled_running.insert(job);
+        }
         self.store.release(job);
         self.store.drop_transient(job);
         self.prefetched.remove(&job);
@@ -670,6 +704,18 @@ impl SubScheduler {
         exec_us: u64,
     ) {
         let spec = self.forget_running(worker, job);
+        if self.cancelled_running.remove(&job) {
+            // Losing speculative replica (DESIGN.md §14): the winner's
+            // completion already carried this job's result *and* its
+            // injections — reporting either again would double them.  The
+            // cores are vacated above; a worker-retained output is dropped
+            // in place.
+            if data.is_none() {
+                self.coal
+                    .send(&self.comm, &self.metrics, worker, FwMsg::DropKept { job });
+            }
+            return;
+        }
         let (kept_on, output_bytes, chunks) = match data {
             Some(d) => {
                 let bytes = d.size_bytes() as u64;

@@ -42,7 +42,9 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::comm::{Comm, CommSender, Rank};
+use std::time::Duration;
+
+use crate::comm::{Comm, CommSender, Match, Rank};
 use crate::data::FunctionData;
 use crate::error::Result;
 use crate::fault::FaultInjector;
@@ -172,18 +174,47 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
     // before blocking on the mailbox again.
     let mut queue: VecDeque<FwMsg> = VecDeque::new();
 
+    // Chaos-only idle grace (DESIGN.md §14): with a chaos plan armed, a
+    // `WorkerShutdown` may be swallowed by the schedule, so the blocking
+    // receive gets a generous timeout and a quiet mailbox ends the rank
+    // cleanly.  Never used in production runs.
+    const CHAOS_IDLE_GRACE: Duration = Duration::from_secs(2);
+
     loop {
         let msg = match queue.pop_front() {
             Some(m) => m,
             None => {
                 // Pass boundary: ship buffered replies before blocking.
                 outbox.flush(&comm.sender(), cfg.metrics.as_deref());
-                match comm.recv() {
-                    Ok(env) => env.into_user(),
-                    Err(_) => return, // world torn down
+                if cfg.fault.chaos_armed() {
+                    match comm.recv_match_timeout(Match::any(), CHAOS_IDLE_GRACE) {
+                        Ok(Some(env)) => env.into_user(),
+                        Ok(None) => {
+                            // Idle past the grace under chaos: assume the
+                            // shutdown was swallowed and exit cleanly.
+                            pool.shutdown();
+                            comm.deregister();
+                            return;
+                        }
+                        Err(_) => return, // world torn down
+                    }
+                } else {
+                    match comm.recv() {
+                        Ok(env) => env.into_user(),
+                        Err(_) => return, // world torn down
+                    }
                 }
             }
         };
+        // A chaos-doomed rank's sends are already being swallowed; it must
+        // also stop *answering* (a doomed worker that keeps serving
+        // `PullKept` with invisible replies wedges its peers).  Polled on
+        // every message so the crash lands at the next delivery after the
+        // fatal send (DESIGN.md §14).
+        if cfg.fault.doomed(me) {
+            pool.abandon();
+            return;
+        }
         match msg {
             FwMsg::Exec(req) => {
                 let job = req.spec.id;

@@ -6,7 +6,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use hypar::fault::FaultInjector;
+use hypar::fault::{ChaosConfig, ChaosCrash, ChaosPlan, FaultInjector};
 use hypar::prelude::*;
 use hypar::solvers::{self, jacobi_fw, JacobiConfig};
 
@@ -203,4 +203,164 @@ fn unused_lost_results_are_not_recomputed() {
         report.result(3).unwrap().chunk(0).unwrap().first_f32().unwrap(),
         9.0
     );
+}
+
+// ===== failure hardening (§14): heartbeats, stragglers, chaos ===========
+
+#[test]
+fn heartbeats_do_not_disturb_a_healthy_run() {
+    // Aggressive beat interval on a healthy cluster: the run must complete
+    // with no rank declared lost even though the worker sleeps well past
+    // several beat periods.
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "slow", |_in, out| {
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        out.push(DataChunk::scalar_f32(5.0));
+        Ok(())
+    });
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .heartbeats(true)
+        .heartbeat_interval_ms(10)
+        .registry(reg)
+        .build()
+        .unwrap();
+    let report = fw
+        .run(Algorithm::parse("J1(1,1,0), J2(1,1,0);").unwrap())
+        .unwrap();
+    assert_eq!(report.metrics.ranks_lost, 0, "false-positive rank loss");
+    for data in report.results.values() {
+        assert_eq!(data.chunk(0).unwrap().first_f32().unwrap(), 5.0);
+    }
+}
+
+#[test]
+fn straggler_deadline_speculative_replica_wins() {
+    // First execution of the job hangs far past its deadline; the master
+    // must dispatch a speculative replica to the other sub-scheduler and
+    // take the replica's (fast) completion as the winner.
+    let calls = Arc::new(AtomicUsize::new(0));
+    let c1 = calls.clone();
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "sometimes_slow", move |_in, out| {
+        if c1.fetch_add(1, Ordering::SeqCst) == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(500));
+        }
+        out.push(DataChunk::scalar_f32(3.0));
+        Ok(())
+    });
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(1)
+        .heartbeats(false)
+        .straggler_deadlines(true)
+        .straggler_factor(1.0)
+        .straggler_cold_us(60_000)
+        .job_retry_backoff_us(0)
+        .registry(reg)
+        .build()
+        .unwrap();
+    let report = fw.run(Algorithm::parse("J1(1,1,0);").unwrap()).unwrap();
+    assert_eq!(
+        report.result(1).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+        3.0
+    );
+    assert!(
+        report.metrics.speculative_reexecs >= 1,
+        "no speculative replica was dispatched"
+    );
+    assert!(
+        report.metrics.speculative_wins >= 1,
+        "replica did not win over the straggler"
+    );
+}
+
+#[test]
+fn chaos_drops_dups_delays_still_produce_correct_results() {
+    // Seeded message-level chaos (drops, duplicates, delays — no crash):
+    // straggler re-execution and duplicate-completion tolerance must absorb
+    // every perturbation and the final values must be exact.
+    let chaos = Arc::new(ChaosPlan::new(ChaosConfig {
+        seed: 0xC0FFEE,
+        drop_one_in: 5,
+        drop_budget: 2,
+        dup_one_in: 5,
+        dup_budget: 2,
+        delay_one_in: 3,
+        delay_budget: 4,
+        max_delay_us: 2_000,
+        ..ChaosConfig::default()
+    }));
+    let fault = Arc::new(FaultInjector::none());
+    let fw = Framework::builder()
+        .schedulers(2)
+        .workers_per_scheduler(2)
+        .heartbeats(true)
+        .heartbeat_interval_ms(25)
+        .straggler_deadlines(true)
+        .straggler_factor(4.0)
+        .straggler_cold_us(100_000)
+        .job_retry_backoff_us(50_000)
+        .registry(counting_registry(Arc::new(AtomicUsize::new(0))))
+        .fault_injector(fault)
+        .chaos(chaos.clone())
+        .build()
+        .unwrap();
+    let report = fw
+        .run(Algorithm::parse("J1(1,1,0), J2(1,1,0); J3(2,1,R1), J4(2,1,R2);").unwrap())
+        .unwrap();
+    let want = (0..64).map(|i| i as f32).sum::<f32>();
+    for id in [3u32, 4] {
+        assert_eq!(
+            report.result(id).unwrap().chunk(0).unwrap().first_f32().unwrap(),
+            want,
+            "J{id} value wrong under chaos"
+        );
+    }
+    let c = chaos.counters();
+    assert_eq!(report.metrics.msgs_dropped, c.dropped);
+    assert_eq!(report.metrics.msgs_delayed, c.delayed);
+    assert_eq!(report.metrics.msgs_duplicated, c.duplicated);
+}
+
+#[test]
+fn chaos_rank_crash_recovers_within_budget() {
+    // A worker rank is doomed at its first send: its completion message is
+    // swallowed and the rank goes silent. The sub-scheduler's liveness scan
+    // (or the straggler deadline) must recover the lost job.
+    let chaos = Arc::new(ChaosPlan::new(ChaosConfig {
+        seed: 42,
+        // master = rank 0, sub = rank 1, prespawned workers = ranks 2..=3.
+        crash: Some(ChaosCrash { rank: Rank(2), at_send: 1 }),
+        ..ChaosConfig::default()
+    }));
+    let fault = Arc::new(FaultInjector::none());
+    let mut reg = FunctionRegistry::new();
+    reg.register_plain(1, "p", |_in, out| {
+        out.push(DataChunk::scalar_f32(8.0));
+        Ok(())
+    });
+    let fw = Framework::builder()
+        .schedulers(1)
+        .workers_per_scheduler(2)
+        .prespawn_workers(true)
+        .heartbeats(true)
+        .heartbeat_interval_ms(25)
+        .straggler_deadlines(true)
+        .straggler_factor(4.0)
+        .straggler_cold_us(200_000)
+        .max_rank_losses(2)
+        .registry(reg)
+        .fault_injector(fault)
+        .chaos(chaos)
+        .build()
+        .unwrap();
+    let report = fw
+        .run(Algorithm::parse("J1(1,1,0), J2(1,1,0);").unwrap())
+        .unwrap();
+    assert_eq!(report.results.len(), 2);
+    for data in report.results.values() {
+        assert_eq!(data.chunk(0).unwrap().first_f32().unwrap(), 8.0);
+    }
 }

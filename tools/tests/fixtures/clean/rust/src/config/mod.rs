@@ -1,6 +1,7 @@
 pub struct TopologyConfig {
     pub schedulers: usize,
     pub cost_ewma_alpha: f64,
+    pub heartbeats: bool,
 }
 
 impl TopologyConfig {
@@ -9,6 +10,7 @@ impl TopologyConfig {
         Ok(Self {
             schedulers: get_usize(&doc, "schedulers", 1)?,
             cost_ewma_alpha: get_f64(&doc, "cost_ewma_alpha", 0.4)?,
+            heartbeats: get_bool(&doc, "heartbeats", true)?,
         })
     }
 
@@ -16,6 +18,7 @@ impl TopologyConfig {
         render(vec![
             ("schedulers", Json::num(self.schedulers)),
             ("cost_ewma_alpha", Json::num(self.cost_ewma_alpha)),
+            ("heartbeats", Json::Bool(self.heartbeats)),
         ])
     }
 

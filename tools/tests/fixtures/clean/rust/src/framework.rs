@@ -12,4 +12,9 @@ impl FrameworkBuilder {
         self.cfg.cost_ewma_alpha = a;
         self
     }
+
+    pub fn heartbeats(mut self, on: bool) -> Self {
+        self.cfg.heartbeats = on;
+        self
+    }
 }

@@ -1,6 +1,7 @@
 pub struct MetricsSnapshot {
     pub jobs_executed: usize,
     pub wall_time_us: u64,
+    pub ranks_lost: usize,
 }
 
 impl MetricsSnapshot {
@@ -8,6 +9,7 @@ impl MetricsSnapshot {
         render(vec![
             ("jobs_executed", Json::num(self.jobs_executed)),
             ("wall_time_us", Json::num(self.wall_time_us)),
+            ("ranks_lost", Json::num(self.ranks_lost)),
         ])
     }
 }

@@ -15,9 +15,14 @@ impl Master {
         }
     }
 
+    fn beat(&mut self) {
+        self.send(FwMsg::Heartbeat);
+    }
+
     fn handle_dataflow_event(&mut self, msg: FwMsg) {
         match msg {
             FwMsg::Hello { job } => self.note(job),
+            FwMsg::HeartbeatAck => {}
             FwMsg::Batch(msgs) => {
                 for m in msgs {
                     self.handle_dataflow_event(m);

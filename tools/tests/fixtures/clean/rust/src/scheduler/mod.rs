@@ -7,6 +7,8 @@ pub const CTRL: usize = 32;
 pub enum FwMsg {
     Hello { job: u32 },
     Data { data: FunctionData },
+    Heartbeat,
+    HeartbeatAck,
     Shutdown,
     Batch(Vec<FwMsg>),
 }

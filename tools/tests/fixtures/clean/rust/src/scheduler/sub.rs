@@ -3,6 +3,7 @@ use super::{log_unroutable, FwMsg};
 impl Sub {
     fn handle(&mut self, msg: FwMsg) -> bool {
         match msg {
+            FwMsg::Heartbeat => self.beat_back(),
             FwMsg::Shutdown => return false,
             FwMsg::Batch(msgs) => {
                 for m in msgs {
@@ -16,6 +17,10 @@ impl Sub {
             other => log_unroutable("sub", &other),
         }
         true
+    }
+
+    fn beat_back(&mut self) {
+        self.send(FwMsg::HeartbeatAck);
     }
 
     fn produce(&mut self) {

@@ -102,6 +102,16 @@ class FixtureCase(unittest.TestCase):
         )
         self.assert_fires("L1", "Zombie")
 
+    def test_l1_heartbeat_ack_matched_by_no_receiver(self):
+        # Drop the master's ack arm: the sub still constructs HeartbeatAck
+        # but no receiver loop matches it (§14 surface).
+        self.mutate(
+            "rust/src/scheduler/master.rs",
+            "            FwMsg::HeartbeatAck => {}\n",
+            "",
+        )
+        self.assert_fires("L1", "HeartbeatAck")
+
     # -- L2: wire-size consistency ----------------------------------------
 
     def test_l2_missing_payload_arm(self):
@@ -151,6 +161,12 @@ class FixtureCase(unittest.TestCase):
         self.mutate("DESIGN.md", "`cost_ewma_alpha`", "`that knob`")
         self.assert_fires("L3", "cost_ewma_alpha")
 
+    def test_l3_hardening_knob_missing_from_design_section(self):
+        # The README row cites DESIGN.md §14; strip the knob from that
+        # section (§14 surface).
+        self.mutate("DESIGN.md", "`heartbeats`", "`that knob`")
+        self.assert_fires("L3", "heartbeats")
+
     # -- L4: metrics registry ----------------------------------------------
 
     def test_l4_unexported_counter(self):
@@ -165,6 +181,13 @@ class FixtureCase(unittest.TestCase):
         self.mutate("README.md", "`wall_time_us`", "`that counter`")
         self.mutate("DESIGN.md", "`wall_time_us`", "`that counter`")
         self.assert_fires("L4", "wall_time_us")
+
+    def test_l4_resilience_counter_undocumented(self):
+        # The §14 failure-domain counter must stay documented wherever the
+        # snapshot is catalogued.
+        self.mutate("README.md", "`ranks_lost`", "`that counter`")
+        self.mutate("DESIGN.md", "`ranks_lost`", "`that counter`")
+        self.assert_fires("L4", "ranks_lost")
 
     # -- L5: lock discipline -----------------------------------------------
 
