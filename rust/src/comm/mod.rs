@@ -19,19 +19,25 @@
 //!
 //! Substitution note (DESIGN.md §2): everything above `comm` consumes only
 //! this API, so porting the framework to real MPI means reimplementing this
-//! module, nothing else.
+//! module, nothing else.  The loopback-TCP backend ([`tcp`], selected via
+//! the `transport` knob / `HYPAR_TRANSPORT`, DESIGN.md §15) is that rule
+//! exercised for real: same `World`/`Comm` surface, envelopes framed by
+//! [`wire`] onto actual sockets.
 
 pub mod collectives;
 pub mod costmodel;
 pub mod message;
+pub(crate) mod tcp;
 pub mod transport;
+pub mod wire;
 
 pub use costmodel::{
     CommCalibration, CommModelAccuracy, CommStats, CostModel, StatsSnapshot,
     TransferEstimate,
 };
 pub use message::{wire_size_sum, Envelope, Tag, WireSize};
-pub use transport::{Comm, CommSender, Match, World};
+pub use transport::{Comm, CommSender, Match, TransportKind, World};
+pub use wire::WirePayload;
 
 /// Process identity inside a [`World`] (the MPI rank).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

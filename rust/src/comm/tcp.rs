@@ -1,0 +1,321 @@
+//! Loopback-TCP transport fabric (DESIGN.md §15): the `transport = "tcp"`
+//! backend behind [`super::World`].
+//!
+//! Topology: every rank binds one `127.0.0.1` listener when it registers;
+//! each (src, dst) pair that actually talks gets one pooled connection,
+//! established lazily by the first send and owned by a dedicated **writer
+//! thread** (frames queue on an unbounded channel, exactly like the
+//! in-process mailboxes).  The accepting side spawns a **reader thread**
+//! per connection that decodes `len:u32 | envelope` frames
+//! ([`super::wire`]) and feeds the destination rank's ordinary mpsc
+//! mailbox — matched receive, out-of-order buffering and `recv_drain`
+//! upstairs are byte-for-byte the in-process code.
+//!
+//! Ordering: one connection per (src, dst) with a single writer preserves
+//! per-(src, dst) FIFO delivery, the guarantee every layer above relies
+//! on (tag-matched collectives, the §12 `CachePush`-before-`Exec`
+//! invariant).
+//!
+//! Failure mapping: a dead peer surfaces as
+//! [`Error::RankUnreachable`] exactly like in-process — deregistration
+//! closes the rank's listener and tears down its pooled connections, a
+//! connect to a closed listener is refused, and a mid-stream socket error
+//! marks the connection dead so the *next* send fails fast and the
+//! heartbeat/recovery machinery (DESIGN.md §14) takes over.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use super::message::Envelope;
+use super::wire::{read_frame, write_frame, MAX_FRAME_BYTES};
+use super::Rank;
+use crate::error::{Error, Result};
+
+type DecodeFn<M> = fn(&[u8]) -> Result<Envelope<M>>;
+
+/// One pooled (src, dst) connection: frames queue on `tx` for the writer
+/// thread; `dead` flips on the first socket error so the next send
+/// re-fails fast instead of queueing into a black hole.
+struct Conn {
+    tx: Sender<Vec<u8>>,
+    dead: Arc<AtomicBool>,
+}
+
+/// One rank's accepting side.
+struct Listener {
+    port: u16,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// The socket substrate one `World` owns when built with
+/// `TransportKind::Tcp`.  Envelope (de)serialisation is injected as plain
+/// function pointers so the fabric itself needs no trait bounds beyond
+/// `Send` — the `WirePayload` requirement lives only on the
+/// transport-selecting constructors.
+pub(crate) struct TcpFabric<M> {
+    encode: fn(&Envelope<M>) -> Vec<u8>,
+    decode: DecodeFn<M>,
+    /// Listener port per registered rank — the "address book".
+    ports: RwLock<HashMap<Rank, u16>>,
+    /// Pooled outbound connections, one per (src, dst) pair.
+    conns: Mutex<HashMap<(Rank, Rank), Conn>>,
+    listeners: Mutex<HashMap<Rank, Listener>>,
+}
+
+impl<M> TcpFabric<M> {
+    pub(crate) fn new(encode: fn(&Envelope<M>) -> Vec<u8>, decode: DecodeFn<M>) -> Self {
+        TcpFabric {
+            encode,
+            decode,
+            ports: RwLock::new(HashMap::new()),
+            conns: Mutex::new(HashMap::new()),
+            listeners: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Encode and ship one envelope on the (src, dst) pooled connection,
+    /// establishing it on first use.  Any socket-level failure maps to
+    /// [`Error::RankUnreachable`] — the same verdict the in-process
+    /// backend gives for a dropped mailbox.
+    pub(crate) fn send(&self, env: &Envelope<M>) -> Result<()> {
+        let frame = (self.encode)(env);
+        if frame.len() > MAX_FRAME_BYTES {
+            return Err(Error::Assemble(format!(
+                "envelope frame of {} bytes exceeds the {} byte cap",
+                frame.len(),
+                MAX_FRAME_BYTES
+            )));
+        }
+        let key = (env.src, env.dst);
+        let mut conns = self.conns.lock().expect("tcp conns poisoned");
+        if conns.get(&key).is_some_and(|c| c.dead.load(Ordering::Acquire)) {
+            conns.remove(&key);
+        }
+        if !conns.contains_key(&key) {
+            let port = *self
+                .ports
+                .read()
+                .expect("tcp ports poisoned")
+                .get(&env.dst)
+                .ok_or(Error::RankUnreachable(env.dst))?;
+            let stream = TcpStream::connect(("127.0.0.1", port))
+                .map_err(|_| Error::RankUnreachable(env.dst))?;
+            // Control frames are small and latency-bound; never Nagle them.
+            let _ = stream.set_nodelay(true);
+            let (tx, rx) = channel::<Vec<u8>>();
+            let dead = Arc::new(AtomicBool::new(false));
+            {
+                let dead = dead.clone();
+                std::thread::spawn(move || writer_loop(stream, rx, dead));
+            }
+            conns.insert(key, Conn { tx, dead });
+        }
+        let conn = conns.get(&key).expect("just ensured");
+        if conn.tx.send(frame).is_err() {
+            conns.remove(&key);
+            return Err(Error::RankUnreachable(env.dst));
+        }
+        Ok(())
+    }
+
+    /// Tear down `rank`'s side of the fabric: close its listener (so new
+    /// connects are refused), drop every pooled connection touching it
+    /// (writer threads drain and exit), and forget its port.  Mirrors the
+    /// mailbox removal + epoch bump of `WorldInner::remove`.
+    pub(crate) fn close_rank(&self, rank: Rank) {
+        self.ports.write().expect("tcp ports poisoned").remove(&rank);
+        self.conns
+            .lock()
+            .expect("tcp conns poisoned")
+            .retain(|(src, dst), _| *src != rank && *dst != rank);
+        let listener = self.listeners.lock().expect("tcp listeners poisoned").remove(&rank);
+        if let Some(l) = listener {
+            stop_listener(l);
+        }
+    }
+}
+
+impl<M: Send + 'static> TcpFabric<M> {
+    /// Bind `rank`'s loopback listener and start its accept loop; every
+    /// accepted connection gets a reader thread feeding `mailbox`.
+    /// Called by `World::add_rank` *before* the rank becomes visible in
+    /// the registry, so no send can race the bind.
+    pub(crate) fn listen(&self, rank: Rank, mailbox: Sender<Envelope<M>>) {
+        let listener =
+            TcpListener::bind(("127.0.0.1", 0)).expect("bind loopback transport listener");
+        let port = listener.local_addr().expect("listener has local addr").port();
+        let stop = Arc::new(AtomicBool::new(false));
+        let decode = self.decode;
+        let join = {
+            let stop = stop.clone();
+            std::thread::spawn(move || accept_loop(listener, stop, mailbox, decode))
+        };
+        self.ports.write().expect("tcp ports poisoned").insert(rank, port);
+        self.listeners
+            .lock()
+            .expect("tcp listeners poisoned")
+            .insert(rank, Listener { port, stop, join: Some(join) });
+    }
+}
+
+impl<M> Drop for TcpFabric<M> {
+    fn drop(&mut self) {
+        // World teardown: drop every writer queue, then unblock and join
+        // every accept loop.  Poison is tolerated — drop must not panic.
+        if let Ok(mut conns) = self.conns.lock() {
+            conns.clear();
+        }
+        let listeners: Vec<Listener> = match self.listeners.lock() {
+            Ok(mut map) => map.drain().map(|(_, l)| l).collect(),
+            Err(_) => return,
+        };
+        for l in listeners {
+            stop_listener(l);
+        }
+    }
+}
+
+/// Signal an accept loop to exit, wake it with a throwaway connection,
+/// and join it.
+fn stop_listener(mut l: Listener) {
+    l.stop.store(true, Ordering::Release);
+    // `accept` has no timeout; a dummy connect makes it return once more
+    // so it can observe the stop flag.
+    let _ = TcpStream::connect(("127.0.0.1", l.port));
+    if let Some(join) = l.join.take() {
+        let _ = join.join();
+    }
+}
+
+/// Accept connections for one rank until stopped, spawning a frame-reader
+/// per peer stream.
+fn accept_loop<M: Send + 'static>(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    mailbox: Sender<Envelope<M>>,
+    decode: DecodeFn<M>,
+) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        let mailbox = mailbox.clone();
+        std::thread::spawn(move || reader_loop(stream, mailbox, decode));
+    }
+}
+
+/// Decode frames off one accepted stream into the rank's mailbox.  Exits
+/// on peer EOF, socket error, corrupt frame, or the mailbox endpoint
+/// being dropped (rank gone) — all equivalent to the connection dying.
+fn reader_loop<M>(stream: TcpStream, mailbox: Sender<Envelope<M>>, decode: DecodeFn<M>) {
+    let mut reader = std::io::BufReader::new(&stream);
+    loop {
+        match read_frame(&mut reader) {
+            Ok(Some(body)) => match decode(&body) {
+                Ok(env) => {
+                    if mailbox.send(env).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            },
+            Ok(None) | Err(_) => break,
+        }
+    }
+    drop(reader);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Ship queued frames down one pooled connection until the queue closes
+/// (rank teardown) or the socket fails (peer death → `dead` flag).
+fn writer_loop(stream: TcpStream, rx: Receiver<Vec<u8>>, dead: Arc<AtomicBool>) {
+    use std::io::Write;
+    let mut writer = std::io::BufWriter::new(&stream);
+    for frame in rx {
+        if write_frame(&mut writer, &frame).and_then(|()| writer.flush()).is_err() {
+            dead.store(true, Ordering::Release);
+            break;
+        }
+    }
+    drop(writer);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::wire::{decode_envelope, encode_envelope};
+    use crate::comm::{message::Inner, Tag};
+
+    fn fabric() -> TcpFabric<Vec<u8>> {
+        TcpFabric::new(encode_envelope::<Vec<u8>>, decode_envelope::<Vec<u8>>)
+    }
+
+    fn env(src: u32, dst: u32, body: Vec<u8>) -> Envelope<Vec<u8>> {
+        Envelope { src: Rank(src), dst: Rank(dst), tag: Tag(5), payload: Inner::User(body) }
+    }
+
+    #[test]
+    fn frames_flow_rank_to_rank_in_order() {
+        let fab = fabric();
+        let (tx, rx) = channel();
+        fab.listen(Rank(1), tx);
+        for i in 0..100u8 {
+            fab.send(&env(0, 1, vec![i])).unwrap();
+        }
+        for i in 0..100u8 {
+            let got = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            assert_eq!(got.src, Rank(0));
+            assert_eq!(got.into_user(), vec![i], "FIFO order must hold over the socket");
+        }
+    }
+
+    #[test]
+    fn unknown_rank_is_unreachable() {
+        let fab = fabric();
+        match fab.send(&env(0, 9, vec![1])) {
+            Err(Error::RankUnreachable(r)) => assert_eq!(r, Rank(9)),
+            other => panic!("expected RankUnreachable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn closed_rank_refuses_new_connections() {
+        let fab = fabric();
+        let (tx, rx) = channel();
+        fab.listen(Rank(2), tx);
+        fab.send(&env(0, 2, vec![7])).unwrap();
+        assert_eq!(
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap().into_user(),
+            vec![7]
+        );
+        fab.close_rank(Rank(2));
+        // The pooled connection is gone and the port forgotten: the very
+        // next send fails fast (no reconnect-and-hang).
+        match fab.send(&env(0, 2, vec![8])) {
+            Err(Error::RankUnreachable(r)) => assert_eq!(r, Rank(2)),
+            other => panic!("expected RankUnreachable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn distinct_sources_get_distinct_connections() {
+        let fab = fabric();
+        let (tx, rx) = channel();
+        fab.listen(Rank(3), tx);
+        fab.send(&env(0, 3, vec![0])).unwrap();
+        fab.send(&env(1, 3, vec![1])).unwrap();
+        let mut seen: Vec<u32> = (0..2)
+            .map(|_| rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap().src.0)
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1]);
+        assert_eq!(fab.conns.lock().unwrap().len(), 2, "one pooled conn per (src, dst)");
+    }
+}

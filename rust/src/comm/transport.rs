@@ -23,9 +23,71 @@ use super::costmodel::{
     CommCalibration, CommStats, CostModel, StatsSnapshot, DEFAULT_CALIBRATION_EWMA_ALPHA,
 };
 use super::message::{CollPayload, Envelope, Inner, Tag, WireSize};
+use super::tcp::TcpFabric;
+use super::wire::{decode_envelope, encode_envelope, WirePayload};
 use super::Rank;
 use crate::error::{Error, Result};
 use crate::fault::ChaosPlan;
+
+/// Which substrate carries cross-rank envelopes (config knob `transport`,
+/// env override `HYPAR_TRANSPORT`; DESIGN.md §15).
+///
+/// `Inproc` is the default and reproduces the historical in-process
+/// behaviour bit-for-bit.  `Tcp` routes every cross-rank envelope through
+/// a pooled loopback-TCP connection with length-prefixed wire framing
+/// ([`super::wire`]); self-sends stay process-local on both backends,
+/// matching real MPI implementations which short-circuit self-delivery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process mailboxes (unbounded MPSC channels) — the default.
+    #[default]
+    Inproc,
+    /// Loopback TCP (`127.0.0.1`) sockets, one pooled connection per
+    /// (src, dst) pair, feeding the same matched-receive mailboxes.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Canonical knob spelling (`"inproc"` / `"tcp"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TransportKind::Inproc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// Parse the knob spelling; anything but `"inproc"` / `"tcp"` is a
+    /// config error.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "inproc" => Ok(TransportKind::Inproc),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(Error::Config(format!(
+                "transport must be \"inproc\" or \"tcp\", got \"{other}\""
+            ))),
+        }
+    }
+
+    /// Resolve the effective backend: the `HYPAR_TRANSPORT` environment
+    /// variable wins when set (so an unchanged test suite can be re-run
+    /// against either backend), otherwise `default` (the config knob).
+    pub fn from_env_or(default: Self) -> Result<Self> {
+        match std::env::var("HYPAR_TRANSPORT") {
+            Ok(s) => Self::parse(&s).map_err(|_| {
+                Error::Config(format!(
+                    "HYPAR_TRANSPORT must be \"inproc\" or \"tcp\", got \"{s}\""
+                ))
+            }),
+            Err(_) => Ok(default),
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 struct WorldInner<M> {
     mailboxes: RwLock<HashMap<Rank, Sender<Envelope<M>>>>,
@@ -46,6 +108,11 @@ struct WorldInner<M> {
     /// stashed message is delivered right after the source's *next*
     /// message (an adjacent-pair swap).
     chaos_stash: Mutex<HashMap<Rank, Envelope<M>>>,
+    /// `Some` iff this world runs the loopback-TCP backend
+    /// ([`TransportKind::Tcp`]): cross-rank envelopes are serialised and
+    /// shipped through pooled sockets instead of being enqueued directly
+    /// (DESIGN.md §15).  `None` = historical in-process behaviour.
+    tcp: Option<TcpFabric<M>>,
 }
 
 impl<M> WorldInner<M> {
@@ -54,6 +121,13 @@ impl<M> WorldInner<M> {
             .write()
             .expect("mailbox lock poisoned")
             .remove(&rank);
+        // Over TCP the registry removal alone is not enough: the rank's
+        // listener must stop accepting and its pooled connections must be
+        // torn down so in-flight connects are refused, mapping peer death
+        // to the same fail-fast surface as the in-process backend.
+        if let Some(fab) = &self.tcp {
+            fab.close_rank(rank);
+        }
         // Release-ordered after the map write so a sender that observes
         // the new epoch also observes the removal.
         self.epoch.fetch_add(1, Ordering::Release);
@@ -104,6 +178,15 @@ impl<M: Send + WireSize + 'static> World<M> {
     /// `calibrate = false` the calibration always answers with the
     /// configured α/β and observations are discarded.
     pub fn new_with_calibration(cost: CostModel, ewma_alpha: f64, calibrate: bool) -> Self {
+        Self::build(cost, ewma_alpha, calibrate, None)
+    }
+
+    fn build(
+        cost: CostModel,
+        ewma_alpha: f64,
+        calibrate: bool,
+        tcp: Option<TcpFabric<M>>,
+    ) -> Self {
         let calibration = Arc::new(CommCalibration::new(&cost, ewma_alpha, calibrate));
         World {
             inner: Arc::new(WorldInner {
@@ -115,7 +198,17 @@ impl<M: Send + WireSize + 'static> World<M> {
                 stats: CommStats::default(),
                 chaos: OnceLock::new(),
                 chaos_stash: Mutex::new(HashMap::new()),
+                tcp,
             }),
+        }
+    }
+
+    /// Which backend this world runs (DESIGN.md §15).
+    pub fn transport_kind(&self) -> TransportKind {
+        if self.inner.tcp.is_some() {
+            TransportKind::Tcp
+        } else {
+            TransportKind::Inproc
         }
     }
 
@@ -134,6 +227,12 @@ impl<M: Send + WireSize + 'static> World<M> {
     pub fn add_rank(&self) -> Comm<M> {
         let rank = Rank(self.inner.next_rank.fetch_add(1, Ordering::SeqCst));
         let (tx, rx) = channel();
+        if let Some(fab) = &self.inner.tcp {
+            // Bind the rank's loopback listener before it becomes visible
+            // in the registry so no send can observe a rank whose port is
+            // not yet known.
+            fab.listen(rank, tx.clone());
+        }
         self.inner
             .mailboxes
             .write()
@@ -187,8 +286,52 @@ impl<M: Send + WireSize + 'static> World<M> {
 
     /// A free-standing send handle not tied to any rank (rank is encoded
     /// per send call as `src`). Used by the framework driver thread.
+    ///
+    /// Reachability note (DESIGN.md §15): on *both* backends a send from
+    /// this handle fails fast once the destination deregisters — the
+    /// epoch-checked registry lookup in [`deliver_one`] runs before any
+    /// backend dispatch, so the `Arc`-shared mailbox handle alone never
+    /// keeps a dead rank "reachable".
     pub fn sender_for(&self, src: Rank) -> CommSender<M> {
         CommSender { src, world: self.inner.clone(), cache: SendCache::fresh() }
+    }
+}
+
+/// Transport-selecting constructors: available when `M` has a wire
+/// serialisation ([`WirePayload`]), which the TCP backend needs to frame
+/// envelopes.  The `Inproc` variants behave exactly like [`World::new`] /
+/// [`World::new_with_calibration`].
+impl<M: Send + WireSize + WirePayload + 'static> World<M> {
+    /// New world on the given backend (link calibration on, default
+    /// smoothing).
+    pub fn new_with_transport(cost: CostModel, kind: TransportKind) -> Self {
+        Self::new_with_calibration_transport(cost, DEFAULT_CALIBRATION_EWMA_ALPHA, true, kind)
+    }
+
+    /// New world with explicit calibration settings on the given backend.
+    pub fn new_with_calibration_transport(
+        cost: CostModel,
+        ewma_alpha: f64,
+        calibrate: bool,
+        kind: TransportKind,
+    ) -> Self {
+        let fabric = match kind {
+            TransportKind::Inproc => None,
+            TransportKind::Tcp => {
+                Some(TcpFabric::new(encode_envelope::<M>, decode_envelope::<M>))
+            }
+        };
+        Self::build(cost, ewma_alpha, calibrate, fabric)
+    }
+
+    /// New world on the backend selected by `HYPAR_TRANSPORT` (default:
+    /// in-process).  Entry point for standalone solvers so the env
+    /// override reaches every `World` a test run creates.
+    pub fn new_from_env(cost: CostModel) -> Result<Self> {
+        Ok(Self::new_with_transport(
+            cost,
+            TransportKind::from_env_or(TransportKind::default())?,
+        ))
     }
 }
 
@@ -288,14 +431,26 @@ fn deliver_one<M: WireSize>(
     if !local {
         inner.cost.on_send(bytes, &inner.stats);
     }
-    if tx.send(env).is_err() {
-        // Receiver endpoint dropped (rank died without deregistering).
+    // Backend dispatch (DESIGN.md §15).  Self-sends stay process-local on
+    // both backends — a worker depositing into its own cache never hits
+    // the wire, matching real MPI self-delivery short-circuits.
+    let sent = match &inner.tcp {
+        Some(fab) if !local => fab.send(&env),
+        _ => {
+            // Receiver endpoint dropped = rank died without deregistering.
+            tx.send(env).map_err(|_| Error::RankUnreachable(dst))
+        }
+    };
+    if let Err(e) = sent {
         cache.map.remove(&dst);
-        return Err(Error::RankUnreachable(dst));
+        return Err(e);
     }
     if let Some(t0) = t0 {
         // Observed send-side transfer time (includes the injected α/β
-        // sleep under `simulate`) refines the per-peer calibration.
+        // sleep under `simulate`) refines the per-peer calibration.  Over
+        // TCP this covers serialisation + enqueue to the writer thread,
+        // not the socket flush — a documented divergence: send-side
+        // timing is all MPI-style eager sends can observe anyway.
         inner
             .calibration
             .observe(src, dst, bytes, t0.elapsed().as_secs_f64() * 1e6);

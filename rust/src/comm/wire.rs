@@ -1,0 +1,425 @@
+//! Length-prefixed wire framing for [`Envelope`]s — the byte layer the
+//! loopback-TCP transport ([`super::tcp`]) ships between ranks
+//! (DESIGN.md §15).
+//!
+//! Frame layout (little-endian throughout):
+//!
+//! ```text
+//! socket frame := len:u32  body[len]
+//! body         := src:u32  dst:u32  tag:u32  kind:u8  payload
+//! kind         := 0 user | 1 coll token | 2 coll bytes | 3 coll f64 | 4 coll f32
+//! ```
+//!
+//! User payloads (`kind` 0) are produced by the message type's
+//! [`WirePayload`] impl — the framework's control protocol implements it
+//! in `scheduler::wire`, where one `FwMsg::Batch` coalesced frame
+//! (DESIGN.md §12) maps onto exactly one wire frame.  Collective payloads
+//! ride the same bulk little-endian slice codec as [`crate::data::codec`]
+//! (one `memcpy` per numeric vector on LE hosts).
+//!
+//! Nothing here is consulted by the default in-process transport: its
+//! envelopes move as Rust values and never touch bytes.
+
+use std::io::{Read, Write};
+
+use super::message::{CollPayload, Envelope, Inner, Tag};
+use super::Rank;
+use crate::data::codec;
+use crate::error::{Error, Result};
+
+/// Hard upper bound on one frame's body (a frame above it is a corrupt
+/// length prefix, not data — mirrors the chunk cap in `data/codec.rs`).
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+const KIND_USER: u8 = 0;
+const KIND_COLL_TOKEN: u8 = 1;
+const KIND_COLL_BYTES: u8 = 2;
+const KIND_COLL_F64: u8 = 3;
+const KIND_COLL_F32: u8 = 4;
+
+// ------------------------------------------------------------- primitives
+
+/// Append a `u32` in wire (little-endian) order.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64` in wire (little-endian) order.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a length-prefixed (`u64`) byte run.
+pub fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_u64(out, v.len() as u64);
+    out.extend_from_slice(v);
+}
+
+/// Cursor over one received frame body.  Every accessor is
+/// bounds-checked: a truncated or corrupt frame surfaces as
+/// [`Error::Assemble`], never as a panic — the peer wrote those bytes.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    /// Take the next `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.buf.len() - self.pos {
+            return Err(Error::Assemble(format!(
+                "truncated wire frame: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Next `u8`.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Next little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    /// Next little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Next length-prefixed byte run (see [`put_bytes`]).
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.checked_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Whether the frame is fully consumed.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Read a `u64` element count and validate that `count * elem_bytes`
+    /// can still be present in the frame (rejects corrupt length prefixes
+    /// before any allocation is sized from them).
+    pub fn checked_len(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        if n.saturating_mul(elem_bytes) > self.remaining() {
+            return Err(Error::Assemble(format!(
+                "implausible wire length {n} (× {elem_bytes} B) with {} bytes left",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+}
+
+// ----------------------------------------------------------- WirePayload
+
+/// Byte-level serialisation of a user message type, required only to run
+/// a [`super::World`] over a real wire (`transport = "tcp"`).  The
+/// in-process backend never calls either method.
+///
+/// Implementations must be exact inverses: `wire_decode` over the bytes
+/// `wire_encode` produced yields an equal value and consumes exactly the
+/// bytes written (the envelope decoder rejects trailing bytes).
+pub trait WirePayload: Sized {
+    /// Append this value's wire form to `out`.
+    fn wire_encode(&self, out: &mut Vec<u8>);
+
+    /// Decode one value, consuming exactly what [`Self::wire_encode`]
+    /// wrote.
+    fn wire_decode(r: &mut WireReader<'_>) -> Result<Self>;
+}
+
+impl WirePayload for () {
+    fn wire_encode(&self, _out: &mut Vec<u8>) {}
+
+    fn wire_decode(_r: &mut WireReader<'_>) -> Result<Self> {
+        Ok(())
+    }
+}
+
+impl WirePayload for Vec<u8> {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        put_bytes(out, self);
+    }
+
+    fn wire_decode(r: &mut WireReader<'_>) -> Result<Self> {
+        r.bytes()
+    }
+}
+
+impl WirePayload for String {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        put_bytes(out, self.as_bytes());
+    }
+
+    fn wire_decode(r: &mut WireReader<'_>) -> Result<Self> {
+        String::from_utf8(r.bytes()?)
+            .map_err(|e| Error::Assemble(format!("invalid utf-8 on wire: {e}")))
+    }
+}
+
+impl WirePayload for Vec<f32> {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.len() as u64);
+        codec::put_f32_slice(out, self);
+    }
+
+    fn wire_decode(r: &mut WireReader<'_>) -> Result<Self> {
+        let n = r.checked_len(4)?;
+        Ok(codec::f32s_from_le(r.take(n * 4)?))
+    }
+}
+
+impl WirePayload for Vec<f64> {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.len() as u64);
+        codec::put_f64_slice(out, self);
+    }
+
+    fn wire_decode(r: &mut WireReader<'_>) -> Result<Self> {
+        let n = r.checked_len(8)?;
+        Ok(codec::f64s_from_le(r.take(n * 8)?))
+    }
+}
+
+// ------------------------------------------------------ envelope framing
+
+/// Serialise one envelope into a frame body (no socket length prefix —
+/// [`write_frame`] adds that).
+pub(crate) fn encode_envelope<M: WirePayload>(env: &Envelope<M>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32);
+    put_u32(&mut out, env.src.0);
+    put_u32(&mut out, env.dst.0);
+    put_u32(&mut out, env.tag.0);
+    match &env.payload {
+        Inner::User(m) => {
+            out.push(KIND_USER);
+            m.wire_encode(&mut out);
+        }
+        Inner::Coll(CollPayload::Token) => out.push(KIND_COLL_TOKEN),
+        Inner::Coll(CollPayload::Bytes(b)) => {
+            out.push(KIND_COLL_BYTES);
+            b.wire_encode(&mut out);
+        }
+        Inner::Coll(CollPayload::F64(v)) => {
+            out.push(KIND_COLL_F64);
+            v.wire_encode(&mut out);
+        }
+        Inner::Coll(CollPayload::F32(v)) => {
+            out.push(KIND_COLL_F32);
+            v.wire_encode(&mut out);
+        }
+    }
+    out
+}
+
+/// Decode a frame body produced by [`encode_envelope`]; trailing bytes
+/// are rejected (a frame holds exactly one envelope).
+pub(crate) fn decode_envelope<M: WirePayload>(buf: &[u8]) -> Result<Envelope<M>> {
+    let mut r = WireReader::new(buf);
+    let src = Rank(r.u32()?);
+    let dst = Rank(r.u32()?);
+    let tag = Tag(r.u32()?);
+    let payload = match r.u8()? {
+        KIND_USER => Inner::User(M::wire_decode(&mut r)?),
+        KIND_COLL_TOKEN => Inner::Coll(CollPayload::Token),
+        KIND_COLL_BYTES => Inner::Coll(CollPayload::Bytes(Vec::<u8>::wire_decode(&mut r)?)),
+        KIND_COLL_F64 => Inner::Coll(CollPayload::F64(Vec::<f64>::wire_decode(&mut r)?)),
+        KIND_COLL_F32 => Inner::Coll(CollPayload::F32(Vec::<f32>::wire_decode(&mut r)?)),
+        other => return Err(Error::Assemble(format!("bad envelope kind {other}"))),
+    };
+    if !r.is_empty() {
+        return Err(Error::Assemble(format!(
+            "trailing bytes after envelope: {} left",
+            r.remaining()
+        )));
+    }
+    Ok(Envelope { src, dst, tag, payload })
+}
+
+// ------------------------------------------------------- socket framing
+
+/// Write one `len:u32 | body` frame.  The writer thread of a pooled TCP
+/// connection is the only production caller; tests drive it directly to
+/// pin the framing against adversarial streams.
+pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> std::io::Result<()> {
+    debug_assert!(body.len() <= MAX_FRAME_BYTES);
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)
+}
+
+/// Read one `len:u32 | body` frame.  `Ok(None)` on a clean EOF *between*
+/// frames (the peer closed its endpoint); an EOF inside a frame, or a
+/// length prefix beyond [`MAX_FRAME_BYTES`], is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < len.len() {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof inside frame length prefix",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("implausible frame length {len}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::message::HEADER_BYTES;
+    use crate::comm::WireSize;
+
+    fn user_env(payload: Vec<u8>) -> Envelope<Vec<u8>> {
+        Envelope {
+            src: Rank(3),
+            dst: Rank(7),
+            tag: Tag(42),
+            payload: Inner::User(payload),
+        }
+    }
+
+    #[test]
+    fn frame_layout_is_pinned() {
+        // src:u32 | dst:u32 | tag:u32 | kind:u8 | len:u64 | payload
+        let body = encode_envelope(&user_env(vec![0xAA, 0xBB]));
+        assert_eq!(&body[0..4], &3u32.to_le_bytes());
+        assert_eq!(&body[4..8], &7u32.to_le_bytes());
+        assert_eq!(&body[8..12], &42u32.to_le_bytes());
+        assert_eq!(body[12], 0, "kind 0 = user payload");
+        assert_eq!(&body[13..21], &2u64.to_le_bytes());
+        assert_eq!(&body[21..], &[0xAA, 0xBB]);
+    }
+
+    #[test]
+    fn frame_length_matches_wire_size_accounting() {
+        // The α/β cost model charges `HEADER_BYTES + payload.wire_size()`
+        // per envelope; the physical frame carries a 13-byte header and an
+        // 8-byte payload length prefix instead.  Pin the exact relation so
+        // accounting drift (hypar-lint L2's concern) is caught on the wire
+        // too.
+        for n in [0usize, 1, 17, 4096] {
+            let env = user_env(vec![0u8; n]);
+            let body = encode_envelope(&env);
+            assert_eq!(body.len(), env.wire_size() - HEADER_BYTES + 13 + 8, "payload {n}");
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrips_every_collective_kind() {
+        let payloads = vec![
+            Inner::Coll(CollPayload::Token),
+            Inner::Coll(CollPayload::Bytes(vec![1, 2, 3])),
+            Inner::Coll(CollPayload::F64(vec![1.5, -2.5e300, f64::INFINITY])),
+            Inner::Coll(CollPayload::F32(vec![0.0, -1.0])),
+            Inner::User(vec![9u8; 5]),
+        ];
+        for payload in payloads {
+            let env = Envelope { src: Rank(1), dst: Rank(2), tag: Tag(9), payload };
+            let back: Envelope<Vec<u8>> = decode_envelope(&encode_envelope(&env)).unwrap();
+            assert_eq!(back.src, env.src);
+            assert_eq!(back.dst, env.dst);
+            assert_eq!(back.tag, env.tag);
+            assert_eq!(format!("{:?}", back.payload), format!("{:?}", env.payload));
+        }
+    }
+
+    #[test]
+    fn corrupt_envelopes_rejected() {
+        let good = encode_envelope(&user_env(vec![1, 2, 3]));
+        // Unknown payload kind.
+        let mut bad = good.clone();
+        bad[12] = 99;
+        assert!(decode_envelope::<Vec<u8>>(&bad).is_err());
+        // Truncated payload.
+        assert!(decode_envelope::<Vec<u8>>(&good[..good.len() - 1]).is_err());
+        // Trailing bytes.
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(decode_envelope::<Vec<u8>>(&bad).is_err());
+        // Implausible length prefix.
+        let mut bad = good;
+        bad[13..21].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_envelope::<Vec<u8>>(&bad).is_err());
+    }
+
+    #[test]
+    fn frames_roundtrip_back_to_back() {
+        let mut stream = Vec::new();
+        for n in [0usize, 1, 300] {
+            write_frame(&mut stream, &encode_envelope(&user_env(vec![7u8; n]))).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(stream);
+        for n in [0usize, 1, 300] {
+            let body = read_frame(&mut cur).unwrap().expect("frame present");
+            let env: Envelope<Vec<u8>> = decode_envelope(&body).unwrap();
+            assert_eq!(env.into_user(), vec![7u8; n]);
+        }
+        assert!(read_frame(&mut cur).unwrap().is_none(), "clean eof after last frame");
+    }
+
+    #[test]
+    fn eof_inside_a_frame_is_an_error() {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &[1, 2, 3, 4]).unwrap();
+        // Cut inside the body, and inside the length prefix.
+        for cut in [6, 2] {
+            let mut cur = std::io::Cursor::new(stream[..cut].to_vec());
+            assert!(read_frame(&mut cur).is_err(), "cut at {cut}");
+        }
+        // A corrupt (giant) length prefix is rejected without allocating.
+        let mut cur = std::io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn scalar_vector_payloads_roundtrip() {
+        let mut out = Vec::new();
+        vec![1.0f32, -2.5, 3.25].wire_encode(&mut out);
+        let back = Vec::<f32>::wire_decode(&mut WireReader::new(&out)).unwrap();
+        assert_eq!(back, vec![1.0, -2.5, 3.25]);
+
+        let mut out = Vec::new();
+        "héllo".to_string().wire_encode(&mut out);
+        let back = String::wire_decode(&mut WireReader::new(&out)).unwrap();
+        assert_eq!(back, "héllo");
+        // Invalid utf-8 is a decode error, not a panic.
+        let mut bad = Vec::new();
+        put_bytes(&mut bad, &[0xFF, 0xFE]);
+        assert!(String::wire_decode(&mut WireReader::new(&bad)).is_err());
+    }
+}

@@ -18,6 +18,7 @@
 //!   "comm_cost_model": {"alpha_us": 2.0, "bandwidth_gbps": 10.0, "simulate": false},
 //!   "engine": {"artifact_dir": "artifacts", "variant": "ref"},
 //!   "execution_mode": "dataflow",
+//!   "transport": "inproc",
 //!   "speculative_prefetch": true,
 //!   "work_stealing": true,
 //!   "steal_granularity": 1,
@@ -53,7 +54,7 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::comm::CostModel;
+use crate::comm::{CostModel, TransportKind};
 use crate::error::{Error, Result};
 use crate::util::json::{self, Json};
 
@@ -172,6 +173,13 @@ pub struct TopologyConfig {
     pub engine: Option<EngineConfig>,
     /// Barrier vs dataflow control plane (DESIGN.md §7).
     pub execution_mode: ExecutionMode,
+    /// Which substrate carries cross-rank messages (DESIGN.md §15):
+    /// `"inproc"` (default — in-process mailboxes, the historical
+    /// behaviour bit-for-bit) or `"tcp"` (loopback sockets with
+    /// length-prefixed wire framing; same values, real serialisation).
+    /// The `HYPAR_TRANSPORT` environment variable overrides this knob at
+    /// run time so an unchanged test suite can exercise either backend.
+    pub transport: TransportKind,
     /// Speculative input prefetch under dataflow execution (DESIGN.md §7):
     /// when a waiting job has all inputs but one materialised, its probable
     /// target scheduler pulls the remote ones while the last producer
@@ -274,6 +282,7 @@ impl Default for TopologyConfig {
             comm_cost_model: CostModelConfig::default(),
             engine: None,
             execution_mode: ExecutionMode::default(),
+            transport: TransportKind::default(),
             speculative_prefetch: true,
             work_stealing: true,
             steal_granularity: 1,
@@ -418,6 +427,12 @@ impl TopologyConfig {
                 .ok_or_else(|| Error::Config("execution_mode must be a string".into()))?;
             cfg.execution_mode = ExecutionMode::parse(s)?;
         }
+        if let Some(v) = doc.get("transport") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::Config("transport must be a string".into()))?;
+            cfg.transport = TransportKind::parse(s)?;
+        }
         if let Some(v) = doc.get("speculative_prefetch") {
             cfg.speculative_prefetch = v.as_bool().ok_or_else(|| {
                 Error::Config("speculative_prefetch must be a bool".into())
@@ -460,6 +475,7 @@ impl TopologyConfig {
                 "execution_mode",
                 Json::str(self.execution_mode.as_str().to_string()),
             ),
+            ("transport", Json::str(self.transport.as_str().to_string())),
             ("speculative_prefetch", Json::Bool(self.speculative_prefetch)),
             ("work_stealing", Json::Bool(self.work_stealing)),
             (
@@ -621,6 +637,17 @@ mod tests {
         assert_eq!(back.execution_mode, ExecutionMode::Barrier);
         assert!(TopologyConfig::from_json_text(r#"{"execution_mode": "bsp"}"#).is_err());
         assert!(TopologyConfig::from_json_text(r#"{"execution_mode": 3}"#).is_err());
+    }
+
+    #[test]
+    fn transport_parses_and_roundtrips() {
+        assert_eq!(TopologyConfig::default().transport, TransportKind::Inproc);
+        let cfg = TopologyConfig::from_json_text(r#"{"transport": "tcp"}"#).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        let back = TopologyConfig::from_json_text(&cfg.to_json()).unwrap();
+        assert_eq!(back.transport, TransportKind::Tcp);
+        assert!(TopologyConfig::from_json_text(r#"{"transport": "infiniband"}"#).is_err());
+        assert!(TopologyConfig::from_json_text(r#"{"transport": 3}"#).is_err());
     }
 
     #[test]

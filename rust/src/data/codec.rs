@@ -101,6 +101,27 @@ macro_rules! get_le_vec {
     }};
 }
 
+/// Append an `f32` slice in wire (little-endian) order — the bulk-LE fast
+/// path shared with the envelope framing in `comm/wire.rs`.
+pub(crate) fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
+    put_le_slice!(out, v);
+}
+
+/// Append an `f64` slice in wire (little-endian) order.
+pub(crate) fn put_f64_slice(out: &mut Vec<u8>, v: &[f64]) {
+    put_le_slice!(out, v);
+}
+
+/// Decode a length-validated little-endian byte run into `f32`s.
+pub(crate) fn f32s_from_le(raw: &[u8]) -> Vec<f32> {
+    get_le_vec!(raw, f32)
+}
+
+/// Decode a length-validated little-endian byte run into `f64`s.
+pub(crate) fn f64s_from_le(raw: &[u8]) -> Vec<f64> {
+    get_le_vec!(raw, f64)
+}
+
 /// Append one chunk to `out`.
 pub fn encode_chunk(chunk: &DataChunk, out: &mut Vec<u8>) {
     out.push(dtype_tag(chunk.dtype()));

@@ -60,7 +60,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::comm::{CostModel, World};
+use crate::comm::{CostModel, TransportKind, World};
 use crate::config::{ExecutionMode, TopologyConfig};
 use crate::data::FunctionData;
 use crate::error::Result;
@@ -123,10 +123,14 @@ impl Framework {
         algo.validate()?;
         self.registry.check_algorithm(&algo)?;
 
-        let world: World<FwMsg> = World::new_with_calibration(
+        // `HYPAR_TRANSPORT` (when set) outranks the configured backend so
+        // the whole suite can be re-run over the wire (DESIGN.md §15).
+        let transport = TransportKind::from_env_or(self.cfg.transport)?;
+        let world: World<FwMsg> = World::new_with_calibration_transport(
             self.cfg.comm_cost_model(),
             self.cfg.comm_calibration_ewma_alpha,
             self.cfg.comm_calibration,
+            transport,
         );
         let metrics = Arc::new(MetricsCollector::new());
 
@@ -221,7 +225,8 @@ impl Framework {
             metrics.chaos(c.dropped, c.delayed, c.duplicated);
         }
         metrics.comm_model(world.calibration().accuracy());
-        let snapshot = metrics.finish(world.stats());
+        let mut snapshot = metrics.finish(world.stats());
+        snapshot.transport = transport.as_str().to_string();
         result.map(|results| RunReport { results, metrics: snapshot })
     }
 }
@@ -333,6 +338,18 @@ impl FrameworkBuilder {
     /// Barrier vs dataflow control plane (default: [`ExecutionMode::Dataflow`]).
     pub fn execution_mode(mut self, m: ExecutionMode) -> Self {
         self.cfg.execution_mode = m;
+        self
+    }
+
+    /// Message-transport backend (default: [`TransportKind::Inproc`];
+    /// DESIGN.md §15).  `Inproc` is the in-process channel fabric every
+    /// prior PR ran on; [`TransportKind::Tcp`] moves every cross-rank
+    /// envelope over loopback-TCP sockets behind the same `World`/`Comm`
+    /// surface.  Computed values are identical either way — only how the
+    /// bytes travel changes.  The `HYPAR_TRANSPORT` environment variable
+    /// (when set) overrides this at [`Framework::run`] time.
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        self.cfg.transport = t;
         self
     }
 

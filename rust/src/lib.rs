@@ -98,7 +98,7 @@ pub use framework::{Framework, FrameworkBuilder, RunReport};
 
 /// One-stop imports for framework users.
 pub mod prelude {
-    pub use crate::comm::{Comm, CommSender, Rank, Tag, World};
+    pub use crate::comm::{Comm, CommSender, Rank, Tag, TransportKind, World};
     pub use crate::config::{CostModelConfig, EngineConfig, ExecutionMode, TopologyConfig};
     pub use crate::data::{DataChunk, Dtype, FunctionData};
     pub use crate::error::{Error, Result};

@@ -213,6 +213,10 @@ pub struct MetricsSnapshot {
     pub msgs_delayed: u64,
     /// Messages the chaos plan delivered twice.
     pub msgs_duplicated: u64,
+    /// Transport backend the run's envelopes travelled on (`"inproc"` or
+    /// `"tcp"`; DESIGN.md §15).  Recorded so benchmark JSON from the two
+    /// backends can be told apart after the fact.
+    pub transport: String,
 }
 
 /// One dependency chain through the executed DAG (see
@@ -489,6 +493,7 @@ impl MetricsSnapshot {
             ("msgs_dropped", Json::num(self.msgs_dropped as f64)),
             ("msgs_delayed", Json::num(self.msgs_delayed as f64)),
             ("msgs_duplicated", Json::num(self.msgs_duplicated as f64)),
+            ("transport", Json::str(self.transport.clone())),
         ])
     }
 

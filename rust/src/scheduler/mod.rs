@@ -28,6 +28,7 @@ pub mod master;
 pub mod placement;
 pub mod store;
 pub mod sub;
+pub mod wire;
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,641 @@
+//! Wire serialisation of the control protocol ([`FwMsg`]) — what the
+//! loopback-TCP transport ships between ranks (DESIGN.md §15).
+//!
+//! Layout: every message is `tag:u8` (its declaration index in the
+//! [`FwMsg`] enum, pinned by the roundtrip tests) followed by its fields
+//! in declaration order, little-endian, with `u64` length prefixes on
+//! every vector.  [`FunctionData`] payloads reuse the chunk codec of
+//! [`crate::data::codec`] verbatim, so bulk numeric data moves as one
+//! `memcpy` per chunk on LE hosts.  A `FwMsg::Batch` coalesced frame
+//! (DESIGN.md §12) encodes recursively and therefore maps onto exactly
+//! one socket frame — message-level coalescing and wire framing compose
+//! instead of competing.
+//!
+//! Decoding is fully bounds-checked: corrupt bytes surface as
+//! [`Error::Assemble`](crate::error::Error::Assemble), never as a panic
+//! or oversized allocation (vector lengths are validated against the
+//! bytes actually present before reserving).
+
+use crate::comm::wire::{put_bytes, put_u32, put_u64, WirePayload, WireReader};
+use crate::comm::Rank;
+use crate::data::codec;
+use crate::data::FunctionData;
+use crate::error::{Error, Result};
+use crate::job::{ChunkRange, ChunkRef, FuncId, InjectedJob, InjectedRef, Injection, JobId, JobSpec, ThreadCount};
+
+use super::{ExecRequest, FwMsg, InputPart, SourceLoc};
+
+// --------------------------------------------------------- small helpers
+
+fn put_rank(out: &mut Vec<u8>, r: Rank) {
+    put_u32(out, r.0);
+}
+
+fn get_rank(r: &mut WireReader<'_>) -> Result<Rank> {
+    Ok(Rank(r.u32()?))
+}
+
+fn put_job(out: &mut Vec<u8>, j: JobId) {
+    put_u32(out, j.0);
+}
+
+fn get_job(r: &mut WireReader<'_>) -> Result<JobId> {
+    Ok(JobId(r.u32()?))
+}
+
+fn put_opt_rank(out: &mut Vec<u8>, v: Option<Rank>) {
+    match v {
+        None => out.push(0),
+        Some(rank) => {
+            out.push(1);
+            put_rank(out, rank);
+        }
+    }
+}
+
+fn get_opt_rank(r: &mut WireReader<'_>) -> Result<Option<Rank>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(get_rank(r)?)),
+        other => Err(Error::Assemble(format!("bad option flag {other}"))),
+    }
+}
+
+fn put_jobs(out: &mut Vec<u8>, v: &[JobId]) {
+    put_u64(out, v.len() as u64);
+    for j in v {
+        put_job(out, *j);
+    }
+}
+
+fn get_jobs(r: &mut WireReader<'_>) -> Result<Vec<JobId>> {
+    let n = r.checked_len(4)?;
+    (0..n).map(|_| get_job(r)).collect()
+}
+
+fn put_threads(out: &mut Vec<u8>, t: ThreadCount) {
+    match t {
+        ThreadCount::Auto => out.push(0),
+        ThreadCount::Exact(n) => {
+            out.push(1);
+            put_u32(out, n);
+        }
+    }
+}
+
+fn get_threads(r: &mut WireReader<'_>) -> Result<ThreadCount> {
+    match r.u8()? {
+        0 => Ok(ThreadCount::Auto),
+        1 => Ok(ThreadCount::Exact(r.u32()?)),
+        other => Err(Error::Assemble(format!("bad thread-count tag {other}"))),
+    }
+}
+
+fn put_range(out: &mut Vec<u8>, c: ChunkRange) {
+    match c {
+        ChunkRange::All => out.push(0),
+        ChunkRange::Range { lo, hi } => {
+            out.push(1);
+            put_u64(out, lo as u64);
+            put_u64(out, hi as u64);
+        }
+    }
+}
+
+fn get_range(r: &mut WireReader<'_>) -> Result<ChunkRange> {
+    match r.u8()? {
+        0 => Ok(ChunkRange::All),
+        1 => Ok(ChunkRange::Range { lo: r.u64()? as usize, hi: r.u64()? as usize }),
+        other => Err(Error::Assemble(format!("bad chunk-range tag {other}"))),
+    }
+}
+
+fn put_chunk_ref(out: &mut Vec<u8>, c: &ChunkRef) {
+    put_job(out, c.job);
+    put_range(out, c.range);
+}
+
+fn get_chunk_ref(r: &mut WireReader<'_>) -> Result<ChunkRef> {
+    Ok(ChunkRef { job: get_job(r)?, range: get_range(r)? })
+}
+
+fn put_spec(out: &mut Vec<u8>, s: &JobSpec) {
+    put_job(out, s.id);
+    put_u32(out, s.func.0);
+    put_threads(out, s.threads);
+    put_u64(out, s.inputs.len() as u64);
+    for c in &s.inputs {
+        put_chunk_ref(out, c);
+    }
+    out.push(s.keep as u8);
+}
+
+fn get_spec(r: &mut WireReader<'_>) -> Result<JobSpec> {
+    let id = get_job(r)?;
+    let func = FuncId(r.u32()?);
+    let threads = get_threads(r)?;
+    let n = r.checked_len(5)?; // a ChunkRef is ≥ 5 bytes (job + range tag)
+    let inputs = (0..n).map(|_| get_chunk_ref(r)).collect::<Result<Vec<_>>>()?;
+    let keep = r.u8()? != 0;
+    Ok(JobSpec { id, func, threads, inputs, keep })
+}
+
+fn put_source(out: &mut Vec<u8>, s: &SourceLoc) {
+    put_job(out, s.job);
+    put_rank(out, s.owner);
+    put_opt_rank(out, s.kept_on);
+}
+
+fn get_source(r: &mut WireReader<'_>) -> Result<SourceLoc> {
+    Ok(SourceLoc { job: get_job(r)?, owner: get_rank(r)?, kept_on: get_opt_rank(r)? })
+}
+
+fn put_sources(out: &mut Vec<u8>, v: &[SourceLoc]) {
+    put_u64(out, v.len() as u64);
+    for s in v {
+        put_source(out, s);
+    }
+}
+
+fn get_sources(r: &mut WireReader<'_>) -> Result<Vec<SourceLoc>> {
+    let n = r.checked_len(9)?; // job + owner + option flag
+    (0..n).map(|_| get_source(r)).collect()
+}
+
+fn put_data(out: &mut Vec<u8>, d: &FunctionData) {
+    put_bytes(out, &codec::encode(d));
+}
+
+fn get_data(r: &mut WireReader<'_>) -> Result<FunctionData> {
+    let n = r.checked_len(1)?;
+    codec::decode(r.take(n)?)
+}
+
+fn put_injected_ref(out: &mut Vec<u8>, i: &InjectedRef) {
+    match i {
+        InjectedRef::Existing(c) => {
+            out.push(0);
+            put_chunk_ref(out, c);
+        }
+        InjectedRef::Local { local_id, range } => {
+            out.push(1);
+            put_u32(out, *local_id);
+            put_range(out, *range);
+        }
+    }
+}
+
+fn get_injected_ref(r: &mut WireReader<'_>) -> Result<InjectedRef> {
+    match r.u8()? {
+        0 => Ok(InjectedRef::Existing(get_chunk_ref(r)?)),
+        1 => Ok(InjectedRef::Local { local_id: r.u32()?, range: get_range(r)? }),
+        other => Err(Error::Assemble(format!("bad injected-ref tag {other}"))),
+    }
+}
+
+fn put_injections(out: &mut Vec<u8>, v: &[Injection]) {
+    put_u64(out, v.len() as u64);
+    for inj in v {
+        put_u64(out, inj.segment_delta as u64);
+        put_u64(out, inj.jobs.len() as u64);
+        for j in &inj.jobs {
+            put_u32(out, j.local_id);
+            put_u32(out, j.func.0);
+            put_threads(out, j.threads);
+            put_u64(out, j.inputs.len() as u64);
+            for i in &j.inputs {
+                put_injected_ref(out, i);
+            }
+            out.push(j.keep as u8);
+        }
+    }
+}
+
+fn get_injections(r: &mut WireReader<'_>) -> Result<Vec<Injection>> {
+    let n = r.checked_len(16)?; // segment_delta + job count
+    (0..n)
+        .map(|_| {
+            let segment_delta = r.u64()? as usize;
+            let jn = r.checked_len(10)?; // local_id + func + threads tag + …
+            let jobs = (0..jn)
+                .map(|_| {
+                    let local_id = r.u32()?;
+                    let func = FuncId(r.u32()?);
+                    let threads = get_threads(r)?;
+                    let inn = r.checked_len(1)?;
+                    let inputs =
+                        (0..inn).map(|_| get_injected_ref(r)).collect::<Result<Vec<_>>>()?;
+                    let keep = r.u8()? != 0;
+                    Ok(InjectedJob { local_id, func, threads, inputs, keep })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Injection { segment_delta, jobs })
+        })
+        .collect()
+}
+
+fn put_input_part(out: &mut Vec<u8>, p: &InputPart) {
+    match p {
+        InputPart::Data(d) => {
+            out.push(0);
+            put_data(out, d);
+        }
+        InputPart::Kept { job, range } => {
+            out.push(1);
+            put_job(out, *job);
+            put_range(out, *range);
+        }
+    }
+}
+
+fn get_input_part(r: &mut WireReader<'_>) -> Result<InputPart> {
+    match r.u8()? {
+        0 => Ok(InputPart::Data(get_data(r)?)),
+        1 => Ok(InputPart::Kept { job: get_job(r)?, range: get_range(r)? }),
+        other => Err(Error::Assemble(format!("bad input-part tag {other}"))),
+    }
+}
+
+// Message tags: the variant's declaration index in `FwMsg`.  Extending the
+// protocol means appending here AND in `wire_decode` — the exhaustive
+// match below makes forgetting either a compile error or an instant
+// roundtrip-test failure.
+const T_ASSIGN: u8 = 0;
+const T_PREFETCH: u8 = 1;
+const T_RELEASE_RESULT: u8 = 2;
+const T_SHUTDOWN: u8 = 3;
+const T_JOB_DONE: u8 = 4;
+const T_JOB_ERROR: u8 = 5;
+const T_WORKER_LOST: u8 = 6;
+const T_JOB_ABORTED: u8 = 7;
+const T_FETCH_RESULT: u8 = 8;
+const T_RESULT_DATA: u8 = 9;
+const T_RESULT_UNAVAILABLE: u8 = 10;
+const T_EXEC: u8 = 11;
+const T_CACHE_PUSH: u8 = 12;
+const T_PULL_KEPT: u8 = 13;
+const T_DROP_KEPT: u8 = 14;
+const T_WORKER_SHUTDOWN: u8 = 15;
+const T_EXEC_DONE: u8 = 16;
+const T_EXEC_FAILED: u8 = 17;
+const T_KEPT_DATA: u8 = 18;
+const T_HEARTBEAT: u8 = 19;
+const T_HEARTBEAT_ACK: u8 = 20;
+const T_BATCH: u8 = 21;
+
+impl WirePayload for FwMsg {
+    fn wire_encode(&self, out: &mut Vec<u8>) {
+        match self {
+            FwMsg::Assign { spec, sources } => {
+                out.push(T_ASSIGN);
+                put_spec(out, spec);
+                put_sources(out, sources);
+            }
+            FwMsg::Prefetch { job, threads, sources } => {
+                out.push(T_PREFETCH);
+                put_job(out, *job);
+                put_threads(out, *threads);
+                put_sources(out, sources);
+            }
+            FwMsg::ReleaseResult { job } => {
+                out.push(T_RELEASE_RESULT);
+                put_job(out, *job);
+            }
+            FwMsg::Shutdown => out.push(T_SHUTDOWN),
+            FwMsg::JobDone { job, kept_on, output_bytes, chunks, injections, exec_us } => {
+                out.push(T_JOB_DONE);
+                put_job(out, *job);
+                put_opt_rank(out, *kept_on);
+                put_u64(out, *output_bytes);
+                put_u64(out, *chunks as u64);
+                put_injections(out, injections);
+                put_u64(out, *exec_us);
+            }
+            FwMsg::JobError { job, msg } => {
+                out.push(T_JOB_ERROR);
+                put_job(out, *job);
+                msg.wire_encode(out);
+            }
+            FwMsg::WorkerLostReport { worker, lost, running } => {
+                out.push(T_WORKER_LOST);
+                put_rank(out, *worker);
+                put_jobs(out, lost);
+                put_jobs(out, running);
+            }
+            FwMsg::JobAborted { job, missing } => {
+                out.push(T_JOB_ABORTED);
+                put_job(out, *job);
+                put_job(out, *missing);
+            }
+            FwMsg::FetchResult { job, range, reply_to } => {
+                out.push(T_FETCH_RESULT);
+                put_job(out, *job);
+                put_range(out, *range);
+                put_rank(out, *reply_to);
+            }
+            FwMsg::ResultData { job, data } => {
+                out.push(T_RESULT_DATA);
+                put_job(out, *job);
+                put_data(out, data);
+            }
+            FwMsg::ResultUnavailable { job } => {
+                out.push(T_RESULT_UNAVAILABLE);
+                put_job(out, *job);
+            }
+            FwMsg::Exec(req) => {
+                out.push(T_EXEC);
+                put_spec(out, &req.spec);
+                put_u64(out, req.input.len() as u64);
+                for p in &req.input {
+                    put_input_part(out, p);
+                }
+            }
+            FwMsg::CachePush { job, data } => {
+                out.push(T_CACHE_PUSH);
+                put_job(out, *job);
+                put_data(out, data);
+            }
+            FwMsg::PullKept { job } => {
+                out.push(T_PULL_KEPT);
+                put_job(out, *job);
+            }
+            FwMsg::DropKept { job } => {
+                out.push(T_DROP_KEPT);
+                put_job(out, *job);
+            }
+            FwMsg::WorkerShutdown => out.push(T_WORKER_SHUTDOWN),
+            FwMsg::ExecDone { job, data, injections, exec_us } => {
+                out.push(T_EXEC_DONE);
+                put_job(out, *job);
+                match data {
+                    None => out.push(0),
+                    Some(d) => {
+                        out.push(1);
+                        put_data(out, d);
+                    }
+                }
+                put_injections(out, injections);
+                put_u64(out, *exec_us);
+            }
+            FwMsg::ExecFailed { job, msg } => {
+                out.push(T_EXEC_FAILED);
+                put_job(out, *job);
+                msg.wire_encode(out);
+            }
+            FwMsg::KeptData { job, data, exec_us } => {
+                out.push(T_KEPT_DATA);
+                put_job(out, *job);
+                put_data(out, data);
+                put_u64(out, *exec_us);
+            }
+            FwMsg::Heartbeat => out.push(T_HEARTBEAT),
+            FwMsg::HeartbeatAck => out.push(T_HEARTBEAT_ACK),
+            FwMsg::Batch(inner) => {
+                out.push(T_BATCH);
+                put_u64(out, inner.len() as u64);
+                for m in inner {
+                    m.wire_encode(out);
+                }
+            }
+        }
+    }
+
+    fn wire_decode(r: &mut WireReader<'_>) -> Result<Self> {
+        Ok(match r.u8()? {
+            T_ASSIGN => FwMsg::Assign { spec: get_spec(r)?, sources: get_sources(r)? },
+            T_PREFETCH => FwMsg::Prefetch {
+                job: get_job(r)?,
+                threads: get_threads(r)?,
+                sources: get_sources(r)?,
+            },
+            T_RELEASE_RESULT => FwMsg::ReleaseResult { job: get_job(r)? },
+            T_SHUTDOWN => FwMsg::Shutdown,
+            T_JOB_DONE => FwMsg::JobDone {
+                job: get_job(r)?,
+                kept_on: get_opt_rank(r)?,
+                output_bytes: r.u64()?,
+                chunks: r.u64()? as usize,
+                injections: get_injections(r)?,
+                exec_us: r.u64()?,
+            },
+            T_JOB_ERROR => FwMsg::JobError { job: get_job(r)?, msg: String::wire_decode(r)? },
+            T_WORKER_LOST => FwMsg::WorkerLostReport {
+                worker: get_rank(r)?,
+                lost: get_jobs(r)?,
+                running: get_jobs(r)?,
+            },
+            T_JOB_ABORTED => FwMsg::JobAborted { job: get_job(r)?, missing: get_job(r)? },
+            T_FETCH_RESULT => FwMsg::FetchResult {
+                job: get_job(r)?,
+                range: get_range(r)?,
+                reply_to: get_rank(r)?,
+            },
+            T_RESULT_DATA => FwMsg::ResultData { job: get_job(r)?, data: get_data(r)? },
+            T_RESULT_UNAVAILABLE => FwMsg::ResultUnavailable { job: get_job(r)? },
+            T_EXEC => {
+                let spec = get_spec(r)?;
+                let n = r.checked_len(1)?;
+                let input = (0..n).map(|_| get_input_part(r)).collect::<Result<Vec<_>>>()?;
+                FwMsg::Exec(ExecRequest { spec, input })
+            }
+            T_CACHE_PUSH => FwMsg::CachePush { job: get_job(r)?, data: get_data(r)? },
+            T_PULL_KEPT => FwMsg::PullKept { job: get_job(r)? },
+            T_DROP_KEPT => FwMsg::DropKept { job: get_job(r)? },
+            T_WORKER_SHUTDOWN => FwMsg::WorkerShutdown,
+            T_EXEC_DONE => FwMsg::ExecDone {
+                job: get_job(r)?,
+                data: match r.u8()? {
+                    0 => None,
+                    1 => Some(get_data(r)?),
+                    other => {
+                        return Err(Error::Assemble(format!("bad option flag {other}")))
+                    }
+                },
+                injections: get_injections(r)?,
+                exec_us: r.u64()?,
+            },
+            T_EXEC_FAILED => {
+                FwMsg::ExecFailed { job: get_job(r)?, msg: String::wire_decode(r)? }
+            }
+            T_KEPT_DATA => FwMsg::KeptData {
+                job: get_job(r)?,
+                data: get_data(r)?,
+                exec_us: r.u64()?,
+            },
+            T_HEARTBEAT => FwMsg::Heartbeat,
+            T_HEARTBEAT_ACK => FwMsg::HeartbeatAck,
+            T_BATCH => {
+                let n = r.checked_len(1)?;
+                FwMsg::Batch((0..n).map(|_| FwMsg::wire_decode(r)).collect::<Result<_>>()?)
+            }
+            other => return Err(Error::Assemble(format!("bad FwMsg wire tag {other}"))),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataChunk;
+
+    fn sample_data() -> FunctionData {
+        FunctionData::from_chunks(vec![
+            DataChunk::from_f64(vec![1.5, -2.5, 1e300]),
+            DataChunk::from_i32(vec![7, -9]),
+            DataChunk::from_u8(vec![0, 255]),
+        ])
+    }
+
+    fn sample_spec() -> JobSpec {
+        JobSpec::new(3, 9, 2).with_inputs(vec![
+            ChunkRef::all(JobId(1)),
+            ChunkRef::slice(JobId(2), 1, 4),
+        ])
+    }
+
+    fn sample_injections() -> Vec<Injection> {
+        vec![Injection {
+            segment_delta: 1,
+            jobs: vec![InjectedJob {
+                local_id: 0,
+                func: FuncId(4),
+                threads: ThreadCount::Auto,
+                inputs: vec![
+                    InjectedRef::Existing(ChunkRef::all(JobId(2))),
+                    InjectedRef::Local { local_id: 1, range: ChunkRange::Range { lo: 0, hi: 2 } },
+                ],
+                keep: true,
+            }],
+        }]
+    }
+
+    fn every_variant() -> Vec<FwMsg> {
+        vec![
+            FwMsg::Assign {
+                spec: sample_spec(),
+                sources: vec![
+                    SourceLoc { job: JobId(1), owner: Rank(1), kept_on: None },
+                    SourceLoc { job: JobId(2), owner: Rank(2), kept_on: Some(Rank(5)) },
+                ],
+            },
+            FwMsg::Prefetch {
+                job: JobId(8),
+                threads: ThreadCount::Exact(3),
+                sources: vec![SourceLoc { job: JobId(1), owner: Rank(2), kept_on: None }],
+            },
+            FwMsg::ReleaseResult { job: JobId(12) },
+            FwMsg::Shutdown,
+            FwMsg::JobDone {
+                job: JobId(3),
+                kept_on: Some(Rank(4)),
+                output_bytes: 4096,
+                chunks: 7,
+                injections: sample_injections(),
+                exec_us: 1234,
+            },
+            FwMsg::JobError { job: JobId(3), msg: "boom — ünïcode".into() },
+            FwMsg::WorkerLostReport {
+                worker: Rank(9),
+                lost: vec![JobId(1), JobId(2)],
+                running: vec![JobId(3)],
+            },
+            FwMsg::JobAborted { job: JobId(5), missing: JobId(2) },
+            FwMsg::FetchResult {
+                job: JobId(6),
+                range: ChunkRange::Range { lo: 2, hi: 9 },
+                reply_to: Rank(3),
+            },
+            FwMsg::ResultData { job: JobId(6), data: sample_data() },
+            FwMsg::ResultUnavailable { job: JobId(6) },
+            FwMsg::Exec(ExecRequest {
+                spec: sample_spec(),
+                input: vec![
+                    InputPart::Data(sample_data()),
+                    InputPart::Kept { job: JobId(1), range: ChunkRange::All },
+                ],
+            }),
+            FwMsg::CachePush { job: JobId(2), data: sample_data() },
+            FwMsg::PullKept { job: JobId(2) },
+            FwMsg::DropKept { job: JobId(2) },
+            FwMsg::WorkerShutdown,
+            FwMsg::ExecDone {
+                job: JobId(3),
+                data: Some(sample_data()),
+                injections: sample_injections(),
+                exec_us: 55,
+            },
+            FwMsg::ExecFailed { job: JobId(3), msg: "user panic".into() },
+            FwMsg::KeptData { job: JobId(3), data: sample_data(), exec_us: 0 },
+            FwMsg::Heartbeat,
+            FwMsg::HeartbeatAck,
+            FwMsg::Batch(vec![
+                FwMsg::Heartbeat,
+                FwMsg::ReleaseResult { job: JobId(1) },
+                FwMsg::ExecDone {
+                    job: JobId(2),
+                    data: None,
+                    injections: vec![],
+                    exec_us: 9,
+                },
+            ]),
+        ]
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        // FwMsg intentionally has no PartialEq (FunctionData is Arc-backed);
+        // the Debug form covers every field, so it is the equality oracle.
+        let msgs = every_variant();
+        assert_eq!(msgs.len(), 22, "cover every FwMsg variant");
+        for msg in msgs {
+            let mut buf = Vec::new();
+            msg.wire_encode(&mut buf);
+            let mut r = WireReader::new(&buf);
+            let back = FwMsg::wire_decode(&mut r).unwrap();
+            assert!(r.is_empty(), "decode must consume exactly what encode wrote");
+            assert_eq!(format!("{back:?}"), format!("{msg:?}"));
+        }
+    }
+
+    #[test]
+    fn batch_members_keep_their_order() {
+        let batch = FwMsg::Batch(vec![
+            FwMsg::CachePush { job: JobId(1), data: sample_data() },
+            FwMsg::Exec(ExecRequest { spec: sample_spec(), input: vec![] }),
+        ]);
+        let mut buf = Vec::new();
+        batch.wire_encode(&mut buf);
+        let back = FwMsg::wire_decode(&mut WireReader::new(&buf)).unwrap();
+        let FwMsg::Batch(members) = back else { panic!("expected batch") };
+        assert!(matches!(members[0], FwMsg::CachePush { .. }));
+        assert!(matches!(members[1], FwMsg::Exec(_)));
+    }
+
+    #[test]
+    fn corrupt_messages_are_errors_not_panics() {
+        let mut buf = Vec::new();
+        FwMsg::JobDone {
+            job: JobId(1),
+            kept_on: None,
+            output_bytes: 1,
+            chunks: 1,
+            injections: vec![],
+            exec_us: 1,
+        }
+        .wire_encode(&mut buf);
+        // Unknown message tag.
+        let mut bad = buf.clone();
+        bad[0] = 200;
+        assert!(FwMsg::wire_decode(&mut WireReader::new(&bad)).is_err());
+        // Truncations at every prefix length.
+        for cut in 0..buf.len() {
+            let mut r = WireReader::new(&buf[..cut]);
+            assert!(FwMsg::wire_decode(&mut r).is_err(), "cut at {cut}");
+        }
+        // Corrupt vector length inside an injection list.
+        let mut bad = buf;
+        let len = bad.len();
+        bad[len - 16..len - 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(FwMsg::wire_decode(&mut WireReader::new(&bad)).is_err());
+    }
+}

@@ -49,7 +49,9 @@ pub fn run_with_cost(cfg: &JacobiConfig, tol: f64, cost: CostModel) -> Result<So
     let (a, b, _x_star) = symmetric_system(cfg.n, cfg.pad_multiple.max(p), cfg.seed);
     debug_assert_eq!(a.rows(), n_pad);
 
-    let world: World<Vec<u8>> = World::new(cost);
+    // Honour `HYPAR_TRANSPORT` so the solver benches run over the wire
+    // alongside the framework suite (DESIGN.md §15).
+    let world: World<Vec<u8>> = World::new_from_env(cost)?;
     let comms: Vec<_> = (0..p).map(|_| world.add_rank()).collect();
     let ranks: Vec<Rank> = comms.iter().map(|c| c.rank()).collect();
     let before = world.stats();

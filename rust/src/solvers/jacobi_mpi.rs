@@ -47,7 +47,9 @@ pub fn run_with_cost(cfg: &JacobiConfig, cost: CostModel) -> Result<SolveOutcome
         None => None,
     };
 
-    let world: World<Vec<u8>> = World::new(cost);
+    // Honour `HYPAR_TRANSPORT` so the tailored baseline runs over the wire
+    // alongside the framework suite (DESIGN.md §15).
+    let world: World<Vec<u8>> = World::new_from_env(cost)?;
     let comms: Vec<_> = (0..p).map(|_| world.add_rank()).collect();
     let ranks: Vec<Rank> = comms.iter().map(|c| c.rank()).collect();
     let stats_before = world.stats();

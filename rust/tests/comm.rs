@@ -1,17 +1,28 @@
-//! Comm substrate integration tests: many-rank stress, collective
-//! composition, cost-model injection, dynamic rank churn.
+//! Comm substrate conformance suite: many-rank stress, collective
+//! composition, cost-model injection, dynamic rank churn, matched /
+//! timed / drained receives, fail-fast sends.
+//!
+//! Every scenario is a plain function over [`TransportKind`] and the
+//! `conformance_suite!` macro instantiates the whole set once per
+//! backend (`inproc::*`, `tcp::*`), so the in-process channel fabric and
+//! the loopback-TCP backend (DESIGN.md §15) are held to the same
+//! contract by the same assertions.
 
 use std::time::{Duration, Instant};
 
 use hypar::comm::collectives::ReduceOp;
-use hypar::comm::{CostModel, Match, Rank, Tag, World};
+use hypar::comm::{CostModel, Match, Rank, Tag, TransportKind, World};
+use hypar::Error;
 
 type W = World<Vec<u8>>;
 
-#[test]
-fn ring_pass_across_many_ranks() {
+fn world(kind: TransportKind, cost: CostModel) -> W {
+    W::new_with_transport(cost, kind)
+}
+
+fn ring_pass_across_many_ranks(kind: TransportKind) {
     // Token travels a 32-rank ring 3 times.
-    let world = W::new(CostModel::free());
+    let world = world(kind, CostModel::free());
     let comms: Vec<_> = (0..32).map(|_| world.add_rank()).collect();
     let ranks: Vec<Rank> = comms.iter().map(|c| c.rank()).collect();
     let n = ranks.len();
@@ -43,10 +54,9 @@ fn ring_pass_across_many_ranks() {
     assert_eq!(world.stats().msgs, 32 * 3);
 }
 
-#[test]
-fn interleaved_collectives_and_p2p() {
+fn interleaved_collectives_and_p2p(kind: TransportKind) {
     // Collectives must not swallow or reorder user traffic.
-    let world = W::new(CostModel::free());
+    let world = world(kind, CostModel::free());
     let comms: Vec<_> = (0..4).map(|_| world.add_rank()).collect();
     let ranks: Vec<Rank> = comms.iter().map(|c| c.rank()).collect();
     let hs: Vec<_> = comms
@@ -81,10 +91,11 @@ fn interleaved_collectives_and_p2p() {
     }
 }
 
-#[test]
-fn cost_model_injection_slows_sends() {
-    // 1 ms per message, injected: 10 sends must take >= 10 ms.
-    let world = W::new(CostModel::cluster(1_000.0, f64::INFINITY));
+fn cost_model_injection_slows_sends(kind: TransportKind) {
+    // 1 ms per message, injected: 10 sends must take >= 10 ms.  The
+    // injected delay is charged in `deliver`, above the backend
+    // dispatch, so both fabrics pace identically.
+    let world = world(kind, CostModel::cluster(1_000.0, f64::INFINITY));
     let a = world.add_rank();
     let mut b = world.add_rank();
     let t0 = Instant::now();
@@ -101,18 +112,9 @@ fn cost_model_injection_slows_sends() {
     assert!(s.modelled_comm_ns >= 10_000_000);
 }
 
-#[test]
-fn bandwidth_term_scales_with_payload() {
-    let m = CostModel { alpha_us: 0.0, bandwidth_gbps: 1.0, simulate: false };
-    let d_small = m.duration(1_000);
-    let d_big = m.duration(1_000_000);
-    assert!(d_big >= d_small * 900);
-}
-
-#[test]
-fn rank_churn_mid_traffic() {
+fn rank_churn_mid_traffic(kind: TransportKind) {
     // Workers joining and leaving while others communicate.
-    let world = W::new(CostModel::free());
+    let world = world(kind, CostModel::free());
     let stable = world.add_rank();
     let mut sink = world.add_rank();
     let sink_rank = sink.rank();
@@ -141,11 +143,10 @@ fn rank_churn_mid_traffic() {
     let _ = stable;
 }
 
-#[test]
-fn heavy_concurrent_allgathers() {
+fn heavy_concurrent_allgathers(kind: TransportKind) {
     // Repeated ring allgathers with uneven blocks under thread scheduling
     // noise — ordering guarantees must hold every round.
-    let world = W::new(CostModel::free());
+    let world = world(kind, CostModel::free());
     let comms: Vec<_> = (0..6).map(|_| world.add_rank()).collect();
     let ranks: Vec<Rank> = comms.iter().map(|c| c.rank()).collect();
     let sizes: Vec<usize> = (0..6).map(|i| i + 1).collect();
@@ -178,10 +179,9 @@ fn heavy_concurrent_allgathers() {
     }
 }
 
-#[test]
-fn matched_recv_under_floods() {
+fn matched_recv_under_floods(kind: TransportKind) {
     // A rank floods with tag 9 while we match tag 1 from a specific peer.
-    let world = W::new(CostModel::free());
+    let world = world(kind, CostModel::free());
     let flooder = world.add_rank();
     let friend = world.add_rank();
     let mut me = world.add_rank();
@@ -209,4 +209,139 @@ fn matched_recv_under_floods() {
     let first = me.recv().unwrap();
     assert_eq!(first.tag, Tag(9));
     assert_eq!(first.into_user(), vec![0]);
+}
+
+fn timed_recv_misses_then_hits(kind: TransportKind) {
+    let world = world(kind, CostModel::free());
+    let a = world.add_rank();
+    let mut b = world.add_rank();
+    let a_rank = a.rank();
+    let b_rank = b.rank();
+    let filter = Match { src: Some(a_rank), tag: Some(Tag(7)) };
+
+    // Nothing in flight: the deadline elapses and we get a clean None.
+    let none = b.recv_match_timeout(filter, Duration::from_millis(30)).unwrap();
+    assert!(none.is_none());
+
+    // A delayed send lands well inside a generous window.
+    let h = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(10));
+        a.send(b_rank, Tag(7), vec![7]).unwrap();
+    });
+    let env = b
+        .recv_match_timeout(filter, Duration::from_secs(10))
+        .unwrap()
+        .expect("message sent inside the window");
+    assert_eq!(env.src, a_rank);
+    assert_eq!(env.into_user(), vec![7]);
+    h.join().unwrap();
+}
+
+fn drain_preserves_order_and_respects_bound(kind: TransportKind) {
+    // Ten messages down one (src, dst) lane; drained in bounded batches
+    // they must reassemble in send order on either backend.
+    let world = world(kind, CostModel::free());
+    let tx = world.add_rank();
+    let mut rx = world.add_rank();
+    let rx_rank = rx.rank();
+    for i in 0..10u8 {
+        tx.send(rx_rank, Tag(3), vec![i]).unwrap();
+    }
+    let mut got = Vec::new();
+    while got.len() < 10 {
+        let batch = rx.recv_drain(4).unwrap();
+        assert!(!batch.is_empty() && batch.len() <= 4);
+        got.extend(batch.into_iter().map(|e| e.into_user()[0]));
+    }
+    assert_eq!(got, (0..10).collect::<Vec<u8>>());
+}
+
+fn deregister_fails_fast_despite_warm_cache(kind: TransportKind) {
+    // First send warms the per-endpoint send cache (and, over TCP, the
+    // pooled connection); dropping the receiver must still fail the next
+    // send immediately — the epoch check runs before backend dispatch.
+    let world = world(kind, CostModel::free());
+    let a = world.add_rank();
+    let b = world.add_rank();
+    let b_rank = b.rank();
+    a.send(b_rank, Tag(0), vec![1]).unwrap();
+    drop(b);
+    match a.send(b_rank, Tag(0), vec![2]) {
+        Err(Error::RankUnreachable(r)) => assert_eq!(r, b_rank),
+        other => panic!("expected RankUnreachable, got {other:?}"),
+    }
+}
+
+fn self_send_stays_local(kind: TransportKind) {
+    // src == dst short-circuits through the mailbox on both backends
+    // (real MPI self-sends never touch the NIC either, DESIGN.md §15).
+    let world = world(kind, CostModel::free());
+    let mut me = world.add_rank();
+    let my_rank = me.rank();
+    me.send(my_rank, Tag(5), vec![9]).unwrap();
+    let env = me.recv().unwrap();
+    assert_eq!(env.src, my_rank);
+    assert_eq!(env.into_user(), vec![9]);
+}
+
+/// Instantiate every scenario above as a `#[test]` under one backend.
+macro_rules! conformance_suite {
+    ($backend:ident, $kind:expr) => {
+        mod $backend {
+            use super::*;
+
+            #[test]
+            fn ring_pass_across_many_ranks() {
+                super::ring_pass_across_many_ranks($kind);
+            }
+            #[test]
+            fn interleaved_collectives_and_p2p() {
+                super::interleaved_collectives_and_p2p($kind);
+            }
+            #[test]
+            fn cost_model_injection_slows_sends() {
+                super::cost_model_injection_slows_sends($kind);
+            }
+            #[test]
+            fn rank_churn_mid_traffic() {
+                super::rank_churn_mid_traffic($kind);
+            }
+            #[test]
+            fn heavy_concurrent_allgathers() {
+                super::heavy_concurrent_allgathers($kind);
+            }
+            #[test]
+            fn matched_recv_under_floods() {
+                super::matched_recv_under_floods($kind);
+            }
+            #[test]
+            fn timed_recv_misses_then_hits() {
+                super::timed_recv_misses_then_hits($kind);
+            }
+            #[test]
+            fn drain_preserves_order_and_respects_bound() {
+                super::drain_preserves_order_and_respects_bound($kind);
+            }
+            #[test]
+            fn deregister_fails_fast_despite_warm_cache() {
+                super::deregister_fails_fast_despite_warm_cache($kind);
+            }
+            #[test]
+            fn self_send_stays_local() {
+                super::self_send_stays_local($kind);
+            }
+        }
+    };
+}
+
+conformance_suite!(inproc, TransportKind::Inproc);
+conformance_suite!(tcp, TransportKind::Tcp);
+
+#[test]
+fn bandwidth_term_scales_with_payload() {
+    // Pure model arithmetic — backend-independent by construction.
+    let m = CostModel { alpha_us: 0.0, bandwidth_gbps: 1.0, simulate: false };
+    let d_small = m.duration(1_000);
+    let d_big = m.duration(1_000_000);
+    assert!(d_big >= d_small * 900);
 }

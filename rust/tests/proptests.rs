@@ -918,3 +918,183 @@ fn prop_chaos_matches_sequential() {
         }
     }
 }
+
+/// The transport backend must be value-invisible: for random DAGs the
+/// loopback-TCP fabric (DESIGN.md §15) and the in-process fabric both
+/// reproduce the sequential interpreter, and each other, exactly.  Also
+/// pins `transport = inproc` as the config default, so an unconfigured
+/// run keeps PR 8's in-process delivery path.
+#[test]
+fn prop_transport_tcp_matches_inproc_and_sequential() {
+    assert_eq!(
+        TopologyConfig::default().transport,
+        TransportKind::Inproc,
+        "inproc must stay the default backend"
+    );
+    let env_forced = std::env::var("HYPAR_TRANSPORT").is_ok();
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(31_000 + seed);
+        let (mut gen, mut arity) = gen_algorithm(&mut rng);
+        fix_emitter_arity(&mut gen, &mut arity);
+        let mut ok = true;
+        for seg in &gen {
+            for j in seg {
+                for r in &j.inputs {
+                    if let ChunkRange::Range { hi, .. } = r.range {
+                        if hi > arity[&r.job.0] {
+                            ok = false;
+                        }
+                    }
+                }
+            }
+        }
+        if !ok {
+            continue; // generator picked a stale emitter arity; skip (rare)
+        }
+        let want = interpret(&gen);
+
+        let run = |kind: Option<TransportKind>| {
+            let mut b = Framework::builder()
+                .schedulers((seed % 2 + 1) as usize + 1)
+                .workers_per_scheduler(2)
+                .cores_per_worker(4)
+                .registry(registry());
+            if let Some(k) = kind {
+                b = b.transport(k);
+            }
+            b.build()
+                .unwrap()
+                .run(to_algorithm(&gen))
+                .unwrap_or_else(|e| panic!("seed {seed} ({kind:?}): run failed: {e}"))
+        };
+        let default_leg = run(None);
+        let tcp_leg = run(Some(TransportKind::Tcp));
+        if !env_forced {
+            // `HYPAR_TRANSPORT` outranks the builder (the CI tcp job uses
+            // exactly that), so the backend identity is only pinned when
+            // the environment leaves the config in charge.
+            assert_eq!(default_leg.metrics.transport, "inproc", "seed {seed}");
+            assert_eq!(tcp_leg.metrics.transport, "tcp", "seed {seed}");
+        }
+        for j in gen.last().unwrap() {
+            let expect = &want[&j.id];
+            for (leg, report) in [("default", &default_leg), ("tcp", &tcp_leg)] {
+                let got = report
+                    .results
+                    .get(&JobId(j.id))
+                    .unwrap_or_else(|| panic!("seed {seed} {leg}: missing J{}", j.id));
+                assert_eq!(
+                    got.len(),
+                    expect.len(),
+                    "seed {seed} {leg}: J{} chunk count",
+                    j.id
+                );
+                for (ci, (gc, wc)) in got.chunks().iter().zip(expect).enumerate() {
+                    assert_eq!(
+                        gc.as_f32().unwrap(),
+                        wc.as_slice(),
+                        "seed {seed} {leg}: J{} chunk {ci}",
+                        j.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// §14's chaos property re-run over real sockets: seeded drop / delay /
+/// duplicate schedules plus a doomed rank, with the envelopes travelling
+/// the TCP fabric — values must still match the sequential interpreter.
+/// A doomed rank's connection teardown must map onto the same rank-lost
+/// recovery the in-process fabric exercises (DESIGN.md §15).
+///
+/// Set `HYPAR_CHAOS_SOAK=1` to widen the sweep (CI soak + tcp jobs).
+#[test]
+fn prop_chaos_matches_sequential_over_tcp() {
+    use hypar::fault::{ChaosConfig, ChaosCrash, ChaosPlan, FaultInjector};
+    use std::sync::Arc;
+
+    let cases: u64 = if std::env::var("HYPAR_CHAOS_SOAK").is_ok() { 15 } else { 5 };
+    for seed in 0..cases {
+        let mut rng = Rng::new(47_000 + seed);
+        let (mut gen, mut arity) = gen_algorithm(&mut rng);
+        fix_emitter_arity(&mut gen, &mut arity);
+        let mut ok = true;
+        for seg in &gen {
+            for j in seg {
+                for r in &j.inputs {
+                    if let ChunkRange::Range { hi, .. } = r.range {
+                        if hi > arity[&r.job.0] {
+                            ok = false;
+                        }
+                    }
+                }
+            }
+        }
+        if !ok {
+            continue; // generator picked a stale emitter arity; skip (rare)
+        }
+        for j in gen.last_mut().unwrap() {
+            j.keep = false; // same rationale as prop_chaos_matches_sequential
+        }
+        let want = interpret(&gen);
+        // Ranks: master = 0, subs = 1..=2, prespawned workers = 3..=6.
+        let crash = if seed % 2 == 0 {
+            Some(ChaosCrash {
+                rank: Rank(3 + rng.below(4) as u32),
+                at_send: rng.int_in(1, 5),
+            })
+        } else {
+            None
+        };
+        let chaos = Arc::new(ChaosPlan::new(ChaosConfig {
+            seed: 0x7C90_0000 + seed,
+            drop_one_in: 6,
+            drop_budget: 2,
+            dup_one_in: 6,
+            dup_budget: 2,
+            delay_one_in: 4,
+            delay_budget: 4,
+            max_delay_us: 3_000,
+            crash,
+            ..ChaosConfig::default()
+        }));
+        let report = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .cores_per_worker(4)
+            .prespawn_workers(true)
+            .transport(TransportKind::Tcp)
+            .heartbeats(true)
+            .heartbeat_interval_ms(25)
+            .heartbeat_miss_limit(40)
+            .straggler_deadlines(true)
+            .straggler_factor(8.0)
+            .straggler_cold_us(200_000)
+            .job_retry_backoff_us(100_000)
+            .max_rank_losses(2)
+            .fault_injector(Arc::new(FaultInjector::none()))
+            .chaos(chaos)
+            .registry(registry())
+            .build()
+            .unwrap()
+            .run(to_algorithm(&gen))
+            .unwrap_or_else(|e| panic!("seed {seed}: run failed under chaos over tcp: {e}"));
+        for j in gen.last().unwrap() {
+            let got = report
+                .results
+                .get(&JobId(j.id))
+                .unwrap_or_else(|| panic!("seed {seed}: missing J{}", j.id));
+            let expect = &want[&j.id];
+            assert_eq!(got.len(), expect.len(), "seed {seed}: J{} chunk count", j.id);
+            for (ci, (gc, wc)) in got.chunks().iter().zip(expect).enumerate() {
+                assert_eq!(
+                    gc.as_f32().unwrap(),
+                    wc.as_slice(),
+                    "seed {seed}: J{} chunk {ci}",
+                    j.id
+                );
+            }
+        }
+    }
+}

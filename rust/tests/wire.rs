@@ -1,0 +1,229 @@
+//! Adversarial wire-framing tests: seeded random [`FwMsg`] traffic pushed
+//! through *real* loopback sockets under hostile stream conditions —
+//! split writes, tiny partial reads, back-to-back frames in one write,
+//! multi-megabyte payloads, truncated streams (DESIGN.md §15).
+//!
+//! The frame *layout* itself (length prefix, `wire_size` accounting) is
+//! pinned by the unit tests inside `comm::wire`; this suite checks the
+//! framing survives what a kernel socket actually does to a byte stream.
+
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::time::Duration;
+
+use hypar::comm::wire::{read_frame, write_frame, WirePayload, WireReader};
+use hypar::comm::Rank;
+use hypar::data::{DataChunk, FunctionData};
+use hypar::job::{ChunkRange, ChunkRef, JobId, JobSpec, ThreadCount};
+use hypar::scheduler::{ExecRequest, FwMsg, InputPart, SourceLoc};
+use hypar::util::rng::Rng;
+
+fn random_data(rng: &mut Rng, max_elems: usize) -> FunctionData {
+    let n = rng.int_in(0, max_elems);
+    FunctionData::from_chunks(vec![
+        DataChunk::from_f64((0..n).map(|_| rng.f64()).collect()),
+        DataChunk::from_i32(vec![rng.next_u64() as i32]),
+    ])
+}
+
+fn random_spec(rng: &mut Rng) -> JobSpec {
+    JobSpec::new(rng.next_u64() as u32, rng.next_u64() as u32, 2).with_inputs(vec![
+        ChunkRef::all(JobId(rng.next_u64() as u32)),
+        ChunkRef::slice(JobId(1), rng.int_in(0, 4), rng.int_in(5, 9)),
+    ])
+}
+
+/// One random control message; weighted towards the payload-bearing and
+/// nested variants because those stress the framing hardest.
+fn random_msg(rng: &mut Rng, depth: usize) -> FwMsg {
+    match rng.below(if depth == 0 { 8 } else { 7 }) {
+        0 => FwMsg::Heartbeat,
+        1 => FwMsg::ReleaseResult { job: JobId(rng.next_u64() as u32) },
+        2 => FwMsg::JobError {
+            job: JobId(rng.next_u64() as u32),
+            msg: format!("err-{} — ünïcode", rng.next_u64()),
+        },
+        3 => FwMsg::Assign {
+            spec: random_spec(rng),
+            sources: vec![SourceLoc {
+                job: JobId(rng.next_u64() as u32),
+                owner: Rank(rng.next_u64() as u32),
+                kept_on: if rng.bool() { Some(Rank(3)) } else { None },
+            }],
+        },
+        4 => FwMsg::ResultData {
+            job: JobId(rng.next_u64() as u32),
+            data: random_data(rng, 64),
+        },
+        5 => FwMsg::Exec(ExecRequest {
+            spec: random_spec(rng),
+            input: vec![
+                InputPart::Data(random_data(rng, 32)),
+                InputPart::Kept {
+                    job: JobId(rng.next_u64() as u32),
+                    range: ChunkRange::Range { lo: 0, hi: rng.int_in(1, 9) },
+                },
+            ],
+        }),
+        6 => FwMsg::Prefetch {
+            job: JobId(rng.next_u64() as u32),
+            threads: if rng.bool() {
+                ThreadCount::Auto
+            } else {
+                ThreadCount::Exact(rng.int_in(1, 8) as u32)
+            },
+            sources: vec![],
+        },
+        // Coalesced frame: members encode recursively into ONE socket frame.
+        _ => FwMsg::Batch(
+            (0..rng.int_in(1, 5)).map(|_| random_msg(rng, depth + 1)).collect(),
+        ),
+    }
+}
+
+fn frame_of(msg: &FwMsg) -> Vec<u8> {
+    let mut body = Vec::new();
+    msg.wire_encode(&mut body);
+    let mut framed = Vec::new();
+    write_frame(&mut framed, &body).unwrap();
+    framed
+}
+
+fn decode_body(body: &[u8]) -> FwMsg {
+    let mut r = WireReader::new(body);
+    let msg = FwMsg::wire_decode(&mut r).unwrap();
+    assert!(r.is_empty(), "frame body must decode exactly");
+    msg
+}
+
+/// Spawn a server that reads frames until clean EOF and returns the
+/// decoded messages' Debug forms (the equality oracle — `FwMsg`
+/// intentionally has no `PartialEq`).
+fn spawn_server(listener: TcpListener) -> std::thread::JoinHandle<Vec<String>> {
+    std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        // A deliberately tiny buffer forces many short reads, so the
+        // frame reassembly loop is exercised even when the client wrote
+        // everything at once.
+        let mut reader = BufReader::with_capacity(7, stream);
+        let mut out = Vec::new();
+        while let Some(body) = read_frame(&mut reader).unwrap() {
+            out.push(format!("{:?}", decode_body(&body)));
+        }
+        out
+    })
+}
+
+#[test]
+fn frames_survive_split_writes_and_stalls() {
+    let mut rng = Rng::new(0xC0FFEE);
+    let msgs: Vec<FwMsg> = (0..64).map(|_| random_msg(&mut rng, 0)).collect();
+    let expect: Vec<String> = msgs.iter().map(|m| format!("{m:?}")).collect();
+    let stream_bytes: Vec<u8> = msgs.iter().flat_map(frame_of).collect();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let server = spawn_server(listener);
+
+    // Client: dribble the byte stream out in random 1–13 byte writes with
+    // occasional stalls — every frame boundary gets split eventually.
+    let mut client = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    client.set_nodelay(true).unwrap();
+    let mut off = 0;
+    while off < stream_bytes.len() {
+        let n = rng.int_in(1, 13).min(stream_bytes.len() - off);
+        client.write_all(&stream_bytes[off..off + n]).unwrap();
+        client.flush().unwrap();
+        off += n;
+        if rng.below(16) == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    client.shutdown(Shutdown::Write).unwrap();
+
+    assert_eq!(server.join().unwrap(), expect);
+}
+
+#[test]
+fn back_to_back_frames_in_one_write() {
+    let mut rng = Rng::new(42);
+    let msgs: Vec<FwMsg> = (0..32).map(|_| random_msg(&mut rng, 0)).collect();
+    let expect: Vec<String> = msgs.iter().map(|m| format!("{m:?}")).collect();
+    let stream_bytes: Vec<u8> = msgs.iter().flat_map(frame_of).collect();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let server = spawn_server(listener);
+
+    let mut client = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    client.write_all(&stream_bytes).unwrap();
+    drop(client);
+
+    assert_eq!(server.join().unwrap(), expect);
+}
+
+#[test]
+fn multi_megabyte_payload_rides_one_frame() {
+    // 1M f64 elements ≈ 8 MB in a single frame, book-ended by small
+    // frames so a length-accounting slip on the big one shears the next.
+    let big = FwMsg::ResultData {
+        job: JobId(7),
+        data: FunctionData::from_chunks(vec![DataChunk::from_f64(
+            (0..1_000_000).map(|i| i as f64 * 0.5).collect(),
+        )]),
+    };
+    let msgs = vec![FwMsg::Heartbeat, big, FwMsg::HeartbeatAck];
+    let expect: Vec<String> = msgs.iter().map(|m| format!("{m:?}")).collect();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut out = Vec::new();
+        while let Some(body) = read_frame(&mut reader).unwrap() {
+            out.push(format!("{:?}", decode_body(&body)));
+        }
+        out
+    });
+
+    let client = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    let mut writer = std::io::BufWriter::new(client);
+    for m in &msgs {
+        let mut body = Vec::new();
+        m.wire_encode(&mut body);
+        write_frame(&mut writer, &body).unwrap();
+    }
+    writer.flush().unwrap();
+    drop(writer);
+
+    assert_eq!(server.join().unwrap(), expect);
+}
+
+#[test]
+fn truncated_stream_is_an_error_not_a_hang() {
+    // A frame cut off mid-body must surface as UnexpectedEof; a clean
+    // close between frames is Ok(None).  Pin both on a real socket.
+    let mut body = Vec::new();
+    FwMsg::JobError { job: JobId(1), msg: "half".into() }.wire_encode(&mut body);
+    let mut framed = Vec::new();
+    write_frame(&mut framed, &body).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream);
+        let first = read_frame(&mut reader).unwrap().expect("intact frame");
+        let _ = decode_body(&first);
+        read_frame(&mut reader)
+    });
+
+    let mut client = TcpStream::connect(("127.0.0.1", port)).unwrap();
+    client.write_all(&framed).unwrap(); // one intact frame...
+    client.write_all(&framed[..framed.len() - 3]).unwrap(); // ...one sheared
+    drop(client);
+
+    let err = server.join().unwrap().unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+}

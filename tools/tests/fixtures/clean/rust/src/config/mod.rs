@@ -2,6 +2,7 @@ pub struct TopologyConfig {
     pub schedulers: usize,
     pub cost_ewma_alpha: f64,
     pub heartbeats: bool,
+    pub transport: String,
 }
 
 impl TopologyConfig {
@@ -11,6 +12,7 @@ impl TopologyConfig {
             schedulers: get_usize(&doc, "schedulers", 1)?,
             cost_ewma_alpha: get_f64(&doc, "cost_ewma_alpha", 0.4)?,
             heartbeats: get_bool(&doc, "heartbeats", true)?,
+            transport: get_string(&doc, "transport", "inproc")?,
         })
     }
 
@@ -19,6 +21,7 @@ impl TopologyConfig {
             ("schedulers", Json::num(self.schedulers)),
             ("cost_ewma_alpha", Json::num(self.cost_ewma_alpha)),
             ("heartbeats", Json::Bool(self.heartbeats)),
+            ("transport", Json::str(self.transport.clone())),
         ])
     }
 

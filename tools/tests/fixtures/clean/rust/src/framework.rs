@@ -17,4 +17,9 @@ impl FrameworkBuilder {
         self.cfg.heartbeats = on;
         self
     }
+
+    pub fn transport(mut self, t: String) -> Self {
+        self.cfg.transport = t;
+        self
+    }
 }

@@ -167,6 +167,22 @@ class FixtureCase(unittest.TestCase):
         self.mutate("DESIGN.md", "`heartbeats`", "`that knob`")
         self.assert_fires("L3", "heartbeats")
 
+    def test_l3_transport_knob_missing_from_design_section(self):
+        # The README row cites the transport section; strip the knob name
+        # from it (§15 surface in the real tree).
+        self.mutate("DESIGN.md", "`transport`", "`that knob`")
+        self.assert_fires("L3", "transport")
+
+    def test_l3_transport_knob_not_parsed(self):
+        # Drop the knob from from_json_text: the registry check must
+        # notice the field is no longer wired to the config file surface.
+        self.mutate(
+            "rust/src/config/mod.rs",
+            '            transport: get_string(&doc, "transport", "inproc")?,\n',
+            "",
+        )
+        self.assert_fires("L3", "transport")
+
     # -- L4: metrics registry ----------------------------------------------
 
     def test_l4_unexported_counter(self):
