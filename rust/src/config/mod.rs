@@ -37,7 +37,10 @@
 //!   "straggler_factor": 16.0,
 //!   "straggler_cold_us": 2000000,
 //!   "max_rank_losses": 4,
-//!   "job_retry_backoff_us": 250000
+//!   "job_retry_backoff_us": 250000,
+//!   "memory_budget_bytes": 0,
+//!   "spill_dir": null,
+//!   "eviction_policy": "cost-aware-lru"
 //! }
 //! ```
 //!
@@ -55,6 +58,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::comm::{CostModel, TransportKind};
+use crate::data::EvictionPolicy;
 use crate::error::{Error, Result};
 use crate::util::json::{self, Json};
 
@@ -269,6 +273,20 @@ pub struct TopologyConfig {
     /// Minimum spacing between speculative re-executions of the same job,
     /// in microseconds (backoff of the straggler re-placement loop).
     pub job_retry_backoff_us: u64,
+    /// Per-rank store byte budget (DESIGN.md §16): every sub-scheduler
+    /// result store and worker kept cache charges its resident entries
+    /// against this many bytes and evicts when over.  0 (the default)
+    /// disables budgeting — today's unbounded behaviour bit-for-bit.
+    pub memory_budget_bytes: u64,
+    /// Directory for spill files backing owned-result and kept-cache
+    /// eviction (DESIGN.md §16).  Unset (the default / JSON `null`)
+    /// disables spilling, leaving only re-fetchable transient copies
+    /// evictable.
+    pub spill_dir: Option<PathBuf>,
+    /// Victim ordering of budgeted stores (DESIGN.md §16):
+    /// `"cost-aware-lru"` (the default, score = bytes × age ÷ estimated
+    /// recompute µs) or `"lru"` (plain recency).
+    pub eviction_policy: EvictionPolicy,
 }
 
 impl Default for TopologyConfig {
@@ -302,6 +320,9 @@ impl Default for TopologyConfig {
             straggler_cold_us: 2_000_000,
             max_rank_losses: 4,
             job_retry_backoff_us: 250_000,
+            memory_budget_bytes: 0,
+            spill_dir: None,
+            eviction_policy: EvictionPolicy::default(),
         }
     }
 }
@@ -421,6 +442,22 @@ impl TopologyConfig {
         cfg.max_rank_losses = get_usize("max_rank_losses", cfg.max_rank_losses)?;
         cfg.job_retry_backoff_us =
             get_usize("job_retry_backoff_us", cfg.job_retry_backoff_us as usize)? as u64;
+        cfg.memory_budget_bytes =
+            get_usize("memory_budget_bytes", cfg.memory_budget_bytes as usize)? as u64;
+        if let Some(v) = doc.get("spill_dir") {
+            if *v != Json::Null {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| Error::Config("spill_dir must be a string".into()))?;
+                cfg.spill_dir = Some(PathBuf::from(s));
+            }
+        }
+        if let Some(v) = doc.get("eviction_policy") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::Config("eviction_policy must be a string".into()))?;
+            cfg.eviction_policy = EvictionPolicy::parse(s)?;
+        }
         if let Some(v) = doc.get("execution_mode") {
             let s = v
                 .as_str()
@@ -521,6 +558,21 @@ impl TopologyConfig {
             (
                 "job_retry_backoff_us",
                 Json::num(self.job_retry_backoff_us as f64),
+            ),
+            (
+                "memory_budget_bytes",
+                Json::num(self.memory_budget_bytes as f64),
+            ),
+            (
+                "spill_dir",
+                match &self.spill_dir {
+                    Some(p) => Json::str(p.to_string_lossy().to_string()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "eviction_policy",
+                Json::str(self.eviction_policy.as_str().to_string()),
             ),
             (
                 "comm_cost_model",
@@ -637,6 +689,40 @@ mod tests {
         assert_eq!(back.execution_mode, ExecutionMode::Barrier);
         assert!(TopologyConfig::from_json_text(r#"{"execution_mode": "bsp"}"#).is_err());
         assert!(TopologyConfig::from_json_text(r#"{"execution_mode": 3}"#).is_err());
+    }
+
+    #[test]
+    fn memory_budget_knobs_parse_and_roundtrip() {
+        let dflt = TopologyConfig::default();
+        assert_eq!(dflt.memory_budget_bytes, 0);
+        assert_eq!(dflt.spill_dir, None);
+        assert_eq!(dflt.eviction_policy, EvictionPolicy::CostAwareLru);
+        let cfg = TopologyConfig::from_json_text(
+            r#"{"memory_budget_bytes": 65536, "spill_dir": "/tmp/hypar_spill",
+                "eviction_policy": "lru"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.memory_budget_bytes, 65536);
+        assert_eq!(cfg.spill_dir.as_deref(), Some(Path::new("/tmp/hypar_spill")));
+        assert_eq!(cfg.eviction_policy, EvictionPolicy::Lru);
+        cfg.validate().unwrap();
+        let back = TopologyConfig::from_json_text(&cfg.to_json()).unwrap();
+        assert_eq!(back.memory_budget_bytes, 65536);
+        assert_eq!(back.spill_dir, cfg.spill_dir);
+        assert_eq!(back.eviction_policy, EvictionPolicy::Lru);
+    }
+
+    #[test]
+    fn bad_memory_budget_knobs_rejected() {
+        assert!(
+            TopologyConfig::from_json_text(r#"{"memory_budget_bytes": "big"}"#).is_err()
+        );
+        assert!(TopologyConfig::from_json_text(r#"{"spill_dir": 7}"#).is_err());
+        assert!(TopologyConfig::from_json_text(r#"{"eviction_policy": "fifo"}"#).is_err());
+        assert!(TopologyConfig::from_json_text(r#"{"eviction_policy": 1}"#).is_err());
+        // JSON null is the documented "unset" spelling for spill_dir.
+        let cfg = TopologyConfig::from_json_text(r#"{"spill_dir": null}"#).unwrap();
+        assert_eq!(cfg.spill_dir, None);
     }
 
     #[test]

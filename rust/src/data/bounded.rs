@@ -1,0 +1,440 @@
+//! Bounded-memory store primitives (DESIGN.md §16).
+//!
+//! Every retained result, kept operand, and prefetched copy in the
+//! framework is charged against a per-rank byte budget
+//! (`memory_budget_bytes`; 0 = unbounded, bit-for-bit today's
+//! behaviour).  When a store runs over budget it evicts by a cost-aware
+//! LRU score — `bytes × age ÷ estimated recompute µs` — so large, stale,
+//! cheap-to-recompute entries go first.  Entries referenced by in-flight
+//! assignments are pinned and never evicted, so eviction cannot race a
+//! dispatch.  An evicted-but-later-needed result either reads back from
+//! its spill file (`spill_dir`) or is declared lost and recomputed from
+//! lineage through the existing §6 recovery machinery.
+//!
+//! This module holds the policy core shared by the sub-scheduler
+//! [`crate::scheduler::store::ResultStore`] and the worker
+//! [`crate::worker::cache::KeptCache`]: the budget ledger, victim
+//! selection, the spill codec helpers, and the deterministic read-back
+//! cost model.
+
+use std::collections::{HashMap, HashSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::data::{codec, FunctionData};
+use crate::error::{Error, Result};
+use crate::job::JobId;
+
+/// Recompute-cost estimate used for entries whose producing job was never
+/// timed locally (fetched copies, prefetch pushes): middle-of-the-road so
+/// unknown entries are neither eviction magnets nor unevictable.
+pub const DEFAULT_RECOMPUTE_EST_US: f64 = 500.0;
+
+/// Fixed per-file spill read-back latency (open + seek + decode setup).
+/// Deterministic constants, not measurements: the recompute-vs-read-back
+/// decision must not depend on wall-clock noise (DESIGN.md §16).
+pub const SPILL_READBACK_ALPHA_US: f64 = 150.0;
+
+/// Modelled spill read-back bandwidth in bytes per microsecond
+/// (600 B/µs ≈ 600 MB/s, a conservative local-disk figure).
+pub const SPILL_READBACK_BYTES_PER_US: f64 = 600.0;
+
+/// Recomputing is preferred over spill read-back only when it is cheaper
+/// by this safety factor — recompute re-enters §6 recovery and re-places
+/// the job, so a marginal win is not worth the scheduling churn.
+pub const RECOMPUTE_PREFERENCE_FACTOR: f64 = 4.0;
+
+/// Modelled microseconds to read an evicted result of `bytes` back from
+/// its spill file.
+pub fn spill_readback_us(bytes: u64) -> f64 {
+    SPILL_READBACK_ALPHA_US + bytes as f64 / SPILL_READBACK_BYTES_PER_US
+}
+
+/// Whether recomputing from lineage beats reading the spill file back,
+/// per the deterministic cost model.  `est_us` is the locally measured
+/// execution time of the producing job; `None` (never timed here) always
+/// prefers read-back — the safe default.
+pub fn recompute_beats_readback(est_us: Option<f64>, bytes: u64) -> bool {
+    match est_us {
+        Some(e) => e * RECOMPUTE_PREFERENCE_FACTOR < spill_readback_us(bytes),
+        None => false,
+    }
+}
+
+/// Which score orders eviction victims (`eviction_policy` knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionPolicy {
+    /// `bytes × age ÷ estimated recompute µs`: large, stale entries that
+    /// are cheap to reproduce go first (the default).
+    #[default]
+    CostAwareLru,
+    /// Plain least-recently-used, ignoring size and recompute cost.
+    Lru,
+}
+
+impl EvictionPolicy {
+    /// Canonical config-file spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EvictionPolicy::CostAwareLru => "cost-aware-lru",
+            EvictionPolicy::Lru => "lru",
+        }
+    }
+
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "cost-aware-lru" => Ok(EvictionPolicy::CostAwareLru),
+            "lru" => Ok(EvictionPolicy::Lru),
+            other => Err(Error::Config(format!(
+                "unknown eviction_policy {other:?} (expected \"cost-aware-lru\" or \"lru\")"
+            ))),
+        }
+    }
+}
+
+/// One charged entry in a [`BudgetLedger`].
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    bytes: u64,
+    /// Logical-clock stamp of the last charge/touch — recency without
+    /// wall time, so victim order is deterministic.
+    last_use: u64,
+    /// Locally measured execution µs of the producing job, when known.
+    est_recompute_us: Option<f64>,
+}
+
+/// Victims picked by [`BudgetLedger::plan_evictions`].
+#[derive(Debug, Default)]
+pub struct EvictionPlan {
+    /// Entries to evict, in eviction order (highest score first).
+    pub victims: Vec<JobId>,
+    /// Pinned entries that outranked a chosen victim and were skipped.
+    pub pin_skips: u64,
+}
+
+/// Byte-budget accounting for one store: who is charged how much, how
+/// recently each entry was used, and what it would cost to recompute.
+///
+/// The ledger never moves data — it only decides *who must go*; the
+/// owning store performs the evictions (discard or spill) and reports
+/// them to the metrics snapshot.
+#[derive(Debug, Default)]
+pub struct BudgetLedger {
+    budget: u64,
+    entries: HashMap<JobId, Entry>,
+    clock: u64,
+    resident: u64,
+    peak: u64,
+}
+
+impl BudgetLedger {
+    /// Ledger with `budget` bytes; 0 means unbounded (no eviction ever).
+    pub fn new(budget: u64) -> Self {
+        BudgetLedger { budget, ..Default::default() }
+    }
+
+    /// Whether a budget is configured (0 = unbounded).
+    pub fn is_bounded(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// The configured budget in bytes (0 = unbounded).
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Charge `bytes` for `job` (idempotent: re-charging replaces the
+    /// previous charge) and stamp its recency.
+    pub fn charge(&mut self, job: JobId, bytes: u64, est_recompute_us: Option<f64>) {
+        self.release(job);
+        self.clock += 1;
+        self.entries.insert(job, Entry { bytes, last_use: self.clock, est_recompute_us });
+        self.resident += bytes;
+        self.peak = self.peak.max(self.resident);
+    }
+
+    /// Stamp `job` as just-used (no-op if not charged).
+    pub fn touch(&mut self, job: JobId) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.entries.get_mut(&job) {
+            e.last_use = clock;
+        }
+    }
+
+    /// Record a measured recompute cost for an already-charged entry.
+    pub fn set_estimate(&mut self, job: JobId, est_us: f64) {
+        if let Some(e) = self.entries.get_mut(&job) {
+            e.est_recompute_us = Some(est_us);
+        }
+    }
+
+    /// Locally measured recompute estimate for `job`, if charged + known.
+    pub fn estimate(&self, job: JobId) -> Option<f64> {
+        self.entries.get(&job).and_then(|e| e.est_recompute_us)
+    }
+
+    /// Uncharge `job`, returning the bytes it held.
+    pub fn release(&mut self, job: JobId) -> Option<u64> {
+        let e = self.entries.remove(&job)?;
+        self.resident -= e.bytes;
+        Some(e.bytes)
+    }
+
+    /// Whether `job` is charged.
+    pub fn contains(&self, job: JobId) -> bool {
+        self.entries.contains_key(&job)
+    }
+
+    /// Bytes `job` is charged for (0 if not charged).
+    pub fn bytes_of(&self, job: JobId) -> u64 {
+        self.entries.get(&job).map(|e| e.bytes).unwrap_or(0)
+    }
+
+    /// Currently charged bytes.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident
+    }
+
+    /// High-water mark of charged bytes (the `store_bytes` metric).
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak
+    }
+
+    /// Bytes over budget right now (0 when unbounded or under budget).
+    pub fn excess(&self) -> u64 {
+        if self.budget == 0 {
+            0
+        } else {
+            self.resident.saturating_sub(self.budget)
+        }
+    }
+
+    /// Pick victims to bring the ledger back under budget, skipping
+    /// `pinned` entries and anything in `unevictable`.
+    ///
+    /// All candidates are ranked by the policy score (descending); the
+    /// plan walks the ranking, skipping pinned entries (counted in
+    /// [`EvictionPlan::pin_skips`]) until the cumulative victim bytes
+    /// cover the excess.  The walk is deterministic: score ties break on
+    /// `JobId`.  The ledger is not modified — callers evict and then
+    /// [`Self::release`] each victim.
+    pub fn plan_evictions(
+        &self,
+        policy: EvictionPolicy,
+        pinned: &HashSet<JobId>,
+        unevictable: &HashSet<JobId>,
+    ) -> EvictionPlan {
+        let mut plan = EvictionPlan::default();
+        let excess = self.excess();
+        if excess == 0 {
+            return plan;
+        }
+        let mut ranked: Vec<(f64, JobId, u64, bool)> = self
+            .entries
+            .iter()
+            .filter(|(job, _)| !unevictable.contains(job))
+            .map(|(&job, e)| {
+                let age = (self.clock - e.last_use) as f64 + 1.0;
+                let score = match policy {
+                    EvictionPolicy::CostAwareLru => {
+                        let est =
+                            e.est_recompute_us.unwrap_or(DEFAULT_RECOMPUTE_EST_US).max(1.0);
+                        e.bytes as f64 * age / est
+                    }
+                    EvictionPolicy::Lru => age,
+                };
+                (score, job, e.bytes, pinned.contains(&job))
+            })
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        let mut freed = 0u64;
+        for (_, job, bytes, is_pinned) in ranked {
+            if freed >= excess {
+                break;
+            }
+            if is_pinned {
+                plan.pin_skips += 1;
+                continue;
+            }
+            plan.victims.push(job);
+            freed += bytes;
+        }
+        plan
+    }
+}
+
+// ---------------------------------------------------------------- spill
+
+/// Spill-file path for `job` under `dir`.
+pub fn spill_path(dir: &Path, job: JobId) -> PathBuf {
+    dir.join(format!("job_{}.hyp", job.0))
+}
+
+/// Write `data` to its spill file under `dir` (created on demand),
+/// returning the encoded byte count.
+pub fn spill_write(dir: &Path, job: JobId, data: &FunctionData) -> Result<u64> {
+    fs::create_dir_all(dir)?;
+    let buf = codec::encode(data);
+    let len = buf.len() as u64;
+    fs::write(spill_path(dir, job), buf)?;
+    Ok(len)
+}
+
+/// Read a spilled result back from `dir`.
+pub fn spill_read(dir: &Path, job: JobId) -> Result<FunctionData> {
+    let buf = fs::read(spill_path(dir, job))?;
+    codec::decode(&buf)
+}
+
+/// Delete `job`'s spill file under `dir`, if present.
+pub fn spill_remove(dir: &Path, job: JobId) {
+    let _ = fs::remove_file(spill_path(dir, job));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DataChunk;
+
+    fn pins(jobs: &[u64]) -> HashSet<JobId> {
+        jobs.iter().map(|&j| JobId(j)).collect()
+    }
+
+    #[test]
+    fn policy_parse_roundtrips() {
+        for p in [EvictionPolicy::CostAwareLru, EvictionPolicy::Lru] {
+            assert_eq!(EvictionPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(EvictionPolicy::parse("fifo").is_err());
+        assert_eq!(EvictionPolicy::default(), EvictionPolicy::CostAwareLru);
+    }
+
+    #[test]
+    fn unbounded_ledger_never_evicts() {
+        let mut l = BudgetLedger::new(0);
+        l.charge(JobId(1), u64::MAX / 2, None);
+        assert!(!l.is_bounded());
+        assert_eq!(l.excess(), 0);
+        let plan = l.plan_evictions(EvictionPolicy::CostAwareLru, &pins(&[]), &pins(&[]));
+        assert!(plan.victims.is_empty());
+    }
+
+    #[test]
+    fn cost_aware_lru_evicts_cheap_to_recompute_first() {
+        let mut l = BudgetLedger::new(100);
+        // Same size, same recency order; job 1 is cheap to recompute,
+        // job 2 expensive — job 1 must be the first victim.
+        l.charge(JobId(1), 80, Some(10.0));
+        l.charge(JobId(2), 80, Some(100_000.0));
+        let plan = l.plan_evictions(EvictionPolicy::CostAwareLru, &pins(&[]), &pins(&[]));
+        assert_eq!(plan.victims, vec![JobId(1)]);
+        assert_eq!(plan.pin_skips, 0);
+    }
+
+    #[test]
+    fn plain_lru_evicts_oldest_first() {
+        let mut l = BudgetLedger::new(100);
+        l.charge(JobId(1), 80, Some(10.0)); // oldest, cheap
+        l.charge(JobId(2), 80, Some(100_000.0));
+        l.touch(JobId(1));
+        // Under plain LRU job 2 is now the stalest despite being the
+        // expensive one; cost-aware would still pick job 1.
+        let plan = l.plan_evictions(EvictionPolicy::Lru, &pins(&[]), &pins(&[]));
+        assert_eq!(plan.victims, vec![JobId(2)]);
+    }
+
+    #[test]
+    fn pinned_entries_are_skipped_and_counted() {
+        let mut l = BudgetLedger::new(50);
+        l.charge(JobId(1), 60, Some(1.0)); // top-ranked victim, but pinned
+        l.charge(JobId(2), 60, Some(1_000_000.0));
+        let plan =
+            l.plan_evictions(EvictionPolicy::CostAwareLru, &pins(&[1]), &pins(&[]));
+        assert_eq!(plan.victims, vec![JobId(2)]);
+        assert_eq!(plan.pin_skips, 1);
+    }
+
+    #[test]
+    fn unevictable_entries_are_not_even_candidates() {
+        let mut l = BudgetLedger::new(50);
+        l.charge(JobId(1), 60, Some(1.0));
+        let plan =
+            l.plan_evictions(EvictionPolicy::CostAwareLru, &pins(&[]), &pins(&[1]));
+        assert!(plan.victims.is_empty());
+        assert_eq!(plan.pin_skips, 0); // excluded, not "skipped"
+    }
+
+    #[test]
+    fn accounting_is_exact_across_charge_release_recharge() {
+        let mut l = BudgetLedger::new(1000);
+        l.charge(JobId(1), 100, None);
+        l.charge(JobId(2), 200, None);
+        assert_eq!(l.resident_bytes(), 300);
+        assert_eq!(l.release(JobId(1)), Some(100));
+        assert_eq!(l.resident_bytes(), 200);
+        // Re-charging an existing entry replaces, never double-counts.
+        l.charge(JobId(2), 250, None);
+        assert_eq!(l.resident_bytes(), 250);
+        assert_eq!(l.release(JobId(2)), Some(250));
+        assert_eq!(l.resident_bytes(), 0);
+        assert_eq!(l.release(JobId(2)), None);
+        assert_eq!(l.peak_bytes(), 450); // 200 + 250 after the re-charge
+    }
+
+    #[test]
+    fn eviction_stops_once_excess_is_covered() {
+        let mut l = BudgetLedger::new(100);
+        for j in 1..=4 {
+            l.charge(JobId(j), 50, Some(1.0));
+        }
+        // 200 resident, 100 over: exactly two victims needed.
+        let plan = l.plan_evictions(EvictionPolicy::CostAwareLru, &pins(&[]), &pins(&[]));
+        assert_eq!(plan.victims.len(), 2);
+    }
+
+    #[test]
+    fn spill_roundtrip_preserves_every_dtype() {
+        let dir = tempfile_dir("hypar_spill_roundtrip");
+        let mut fd = FunctionData::new();
+        fd.push(DataChunk::from_u8(vec![1, 2, 3]));
+        fd.push(DataChunk::from_i32(vec![-4, 5]));
+        fd.push(DataChunk::from_i64(vec![6_000_000_000]));
+        fd.push(DataChunk::from_f32(vec![7.5, -8.25]));
+        fd.push(DataChunk::from_f64(vec![9.125]));
+        let job = JobId(42);
+        let written = spill_write(&dir, job, &fd).unwrap();
+        assert!(written > 0);
+        let back = spill_read(&dir, job).unwrap();
+        assert_eq!(back.len(), fd.len());
+        assert_eq!(back.chunk(0).unwrap().as_u8().unwrap(), &[1, 2, 3]);
+        assert_eq!(back.chunk(1).unwrap().as_i32().unwrap(), &[-4, 5]);
+        assert_eq!(back.chunk(2).unwrap().as_i64().unwrap(), &[6_000_000_000]);
+        assert_eq!(back.chunk(3).unwrap().as_f32().unwrap(), &[7.5, -8.25]);
+        assert_eq!(back.chunk(4).unwrap().as_f64().unwrap(), &[9.125]);
+        spill_remove(&dir, job);
+        assert!(spill_read(&dir, job).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn readback_model_is_monotonic_and_gates_recompute() {
+        assert!(spill_readback_us(1 << 20) > spill_readback_us(1));
+        // Tiny result, slow job: read-back wins.
+        assert!(!recompute_beats_readback(Some(1_000_000.0), 64));
+        // Large result, near-free job: recompute wins.
+        assert!(recompute_beats_readback(Some(1.0), 10 << 20));
+        // Unknown cost: always read back (safe default).
+        assert!(!recompute_beats_readback(None, 10 << 20));
+    }
+
+    fn tempfile_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+}

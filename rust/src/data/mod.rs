@@ -7,10 +7,12 @@
 //! "copies the pointer to the data instead of the data itself" semantics,
 //! made safe.
 
+pub mod bounded;
 mod chunk;
 pub mod codec;
 mod function_data;
 pub mod matrix;
 
+pub use bounded::EvictionPolicy;
 pub use chunk::{DataChunk, Dtype};
 pub use function_data::FunctionData;

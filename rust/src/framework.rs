@@ -62,7 +62,7 @@ use std::time::Duration;
 
 use crate::comm::{CostModel, TransportKind, World};
 use crate::config::{ExecutionMode, TopologyConfig};
-use crate::data::FunctionData;
+use crate::data::{EvictionPolicy, FunctionData};
 use crate::error::Result;
 use crate::fault::{ChaosPlan, FaultInjector};
 use crate::job::registry::FunctionRegistry;
@@ -164,6 +164,11 @@ impl Framework {
             cost_ewma_alpha: self.cfg.cost_ewma_alpha,
             metrics: Some(metrics.clone()),
             ctrl_batch,
+            memory_budget_bytes: self.cfg.memory_budget_bytes,
+            // Per-worker spill subdirectories are carved out by the
+            // spawning sub-scheduler (DESIGN.md §16).
+            spill_dir: self.cfg.spill_dir.clone(),
+            eviction_policy: self.cfg.eviction_policy,
         };
         let subs: Vec<SubHandle> = (0..self.cfg.schedulers)
             .map(|_| {
@@ -179,6 +184,9 @@ impl Framework {
                         worker: worker_cfg.clone(),
                         tick: Duration::from_millis(20),
                         ctrl_batch,
+                        memory_budget_bytes: self.cfg.memory_budget_bytes,
+                        spill_dir: self.cfg.spill_dir.clone(),
+                        eviction_policy: self.cfg.eviction_policy,
                     },
                     metrics.clone(),
                 )
@@ -207,6 +215,7 @@ impl Framework {
                 straggler_cold_us: self.cfg.straggler_cold_us,
                 max_rank_losses: self.cfg.max_rank_losses,
                 job_retry_backoff_us: self.cfg.job_retry_backoff_us,
+                memory_budget_bytes: self.cfg.memory_budget_bytes,
             },
             &metrics,
         );
@@ -556,6 +565,41 @@ impl FrameworkBuilder {
     /// converges instead of replica-storming.
     pub fn job_retry_backoff_us(mut self, us: u64) -> Self {
         self.cfg.job_retry_backoff_us = us;
+        self
+    }
+
+    /// Per-rank store byte budget (default 0 = unbounded; DESIGN.md
+    /// §16).  Every sub-scheduler result store and worker kept cache
+    /// charges its resident results against this many bytes; over
+    /// budget, victims chosen by [`Self::eviction_policy`] are evicted —
+    /// transient copies discarded, owned/kept results spilled to
+    /// [`Self::spill_dir`] (or, when recomputing is cheaper per the §16
+    /// cost model, recomputed from lineage through §6 recovery).  The
+    /// master additionally penalises placement onto near-budget subs
+    /// (§10).  Computed values are identical either way; 0 reproduces
+    /// the unbounded stores bit-for-bit.
+    pub fn memory_budget_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.memory_budget_bytes = bytes;
+        self
+    }
+
+    /// Directory for spill files backing owned-result and kept-cache
+    /// eviction (default unset; DESIGN.md §16).  Each rank writes under
+    /// its own subdirectory, so one directory serves the whole topology.
+    /// Without it, owned results are unevictable and only transient
+    /// copies can be dropped under budget pressure.
+    pub fn spill_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.cfg.spill_dir = Some(dir.into());
+        self
+    }
+
+    /// Victim ordering of budgeted stores (default
+    /// [`EvictionPolicy::CostAwareLru`]; DESIGN.md §16): cost-aware LRU
+    /// scores each entry `bytes × age ÷ estimated recompute µs` so
+    /// large, stale, cheap-to-reproduce results go first, while
+    /// [`EvictionPolicy::Lru`] is plain recency.
+    pub fn eviction_policy(mut self, p: EvictionPolicy) -> Self {
+        self.cfg.eviction_policy = p;
         self
     }
 

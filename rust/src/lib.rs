@@ -100,7 +100,7 @@ pub use framework::{Framework, FrameworkBuilder, RunReport};
 pub mod prelude {
     pub use crate::comm::{Comm, CommSender, Rank, Tag, TransportKind, World};
     pub use crate::config::{CostModelConfig, EngineConfig, ExecutionMode, TopologyConfig};
-    pub use crate::data::{DataChunk, Dtype, FunctionData};
+    pub use crate::data::{DataChunk, Dtype, EvictionPolicy, FunctionData};
     pub use crate::error::{Error, Result};
     pub use crate::framework::{Framework, FrameworkBuilder, RunReport};
     pub use crate::job::{

@@ -213,6 +213,22 @@ pub struct MetricsSnapshot {
     pub msgs_delayed: u64,
     /// Messages the chaos plan delivered twice.
     pub msgs_duplicated: u64,
+    /// High-water mark of bytes resident in any single budgeted store
+    /// (sub result stores and worker kept caches; DESIGN.md §16).
+    /// Per-store peaks fold by max, so the figure is the largest
+    /// footprint one rank's budget had to absorb.
+    pub store_bytes: u64,
+    /// Entries evicted from a budgeted store (discarded transients +
+    /// spilled owned/kept results; DESIGN.md §16).
+    pub evictions: u64,
+    /// Evicted entries written to their `spill_dir` file first.
+    pub spills: u64,
+    /// Spilled results dropped in favour of lineage recompute because the
+    /// cost model priced re-execution below spill read-back (§16).
+    pub recomputes_from_eviction: u64,
+    /// Eviction victims skipped because an in-flight assignment pinned
+    /// them (DESIGN.md §16; eviction never races a dispatch).
+    pub evict_pin_skips: u64,
     /// Transport backend the run's envelopes travelled on (`"inproc"` or
     /// `"tcp"`; DESIGN.md §15).  Recorded so benchmark JSON from the two
     /// backends can be told apart after the fact.
@@ -493,6 +509,14 @@ impl MetricsSnapshot {
             ("msgs_dropped", Json::num(self.msgs_dropped as f64)),
             ("msgs_delayed", Json::num(self.msgs_delayed as f64)),
             ("msgs_duplicated", Json::num(self.msgs_duplicated as f64)),
+            ("store_bytes", Json::num(self.store_bytes as f64)),
+            ("evictions", Json::num(self.evictions as f64)),
+            ("spills", Json::num(self.spills as f64)),
+            (
+                "recomputes_from_eviction",
+                Json::num(self.recomputes_from_eviction as f64),
+            ),
+            ("evict_pin_skips", Json::num(self.evict_pin_skips as f64)),
             ("transport", Json::str(self.transport.clone())),
         ])
     }
@@ -815,6 +839,38 @@ impl MetricsCollector {
         self.with(|m| m.speculative_wins += 1);
     }
 
+    /// A budgeted store reported its resident high-water mark; peaks
+    /// fold by max across stores (DESIGN.md §16).
+    pub fn store_bytes_peak(&self, bytes: u64) {
+        self.with(|m| {
+            if bytes > m.store_bytes {
+                m.store_bytes = bytes;
+            }
+        });
+    }
+
+    /// `n` entries were evicted from a budgeted store (DESIGN.md §16).
+    pub fn evicted(&self, n: u64) {
+        self.with(|m| m.evictions += n);
+    }
+
+    /// `n` eviction victims were written to their spill file first.
+    pub fn spilled(&self, n: u64) {
+        self.with(|m| m.spills += n);
+    }
+
+    /// A spilled result was dropped in favour of lineage recompute (the
+    /// cost model priced re-execution below spill read-back, §16).
+    pub fn recomputed_from_eviction(&self) {
+        self.with(|m| m.recomputes_from_eviction += 1);
+    }
+
+    /// `n` eviction victims were skipped because in-flight assignments
+    /// pinned them (DESIGN.md §16).
+    pub fn evict_pin_skipped(&self, n: u64) {
+        self.with(|m| m.evict_pin_skips += n);
+    }
+
     /// Fold in what the chaos plan injected (framework, right before
     /// [`Self::finish`]; all zero outside chaos test runs).
     pub fn chaos(&self, dropped: u64, delayed: u64, duplicated: u64) {
@@ -990,6 +1046,33 @@ mod tests {
         assert_eq!(back.get("msgs_dropped").unwrap().as_usize(), Some(4));
         assert_eq!(back.get("msgs_delayed").unwrap().as_usize(), Some(2));
         assert_eq!(back.get("msgs_duplicated").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn bounded_store_counters_fold_and_export() {
+        let c = MetricsCollector::new();
+        c.store_bytes_peak(4096);
+        c.store_bytes_peak(1024); // lower peak never regresses the max
+        c.evicted(3);
+        c.spilled(2);
+        c.recomputed_from_eviction();
+        c.evict_pin_skipped(5);
+        let snap = c.finish(StatsSnapshot { msgs: 0, bytes: 0, modelled_comm_ns: 0 });
+        assert_eq!(snap.store_bytes, 4096);
+        assert_eq!(snap.evictions, 3);
+        assert_eq!(snap.spills, 2);
+        assert_eq!(snap.recomputes_from_eviction, 1);
+        assert_eq!(snap.evict_pin_skips, 5);
+        let text = snap.to_json().to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("store_bytes").unwrap().as_usize(), Some(4096));
+        assert_eq!(back.get("evictions").unwrap().as_usize(), Some(3));
+        assert_eq!(back.get("spills").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            back.get("recomputes_from_eviction").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(back.get("evict_pin_skips").unwrap().as_usize(), Some(5));
     }
 
     #[test]

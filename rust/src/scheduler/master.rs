@@ -34,7 +34,7 @@ use crate::metrics::MetricsCollector;
 
 use super::dynamic::resolve_injections;
 use super::graph::{JobGraph, NodeState};
-use super::placement::{bulk_assign_order, choose_scheduler_policy};
+use super::placement::{apply_memory_pressure, bulk_assign_order, choose_scheduler_policy};
 use super::{log_unroutable, Coalescer, CtrlBatchCfg, FwMsg, HeartbeatDetector, SourceLoc};
 
 /// When stored results are freed (see DESIGN.md §6 discussion).
@@ -115,6 +115,11 @@ pub struct MasterConfig {
     /// Extra slack, µs, added per retry to a job's next replica deadline —
     /// the backoff of the speculative re-placement loop.
     pub job_retry_backoff_us: u64,
+    /// Per-rank store byte budget (DESIGN.md §16, knob
+    /// `memory_budget_bytes`): with a budget in force the master tracks
+    /// stored bytes per sub and penalises placement onto near-budget
+    /// ranks.  0 = unbounded — placement inputs stay bit-for-bit PR 9.
+    pub memory_budget_bytes: u64,
 }
 
 /// Drive one algorithm to completion. Returns the results of the final
@@ -154,6 +159,11 @@ struct Master<'a> {
     /// the cost model's replacement for queue length in placement
     /// tie-breaks.
     est_load: HashMap<Rank, u64>,
+    /// Stored result bytes the master believes each sub holds (charged on
+    /// completion, credited on release or loss) — the memory-pressure
+    /// input of §16 placement.  Only maintained to steer placement; the
+    /// sub's own ledger is authoritative for eviction.
+    stored_bytes: HashMap<Rank, u64>,
     pending: HashSet<JobId>,
     /// Abort counts per job — a cycle-breaker: a job repeatedly aborted by
     /// its scheduler indicates an unrecoverable condition, not a fault.
@@ -278,6 +288,7 @@ impl<'a> Master<'a> {
             costs,
             est_charged: HashMap::new(),
             est_load: HashMap::new(),
+            stored_bytes: HashMap::new(),
             pending: HashSet::new(),
             abort_counts: HashMap::new(),
             next_id: 0,
@@ -464,7 +475,9 @@ impl<'a> Master<'a> {
             // recovered — every step below is idempotent (DESIGN.md §14).
             FwMsg::WorkerLostReport { lost, running, .. } => {
                 for job in lost {
-                    self.available.remove(&job);
+                    if self.available.remove(&job) {
+                        self.credit_stored_bytes(job);
+                    }
                     if let Some(loc) = self.owners.get_mut(&job) {
                         loc.kept_on = None;
                     }
@@ -765,13 +778,20 @@ impl<'a> Master<'a> {
         } else {
             None
         };
+        // §16 memory pressure: near-budget subs look expensive.  `None`
+        // (knob unset) passes the untouched est_load straight through.
+        let pressured = apply_memory_pressure(
+            &self.est_load,
+            &self.stored_bytes,
+            self.cfg.memory_budget_bytes,
+        );
         choose_scheduler_policy(
             spec,
             lookahead,
             &self.owners,
             &self.result_bytes,
             &self.load,
-            &self.est_load,
+            pressured.as_ref().unwrap_or(&self.est_load),
             &self.cfg.subs,
             comm,
         )
@@ -882,7 +902,9 @@ impl<'a> Master<'a> {
                 // idempotent (the results/jobs were already recovered by
                 // `on_rank_lost`, DESIGN.md §14).
                 for job in lost {
-                    self.available.remove(&job);
+                    if self.available.remove(&job) {
+                        self.credit_stored_bytes(job);
+                    }
                     if let Some(loc) = self.owners.get_mut(&job) {
                         loc.kept_on = None;
                     }
@@ -1144,7 +1166,11 @@ impl<'a> Master<'a> {
             loc.owner = from;
             loc.kept_on = kept_on;
         }
-        self.available.insert(job);
+        // Charge the completing rank's stored-bytes ledger exactly once
+        // per availability transition (§16 memory-pressure placement).
+        if self.available.insert(job) {
+            *self.stored_bytes.entry(from).or_default() += output_bytes;
+        }
         self.result_bytes.insert(job, output_bytes);
         // A completed job starts a clean abort slate: the limit guards
         // against a single unrecoverable abort *cycle*, not against the
@@ -1355,9 +1381,22 @@ impl<'a> Master<'a> {
             self.coal
                 .send(self.comm, self.metrics, s, FwMsg::ReleaseResult { job });
         }
-        self.available.remove(&job);
+        if self.available.remove(&job) {
+            self.credit_stored_bytes(job);
+        }
         self.owners.remove(&job);
         self.metrics.result_released();
+    }
+
+    /// Credit a result's bytes back to its owner's stored-bytes ledger —
+    /// call exactly on the available → not-available transition, before
+    /// the `owners` entry is dropped (§16 memory-pressure placement).
+    fn credit_stored_bytes(&mut self, job: JobId) {
+        let Some(loc) = self.owners.get(&job) else { return };
+        let bytes = self.result_bytes.get(&job).copied().unwrap_or(0);
+        if let Some(s) = self.stored_bytes.get_mut(&loc.owner) {
+            *s = s.saturating_sub(bytes);
+        }
     }
 
     fn collect_final_results(&mut self) -> Result<BTreeMap<JobId, FunctionData>> {
@@ -1663,13 +1702,18 @@ impl<'a> Master<'a> {
         } else {
             None
         };
+        let pressured = apply_memory_pressure(
+            &self.est_load,
+            &self.stored_bytes,
+            self.cfg.memory_budget_bytes,
+        );
         let target = choose_scheduler_policy(
             &spec,
             &[],
             &self.owners,
             &self.result_bytes,
             &self.load,
-            &self.est_load,
+            pressured.as_ref().unwrap_or(&self.est_load),
             &candidates,
             comm,
         );
@@ -1783,6 +1827,7 @@ impl<'a> Master<'a> {
         self.cfg.subs.retain(|&r| r != rank);
         self.load.remove(&rank);
         self.est_load.remove(&rank);
+        self.stored_bytes.remove(&rank);
         if self.lost_ranks.len() > self.cfg.max_rank_losses {
             return Err(self.degraded(format!(
                 "rank {rank:?} lost; {} losses exceed max_rank_losses={}",
@@ -1930,9 +1975,34 @@ mod tests {
             straggler_cold_us: 2_000_000,
             max_rank_losses: 4,
             job_retry_backoff_us: 250_000,
+            memory_budget_bytes: 0,
         };
         let mut m = Master::new(&mut comm, cfg, &metrics);
         f(&mut m, &mut sub);
+    }
+
+    #[test]
+    fn stored_bytes_ledger_charges_once_and_credits_on_release_and_loss() {
+        with_master(|m| {
+            let sub = m.cfg.subs[0];
+            m.owners
+                .insert(JobId(1), SourceLoc { job: JobId(1), owner: sub, kept_on: None });
+            m.complete_job(sub, JobId(1), None, 4096);
+            assert_eq!(m.stored_bytes.get(&sub).copied(), Some(4096));
+            // A duplicate completion must not double-charge the ledger.
+            m.complete_job(sub, JobId(1), None, 4096);
+            assert_eq!(m.stored_bytes.get(&sub).copied(), Some(4096));
+            m.release_result(JobId(1));
+            assert_eq!(m.stored_bytes.get(&sub).copied(), Some(0));
+            // Loss after a fresh completion credits through the same path.
+            m.owners
+                .insert(JobId(2), SourceLoc { job: JobId(2), owner: sub, kept_on: None });
+            m.complete_job(sub, JobId(2), None, 512);
+            assert_eq!(m.stored_bytes.get(&sub).copied(), Some(512));
+            assert!(m.available.remove(&JobId(2)));
+            m.credit_stored_bytes(JobId(2));
+            assert_eq!(m.stored_bytes.get(&sub).copied(), Some(0));
+        });
     }
 
     #[test]

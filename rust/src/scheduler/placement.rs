@@ -125,6 +125,38 @@ pub fn choose_scheduler_lookahead(
         .expect("subs non-empty")
 }
 
+/// Flat cost, µs, added to a near-budget sub's estimated outstanding
+/// load by [`apply_memory_pressure`] (on top of doubling it), so
+/// pressure outweighs ordinary tie-breaks even when the cost model is
+/// cold and every `est_load` entry is zero.
+const MEMORY_PRESSURE_PENALTY_US: u64 = 10_000;
+
+/// Memory-pressure placement feedback (DESIGN.md §16): with a byte
+/// budget in force, a sub whose tracked stored bytes reached 7/8 of the
+/// budget gets its estimated outstanding cost doubled plus a flat
+/// penalty, steering new work — and the result bytes it will store —
+/// toward ranks with headroom.  Returns `None` when `budget == 0`
+/// (knob unset): callers then pass their untouched `est_load` through,
+/// keeping the unbounded placement inputs bit-for-bit identical.
+pub fn apply_memory_pressure(
+    est_load: &HashMap<Rank, u64>,
+    stored_bytes: &HashMap<Rank, u64>,
+    budget: u64,
+) -> Option<HashMap<Rank, u64>> {
+    if budget == 0 {
+        return None;
+    }
+    let threshold = budget.saturating_sub(budget / 8);
+    let mut out = est_load.clone();
+    for (&rank, &bytes) in stored_bytes {
+        if bytes >= threshold {
+            let e = out.entry(rank).or_default();
+            *e = e.saturating_mul(2).saturating_add(MEMORY_PRESSURE_PENALTY_US);
+        }
+    }
+    Some(out)
+}
+
 /// Master-side placement entry point: comm-aware when a transfer model is
 /// supplied (`comm_aware_placement = on`), the PR 4 byte-affinity policy
 /// otherwise.  Keeping the off-path a literal call to
@@ -420,6 +452,47 @@ mod tests {
 
     fn subs() -> Vec<Rank> {
         vec![Rank(1), Rank(2)]
+    }
+
+    #[test]
+    fn memory_pressure_off_when_budget_unset() {
+        let mut est = HashMap::new();
+        est.insert(Rank(1), 5);
+        let mut stored = HashMap::new();
+        stored.insert(Rank(1), u64::MAX);
+        assert!(apply_memory_pressure(&est, &stored, 0).is_none());
+    }
+
+    #[test]
+    fn memory_pressure_penalises_only_near_budget_ranks() {
+        let budget = 1000u64;
+        let mut est = HashMap::new();
+        est.insert(Rank(1), 40);
+        est.insert(Rank(2), 40);
+        let mut stored = HashMap::new();
+        stored.insert(Rank(1), 900); // ≥ 7/8 of budget: pressured
+        stored.insert(Rank(2), 500); // headroom: untouched
+        let out = apply_memory_pressure(&est, &stored, budget).unwrap();
+        assert_eq!(out.get(&Rank(1)).copied(), Some(80 + 10_000));
+        assert_eq!(out.get(&Rank(2)).copied(), Some(40));
+    }
+
+    #[test]
+    fn memory_pressure_steers_placement_away_from_full_rank() {
+        // Cold cost model (zero est_load everywhere): the flat penalty
+        // alone must flip the least-loaded tie-break off the full rank.
+        let spec = JobSpec::new(10, 1, 1);
+        let owners = HashMap::new();
+        let bytes = HashMap::new();
+        let load = HashMap::new();
+        let est = HashMap::new();
+        let mut stored = HashMap::new();
+        stored.insert(Rank(1), 1000);
+        let pressured = apply_memory_pressure(&est, &stored, 1000).unwrap();
+        let target = choose_scheduler_policy(
+            &spec, &[], &owners, &bytes, &load, &pressured, &subs(), None,
+        );
+        assert_eq!(target, Rank(2));
     }
 
     #[test]

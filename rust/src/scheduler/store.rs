@@ -1,12 +1,50 @@
 //! Sub-scheduler result store (paper §3.1: "all other schedulers store
 //! their jobs' results and further need to know how to assemble these
 //! results that might be requested as input arguments by any other job").
+//!
+//! Since DESIGN.md §16 the store is byte-budgeted: every owned result and
+//! transient copy is charged against a [`BudgetLedger`]; when over budget
+//! the store evicts by the configured [`EvictionPolicy`] — transient
+//! copies are discarded (they can always be re-fetched from their owner),
+//! owned results are spilled to disk (they are the lineage the rest of
+//! the run depends on, and the master's final collection treats an
+//! owner-side miss as fatal, so owned entries are never discard-evicted).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 
+use crate::data::bounded::{self, BudgetLedger, EvictionPolicy};
 use crate::data::FunctionData;
 use crate::error::{Error, Result};
 use crate::job::{ChunkRange, JobId};
+
+/// An owned result currently living in its spill file, not in memory.
+#[derive(Debug, Clone, Copy)]
+struct SpillEntry {
+    /// In-memory size when resident (what re-admission will charge).
+    bytes: u64,
+    /// Locally measured recompute cost, carried across the spill.
+    est_recompute_us: Option<f64>,
+}
+
+/// What one [`ResultStore::enforce_budget`] pass did; the sub-scheduler
+/// folds this into the metrics snapshot.
+#[derive(Debug, Default)]
+pub struct EvictReport {
+    /// Transient copies discarded (re-fetchable from their owner).
+    pub discarded: Vec<JobId>,
+    /// Owned results written to their spill file and dropped from memory.
+    pub spilled: Vec<JobId>,
+    /// Pinned entries that outranked a victim and were skipped.
+    pub pin_skips: u64,
+}
+
+impl EvictReport {
+    /// Total evictions (discards + spills).
+    pub fn evictions(&self) -> u64 {
+        (self.discarded.len() + self.spilled.len()) as u64
+    }
+}
 
 /// Results owned by one sub-scheduler, plus transient copies of remote
 /// results fetched for local consumers.
@@ -15,26 +53,78 @@ pub struct ResultStore {
     owned: HashMap<JobId, FunctionData>,
     /// Fetched from peers for pending local jobs; dropped after use.
     transient: HashMap<JobId, FunctionData>,
+    /// Byte-budget accounting over `owned` + `transient` (DESIGN.md §16).
+    ledger: BudgetLedger,
+    /// Owned results evicted to disk, readable back via
+    /// [`Self::ensure_resident`].
+    spilled: HashMap<JobId, SpillEntry>,
+    spill_dir: Option<PathBuf>,
+    policy: EvictionPolicy,
 }
 
 impl ResultStore {
-    /// Empty store.
+    /// Empty, unbounded store (today's behaviour bit-for-bit).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Empty store with a byte budget (0 = unbounded) and an optional
+    /// spill directory enabling owned-result eviction.
+    pub fn with_budget(
+        budget_bytes: u64,
+        spill_dir: Option<PathBuf>,
+        policy: EvictionPolicy,
+    ) -> Self {
+        ResultStore {
+            ledger: BudgetLedger::new(budget_bytes),
+            spill_dir,
+            policy,
+            ..Default::default()
+        }
+    }
+
     /// Store a result this scheduler owns.
     pub fn insert_owned(&mut self, job: JobId, data: FunctionData) {
+        self.insert_owned_with_cost(job, data, None);
+    }
+
+    /// Store an owned result together with its measured execution µs —
+    /// the recompute-cost input of the eviction score.
+    pub fn insert_owned_with_cost(
+        &mut self,
+        job: JobId,
+        data: FunctionData,
+        est_recompute_us: Option<f64>,
+    ) {
+        if self.spilled.remove(&job).is_some() {
+            if let Some(dir) = &self.spill_dir {
+                bounded::spill_remove(dir, job);
+            }
+        }
+        // Ownership displaces a stale transient copy (a result fetched
+        // here before this scheduler was made its owner by recovery);
+        // keeping both would double the resident bytes behind one charge.
+        if self.transient.remove(&job).is_some() {
+            self.ledger.release(job);
+        }
+        self.ledger.charge(job, data.size_bytes() as u64, est_recompute_us);
         self.owned.insert(job, data);
     }
 
     /// Cache a remote result fetched for local consumers.
     pub fn insert_transient(&mut self, job: JobId, data: FunctionData) {
+        // Never shadow an owned result (resident or spilled) with a
+        // transient copy: ownership charges would double-count.
+        if self.owned.contains_key(&job) || self.spilled.contains_key(&job) {
+            return;
+        }
+        self.ledger.charge(job, data.size_bytes() as u64, None);
         self.transient.insert(job, data);
     }
 
     /// Serve `range` of a result (owned or transient), zero-copy.
-    pub fn read(&self, job: JobId, range: ChunkRange) -> Result<FunctionData> {
+    pub fn read(&mut self, job: JobId, range: ChunkRange) -> Result<FunctionData> {
+        self.ledger.touch(job);
         let data = self
             .owned
             .get(&job)
@@ -44,34 +134,182 @@ impl ResultStore {
         data.select(r)
     }
 
-    /// Whether the result is readable here (owned or transient).
+    /// Whether a byte budget is in force (the `memory_budget_bytes`
+    /// knob was set).
+    pub fn is_bounded(&self) -> bool {
+        self.ledger.is_bounded()
+    }
+
+    /// Whether the result is readable here right now (owned or
+    /// transient, in memory — a spilled result is *not* readable until
+    /// [`Self::ensure_resident`] brings it back).
     pub fn contains(&self, job: JobId) -> bool {
         self.owned.contains_key(&job) || self.transient.contains_key(&job)
     }
 
-    /// Whether this scheduler owns the result.
+    /// Whether this scheduler owns the result (resident or spilled).
     pub fn is_owned(&self, job: JobId) -> bool {
-        self.owned.contains_key(&job)
+        self.owned.contains_key(&job) || self.spilled.contains_key(&job)
     }
 
-    /// Release an owned result (master's `ReleaseResult`).
+    /// Whether `job` currently lives in its spill file.
+    pub fn is_spilled(&self, job: JobId) -> bool {
+        self.spilled.contains_key(&job)
+    }
+
+    /// In-memory size a spilled result will re-admit at (0 if not
+    /// spilled).
+    pub fn spilled_bytes(&self, job: JobId) -> u64 {
+        self.spilled.get(&job).map(|e| e.bytes).unwrap_or(0)
+    }
+
+    /// Carried recompute estimate of a spilled result.
+    pub fn spilled_estimate(&self, job: JobId) -> Option<f64> {
+        self.spilled.get(&job).and_then(|e| e.est_recompute_us)
+    }
+
+    /// Bring `job` back into memory if it was spilled.  Returns `true`
+    /// when the entry is resident afterwards, `false` when the store has
+    /// never held it (the caller's ordinary miss path applies).
+    pub fn ensure_resident(&mut self, job: JobId) -> Result<bool> {
+        if self.contains(job) {
+            return Ok(true);
+        }
+        let Some(entry) = self.spilled.get(&job).copied() else {
+            return Ok(false);
+        };
+        let dir = self
+            .spill_dir
+            .as_ref()
+            .ok_or_else(|| Error::Config("spilled entry without spill_dir".into()))?
+            .clone();
+        let data = bounded::spill_read(&dir, job)?;
+        self.spilled.remove(&job);
+        bounded::spill_remove(&dir, job);
+        self.ledger.charge(job, entry.bytes, entry.est_recompute_us);
+        self.owned.insert(job, data);
+        Ok(true)
+    }
+
+    /// Drop a spilled result without reading it back — the sub declares
+    /// it lost and lets §6 recovery recompute it from lineage.
+    pub fn forget_spilled(&mut self, job: JobId) -> bool {
+        if self.spilled.remove(&job).is_none() {
+            return false;
+        }
+        if let Some(dir) = &self.spill_dir {
+            bounded::spill_remove(dir, job);
+        }
+        true
+    }
+
+    /// Release an owned result (master's `ReleaseResult`), resident or
+    /// spilled.
     pub fn release(&mut self, job: JobId) -> bool {
-        self.owned.remove(&job).is_some()
+        if self.owned.remove(&job).is_some() {
+            self.ledger.release(job);
+            return true;
+        }
+        self.forget_spilled(job)
     }
 
     /// Drop a transient copy (after the waiting jobs consumed it).
     pub fn drop_transient(&mut self, job: JobId) {
-        self.transient.remove(&job);
+        if self.transient.remove(&job).is_some() {
+            self.ledger.release(job);
+        }
     }
 
-    /// Total bytes of owned results.
+    /// Bring the store back under budget: discard transient victims,
+    /// spill owned victims (owned entries are unevictable without a
+    /// spill directory), skip pinned entries.  No-op when unbounded.
+    pub fn enforce_budget(&mut self, pinned: &HashSet<JobId>) -> EvictReport {
+        let mut report = EvictReport::default();
+        if !self.ledger.is_bounded() {
+            return report;
+        }
+        // Without a spill directory owned results cannot be evicted at
+        // all — discarding one would make the owner lie to the master's
+        // availability map (fatal at final collection, DESIGN.md §16).
+        let unevictable: HashSet<JobId> = if self.spill_dir.is_none() {
+            self.owned.keys().copied().collect()
+        } else {
+            HashSet::new()
+        };
+        let plan = self.ledger.plan_evictions(self.policy, pinned, &unevictable);
+        report.pin_skips = plan.pin_skips;
+        for job in plan.victims {
+            if self.transient.contains_key(&job) {
+                self.transient.remove(&job);
+                self.ledger.release(job);
+                report.discarded.push(job);
+            } else if let (Some(data), Some(dir)) =
+                (self.owned.get(&job), self.spill_dir.clone())
+            {
+                if bounded::spill_write(&dir, job, data).is_err() {
+                    continue; // disk refused: leave it resident
+                }
+                self.spilled.insert(
+                    job,
+                    SpillEntry {
+                        bytes: self.ledger.bytes_of(job),
+                        est_recompute_us: self.ledger.estimate(job),
+                    },
+                );
+                self.owned.remove(&job);
+                self.ledger.release(job);
+                report.spilled.push(job);
+            }
+        }
+        report
+    }
+
+    /// Record the measured execution µs of an already-stored result.
+    pub fn note_recompute_cost(&mut self, job: JobId, exec_us: u64) {
+        if exec_us > 0 {
+            self.ledger.set_estimate(job, exec_us as f64);
+        }
+    }
+
+    /// Bytes currently charged (owned + transient, in memory).
+    pub fn resident_bytes(&self) -> u64 {
+        self.ledger.resident_bytes()
+    }
+
+    /// High-water mark of charged bytes (the `store_bytes` metric).
+    pub fn peak_bytes(&self) -> u64 {
+        self.ledger.peak_bytes()
+    }
+
+    /// Total bytes of owned results in memory.
     pub fn owned_bytes(&self) -> usize {
         self.owned.values().map(|d| d.size_bytes()).sum()
     }
 
-    /// Number of owned results.
+    /// Number of owned results in memory.
     pub fn owned_count(&self) -> usize {
         self.owned.len()
+    }
+
+    /// Debug-only ledger balance check: every byte charged is a byte
+    /// still resident — charges and releases must pair up exactly
+    /// (DESIGN.md §16).  Called at sub shutdown.
+    pub fn debug_assert_balanced(&self) {
+        if cfg!(debug_assertions) {
+            let actual: u64 = self
+                .owned
+                .values()
+                .chain(self.transient.values())
+                .map(|d| d.size_bytes() as u64)
+                .sum();
+            debug_assert_eq!(
+                self.ledger.resident_bytes(),
+                actual,
+                "store ledger out of balance: charged {} B, resident {} B",
+                self.ledger.resident_bytes(),
+                actual
+            );
+        }
     }
 }
 
@@ -82,6 +320,13 @@ mod tests {
 
     fn data(k: usize) -> FunctionData {
         (0..k).map(|i| DataChunk::from_i32(vec![i as i32])).collect()
+    }
+
+    fn spill_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("hypar_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     #[test]
@@ -104,6 +349,7 @@ mod tests {
         assert!(!s.release(JobId(2))); // transient not released this way
         s.drop_transient(JobId(2));
         assert!(!s.contains(JobId(2)));
+        s.debug_assert_balanced();
     }
 
     #[test]
@@ -126,5 +372,115 @@ mod tests {
         s.insert_owned(JobId(1), data(4)); // 4 x 4B
         assert_eq!(s.owned_bytes(), 16);
         assert_eq!(s.owned_count(), 1);
+        assert_eq!(s.resident_bytes(), 16);
+        s.debug_assert_balanced();
+    }
+
+    #[test]
+    fn owned_insert_displaces_stale_transient_copy() {
+        let mut s = ResultStore::new();
+        s.insert_transient(JobId(4), data(2)); // fetched before ownership
+        s.insert_owned(JobId(4), data(5)); // recovery made us the owner
+        assert_eq!(s.read(JobId(4), ChunkRange::All).unwrap().len(), 5);
+        assert_eq!(s.resident_bytes(), 20);
+        s.debug_assert_balanced();
+    }
+
+    #[test]
+    fn transient_discard_eviction_frees_budget() {
+        let mut s = ResultStore::with_budget(20, None, EvictionPolicy::CostAwareLru);
+        s.insert_owned(JobId(1), data(4)); // 16 B owned — unevictable (no dir)
+        s.insert_transient(JobId(2), data(4)); // 16 B: 32 resident, 12 over
+        let report = s.enforce_budget(&HashSet::new());
+        assert_eq!(report.discarded, vec![JobId(2)]);
+        assert!(report.spilled.is_empty());
+        assert!(s.contains(JobId(1)));
+        assert!(!s.contains(JobId(2)));
+        assert_eq!(s.resident_bytes(), 16);
+        s.debug_assert_balanced();
+    }
+
+    #[test]
+    fn owned_spill_eviction_and_readmission() {
+        let dir = spill_dir("spill");
+        let mut s = ResultStore::with_budget(
+            20,
+            Some(dir.clone()),
+            EvictionPolicy::CostAwareLru,
+        );
+        s.insert_owned_with_cost(JobId(1), data(4), Some(5.0));
+        s.insert_owned_with_cost(JobId(2), data(4), Some(50_000.0));
+        // 32 B resident over a 20 B budget: the cheap-to-recompute job 1
+        // spills first and suffices.
+        let report = s.enforce_budget(&HashSet::new());
+        assert_eq!(report.spilled, vec![JobId(1)]);
+        assert!(s.is_owned(JobId(1)) && s.is_spilled(JobId(1)));
+        assert!(!s.contains(JobId(1)));
+        assert_eq!(s.spilled_bytes(JobId(1)), 16);
+        assert_eq!(s.spilled_estimate(JobId(1)), Some(5.0));
+        // Read-back restores the exact value and re-charges the ledger.
+        assert!(s.ensure_resident(JobId(1)).unwrap());
+        assert!(!s.is_spilled(JobId(1)));
+        let back = s.read(JobId(1), ChunkRange::All).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back.chunk(3).unwrap().as_i32().unwrap(), &[3]);
+        assert_eq!(s.resident_bytes(), 32);
+        s.debug_assert_balanced();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pinned_entries_survive_enforcement() {
+        let mut s = ResultStore::with_budget(10, None, EvictionPolicy::CostAwareLru);
+        s.insert_transient(JobId(1), data(4)); // 16 B, over budget, pinned
+        let pinned: HashSet<JobId> = [JobId(1)].into_iter().collect();
+        let report = s.enforce_budget(&pinned);
+        assert!(report.discarded.is_empty());
+        assert_eq!(report.pin_skips, 1);
+        assert!(s.contains(JobId(1)));
+    }
+
+    #[test]
+    fn release_of_spilled_result_removes_the_file() {
+        let dir = spill_dir("release");
+        let mut s =
+            ResultStore::with_budget(1, Some(dir.clone()), EvictionPolicy::Lru);
+        s.insert_owned(JobId(7), data(2));
+        let report = s.enforce_budget(&HashSet::new());
+        assert_eq!(report.spilled, vec![JobId(7)]);
+        assert!(crate::data::bounded::spill_path(&dir, JobId(7)).exists());
+        assert!(s.release(JobId(7)));
+        assert!(!crate::data::bounded::spill_path(&dir, JobId(7)).exists());
+        assert!(!s.is_owned(JobId(7)));
+        assert_eq!(s.resident_bytes(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn budget_accounting_exact_after_evict_spill_readmit_cycles() {
+        let dir = spill_dir("cycles");
+        let mut s = ResultStore::with_budget(
+            40,
+            Some(dir.clone()),
+            EvictionPolicy::CostAwareLru,
+        );
+        for round in 0..3 {
+            s.insert_owned(JobId(1), data(4));
+            s.insert_owned(JobId(2), data(4));
+            s.insert_transient(JobId(3), data(4));
+            let _ = s.enforce_budget(&HashSet::new());
+            assert!(s.resident_bytes() <= 40, "round {round} over budget");
+            assert!(s.ensure_resident(JobId(1)).unwrap());
+            assert!(s.ensure_resident(JobId(2)).unwrap());
+            let total = s.owned_bytes() as u64;
+            assert_eq!(total, 32, "round {round}");
+            s.drop_transient(JobId(3));
+            assert!(s.release(JobId(1)));
+            assert!(s.release(JobId(2)));
+            assert_eq!(s.resident_bytes(), 0, "round {round}");
+            s.debug_assert_balanced();
+        }
+        assert!(s.peak_bytes() >= 40);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

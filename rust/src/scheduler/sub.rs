@@ -14,11 +14,13 @@
 //! while chunk execution inside the node is elastic under work stealing.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::comm::{Comm, Match, Rank, World};
-use crate::data::FunctionData;
+use crate::data::bounded;
+use crate::data::{EvictionPolicy, FunctionData};
 use crate::job::{ChunkRange, JobId, JobSpec, ThreadCount};
 use crate::metrics::MetricsCollector;
 use crate::worker::{run_worker, WorkerConfig};
@@ -52,6 +54,14 @@ pub struct SubConfig {
     /// control messages into `Batch` frames, flushed at pass boundaries.
     /// Disabled = the PR 5 one-send-per-message control plane.
     pub ctrl_batch: CtrlBatchCfg,
+    /// Result-store byte budget (DESIGN.md §16); 0 = unbounded, the
+    /// pre-budget store bit-for-bit.
+    pub memory_budget_bytes: u64,
+    /// Base spill directory; this sub and its workers each carve a
+    /// `rank_<r>` subdirectory out of it (DESIGN.md §16).
+    pub spill_dir: Option<PathBuf>,
+    /// Victim ordering of the budgeted store (DESIGN.md §16).
+    pub eviction_policy: EvictionPolicy,
 }
 
 /// One input part being resolved.
@@ -138,6 +148,15 @@ impl SubScheduler {
         metrics: Arc<MetricsCollector>,
     ) -> Self {
         let coal = Coalescer::new(cfg.ctrl_batch);
+        // Each rank spills under its own subdirectory, so one configured
+        // directory serves the whole topology without name collisions.
+        let store = ResultStore::with_budget(
+            cfg.memory_budget_bytes,
+            cfg.spill_dir
+                .as_ref()
+                .map(|d| d.join(format!("rank_{}", comm.rank().0))),
+            cfg.eviction_policy,
+        );
         SubScheduler {
             comm,
             world,
@@ -145,7 +164,7 @@ impl SubScheduler {
             metrics,
             coal,
             workers: HashMap::new(),
-            store: ResultStore::new(),
+            store,
             kept_index: HashMap::new(),
             pending: HashMap::new(),
             ready: VecDeque::new(),
@@ -211,6 +230,10 @@ impl SubScheduler {
         // Anything buffered in the same drain that delivered `Shutdown`
         // must still ship before the workers go down.
         self.coal.flush_all(&self.comm, &self.metrics);
+        self.metrics.store_bytes_peak(self.store.peak_bytes());
+        // Charges and releases must have paired up exactly (DESIGN.md
+        // §16: no unbounded growth hiding in cancel paths).
+        self.store.debug_assert_balanced();
         self.shutdown_workers();
     }
 
@@ -235,6 +258,7 @@ impl SubScheduler {
                     // worker's cache while the hinted job still waits.
                     self.push_to_worker(job, threads);
                 }
+                self.enforce_store_budget();
             }
             FwMsg::ResultUnavailable { job } => self.on_source_lost(job),
             FwMsg::FetchResult { job, range, reply_to } => {
@@ -264,6 +288,7 @@ impl SubScheduler {
                 self.store.insert_owned(job, data);
                 self.serve_pending(job);
                 self.fill_waiters(job);
+                self.enforce_store_budget();
             }
             FwMsg::Heartbeat => {
                 // Liveness probe from the master (DESIGN.md §14): the ack
@@ -302,7 +327,7 @@ impl SubScheduler {
                         // Locality win: consume straight from the worker cache.
                         pin = Some(w);
                         PartState::Ready(InputPart::Kept { job: src, range })
-                    } else if self.store.contains(src) {
+                    } else if self.unspill_for_read(src) {
                         // Kept on a different worker than the pin, but a
                         // copy was already pulled up (an earlier pull or a
                         // prefetch warm-up): no round-trip needed.
@@ -322,7 +347,7 @@ impl SubScheduler {
                     }
                 }
                 Some(SourceLoc { owner, .. }) if owner == me => {
-                    if self.store.contains(src) {
+                    if self.unspill_for_read(src) {
                         match self.store.read(src, range) {
                             Ok(data) => PartState::Ready(InputPart::Data(data)),
                             Err(e) => {
@@ -392,6 +417,9 @@ impl SubScheduler {
         } else {
             self.pending.insert(job, pj);
         }
+        // Assembly may have read spill files back in; re-enforce with the
+        // new pending job's inputs pinned (DESIGN.md §16).
+        self.enforce_store_budget();
     }
 
     /// Master prefetch hint: an assignment consuming these sources will
@@ -607,12 +635,35 @@ impl SubScheduler {
     }
 
     fn serve_fetch(&mut self, job: JobId, range: ChunkRange, reply_to: Rank) {
-        if self.store.contains(job) {
+        if self.store.is_spilled(job) && reply_to != self.cfg.master {
+            // Peer fetch of a spill-evicted result: when recomputing from
+            // lineage beats the disk read-back under the DESIGN.md §16
+            // cost model, drop the spill file and declare the result lost
+            // — §6 recovery recomputes the producer and re-routes the
+            // consumer.  Master-origin fetches (final collection) always
+            // read back, because collection treats a miss as fatal.
+            let est = self.store.spilled_estimate(job);
+            let bytes = self.store.spilled_bytes(job);
+            if bounded::recompute_beats_readback(est, bytes) {
+                self.store.forget_spilled(job);
+                self.metrics.recomputed_from_eviction();
+                self.declare_lost(job);
+                self.coal.send(
+                    &self.comm,
+                    &self.metrics,
+                    reply_to,
+                    FwMsg::ResultUnavailable { job },
+                );
+                return;
+            }
+        }
+        if self.unspill_for_read(job) {
             let reply = match self.store.read(job, range) {
                 Ok(data) => FwMsg::ResultData { job, data },
                 Err(_) => FwMsg::ResultUnavailable { job },
             };
             self.coal.send(&self.comm, &self.metrics, reply_to, reply);
+            self.enforce_store_budget();
         } else if let Some(&w) = self.kept_index.get(&job) {
             // Pull from the retaining worker, serve when it arrives.
             self.pending_serves.entry(job).or_default().push((range, reply_to));
@@ -720,9 +771,16 @@ impl SubScheduler {
             Some(d) => {
                 let bytes = d.size_bytes() as u64;
                 let chunks = d.len();
-                self.store.insert_owned(job, d);
+                // The measured execution time doubles as the recompute
+                // estimate of the eviction score (DESIGN.md §16).
+                self.store.insert_owned_with_cost(
+                    job,
+                    d,
+                    (exec_us > 0).then_some(exec_us as f64),
+                );
                 // A result that was being awaited locally (recompute path).
                 self.fill_waiters(job);
+                self.enforce_store_budget();
                 (None, bytes, chunks)
             }
             None => {
@@ -745,6 +803,82 @@ impl SubScheduler {
             master,
             FwMsg::JobDone { job, kept_on, output_bytes, chunks, injections, exec_us },
         );
+    }
+
+    // ------------------------------------------------------ bounded store
+
+    /// Results that must stay resident through an eviction pass
+    /// (DESIGN.md §16): every input of a job still being assembled or
+    /// queued, plus everything a fetch, pull round-trip, peer serve, or
+    /// kept-prefetch push is currently in flight for.
+    fn pinned_results(&self) -> HashSet<JobId> {
+        let mut pinned: HashSet<JobId> = HashSet::new();
+        for pj in self.pending.values() {
+            pinned.extend(pj.spec.inputs.iter().map(|r| r.job));
+        }
+        pinned.extend(self.fetch_inflight.iter().copied());
+        pinned.extend(self.waiting_on.keys().copied());
+        pinned.extend(self.pending_serves.keys().copied());
+        pinned.extend(self.pending_cache_push.keys().copied());
+        pinned
+    }
+
+    /// Bring the store back under budget and fold what happened into the
+    /// metrics (DESIGN.md §16).  Structurally a no-op with the
+    /// `memory_budget_bytes` knob unset.
+    fn enforce_store_budget(&mut self) {
+        if !self.store.is_bounded() {
+            return;
+        }
+        let pinned = self.pinned_results();
+        let report = self.store.enforce_budget(&pinned);
+        if report.evictions() > 0 {
+            self.metrics.evicted(report.evictions());
+        }
+        if !report.spilled.is_empty() {
+            self.metrics.spilled(report.spilled.len() as u64);
+        }
+        if report.pin_skips > 0 {
+            self.metrics.evict_pin_skipped(report.pin_skips);
+        }
+        self.metrics.store_bytes_peak(self.store.peak_bytes());
+    }
+
+    /// Declare a result this scheduler owned lost to the master.  The §6
+    /// recovery path drops its availability and recomputes it from
+    /// lineage — the same entry point a dead worker's kept results use,
+    /// so no new recovery machinery is needed for eviction.
+    fn declare_lost(&mut self, src: JobId) {
+        let me = self.comm.rank();
+        let master = self.cfg.master;
+        self.coal.send(
+            &self.comm,
+            &self.metrics,
+            master,
+            FwMsg::WorkerLostReport { worker: me, lost: vec![src], running: Vec::new() },
+        );
+    }
+
+    /// Make `src` readable from the store if this scheduler holds it in
+    /// any form, reading its spill file back in when needed.  A spilled
+    /// entry whose file went unreadable is forgotten and declared lost
+    /// (§6 recomputes it).  `false` means the ordinary miss path
+    /// applies.
+    fn unspill_for_read(&mut self, src: JobId) -> bool {
+        if self.store.contains(src) {
+            return true;
+        }
+        if !self.store.is_spilled(src) {
+            return false;
+        }
+        match self.store.ensure_resident(src) {
+            Ok(ok) => ok,
+            Err(_) => {
+                self.store.forget_spilled(src);
+                self.declare_lost(src);
+                false
+            }
+        }
     }
 
     fn forget_running(&mut self, worker: Rank, job: JobId) -> Option<JobSpec> {
@@ -899,7 +1033,10 @@ impl SubScheduler {
         let comm = self.world.add_rank();
         let rank = comm.rank();
         let me = self.comm.rank();
-        let wcfg = self.cfg.worker.clone();
+        let mut wcfg = self.cfg.worker.clone();
+        // Ranks are unique world-wide, so `rank_<r>` keeps every spiller
+        // (subs and workers alike) in its own subdirectory (DESIGN.md §16).
+        wcfg.spill_dir = wcfg.spill_dir.map(|d| d.join(format!("rank_{}", rank.0)));
         let cores = self.cfg.cores_per_worker;
         let handle = std::thread::Builder::new()
             .name(format!("hypar-worker-{}", rank.0))

@@ -9,27 +9,84 @@
 //! The documented drawback — a crashed worker loses every retained result —
 //! is exactly what the fault-tolerance path recomputes (see
 //! [`crate::fault`]).
+//!
+//! Since DESIGN.md §16 the cache is byte-budgeted.  Retained entries are
+//! the inputs of already-promised assignments (an `Exec` may reference
+//! them as kept parts at any moment), so eviction is spill-only: victims
+//! are written to `spill_dir` and read back on demand by
+//! [`KeptCache::ensure_resident`].  Without a spill directory the cache
+//! stays unbounded — discarding a kept entry would fail the next
+//! assignment that references it.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 
+use crate::data::bounded::{self, BudgetLedger, EvictionPolicy};
 use crate::data::FunctionData;
 use crate::error::{Error, Result};
 use crate::job::{ChunkRange, JobId};
+
+/// What one [`KeptCache::enforce_budget`] pass did.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KeptEvictReport {
+    /// Entries written to their spill file and dropped from memory.
+    pub spilled: u64,
+    /// Pinned entries that outranked a victim and were skipped.
+    pub pin_skips: u64,
+}
 
 /// Retained results of one worker, keyed by producing job.
 #[derive(Debug, Default)]
 pub struct KeptCache {
     entries: HashMap<JobId, FunctionData>,
+    /// Byte-budget accounting over `entries` (DESIGN.md §16).
+    ledger: BudgetLedger,
+    /// Entries evicted to disk; `bytes` is the re-admission charge.
+    spilled: HashMap<JobId, u64>,
+    spill_dir: Option<PathBuf>,
+    policy: EvictionPolicy,
 }
 
 impl KeptCache {
-    /// Empty cache.
+    /// Empty, unbounded cache (today's behaviour bit-for-bit).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Empty cache with a byte budget (0 = unbounded); eviction requires
+    /// `spill_dir`.
+    pub fn with_budget(
+        budget_bytes: u64,
+        spill_dir: Option<PathBuf>,
+        policy: EvictionPolicy,
+    ) -> Self {
+        KeptCache {
+            ledger: BudgetLedger::new(budget_bytes),
+            spill_dir,
+            policy,
+            ..Default::default()
+        }
+    }
+
     /// Retain a job's output.
     pub fn insert(&mut self, job: JobId, data: FunctionData) {
+        self.insert_with_cost(job, data, None);
+    }
+
+    /// Retain a job's output together with its measured execution µs —
+    /// the recompute-cost input of the eviction score.
+    pub fn insert_with_cost(
+        &mut self,
+        job: JobId,
+        data: FunctionData,
+        est_recompute_us: Option<f64>,
+    ) {
+        if self.spilled.remove(&job).is_some() {
+            if let Some(dir) = &self.spill_dir {
+                bounded::spill_remove(dir, job);
+            }
+        }
+        self.ledger.charge(job, data.size_bytes() as u64, est_recompute_us);
         self.entries.insert(job, data);
     }
 
@@ -48,34 +105,115 @@ impl KeptCache {
         self.entries.get(&job).ok_or(Error::ResultNotAvailable(job))
     }
 
+    /// Bring `job` back into memory if it was spill-evicted.  Returns
+    /// `true` when the entry is readable afterwards, `false` when this
+    /// cache never retained it.
+    pub fn ensure_resident(&mut self, job: JobId) -> Result<bool> {
+        if self.entries.contains_key(&job) {
+            self.ledger.touch(job);
+            return Ok(true);
+        }
+        let Some(bytes) = self.spilled.get(&job).copied() else {
+            return Ok(false);
+        };
+        let dir = self
+            .spill_dir
+            .as_ref()
+            .ok_or_else(|| Error::Config("spilled kept entry without spill_dir".into()))?
+            .clone();
+        let data = bounded::spill_read(&dir, job)?;
+        self.spilled.remove(&job);
+        bounded::spill_remove(&dir, job);
+        self.ledger.charge(job, bytes, None);
+        self.entries.insert(job, data);
+        Ok(true)
+    }
+
     /// Scheduler signalled the data is no longer required.
     pub fn release(&mut self, job: JobId) -> bool {
-        self.entries.remove(&job).is_some()
+        if self.entries.remove(&job).is_some() {
+            self.ledger.release(job);
+            return true;
+        }
+        if self.spilled.remove(&job).is_some() {
+            if let Some(dir) = &self.spill_dir {
+                bounded::spill_remove(dir, job);
+            }
+            return true;
+        }
+        false
     }
 
-    /// Whether `job`'s result is retained here.
+    /// Bring the cache back under budget by spilling victims.  No-op
+    /// when unbounded or when no spill directory is configured.
+    pub fn enforce_budget(&mut self, pinned: &HashSet<JobId>) -> KeptEvictReport {
+        let mut report = KeptEvictReport::default();
+        let Some(dir) = self.spill_dir.clone() else {
+            return report;
+        };
+        if !self.ledger.is_bounded() {
+            return report;
+        }
+        let plan = self.ledger.plan_evictions(self.policy, pinned, &HashSet::new());
+        report.pin_skips = plan.pin_skips;
+        for job in plan.victims {
+            let Some(data) = self.entries.get(&job) else { continue };
+            if bounded::spill_write(&dir, job, data).is_err() {
+                continue; // disk refused: leave it resident
+            }
+            self.spilled.insert(job, self.ledger.bytes_of(job));
+            self.entries.remove(&job);
+            self.ledger.release(job);
+            report.spilled += 1;
+        }
+        report
+    }
+
+    /// Whether `job`'s result is retained here (resident or spilled).
     pub fn contains(&self, job: JobId) -> bool {
-        self.entries.contains_key(&job)
+        self.entries.contains_key(&job) || self.spilled.contains_key(&job)
     }
 
-    /// Number of retained results.
+    /// Number of retained results (resident + spilled).
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries.len() + self.spilled.len()
     }
 
     /// Whether nothing is retained.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.is_empty() && self.spilled.is_empty()
     }
 
-    /// Retained bytes (capacity accounting / metrics).
+    /// Resident retained bytes (capacity accounting / metrics).
     pub fn size_bytes(&self) -> usize {
         self.entries.values().map(|d| d.size_bytes()).sum()
     }
 
-    /// Job ids currently retained (reported on clean shutdown).
+    /// High-water mark of resident retained bytes (DESIGN.md §16).
+    pub fn peak_bytes(&self) -> u64 {
+        self.ledger.peak_bytes()
+    }
+
+    /// Job ids currently retained, resident or spilled (reported on
+    /// clean shutdown — a spill file nobody will read is lost too).
     pub fn jobs(&self) -> Vec<JobId> {
-        self.entries.keys().copied().collect()
+        self.entries.keys().chain(self.spilled.keys()).copied().collect()
+    }
+
+    /// Debug-only ledger balance check: charges and releases must pair
+    /// up exactly (DESIGN.md §16).  Called at worker shutdown.
+    pub fn debug_assert_balanced(&self) {
+        if cfg!(debug_assertions) {
+            let actual: u64 =
+                self.entries.values().map(|d| d.size_bytes() as u64).sum();
+            debug_assert_eq!(
+                self.ledger.resident_bytes(),
+                actual,
+                "kept-cache ledger out of balance: charged {} B, resident {} B",
+                self.ledger.resident_bytes(),
+                actual
+            );
+        }
     }
 }
 
@@ -86,6 +224,13 @@ mod tests {
 
     fn data(k: usize) -> FunctionData {
         (0..k).map(|i| DataChunk::from_f32(vec![i as f32])).collect()
+    }
+
+    fn spill_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("hypar_kept_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
     }
 
     #[test]
@@ -120,5 +265,67 @@ mod tests {
         c.insert(JobId(1), data(3)); // 3 chunks x 4 bytes
         assert_eq!(c.size_bytes(), 12);
         assert_eq!(c.len(), 1);
+        c.debug_assert_balanced();
+    }
+
+    #[test]
+    fn budget_without_spill_dir_never_evicts() {
+        let mut c = KeptCache::with_budget(4, None, EvictionPolicy::CostAwareLru);
+        c.insert(JobId(1), data(4)); // 16 B over a 4 B budget
+        let report = c.enforce_budget(&HashSet::new());
+        assert_eq!(report.spilled, 0);
+        assert!(c.get(JobId(1)).is_ok());
+    }
+
+    #[test]
+    fn spill_eviction_and_readback() {
+        let dir = spill_dir("evict");
+        let mut c = KeptCache::with_budget(
+            20,
+            Some(dir.clone()),
+            EvictionPolicy::CostAwareLru,
+        );
+        c.insert_with_cost(JobId(1), data(4), Some(3.0)); // cheap, spills first
+        c.insert_with_cost(JobId(2), data(4), Some(90_000.0));
+        let report = c.enforce_budget(&HashSet::new());
+        assert_eq!(report.spilled, 1);
+        assert!(c.contains(JobId(1)));
+        assert!(c.get(JobId(1)).is_err()); // not resident
+        assert!(c.ensure_resident(JobId(1)).unwrap());
+        let back = c.read(JobId(1), ChunkRange::All).unwrap();
+        assert_eq!(back.chunk(2).unwrap().first_f32().unwrap(), 2.0);
+        c.debug_assert_balanced();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pinned_kept_entries_are_skipped() {
+        let dir = spill_dir("pin");
+        let mut c =
+            KeptCache::with_budget(8, Some(dir.clone()), EvictionPolicy::Lru);
+        c.insert(JobId(1), data(4));
+        let pinned: HashSet<JobId> = [JobId(1)].into_iter().collect();
+        let report = c.enforce_budget(&pinned);
+        assert_eq!(report.spilled, 0);
+        assert_eq!(report.pin_skips, 1);
+        assert!(c.get(JobId(1)).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn release_of_spilled_entry_removes_file_and_jobs_lists_spilled() {
+        let dir = spill_dir("release");
+        let mut c =
+            KeptCache::with_budget(1, Some(dir.clone()), EvictionPolicy::Lru);
+        c.insert(JobId(9), data(2));
+        let report = c.enforce_budget(&HashSet::new());
+        assert_eq!(report.spilled, 1);
+        assert_eq!(c.jobs(), vec![JobId(9)]); // spilled still counts as kept
+        assert!(bounded::spill_path(&dir, JobId(9)).exists());
+        assert!(c.release(JobId(9)));
+        assert!(!bounded::spill_path(&dir, JobId(9)).exists());
+        assert!(c.is_empty());
+        c.debug_assert_balanced();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

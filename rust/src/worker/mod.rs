@@ -38,14 +38,15 @@
 pub mod cache;
 pub mod pool;
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
 use std::time::Duration;
 
 use crate::comm::{Comm, CommSender, Match, Rank};
-use crate::data::FunctionData;
+use crate::data::{EvictionPolicy, FunctionData};
 use crate::error::Result;
 use crate::fault::FaultInjector;
 use crate::job::registry::{FunctionRegistry, JobCtx, UserFunction};
@@ -86,6 +87,15 @@ pub struct WorkerConfig {
     /// Control-plane batching knobs (DESIGN.md §12): replies to the
     /// scheduler coalesce through the worker's outbox.
     pub ctrl_batch: CtrlBatchCfg,
+    /// Kept-cache byte budget (config knob `memory_budget_bytes`;
+    /// 0 = unbounded — DESIGN.md §16).
+    pub memory_budget_bytes: u64,
+    /// Spill directory for kept-cache eviction (config knob `spill_dir`,
+    /// qualified per worker by the spawning scheduler); `None` leaves the
+    /// cache unbounded regardless of budget.
+    pub spill_dir: Option<PathBuf>,
+    /// Victim-ordering policy (config knob `eviction_policy`).
+    pub eviction_policy: EvictionPolicy,
 }
 
 /// Single-destination reply coalescer for the worker → scheduler wire
@@ -155,7 +165,11 @@ impl Outbox {
 /// which is exactly how the schedulers detect the loss).
 pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
     let me = comm.rank();
-    let mut kept = KeptCache::new();
+    let mut kept = KeptCache::with_budget(
+        cfg.memory_budget_bytes,
+        cfg.spill_dir.clone(),
+        cfg.eviction_policy,
+    );
     let mut engine: Option<Box<dyn ComputeBackend>> = None;
     // Spawned once, parked between jobs; lives exactly as long as the rank.
     let mut pool = SequencePool::new(
@@ -227,7 +241,7 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                     pool.abandon();
                     return;
                 }
-                let input = match assemble_input(&req, &kept) {
+                let input = match assemble_input(&req, &mut kept) {
                     Ok(i) => i,
                     Err(e) => {
                         outbox.push(
@@ -372,7 +386,9 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
             // A pool job finished a keep-results job: deposit, then ack
             // (forwarding the measured execution time for the cost model).
             FwMsg::KeptData { job, data, exec_us } => {
-                kept.insert(job, data);
+                let est = if exec_us > 0 { Some(exec_us as f64) } else { None };
+                kept.insert_with_cost(job, data, est);
+                enforce_kept_budget(&mut kept, cfg.metrics.as_deref());
                 outbox.push(
                     &comm.sender(),
                     cfg.metrics.as_deref(),
@@ -386,8 +402,12 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
             // `DropKept` reclaims it like any retained result.
             FwMsg::CachePush { job, data } => {
                 kept.insert(job, data);
+                enforce_kept_budget(&mut kept, cfg.metrics.as_deref());
             }
             FwMsg::PullKept { job } => {
+                // A spill-evicted entry is still retained: read it back
+                // before deciding availability (DESIGN.md §16).
+                let _ = kept.ensure_resident(job);
                 let reply = match kept.get(job) {
                     Ok(data) => FwMsg::KeptData { job, data: data.clone(), exec_us: 0 },
                     Err(_) => FwMsg::ResultUnavailable { job },
@@ -412,6 +432,11 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
                 // this pass, then flush stats and leave.
                 pool.shutdown();
                 outbox.flush(&comm.sender(), cfg.metrics.as_deref());
+                if let Some(m) = cfg.metrics.as_deref() {
+                    m.store_bytes_peak(kept.peak_bytes());
+                }
+                // Every byte charged must have been released (§16).
+                kept.debug_assert_balanced();
                 comm.deregister();
                 return;
             }
@@ -425,16 +450,38 @@ pub fn run_worker(mut comm: Comm<FwMsg>, scheduler: Rank, cfg: WorkerConfig) {
     }
 }
 
-/// Resolve the request's input parts against the local kept cache.
-fn assemble_input(req: &ExecRequest, kept: &KeptCache) -> Result<FunctionData> {
+/// Resolve the request's input parts against the local kept cache.  A
+/// spill-evicted kept part is read back into memory first — eviction can
+/// therefore never fail an assignment that was promised a kept input
+/// (DESIGN.md §16).
+fn assemble_input(req: &ExecRequest, kept: &mut KeptCache) -> Result<FunctionData> {
     let mut out = FunctionData::new();
     for part in &req.input {
         match part {
             InputPart::Data(d) => out.extend(d.clone()),
-            InputPart::Kept { job, range } => out.extend(kept.read(*job, *range)?),
+            InputPart::Kept { job, range } => {
+                kept.ensure_resident(*job)?;
+                out.extend(kept.read(*job, *range)?);
+            }
         }
     }
     Ok(out)
+}
+
+/// Post-insert budget pass over the kept cache: spill victims and fold
+/// the outcome into the metrics snapshot (DESIGN.md §16).
+fn enforce_kept_budget(kept: &mut KeptCache, metrics: Option<&MetricsCollector>) {
+    let report = kept.enforce_budget(&HashSet::new());
+    if let Some(m) = metrics {
+        if report.spilled > 0 {
+            m.evicted(report.spilled);
+            m.spilled(report.spilled);
+        }
+        if report.pin_skips > 0 {
+            m.evict_pin_skipped(report.pin_skips);
+        }
+        m.store_bytes_peak(kept.peak_bytes());
+    }
 }
 
 /// Inline (WithCtx / whole-node Plain) completion: cache handling happens
@@ -454,7 +501,9 @@ fn finish_job(
     match result {
         Ok(output) => {
             let data = if keep {
-                kept.insert(job, output);
+                let est = if exec_us > 0 { Some(exec_us as f64) } else { None };
+                kept.insert_with_cost(job, output, est);
+                enforce_kept_budget(kept, metrics);
                 None
             } else {
                 Some(output)
@@ -520,6 +569,6 @@ fn report_from_thread(
 
 /// Convenience used by tests: what an `ExecRequest`'s assembled input looks
 /// like, given a cache.
-pub fn assemble_for_test(req: &ExecRequest, kept: &KeptCache) -> Result<FunctionData> {
+pub fn assemble_for_test(req: &ExecRequest, kept: &mut KeptCache) -> Result<FunctionData> {
     assemble_input(req, kept)
 }

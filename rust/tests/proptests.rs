@@ -919,6 +919,246 @@ fn prop_chaos_matches_sequential() {
     }
 }
 
+/// Compare every final-segment result of `report` against the
+/// interpreter's values, bit for bit (shared by the §16 bounded-memory
+/// properties below).
+fn assert_matches_interpreter(
+    seed: u64,
+    leg: &str,
+    gen: &[Vec<GenJob>],
+    want: &BTreeMap<u32, Vec<Vec<f32>>>,
+    report: &hypar::framework::RunReport,
+) {
+    for j in gen.last().unwrap() {
+        let got = report
+            .results
+            .get(&JobId(j.id))
+            .unwrap_or_else(|| panic!("seed {seed} {leg}: missing J{}", j.id));
+        let expect = &want[&j.id];
+        assert_eq!(got.len(), expect.len(), "seed {seed} {leg}: J{} chunk count", j.id);
+        for (ci, (gc, wc)) in got.chunks().iter().zip(expect).enumerate() {
+            assert_eq!(
+                gc.as_f32().unwrap(),
+                wc.as_slice(),
+                "seed {seed} {leg}: J{} chunk {ci}",
+                j.id
+            );
+        }
+    }
+}
+
+/// Arity-validity check shared by the §16 properties (the emitter's true
+/// arity is fixed after generation; a stale sliced range is skipped).
+fn gen_is_consistent(gen: &[Vec<GenJob>], arity: &BTreeMap<u32, usize>) -> bool {
+    for seg in gen {
+        for j in seg {
+            for r in &j.inputs {
+                if let ChunkRange::Range { hi, .. } = r.range {
+                    if hi > arity[&r.job.0] {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+    true
+}
+
+/// The §16 headline property: **a byte-budgeted run computes exactly the
+/// unbounded run's values**.  For any random DAG, run once unbounded to
+/// measure the working set (the `store_bytes` high-water metric), then
+/// re-run with `memory_budget_bytes` pinned to 25–50% of it and a spill
+/// directory — evictions must actually happen (`evictions > 0`), and the
+/// results must match both the sequential interpreter and the unbounded
+/// leg bit for bit.  The whole property repeats over the loopback-TCP
+/// fabric (DESIGN.md §15), where spilled results additionally cross the
+/// wire after read-back.
+#[test]
+fn prop_bounded_memory_matches_sequential() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(53_000 + seed);
+        let (mut gen, mut arity) = gen_algorithm(&mut rng);
+        fix_emitter_arity(&mut gen, &mut arity);
+        if !gen_is_consistent(&gen, &arity) {
+            continue; // generator picked a stale emitter arity; skip (rare)
+        }
+        let want = interpret(&gen);
+        let schedulers = (seed % 2 + 1) as usize;
+        let spill_root = std::env::temp_dir()
+            .join(format!("hypar_prop_mem_{}_{seed}", std::process::id()));
+
+        for tcp in [false, true] {
+            let leg = if tcp { "tcp" } else { "inproc" };
+            let run = |budget: u64, spill: Option<&std::path::PathBuf>| {
+                let mut b = Framework::builder()
+                    .schedulers(schedulers)
+                    .workers_per_scheduler(2)
+                    .cores_per_worker(4)
+                    .registry(registry());
+                if tcp {
+                    b = b.transport(TransportKind::Tcp);
+                }
+                if budget > 0 {
+                    b = b.memory_budget_bytes(budget);
+                }
+                if let Some(dir) = spill {
+                    b = b.spill_dir(dir.clone());
+                }
+                b.build()
+                    .unwrap()
+                    .run(to_algorithm(&gen))
+                    .unwrap_or_else(|e| panic!("seed {seed} {leg}: run failed: {e}"))
+            };
+
+            // Unbounded probe: correct values + working-set measurement.
+            let unbounded = run(0, None);
+            assert_matches_interpreter(seed, leg, &gen, &want, &unbounded);
+            assert_eq!(unbounded.metrics.evictions, 0, "seed {seed} {leg}");
+
+            // Budget 25–50% of the measured per-store working set.
+            let ws = unbounded.metrics.store_bytes;
+            assert!(ws > 0, "seed {seed} {leg}: no working set measured");
+            let pct = 25 + (seed % 26) as u64; // 25..=50
+            let budget = (ws * pct / 100).max(1);
+            let dir = spill_root.join(leg);
+            let bounded = run(budget, Some(&dir));
+            assert_matches_interpreter(seed, leg, &gen, &want, &bounded);
+            assert!(
+                bounded.metrics.evictions > 0,
+                "seed {seed} {leg}: budget {budget} of {ws} B evicted nothing"
+            );
+            // Bit-identical to the unbounded leg, result by result.
+            for j in gen.last().unwrap() {
+                let a = &unbounded.results[&JobId(j.id)];
+                let b = &bounded.results[&JobId(j.id)];
+                assert_eq!(a.len(), b.len(), "seed {seed} {leg}: J{}", j.id);
+                for (ci, (ac, bc)) in a.chunks().iter().zip(b.chunks()).enumerate() {
+                    assert_eq!(
+                        ac.as_f32().unwrap(),
+                        bc.as_f32().unwrap(),
+                        "seed {seed} {leg}: J{} chunk {ci} diverged under budget",
+                        j.id
+                    );
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&spill_root);
+    }
+}
+
+/// With `memory_budget_bytes` unset the stores are structurally the PR 9
+/// unbounded stores: no evictions, no spills, no eviction-driven
+/// recomputes, no pin skips — and the computed values still match the
+/// sequential interpreter.  Also pins the config defaults (budget 0, no
+/// spill directory, cost-aware-LRU policy).
+#[test]
+fn prop_memory_budget_off_is_pr9() {
+    let defaults = TopologyConfig::default();
+    assert_eq!(defaults.memory_budget_bytes, 0, "unbounded must stay the default");
+    assert!(defaults.spill_dir.is_none(), "no spill directory by default");
+    assert_eq!(defaults.eviction_policy, EvictionPolicy::CostAwareLru);
+
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(54_000 + seed);
+        let (mut gen, mut arity) = gen_algorithm(&mut rng);
+        fix_emitter_arity(&mut gen, &mut arity);
+        if !gen_is_consistent(&gen, &arity) {
+            continue; // generator picked a stale emitter arity; skip (rare)
+        }
+        let want = interpret(&gen);
+        let report = Framework::builder()
+            .schedulers((seed % 3 + 1) as usize)
+            .workers_per_scheduler(3)
+            .cores_per_worker(4)
+            .registry(registry())
+            .build()
+            .unwrap()
+            .run(to_algorithm(&gen))
+            .unwrap_or_else(|e| panic!("seed {seed}: run failed: {e}"));
+        assert_matches_interpreter(seed, "off", &gen, &want, &report);
+        assert_eq!(report.metrics.evictions, 0, "seed {seed}");
+        assert_eq!(report.metrics.spills, 0, "seed {seed}");
+        assert_eq!(report.metrics.recomputes_from_eviction, 0, "seed {seed}");
+        assert_eq!(report.metrics.evict_pin_skips, 0, "seed {seed}");
+    }
+}
+
+/// §16 under §14 weather: a tight budget composed with a seeded chaos
+/// plan (drops, duplicates, delays, a doomed worker rank every other
+/// case) must still reproduce the sequential interpreter exactly — the
+/// eviction/recovery interplay (a spilled result declared lost races a
+/// dead worker's loss report) must converge to the same values.
+///
+/// Set `HYPAR_CHAOS_SOAK=1` to widen the sweep (CI soak job).
+#[test]
+fn prop_chaos_with_tight_budget_matches_sequential() {
+    use hypar::fault::{ChaosConfig, ChaosCrash, ChaosPlan, FaultInjector};
+    use std::sync::Arc;
+
+    let cases: u64 = if std::env::var("HYPAR_CHAOS_SOAK").is_ok() { 12 } else { 4 };
+    for seed in 0..cases {
+        let mut rng = Rng::new(55_000 + seed);
+        let (mut gen, mut arity) = gen_algorithm(&mut rng);
+        fix_emitter_arity(&mut gen, &mut arity);
+        if !gen_is_consistent(&gen, &arity) {
+            continue; // generator picked a stale emitter arity; skip (rare)
+        }
+        for j in gen.last_mut().unwrap() {
+            j.keep = false; // same rationale as prop_chaos_matches_sequential
+        }
+        let want = interpret(&gen);
+        // Ranks: master = 0, subs = 1..=2, prespawned workers = 3..=6.
+        let crash = if seed % 2 == 0 {
+            Some(ChaosCrash {
+                rank: Rank(3 + rng.below(4) as u32),
+                at_send: rng.int_in(1, 5),
+            })
+        } else {
+            None
+        };
+        let chaos = Arc::new(ChaosPlan::new(ChaosConfig {
+            seed: 0xB0D6_0000 + seed,
+            drop_one_in: 6,
+            drop_budget: 2,
+            dup_one_in: 6,
+            dup_budget: 2,
+            delay_one_in: 4,
+            delay_budget: 4,
+            max_delay_us: 3_000,
+            crash,
+            ..ChaosConfig::default()
+        }));
+        let dir = std::env::temp_dir()
+            .join(format!("hypar_prop_chaosmem_{}_{seed}", std::process::id()));
+        let report = Framework::builder()
+            .schedulers(2)
+            .workers_per_scheduler(2)
+            .cores_per_worker(4)
+            .prespawn_workers(true)
+            .heartbeats(true)
+            .heartbeat_interval_ms(25)
+            .heartbeat_miss_limit(40)
+            .straggler_deadlines(true)
+            .straggler_factor(8.0)
+            .straggler_cold_us(200_000)
+            .job_retry_backoff_us(100_000)
+            .max_rank_losses(2)
+            .memory_budget_bytes(256) // far below any run's working set
+            .spill_dir(dir.clone())
+            .fault_injector(Arc::new(FaultInjector::none()))
+            .chaos(chaos)
+            .registry(registry())
+            .build()
+            .unwrap()
+            .run(to_algorithm(&gen))
+            .unwrap_or_else(|e| {
+                panic!("seed {seed}: run failed under chaos with tight budget: {e}")
+            });
+        assert_matches_interpreter(seed, "chaos+budget", &gen, &want, &report);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
 /// The transport backend must be value-invisible: for random DAGs the
 /// loopback-TCP fabric (DESIGN.md §15) and the in-process fabric both
 /// reproduce the sequential interpreter, and each other, exactly.  Also

@@ -3,6 +3,7 @@ pub struct TopologyConfig {
     pub cost_ewma_alpha: f64,
     pub heartbeats: bool,
     pub transport: String,
+    pub memory_budget_bytes: u64,
 }
 
 impl TopologyConfig {
@@ -13,6 +14,7 @@ impl TopologyConfig {
             cost_ewma_alpha: get_f64(&doc, "cost_ewma_alpha", 0.4)?,
             heartbeats: get_bool(&doc, "heartbeats", true)?,
             transport: get_string(&doc, "transport", "inproc")?,
+            memory_budget_bytes: get_usize(&doc, "memory_budget_bytes", 0)? as u64,
         })
     }
 
@@ -22,6 +24,7 @@ impl TopologyConfig {
             ("cost_ewma_alpha", Json::num(self.cost_ewma_alpha)),
             ("heartbeats", Json::Bool(self.heartbeats)),
             ("transport", Json::str(self.transport.clone())),
+            ("memory_budget_bytes", Json::num(self.memory_budget_bytes)),
         ])
     }
 

@@ -22,4 +22,9 @@ impl FrameworkBuilder {
         self.cfg.transport = t;
         self
     }
+
+    pub fn memory_budget_bytes(mut self, n: u64) -> Self {
+        self.cfg.memory_budget_bytes = n;
+        self
+    }
 }

@@ -2,6 +2,7 @@ pub struct MetricsSnapshot {
     pub jobs_executed: usize,
     pub wall_time_us: u64,
     pub ranks_lost: usize,
+    pub evictions: u64,
 }
 
 impl MetricsSnapshot {
@@ -10,6 +11,7 @@ impl MetricsSnapshot {
             ("jobs_executed", Json::num(self.jobs_executed)),
             ("wall_time_us", Json::num(self.wall_time_us)),
             ("ranks_lost", Json::num(self.ranks_lost)),
+            ("evictions", Json::num(self.evictions)),
         ])
     }
 }

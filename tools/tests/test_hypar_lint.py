@@ -183,6 +183,17 @@ class FixtureCase(unittest.TestCase):
         )
         self.assert_fires("L3", "transport")
 
+    def test_l3_memory_budget_knob_missing_readme_row(self):
+        # Drop the §16 knob's README row: the registry check must notice
+        # the config field is no longer catalogued.
+        self.mutate(
+            "README.md",
+            "| `memory_budget_bytes` | `.memory_budget_bytes(n)` | `0` | "
+            "Per-rank store byte budget, `0` = unbounded; see DESIGN.md §16. |\n",
+            "",
+        )
+        self.assert_fires("L3", "memory_budget_bytes")
+
     # -- L4: metrics registry ----------------------------------------------
 
     def test_l4_unexported_counter(self):
@@ -204,6 +215,16 @@ class FixtureCase(unittest.TestCase):
         self.mutate("README.md", "`ranks_lost`", "`that counter`")
         self.mutate("DESIGN.md", "`ranks_lost`", "`that counter`")
         self.assert_fires("L4", "ranks_lost")
+
+    def test_l4_evictions_counter_unexported(self):
+        # Strip the §16 counter from to_json: it is still recorded on the
+        # snapshot but no longer reachable from the export surface.
+        self.mutate(
+            "rust/src/metrics/mod.rs",
+            '            ("evictions", Json::num(self.evictions)),\n',
+            "",
+        )
+        self.assert_fires("L4", "evictions")
 
     # -- L5: lock discipline -----------------------------------------------
 
